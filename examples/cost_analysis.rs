@@ -1,0 +1,34 @@
+//! REST-call cost analysis (paper Table 8): what one Teragen run costs in
+//! request fees on each provider's 2017 price sheet, per scenario.
+//!
+//!   cargo run --release --example cost_analysis
+
+use stocator::harness::{run_cell, Scenario, Sizing, Workload};
+use stocator::objectstore::{cost_usd, PROVIDERS};
+use stocator::util::table::Table;
+
+fn main() {
+    let sizing = Sizing::paper();
+    let mut t = Table::new(
+        "Teragen (46.5 GB, 372 parts): REST-call cost per provider (USD)",
+        &["scenario", "IBM", "AWS", "Google", "Azure", "avg", "x Stocator"],
+    );
+    let stocator_avg = {
+        let c = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+        cost_usd(&c.ops)
+    };
+    for s in Scenario::ALL {
+        let cell = run_cell(s, Workload::Teragen, &sizing, 1);
+        let mut row = vec![s.label().to_string()];
+        for p in PROVIDERS {
+            row.push(format!("{:.5}", p.cost(&cell.ops)));
+        }
+        let avg = cost_usd(&cell.ops);
+        row.push(format!("{avg:.5}"));
+        row.push(format!("x{:.2}", avg / stocator_avg));
+        t.row(row);
+    }
+    print!("{}", t.render());
+    println!("\npaper Table 8 (Teragen column): H-S Base x8.23, S3a Base x27.82,");
+    println!("H-S Cv2 x5.24, S3a Cv2 x17.59, S3a Cv2+FU x17.55");
+}

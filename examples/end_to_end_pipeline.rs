@@ -1,0 +1,95 @@
+//! END-TO-END DRIVER (DESIGN.md deliverable (b) / EXPERIMENTS.md §E2E):
+//! runs a real multi-job pipeline through ALL THREE LAYERS —
+//!
+//!   L1/L2: the AOT-compiled JAX/Pallas kernels (`artifacts/*.hlo.txt`,
+//!          loaded via PJRT; falls back to native kernels with a warning
+//!          if `make artifacts` has not run),
+//!   L3:    the Rust coordinator: object store, Stocator connector,
+//!          commit protocol, Spark engine —
+//!
+//! on a real small workload: Teragen generates a dataset, Terasort sorts
+//! it globally, Wordcount counts a Zipf corpus, and the TPC-DS subset runs
+//! its 8 queries; every output is validated against an independent oracle
+//! and the paper's headline metric (REST ops vs the legacy connector) is
+//! reported.
+//!
+//!   make artifacts && cargo run --release --example end_to_end_pipeline
+
+use std::rc::Rc;
+use stocator::harness::scenarios::{build_env, Scenario, Sizing};
+use stocator::harness::Workload;
+use stocator::metrics::OpKind;
+use stocator::query::datagen::StarSchema;
+use stocator::runtime::Kernels;
+use stocator::workloads::{input, terasort, tpcds, wordcount, WorkloadReport};
+
+fn report(stage: &str, r: &WorkloadReport) {
+    println!(
+        "  {:<10} sim-runtime {:>8.2}s  REST ops {:>6}  GET {:>5} PUT {:>5} COPY {:>3}  -> {}",
+        stage,
+        r.runtime.as_secs_f64(),
+        r.ops.total(),
+        r.ops.get(OpKind::GetObject),
+        r.ops.get(OpKind::PutObject),
+        r.ops.get(OpKind::CopyObject),
+        match &r.validation {
+            Ok(s) => format!("OK: {s}"),
+            Err(e) => format!("FAILED: {e}"),
+        }
+    );
+    assert!(r.is_valid(), "{stage} failed validation");
+}
+
+fn main() {
+    let kernels = Rc::new(Kernels::load_or_fallback("artifacts"));
+    println!("kernel backend: {}", kernels.backend_name());
+
+    let mut sizing = Sizing::small();
+    sizing.parts = 24;
+    sizing.part_bytes = 25 * 1024;
+    sizing.slots = 12;
+
+    // ---- Teragen -> Terasort on Stocator, XLA kernels on the hot path.
+    let mut env = build_env(Scenario::Stocator, &sizing, "terasort", sizing.data_scale, sizing.parts, 7);
+    env.kernels = kernels.clone();
+    println!("\npipeline 1: teragen -> terasort (Stocator, {} parts):", sizing.parts);
+    let gen = stocator::workloads::teragen::run(&mut env, "tera-in");
+    report("teragen", &gen);
+    let sorted = terasort::run(&mut env, "tera-in", "tera-sorted");
+    report("terasort", &sorted);
+
+    // ---- Wordcount.
+    let mut env = build_env(Scenario::Stocator, &sizing, "wordcount", sizing.data_scale, sizing.parts, 8);
+    env.kernels = kernels.clone();
+    let (_, words, _) =
+        input::upload_text_dataset(&env.store, "res", "corpus", sizing.parts, sizing.part_bytes, 8);
+    println!("\npipeline 2: wordcount over a {}-part Zipf corpus ({words} words):", sizing.parts);
+    let wc = wordcount::run(&mut env, "corpus", "wc-out", words);
+    report("wordcount", &wc);
+
+    // ---- TPC-DS subset.
+    let mut env = build_env(Scenario::Stocator, &sizing, "tpcds", sizing.tpcds_scale, sizing.tpcds_shards, 9);
+    env.kernels = kernels.clone();
+    let schema = StarSchema::new(9, sizing.tpcds_shards, sizing.tpcds_rows);
+    tpcds::upload_star_schema(&env, "sales", &schema);
+    println!("\npipeline 3: TPC-DS subset (8 queries, {} shards):", sizing.tpcds_shards);
+    let ds = tpcds::run(&mut env, "sales", &schema);
+    report("tpcds", &ds);
+
+    // ---- Headline metric: REST ops vs the legacy baseline.
+    println!("\nheadline (paper Tables 6/7): Stocator vs S3a Base on Teragen:");
+    let st = stocator::harness::run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+    let s3 = stocator::harness::run_cell(Scenario::S3aBase, Workload::Teragen, &sizing, 1);
+    println!(
+        "  Stocator: {:>7.1}s, {:>6} ops | S3a Base: {:>7.1}s, {:>6} ops | speedup x{:.1}, op ratio x{:.1}",
+        st.runtime_mean_s,
+        st.ops.total(),
+        s3.runtime_mean_s,
+        s3.ops.total(),
+        s3.runtime_mean_s / st.runtime_mean_s,
+        s3.ops.total() as f64 / st.ops.total() as f64,
+    );
+    assert!(st.valid && s3.valid);
+    assert!(s3.runtime_mean_s > st.runtime_mean_s * 2.0, "speedup shape");
+    println!("\nend_to_end_pipeline OK (all layers composed, all outputs validated)");
+}

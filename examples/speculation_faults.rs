@@ -1,0 +1,29 @@
+//! Fault tolerance + speculative execution (paper §3.5, Table 3): task 2
+//! is executed three times; Stocator keeps every attempt under a distinct
+//! name, aborts delete the losers by *constructed* name, and the read path
+//! returns exactly one part per task either way.
+//!
+//!   cargo run --release --example speculation_faults
+
+use stocator::harness::traces::table3_trace;
+
+fn main() {
+    println!("== Table 3, lines 1-3 + 8-9: every task runs once ==");
+    let (trace, names) = table3_trace(0, false);
+    for l in &trace {
+        println!("  {l}");
+    }
+    println!("  final objects: {names:?}\n");
+
+    println!("== Table 3, lines 1-9: 3 attempts of task 2, Spark cleans up ==");
+    let (trace, names) = table3_trace(2, true);
+    for l in trace.iter().filter(|l| l.contains("PUT") || l.contains("DELETE")) {
+        println!("  {l}");
+    }
+    println!("  final objects: {names:?}\n");
+
+    println!("== Table 3, lines 1-5 + 8-9: duplicates remain (no cleanup) ==");
+    let (_, names) = table3_trace(2, false);
+    println!("  final objects: {names:?}");
+    println!("  (the read path dedups by most-data; see eventual_consistency)");
+}

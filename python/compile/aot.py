@@ -1,0 +1,68 @@
+"""AOT lowering: jax/pallas models -> HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/load_hlo and its README.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts]
+
+Writes one ``<model>.hlo.txt`` per entry in ``model.MODELS`` plus a
+``manifest.txt`` recording names, shapes and the shared constants so the
+rust runtime can sanity-check at load time.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels import BUCKETS, CHUNK, GROUPS, PARTS
+from .model import MODELS
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file stamp")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = [
+        f"constants\tCHUNK={CHUNK}\tBUCKETS={BUCKETS}\tPARTS={PARTS}\tGROUPS={GROUPS}"
+    ]
+    for name, (fn, example_args) in MODELS.items():
+        text = to_hlo_text(fn, example_args)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ",".join(
+            f"{a.dtype}[{'x'.join(map(str, a.shape))}]" for a in example_args
+        )
+        manifest.append(f"model\t{name}\t{shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    # Legacy stamp for Makefile dependency tracking.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("see per-model .hlo.txt files\n")
+    print(f"wrote {out_dir}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

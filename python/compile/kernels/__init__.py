@@ -1,0 +1,27 @@
+"""L1 — Pallas kernels for the workloads' compute hot-spots.
+
+These are the per-chunk primitives the Spark-simulator tasks execute through
+the AOT-compiled XLA artifacts (rust/src/runtime). All kernels run with
+``interpret=True``: the CPU PJRT plugin cannot execute Mosaic custom-calls,
+so interpret mode is the correctness path and TPU efficiency is argued
+structurally (DESIGN.md §Hardware-Adaptation).
+
+Fixed shapes (AOT requires static shapes; the rust runtime pads chunks):
+
+=============  =====================================================
+``CHUNK``      elements per input chunk (tokens / keys / bytes)
+``BUCKETS``    wordcount hash-histogram width
+``PARTS``      terasort range-partition fan-out
+``GROUPS``     TPC-DS group-by fan-out
+=============  =====================================================
+"""
+
+CHUNK = 4096
+BUCKETS = 512
+PARTS = 64
+GROUPS = 64
+
+from .hash_count import hash_count          # noqa: E402,F401
+from .range_partition import range_partition  # noqa: E402,F401
+from .line_stats import line_stats          # noqa: E402,F401
+from .group_agg import group_agg            # noqa: E402,F401

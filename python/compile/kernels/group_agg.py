@@ -1,0 +1,60 @@
+"""TPC-DS group-by aggregation kernel.
+
+Grouped sum + count over a chunk: ``sums[g] = sum(vals[i] where key[i]==g)``
+and ``counts[g]`` likewise. Keys outside ``[0, GROUPS)`` (e.g. filtered-out
+rows marked -1) contribute nothing.
+
+TPU mapping: the grouped sum is a genuine MXU contraction — the one-hot
+mask ``[GROUPS, BLOCK]`` f32 matrix multiplies the value vector
+``[BLOCK]``, i.e. a (GROUPS x BLOCK) x (BLOCK x 1) matmul per tile, which
+is exactly the shape the systolic array wants (GROUPS=64, BLOCK=512 tiles
+pad cleanly to the 128x128 MXU with bf16/f32 accumulation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import CHUNK, GROUPS
+
+BLOCK = 512
+
+
+def _kernel(key_ref, val_ref, sum_ref, cnt_ref):
+    keys = key_ref[...]
+    vals = val_ref[...]
+    groups = jax.lax.broadcasted_iota(jnp.int32, (GROUPS, BLOCK), 0)
+    onehot = (keys[None, :] == groups).astype(jnp.float32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    # The MXU-shaped contraction: [GROUPS, BLOCK] @ [BLOCK] -> [GROUPS].
+    sum_ref[...] += onehot @ vals
+    cnt_ref[...] += onehot.sum(axis=1).astype(jnp.int32)
+
+
+def group_agg(keys, vals):
+    """keys: int32[CHUNK] (group id or -1), vals: float32[CHUNK]
+    -> (sums float32[GROUPS], counts int32[GROUPS])."""
+    assert keys.shape == (CHUNK,), keys.shape
+    assert vals.shape == (CHUNK,), vals.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(CHUNK // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((GROUPS,), lambda i: (0,)),
+            pl.BlockSpec((GROUPS,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((GROUPS,), jnp.float32),
+            jax.ShapeDtypeStruct((GROUPS,), jnp.int32),
+        ],
+        interpret=True,
+    )(keys, vals)

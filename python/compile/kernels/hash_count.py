@@ -1,0 +1,52 @@
+"""Wordcount hash-histogram kernel.
+
+Maps a chunk of token ids to a histogram over ``BUCKETS`` hash buckets:
+``counts[b] = |{ i : hash(tok[i]) mod BUCKETS == b }|``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a scatter-add histogram is
+hostile to the MXU/VPU, so the reduction is expressed as a **one-hot
+compare + sum** — an ``[BUCKETS, BLOCK]`` mask reduced along the block
+axis, which lowers to vectorized compare + reduce (and, fused with a
+matmul-shaped contraction, lands on the MXU for the f32 variant in
+``group_agg``). The grid walks ``CHUNK/BLOCK`` tiles so only
+``BUCKETS x BLOCK`` i32 (512x512x4 B = 1 MiB) of one-hot mask plus the
+``BUCKETS`` accumulator live in VMEM at a time.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import BUCKETS, CHUNK
+
+#: Tile width per grid step (VMEM working set: BUCKETS*BLOCK*4 bytes).
+BLOCK = 512
+
+#: Knuth multiplicative hash constant (2^32 / phi).
+HASH_MULT = 2654435761
+
+
+def _kernel(tok_ref, o_ref):
+    toks = tok_ref[...]
+    h = (toks.astype(jnp.uint32) * jnp.uint32(HASH_MULT)) % jnp.uint32(BUCKETS)
+    buckets = jax.lax.broadcasted_iota(jnp.uint32, (BUCKETS, BLOCK), 0)
+    onehot = (h[None, :] == buckets).astype(jnp.int32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += onehot.sum(axis=1)
+
+
+def hash_count(tokens):
+    """tokens: int32[CHUNK] -> int32[BUCKETS] bucket histogram."""
+    assert tokens.shape == (CHUNK,), tokens.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(CHUNK // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BUCKETS,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((BUCKETS,), jnp.int32),
+        interpret=True,
+    )(tokens)

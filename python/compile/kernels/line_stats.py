@@ -1,0 +1,41 @@
+"""Read-only workload kernel: text-chunk statistics.
+
+Counts newline bytes (the Read-only benchmark counts lines) and non-zero
+bytes (chunks are zero-padded to ``CHUNK``; the byte count validates that
+padding is accounted). A pure compare+reduce over a VMEM tile.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import CHUNK
+
+BLOCK = 1024
+NEWLINE = 10  # b"\n"
+
+
+def _kernel(byte_ref, o_ref):
+    b = byte_ref[...]
+    newlines = (b == NEWLINE).astype(jnp.int32).sum()
+    nonzero = (b != 0).astype(jnp.int32).sum()
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.stack([newlines, nonzero])
+
+
+def line_stats(chunk_bytes):
+    """chunk_bytes: int32[CHUNK] (byte values 0..255, 0 = padding)
+    -> int32[2]: [newline count, non-zero byte count]."""
+    assert chunk_bytes.shape == (CHUNK,), chunk_bytes.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(CHUNK // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.int32),
+        interpret=True,
+    )(chunk_bytes)

@@ -1,0 +1,62 @@
+"""Terasort range-partition kernel.
+
+Given a chunk of sort keys and ``PARTS-1`` splitters (ascending), computes
+for each key its partition index ``p[i] = |{ s : key[i] >= splitter[s] }|``
+and the per-partition histogram.
+
+TPU mapping: the partition index is a broadcast compare against the
+splitter vector reduced along the splitter axis ([BLOCK, PARTS-1] mask),
+and the histogram reuses the one-hot reduction of ``hash_count`` — both
+vectorize on the VPU with no scatter. Splitters are tiny and live in VMEM
+for the whole grid.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import CHUNK, PARTS
+
+BLOCK = 512
+
+
+def _kernel(key_ref, split_ref, assign_ref, hist_ref):
+    keys = key_ref[...]
+    splits = split_ref[...]
+    # assign[i] = number of splitters <= key  (splitters ascending)
+    ge = (keys[:, None] >= splits[None, :]).astype(jnp.int32)
+    assign = ge.sum(axis=1)
+    assign_ref[...] = assign
+
+    parts = jax.lax.broadcasted_iota(jnp.int32, (PARTS, BLOCK), 0)
+    onehot = (assign[None, :] == parts).astype(jnp.int32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += onehot.sum(axis=1)
+
+
+def range_partition(keys, splitters):
+    """keys: int32[CHUNK], splitters: int32[PARTS-1] (ascending)
+    -> (assign int32[CHUNK], hist int32[PARTS])."""
+    assert keys.shape == (CHUNK,), keys.shape
+    assert splitters.shape == (PARTS - 1,), splitters.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(CHUNK // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((PARTS - 1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((PARTS,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((CHUNK,), jnp.int32),
+            jax.ShapeDtypeStruct((PARTS,), jnp.int32),
+        ],
+        interpret=True,
+    )(keys, splitters)

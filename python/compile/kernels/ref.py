@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every kernel — the CORE correctness signal.
+
+Each function computes the same result as its Pallas counterpart with no
+pallas_call involved; pytest asserts exact agreement, and the rust runtime's
+fallback implementations (rust/src/runtime/fallback.rs) mirror these.
+"""
+
+import jax.numpy as jnp
+
+from . import BUCKETS, GROUPS, PARTS
+from .hash_count import HASH_MULT
+from .line_stats import NEWLINE
+
+
+def hash_count_ref(tokens):
+    h = (tokens.astype(jnp.uint32) * jnp.uint32(HASH_MULT)) % jnp.uint32(BUCKETS)
+    return jnp.bincount(h.astype(jnp.int32), length=BUCKETS).astype(jnp.int32)
+
+
+def range_partition_ref(keys, splitters):
+    assign = (keys[:, None] >= splitters[None, :]).astype(jnp.int32).sum(axis=1)
+    hist = jnp.bincount(assign, length=PARTS).astype(jnp.int32)
+    return assign, hist
+
+
+def line_stats_ref(chunk_bytes):
+    newlines = (chunk_bytes == NEWLINE).astype(jnp.int32).sum()
+    nonzero = (chunk_bytes != 0).astype(jnp.int32).sum()
+    return jnp.stack([newlines, nonzero])
+
+
+def group_agg_ref(keys, vals):
+    mask = (keys[:, None] == jnp.arange(GROUPS)[None, :]).astype(jnp.float32)
+    sums = (mask * vals[:, None]).sum(axis=0)
+    counts = mask.sum(axis=0).astype(jnp.int32)
+    return sums, counts

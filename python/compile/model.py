@@ -1,0 +1,87 @@
+"""L2 — the jitted per-chunk compute graphs the Spark-simulator tasks run.
+
+Each model function wraps one or more L1 Pallas kernels (plus any glue
+math) into a single jax function with **static shapes**, lowered once by
+``aot.py`` into one fused HLO module per function. The rust runtime
+(rust/src/runtime) loads the HLO artifacts and invokes them from task
+bodies; Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    BUCKETS,
+    CHUNK,
+    GROUPS,
+    PARTS,
+    group_agg,
+    hash_count,
+    line_stats,
+    range_partition,
+)
+
+
+def wordcount_chunk(tokens):
+    """Wordcount map-side: token-id chunk -> (bucket histogram, token count).
+
+    tokens: int32[CHUNK], 0 = padding (token ids start at 1).
+    """
+    counts = hash_count(tokens)
+    n_tokens = (tokens != 0).astype(jnp.int32).sum()
+    # Padding tokens hash into some bucket; subtract them from that bucket.
+    pad = (tokens == 0).astype(jnp.int32).sum()
+    zero_bucket = jnp.zeros((BUCKETS,), jnp.int32).at[0].set(pad)
+    # hash(0) = 0 -> bucket 0.
+    return (counts - zero_bucket, n_tokens)
+
+
+def terasort_partition_chunk(keys, splitters):
+    """Terasort stage-1: keys -> (partition assignment, partition histogram).
+
+    keys: int32[CHUNK] (padding = INT32_MAX routes to the last partition),
+    splitters: int32[PARTS-1] ascending.
+    """
+    assign, hist = range_partition(keys, splitters)
+    return (assign, hist)
+
+
+def readonly_chunk(chunk_bytes):
+    """Read-only benchmark: byte chunk -> [newlines, nonzero bytes]."""
+    return (line_stats(chunk_bytes),)
+
+
+def tpcds_agg_chunk(keys, vals):
+    """TPC-DS group-by: (group keys, values) -> (sums, counts).
+
+    keys: int32[CHUNK] with -1 for filtered-out rows; vals: float32[CHUNK].
+    """
+    sums, counts = group_agg(keys, vals)
+    return (sums, counts)
+
+
+#: name -> (function, example argument shapes) — the AOT manifest.
+MODELS = {
+    "wordcount_chunk": (
+        wordcount_chunk,
+        (jax.ShapeDtypeStruct((CHUNK,), jnp.int32),),
+    ),
+    "terasort_partition_chunk": (
+        terasort_partition_chunk,
+        (
+            jax.ShapeDtypeStruct((CHUNK,), jnp.int32),
+            jax.ShapeDtypeStruct((PARTS - 1,), jnp.int32),
+        ),
+    ),
+    "readonly_chunk": (
+        readonly_chunk,
+        (jax.ShapeDtypeStruct((CHUNK,), jnp.int32),),
+    ),
+    "tpcds_agg_chunk": (
+        tpcds_agg_chunk,
+        (
+            jax.ShapeDtypeStruct((CHUNK,), jnp.int32),
+            jax.ShapeDtypeStruct((CHUNK,), jnp.float32),
+        ),
+    ),
+}

@@ -1,0 +1,39 @@
+"""AOT pipeline: models lower to parseable HLO text artifacts."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import to_hlo_text
+from compile.model import MODELS
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_hlo_text_structure(name):
+    fn, example_args = MODELS[name]
+    text = to_hlo_text(fn, example_args)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True: the root computation returns a tuple.
+    assert "tuple" in text.lower()
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    files = sorted(p.name for p in out.iterdir())
+    for name in MODELS:
+        assert f"{name}.hlo.txt" in files
+    assert "manifest.txt" in files
+    manifest = (out / "manifest.txt").read_text()
+    assert manifest.startswith("constants\tCHUNK=")
+    assert manifest.count("model\t") == len(MODELS)

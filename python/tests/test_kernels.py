@@ -1,0 +1,160 @@
+"""Pallas kernels vs pure-jnp oracles — exact agreement, hypothesis-swept.
+
+Shapes are fixed by the AOT contract (CHUNK etc.), so hypothesis sweeps the
+*value space*: uniform, adversarial (all-equal, all-padding, extremes) and
+random inputs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    BUCKETS,
+    CHUNK,
+    GROUPS,
+    PARTS,
+    group_agg,
+    hash_count,
+    line_stats,
+    range_partition,
+)
+from compile.kernels.ref import (
+    group_agg_ref,
+    hash_count_ref,
+    line_stats_ref,
+    range_partition_ref,
+)
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+def rand_tokens(seed, lo=0, hi=1 << 20):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, size=CHUNK, dtype=np.int32))
+
+
+# ---------- hash_count -------------------------------------------------------
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**32 - 1))
+def test_hash_count_matches_ref(seed):
+    toks = rand_tokens(seed)
+    np.testing.assert_array_equal(hash_count(toks), hash_count_ref(toks))
+
+
+def test_hash_count_conserves_mass():
+    toks = rand_tokens(7)
+    assert int(hash_count(toks).sum()) == CHUNK
+
+
+@pytest.mark.parametrize("value", [0, 1, 2**31 - 1, 12345])
+def test_hash_count_constant_input(value):
+    toks = jnp.full((CHUNK,), value, jnp.int32)
+    out = np.asarray(hash_count(toks))
+    assert out.sum() == CHUNK
+    assert (out > 0).sum() == 1  # everything in one bucket
+
+
+# ---------- range_partition --------------------------------------------------
+
+
+def make_splitters(seed):
+    rng = np.random.default_rng(seed)
+    s = np.sort(rng.integers(0, 1 << 20, size=PARTS - 1, dtype=np.int32))
+    return jnp.asarray(s)
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**32 - 1))
+def test_range_partition_matches_ref(seed):
+    keys = rand_tokens(seed)
+    splits = make_splitters(seed ^ 0xABCD)
+    a, h = range_partition(keys, splits)
+    ra, rh = range_partition_ref(keys, splits)
+    np.testing.assert_array_equal(a, ra)
+    np.testing.assert_array_equal(h, rh)
+
+
+def test_range_partition_is_monotone():
+    keys = jnp.asarray(np.arange(CHUNK, dtype=np.int32) * 251)
+    splits = make_splitters(3)
+    a, h = range_partition(keys, splits)
+    a = np.asarray(a)
+    assert (np.diff(a) >= 0).all(), "ascending keys -> ascending partitions"
+    assert int(h.sum()) == CHUNK
+    assert a.min() >= 0 and a.max() < PARTS
+
+
+def test_range_partition_extremes():
+    splits = make_splitters(5)
+    lo = jnp.full((CHUNK,), -(2**31), jnp.int32)
+    hi = jnp.full((CHUNK,), 2**31 - 1, jnp.int32)
+    a_lo, _ = range_partition(lo, splits)
+    a_hi, _ = range_partition(hi, splits)
+    assert np.asarray(a_lo).max() == 0
+    assert np.asarray(a_hi).min() == PARTS - 1
+
+
+# ---------- line_stats -------------------------------------------------------
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**32 - 1), pad=st.integers(0, CHUNK))
+def test_line_stats_matches_ref(seed, pad):
+    rng = np.random.default_rng(seed)
+    b = rng.integers(1, 256, size=CHUNK, dtype=np.int32)
+    if pad:
+        b[CHUNK - pad :] = 0
+    b = jnp.asarray(b)
+    np.testing.assert_array_equal(line_stats(b), line_stats_ref(b))
+
+
+def test_line_stats_counts_newlines_exactly():
+    text = b"hello\nworld\n\nxyz"
+    arr = np.zeros(CHUNK, np.int32)
+    arr[: len(text)] = np.frombuffer(text, np.uint8)
+    out = np.asarray(line_stats(jnp.asarray(arr)))
+    assert out[0] == 3
+    assert out[1] == len(text)  # no zero bytes in the text itself
+
+
+# ---------- group_agg --------------------------------------------------------
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**32 - 1), filtered=st.floats(0.0, 1.0))
+def test_group_agg_matches_ref(seed, filtered):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, GROUPS, size=CHUNK, dtype=np.int32)
+    mask = rng.random(CHUNK) < filtered
+    keys[mask] = -1  # filtered-out rows
+    vals = rng.random(CHUNK, dtype=np.float32)
+    sums, counts = group_agg(jnp.asarray(keys), jnp.asarray(vals))
+    rsums, rcounts = group_agg_ref(jnp.asarray(keys), jnp.asarray(vals))
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums), rtol=1e-5)
+    np.testing.assert_array_equal(counts, rcounts)
+
+
+def test_group_agg_against_numpy_groupby():
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, GROUPS, size=CHUNK, dtype=np.int32)
+    vals = rng.random(CHUNK, dtype=np.float32)
+    sums, counts = group_agg(jnp.asarray(keys), jnp.asarray(vals))
+    for g in range(0, GROUPS, 7):
+        sel = keys == g
+        np.testing.assert_allclose(
+            float(np.asarray(sums)[g]), float(vals[sel].sum()), rtol=1e-4
+        )
+        assert int(np.asarray(counts)[g]) == int(sel.sum())
+
+
+def test_group_agg_ignores_filtered_rows():
+    keys = jnp.full((CHUNK,), -1, jnp.int32)
+    vals = jnp.ones((CHUNK,), jnp.float32)
+    sums, counts = group_agg(keys, vals)
+    assert float(jnp.abs(sums).sum()) == 0.0
+    assert int(counts.sum()) == 0

@@ -1,0 +1,75 @@
+"""L2 model functions: shapes, semantics, and jit-lowerability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import BUCKETS, CHUNK, GROUPS, PARTS
+from compile.model import (
+    MODELS,
+    readonly_chunk,
+    terasort_partition_chunk,
+    tpcds_agg_chunk,
+    wordcount_chunk,
+)
+
+
+def test_wordcount_chunk_discounts_padding():
+    toks = np.zeros(CHUNK, np.int32)
+    toks[:100] = np.arange(1, 101)
+    counts, n = wordcount_chunk(jnp.asarray(toks))
+    assert int(n) == 100
+    assert counts.shape == (BUCKETS,)
+    assert int(counts.sum()) == 100, "padding must not be counted"
+    assert int(np.asarray(counts).min()) >= 0
+
+
+def test_wordcount_chunk_full():
+    rng = np.random.default_rng(5)
+    toks = rng.integers(1, 1 << 20, CHUNK, dtype=np.int32)
+    counts, n = wordcount_chunk(jnp.asarray(toks))
+    assert int(n) == CHUNK
+    assert int(counts.sum()) == CHUNK
+
+
+def test_terasort_partition_chunk_shapes():
+    rng = np.random.default_rng(6)
+    keys = jnp.asarray(rng.integers(0, 1 << 20, CHUNK, dtype=np.int32))
+    splits = jnp.asarray(np.sort(rng.integers(0, 1 << 20, PARTS - 1, dtype=np.int32)))
+    assign, hist = terasort_partition_chunk(keys, splits)
+    assert assign.shape == (CHUNK,)
+    assert hist.shape == (PARTS,)
+    assert int(hist.sum()) == CHUNK
+
+
+def test_readonly_chunk():
+    arr = np.zeros(CHUNK, np.int32)
+    arr[:3] = [10, 65, 10]  # "\nA\n"
+    (stats,) = readonly_chunk(jnp.asarray(arr))
+    assert int(stats[0]) == 2
+    assert int(stats[1]) == 3
+
+
+def test_tpcds_agg_chunk():
+    rng = np.random.default_rng(7)
+    keys = rng.integers(-1, GROUPS, CHUNK, dtype=np.int32)
+    vals = rng.random(CHUNK, dtype=np.float32)
+    sums, counts = tpcds_agg_chunk(jnp.asarray(keys), jnp.asarray(vals))
+    assert sums.shape == (GROUPS,)
+    assert int(counts.sum()) == int((keys >= 0).sum())
+
+
+def test_all_models_lower_to_stablehlo():
+    # Every model must lower with static shapes (the AOT contract).
+    for name, (fn, example_args) in MODELS.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        ir = str(lowered.compiler_ir("stablehlo"))
+        assert "func.func public @main" in ir, name
+
+
+def test_models_are_deterministic():
+    rng = np.random.default_rng(8)
+    toks = jnp.asarray(rng.integers(1, 1000, CHUNK, dtype=np.int32))
+    a, _ = wordcount_chunk(toks)
+    b, _ = wordcount_chunk(toks)
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,24 @@
+//! Bench: paper Figure 5 — micro-benchmark REST calls by type
+//! (Read-Only 50/500 GB, Teragen, Copy) under all six scenarios.
+
+use stocator::harness::figures::render_rest_figure;
+use stocator::harness::tables::Sweep;
+use stocator::harness::{Scenario, Sizing, Workload};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let sweep = Sweep::run(&Sizing::paper(), 1, &Workload::MICRO);
+    println!(
+        "{}",
+        render_rest_figure(&sweep, &Workload::MICRO, "Figure 5 — micro-benchmark REST calls")
+    );
+    // Stocator issues the fewest calls in every micro benchmark.
+    for w in Workload::MICRO {
+        let st = sweep.cell(Scenario::Stocator, w).unwrap().ops.total();
+        for s in Scenario::ALL {
+            let c = sweep.cell(s, w).unwrap().ops.total();
+            assert!(c >= st, "{} beat stocator on {}", s.label(), w.label());
+        }
+    }
+    println!("fig5 bench OK in {:.1}s wall", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,22 @@
+//! Bench: paper Figure 6 — macro-benchmark REST calls by type
+//! (Wordcount, Terasort, TPC-DS) under all six scenarios.
+
+use stocator::harness::figures::render_rest_figure;
+use stocator::harness::tables::Sweep;
+use stocator::harness::{Scenario, Sizing, Workload};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let sweep = Sweep::run(&Sizing::paper(), 1, &Workload::MACRO);
+    println!(
+        "{}",
+        render_rest_figure(&sweep, &Workload::MACRO, "Figure 6 — macro-benchmark REST calls")
+    );
+    for w in Workload::MACRO {
+        let st = sweep.cell(Scenario::Stocator, w).unwrap().ops.total();
+        for s in Scenario::ALL {
+            assert!(sweep.cell(s, w).unwrap().ops.total() >= st);
+        }
+    }
+    println!("fig6 bench OK in {:.1}s wall", t0.elapsed().as_secs_f64());
+}

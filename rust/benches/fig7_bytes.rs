@@ -1,0 +1,27 @@
+//! Bench: paper Figure 7 — bytes read / written / copied on the object
+//! store for the workloads with a write phase. Headline: base connectors
+//! move every output byte 3x (PUT + two COPYs), Cv2 2x, Stocator exactly
+//! 1x.
+
+use stocator::harness::figures::{render_fig7, write_amplification};
+use stocator::harness::tables::Sweep;
+use stocator::harness::{Scenario, Sizing, Workload};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let sweep = Sweep::run(&Sizing::paper(), 1, &Workload::WRITE);
+    println!("{}", render_fig7(&sweep));
+    for w in [Workload::Teragen, Workload::Copy] {
+        let st = write_amplification(&sweep, w, Scenario::Stocator).unwrap();
+        let cv2 = write_amplification(&sweep, w, Scenario::S3aCv2).unwrap();
+        let base = write_amplification(&sweep, w, Scenario::S3aBase).unwrap();
+        println!(
+            "{}: write amplification stocator x{st:.2}, cv2 x{cv2:.2}, base x{base:.2}",
+            w.label()
+        );
+        assert!((0.99..1.15).contains(&st));
+        assert!((1.8..2.4).contains(&cv2));
+        assert!((2.6..3.4).contains(&base));
+    }
+    println!("fig7 bench OK in {:.1}s wall", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,56 @@
+//! Perf bench (not a paper artifact): wall-clock throughput of the
+//! simulator's hot paths — the L3 optimization target of EXPERIMENTS.md
+//! §Perf. Hand-rolled because criterion is unavailable offline.
+
+use stocator::objectstore::{Metadata, ObjectStore, StoreConfig};
+use stocator::simclock::SimInstant;
+use std::time::Instant;
+
+fn bench<F: FnMut(u64)>(name: &str, iters: u64, mut f: F) -> f64 {
+    // Warmup.
+    for i in 0..iters / 10 {
+        f(i);
+    }
+    let t0 = Instant::now();
+    for i in 0..iters {
+        f(i);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let rate = iters as f64 / dt;
+    println!("{name:<32} {iters:>9} iters  {dt:>7.3}s  {rate:>12.0} ops/s");
+    rate
+}
+
+fn main() {
+    println!("simulator hot-path throughput (wall clock):");
+    let store = ObjectStore::new(StoreConfig::default());
+    store.create_container("c", SimInstant::EPOCH).0.unwrap();
+
+    let put_rate = bench("PUT 1KiB", 200_000, |i| {
+        let key = format!("d/part-{:06}", i % 100_000);
+        store
+            .put_object("c", &key, vec![7u8; 1024], Metadata::new(), SimInstant(i))
+            .0
+            .unwrap();
+    });
+    let head_rate = bench("HEAD (hit)", 500_000, |i| {
+        let key = format!("d/part-{:06}", i % 100_000);
+        store.head_object("c", &key).0.unwrap();
+    });
+    let get_rate = bench("GET 1KiB", 300_000, |i| {
+        let key = format!("d/part-{:06}", i % 100_000);
+        store.get_object("c", &key).0.unwrap();
+    });
+    let list_rate = bench("LIST prefix (1k entries)", 2_000, |i| {
+        let prefix = format!("d/part-{:02}", i % 100);
+        let (r, _) = store.list("c", &prefix, None, SimInstant(i));
+        std::hint::black_box(r.unwrap());
+    });
+    // Perf targets (DESIGN.md §8): the simulator must stay far faster than
+    // the protocols it measures.
+    assert!(put_rate > 100_000.0, "PUT path too slow: {put_rate:.0}/s");
+    assert!(head_rate > 300_000.0, "HEAD path too slow: {head_rate:.0}/s");
+    assert!(get_rate > 200_000.0, "GET path too slow: {get_rate:.0}/s");
+    assert!(list_rate > 200.0, "LIST path too slow: {list_rate:.0}/s");
+    println!("store_hotpath bench OK");
+}

@@ -1,0 +1,28 @@
+//! Bench: paper Table 2 — REST operations, by type, for a Spark job that
+//! writes a single output object, per connector (measured vs paper).
+
+use stocator::harness::tables::{render_table2, table2_single_object, TABLE2_PAPER};
+use stocator::harness::Scenario;
+use stocator::metrics::OpKind;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    print!("{}", render_table2());
+    println!(
+        "paper reference: Hadoop-Swift 48, S3a 117, Stocator 8 total ops"
+    );
+    // Shape assertions (the reproduction claim).
+    let sw = table2_single_object(Scenario::HadoopSwiftBase);
+    let s3 = table2_single_object(Scenario::S3aBase);
+    let st = table2_single_object(Scenario::Stocator);
+    assert!(st.total() < sw.total() && sw.total() < s3.total());
+    assert_eq!(st.get(OpKind::CopyObject), 0);
+    assert_eq!(st.get(OpKind::DeleteObject), 0);
+    assert!(
+        (st.total() as i64 - TABLE2_PAPER[2].6 as i64).abs() <= 4,
+        "stocator {} vs paper {}",
+        st.total(),
+        TABLE2_PAPER[2].6
+    );
+    println!("table2 bench OK in {:.2}s", t0.elapsed().as_secs_f64());
+}

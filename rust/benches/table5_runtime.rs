@@ -1,0 +1,21 @@
+//! Bench: paper Table 5 — average runtime of all 7 workloads under all 6
+//! scenarios (3 repetitions, ± stddev), virtual clock vs paper seconds.
+
+use stocator::harness::tables::Sweep;
+use stocator::harness::{Sizing, Workload};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let sweep = Sweep::run(&Sizing::paper(), 3, &Workload::ALL);
+    println!("{}", sweep.render_table5());
+    match sweep.check_shape() {
+        Ok(()) => println!("shape check OK"),
+        Err(v) => {
+            for x in &v {
+                println!("VIOLATION: {x}");
+            }
+            std::process::exit(1);
+        }
+    }
+    println!("table5 bench OK in {:.1}s wall", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,17 @@
+//! Bench: paper Table 6 — workload speedups relative to Stocator.
+
+use stocator::harness::tables::Sweep;
+use stocator::harness::{Scenario, Sizing, Workload};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let sweep = Sweep::run(&Sizing::paper(), 1, &Workload::ALL);
+    println!("{}", sweep.render_table6());
+    // Headline claims: Teragen ~18x vs base (we accept >=10x), ~1x read.
+    let st = sweep.cell(Scenario::Stocator, Workload::Teragen).unwrap();
+    let s3 = sweep.cell(Scenario::S3aBase, Workload::Teragen).unwrap();
+    let speedup = s3.runtime_mean_s / st.runtime_mean_s;
+    println!("Teragen speedup vs S3a Base: x{speedup:.1} (paper: x18.03)");
+    assert!(speedup >= 10.0);
+    println!("table6 bench OK in {:.1}s wall", t0.elapsed().as_secs_f64());
+}

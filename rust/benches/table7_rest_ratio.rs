@@ -1,0 +1,23 @@
+//! Bench: paper Table 7 — ratio of REST calls relative to Stocator.
+
+use stocator::harness::tables::Sweep;
+use stocator::harness::{Scenario, Sizing, Workload};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let sweep = Sweep::run(&Sizing::paper(), 1, &Workload::ALL);
+    println!("{}", sweep.render_table7());
+    println!(
+        "paper: Teragen — H-S Base x11.51, S3a Base x33.74, H-S Cv2 x7.72, S3a Cv2 x21.15"
+    );
+    let st = sweep.cell(Scenario::Stocator, Workload::Teragen).unwrap();
+    let s3 = sweep.cell(Scenario::S3aBase, Workload::Teragen).unwrap();
+    let sw = sweep.cell(Scenario::HadoopSwiftBase, Workload::Teragen).unwrap();
+    let r_s3 = s3.ops.total() as f64 / st.ops.total() as f64;
+    let r_sw = sw.ops.total() as f64 / st.ops.total() as f64;
+    println!("measured Teragen ratios: H-S x{r_sw:.1}, S3a x{r_s3:.1}");
+    assert!(r_s3 > r_sw, "S3a must be the chattiest");
+    assert!(r_s3 >= 15.0, "S3a/Stocator ratio {r_s3:.1} (paper 33.7)");
+    assert!(r_sw >= 5.0, "H-S/Stocator ratio {r_sw:.1} (paper 11.5)");
+    println!("table7 bench OK in {:.1}s wall", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,19 @@
+//! Bench: paper Table 8 — REST-call cost relative to Stocator, averaged
+//! over the IBM/AWS/Google/Azure 2017 price sheets.
+
+use stocator::harness::tables::{table8_paper_note, Sweep};
+use stocator::harness::{Scenario, Sizing, Workload};
+use stocator::objectstore::cost_usd;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let sweep = Sweep::run(&Sizing::paper(), 1, &Workload::ALL);
+    println!("{}", sweep.render_table8());
+    println!("{}", table8_paper_note());
+    let st = sweep.cell(Scenario::Stocator, Workload::Teragen).unwrap();
+    let s3 = sweep.cell(Scenario::S3aCv2, Workload::Teragen).unwrap();
+    let ratio = cost_usd(&s3.ops) / cost_usd(&st.ops);
+    println!("measured Teragen S3a-Cv2 cost ratio: x{ratio:.1} (paper x17.59)");
+    assert!(ratio >= 8.0, "cost ratio {ratio:.1}");
+    println!("table8 bench OK in {:.1}s wall", t0.elapsed().as_secs_f64());
+}

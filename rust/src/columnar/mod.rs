@@ -1,0 +1,14 @@
+//! A miniature Parquet-like columnar file format ("parquetish").
+//!
+//! The paper's TPC-DS workload reads Parquet files from the object store;
+//! the read-path operation pattern depends on the container layout (one
+//! object per row group, footer metadata probed before data). This module
+//! implements the minimal equivalent: typed column chunks with per-column
+//! min/max statistics in a footer, serialized into a single object per row
+//! group, readable through any [`crate::fs::FileSystem`] connector.
+
+pub mod schema;
+pub mod rowgroup;
+
+pub use rowgroup::{ColumnData, RowGroup};
+pub use schema::{ColType, Schema};

@@ -1,0 +1,307 @@
+//! Row-group (de)serialization: one object per row group, columns stored
+//! contiguously, footer with offsets and min/max statistics.
+//!
+//! Layout (little-endian):
+//! ```text
+//! "PQSH"                     magic
+//! u32 ncols, u32 nrows
+//! per column:
+//!   u16 name_len, name bytes, u8 type code
+//!   u64 data offset, u64 data len (bytes)
+//!   i32/f32 min, max            (column statistics, for filter pushdown)
+//! column data blocks (plain encoding, 4 bytes/value)
+//! "HSQP"                     trailing magic
+//! ```
+
+use super::schema::{ColType, Schema};
+
+/// A decoded column.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ColumnData {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl ColumnData {
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnData::I32(v) => v.len(),
+            ColumnData::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn col_type(&self) -> ColType {
+        match self {
+            ColumnData::I32(_) => ColType::Int32,
+            ColumnData::F32(_) => ColType::Float32,
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            ColumnData::I32(v) => v,
+            _ => panic!("column is not i32"),
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            ColumnData::F32(v) => v,
+            _ => panic!("column is not f32"),
+        }
+    }
+}
+
+/// A row group: schema + columns of equal length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowGroup {
+    pub schema: Schema,
+    pub columns: Vec<ColumnData>,
+    pub rows: usize,
+}
+
+const MAGIC: &[u8; 4] = b"PQSH";
+const MAGIC_END: &[u8; 4] = b"HSQP";
+
+impl RowGroup {
+    pub fn new(schema: Schema, columns: Vec<ColumnData>) -> RowGroup {
+        assert_eq!(schema.len(), columns.len(), "schema/column mismatch");
+        let rows = columns.first().map(|c| c.len()).unwrap_or(0);
+        for (i, c) in columns.iter().enumerate() {
+            assert_eq!(c.len(), rows, "ragged column {i}");
+            assert_eq!(c.col_type(), schema.fields[i].1, "type mismatch col {i}");
+        }
+        RowGroup {
+            schema,
+            columns,
+            rows,
+        }
+    }
+
+    pub fn column(&self, name: &str) -> Option<&ColumnData> {
+        self.schema.index_of(name).map(|i| &self.columns[i])
+    }
+
+    /// Per-column (min, max) as f64 (statistics).
+    fn stats(col: &ColumnData) -> (f64, f64) {
+        match col {
+            ColumnData::I32(v) => {
+                let min = v.iter().copied().min().unwrap_or(0);
+                let max = v.iter().copied().max().unwrap_or(0);
+                (min as f64, max as f64)
+            }
+            ColumnData::F32(v) => {
+                let min = v.iter().copied().fold(f32::INFINITY, f32::min);
+                let max = v.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                if v.is_empty() {
+                    (0.0, 0.0)
+                } else {
+                    (min as f64, max as f64)
+                }
+            }
+        }
+    }
+
+    /// Serialize to the parquetish byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.columns.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.rows as u32).to_le_bytes());
+        // Compute the header size first so offsets are absolute.
+        let mut header_len = 4 + 4 + 4;
+        for (name, _) in &self.schema.fields {
+            header_len += 2 + name.len() + 1 + 8 + 8 + 8 + 8;
+        }
+        let mut offset = header_len as u64;
+        for ((name, ty), col) in self.schema.fields.iter().zip(&self.columns) {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(ty.code());
+            let len = (col.len() * 4) as u64;
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&len.to_le_bytes());
+            let (min, max) = Self::stats(col);
+            out.extend_from_slice(&min.to_le_bytes());
+            out.extend_from_slice(&max.to_le_bytes());
+            offset += len;
+        }
+        debug_assert_eq!(out.len(), header_len);
+        for col in &self.columns {
+            match col {
+                ColumnData::I32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                ColumnData::F32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out.extend_from_slice(MAGIC_END);
+        out
+    }
+
+    /// Parse a parquetish object.
+    pub fn decode(bytes: &[u8]) -> Result<RowGroup, String> {
+        let take = |range: std::ops::Range<usize>| -> Result<&[u8], String> {
+            bytes
+                .get(range.clone())
+                .ok_or_else(|| format!("truncated row group at {range:?}"))
+        };
+        if take(0..4)? != MAGIC {
+            return Err("bad magic".into());
+        }
+        if &bytes[bytes.len().saturating_sub(4)..] != MAGIC_END {
+            return Err("bad trailing magic (truncated object?)".into());
+        }
+        let ncols = u32::from_le_bytes(take(4..8)?.try_into().unwrap()) as usize;
+        let rows = u32::from_le_bytes(take(8..12)?.try_into().unwrap()) as usize;
+        let mut pos = 12;
+        let mut fields = Vec::with_capacity(ncols);
+        let mut blocks = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let name_len =
+                u16::from_le_bytes(take(pos..pos + 2)?.try_into().unwrap()) as usize;
+            pos += 2;
+            let name = String::from_utf8(take(pos..pos + name_len)?.to_vec())
+                .map_err(|e| e.to_string())?;
+            pos += name_len;
+            let ty = ColType::from_code(bytes[pos]).ok_or("bad column type")?;
+            pos += 1;
+            let offset = u64::from_le_bytes(take(pos..pos + 8)?.try_into().unwrap()) as usize;
+            pos += 8;
+            let len = u64::from_le_bytes(take(pos..pos + 8)?.try_into().unwrap()) as usize;
+            pos += 8;
+            pos += 16; // min/max stats (not needed for decode)
+            fields.push((name, ty));
+            blocks.push((ty, offset, len));
+        }
+        let mut columns = Vec::with_capacity(ncols);
+        for (ty, offset, len) in blocks {
+            let raw = take(offset..offset + len)?;
+            if raw.len() != rows * 4 {
+                return Err(format!("column block {} != rows {}", raw.len(), rows * 4));
+            }
+            let col = match ty {
+                ColType::Int32 => ColumnData::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                ColType::Float32 => ColumnData::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+            };
+            columns.push(col);
+        }
+        let schema = Schema { fields };
+        Ok(RowGroup::new(schema, columns))
+    }
+
+    /// Read just the statistics (name, type, min, max) — the footer-probe
+    /// equivalent used for filter pushdown.
+    pub fn decode_stats(bytes: &[u8]) -> Result<Vec<(String, ColType, f64, f64)>, String> {
+        if bytes.get(0..4) != Some(MAGIC.as_slice()) {
+            return Err("bad magic".into());
+        }
+        let ncols = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let mut pos = 12;
+        let mut out = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let name_len = u16::from_le_bytes(bytes[pos..pos + 2].try_into().unwrap()) as usize;
+            pos += 2;
+            let name = String::from_utf8_lossy(&bytes[pos..pos + name_len]).to_string();
+            pos += name_len;
+            let ty = ColType::from_code(bytes[pos]).ok_or("bad type")?;
+            pos += 1 + 16; // type byte + offset/len words
+            let min = f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+            let max = f64::from_le_bytes(bytes[pos + 8..pos + 16].try_into().unwrap());
+            pos += 16;
+            out.push((name, ty, min, max));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn sample() -> RowGroup {
+        RowGroup::new(
+            Schema::new(&[("sk", ColType::Int32), ("price", ColType::Float32)]),
+            vec![
+                ColumnData::I32(vec![1, 5, -3, 900]),
+                ColumnData::F32(vec![1.5, 0.0, -2.25, 1e6]),
+            ],
+        )
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let rg = sample();
+        let bytes = rg.encode();
+        let back = RowGroup::decode(&bytes).unwrap();
+        assert_eq!(back, rg);
+        assert_eq!(back.rows, 4);
+        assert_eq!(back.column("price").unwrap().as_f32()[3], 1e6);
+    }
+
+    #[test]
+    fn stats_probe() {
+        let bytes = sample().encode();
+        let stats = RowGroup::decode_stats(&bytes).unwrap();
+        assert_eq!(stats[0].0, "sk");
+        assert_eq!(stats[0].2, -3.0);
+        assert_eq!(stats[0].3, 900.0);
+        assert_eq!(stats[1].2, -2.25);
+    }
+
+    #[test]
+    fn truncated_objects_are_rejected() {
+        let bytes = sample().encode();
+        // The partial-write fault writes a prefix: decode must fail loudly.
+        for cut in [0, 3, 10, bytes.len() - 1] {
+            assert!(
+                RowGroup::decode(&bytes[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+        assert!(RowGroup::decode(b"JUNKJUNKJUNK").is_err());
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check("rowgroup roundtrip", 40, |g| {
+            let n = g.usize(0..200);
+            let ints: Vec<i32> = (0..n).map(|_| g.rng().next_u32() as i32).collect();
+            let floats: Vec<f32> = (0..n).map(|_| g.rng().next_f64() as f32).collect();
+            let rg = RowGroup::new(
+                Schema::new(&[("a", ColType::Int32), ("b", ColType::Float32)]),
+                vec![ColumnData::I32(ints), ColumnData::F32(floats)],
+            );
+            let back = RowGroup::decode(&rg.encode()).unwrap();
+            assert_eq!(back, rg);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_columns_rejected() {
+        RowGroup::new(
+            Schema::new(&[("a", ColType::Int32), ("b", ColType::Int32)]),
+            vec![ColumnData::I32(vec![1]), ColumnData::I32(vec![1, 2])],
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! Schemas for the parquetish format.
+
+/// Column types (all the TPC-DS subset needs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColType {
+    Int32,
+    Float32,
+}
+
+impl ColType {
+    pub fn code(self) -> u8 {
+        match self {
+            ColType::Int32 => 1,
+            ColType::Float32 => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<ColType> {
+        match c {
+            1 => Some(ColType::Int32),
+            2 => Some(ColType::Float32),
+            _ => None,
+        }
+    }
+}
+
+/// An ordered list of named, typed columns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    pub fields: Vec<(String, ColType)>,
+}
+
+impl Schema {
+    pub fn new(fields: &[(&str, ColType)]) -> Self {
+        Self {
+            fields: fields
+                .iter()
+                .map(|(n, t)| (n.to_string(), *t))
+                .collect(),
+        }
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.fields.iter().position(|(n, _)| n == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_codes_roundtrip() {
+        for t in [ColType::Int32, ColType::Float32] {
+            assert_eq!(ColType::from_code(t.code()), Some(t));
+        }
+        assert_eq!(ColType::from_code(99), None);
+    }
+
+    #[test]
+    fn schema_lookup() {
+        let s = Schema::new(&[("a", ColType::Int32), ("b", ColType::Float32)]);
+        assert_eq!(s.index_of("b"), Some(1));
+        assert_eq!(s.index_of("z"), None);
+        assert_eq!(s.len(), 2);
+    }
+}

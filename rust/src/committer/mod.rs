@@ -1,0 +1,18 @@
+//! Hadoop's `FileOutputCommitter` (paper §2.2.2) and the Databricks
+//! `DirectOutputCommitter` baseline.
+//!
+//! The committer drives the temporary-file/rename commit protocol through
+//! the [`crate::fs::FileSystem`] interface. Version 1 renames twice (task
+//! commit: attempt dir → job-temp dir, executed by executors in parallel;
+//! job commit: job-temp → final, executed **serially by the driver**).
+//! Version 2 renames once, at task commit. The direct committer does not
+//! rename at all — and is unsafe under speculation, which the tests
+//! demonstrate.
+//!
+//! When the underlying connector is Stocator, every rename/list below is
+//! intercepted and becomes free — the committer code is *identical*, which
+//! is exactly the paper's deployment story (no Spark/Hadoop changes).
+
+pub mod protocol;
+
+pub use protocol::{CommitAlgorithm, Committer, JobContext, TaskAttemptContext};

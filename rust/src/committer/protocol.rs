@@ -1,0 +1,464 @@
+//! The commit protocol implementation (Hadoop 2.7.3 semantics).
+
+use crate::connectors::naming::AttemptId;
+use crate::fs::{FileSystem, FsError, OpCtx, Path};
+
+/// Which commit algorithm a scenario runs (paper §4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommitAlgorithm {
+    /// `mapreduce.fileoutputcommitter.algorithm.version=1` (the 2.7.3
+    /// default): task commit renames to a job-temporary dir; job commit
+    /// renames everything to final names, serially, in the driver.
+    V1,
+    /// version=2: task commit renames directly to final names (parallel,
+    /// in the executors); job commit only writes `_SUCCESS`.
+    V2,
+    /// The Databricks DirectOutputCommitter: tasks write final names
+    /// directly. No fault-tolerance story — kept as a baseline.
+    Direct,
+}
+
+impl CommitAlgorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            CommitAlgorithm::V1 => "FileOutputCommitter v1",
+            CommitAlgorithm::V2 => "FileOutputCommitter v2",
+            CommitAlgorithm::Direct => "DirectOutputCommitter",
+        }
+    }
+}
+
+/// Job-scoped context: the output dataset path and the application attempt
+/// (always 0 in our runs, as in the paper's traces).
+#[derive(Debug, Clone)]
+pub struct JobContext {
+    pub output: Path,
+    pub app_attempt: u32,
+}
+
+impl JobContext {
+    pub fn new(output: Path) -> Self {
+        Self {
+            output,
+            app_attempt: 0,
+        }
+    }
+
+    /// `<out>/_temporary/<app>`
+    pub fn temp_root(&self) -> Path {
+        self.output
+            .child(&format!("_temporary/{}", self.app_attempt))
+    }
+
+    pub fn success_path(&self) -> Path {
+        self.output.child("_SUCCESS")
+    }
+}
+
+/// Task-attempt-scoped context.
+#[derive(Debug, Clone)]
+pub struct TaskAttemptContext {
+    pub job: JobContext,
+    pub attempt: AttemptId,
+}
+
+impl TaskAttemptContext {
+    pub fn new(job: &JobContext, attempt: AttemptId) -> Self {
+        Self {
+            job: job.clone(),
+            attempt,
+        }
+    }
+
+    /// `<out>/_temporary/<app>/_temporary/attempt_...` — where the task's
+    /// output stream nominally writes.
+    pub fn attempt_dir(&self) -> Path {
+        self.job
+            .temp_root()
+            .child(&format!("_temporary/{}", self.attempt))
+    }
+
+    /// `<out>/_temporary/<app>/task_...` — v1 task-commit target.
+    pub fn committed_task_dir(&self) -> Path {
+        self.job.temp_root().child(&self.attempt.task_string())
+    }
+
+    /// Where this attempt writes a part file named `basename`.
+    pub fn work_path(&self, algorithm: CommitAlgorithm, basename: &str) -> Path {
+        match algorithm {
+            CommitAlgorithm::Direct => self.job.output.child(basename),
+            _ => self.attempt_dir().child(basename),
+        }
+    }
+}
+
+/// The committer. Stateless; all state lives in the filesystem, as in
+/// Hadoop (paper §2.2.2: "Hadoop is highly distributed and thus it keeps
+/// its state in its storage system").
+#[derive(Debug, Clone, Copy)]
+pub struct Committer {
+    pub algorithm: CommitAlgorithm,
+}
+
+impl Committer {
+    pub fn new(algorithm: CommitAlgorithm) -> Self {
+        Self { algorithm }
+    }
+
+    /// Driver: create the output and temporary directory structure
+    /// (Table 1, step 1).
+    pub fn setup_job(&self, fs: &dyn FileSystem, job: &JobContext, ctx: &mut OpCtx) -> Result<(), FsError> {
+        match self.algorithm {
+            CommitAlgorithm::Direct => fs.mkdirs(&job.output, ctx),
+            _ => fs.mkdirs(&job.temp_root(), ctx),
+        }
+    }
+
+    /// Executor: create the attempt's working directory (Table 1, step 2).
+    pub fn setup_task(
+        &self,
+        fs: &dyn FileSystem,
+        task: &TaskAttemptContext,
+        ctx: &mut OpCtx,
+    ) -> Result<(), FsError> {
+        match self.algorithm {
+            CommitAlgorithm::Direct => Ok(()),
+            _ => fs.mkdirs(&task.attempt_dir(), ctx),
+        }
+    }
+
+    /// Executor: write one part file for this attempt.
+    pub fn write_part(
+        &self,
+        fs: &dyn FileSystem,
+        task: &TaskAttemptContext,
+        basename: &str,
+        data: Vec<u8>,
+        ctx: &mut OpCtx,
+    ) -> Result<(), FsError> {
+        let path = task.work_path(self.algorithm, basename);
+        fs.create(&path, data, true, ctx)
+    }
+
+    /// Executor: does this attempt have output to commit?
+    pub fn needs_task_commit(
+        &self,
+        fs: &dyn FileSystem,
+        task: &TaskAttemptContext,
+        ctx: &mut OpCtx,
+    ) -> bool {
+        match self.algorithm {
+            CommitAlgorithm::Direct => false,
+            _ => fs.exists(&task.attempt_dir(), ctx),
+        }
+    }
+
+    /// Executor: task commit (Table 1, steps 4-5).
+    pub fn commit_task(
+        &self,
+        fs: &dyn FileSystem,
+        task: &TaskAttemptContext,
+        ctx: &mut OpCtx,
+    ) -> Result<(), FsError> {
+        match self.algorithm {
+            CommitAlgorithm::Direct => Ok(()),
+            CommitAlgorithm::V1 => {
+                // Rename the whole attempt dir to the job-temporary task
+                // dir (after clobbering any earlier committed attempt).
+                let dst = task.committed_task_dir();
+                if fs.exists(&dst, ctx) {
+                    fs.delete(&dst, true, ctx)?;
+                }
+                fs.rename(&task.attempt_dir(), &dst, ctx)?;
+                Ok(())
+            }
+            CommitAlgorithm::V2 => {
+                // Merge the attempt dir straight into the output dir.
+                self.merge_paths(fs, &task.attempt_dir(), &task.job.output, ctx)
+            }
+        }
+    }
+
+    /// Executor: abort an attempt — delete its working directory.
+    pub fn abort_task(
+        &self,
+        fs: &dyn FileSystem,
+        task: &TaskAttemptContext,
+        ctx: &mut OpCtx,
+    ) -> Result<(), FsError> {
+        match self.algorithm {
+            CommitAlgorithm::Direct => Ok(()), // nothing to clean: the damage is done
+            _ => {
+                fs.delete(&task.attempt_dir(), true, ctx)?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Driver: job commit (Table 1, steps 6-8).
+    pub fn commit_job(&self, fs: &dyn FileSystem, job: &JobContext, ctx: &mut OpCtx) -> Result<(), FsError> {
+        match self.algorithm {
+            CommitAlgorithm::V1 => {
+                // List the job-temporary dirs and merge each into the
+                // output — serially, in the driver. THE bottleneck the
+                // paper measures.
+                let temp = job.temp_root();
+                if let Ok(children) = fs.list_status(&temp, ctx) {
+                    for child in children {
+                        if child.is_dir && child.path.name().starts_with("task_") {
+                            self.merge_paths(fs, &child.path, &job.output, ctx)?;
+                        }
+                    }
+                }
+                self.cleanup(fs, job, ctx)?;
+                fs.create(&job.success_path(), Vec::new(), true, ctx)
+            }
+            CommitAlgorithm::V2 => {
+                self.cleanup(fs, job, ctx)?;
+                fs.create(&job.success_path(), Vec::new(), true, ctx)
+            }
+            CommitAlgorithm::Direct => fs.create(&job.success_path(), Vec::new(), true, ctx),
+        }
+    }
+
+    /// Driver: abort the whole job.
+    pub fn abort_job(&self, fs: &dyn FileSystem, job: &JobContext, ctx: &mut OpCtx) -> Result<(), FsError> {
+        self.cleanup(fs, job, ctx)
+    }
+
+    fn cleanup(&self, fs: &dyn FileSystem, job: &JobContext, ctx: &mut OpCtx) -> Result<(), FsError> {
+        let tmp = job.output.child("_temporary");
+        fs.delete(&tmp, true, ctx)?;
+        Ok(())
+    }
+
+    /// Hadoop's `mergePaths`: move every file under `src` to the
+    /// corresponding path under `dst` (rename per file; recurse into
+    /// directories).
+    fn merge_paths(
+        &self,
+        fs: &dyn FileSystem,
+        src: &Path,
+        dst: &Path,
+        ctx: &mut OpCtx,
+    ) -> Result<(), FsError> {
+        let children = match fs.list_status(src, ctx) {
+            Ok(c) => c,
+            Err(FsError::NotFound(_)) => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        for child in children {
+            let name = child.path.name().to_string();
+            let target = dst.child(&name);
+            if child.is_dir {
+                self.merge_paths(fs, &child.path, &target, ctx)?;
+            } else {
+                if fs.exists(&target, ctx) {
+                    fs.delete(&target, false, ctx)?;
+                }
+                fs.rename(&child.path, &target, ctx)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connectors::{HadoopSwift, Stocator};
+    use crate::fs::hdfs::Hdfs;
+    use crate::metrics::OpKind;
+    use crate::objectstore::{ObjectStore, StoreConfig};
+    use crate::simclock::SimInstant;
+
+    fn attempt(task: u32, n: u32) -> AttemptId {
+        AttemptId::new("201702221313", "0000", task, n)
+    }
+
+    fn ctx() -> OpCtx {
+        OpCtx::new(SimInstant::EPOCH)
+    }
+
+    /// Run the full one-task protocol of the paper's §2.3 example.
+    fn run_single_task(
+        fs: &dyn FileSystem,
+        scheme: &str,
+        algorithm: CommitAlgorithm,
+        ctx: &mut OpCtx,
+    ) {
+        let out = Path::parse(&format!("{scheme}://res/data.txt")).unwrap();
+        let job = JobContext::new(out);
+        let committer = Committer::new(algorithm);
+        committer.setup_job(fs, &job, ctx).unwrap();
+        let task = TaskAttemptContext::new(&job, attempt(1, 1));
+        committer.setup_task(fs, &task, ctx).unwrap();
+        committer
+            .write_part(fs, &task, "part-00001", b"the output".to_vec(), ctx)
+            .unwrap();
+        if committer.needs_task_commit(fs, &task, ctx) {
+            committer.commit_task(fs, &task, ctx).unwrap();
+        }
+        committer.commit_job(fs, &job, ctx).unwrap();
+    }
+
+    #[test]
+    fn table1_trace_on_hdfs() {
+        // The paper's Table 1: the file-system operations for a one-task
+        // program. We assert the structural sequence.
+        let fs = Hdfs::new();
+        let mut c = OpCtx::traced(SimInstant::EPOCH);
+        run_single_task(&*fs, "hdfs", CommitAlgorithm::V1, &mut c);
+        let trace = c.take_trace();
+        let joined = trace.join("\n");
+        // mkdirs of temp root and attempt dir (steps 1-2)
+        assert!(joined.contains("mkdirs: hdfs://res/data.txt/_temporary/0"));
+        assert!(joined.contains("attempt_201702221313_0000_m_000001_1"));
+        // task temp write (step 3)
+        assert!(joined.contains("create: hdfs://res/data.txt/_temporary/0/_temporary/attempt_201702221313_0000_m_000001_1/part-00001"));
+        // two renames (steps 5, 7)
+        let renames: Vec<&str> = trace.iter().filter(|l| l.starts_with("rename:")).map(|s| s.as_str()).collect();
+        assert_eq!(renames.len(), 2, "{joined}");
+        assert!(renames[0].contains("task_201702221313_0000_m_000001"));
+        assert!(renames[1].ends_with("data.txt/part-00001"));
+        // _SUCCESS (step 8)
+        assert!(joined.contains("create: hdfs://res/data.txt/_SUCCESS"));
+        // final state
+        let mut c2 = ctx();
+        let out = Path::parse("hdfs://res/data.txt/part-00001").unwrap();
+        assert_eq!(&*fs.open(&out, &mut c2).unwrap(), b"the output");
+    }
+
+    #[test]
+    fn v1_on_swift_costs_copies_v1_on_stocator_costs_none() {
+        // Core paper claim, miniature form.
+        let store_sw = ObjectStore::new(StoreConfig::instant_strong());
+        store_sw.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let swift = HadoopSwift::new(store_sw.clone());
+        let mut c = ctx();
+        run_single_task(&*swift, "swift", CommitAlgorithm::V1, &mut c);
+        let sw = store_sw.counters();
+        assert!(sw.get(OpKind::CopyObject) >= 2, "v1 = two renames: {sw}");
+
+        let store_st = ObjectStore::new(StoreConfig::instant_strong());
+        store_st.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let stoc = Stocator::with_defaults(store_st.clone());
+        let mut c = ctx();
+        run_single_task(&*stoc, "swift2d", CommitAlgorithm::V1, &mut c);
+        let st = store_st.counters();
+        assert_eq!(st.get(OpKind::CopyObject), 0);
+        assert_eq!(st.get(OpKind::DeleteObject), 0);
+        assert!(st.total() < sw.total() / 3, "stocator {st} vs swift {sw}");
+        // Output exists under its attempt-qualified name (10 bytes of part
+        // data plus the `_SUCCESS` manifest and the 0-byte marker):
+        assert!(store_st.debug_live_bytes("res") >= 10);
+        assert!(store_st
+            .debug_names("res", "data.txt/")
+            .iter()
+            .any(|n| n.contains("part-00001_attempt_")));
+    }
+
+    #[test]
+    fn v2_commits_at_task_level() {
+        let store = ObjectStore::new(StoreConfig::instant_strong());
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let swift = HadoopSwift::new(store.clone());
+        let out = Path::parse("swift://res/out").unwrap();
+        let job = JobContext::new(out.clone());
+        let committer = Committer::new(CommitAlgorithm::V2);
+        let mut c = ctx();
+        committer.setup_job(&*swift, &job, &mut c).unwrap();
+        let task = TaskAttemptContext::new(&job, attempt(0, 0));
+        committer.setup_task(&*swift, &task, &mut c).unwrap();
+        committer
+            .write_part(&*swift, &task, "part-00000", b"xy".to_vec(), &mut c)
+            .unwrap();
+        committer.commit_task(&*swift, &task, &mut c).unwrap();
+        // Already at its final location BEFORE job commit:
+        assert!(swift.exists(&out.child("part-00000"), &mut c));
+        committer.commit_job(&*swift, &job, &mut c).unwrap();
+        assert!(swift.exists(&out.child("_SUCCESS"), &mut c));
+        assert!(!swift.exists(&out.child("_temporary"), &mut c));
+    }
+
+    #[test]
+    fn v1_duplicate_attempts_last_commit_wins() {
+        // Two attempts of the same task both commit (rare but possible);
+        // v1's delete-then-rename keeps exactly one.
+        let store = ObjectStore::new(StoreConfig::instant_strong());
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let swift = HadoopSwift::new(store.clone());
+        let job = JobContext::new(Path::parse("swift://res/out").unwrap());
+        let committer = Committer::new(CommitAlgorithm::V1);
+        let mut c = ctx();
+        committer.setup_job(&*swift, &job, &mut c).unwrap();
+        for n in 0..2 {
+            let t = TaskAttemptContext::new(&job, attempt(0, n));
+            committer.setup_task(&*swift, &t, &mut c).unwrap();
+            committer
+                .write_part(&*swift, &t, "part-00000", format!("attempt{n}").into_bytes(), &mut c)
+                .unwrap();
+            committer.commit_task(&*swift, &t, &mut c).unwrap();
+        }
+        committer.commit_job(&*swift, &job, &mut c).unwrap();
+        let data = swift
+            .open(&Path::parse("swift://res/out/part-00000").unwrap(), &mut c)
+            .unwrap();
+        assert_eq!(&*data, b"attempt1");
+        // No stray task-temp leftovers.
+        assert!(!swift.exists(&Path::parse("swift://res/out/_temporary").unwrap(), &mut c));
+    }
+
+    #[test]
+    fn aborted_attempt_leaves_no_output_with_v1_but_direct_leaks() {
+        let store = ObjectStore::new(StoreConfig::instant_strong());
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let swift = HadoopSwift::new(store.clone());
+        let mut c = ctx();
+
+        // V1: abort cleans the attempt dir.
+        let job = JobContext::new(Path::parse("swift://res/safe").unwrap());
+        let committer = Committer::new(CommitAlgorithm::V1);
+        committer.setup_job(&*swift, &job, &mut c).unwrap();
+        let t = TaskAttemptContext::new(&job, attempt(0, 0));
+        committer.setup_task(&*swift, &t, &mut c).unwrap();
+        committer
+            .write_part(&*swift, &t, "part-00000", b"partial".to_vec(), &mut c)
+            .unwrap();
+        committer.abort_task(&*swift, &t, &mut c).unwrap();
+        committer.commit_job(&*swift, &job, &mut c).unwrap();
+        assert!(
+            !swift.exists(&Path::parse("swift://res/safe/part-00000").unwrap(), &mut c),
+            "v1 abort must remove partial output"
+        );
+
+        // Direct: the failed attempt's output is already live. THE hazard.
+        let job2 = JobContext::new(Path::parse("swift://res/unsafe").unwrap());
+        let direct = Committer::new(CommitAlgorithm::Direct);
+        direct.setup_job(&*swift, &job2, &mut c).unwrap();
+        let t2 = TaskAttemptContext::new(&job2, attempt(0, 0));
+        direct.setup_task(&*swift, &t2, &mut c).unwrap();
+        direct
+            .write_part(&*swift, &t2, "part-00000", b"partial".to_vec(), &mut c)
+            .unwrap();
+        direct.abort_task(&*swift, &t2, &mut c).unwrap();
+        assert!(
+            swift.exists(&Path::parse("swift://res/unsafe/part-00000").unwrap(), &mut c),
+            "direct committer cannot undo a failed attempt"
+        );
+    }
+
+    #[test]
+    fn stocator_v2_also_works() {
+        // Stocator intercepts both algorithms identically.
+        let store = ObjectStore::new(StoreConfig::instant_strong());
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let stoc = Stocator::with_defaults(store.clone());
+        let mut c = ctx();
+        run_single_task(&*stoc, "swift2d", CommitAlgorithm::V2, &mut c);
+        assert_eq!(store.counters().get(OpKind::CopyObject), 0);
+        let names = store.debug_names("res", "data.txt/");
+        assert!(names.iter().any(|n| n.contains("part-00001_attempt_")));
+        assert!(names.iter().any(|n| n.ends_with("_SUCCESS")));
+    }
+}

@@ -1,0 +1,117 @@
+//! The HEAD-result cache (paper §3.4, second read-path optimization).
+//!
+//! Spark inputs are immutable by assumption, so repeated HEADs on the same
+//! object must return the same result; Stocator caches them. The cache is
+//! invalidated on any local mutation of the key (PUT/DELETE through this
+//! connector) to stay safe in tests that rewrite objects.
+
+use crate::objectstore::store::HeadResult;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A small bounded cache of HEAD results keyed by object key.
+pub struct HeadCache {
+    map: Mutex<HashMap<String, HeadResult>>,
+    capacity: usize,
+    hits: Mutex<u64>,
+}
+
+impl HeadCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            map: Mutex::new(HashMap::new()),
+            capacity,
+            hits: Mutex::new(0),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<HeadResult> {
+        let found = self.map.lock().unwrap().get(key).cloned();
+        if found.is_some() {
+            *self.hits.lock().unwrap() += 1;
+        }
+        found
+    }
+
+    pub fn put(&self, key: &str, head: HeadResult) {
+        let mut map = self.map.lock().unwrap();
+        // Cheap bound: drop everything when full. The working set of a
+        // Spark job's metadata probes is tiny compared to the capacity.
+        if map.len() >= self.capacity {
+            map.clear();
+        }
+        map.insert(key.to_string(), head);
+    }
+
+    /// Invalidate a key after a local mutation.
+    pub fn invalidate(&self, key: &str) {
+        self.map.lock().unwrap().remove(key);
+    }
+
+    /// Invalidate every cached key with the given prefix (dataset deletes).
+    pub fn invalidate_prefix(&self, prefix: &str) {
+        self.map.lock().unwrap().retain(|k, _| !k.starts_with(prefix));
+    }
+
+    pub fn hits(&self) -> u64 {
+        *self.hits.lock().unwrap()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::Metadata;
+    use crate::simclock::SimInstant;
+
+    fn head(size: u64) -> HeadResult {
+        HeadResult {
+            size,
+            etag: size * 7,
+            metadata: Metadata::new(),
+            created_at: SimInstant::EPOCH,
+        }
+    }
+
+    #[test]
+    fn hit_and_miss() {
+        let c = HeadCache::new(8);
+        assert!(c.get("a").is_none());
+        c.put("a", head(3));
+        assert_eq!(c.get("a").unwrap().size, 3);
+        assert_eq!(c.hits(), 1);
+    }
+
+    #[test]
+    fn invalidation() {
+        let c = HeadCache::new(8);
+        c.put("d/part-0", head(1));
+        c.put("d/part-1", head(2));
+        c.put("e/part-0", head(3));
+        c.invalidate("d/part-0");
+        assert!(c.get("d/part-0").is_none());
+        c.invalidate_prefix("d/");
+        assert!(c.get("d/part-1").is_none());
+        assert!(c.get("e/part-0").is_some());
+    }
+
+    #[test]
+    fn capacity_bound() {
+        let c = HeadCache::new(4);
+        for i in 0..4 {
+            c.put(&format!("k{i}"), head(i));
+        }
+        assert_eq!(c.len(), 4);
+        c.put("k4", head(4)); // triggers clear-then-insert
+        assert_eq!(c.len(), 1);
+        assert!(c.get("k4").is_some());
+    }
+}

@@ -1,0 +1,40 @@
+//! The three storage connectors under study (paper Fig. 1, §3, §4.2):
+//!
+//! * [`swift::HadoopSwift`] — the stock Hadoop-Swift connector: directory
+//!   marker objects, HEAD-probe chatter, rename = COPY + DELETE, output
+//!   buffered to local disk before upload.
+//! * [`s3a::S3a`] — the Hadoop S3a connector (2.7.x behaviour): the
+//!   notorious triple-probe `getFileStatus`, fake-directory maintenance
+//!   after every mutation, optional `S3AFastOutputStream` multipart upload
+//!   ("fast upload").
+//! * [`stocator::Stocator`] — the paper's contribution: intercepts HMRCC's
+//!   temporary-path pattern and writes parts directly to their final,
+//!   attempt-qualified names; no COPY, no DELETE, no commit-time listings;
+//!   `_SUCCESS` optionally carries a manifest of committed attempts.
+//!
+//! All three implement [`crate::fs::FileSystem`] over the same simulated
+//! [`crate::objectstore::ObjectStore`], so the REST-operation counts the
+//! harness reports are produced by *executing the actual protocols*.
+
+pub mod naming;
+pub mod head_cache;
+pub mod swift;
+pub mod s3a;
+pub mod stocator;
+
+pub use s3a::{S3a, S3aConfig};
+pub use stocator::{ReadStrategy, Stocator, StocatorConfig};
+pub use swift::HadoopSwift;
+
+use crate::fs::Path;
+
+/// Map a Hadoop path onto (container, object key).
+pub(crate) fn container_key(path: &Path) -> (&str, &str) {
+    (&path.container, &path.key)
+}
+
+/// The key of a directory *marker* object for `key` (trailing slash, the
+/// S3a "fake directory" convention; we use it for Swift too).
+pub(crate) fn marker_key(key: &str) -> String {
+    format!("{key}/")
+}

@@ -1,0 +1,317 @@
+//! The attempt-name codec (paper §3.1).
+//!
+//! HMRCC asks connectors to write task output at temporary paths of the
+//! form
+//!
+//! ```text
+//! <ds>/_temporary/<app>/_temporary/attempt_<jobts>_<jobid>_m_<task>_<n>/<basename>
+//! ```
+//!
+//! and, for FileOutputCommitter v1, to rename committed task output to a
+//! job-temporary directory `<ds>/_temporary/<app>/task_<jobts>_<jobid>_m_<task>`.
+//!
+//! Stocator recognizes these patterns and maps the task temporary file
+//! directly to its **final, attempt-qualified name**:
+//!
+//! ```text
+//! <ds>/<basename>_attempt_<jobts>_<jobid>_m_<task>_<n>
+//! ```
+//!
+//! so that every execution attempt of every task writes a *distinct* object
+//! and no rename is ever needed. This module implements the pattern
+//! classification and the final-name codec, both directions.
+
+use std::fmt;
+
+/// A Spark/Hadoop task *attempt* identity:
+/// `attempt_<job-ts>_<job-id>_m_<task-id>_<attempt-number>`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AttemptId {
+    pub job_ts: String,
+    pub job_id: String,
+    pub task_id: u32,
+    pub attempt: u32,
+}
+
+impl AttemptId {
+    pub fn new(job_ts: &str, job_id: &str, task_id: u32, attempt: u32) -> Self {
+        Self {
+            job_ts: job_ts.to_string(),
+            job_id: job_id.to_string(),
+            task_id,
+            attempt,
+        }
+    }
+
+    /// The `task_...` form used for job-temporary directories (no attempt
+    /// number).
+    pub fn task_string(&self) -> String {
+        format!("task_{}_{}_m_{:06}", self.job_ts, self.job_id, self.task_id)
+    }
+
+    /// Parse `attempt_<ts>_<id>_m_<task>_<n>`.
+    pub fn parse(s: &str) -> Option<AttemptId> {
+        let rest = s.strip_prefix("attempt_")?;
+        let parts: Vec<&str> = rest.split('_').collect();
+        // <ts>_<jobid>_m_<task>_<n>
+        if parts.len() != 5 || parts[2] != "m" {
+            return None;
+        }
+        Some(AttemptId {
+            job_ts: parts[0].to_string(),
+            job_id: parts[1].to_string(),
+            task_id: parts[3].parse().ok()?,
+            attempt: parts[4].parse().ok()?,
+        })
+    }
+}
+
+impl fmt::Display for AttemptId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "attempt_{}_{}_m_{:06}_{}",
+            self.job_ts, self.job_id, self.task_id, self.attempt
+        )
+    }
+}
+
+/// Classification of an object key against the HMRCC temporary-path
+/// grammar. `dataset` is always the key of the output dataset root.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TempPath {
+    /// `<ds>/_temporary` or `<ds>/_temporary/<app>` (and the nested bare
+    /// `<ds>/_temporary/<app>/_temporary`).
+    TemporaryRoot { dataset: String },
+    /// `<ds>/_temporary/<app>/_temporary/attempt_...` — a task attempt's
+    /// working directory.
+    AttemptDir { dataset: String, attempt: AttemptId },
+    /// `<ds>/_temporary/<app>/_temporary/attempt_.../<basename>` — a task
+    /// temporary file.
+    TaskTempFile {
+        dataset: String,
+        attempt: AttemptId,
+        basename: String,
+    },
+    /// `<ds>/_temporary/<app>/task_...` — a job-temporary (task-committed)
+    /// directory, v1 only.
+    JobTempDir { dataset: String, task: String },
+    /// `<ds>/_temporary/<app>/task_.../<basename>` — a job-temporary file.
+    JobTempFile {
+        dataset: String,
+        task: String,
+        basename: String,
+    },
+}
+
+impl TempPath {
+    pub fn dataset(&self) -> &str {
+        match self {
+            TempPath::TemporaryRoot { dataset }
+            | TempPath::AttemptDir { dataset, .. }
+            | TempPath::TaskTempFile { dataset, .. }
+            | TempPath::JobTempDir { dataset, .. }
+            | TempPath::JobTempFile { dataset, .. } => dataset,
+        }
+    }
+}
+
+/// Classify an object key against the temp grammar. Returns `None` for
+/// ordinary (non-temporary) keys.
+pub fn classify(key: &str) -> Option<TempPath> {
+    let idx = key.find("/_temporary")?;
+    let dataset = key[..idx].to_string();
+    let rest = &key[idx + "/_temporary".len()..]; // "" | "/<app>..." etc.
+    if rest.is_empty() {
+        return Some(TempPath::TemporaryRoot { dataset });
+    }
+    let rest = rest.strip_prefix('/')?;
+    let mut segs = rest.split('/');
+    let _app = segs.next()?; // app attempt id, usually "0"
+    let Some(second) = segs.next() else {
+        // "<ds>/_temporary/<app>"
+        return Some(TempPath::TemporaryRoot { dataset });
+    };
+    if second == "_temporary" {
+        let Some(attempt_seg) = segs.next() else {
+            // "<ds>/_temporary/<app>/_temporary"
+            return Some(TempPath::TemporaryRoot { dataset });
+        };
+        let attempt = AttemptId::parse(attempt_seg)?;
+        match segs.next() {
+            None => Some(TempPath::AttemptDir { dataset, attempt }),
+            Some(basename) => {
+                // Deeper nesting is not part of the grammar; join remainder.
+                let mut base = basename.to_string();
+                for s in segs {
+                    base.push('/');
+                    base.push_str(s);
+                }
+                Some(TempPath::TaskTempFile {
+                    dataset,
+                    attempt,
+                    basename: base,
+                })
+            }
+        }
+    } else if second.starts_with("task_") {
+        let task = second.to_string();
+        match segs.next() {
+            None => Some(TempPath::JobTempDir { dataset, task }),
+            Some(basename) => {
+                let mut base = basename.to_string();
+                for s in segs {
+                    base.push('/');
+                    base.push_str(s);
+                }
+                Some(TempPath::JobTempFile {
+                    dataset,
+                    task,
+                    basename: base,
+                })
+            }
+        }
+    } else {
+        // Something odd under _temporary; treat as temp root content.
+        Some(TempPath::TemporaryRoot { dataset })
+    }
+}
+
+/// The final, attempt-qualified object key Stocator writes for a task
+/// temporary file (paper §3.1).
+pub fn stocator_final_key(dataset: &str, basename: &str, attempt: &AttemptId) -> String {
+    format!("{dataset}/{basename}_{attempt}")
+}
+
+/// Parse a Stocator final key back into (basename, attempt). `key` must be
+/// directly under `dataset`. Returns `None` for non-part objects such as
+/// `_SUCCESS` or the dataset marker itself.
+pub fn parse_stocator_key(dataset: &str, key: &str) -> Option<(String, AttemptId)> {
+    let rel = key.strip_prefix(dataset)?.strip_prefix('/')?;
+    if rel.contains('/') {
+        return None; // nested object, not a part
+    }
+    let at = rel.find("_attempt_")?;
+    let basename = rel[..at].to_string();
+    let attempt = AttemptId::parse(&rel[at + 1..])?;
+    Some((basename, attempt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attempt_id_roundtrip() {
+        let a = AttemptId::new("201702221313", "0000", 1, 2);
+        let s = a.to_string();
+        assert_eq!(s, "attempt_201702221313_0000_m_000001_2");
+        assert_eq!(AttemptId::parse(&s).unwrap(), a);
+        assert_eq!(a.task_string(), "task_201702221313_0000_m_000001");
+    }
+
+    #[test]
+    fn attempt_id_rejects_malformed() {
+        for bad in [
+            "attempt_x",
+            "attempt_1_2_r_3_4",
+            "attempt_1_2_m_x_4",
+            "task_1_2_m_3",
+            "attempt_1_2_m_3_4_5",
+        ] {
+            assert!(AttemptId::parse(bad).is_none(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn classify_the_paper_examples() {
+        // Table 1 / §3.1 pattern.
+        let key = "res0/data.txt/_temporary/0/_temporary/attempt_201702221313_0000_m_000001_1/part-00001";
+        // NOTE: dataset key here is "res0/data.txt" (container handled
+        // separately by the connectors).
+        match classify(key).unwrap() {
+            TempPath::TaskTempFile {
+                dataset,
+                attempt,
+                basename,
+            } => {
+                assert_eq!(dataset, "res0/data.txt");
+                assert_eq!(attempt.task_id, 1);
+                assert_eq!(attempt.attempt, 1);
+                assert_eq!(basename, "part-00001");
+            }
+            other => panic!("misclassified: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_attempt_dir_and_roots() {
+        assert!(matches!(
+            classify("d/_temporary").unwrap(),
+            TempPath::TemporaryRoot { .. }
+        ));
+        assert!(matches!(
+            classify("d/_temporary/0").unwrap(),
+            TempPath::TemporaryRoot { .. }
+        ));
+        assert!(matches!(
+            classify("d/_temporary/0/_temporary").unwrap(),
+            TempPath::TemporaryRoot { .. }
+        ));
+        match classify("d/_temporary/0/_temporary/attempt_1_0000_m_000002_0").unwrap() {
+            TempPath::AttemptDir { attempt, .. } => {
+                assert_eq!(attempt.task_id, 2);
+                assert_eq!(attempt.attempt, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_job_temp() {
+        match classify("d/_temporary/0/task_1_0000_m_000002").unwrap() {
+            TempPath::JobTempDir { task, .. } => assert_eq!(task, "task_1_0000_m_000002"),
+            other => panic!("{other:?}"),
+        }
+        match classify("d/_temporary/0/task_1_0000_m_000002/part-00002").unwrap() {
+            TempPath::JobTempFile { basename, .. } => assert_eq!(basename, "part-00002"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ordinary_keys_are_not_temp() {
+        assert!(classify("data.txt/part-0").is_none());
+        assert!(classify("data.txt/_SUCCESS").is_none());
+        assert!(classify("x/y/z").is_none());
+    }
+
+    #[test]
+    fn final_key_roundtrip() {
+        let a = AttemptId::new("201512062056", "0000", 2, 1);
+        let k = stocator_final_key("data.txt", "part-00002", &a);
+        assert_eq!(
+            k,
+            "data.txt/part-00002_attempt_201512062056_0000_m_000002_1"
+        );
+        let (base, parsed) = parse_stocator_key("data.txt", &k).unwrap();
+        assert_eq!(base, "part-00002");
+        assert_eq!(parsed, a);
+    }
+
+    #[test]
+    fn parse_stocator_key_rejects_non_parts() {
+        assert!(parse_stocator_key("d", "d/_SUCCESS").is_none());
+        assert!(parse_stocator_key("d", "d/sub/part-0_attempt_1_0_m_000000_0").is_none());
+        assert!(parse_stocator_key("d", "other/part-0_attempt_1_0_m_000000_0").is_none());
+        assert!(parse_stocator_key("d", "d/part-0").is_none());
+    }
+
+    #[test]
+    fn final_names_of_distinct_attempts_differ() {
+        // The core safety property of the naming scheme (speculation).
+        let k1 = stocator_final_key("d", "part-0", &AttemptId::new("1", "0000", 0, 0));
+        let k2 = stocator_final_key("d", "part-0", &AttemptId::new("1", "0000", 0, 1));
+        assert_ne!(k1, k2);
+    }
+}

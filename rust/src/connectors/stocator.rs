@@ -1,0 +1,995 @@
+//! **Stocator** — the paper's contribution (§3).
+//!
+//! Strategy: never rename. When HMRCC asks to write the task temporary
+//! file `<ds>/_temporary/0/_temporary/attempt_X/part-N`, Stocator
+//! recognizes the pattern and PUTs the object **directly at its final,
+//! attempt-qualified name** `<ds>/part-N_attempt_X` using chunked transfer
+//! encoding (single streaming PUT, no local-disk buffer). Task/job commit
+//! renames become metadata-free no-ops; aborting an attempt deletes the
+//! attempt's objects by *constructed* name (no listing). Which attempt's
+//! objects constitute the dataset is decided at **read** time:
+//!
+//! * [`ReadStrategy::List`] (the paper's implemented option): list the
+//!   dataset prefix once and, per part, pick the attempt with the most
+//!   data — correct under fail-stop since every successful attempt writes
+//!   identical output;
+//! * [`ReadStrategy::Manifest`] (the paper's second option): the
+//!   `_SUCCESS` object carries a manifest of committed attempts, so part
+//!   names are *reconstructed* rather than listed — immune to eventual
+//!   consistency.
+//!
+//! Read-path optimizations (§3.4): GET carries metadata, so `open` never
+//! issues a prior HEAD; HEAD results are cached under the
+//! immutable-input assumption.
+
+use super::head_cache::HeadCache;
+use super::naming::{self, AttemptId, TempPath};
+use super::{container_key, marker_key};
+use crate::fs::status::FileStatus;
+use crate::fs::{FileSystem, FsError, OpCtx, Path};
+use crate::objectstore::store::HeadResult;
+use crate::objectstore::{Metadata, ObjectStore, StoreError};
+use crate::simclock::SimInstant;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, Mutex};
+
+/// Object-metadata key marking datasets written by Stocator.
+pub const ORIGIN_KEY: &str = "X-Stocator-Origin";
+/// Value written for the marker (connector name + version).
+pub const ORIGIN_VALUE: &str = "stocator/1.0";
+/// First line of a manifest-bearing `_SUCCESS` object.
+pub const MANIFEST_HEADER: &str = "stocator-manifest-v1";
+
+/// How a dataset's constituent parts are determined at read time (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadStrategy {
+    /// One GET Container; duplicate attempts deduplicated by size
+    /// (fail-stop assumption). The paper's shipped option.
+    List,
+    /// Reconstruct part names from the `_SUCCESS` manifest; zero listings.
+    Manifest,
+}
+
+#[derive(Debug, Clone)]
+pub struct StocatorConfig {
+    pub read_strategy: ReadStrategy,
+    /// HEAD-cache capacity (entries).
+    pub cache_capacity: usize,
+}
+
+impl Default for StocatorConfig {
+    fn default() -> Self {
+        Self {
+            read_strategy: ReadStrategy::List,
+            cache_capacity: 2048,
+        }
+    }
+}
+
+/// One part object written by some attempt.
+#[derive(Debug, Clone)]
+struct PartRecord {
+    basename: String,
+    key: String,
+    size: u64,
+}
+
+/// Per-dataset write-side state. In the real connector this state lives in
+/// the per-JVM FileSystem instance and the driver learns committed attempts
+/// from Spark's task-completion events; our simulator shares one connector
+/// instance, which is equivalent for protocol purposes.
+#[derive(Debug, Default)]
+struct DatasetState {
+    /// attempt string -> parts written by that attempt.
+    written: HashMap<String, Vec<PartRecord>>,
+    /// attempt strings whose task commit succeeded.
+    committed: BTreeSet<String>,
+    /// Whether the zero-byte dataset marker object has been PUT (§3.1).
+    marker_written: bool,
+}
+
+pub struct Stocator {
+    store: Arc<ObjectStore>,
+    cfg: StocatorConfig,
+    cache: HeadCache,
+    state: Mutex<HashMap<String, DatasetState>>,
+    scheme: String,
+}
+
+impl Stocator {
+    pub fn new(store: Arc<ObjectStore>, cfg: StocatorConfig) -> Arc<Self> {
+        let cache = HeadCache::new(cfg.cache_capacity);
+        Arc::new(Self {
+            store,
+            cfg,
+            cache,
+            state: Mutex::new(HashMap::new()),
+            scheme: "swift2d".to_string(),
+        })
+    }
+
+    pub fn with_defaults(store: Arc<ObjectStore>) -> Arc<Self> {
+        Self::new(store, StocatorConfig::default())
+    }
+
+    /// HEAD-cache hit count (for the §3.4-optimization tests/benches).
+    pub fn cache_hits(&self) -> u64 {
+        self.cache.hits()
+    }
+
+    fn not_found(e: StoreError, path: &Path) -> FsError {
+        match e {
+            StoreError::NoSuchKey(_) | StoreError::NoSuchContainer(_) => {
+                FsError::NotFound(path.to_string())
+            }
+            other => FsError::Io(other.to_string()),
+        }
+    }
+
+    /// HEAD through the cache.
+    fn head_cached(
+        &self,
+        cont: &str,
+        key: &str,
+        ctx: &mut OpCtx,
+    ) -> Result<HeadResult, FsError> {
+        if let Some(hit) = self.cache.get(key) {
+            return Ok(hit);
+        }
+        let (r, d) = self.store.head_object(cont, key);
+        ctx.add(d);
+        ctx.record("stocator", || format!("HEAD {cont}/{key}"));
+        match r {
+            Ok(h) => {
+                self.cache.put(key, h.clone());
+                Ok(h)
+            }
+            Err(e) => Err(Self::not_found(
+                e,
+                &Path::new(&self.scheme, cont, key),
+            )),
+        }
+    }
+
+    fn is_dataset_marker(head: &HeadResult) -> bool {
+        head.size == 0 && head.metadata.get(ORIGIN_KEY).is_some()
+    }
+
+    /// Build the `_SUCCESS` manifest body for a dataset from committed
+    /// attempts (§3.2, second option).
+    fn manifest_body(&self, dataset: &str) -> Vec<u8> {
+        let state = self.state.lock().unwrap();
+        let mut lines = vec![MANIFEST_HEADER.to_string()];
+        if let Some(ds) = state.get(dataset) {
+            for attempt in &ds.committed {
+                if let Some(parts) = ds.written.get(attempt) {
+                    for p in parts {
+                        lines.push(format!("{}\t{}\t{}", p.basename, attempt, p.size));
+                    }
+                }
+            }
+        }
+        let mut body = lines.join("\n");
+        body.push('\n');
+        body.into_bytes()
+    }
+
+    /// Parse a manifest body into (basename, attempt-string, size) records.
+    pub fn parse_manifest(body: &[u8]) -> Option<Vec<(String, String, u64)>> {
+        let text = std::str::from_utf8(body).ok()?;
+        let mut lines = text.lines();
+        if lines.next()? != MANIFEST_HEADER {
+            return None;
+        }
+        let mut out = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let mut cols = line.split('\t');
+            let basename = cols.next()?.to_string();
+            let attempt = cols.next()?.to_string();
+            let size: u64 = cols.next()?.parse().ok()?;
+            out.push((basename, attempt, size));
+        }
+        Some(out)
+    }
+
+    /// The §3.2 read path: given a dataset root, determine the constituent
+    /// part objects.
+    fn read_dataset(
+        &self,
+        path: &Path,
+        ctx: &mut OpCtx,
+    ) -> Result<Vec<FileStatus>, FsError> {
+        let (cont, dskey) = container_key(path);
+        let success_key = format!("{dskey}/_SUCCESS");
+        match self.cfg.read_strategy {
+            ReadStrategy::Manifest => {
+                // GET _SUCCESS (carries the manifest); reconstruct names.
+                let (r, d) = self.store.get_object(cont, &success_key);
+                ctx.add(d);
+                ctx.record("stocator", || format!("GET {cont}/{success_key} (manifest)"));
+                match r {
+                    Ok(g) => {
+                        if let Some(records) = Self::parse_manifest(&g.data) {
+                            let mut out = Vec::new();
+                            for (basename, attempt, size) in records {
+                                let att = AttemptId::parse(&attempt).ok_or_else(|| {
+                                    FsError::Io(format!("bad manifest attempt '{attempt}'"))
+                                })?;
+                                let key = naming::stocator_final_key(dskey, &basename, &att);
+                                out.push(FileStatus::file(
+                                    Path::new(&path.scheme, cont, &key),
+                                    size,
+                                    SimInstant::EPOCH,
+                                ));
+                            }
+                            out.push(FileStatus::file(
+                                Path::new(&path.scheme, cont, &success_key),
+                                g.head.size,
+                                SimInstant::EPOCH,
+                            ));
+                            return Ok(out);
+                        }
+                        // _SUCCESS exists but carries no manifest (written
+                        // by someone else): fall back to listing.
+                        self.list_dataset(path, ctx)
+                    }
+                    Err(_) => self.list_dataset(path, ctx),
+                }
+            }
+            ReadStrategy::List => {
+                // HEAD _SUCCESS to confirm complete output, then one
+                // listing.
+                let _ = self.head_cached(cont, &success_key, ctx);
+                self.list_dataset(path, ctx)
+            }
+        }
+    }
+
+    /// One GET Container over the dataset prefix with attempt
+    /// deduplication: for each basename keep the attempt with the most
+    /// data (§3.2, fail-stop argument).
+    fn list_dataset(&self, path: &Path, ctx: &mut OpCtx) -> Result<Vec<FileStatus>, FsError> {
+        let (cont, dskey) = container_key(path);
+        let prefix = if dskey.is_empty() {
+            String::new()
+        } else {
+            marker_key(dskey)
+        };
+        let (r, d) = self.store.list(cont, &prefix, Some('/'), ctx.now());
+        ctx.add(d);
+        ctx.record("stocator", || format!("GET container ?prefix={prefix}&delimiter=/"));
+        let l = r.map_err(|e| Self::not_found(e, path))?;
+        // Group attempt-qualified parts by basename; pass through plain
+        // objects (inputs not written by Stocator) unchanged.
+        let mut winners: BTreeMap<String, (String, u64)> = BTreeMap::new();
+        let mut plain: Vec<FileStatus> = Vec::new();
+        for o in l.objects {
+            if o.name == prefix {
+                continue;
+            }
+            match naming::parse_stocator_key(dskey, &o.name) {
+                Some((basename, _attempt)) => {
+                    let e = winners.entry(basename).or_insert((o.name.clone(), o.size));
+                    // Most data wins; ties broken toward the
+                    // lexicographically earlier key for determinism.
+                    if o.size > e.1 || (o.size == e.1 && o.name < e.0) {
+                        *e = (o.name.clone(), o.size);
+                    }
+                }
+                None => plain.push(FileStatus::file(
+                    Path::new(&path.scheme, cont, &o.name),
+                    o.size,
+                    SimInstant::EPOCH,
+                )),
+            }
+        }
+        let mut out: Vec<FileStatus> = winners
+            .into_values()
+            .map(|(key, size)| {
+                FileStatus::file(Path::new(&path.scheme, cont, &key), size, SimInstant::EPOCH)
+            })
+            .collect();
+        out.extend(plain);
+        for cp in l.common_prefixes {
+            out.push(FileStatus::dir(
+                Path::new(&path.scheme, cont, cp.trim_end_matches('/')),
+                SimInstant::EPOCH,
+            ));
+        }
+        Ok(out)
+    }
+}
+
+impl FileSystem for Stocator {
+    fn scheme(&self) -> &str {
+        &self.scheme
+    }
+
+    fn mkdirs(&self, path: &Path, ctx: &mut OpCtx) -> Result<(), FsError> {
+        let (cont, key) = container_key(path);
+        match naming::classify(key) {
+            Some(tp) => {
+                // Temporary directories are virtual, but the *dataset
+                // root* marker is real: the first mkdirs under a dataset
+                // writes the zero-byte object with the dataset's name and
+                // the Stocator origin metadata (§3.1).
+                let dataset = tp.dataset().to_string();
+                let need_marker = {
+                    let mut state = self.state.lock().unwrap();
+                    let ds = state.entry(dataset.clone()).or_default();
+                    if ds.marker_written {
+                        false
+                    } else {
+                        ds.marker_written = true;
+                        true
+                    }
+                };
+                if need_marker && !dataset.is_empty() {
+                    let mut md = Metadata::new();
+                    md.insert(ORIGIN_KEY.into(), ORIGIN_VALUE.into());
+                    let (r, d) =
+                        self.store.put_object(cont, &dataset, Vec::new(), md, ctx.now());
+                    ctx.add(d);
+                    ctx.record("stocator", || {
+                        format!("PUT {cont}/{dataset} (dataset marker)")
+                    });
+                    self.cache.invalidate(&dataset);
+                    r.map_err(|e| Self::not_found(e, path))?;
+                }
+                ctx.record("stocator", || {
+                    format!("(intercept) mkdirs {key} -> no-op")
+                });
+                Ok(())
+            }
+            None => {
+                // Dataset root: write the zero-byte marker object carrying
+                // the Stocator origin metadata (§3.1).
+                let mut md = Metadata::new();
+                md.insert(ORIGIN_KEY.into(), ORIGIN_VALUE.into());
+                let (r, d) = self.store.put_object(cont, key, Vec::new(), md, ctx.now());
+                ctx.add(d);
+                ctx.record("stocator", || format!("PUT {cont}/{key} (dataset marker)"));
+                self.cache.invalidate(key);
+                let mut state = self.state.lock().unwrap();
+                state.entry(key.to_string()).or_default().marker_written = true;
+                drop(state);
+                r.map_err(|e| Self::not_found(e, path))
+            }
+        }
+    }
+
+    fn create(
+        &self,
+        path: &Path,
+        data: Vec<u8>,
+        _overwrite: bool,
+        ctx: &mut OpCtx,
+    ) -> Result<(), FsError> {
+        let (cont, key) = container_key(path);
+        match naming::classify(key) {
+            Some(TempPath::TaskTempFile {
+                dataset,
+                attempt,
+                basename,
+            }) => {
+                // THE interception (§3.1): write directly to the final,
+                // attempt-qualified name. Chunked transfer encoding: a
+                // single streaming PUT, no local buffering.
+                let final_key = naming::stocator_final_key(&dataset, &basename, &attempt);
+                let size = data.len() as u64;
+                let (r, d) =
+                    self.store
+                        .put_object(cont, &final_key, data, Metadata::new(), ctx.now());
+                ctx.add(d);
+                ctx.record("stocator", || {
+                    format!("(intercept) PUT {cont}/{final_key}")
+                });
+                r.map_err(|e| Self::not_found(e, path))?;
+                self.cache.invalidate(&final_key);
+                let mut state = self.state.lock().unwrap();
+                state
+                    .entry(dataset)
+                    .or_default()
+                    .written
+                    .entry(attempt.to_string())
+                    .or_default()
+                    .push(PartRecord {
+                        basename,
+                        key: final_key,
+                        size,
+                    });
+                Ok(())
+            }
+            Some(other) => Err(FsError::Io(format!(
+                "create on non-file temporary path {other:?}"
+            ))),
+            None => {
+                // Plain object. `_SUCCESS` gets the manifest body (§3.2).
+                let body = if path.name() == "_SUCCESS" {
+                    let dataset = path.parent().map(|p| p.key).unwrap_or_default();
+                    self.manifest_body(&dataset)
+                } else {
+                    data
+                };
+                let (r, d) = self
+                    .store
+                    .put_object(cont, key, body, Metadata::new(), ctx.now());
+                ctx.add(d);
+                ctx.record("stocator", || format!("PUT {cont}/{key}"));
+                self.cache.invalidate(key);
+                r.map_err(|e| Self::not_found(e, path))
+            }
+        }
+    }
+
+    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
+        // §3.4 optimization 1: GET directly — no preceding HEAD; the GET
+        // response carries the metadata, which warms the cache.
+        let (cont, key) = container_key(path);
+        let (r, d) = self.store.get_object(cont, key);
+        ctx.add(d);
+        ctx.record("stocator", || format!("GET {cont}/{key}"));
+        match r {
+            Ok(g) => {
+                self.cache.put(key, g.head.clone());
+                Ok(g.data)
+            }
+            Err(e) => Err(Self::not_found(e, path)),
+        }
+    }
+
+    fn get_file_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {
+        let (cont, key) = container_key(path);
+        if key.is_empty() {
+            let (r, d) = self.store.head_container(cont);
+            ctx.add(d);
+            ctx.record("stocator", || format!("HEAD container {cont}"));
+            return r
+                .map(|_| FileStatus::dir(path.clone(), SimInstant::EPOCH))
+                .map_err(|e| Self::not_found(e, path));
+        }
+        if let Some(tp) = naming::classify(key) {
+            // Temporary paths are virtual. Attempt dirs "exist" iff the
+            // attempt wrote something (so needsTaskCommit is meaningful);
+            // roots always exist.
+            let exists = match &tp {
+                TempPath::AttemptDir { dataset, attempt } => self
+                    .state
+                    .lock()
+                    .unwrap()
+                    .get(dataset)
+                    .map(|d| d.written.contains_key(&attempt.to_string()))
+                    .unwrap_or(false),
+                _ => true,
+            };
+            ctx.record("stocator", || {
+                format!("(intercept) getFileStatus {key} -> {exists}")
+            });
+            return if exists {
+                Ok(FileStatus::dir(path.clone(), SimInstant::EPOCH))
+            } else {
+                Err(FsError::NotFound(path.to_string()))
+            };
+        }
+        match self.head_cached(cont, key, ctx) {
+            Ok(h) if Self::is_dataset_marker(&h) => {
+                Ok(FileStatus::dir(path.clone(), SimInstant::EPOCH))
+            }
+            Ok(h) => Ok(FileStatus::file(path.clone(), h.size, h.created_at)),
+            Err(FsError::NotFound(_)) => {
+                // Not an object: maybe an implicit directory (dataset
+                // written by another tool). One listing probe.
+                let mk = marker_key(key);
+                let (r, d) = self.store.list(cont, &mk, None, ctx.now());
+                ctx.add(d);
+                ctx.record("stocator", || format!("GET container ?prefix={mk}"));
+                match r {
+                    Ok(l) if !l.is_empty() => {
+                        Ok(FileStatus::dir(path.clone(), SimInstant::EPOCH))
+                    }
+                    _ => Err(FsError::NotFound(path.to_string())),
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn list_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<Vec<FileStatus>, FsError> {
+        let (_cont, key) = container_key(path);
+        if let Some(tp) = naming::classify(key) {
+            // Commit-time listings are intercepted — answered from the
+            // connector's write-tracking state with ZERO REST ops (§3.1:
+            // no eventual-consistency hazard on the commit path). An
+            // attempt directory lists its written parts *virtually*, so
+            // FileOutputCommitter v2's merge sees files to "rename" (each
+            // rename is itself an intercepted no-op that marks the
+            // attempt committed).
+            if let TempPath::AttemptDir { dataset, attempt } = &tp {
+                let state = self.state.lock().unwrap();
+                let parts = state
+                    .get(dataset)
+                    .and_then(|d| d.written.get(&attempt.to_string()))
+                    .cloned()
+                    .unwrap_or_default();
+                ctx.record("stocator", || {
+                    format!("(intercept) list {key} -> {} virtual parts", parts.len())
+                });
+                return Ok(parts
+                    .iter()
+                    .map(|p| {
+                        FileStatus::file(
+                            path.child(&p.basename),
+                            p.size,
+                            SimInstant::EPOCH,
+                        )
+                    })
+                    .collect());
+            }
+            ctx.record("stocator", || format!("(intercept) list {key} -> []"));
+            return Ok(Vec::new());
+        }
+        self.read_dataset(path, ctx)
+    }
+
+    fn rename(&self, src: &Path, dst: &Path, ctx: &mut OpCtx) -> Result<bool, FsError> {
+        let (cont, skey) = container_key(src);
+        match naming::classify(skey) {
+            Some(TempPath::AttemptDir { dataset, attempt }) => {
+                // Task commit (v1 renames the attempt dir to the job-temp
+                // dir; v2's merge renames land on TaskTempFile below).
+                // Mark the attempt committed. Zero REST ops.
+                let mut state = self.state.lock().unwrap();
+                state
+                    .entry(dataset)
+                    .or_default()
+                    .committed
+                    .insert(attempt.to_string());
+                ctx.record("stocator", || {
+                    format!("(intercept) commit rename {skey} -> no-op")
+                });
+                Ok(true)
+            }
+            Some(TempPath::TaskTempFile {
+                dataset, attempt, ..
+            }) => {
+                let mut state = self.state.lock().unwrap();
+                state
+                    .entry(dataset)
+                    .or_default()
+                    .committed
+                    .insert(attempt.to_string());
+                ctx.record("stocator", || {
+                    format!("(intercept) commit rename {skey} -> no-op")
+                });
+                Ok(true)
+            }
+            Some(_) => {
+                // Job-temp renames (v1 job commit) and temp-root moves:
+                // everything is already at its final name.
+                ctx.record("stocator", || {
+                    format!("(intercept) rename {skey} -> no-op")
+                });
+                Ok(true)
+            }
+            None => {
+                // Generic rename of a plain object: COPY + DELETE
+                // fallback (rare; not on the commit path).
+                let dkey = dst.key.clone();
+                let (r, d) = self.store.copy_object(cont, skey, cont, &dkey, ctx.now());
+                ctx.add(d);
+                ctx.record("stocator", || format!("COPY {skey} -> {dkey}"));
+                match r {
+                    Ok(()) => {
+                        let (_, d) = self.store.delete_object(cont, skey, ctx.now());
+                        ctx.add(d);
+                        ctx.record("stocator", || format!("DELETE {skey}"));
+                        self.cache.invalidate(skey);
+                        self.cache.invalidate(&dkey);
+                        Ok(true)
+                    }
+                    Err(StoreError::NoSuchKey(_)) => Ok(false),
+                    Err(e) => Err(Self::not_found(e, src)),
+                }
+            }
+        }
+    }
+
+    fn delete(&self, path: &Path, recursive: bool, ctx: &mut OpCtx) -> Result<bool, FsError> {
+        let (cont, key) = container_key(path);
+        match naming::classify(key) {
+            Some(TempPath::AttemptDir { dataset, attempt }) => {
+                // Task abort (paper Table 3, lines 6-7): delete the
+                // attempt's objects by *constructed* name — no listing.
+                let records = {
+                    let mut state = self.state.lock().unwrap();
+                    state
+                        .entry(dataset.clone())
+                        .or_default()
+                        .written
+                        .remove(&attempt.to_string())
+                        .unwrap_or_default()
+                };
+                for rec in &records {
+                    let (_, d) = self.store.delete_object(cont, &rec.key, ctx.now());
+                    ctx.add(d);
+                    ctx.record("stocator", || {
+                        format!("(intercept) DELETE {cont}/{}", rec.key)
+                    });
+                    self.cache.invalidate(&rec.key);
+                }
+                self.state
+                    .lock()
+                    .unwrap()
+                    .entry(dataset)
+                    .or_default()
+                    .committed
+                    .remove(&attempt.to_string());
+                Ok(true)
+            }
+            Some(TempPath::TaskTempFile {
+                dataset, attempt, basename,
+            }) => {
+                let final_key = naming::stocator_final_key(&dataset, &basename, &attempt);
+                let (r, d) = self.store.delete_object(cont, &final_key, ctx.now());
+                ctx.add(d);
+                ctx.record("stocator", || {
+                    format!("(intercept) DELETE {cont}/{final_key}")
+                });
+                self.cache.invalidate(&final_key);
+                let mut state = self.state.lock().unwrap();
+                if let Some(ds) = state.get_mut(&dataset) {
+                    if let Some(parts) = ds.written.get_mut(&attempt.to_string()) {
+                        parts.retain(|p| p.key != final_key);
+                    }
+                }
+                Ok(r.is_ok())
+            }
+            Some(_) => {
+                // Deleting _temporary at job cleanup: nothing exists.
+                ctx.record("stocator", || {
+                    format!("(intercept) delete {key} -> no-op")
+                });
+                Ok(true)
+            }
+            None => {
+                // Plain object or dataset root.
+                match self.head_cached(cont, key, ctx) {
+                    Ok(h) if Self::is_dataset_marker(&h) || recursive => {
+                        // Dataset delete: one listing, then delete every
+                        // object plus the marker.
+                        let prefix = marker_key(key);
+                        let (r, d) = self.store.list(cont, &prefix, None, ctx.now());
+                        ctx.add(d);
+                        ctx.record("stocator", || {
+                            format!("GET container ?prefix={prefix}")
+                        });
+                        if let Ok(l) = r {
+                            for o in l.objects {
+                                let (_, d) = self.store.delete_object(cont, &o.name, ctx.now());
+                                ctx.add(d);
+                                ctx.record("stocator", || format!("DELETE {}", o.name));
+                            }
+                        }
+                        let (_, d) = self.store.delete_object(cont, key, ctx.now());
+                        ctx.add(d);
+                        ctx.record("stocator", || format!("DELETE {key}"));
+                        self.cache.invalidate_prefix(key);
+                        self.state.lock().unwrap().remove(key);
+                        Ok(true)
+                    }
+                    Ok(_) => {
+                        let (r, d) = self.store.delete_object(cont, key, ctx.now());
+                        ctx.add(d);
+                        ctx.record("stocator", || format!("DELETE {key}"));
+                        self.cache.invalidate(key);
+                        Ok(r.is_ok())
+                    }
+                    Err(FsError::NotFound(_)) => Ok(false),
+                    Err(e) => Err(e),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OpKind;
+    use crate::objectstore::StoreConfig;
+
+    fn setup(strategy: ReadStrategy) -> (Arc<ObjectStore>, Arc<Stocator>) {
+        let store = ObjectStore::new(StoreConfig::instant_strong());
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = Stocator::new(
+            store.clone(),
+            StocatorConfig {
+                read_strategy: strategy,
+                cache_capacity: 64,
+            },
+        );
+        (store, fs)
+    }
+
+    fn p(s: &str) -> Path {
+        Path::parse(s).unwrap()
+    }
+
+    fn ctx() -> OpCtx {
+        OpCtx::new(SimInstant::EPOCH)
+    }
+
+    fn temp_file(ds: &str, task: u32, attempt: u32, base: &str) -> Path {
+        p(&format!(
+            "swift2d://res/{ds}/_temporary/0/_temporary/attempt_201512062056_0000_m_{task:06}_{attempt}/{base}"
+        ))
+    }
+
+    fn attempt_dir(ds: &str, task: u32, attempt: u32) -> Path {
+        p(&format!(
+            "swift2d://res/{ds}/_temporary/0/_temporary/attempt_201512062056_0000_m_{task:06}_{attempt}"
+        ))
+    }
+
+    #[test]
+    fn temp_write_lands_at_final_attempt_qualified_name() {
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        fs.create(&temp_file("data.txt", 0, 0, "part-00000"), b"hello".to_vec(), true, &mut c)
+            .unwrap();
+        let names = store.debug_names("res", "data.txt/");
+        assert_eq!(
+            names,
+            vec!["data.txt/part-00000_attempt_201512062056_0000_m_000000_0"]
+        );
+        // Exactly one PUT; zero COPY/DELETE/list.
+        let cts = store.counters();
+        assert_eq!(cts.get(OpKind::PutObject), 1 + 1 /* container */);
+        assert_eq!(cts.get(OpKind::CopyObject), 0);
+        assert_eq!(cts.get(OpKind::DeleteObject), 0);
+        assert_eq!(cts.get(OpKind::GetContainer), 0);
+    }
+
+    #[test]
+    fn commit_renames_are_free() {
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        fs.create(&temp_file("d", 0, 0, "part-0"), b"x".to_vec(), true, &mut c).unwrap();
+        let before = store.counters();
+        // Task commit (v1 shape): rename attempt dir -> job temp dir.
+        assert!(fs
+            .rename(
+                &attempt_dir("d", 0, 0),
+                &p("swift2d://res/d/_temporary/0/task_201512062056_0000_m_000000"),
+                &mut c,
+            )
+            .unwrap());
+        // Job commit: rename job temp file -> final.
+        assert!(fs
+            .rename(
+                &p("swift2d://res/d/_temporary/0/task_201512062056_0000_m_000000/part-0"),
+                &p("swift2d://res/d/part-0"),
+                &mut c,
+            )
+            .unwrap());
+        assert_eq!(
+            store.counters().since(&before).total(),
+            0,
+            "commit must be zero REST ops"
+        );
+    }
+
+    #[test]
+    fn mkdirs_on_dataset_writes_marker_with_origin() {
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        fs.mkdirs(&p("swift2d://res/data.txt"), &mut c).unwrap();
+        let (h, _) = store.head_object("res", "data.txt");
+        let h = h.unwrap();
+        assert_eq!(h.size, 0);
+        assert_eq!(h.metadata.get(ORIGIN_KEY).map(String::as_str), Some(ORIGIN_VALUE));
+        // And getFileStatus sees it as a directory.
+        let st = fs.get_file_status(&p("swift2d://res/data.txt"), &mut c).unwrap();
+        assert!(st.is_dir);
+    }
+
+    #[test]
+    fn mkdirs_on_temp_paths_writes_marker_once_then_free() {
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        let before = store.counters();
+        // First mkdirs under the dataset writes the zero-byte marker...
+        fs.mkdirs(&p("swift2d://res/d/_temporary/0"), &mut c).unwrap();
+        let d1 = store.counters().since(&before);
+        assert_eq!(d1.get(OpKind::PutObject), 1, "dataset marker PUT");
+        assert_eq!(d1.total(), 1);
+        // ...and every further temp mkdirs is free.
+        let before = store.counters();
+        fs.mkdirs(&attempt_dir("d", 3, 1), &mut c).unwrap();
+        fs.mkdirs(&p("swift2d://res/d/_temporary/0"), &mut c).unwrap();
+        assert_eq!(store.counters().since(&before).total(), 0);
+        // The marker carries the Stocator origin metadata.
+        let (h, _) = store.head_object("res", "d");
+        assert_eq!(
+            h.unwrap().metadata.get(ORIGIN_KEY).map(String::as_str),
+            Some(ORIGIN_VALUE)
+        );
+    }
+
+    #[test]
+    fn abort_deletes_by_constructed_name() {
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        fs.create(&temp_file("d", 2, 0, "part-2"), b"aa".to_vec(), true, &mut c).unwrap();
+        fs.create(&temp_file("d", 2, 2, "part-2"), b"bb".to_vec(), true, &mut c).unwrap();
+        fs.create(&temp_file("d", 2, 1, "part-2"), b"cc".to_vec(), true, &mut c).unwrap();
+        let before = store.counters();
+        // Abort attempts 0 and 2 (paper Table 3 lines 6-7).
+        fs.delete(&attempt_dir("d", 2, 0), true, &mut c).unwrap();
+        fs.delete(&attempt_dir("d", 2, 2), true, &mut c).unwrap();
+        let d = store.counters().since(&before);
+        assert_eq!(d.get(OpKind::DeleteObject), 2);
+        assert_eq!(d.get(OpKind::GetContainer), 0, "no listing needed");
+        let names = store.debug_names("res", "d/");
+        assert_eq!(names, vec!["d/part-2_attempt_201512062056_0000_m_000002_1"]);
+    }
+
+    #[test]
+    fn read_dedups_attempts_by_most_data() {
+        let (_store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        // Task 2 ran three times; attempt 1 wrote the most data (fail-stop:
+        // the completed attempt's object is complete, dead attempts may
+        // have truncated objects).
+        fs.create(&temp_file("d", 0, 0, "part-0"), b"full0".to_vec(), true, &mut c).unwrap();
+        fs.create(&temp_file("d", 2, 0, "part-2"), b"xy".to_vec(), true, &mut c).unwrap();
+        fs.create(&temp_file("d", 2, 1, "part-2"), b"complete".to_vec(), true, &mut c).unwrap();
+        fs.create(&temp_file("d", 2, 2, "part-2"), b"z".to_vec(), true, &mut c).unwrap();
+        fs.rename(&attempt_dir("d", 0, 0), &p("swift2d://res/d/_temporary/0/task_x"), &mut c)
+            .unwrap();
+        fs.rename(&attempt_dir("d", 2, 1), &p("swift2d://res/d/_temporary/0/task_y"), &mut c)
+            .unwrap();
+        fs.create(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
+
+        let ls = fs.list_status(&p("swift2d://res/d"), &mut c).unwrap();
+        let parts: Vec<&str> = ls
+            .iter()
+            .filter(|s| s.path.name() != "_SUCCESS")
+            .map(|s| s.path.name())
+            .collect();
+        assert_eq!(
+            parts,
+            vec![
+                "part-0_attempt_201512062056_0000_m_000000_0",
+                "part-2_attempt_201512062056_0000_m_000002_1",
+            ]
+        );
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_reconstruction() {
+        let (store, fs) = setup(ReadStrategy::Manifest);
+        let mut c = ctx();
+        fs.mkdirs(&p("swift2d://res/d"), &mut c).unwrap();
+        fs.create(&temp_file("d", 0, 0, "part-0"), b"AA".to_vec(), true, &mut c).unwrap();
+        fs.create(&temp_file("d", 1, 0, "part-1"), b"BBB".to_vec(), true, &mut c).unwrap();
+        // Extra uncommitted attempt — must NOT appear via manifest.
+        fs.create(&temp_file("d", 1, 1, "part-1"), b"ZZZZ".to_vec(), true, &mut c).unwrap();
+        fs.rename(&attempt_dir("d", 0, 0), &p("swift2d://res/d/_temporary/0/task_a"), &mut c)
+            .unwrap();
+        fs.rename(&attempt_dir("d", 1, 0), &p("swift2d://res/d/_temporary/0/task_b"), &mut c)
+            .unwrap();
+        fs.create(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
+
+        // The manifest body landed in _SUCCESS:
+        let (g, _) = store.get_object("res", "d/_SUCCESS");
+        let body = g.unwrap().data;
+        let records = Stocator::parse_manifest(&body).unwrap();
+        assert_eq!(records.len(), 2);
+
+        let before = store.counters();
+        let ls = fs.list_status(&p("swift2d://res/d"), &mut c).unwrap();
+        let d = store.counters().since(&before);
+        assert_eq!(d.get(OpKind::GetContainer), 0, "manifest mode must not list");
+        let parts: Vec<&str> = ls
+            .iter()
+            .filter(|s| s.path.name() != "_SUCCESS")
+            .map(|s| s.path.name())
+            .collect();
+        assert_eq!(
+            parts,
+            vec![
+                "part-0_attempt_201512062056_0000_m_000000_0",
+                "part-1_attempt_201512062056_0000_m_000001_0",
+            ]
+        );
+    }
+
+    #[test]
+    fn manifest_read_is_correct_under_adversarial_listing_lag() {
+        // The eventual-consistency crown jewel (§3.2): with listings
+        // lagging arbitrarily, manifest mode still reads the right parts.
+        let store = ObjectStore::new(StoreConfig {
+            consistency: crate::objectstore::ConsistencyModel::adversarial(
+                crate::simclock::SimDuration::from_secs(3600),
+            ),
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = Stocator::new(
+            store.clone(),
+            StocatorConfig {
+                read_strategy: ReadStrategy::Manifest,
+                cache_capacity: 64,
+            },
+        );
+        let mut c = ctx();
+        fs.create(&temp_file("d", 0, 0, "part-0"), b"DATA".to_vec(), true, &mut c).unwrap();
+        fs.rename(&attempt_dir("d", 0, 0), &p("swift2d://res/d/_temporary/0/task_a"), &mut c)
+            .unwrap();
+        fs.create(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
+        // A listing would see NOTHING (1-hour lag):
+        let (l, _) = store.list("res", "d/", None, SimInstant(0));
+        assert!(l.unwrap().is_empty());
+        // ...but the manifest read path finds the part:
+        let ls = fs.list_status(&p("swift2d://res/d"), &mut c).unwrap();
+        let parts: Vec<&str> = ls
+            .iter()
+            .filter(|s| s.path.name() != "_SUCCESS")
+            .map(|s| s.path.name())
+            .collect();
+        assert_eq!(parts, vec!["part-0_attempt_201512062056_0000_m_000000_0"]);
+        // And the data is readable (GET is read-after-write consistent):
+        let data = fs.open(&ls[0].path, &mut c).unwrap();
+        assert_eq!(&*data, b"DATA");
+    }
+
+    #[test]
+    fn open_skips_head_and_warms_cache() {
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        fs.create(&p("swift2d://res/in/part-0"), b"input".to_vec(), true, &mut c).unwrap();
+        let before = store.counters();
+        let _ = fs.open(&p("swift2d://res/in/part-0"), &mut c).unwrap();
+        let d = store.counters().since(&before);
+        assert_eq!(d.get(OpKind::HeadObject), 0, "no HEAD before GET (§3.4)");
+        assert_eq!(d.get(OpKind::GetObject), 1);
+        // Follow-up getFileStatus served from the cache: zero ops.
+        let before = store.counters();
+        let st = fs.get_file_status(&p("swift2d://res/in/part-0"), &mut c).unwrap();
+        assert_eq!(st.len, 5);
+        assert_eq!(store.counters().since(&before).total(), 0);
+        assert!(fs.cache_hits() >= 1);
+    }
+
+    #[test]
+    fn head_cache_dedups_repeat_probes() {
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        fs.create(&p("swift2d://res/in/f"), b"abc".to_vec(), true, &mut c).unwrap();
+        let before = store.counters();
+        for _ in 0..5 {
+            fs.get_file_status(&p("swift2d://res/in/f"), &mut c).unwrap();
+        }
+        assert_eq!(
+            store.counters().since(&before).get(OpKind::HeadObject),
+            1,
+            "4 of 5 probes must hit the cache"
+        );
+    }
+
+    #[test]
+    fn dataset_delete_cleans_everything() {
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        fs.mkdirs(&p("swift2d://res/d"), &mut c).unwrap();
+        fs.create(&temp_file("d", 0, 0, "part-0"), b"x".to_vec(), true, &mut c).unwrap();
+        fs.create(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
+        assert!(fs.delete(&p("swift2d://res/d"), true, &mut c).unwrap());
+        assert!(store.debug_names("res", "d").is_empty());
+        assert!(!fs.exists(&p("swift2d://res/d"), &mut c));
+    }
+}

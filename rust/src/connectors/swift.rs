@@ -1,0 +1,442 @@
+//! The stock Hadoop-Swift connector (`hadoop-openstack` swiftfs), as
+//! shipped with Hadoop 2.7.3 — the paper's "H-S Base / H-S Cv2" subject.
+//!
+//! File-system semantics are emulated on the object store the way the real
+//! connector does it (paper §2.3):
+//!
+//! * "directories" are zero-byte marker objects (`<key>/`), created level
+//!   by level on `mkdirs` after HEAD-probing each level;
+//! * `getFileStatus` probes: HEAD file, HEAD dir marker, then a prefix
+//!   listing for implicit directories;
+//! * `rename` = server-side COPY + DELETE, per object, including the
+//!   directory markers — renaming a directory renames its whole subtree;
+//! * output is buffered to the Spark server's **local disk** before the
+//!   PUT (no chunked transfer encoding, §3.3);
+//! * reads HEAD the object before GETting it.
+
+use super::{container_key, marker_key};
+use crate::fs::{FileSystem, FsError, OpCtx, Path};
+use crate::fs::status::FileStatus;
+use crate::objectstore::{Metadata, ObjectStore, StoreError};
+use crate::simclock::SimInstant;
+use std::sync::Arc;
+
+pub struct HadoopSwift {
+    store: Arc<ObjectStore>,
+    scheme: String,
+}
+
+impl HadoopSwift {
+    pub fn new(store: Arc<ObjectStore>) -> Arc<Self> {
+        Arc::new(Self {
+            store,
+            scheme: "swift".to_string(),
+        })
+    }
+
+    fn not_found(e: StoreError, path: &Path) -> FsError {
+        match e {
+            StoreError::NoSuchKey(_) | StoreError::NoSuchContainer(_) => {
+                FsError::NotFound(path.to_string())
+            }
+            other => FsError::Io(other.to_string()),
+        }
+    }
+
+    /// The probe cascade behind `getFileStatus`:
+    /// HEAD `<key>` → HEAD `<key>/` → GET container `?prefix=<key>/`.
+    fn probe_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {
+        let (cont, key) = container_key(path);
+        if key.is_empty() {
+            let (r, d) = self.store.head_container(cont);
+            ctx.add(d);
+            ctx.record("swift", || format!("HEAD container {cont}"));
+            return r
+                .map(|_| FileStatus::dir(path.clone(), SimInstant::EPOCH))
+                .map_err(|e| Self::not_found(e, path));
+        }
+        // 1. file probe
+        let (r, d) = self.store.head_object(cont, key);
+        ctx.add(d);
+        ctx.record("swift", || format!("HEAD {cont}/{key}"));
+        if let Ok(h) = r {
+            return Ok(FileStatus::file(path.clone(), h.size, h.created_at));
+        }
+        // 2. dir-marker probe
+        let mk = marker_key(key);
+        let (r, d) = self.store.head_object(cont, &mk);
+        ctx.add(d);
+        ctx.record("swift", || format!("HEAD {cont}/{mk}"));
+        if r.is_ok() {
+            return Ok(FileStatus::dir(path.clone(), SimInstant::EPOCH));
+        }
+        // 3. implicit-directory probe (anything under the prefix?)
+        let (r, d) = self.store.list(cont, &mk, None, ctx.now());
+        ctx.add(d);
+        ctx.record("swift", || format!("GET container ?prefix={mk}"));
+        match r {
+            Ok(l) if !l.is_empty() => Ok(FileStatus::dir(path.clone(), SimInstant::EPOCH)),
+            _ => Err(FsError::NotFound(path.to_string())),
+        }
+    }
+}
+
+impl FileSystem for HadoopSwift {
+    fn scheme(&self) -> &str {
+        &self.scheme
+    }
+
+    fn mkdirs(&self, path: &Path, ctx: &mut OpCtx) -> Result<(), FsError> {
+        // Probe every level from the top; PUT a marker for each missing
+        // level (the real connector creates the full pseudo-directory
+        // chain).
+        let (cont, _) = container_key(path);
+        let mut levels = path.ancestors();
+        levels.push(path.clone());
+        for level in levels {
+            if level.is_root() {
+                continue;
+            }
+            match self.probe_status(&level, ctx) {
+                Ok(st) if !st.is_dir => {
+                    return Err(FsError::NotADirectory(level.to_string()));
+                }
+                Ok(_) => {} // already a directory
+                Err(FsError::NotFound(_)) => {
+                    let mk = marker_key(&level.key);
+                    let (r, d) =
+                        self.store
+                            .put_object(cont, &mk, Vec::new(), Metadata::new(), ctx.now());
+                    ctx.add(d);
+                    ctx.record("swift", || format!("PUT {cont}/{mk} (dir marker)"));
+                    r.map_err(|e| Self::not_found(e, &level))?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    fn create(
+        &self,
+        path: &Path,
+        data: Vec<u8>,
+        overwrite: bool,
+        ctx: &mut OpCtx,
+    ) -> Result<(), FsError> {
+        let (cont, key) = container_key(path);
+        if !overwrite {
+            match self.probe_status(path, ctx) {
+                Ok(st) if st.is_dir => return Err(FsError::IsADirectory(path.to_string())),
+                Ok(_) => return Err(FsError::AlreadyExists(path.to_string())),
+                Err(FsError::NotFound(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        // Buffer the whole output to local disk first (paper §3.3), then
+        // upload.
+        ctx.add(self.store.config.latency.local_disk_time(data.len() as u64));
+        let (r, d) = self
+            .store
+            .put_object(cont, key, data, Metadata::new(), ctx.now());
+        ctx.add(d);
+        ctx.record("swift", || format!("PUT {cont}/{key}"));
+        r.map_err(|e| Self::not_found(e, path))
+    }
+
+    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
+        let (cont, key) = container_key(path);
+        // The legacy connectors HEAD before GET (paper §3.4 — the naive
+        // two-op pattern Stocator removes).
+        let (h, d) = self.store.head_object(cont, key);
+        ctx.add(d);
+        ctx.record("swift", || format!("HEAD {cont}/{key}"));
+        h.map_err(|e| Self::not_found(e, path))?;
+        let (r, d) = self.store.get_object(cont, key);
+        ctx.add(d);
+        ctx.record("swift", || format!("GET {cont}/{key}"));
+        r.map(|g| g.data).map_err(|e| Self::not_found(e, path))
+    }
+
+    fn get_file_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {
+        self.probe_status(path, ctx)
+    }
+
+    fn list_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<Vec<FileStatus>, FsError> {
+        let st = self.probe_status(path, ctx)?;
+        if !st.is_dir {
+            return Ok(vec![st]);
+        }
+        let (cont, key) = container_key(path);
+        let prefix = if key.is_empty() {
+            String::new()
+        } else {
+            marker_key(key)
+        };
+        let (r, d) = self.store.list(cont, &prefix, Some('/'), ctx.now());
+        ctx.add(d);
+        ctx.record("swift", || format!("GET container ?prefix={prefix}&delimiter=/"));
+        let l = r.map_err(|e| Self::not_found(e, path))?;
+        let mut out = Vec::new();
+        for o in l.objects {
+            if o.name == prefix {
+                continue; // the directory's own marker
+            }
+            let child = Path::new(&path.scheme, cont, &o.name);
+            out.push(FileStatus::file(child, o.size, SimInstant::EPOCH));
+        }
+        for cp in l.common_prefixes {
+            let trimmed = cp.trim_end_matches('/');
+            let child = Path::new(&path.scheme, cont, trimmed);
+            out.push(FileStatus::dir(child, SimInstant::EPOCH));
+        }
+        Ok(out)
+    }
+
+    fn rename(&self, src: &Path, dst: &Path, ctx: &mut OpCtx) -> Result<bool, FsError> {
+        let (cont, skey) = container_key(src);
+        let dkey = dst.key.clone();
+        let st = match self.probe_status(src, ctx) {
+            Ok(st) => st,
+            Err(FsError::NotFound(_)) => return Ok(false),
+            Err(e) => return Err(e),
+        };
+        // Probe the destination (the real connector checks for conflicts).
+        let _ = self.probe_status(dst, ctx);
+        if !st.is_dir {
+            // File: COPY + DELETE.
+            let (r, d) = self.store.copy_object(cont, skey, cont, &dkey, ctx.now());
+            ctx.add(d);
+            ctx.record("swift", || format!("COPY {skey} -> {dkey}"));
+            r.map_err(|e| Self::not_found(e, src))?;
+            let (r, d) = self.store.delete_object(cont, skey, ctx.now());
+            ctx.add(d);
+            ctx.record("swift", || format!("DELETE {skey}"));
+            r.map_err(|e| Self::not_found(e, src))?;
+            return Ok(true);
+        }
+        // Directory: list the subtree (eventual consistency risk lives
+        // HERE — a listing may miss fresh objects) and copy each object,
+        // markers included.
+        let sprefix = marker_key(skey);
+        let (r, d) = self.store.list(cont, &sprefix, None, ctx.now());
+        ctx.add(d);
+        ctx.record("swift", || format!("GET container ?prefix={sprefix}"));
+        let l = r.map_err(|e| Self::not_found(e, src))?;
+        for o in l.objects {
+            let suffix = &o.name[sprefix.len()..];
+            let new_key = if suffix.is_empty() {
+                marker_key(&dkey)
+            } else {
+                format!("{dkey}/{suffix}")
+            };
+            let (r, d) = self.store.copy_object(cont, &o.name, cont, &new_key, ctx.now());
+            ctx.add(d);
+            ctx.record("swift", || format!("COPY {} -> {new_key}", o.name));
+            // A listed-but-deleted ghost fails the copy; the real connector
+            // would throw here. We skip it, which mirrors the "some output
+            // silently missing" failure mode.
+            if r.is_err() {
+                continue;
+            }
+            let (_, d) = self.store.delete_object(cont, &o.name, ctx.now());
+            ctx.add(d);
+            ctx.record("swift", || format!("DELETE {}", o.name));
+        }
+        // The source dir marker itself (if it wasn't in the listing).
+        let (r, d) = self.store.delete_object(cont, &sprefix, ctx.now());
+        ctx.add(d);
+        ctx.record("swift", || format!("DELETE {sprefix}"));
+        let _ = r;
+        Ok(true)
+    }
+
+    fn delete(&self, path: &Path, recursive: bool, ctx: &mut OpCtx) -> Result<bool, FsError> {
+        let (cont, key) = container_key(path);
+        let st = match self.probe_status(path, ctx) {
+            Ok(st) => st,
+            Err(FsError::NotFound(_)) => return Ok(false),
+            Err(e) => return Err(e),
+        };
+        if !st.is_dir {
+            let (r, d) = self.store.delete_object(cont, key, ctx.now());
+            ctx.add(d);
+            ctx.record("swift", || format!("DELETE {key}"));
+            r.map_err(|e| Self::not_found(e, path))?;
+            return Ok(true);
+        }
+        let prefix = marker_key(key);
+        let (r, d) = self.store.list(cont, &prefix, None, ctx.now());
+        ctx.add(d);
+        ctx.record("swift", || format!("GET container ?prefix={prefix}"));
+        let l = r.map_err(|e| Self::not_found(e, path))?;
+        if !recursive && l.objects.iter().any(|o| o.name != prefix) {
+            return Err(FsError::Io(format!("directory {path} not empty")));
+        }
+        for o in l.objects {
+            let (_, d) = self.store.delete_object(cont, &o.name, ctx.now());
+            ctx.add(d);
+            ctx.record("swift", || format!("DELETE {}", o.name));
+        }
+        // The marker itself, if the (eventually consistent) listing missed
+        // it.
+        let (_, d) = self.store.delete_object(cont, &prefix, ctx.now());
+        ctx.add(d);
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OpKind;
+    use crate::objectstore::StoreConfig;
+
+    fn setup() -> (Arc<ObjectStore>, Arc<HadoopSwift>) {
+        let store = ObjectStore::new(StoreConfig::instant_strong());
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = HadoopSwift::new(store.clone());
+        (store, fs)
+    }
+
+    fn p(s: &str) -> Path {
+        Path::parse(s).unwrap()
+    }
+
+    fn ctx() -> OpCtx {
+        OpCtx::new(SimInstant::EPOCH)
+    }
+
+    #[test]
+    fn mkdirs_creates_marker_chain() {
+        let (store, fs) = setup();
+        let mut c = ctx();
+        fs.mkdirs(&p("swift://res/d/_temporary/0"), &mut c).unwrap();
+        let names = store.debug_names("res", "");
+        assert_eq!(names, vec!["d/", "d/_temporary/", "d/_temporary/0/"]);
+        // Three marker PUTs happened.
+        assert_eq!(store.counters().get(OpKind::PutObject), 3 + 1 /*container*/);
+    }
+
+    #[test]
+    fn create_and_open_roundtrip() {
+        let (_, fs) = setup();
+        let mut c = ctx();
+        fs.create(&p("swift://res/d/f"), b"hello".to_vec(), true, &mut c)
+            .unwrap();
+        let data = fs.open(&p("swift://res/d/f"), &mut c).unwrap();
+        assert_eq!(&*data, b"hello");
+        // Implicit directory now visible:
+        let st = fs.get_file_status(&p("swift://res/d"), &mut c).unwrap();
+        assert!(st.is_dir);
+    }
+
+    #[test]
+    fn create_no_overwrite_fails_on_existing() {
+        let (_, fs) = setup();
+        let mut c = ctx();
+        fs.create(&p("swift://res/f"), b"1".to_vec(), true, &mut c).unwrap();
+        assert!(matches!(
+            fs.create(&p("swift://res/f"), b"2".to_vec(), false, &mut c),
+            Err(FsError::AlreadyExists(_))
+        ));
+    }
+
+    #[test]
+    fn rename_file_is_copy_plus_delete() {
+        let (store, fs) = setup();
+        let mut c = ctx();
+        fs.create(&p("swift://res/a"), b"xyz".to_vec(), true, &mut c).unwrap();
+        let before = store.counters();
+        assert!(fs.rename(&p("swift://res/a"), &p("swift://res/b"), &mut c).unwrap());
+        let d = store.counters().since(&before);
+        assert_eq!(d.get(OpKind::CopyObject), 1);
+        assert_eq!(d.get(OpKind::DeleteObject), 1);
+        assert_eq!(d.bytes_copied, 3);
+        assert_eq!(&*fs.open(&p("swift://res/b"), &mut c).unwrap(), b"xyz");
+        assert!(fs.open(&p("swift://res/a"), &mut c).is_err());
+    }
+
+    #[test]
+    fn rename_directory_moves_subtree_with_copies() {
+        let (store, fs) = setup();
+        let mut c = ctx();
+        fs.mkdirs(&p("swift://res/t/src"), &mut c).unwrap();
+        fs.create(&p("swift://res/t/src/p0"), b"00".to_vec(), true, &mut c).unwrap();
+        fs.create(&p("swift://res/t/src/p1"), b"11".to_vec(), true, &mut c).unwrap();
+        assert!(fs
+            .rename(&p("swift://res/t/src"), &p("swift://res/t/dst"), &mut c)
+            .unwrap());
+        assert!(fs.open(&p("swift://res/t/dst/p0"), &mut c).is_ok());
+        assert!(fs.open(&p("swift://res/t/dst/p1"), &mut c).is_ok());
+        assert!(fs.open(&p("swift://res/t/src/p0"), &mut c).is_err());
+        // 2 files + 1 marker copied.
+        assert_eq!(store.counters().get(OpKind::CopyObject), 3);
+    }
+
+    #[test]
+    fn rename_missing_source_is_false() {
+        let (_, fs) = setup();
+        let mut c = ctx();
+        assert!(!fs.rename(&p("swift://res/no"), &p("swift://res/x"), &mut c).unwrap());
+    }
+
+    #[test]
+    fn list_status_files_and_dirs() {
+        let (_, fs) = setup();
+        let mut c = ctx();
+        fs.create(&p("swift://res/d/f1"), b"1".to_vec(), true, &mut c).unwrap();
+        fs.mkdirs(&p("swift://res/d/sub"), &mut c).unwrap();
+        let ls = fs.list_status(&p("swift://res/d"), &mut c).unwrap();
+        let mut names: Vec<(&str, bool)> =
+            ls.iter().map(|s| (s.path.name(), s.is_dir)).collect();
+        names.sort();
+        assert_eq!(names, vec![("f1", false), ("sub", true)]);
+    }
+
+    #[test]
+    fn delete_recursive_removes_markers_too() {
+        let (store, fs) = setup();
+        let mut c = ctx();
+        fs.mkdirs(&p("swift://res/d/sub"), &mut c).unwrap();
+        fs.create(&p("swift://res/d/f"), b"1".to_vec(), true, &mut c).unwrap();
+        assert!(fs.delete(&p("swift://res/d"), true, &mut c).unwrap());
+        assert!(store.debug_names("res", "").is_empty());
+        assert!(!fs.exists(&p("swift://res/d"), &mut c));
+    }
+
+    #[test]
+    fn buffers_to_local_disk_on_write() {
+        // With a slow local disk, create() must be charged disk time.
+        let mut cfg = StoreConfig::instant_strong();
+        cfg.latency.local_disk_bw = 1_000; // 1 KB/s
+        let store = ObjectStore::new(cfg);
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = HadoopSwift::new(store);
+        let mut c = ctx();
+        fs.create(&p("swift://res/f"), vec![0u8; 2_000], true, &mut c).unwrap();
+        assert!(c.elapsed.as_secs_f64() >= 2.0, "disk time not charged");
+    }
+
+    #[test]
+    fn eventual_consistency_can_lose_renamed_output() {
+        // The §2.2.2 failure: a directory rename right after creating a
+        // file misses it because the listing lags.
+        let store = ObjectStore::new(StoreConfig::instant_eventual());
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = HadoopSwift::new(store.clone());
+        let mut c = ctx();
+        fs.mkdirs(&p("swift://res/d/src"), &mut c).unwrap();
+        fs.create(&p("swift://res/d/src/part-0"), b"data".to_vec(), true, &mut c)
+            .unwrap();
+        // Rename immediately (listing lag is 2s of virtual time; zero
+        // virtual time has passed).
+        fs.rename(&p("swift://res/d/src"), &p("swift://res/d/dst"), &mut c)
+            .unwrap();
+        // The part was silently left behind:
+        assert!(
+            !store.debug_names("res", "d/dst").iter().any(|n| n.ends_with("part-0")),
+            "part should have been missed by the lagging listing"
+        );
+    }
+}

@@ -1,0 +1,419 @@
+//! An in-memory HDFS-like hierarchical filesystem.
+//!
+//! Used for (a) regenerating the paper's Table 1 — the file-system
+//! operation sequence Spark executes for a one-task program on HDFS — and
+//! (b) the "copy input to HDFS, compute, copy back" alternative the paper's
+//! §2.2.2 mentions, which we keep as an ablation baseline.
+//!
+//! Unlike an object store, HDFS has *real* directories and an atomic,
+//! metadata-only rename — which is exactly why the HMRCC commit protocol is
+//! cheap on HDFS and ruinous on object stores.
+
+use super::interface::{FileSystem, FsError, OpCtx};
+use super::path::Path;
+use super::status::FileStatus;
+use crate::simclock::{SimDuration, SimInstant};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone)]
+enum Node {
+    Dir,
+    File { data: Arc<Vec<u8>>, mtime: SimInstant },
+}
+
+/// Virtual-time costs of HDFS operations: metadata ops hit the NameNode
+/// (sub-millisecond), data ops stream at disk bandwidth.
+#[derive(Debug, Clone)]
+pub struct HdfsLatency {
+    pub meta_us: u64,
+    pub disk_bw: u64,
+    pub data_scale: u64,
+}
+
+impl Default for HdfsLatency {
+    fn default() -> Self {
+        Self {
+            meta_us: 500,
+            disk_bw: 400_000_000, // 3 replicas over 10 Gbps, bottlenecked on SATA
+            data_scale: 1,
+        }
+    }
+}
+
+impl HdfsLatency {
+    fn data_time(&self, bytes: u64) -> SimDuration {
+        if self.disk_bw == u64::MAX {
+            return SimDuration::ZERO;
+        }
+        SimDuration::from_micros(
+            bytes.saturating_mul(self.data_scale).saturating_mul(1_000_000) / self.disk_bw,
+        )
+    }
+    fn meta_time(&self) -> SimDuration {
+        SimDuration::from_micros(self.meta_us)
+    }
+}
+
+/// The filesystem. Keys are `container/key` strings; the root of every
+/// container always exists.
+pub struct Hdfs {
+    nodes: Mutex<BTreeMap<String, Node>>,
+    latency: HdfsLatency,
+}
+
+impl Hdfs {
+    pub fn new() -> Arc<Self> {
+        Self::with_latency(HdfsLatency::default())
+    }
+
+    pub fn with_latency(latency: HdfsLatency) -> Arc<Self> {
+        Arc::new(Self {
+            nodes: Mutex::new(BTreeMap::new()),
+            latency,
+        })
+    }
+
+    fn full_key(path: &Path) -> String {
+        if path.key.is_empty() {
+            path.container.clone()
+        } else {
+            format!("{}/{}", path.container, path.key)
+        }
+    }
+
+    /// Children of `key` (direct only).
+    fn children(nodes: &BTreeMap<String, Node>, key: &str) -> Vec<String> {
+        let prefix = format!("{key}/");
+        let mut out = Vec::new();
+        for (k, _) in nodes.range(prefix.clone()..) {
+            if !k.starts_with(&prefix) {
+                break;
+            }
+            let rest = &k[prefix.len()..];
+            if !rest.contains('/') {
+                out.push(k.clone());
+            }
+        }
+        out
+    }
+}
+
+impl FileSystem for Hdfs {
+    fn scheme(&self) -> &str {
+        "hdfs"
+    }
+
+    fn mkdirs(&self, path: &Path, ctx: &mut OpCtx) -> Result<(), FsError> {
+        let mut nodes = self.nodes.lock().unwrap();
+        ctx.add(self.latency.meta_time());
+        ctx.record("mkdirs", || path.to_string());
+        // Walk down from the container, creating missing dirs; fail if a
+        // path component is a file.
+        let mut cur = path.container.clone();
+        nodes.entry(cur.clone()).or_insert(Node::Dir);
+        for seg in path.key.split('/').filter(|s| !s.is_empty()) {
+            cur = format!("{cur}/{seg}");
+            match nodes.get(&cur) {
+                Some(Node::File { .. }) => return Err(FsError::NotADirectory(cur)),
+                Some(Node::Dir) => {}
+                None => {
+                    nodes.insert(cur.clone(), Node::Dir);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn create(
+        &self,
+        path: &Path,
+        data: Vec<u8>,
+        overwrite: bool,
+        ctx: &mut OpCtx,
+    ) -> Result<(), FsError> {
+        let mut nodes = self.nodes.lock().unwrap();
+        ctx.add(self.latency.meta_time() + self.latency.data_time(data.len() as u64));
+        ctx.record("create", || format!("{path} ({} bytes)", data.len()));
+        let key = Self::full_key(path);
+        match nodes.get(&key) {
+            Some(Node::Dir) => return Err(FsError::IsADirectory(key)),
+            Some(Node::File { .. }) if !overwrite => {
+                return Err(FsError::AlreadyExists(key));
+            }
+            _ => {}
+        }
+        // Implicitly create parent dirs (Hadoop create() does).
+        if let Some(parent) = path.parent() {
+            let mut cur = path.container.clone();
+            nodes.entry(cur.clone()).or_insert(Node::Dir);
+            for seg in parent.key.split('/').filter(|s| !s.is_empty()) {
+                cur = format!("{cur}/{seg}");
+                match nodes.get(&cur) {
+                    Some(Node::File { .. }) => return Err(FsError::NotADirectory(cur)),
+                    Some(Node::Dir) => {}
+                    None => {
+                        nodes.insert(cur.clone(), Node::Dir);
+                    }
+                }
+            }
+        }
+        nodes.insert(
+            key,
+            Node::File {
+                data: Arc::new(data),
+                mtime: ctx.now(),
+            },
+        );
+        Ok(())
+    }
+
+    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
+        let nodes = self.nodes.lock().unwrap();
+        let key = Self::full_key(path);
+        match nodes.get(&key) {
+            Some(Node::File { data, .. }) => {
+                ctx.add(self.latency.meta_time() + self.latency.data_time(data.len() as u64));
+                ctx.record("open", || path.to_string());
+                Ok(data.clone())
+            }
+            Some(Node::Dir) => Err(FsError::IsADirectory(key)),
+            None => {
+                ctx.add(self.latency.meta_time());
+                Err(FsError::NotFound(key))
+            }
+        }
+    }
+
+    fn get_file_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {
+        let nodes = self.nodes.lock().unwrap();
+        ctx.add(self.latency.meta_time());
+        let key = Self::full_key(path);
+        match nodes.get(&key) {
+            Some(Node::Dir) => Ok(FileStatus::dir(path.clone(), SimInstant::EPOCH)),
+            Some(Node::File { data, mtime }) => {
+                Ok(FileStatus::file(path.clone(), data.len() as u64, *mtime))
+            }
+            None => Err(FsError::NotFound(key)),
+        }
+    }
+
+    fn list_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<Vec<FileStatus>, FsError> {
+        let nodes = self.nodes.lock().unwrap();
+        ctx.add(self.latency.meta_time());
+        ctx.record("list", || path.to_string());
+        let key = Self::full_key(path);
+        match nodes.get(&key) {
+            Some(Node::File { data, mtime }) => Ok(vec![FileStatus::file(
+                path.clone(),
+                data.len() as u64,
+                *mtime,
+            )]),
+            Some(Node::Dir) => {
+                let mut out = Vec::new();
+                for child_key in Self::children(&nodes, &key) {
+                    let rel = &child_key[path.container.len() + 1..];
+                    let child = Path::new(&path.scheme, &path.container, rel);
+                    match nodes.get(&child_key).unwrap() {
+                        Node::Dir => out.push(FileStatus::dir(child, SimInstant::EPOCH)),
+                        Node::File { data, mtime } => {
+                            out.push(FileStatus::file(child, data.len() as u64, *mtime))
+                        }
+                    }
+                }
+                Ok(out)
+            }
+            None => Err(FsError::NotFound(key)),
+        }
+    }
+
+    fn rename(&self, src: &Path, dst: &Path, ctx: &mut OpCtx) -> Result<bool, FsError> {
+        let mut nodes = self.nodes.lock().unwrap();
+        // HDFS rename is a metadata-only operation, regardless of size —
+        // THE property object stores lack.
+        ctx.add(self.latency.meta_time());
+        ctx.record("rename", || format!("{src} -> {dst}"));
+        let skey = Self::full_key(src);
+        let dkey = Self::full_key(dst);
+        if !nodes.contains_key(&skey) {
+            return Ok(false);
+        }
+        // Collect the subtree (src itself + descendants).
+        let sub_prefix = format!("{skey}/");
+        let moved: Vec<String> = std::iter::once(skey.clone())
+            .chain(
+                nodes
+                    .range(sub_prefix.clone()..)
+                    .take_while(|(k, _)| k.starts_with(&sub_prefix))
+                    .map(|(k, _)| k.clone()),
+            )
+            .collect();
+        for old_key in moved {
+            let node = nodes.remove(&old_key).unwrap();
+            let new_key = format!("{dkey}{}", &old_key[skey.len()..]);
+            nodes.insert(new_key, node);
+        }
+        Ok(true)
+    }
+
+    fn delete(&self, path: &Path, recursive: bool, ctx: &mut OpCtx) -> Result<bool, FsError> {
+        let mut nodes = self.nodes.lock().unwrap();
+        ctx.add(self.latency.meta_time());
+        ctx.record("delete", || path.to_string());
+        let key = Self::full_key(path);
+        let Some(node) = nodes.get(&key) else {
+            return Ok(false);
+        };
+        if matches!(node, Node::Dir) {
+            let sub_prefix = format!("{key}/");
+            let children: Vec<String> = nodes
+                .range(sub_prefix.clone()..)
+                .take_while(|(k, _)| k.starts_with(&sub_prefix))
+                .map(|(k, _)| k.clone())
+                .collect();
+            if !children.is_empty() && !recursive {
+                return Err(FsError::Io(format!("directory {key} not empty")));
+            }
+            for c in children {
+                nodes.remove(&c);
+            }
+        }
+        nodes.remove(&key);
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Path {
+        Path::parse(s).unwrap()
+    }
+
+    fn ctx() -> OpCtx {
+        OpCtx::new(SimInstant::EPOCH)
+    }
+
+    #[test]
+    fn create_open_roundtrip() {
+        let fs = Hdfs::new();
+        let mut c = ctx();
+        fs.create(&p("hdfs://res/data.txt/part-0"), b"abc".to_vec(), false, &mut c)
+            .unwrap();
+        let data = fs.open(&p("hdfs://res/data.txt/part-0"), &mut c).unwrap();
+        assert_eq!(&*data, b"abc");
+        // Implicit parent dir exists:
+        let st = fs.get_file_status(&p("hdfs://res/data.txt"), &mut c).unwrap();
+        assert!(st.is_dir);
+    }
+
+    #[test]
+    fn mkdirs_is_recursive_and_idempotent() {
+        let fs = Hdfs::new();
+        let mut c = ctx();
+        fs.mkdirs(&p("hdfs://res/a/b/c"), &mut c).unwrap();
+        fs.mkdirs(&p("hdfs://res/a/b/c"), &mut c).unwrap();
+        assert!(fs.get_file_status(&p("hdfs://res/a/b"), &mut c).unwrap().is_dir);
+        // mkdirs through a file fails:
+        fs.create(&p("hdfs://res/f"), vec![], false, &mut c).unwrap();
+        assert!(fs.mkdirs(&p("hdfs://res/f/x"), &mut c).is_err());
+    }
+
+    #[test]
+    fn overwrite_semantics() {
+        let fs = Hdfs::new();
+        let mut c = ctx();
+        let f = p("hdfs://res/x");
+        fs.create(&f, b"1".to_vec(), false, &mut c).unwrap();
+        assert!(matches!(
+            fs.create(&f, b"2".to_vec(), false, &mut c),
+            Err(FsError::AlreadyExists(_))
+        ));
+        fs.create(&f, b"2".to_vec(), true, &mut c).unwrap();
+        assert_eq!(&*fs.open(&f, &mut c).unwrap(), b"2");
+    }
+
+    #[test]
+    fn rename_moves_subtree_atomically() {
+        let fs = Hdfs::new();
+        let mut c = ctx();
+        fs.create(&p("hdfs://res/t/_tmp/a/part-0"), b"x".to_vec(), false, &mut c)
+            .unwrap();
+        fs.create(&p("hdfs://res/t/_tmp/a/part-1"), b"y".to_vec(), false, &mut c)
+            .unwrap();
+        assert!(fs
+            .rename(&p("hdfs://res/t/_tmp/a"), &p("hdfs://res/t/final"), &mut c)
+            .unwrap());
+        assert!(fs.open(&p("hdfs://res/t/final/part-0"), &mut c).is_ok());
+        assert!(fs.open(&p("hdfs://res/t/final/part-1"), &mut c).is_ok());
+        assert!(fs.open(&p("hdfs://res/t/_tmp/a/part-0"), &mut c).is_err());
+        // Renaming a missing source is the benign false case.
+        assert!(!fs
+            .rename(&p("hdfs://res/none"), &p("hdfs://res/other"), &mut c)
+            .unwrap());
+    }
+
+    #[test]
+    fn rename_is_metadata_only_on_the_clock() {
+        let lat = HdfsLatency {
+            meta_us: 100,
+            disk_bw: 1_000, // very slow disk
+            data_scale: 1,
+        };
+        let fs = Hdfs::with_latency(lat);
+        let mut c = ctx();
+        fs.create(&p("hdfs://res/big"), vec![0u8; 10_000], false, &mut c)
+            .unwrap();
+        let before = c.elapsed;
+        fs.rename(&p("hdfs://res/big"), &p("hdfs://res/big2"), &mut c)
+            .unwrap();
+        let rename_cost = c.elapsed.saturating_sub(before);
+        assert_eq!(rename_cost.as_micros(), 100, "rename must not touch data");
+    }
+
+    #[test]
+    fn list_status_direct_children_only() {
+        let fs = Hdfs::new();
+        let mut c = ctx();
+        fs.create(&p("hdfs://res/d/f1"), vec![1], false, &mut c).unwrap();
+        fs.create(&p("hdfs://res/d/sub/f2"), vec![2], false, &mut c).unwrap();
+        let ls = fs.list_status(&p("hdfs://res/d"), &mut c).unwrap();
+        let names: Vec<&str> = ls.iter().map(|s| s.path.name()).collect();
+        assert_eq!(names, vec!["f1", "sub"]);
+        // Listing a file returns the file itself (Hadoop semantics).
+        let lf = fs.list_status(&p("hdfs://res/d/f1"), &mut c).unwrap();
+        assert_eq!(lf.len(), 1);
+        assert!(!lf[0].is_dir);
+    }
+
+    #[test]
+    fn delete_recursive_guard() {
+        let fs = Hdfs::new();
+        let mut c = ctx();
+        fs.create(&p("hdfs://res/d/f"), vec![], false, &mut c).unwrap();
+        assert!(fs.delete(&p("hdfs://res/d"), false, &mut c).is_err());
+        assert!(fs.delete(&p("hdfs://res/d"), true, &mut c).unwrap());
+        assert!(!fs.exists(&p("hdfs://res/d"), &mut c));
+        assert!(!fs.delete(&p("hdfs://res/d"), true, &mut c).unwrap());
+    }
+
+    #[test]
+    fn trace_records_op_sequence() {
+        let fs = Hdfs::new();
+        let mut c = OpCtx::traced(SimInstant::EPOCH);
+        fs.mkdirs(&p("hdfs://res/data.txt/_temporary/0"), &mut c).unwrap();
+        fs.create(&p("hdfs://res/data.txt/_temporary/0/part-0"), vec![0], false, &mut c)
+            .unwrap();
+        fs.rename(
+            &p("hdfs://res/data.txt/_temporary/0/part-0"),
+            &p("hdfs://res/data.txt/part-0"),
+            &mut c,
+        )
+        .unwrap();
+        let t = c.take_trace();
+        assert_eq!(t.len(), 3);
+        assert!(t[0].starts_with("mkdirs:"));
+        assert!(t[2].contains("->"));
+    }
+}

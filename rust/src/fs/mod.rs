@@ -1,0 +1,17 @@
+//! The Hadoop FileSystem abstraction (paper Fig. 1).
+//!
+//! Spark talks to storage through the Hadoop Map Reduce Client Core
+//! (HMRCC), which talks to a *connector* implementing the Hadoop
+//! `FileSystem` interface. This module defines that interface
+//! ([`interface::FileSystem`]), Hadoop-style paths ([`path::Path`]) and
+//! file statuses, plus an in-memory HDFS-like filesystem used for the
+//! paper's Table 1 trace and the copy-via-HDFS ablation.
+
+pub mod path;
+pub mod status;
+pub mod interface;
+pub mod hdfs;
+
+pub use interface::{FileSystem, FsError, OpCtx};
+pub use path::Path;
+pub use status::FileStatus;

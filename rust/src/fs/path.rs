@@ -1,0 +1,211 @@
+//! Hadoop-style paths: `scheme://container/key/segments`.
+//!
+//! Object stores have no real directories, but Hadoop paths are
+//! hierarchical; connectors map the path's key part onto hierarchical
+//! object *names* (paper §2.1). `Path` keeps the parsed form and offers the
+//! ancestry operations HMRCC and the committers need.
+
+use std::fmt;
+
+/// A parsed Hadoop path. `key` is empty for the container root.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Path {
+    pub scheme: String,
+    pub container: String,
+    pub key: String,
+}
+
+impl Path {
+    /// Parse `scheme://container/key...`. Normalizes duplicate and trailing
+    /// slashes in the key.
+    pub fn parse(s: &str) -> Result<Path, String> {
+        let (scheme, rest) = s
+            .split_once("://")
+            .ok_or_else(|| format!("path '{s}' has no scheme://"))?;
+        if scheme.is_empty() {
+            return Err(format!("path '{s}' has empty scheme"));
+        }
+        let (container, key) = match rest.split_once('/') {
+            Some((c, k)) => (c, k),
+            None => (rest, ""),
+        };
+        if container.is_empty() {
+            return Err(format!("path '{s}' has empty container"));
+        }
+        let key: String = key
+            .split('/')
+            .filter(|seg| !seg.is_empty())
+            .collect::<Vec<_>>()
+            .join("/");
+        Ok(Path {
+            scheme: scheme.to_string(),
+            container: container.to_string(),
+            key,
+        })
+    }
+
+    /// Build from parts (already normalized).
+    pub fn new(scheme: &str, container: &str, key: &str) -> Path {
+        Path::parse(&format!("{scheme}://{container}/{key}")).expect("valid parts")
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.key.is_empty()
+    }
+
+    /// Last key segment (file/dir name); container for the root.
+    pub fn name(&self) -> &str {
+        if self.key.is_empty() {
+            &self.container
+        } else {
+            self.key.rsplit('/').next().unwrap()
+        }
+    }
+
+    /// Parent path; `None` at the container root.
+    pub fn parent(&self) -> Option<Path> {
+        if self.key.is_empty() {
+            return None;
+        }
+        let parent_key = match self.key.rsplit_once('/') {
+            Some((head, _)) => head,
+            None => "",
+        };
+        Some(Path {
+            scheme: self.scheme.clone(),
+            container: self.container.clone(),
+            key: parent_key.to_string(),
+        })
+    }
+
+    /// All ancestors from the container root (exclusive) down to the parent.
+    pub fn ancestors(&self) -> Vec<Path> {
+        let mut out = Vec::new();
+        let mut cur = self.parent();
+        while let Some(p) = cur {
+            if p.is_root() {
+                break;
+            }
+            cur = p.parent();
+            out.push(p);
+        }
+        out.reverse();
+        out
+    }
+
+    /// Append a child segment (or multi-segment suffix).
+    pub fn child(&self, name: &str) -> Path {
+        let key = if self.key.is_empty() {
+            name.to_string()
+        } else {
+            format!("{}/{}", self.key, name)
+        };
+        Path::new(&self.scheme, &self.container, &key)
+    }
+
+    /// Is `self` equal to or under `other`?
+    pub fn starts_with(&self, other: &Path) -> bool {
+        self.container == other.container
+            && (self.key == other.key
+                || other.key.is_empty()
+                || self.key.starts_with(&format!("{}/", other.key)))
+    }
+
+    /// The key suffix of `self` relative to ancestor `base`.
+    pub fn relative_to(&self, base: &Path) -> Option<String> {
+        if !self.starts_with(base) {
+            return None;
+        }
+        if base.key.is_empty() {
+            Some(self.key.clone())
+        } else if self.key == base.key {
+            Some(String::new())
+        } else {
+            Some(self.key[base.key.len() + 1..].to_string())
+        }
+    }
+}
+
+impl fmt::Display for Path {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.key.is_empty() {
+            write!(f, "{}://{}", self.scheme, self.container)
+        } else {
+            write!(f, "{}://{}/{}", self.scheme, self.container, self.key)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display() {
+        let p = Path::parse("swift2d://res/data.txt/part-0").unwrap();
+        assert_eq!(p.scheme, "swift2d");
+        assert_eq!(p.container, "res");
+        assert_eq!(p.key, "data.txt/part-0");
+        assert_eq!(p.to_string(), "swift2d://res/data.txt/part-0");
+    }
+
+    #[test]
+    fn parse_normalizes_slashes() {
+        let p = Path::parse("s3a://b//x///y/").unwrap();
+        assert_eq!(p.key, "x/y");
+        let root = Path::parse("s3a://b").unwrap();
+        assert!(root.is_root());
+        assert_eq!(root.to_string(), "s3a://b");
+        assert_eq!(Path::parse("s3a://b/").unwrap(), root);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Path::parse("no-scheme/x").is_err());
+        assert!(Path::parse("://c/x").is_err());
+        assert!(Path::parse("s3a:///x").is_err());
+    }
+
+    #[test]
+    fn parent_chain() {
+        let p = Path::parse("h://c/a/b/c").unwrap();
+        assert_eq!(p.name(), "c");
+        let par = p.parent().unwrap();
+        assert_eq!(par.key, "a/b");
+        assert_eq!(par.parent().unwrap().key, "a");
+        let root = par.parent().unwrap().parent().unwrap();
+        assert!(root.is_root());
+        assert!(root.parent().is_none());
+        assert_eq!(root.name(), "c"); // container name
+    }
+
+    #[test]
+    fn ancestors_ordered_top_down() {
+        let p = Path::parse("h://c/a/b/c/d").unwrap();
+        let anc: Vec<String> = p.ancestors().iter().map(|a| a.key.clone()).collect();
+        assert_eq!(anc, vec!["a", "a/b", "a/b/c"]);
+        assert!(Path::parse("h://c/top").unwrap().ancestors().is_empty());
+    }
+
+    #[test]
+    fn child_and_relative() {
+        let d = Path::parse("h://c/data.txt").unwrap();
+        let t = d.child("_temporary/0");
+        assert_eq!(t.key, "data.txt/_temporary/0");
+        assert!(t.starts_with(&d));
+        assert!(!d.starts_with(&t));
+        assert_eq!(t.relative_to(&d).unwrap(), "_temporary/0");
+        assert_eq!(d.relative_to(&d).unwrap(), "");
+        let other = Path::parse("h://c/other").unwrap();
+        assert!(t.relative_to(&other).is_none());
+    }
+
+    #[test]
+    fn starts_with_is_segment_aware() {
+        let a = Path::parse("h://c/data").unwrap();
+        let b = Path::parse("h://c/data.txt").unwrap();
+        assert!(!b.starts_with(&a), "prefix must match whole segments");
+        let root = Path::parse("h://c").unwrap();
+        assert!(b.starts_with(&root));
+    }
+}

@@ -1,0 +1,50 @@
+//! File status records, as returned by `FileSystem::get_file_status` and
+//! `list_status` — what HMRCC's committers use to decide what to rename.
+
+use super::path::Path;
+use crate::simclock::SimInstant;
+
+/// Hadoop `FileStatus`: path + kind + length + mtime.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileStatus {
+    pub path: Path,
+    pub is_dir: bool,
+    pub len: u64,
+    pub modified_at: SimInstant,
+}
+
+impl FileStatus {
+    pub fn file(path: Path, len: u64, modified_at: SimInstant) -> Self {
+        Self {
+            path,
+            is_dir: false,
+            len,
+            modified_at,
+        }
+    }
+
+    pub fn dir(path: Path, modified_at: SimInstant) -> Self {
+        Self {
+            path,
+            is_dir: true,
+            len: 0,
+            modified_at,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let p = Path::parse("h://c/f").unwrap();
+        let f = FileStatus::file(p.clone(), 10, SimInstant(3));
+        assert!(!f.is_dir);
+        assert_eq!(f.len, 10);
+        let d = FileStatus::dir(p, SimInstant(3));
+        assert!(d.is_dir);
+        assert_eq!(d.len, 0);
+    }
+}

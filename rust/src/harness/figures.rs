@@ -1,0 +1,153 @@
+//! Figures 5, 6 and 7: REST calls by type (micro / macro benchmarks) and
+//! bytes read/written/copied, as grouped ASCII bar charts plus raw series.
+
+use super::runner::Workload;
+use super::tables::Sweep;
+use crate::harness::scenarios::Scenario;
+use crate::metrics::OpKind;
+use crate::util::table::{BarChart, Table};
+
+/// Figure 5 (micro) or 6 (macro): total REST calls per scenario per
+/// workload, with a per-type breakdown table.
+pub fn render_rest_figure(sweep: &Sweep, workloads: &[Workload], title: &str) -> String {
+    let mut out = String::new();
+    let series: Vec<&str> = Scenario::ALL.iter().map(|s| s.label()).collect();
+    let mut chart = BarChart::new(title, &series, "REST calls");
+    for &w in workloads {
+        let values: Vec<f64> = Scenario::ALL
+            .iter()
+            .map(|&s| {
+                sweep
+                    .cell(s, w)
+                    .map(|c| c.ops.total() as f64)
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        chart.group(w.label(), values);
+    }
+    out.push_str(&chart.render());
+    out.push('\n');
+
+    // Per-type breakdown (the stacked composition of the paper's bars).
+    for &w in workloads {
+        let mut t = Table::new(
+            &format!("{} — REST breakdown", w.label()),
+            &["scenario", "HEAD", "GET", "PUT", "COPY", "DELETE", "GETcont", "total"],
+        );
+        for s in Scenario::ALL {
+            if let Some(c) = sweep.cell(s, w) {
+                t.row(vec![
+                    s.label().to_string(),
+                    c.ops.get(OpKind::HeadObject).to_string(),
+                    c.ops.get(OpKind::GetObject).to_string(),
+                    c.ops.get(OpKind::PutObject).to_string(),
+                    c.ops.get(OpKind::CopyObject).to_string(),
+                    c.ops.get(OpKind::DeleteObject).to_string(),
+                    c.ops.get(OpKind::GetContainer).to_string(),
+                    c.ops.total().to_string(),
+                ]);
+            }
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Figure 7: bytes read / written / copied per scenario for the write
+/// workloads. The paper's headline: base connectors write every byte 3×
+/// (PUT + two COPYs), Cv2 2×, Stocator exactly 1×.
+pub fn render_fig7(sweep: &Sweep) -> String {
+    let mut out = String::new();
+    let series: Vec<&str> = Scenario::ALL.iter().map(|s| s.label()).collect();
+    for &w in &Workload::WRITE {
+        if sweep.cell(Scenario::Stocator, w).is_none() {
+            continue;
+        }
+        let mut chart = BarChart::new(
+            &format!("Figure 7 — {} bytes moved on the object store", w.label()),
+            &series,
+            "GiB (logical)",
+        );
+        let gib = |b: u64| b as f64 / (1u64 << 30) as f64;
+        let mut read = Vec::new();
+        let mut written = Vec::new();
+        let mut copied = Vec::new();
+        for s in Scenario::ALL {
+            let c = sweep.cell(s, w).unwrap();
+            read.push(gib(c.ops.bytes_read));
+            written.push(gib(c.ops.bytes_written));
+            copied.push(gib(c.ops.bytes_copied));
+        }
+        chart.group(
+            "bytes written (PUT)",
+            Scenario::ALL
+                .iter()
+                .enumerate()
+                .map(|(i, _)| written[i])
+                .collect(),
+        );
+        chart.group(
+            "bytes copied (COPY)",
+            Scenario::ALL
+                .iter()
+                .enumerate()
+                .map(|(i, _)| copied[i])
+                .collect(),
+        );
+        chart.group(
+            "bytes read (GET)",
+            Scenario::ALL
+                .iter()
+                .enumerate()
+                .map(|(i, _)| read[i])
+                .collect(),
+        );
+        out.push_str(&chart.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// The Fig. 7 invariant as numbers: (written+copied) / dataset bytes.
+pub fn write_amplification(sweep: &Sweep, w: Workload, s: Scenario) -> Option<f64> {
+    let c = sweep.cell(s, w)?;
+    let dataset = sweep.cell(Scenario::Stocator, w)?.ops.bytes_written;
+    if dataset == 0 {
+        return None;
+    }
+    Some((c.ops.bytes_written + c.ops.bytes_copied) as f64 / dataset as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::scenarios::Sizing;
+    use crate::harness::tables::Sweep;
+
+    #[test]
+    fn fig7_write_amplification_shape() {
+        let sizing = Sizing::small();
+        let sweep = Sweep::run(&sizing, 1, &[Workload::Teragen]);
+        // Stocator 1x, Cv2 ≈2x, Base ≈3x (paper Fig. 7).
+        let st = write_amplification(&sweep, Workload::Teragen, Scenario::Stocator).unwrap();
+        let cv2 = write_amplification(&sweep, Workload::Teragen, Scenario::S3aCv2).unwrap();
+        let base = write_amplification(&sweep, Workload::Teragen, Scenario::S3aBase).unwrap();
+        assert!((0.99..1.1).contains(&st), "stocator {st}");
+        assert!((1.8..2.3).contains(&cv2), "cv2 {cv2}");
+        assert!((2.7..3.3).contains(&base), "base {base}");
+        let rendered = render_fig7(&sweep);
+        assert!(rendered.contains("bytes copied"));
+    }
+
+    #[test]
+    fn rest_figure_renders_all_scenarios() {
+        let sizing = Sizing::small();
+        let sweep = Sweep::run(&sizing, 1, &[Workload::ReadOnly50]);
+        let fig = render_rest_figure(&sweep, &[Workload::ReadOnly50], "Figure 5 (subset)");
+        for s in Scenario::ALL {
+            assert!(fig.contains(s.label()), "{}", s.label());
+        }
+        assert!(fig.contains("REST breakdown"));
+    }
+}

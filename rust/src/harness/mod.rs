@@ -1,0 +1,19 @@
+//! The benchmark harness: regenerates every table and figure of the
+//! paper's evaluation (§5) from the simulated stack.
+//!
+//! * [`scenarios`] — the six deployment scenarios of §4.2 and the
+//!   calibrated sizing/latency parameters (DESIGN.md §7).
+//! * [`runner`] — runs one (scenario × workload) cell: input prep outside
+//!   the measurement window, N repetitions with jitter, validation.
+//! * [`traces`] — Tables 1 and 3 (operation traces).
+//! * [`tables`] — Tables 2, 5, 6, 7, 8.
+//! * [`figures`] — Figures 5, 6, 7 (ASCII bar charts + CSV-ish series).
+
+pub mod scenarios;
+pub mod runner;
+pub mod traces;
+pub mod tables;
+pub mod figures;
+
+pub use runner::{run_cell, CellResult, Workload};
+pub use scenarios::{Scenario, Sizing};

@@ -1,0 +1,256 @@
+//! Run one (scenario × workload) cell with repetitions.
+
+use super::scenarios::{build_env, Scenario, Sizing};
+use crate::metrics::OpCounts;
+use crate::query::datagen::StarSchema;
+use crate::workloads::{copy, input, readonly, teragen, terasort, tpcds, wordcount, WorkloadReport};
+
+/// The paper's seven workload columns (Table 4 / Table 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    ReadOnly50,
+    ReadOnly500,
+    Teragen,
+    Copy,
+    Wordcount,
+    Terasort,
+    TpcDs,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 7] = [
+        Workload::ReadOnly50,
+        Workload::ReadOnly500,
+        Workload::Teragen,
+        Workload::Copy,
+        Workload::Wordcount,
+        Workload::Terasort,
+        Workload::TpcDs,
+    ];
+
+    /// Micro-benchmarks (paper Fig. 5) vs macro (Fig. 6).
+    pub const MICRO: [Workload; 4] = [
+        Workload::ReadOnly50,
+        Workload::ReadOnly500,
+        Workload::Teragen,
+        Workload::Copy,
+    ];
+    pub const MACRO: [Workload; 3] = [Workload::Wordcount, Workload::Terasort, Workload::TpcDs];
+    /// Workloads with a write phase (paper Fig. 7).
+    pub const WRITE: [Workload; 4] = [
+        Workload::Teragen,
+        Workload::Copy,
+        Workload::Wordcount,
+        Workload::Terasort,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Workload::ReadOnly50 => "Read-Only 50GB",
+            Workload::ReadOnly500 => "Read-Only 500GB",
+            Workload::Teragen => "Teragen",
+            Workload::Copy => "Copy",
+            Workload::Wordcount => "Wordcount",
+            Workload::Terasort => "Terasort",
+            Workload::TpcDs => "TPC-DS",
+        }
+    }
+
+    /// The compute-rate calibration key.
+    pub fn rate_key(self) -> &'static str {
+        match self {
+            Workload::ReadOnly50 | Workload::ReadOnly500 => "readonly",
+            Workload::Teragen => "teragen",
+            Workload::Copy => "copy",
+            Workload::Wordcount => "wordcount",
+            Workload::Terasort => "terasort",
+            Workload::TpcDs => "tpcds",
+        }
+    }
+}
+
+/// One measured cell: mean/stddev runtime over `runs`, op counts from the
+/// first run (op counts are deterministic; only latency jitter varies).
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub scenario: Scenario,
+    pub workload: Workload,
+    pub runtime_mean_s: f64,
+    pub runtime_std_s: f64,
+    pub ops: OpCounts,
+    pub valid: bool,
+    pub validation: String,
+    pub runs: usize,
+}
+
+/// Execute one repetition; returns the workload report.
+fn run_once(scenario: Scenario, workload: Workload, sizing: &Sizing, seed: u64) -> WorkloadReport {
+    let rate_key = workload.rate_key();
+    match workload {
+        Workload::ReadOnly50 | Workload::ReadOnly500 => {
+            let parts = if workload == Workload::ReadOnly500 {
+                sizing.ro500_parts
+            } else {
+                sizing.parts
+            };
+            let mut env = build_env(scenario, sizing, rate_key, sizing.data_scale, parts, seed);
+            let (lines, _, _) = input::upload_text_dataset(
+                &env.store,
+                "res",
+                "in.txt",
+                parts,
+                sizing.part_bytes,
+                seed,
+            );
+            readonly::run(&mut env, "in.txt", lines)
+        }
+        Workload::Teragen => {
+            let mut env = build_env(
+                scenario,
+                sizing,
+                rate_key,
+                sizing.data_scale,
+                sizing.parts,
+                seed,
+            );
+            teragen::run(&mut env, "teraout")
+        }
+        Workload::Copy => {
+            let mut env = build_env(
+                scenario,
+                sizing,
+                rate_key,
+                sizing.data_scale,
+                sizing.parts,
+                seed,
+            );
+            input::upload_text_dataset(
+                &env.store,
+                "res",
+                "src",
+                sizing.parts,
+                sizing.part_bytes,
+                seed,
+            );
+            copy::run(&mut env, "src", "dst")
+        }
+        Workload::Wordcount => {
+            let mut env = build_env(
+                scenario,
+                sizing,
+                rate_key,
+                sizing.data_scale,
+                sizing.parts,
+                seed,
+            );
+            let (_, words, _) = input::upload_text_dataset(
+                &env.store,
+                "res",
+                "corpus",
+                sizing.parts,
+                sizing.part_bytes,
+                seed,
+            );
+            wordcount::run(&mut env, "corpus", "wc-out", words)
+        }
+        Workload::Terasort => {
+            let mut env = build_env(
+                scenario,
+                sizing,
+                rate_key,
+                sizing.data_scale,
+                sizing.parts,
+                seed,
+            );
+            input::upload_tera_dataset(
+                &env.store,
+                "res",
+                "tin",
+                sizing.parts,
+                sizing.part_bytes,
+                seed,
+            );
+            terasort::run(&mut env, "tin", "tsorted")
+        }
+        Workload::TpcDs => {
+            let mut env = build_env(
+                scenario,
+                sizing,
+                rate_key,
+                sizing.tpcds_scale,
+                sizing.tpcds_shards,
+                seed,
+            );
+            let schema = StarSchema::new(seed, sizing.tpcds_shards, sizing.tpcds_rows);
+            tpcds::upload_star_schema(&env, "sales", &schema);
+            tpcds::run(&mut env, "sales", &schema)
+        }
+    }
+}
+
+/// Run a cell `runs` times with distinct seeds; aggregate.
+pub fn run_cell(scenario: Scenario, workload: Workload, sizing: &Sizing, runs: usize) -> CellResult {
+    assert!(runs >= 1);
+    let mut times = Vec::with_capacity(runs);
+    let mut ops = OpCounts::default();
+    let mut valid = true;
+    let mut validation = String::new();
+    for r in 0..runs {
+        let seed = 0xBEEF ^ (r as u64) << 8;
+        let report = run_once(scenario, workload, sizing, seed);
+        times.push(report.runtime.as_secs_f64());
+        if r == 0 {
+            ops = report.ops;
+            valid = report.is_valid();
+            validation = match &report.validation {
+                Ok(s) => s.clone(),
+                Err(s) => format!("INVALID: {s}"),
+            };
+        }
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times
+        .iter()
+        .map(|t| (t - mean) * (t - mean))
+        .sum::<f64>()
+        / times.len() as f64;
+    CellResult {
+        scenario,
+        workload,
+        runtime_mean_s: mean,
+        runtime_std_s: var.sqrt(),
+        ops,
+        valid,
+        validation,
+        runs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OpKind;
+
+    #[test]
+    fn small_cell_runs_and_validates() {
+        let sizing = Sizing::small();
+        let cell = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+        assert!(cell.valid, "{}", cell.validation);
+        assert!(cell.runtime_mean_s > 0.0);
+        assert_eq!(cell.ops.get(OpKind::CopyObject), 0);
+    }
+
+    #[test]
+    fn stocator_beats_legacy_on_ops_small() {
+        let sizing = Sizing::small();
+        let st = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+        let sw = run_cell(Scenario::HadoopSwiftBase, Workload::Teragen, &sizing, 1);
+        let s3 = run_cell(Scenario::S3aBase, Workload::Teragen, &sizing, 1);
+        assert!(st.valid && sw.valid && s3.valid);
+        assert!(st.ops.total() < sw.ops.total());
+        assert!(sw.ops.total() < s3.ops.total());
+        // And on simulated runtime:
+        assert!(st.runtime_mean_s < sw.runtime_mean_s);
+        assert!(st.runtime_mean_s < s3.runtime_mean_s);
+    }
+}

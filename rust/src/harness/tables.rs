@@ -1,0 +1,356 @@
+//! Tables 2, 5, 6, 7, 8 of the paper, rendered with measured-vs-paper
+//! columns.
+
+use super::runner::{run_cell, CellResult, Workload};
+use super::scenarios::{Scenario, Sizing};
+use crate::committer::{Committer, JobContext, TaskAttemptContext};
+use crate::connectors::naming::AttemptId;
+use crate::metrics::{OpCounts, OpKind};
+use crate::objectstore::{cost_usd, ObjectStore, StoreConfig};
+use crate::simclock::SimInstant;
+use crate::util::table::Table;
+
+/// Paper Table 2 reference values: (scenario, HEAD, PUT, COPY, DELETE,
+/// GET Container, total).
+pub const TABLE2_PAPER: [(&str, u64, u64, u64, u64, u64, u64); 3] = [
+    ("Hadoop-Swift", 25, 7, 3, 8, 5, 48),
+    ("S3a", 71, 5, 2, 4, 35, 117),
+    ("Stocator", 4, 3, 0, 0, 1, 8),
+];
+
+/// Run the paper's Fig. 3 one-task program (single output object) on one
+/// connector scenario; returns the REST op breakdown.
+pub fn table2_single_object(scenario: Scenario) -> OpCounts {
+    let store = ObjectStore::new(StoreConfig::instant_strong());
+    store.create_container("res", SimInstant::EPOCH).0.unwrap();
+    let fs = scenario.connector(store.clone(), u64::MAX);
+    let before = store.counters();
+    let mut ctx = crate::fs::OpCtx::new(SimInstant::EPOCH);
+    let out = crate::fs::Path::parse(&format!("{}://res/data.txt", scenario.scheme())).unwrap();
+    let job = JobContext::new(out.clone());
+    let committer = Committer::new(scenario.algorithm());
+    // Spark's checkOutputSpecs: the output must not already exist.
+    assert!(!fs.exists(&out, &mut ctx));
+    committer.setup_job(&*fs, &job, &mut ctx).unwrap();
+    let task = TaskAttemptContext::new(&job, AttemptId::new("201702221313", "0000", 1, 1));
+    committer.setup_task(&*fs, &task, &mut ctx).unwrap();
+    committer
+        .write_part(&*fs, &task, "part-00001", b"single object".to_vec(), &mut ctx)
+        .unwrap();
+    if committer.needs_task_commit(&*fs, &task, &mut ctx) {
+        committer.commit_task(&*fs, &task, &mut ctx).unwrap();
+    }
+    committer.commit_job(&*fs, &job, &mut ctx).unwrap();
+    // The consumer side: probe the dataset, check _SUCCESS, list parts —
+    // the read protocol of the next job in the pipeline (paper §3.2).
+    let _ = fs.get_file_status(&out, &mut ctx);
+    let _ = fs.get_file_status(&out.child("_SUCCESS"), &mut ctx);
+    let _ = fs.list_status(&out, &mut ctx);
+    store.counters().since(&before)
+}
+
+/// Render Table 2 (measured vs paper).
+pub fn render_table2() -> String {
+    let mut t = Table::new(
+        "Table 2 — REST ops for a one-object Spark job (measured | paper)",
+        &["connector", "HEAD", "PUT", "COPY", "DELETE", "GET Cont.", "total", "paper total"],
+    );
+    for (scenario, paper) in [
+        (Scenario::HadoopSwiftBase, &TABLE2_PAPER[0]),
+        (Scenario::S3aBase, &TABLE2_PAPER[1]),
+        (Scenario::Stocator, &TABLE2_PAPER[2]),
+    ] {
+        let c = table2_single_object(scenario);
+        t.row(vec![
+            paper.0.to_string(),
+            c.get(OpKind::HeadObject).to_string(),
+            c.get(OpKind::PutObject).to_string(),
+            c.get(OpKind::CopyObject).to_string(),
+            c.get(OpKind::DeleteObject).to_string(),
+            c.get(OpKind::GetContainer).to_string(),
+            c.total().to_string(),
+            paper.6.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Paper Table 5 reference runtimes (seconds): rows in Scenario::ALL
+/// order, columns in Workload::ALL order.
+pub const TABLE5_PAPER: [[f64; 7]; 6] = [
+    [37.80, 393.10, 624.60, 622.10, 244.10, 681.90, 101.50],
+    [33.30, 254.80, 699.50, 705.10, 193.50, 746.00, 104.50],
+    [34.60, 254.10, 38.80, 68.20, 106.60, 84.20, 111.40],
+    [37.10, 395.00, 171.30, 175.20, 166.90, 222.70, 102.30],
+    [35.30, 255.10, 169.70, 185.40, 111.90, 221.90, 104.00],
+    [35.20, 254.20, 56.80, 86.50, 112.00, 105.20, 103.10],
+];
+
+/// The full sweep backing Tables 5-8 and Figures 5-7.
+pub struct Sweep {
+    pub cells: Vec<CellResult>,
+    pub sizing: Sizing,
+}
+
+impl Sweep {
+    /// Run every (scenario × workload) cell.
+    pub fn run(sizing: &Sizing, runs: usize, workloads: &[Workload]) -> Sweep {
+        let mut cells = Vec::new();
+        for &w in workloads {
+            for s in Scenario::ALL {
+                eprintln!("[sweep] {} / {} ...", s.label(), w.label());
+                cells.push(run_cell(s, w, sizing, runs));
+            }
+        }
+        Sweep {
+            cells,
+            sizing: sizing.clone(),
+        }
+    }
+
+    pub fn cell(&self, s: Scenario, w: Workload) -> Option<&CellResult> {
+        self.cells
+            .iter()
+            .find(|c| c.scenario == s && c.workload == w)
+    }
+
+    fn workloads(&self) -> Vec<Workload> {
+        let mut ws = Vec::new();
+        for c in &self.cells {
+            if !ws.contains(&c.workload) {
+                ws.push(c.workload);
+            }
+        }
+        ws
+    }
+
+    /// Table 5: average runtimes ± std.
+    pub fn render_table5(&self) -> String {
+        let ws = self.workloads();
+        let mut header: Vec<&str> = vec!["scenario"];
+        let labels: Vec<String> = ws.iter().map(|w| w.label().to_string()).collect();
+        header.extend(labels.iter().map(|s| s.as_str()));
+        let mut t = Table::new(
+            "Table 5 — average runtime, seconds (virtual clock; paper value in parens)",
+            &header,
+        );
+        for (si, s) in Scenario::ALL.iter().enumerate() {
+            let mut row = vec![s.label().to_string()];
+            for w in &ws {
+                let wi = Workload::ALL.iter().position(|x| x == w).unwrap();
+                match self.cell(*s, *w) {
+                    Some(c) => row.push(format!(
+                        "{:.1}±{:.1} ({:.1})",
+                        c.runtime_mean_s, c.runtime_std_s, TABLE5_PAPER[si][wi]
+                    )),
+                    None => row.push("-".into()),
+                }
+            }
+            t.row(row);
+        }
+        t.render()
+    }
+
+    /// Table 6: speedup of each scenario relative to Stocator (paper in
+    /// parens). Paper convention: value = scenario_time / stocator_time.
+    pub fn render_table6(&self) -> String {
+        let ws = self.workloads();
+        let mut header: Vec<&str> = vec!["scenario"];
+        let labels: Vec<String> = ws.iter().map(|w| w.label().to_string()).collect();
+        header.extend(labels.iter().map(|s| s.as_str()));
+        let mut t = Table::new(
+            "Table 6 — workload speedups when using Stocator (paper in parens)",
+            &header,
+        );
+        for (si, s) in Scenario::ALL.iter().enumerate() {
+            let mut row = vec![s.label().to_string()];
+            for w in &ws {
+                let wi = Workload::ALL.iter().position(|x| x == w).unwrap();
+                let stoc = self.cell(Scenario::Stocator, *w);
+                let cell = self.cell(*s, *w);
+                match (stoc, cell) {
+                    (Some(st), Some(c)) if st.runtime_mean_s > 0.0 => {
+                        let speedup = c.runtime_mean_s / st.runtime_mean_s;
+                        let paper = TABLE5_PAPER[si][wi] / TABLE5_PAPER[2][wi];
+                        row.push(format!("x{:.2} (x{:.2})", speedup, paper));
+                    }
+                    _ => row.push("-".into()),
+                }
+            }
+            t.row(row);
+        }
+        t.render()
+    }
+
+    /// Table 7: ratio of REST calls vs Stocator.
+    pub fn render_table7(&self) -> String {
+        let ws = self.workloads();
+        let mut header: Vec<&str> = vec!["scenario"];
+        let labels: Vec<String> = ws.iter().map(|w| w.label().to_string()).collect();
+        header.extend(labels.iter().map(|s| s.as_str()));
+        let mut t = Table::new("Table 7 — REST calls relative to Stocator", &header);
+        for s in Scenario::ALL {
+            let mut row = vec![s.label().to_string()];
+            for w in &ws {
+                let stoc = self.cell(Scenario::Stocator, *w);
+                let cell = self.cell(s, *w);
+                match (stoc, cell) {
+                    (Some(st), Some(c)) if st.ops.total() > 0 => {
+                        row.push(format!(
+                            "x{:.2}",
+                            c.ops.total() as f64 / st.ops.total() as f64
+                        ));
+                    }
+                    _ => row.push("-".into()),
+                }
+            }
+            t.row(row);
+        }
+        t.render()
+    }
+
+    /// Table 8: REST-call *cost* relative to Stocator (average of the four
+    /// providers' price sheets).
+    pub fn render_table8(&self) -> String {
+        let ws = self.workloads();
+        let mut header: Vec<&str> = vec!["scenario"];
+        let labels: Vec<String> = ws.iter().map(|w| w.label().to_string()).collect();
+        header.extend(labels.iter().map(|s| s.as_str()));
+        let mut t = Table::new(
+            "Table 8 — REST-call cost relative to Stocator (IBM/AWS/Google/Azure avg)",
+            &header,
+        );
+        for s in Scenario::ALL {
+            let mut row = vec![s.label().to_string()];
+            for w in &ws {
+                let stoc = self.cell(Scenario::Stocator, *w);
+                let cell = self.cell(s, *w);
+                match (stoc, cell) {
+                    (Some(st), Some(c)) => {
+                        let base = cost_usd(&st.ops);
+                        if base > 0.0 {
+                            row.push(format!("x{:.2}", cost_usd(&c.ops) / base));
+                        } else {
+                            row.push("-".into());
+                        }
+                    }
+                    _ => row.push("-".into()),
+                }
+            }
+            t.row(row);
+        }
+        t.render()
+    }
+
+    /// Shape assertions (DESIGN.md §6) — Err lists violations.
+    pub fn check_shape(&self) -> Result<(), Vec<String>> {
+        let mut bad = Vec::new();
+        for c in &self.cells {
+            if !c.valid {
+                bad.push(format!(
+                    "{} / {}: {}",
+                    c.scenario.label(),
+                    c.workload.label(),
+                    c.validation
+                ));
+            }
+        }
+        // Stocator has the fewest ops everywhere.
+        for w in self.workloads() {
+            if let Some(st) = self.cell(Scenario::Stocator, w) {
+                for s in Scenario::ALL {
+                    if s == Scenario::Stocator {
+                        continue;
+                    }
+                    if let Some(c) = self.cell(s, w) {
+                        if c.ops.total() < st.ops.total() {
+                            bad.push(format!(
+                                "{}: {} issued fewer ops than Stocator",
+                                w.label(),
+                                s.label()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        // Teragen speedups per DESIGN.md §6.
+        if let (Some(st), Some(base), Some(cv2), Some(fu)) = (
+            self.cell(Scenario::Stocator, Workload::Teragen),
+            self.cell(Scenario::S3aBase, Workload::Teragen),
+            self.cell(Scenario::S3aCv2, Workload::Teragen),
+            self.cell(Scenario::S3aCv2Fu, Workload::Teragen),
+        ) {
+            let b = base.runtime_mean_s / st.runtime_mean_s;
+            let c = cv2.runtime_mean_s / st.runtime_mean_s;
+            let f = fu.runtime_mean_s / st.runtime_mean_s;
+            if b < 10.0 {
+                bad.push(format!("Teragen S3a-Base speedup {b:.1} < 10x"));
+            }
+            if !(2.0..=8.0).contains(&c) {
+                bad.push(format!("Teragen S3a-Cv2 speedup {c:.1} outside 2-8x"));
+            }
+            if !(1.05..=2.5).contains(&f) {
+                bad.push(format!("Teragen S3a-Cv2+FU speedup {f:.1} outside 1.05-2.5x"));
+            }
+        }
+        // Read-only ≈ 1×.
+        if let (Some(st), Some(s3)) = (
+            self.cell(Scenario::Stocator, Workload::ReadOnly50),
+            self.cell(Scenario::S3aBase, Workload::ReadOnly50),
+        ) {
+            let r = s3.runtime_mean_s / st.runtime_mean_s;
+            if !(0.7..=1.4).contains(&r) {
+                bad.push(format!("Read-only S3a/Stocator ratio {r:.2} not ≈1"));
+            }
+        }
+        if bad.is_empty() {
+            Ok(())
+        } else {
+            Err(bad)
+        }
+    }
+}
+
+/// Paper Table 8 row for quick reference in benches.
+pub fn table8_paper_note() -> &'static str {
+    "paper: Teragen cost ratios — H-S Base x8.23, S3a Base x27.82, \
+     H-S Cv2 x5.24, S3a Cv2 x17.59, S3a Cv2+FU x17.55"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_shape_holds() {
+        let sw = table2_single_object(Scenario::HadoopSwiftBase);
+        let s3 = table2_single_object(Scenario::S3aBase);
+        let st = table2_single_object(Scenario::Stocator);
+        // The paper's ordering: Stocator << Swift << S3a.
+        assert!(st.total() < sw.total(), "stocator {st} vs swift {sw}");
+        assert!(sw.total() < s3.total(), "swift {sw} vs s3a {s3}");
+        // Stocator within a hair of the paper's 8 ops, zero COPY/DELETE.
+        assert_eq!(st.get(OpKind::CopyObject), 0);
+        assert_eq!(st.get(OpKind::DeleteObject), 0);
+        assert!(st.total() <= 12, "stocator total {}", st.total());
+        // Legacy connectors rename: COPYs present.
+        assert!(sw.get(OpKind::CopyObject) >= 2);
+        assert!(s3.get(OpKind::CopyObject) >= 2);
+    }
+
+    #[test]
+    fn mini_sweep_tables_render() {
+        let sizing = Sizing::small();
+        let sweep = Sweep::run(&sizing, 1, &[Workload::Teragen, Workload::ReadOnly50]);
+        let t5 = sweep.render_table5();
+        assert!(t5.contains("Stocator"));
+        assert!(t5.contains("Teragen"));
+        let t6 = sweep.render_table6();
+        assert!(t6.contains("x1.00"), "{t6}");
+        let t7 = sweep.render_table7();
+        assert!(t7.contains("x"));
+        let t8 = sweep.render_table8();
+        assert!(t8.contains("x"));
+    }
+}

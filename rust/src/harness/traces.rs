@@ -1,0 +1,155 @@
+//! Tables 1 and 3: operation traces for the paper's two worked examples.
+
+use crate::committer::{CommitAlgorithm, Committer, JobContext, TaskAttemptContext};
+use crate::connectors::naming::AttemptId;
+use crate::connectors::Stocator;
+use crate::fs::hdfs::Hdfs;
+use crate::fs::{FileSystem, OpCtx, Path};
+use crate::objectstore::{ObjectStore, StoreConfig};
+use crate::simclock::SimInstant;
+use std::sync::Arc;
+
+/// Table 1: the file-system operations Spark executes for the Fig. 3
+/// one-task program on HDFS. Returns the trace lines.
+pub fn table1_trace() -> Vec<String> {
+    let fs = Hdfs::new();
+    let mut ctx = OpCtx::traced(SimInstant::EPOCH);
+    let out = Path::parse("hdfs://res/data.txt").unwrap();
+    let job = JobContext::new(out);
+    let committer = Committer::new(CommitAlgorithm::V1);
+    committer.setup_job(&*fs, &job, &mut ctx).unwrap();
+    let task = TaskAttemptContext::new(&job, AttemptId::new("201702221313", "0000", 1, 1));
+    committer.setup_task(&*fs, &task, &mut ctx).unwrap();
+    committer
+        .write_part(&*fs, &task, "part-00001", b"output".to_vec(), &mut ctx)
+        .unwrap();
+    if committer.needs_task_commit(&*fs, &task, &mut ctx) {
+        committer.commit_task(&*fs, &task, &mut ctx).unwrap();
+    }
+    committer.commit_job(&*fs, &job, &mut ctx).unwrap();
+    ctx.take_trace()
+}
+
+/// One scenario of Table 3 on Stocator: which REST operations reach the
+/// object store for the Fig. 4 three-task program, with `extra_attempts`
+/// duplicate executions of task 2 and optional cleanup of the losers.
+/// Returns (trace lines, final object names).
+pub fn table3_trace(extra_attempts: u32, cleanup: bool) -> (Vec<String>, Vec<String>) {
+    let store = ObjectStore::new(StoreConfig::instant_strong());
+    store.create_container("res", SimInstant::EPOCH).0.unwrap();
+    let fs: Arc<dyn FileSystem> = Stocator::with_defaults(store.clone());
+    let mut ctx = OpCtx::traced(SimInstant::EPOCH);
+    let out = Path::parse("swift2d://res/data.txt").unwrap();
+    let job = JobContext::new(out);
+    let committer = Committer::new(CommitAlgorithm::V1);
+    committer.setup_job(&*fs, &job, &mut ctx).unwrap();
+
+    // Tasks 0 and 1 run once; task 2 runs 1 + extra_attempts times.
+    let mut winners = Vec::new();
+    for task_id in 0..3u32 {
+        let attempts = if task_id == 2 { 1 + extra_attempts } else { 1 };
+        for a in 0..attempts {
+            let tac = TaskAttemptContext::new(
+                &job,
+                AttemptId::new("201512062056", "0000", task_id, a),
+            );
+            committer.setup_task(&*fs, &tac, &mut ctx).unwrap();
+            committer
+                .write_part(
+                    &*fs,
+                    &tac,
+                    &format!("part-{task_id:05}"),
+                    format!("data-{task_id}").into_bytes(),
+                    &mut ctx,
+                )
+                .unwrap();
+        }
+        // Attempt `attempts - 2` wins when there are duplicates (mirrors
+        // the paper: attempt 1 of 3 succeeds); otherwise attempt 0.
+        let winner = attempts.saturating_sub(2).min(attempts - 1);
+        winners.push((task_id, winner, attempts));
+    }
+    for &(task_id, winner, attempts) in &winners {
+        let wtac = TaskAttemptContext::new(
+            &job,
+            AttemptId::new("201512062056", "0000", task_id, winner),
+        );
+        committer.commit_task(&*fs, &wtac, &mut ctx).unwrap();
+        if cleanup {
+            for a in 0..attempts {
+                if a != winner {
+                    let ltac = TaskAttemptContext::new(
+                        &job,
+                        AttemptId::new("201512062056", "0000", task_id, a),
+                    );
+                    committer.abort_task(&*fs, &ltac, &mut ctx).unwrap();
+                }
+            }
+        }
+    }
+    committer.commit_job(&*fs, &job, &mut ctx).unwrap();
+    let trace = ctx.take_trace();
+    let names = store.debug_names("res", "data.txt/");
+    (trace, names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_the_eight_steps() {
+        let trace = table1_trace();
+        let joined = trace.join("\n");
+        // Steps 1-2: recursive mkdirs; step 3: temp write; steps 4-7: list
+        // + two renames; step 8: _SUCCESS.
+        assert!(joined.contains("mkdirs: hdfs://res/data.txt/_temporary/0"));
+        assert!(joined.contains("_temporary/attempt_201702221313_0000_m_000001_1"));
+        assert!(joined.contains("create: hdfs://res/data.txt/_temporary"));
+        assert_eq!(trace.iter().filter(|l| l.starts_with("rename:")).count(), 2);
+        assert!(joined.contains("create: hdfs://res/data.txt/_SUCCESS"));
+    }
+
+    #[test]
+    fn table3_simple_run_lines_1_3_8_9() {
+        let (trace, names) = table3_trace(0, false);
+        let puts: Vec<&String> = trace
+            .iter()
+            .filter(|l| l.contains("(intercept) PUT"))
+            .collect();
+        assert_eq!(puts.len(), 3, "{trace:?}");
+        assert!(names
+            .contains(&"data.txt/part-00000_attempt_201512062056_0000_m_000000_0".to_string()));
+        assert!(names.contains(&"data.txt/_SUCCESS".to_string()));
+        // Line 8: no COPY/DELETE during commits.
+        assert!(!trace.iter().any(|l| l.contains("COPY")));
+        assert!(!trace.iter().any(|l| l.contains("DELETE") && !l.contains("intercept")));
+    }
+
+    #[test]
+    fn table3_speculation_with_cleanup_lines_1_9() {
+        let (trace, names) = table3_trace(2, true);
+        // 5 PUTs: tasks 0, 1 once; task 2 three times.
+        let puts = trace.iter().filter(|l| l.contains("(intercept) PUT")).count();
+        assert_eq!(puts, 5, "{trace:?}");
+        // 2 DELETEs: losers of task 2 aborted.
+        let dels = trace
+            .iter()
+            .filter(|l| l.contains("(intercept) DELETE"))
+            .count();
+        assert_eq!(dels, 2);
+        // Exactly the winner's object remains for task 2 (attempt 1).
+        let task2: Vec<&String> = names.iter().filter(|n| n.contains("part-00002")).collect();
+        assert_eq!(task2.len(), 1);
+        assert!(task2[0].ends_with("m_000002_1"));
+    }
+
+    #[test]
+    fn table3_speculation_without_cleanup_keeps_duplicates() {
+        let (_, names) = table3_trace(2, false);
+        let task2 = names.iter().filter(|n| n.contains("part-00002")).count();
+        assert_eq!(task2, 3, "all three attempts' objects remain");
+        // But a Stocator read still sees exactly one part-2 (dedup) —
+        // verified in connectors::stocator tests.
+    }
+}

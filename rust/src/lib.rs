@@ -1,0 +1,41 @@
+//! # stocator — a reproduction of "Stocator: A High Performance Object Store
+//! # Connector for Spark" (Vernik et al., 2017)
+//!
+//! This crate contains the full simulated stack described in DESIGN.md:
+//!
+//! * [`objectstore`] — an in-memory, eventually-consistent cloud object
+//!   store with REST-operation accounting, a virtual-time latency model and
+//!   per-provider pricing models.
+//! * [`fs`] — the Hadoop `FileSystem` abstraction (paths, statuses, the
+//!   trait all connectors implement) plus an in-memory HDFS-like baseline.
+//! * [`connectors`] — the three storage connectors under study:
+//!   Hadoop-Swift, S3a (with optional fast upload) and Stocator itself.
+//! * [`committer`] — Hadoop's `FileOutputCommitter` algorithm versions 1
+//!   and 2, and the Databricks `DirectOutputCommitter` baseline.
+//! * [`spark`] — a Spark-like execution engine: driver, stages, tasks,
+//!   attempt ids, executor slots on a virtual clock, speculative execution
+//!   and fault injection.
+//! * [`columnar`] + [`query`] — a mini Parquet-like columnar format and the
+//!   TPC-DS-subset query engine used by the TPC-DS workload.
+//! * [`workloads`] — Read-only, Teragen, Copy, Wordcount, Terasort, TPC-DS.
+//! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   kernels (`artifacts/*.hlo.txt`) and the pure-Rust fallback.
+//! * [`harness`] — the benchmark harness regenerating every table and
+//!   figure from the paper's evaluation section.
+//!
+//! The paper's contribution — the Stocator commit protocol — lives in
+//! [`connectors::stocator`]; everything else is the substrate it needs.
+
+pub mod util;
+pub mod simclock;
+pub mod objectstore;
+pub mod fs;
+pub mod connectors;
+pub mod committer;
+pub mod spark;
+pub mod columnar;
+pub mod query;
+pub mod workloads;
+pub mod runtime;
+pub mod metrics;
+pub mod harness;

@@ -1,0 +1,190 @@
+//! `stocator-sim` — CLI for the Stocator reproduction.
+//!
+//! Subcommands:
+//! * `trace table1|table3` — print the paper's operation traces.
+//! * `table2` — the one-object REST breakdown vs the paper.
+//! * `run --workload W --scenario S [--small] [--runs N]` — one cell.
+//! * `sweep [--workloads a,b,...] [--runs N] [--small]` — Tables 5-8 and
+//!   Figures 5-7 from one sweep, with the shape check.
+
+use stocator::harness::tables::{render_table2, Sweep};
+use stocator::harness::traces::{table1_trace, table3_trace};
+use stocator::harness::{figures, run_cell, Scenario, Sizing, Workload};
+use stocator::util::cli::Args;
+
+fn parse_scenario(s: &str) -> Option<Scenario> {
+    Scenario::ALL
+        .iter()
+        .copied()
+        .find(|sc| sc.label().eq_ignore_ascii_case(s) || short(sc).eq_ignore_ascii_case(s))
+}
+
+fn short(s: &Scenario) -> &'static str {
+    match s {
+        Scenario::HadoopSwiftBase => "hs-base",
+        Scenario::S3aBase => "s3a-base",
+        Scenario::Stocator => "stocator",
+        Scenario::HadoopSwiftCv2 => "hs-cv2",
+        Scenario::S3aCv2 => "s3a-cv2",
+        Scenario::S3aCv2Fu => "s3a-cv2-fu",
+    }
+}
+
+fn parse_workload(s: &str) -> Option<Workload> {
+    match s.to_ascii_lowercase().as_str() {
+        "readonly" | "readonly50" | "ro50" => Some(Workload::ReadOnly50),
+        "readonly500" | "ro500" => Some(Workload::ReadOnly500),
+        "teragen" => Some(Workload::Teragen),
+        "copy" => Some(Workload::Copy),
+        "wordcount" => Some(Workload::Wordcount),
+        "terasort" => Some(Workload::Terasort),
+        "tpcds" | "tpc-ds" => Some(Workload::TpcDs),
+        _ => None,
+    }
+}
+
+const USAGE: &str = "\
+stocator-sim — Stocator (Vernik et al. 2017) reproduction
+
+USAGE:
+  stocator-sim trace table1
+  stocator-sim trace table3 [--attempts N] [--no-cleanup]
+  stocator-sim table2
+  stocator-sim run --workload W --scenario S [--small] [--runs N]
+  stocator-sim sweep [--workloads w1,w2] [--runs N] [--small]
+
+  scenarios: hs-base s3a-base stocator hs-cv2 s3a-cv2 s3a-cv2-fu
+  workloads: ro50 ro500 teragen copy wordcount terasort tpcds
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1), &["small", "paper", "no-cleanup"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let sizing = if args.flag("small") {
+        Sizing::small()
+    } else {
+        Sizing::paper()
+    };
+    match args.subcommand.as_deref() {
+        Some("trace") => match args.positionals.first().map(String::as_str) {
+            Some("table1") => {
+                println!("Table 1 — file operations for a one-task program on HDFS:");
+                for (i, line) in table1_trace().iter().enumerate() {
+                    println!("  {:>2}. {line}", i + 1);
+                }
+            }
+            Some("table3") => {
+                let attempts = args.opt_u64("attempts", 2).unwrap_or(2) as u32;
+                let cleanup = !args.flag("no-cleanup");
+                let (trace, names) = table3_trace(attempts, cleanup);
+                println!(
+                    "Table 3 — Stocator REST trace ({attempts} extra attempts of task 2, cleanup={cleanup}):"
+                );
+                for line in &trace {
+                    println!("  {line}");
+                }
+                println!("final objects:");
+                for n in names {
+                    println!("  {n}");
+                }
+            }
+            other => {
+                eprintln!("unknown trace {other:?}\n{USAGE}");
+                std::process::exit(2);
+            }
+        },
+        Some("table2") => print!("{}", render_table2()),
+        Some("run") => {
+            let Some(w) = args.opt("workload").and_then(parse_workload) else {
+                eprintln!("--workload required\n{USAGE}");
+                std::process::exit(2);
+            };
+            let Some(s) = args.opt("scenario").and_then(parse_scenario) else {
+                eprintln!("--scenario required\n{USAGE}");
+                std::process::exit(2);
+            };
+            let runs = args.opt_u64("runs", 1).unwrap_or(1) as usize;
+            let cell = run_cell(s, w, &sizing, runs);
+            println!(
+                "{} / {}: runtime {:.2}s ± {:.2}s over {} runs",
+                s.label(),
+                w.label(),
+                cell.runtime_mean_s,
+                cell.runtime_std_s,
+                cell.runs
+            );
+            println!("ops: {}", cell.ops);
+            println!("validation: {}", cell.validation);
+            if !cell.valid {
+                std::process::exit(1);
+            }
+        }
+        Some("sweep") => {
+            let runs = args.opt_u64("runs", 3).unwrap_or(3) as usize;
+            let workloads: Vec<Workload> = match args.opt("workloads") {
+                Some(list) => list
+                    .split(',')
+                    .map(|w| {
+                        parse_workload(w).unwrap_or_else(|| {
+                            eprintln!("unknown workload '{w}'");
+                            std::process::exit(2);
+                        })
+                    })
+                    .collect(),
+                None => Workload::ALL.to_vec(),
+            };
+            let sweep = Sweep::run(&sizing, runs, &workloads);
+            println!("{}", sweep.render_table5());
+            println!("{}", sweep.render_table6());
+            println!("{}", sweep.render_table7());
+            println!("{}", sweep.render_table8());
+            let micro: Vec<Workload> = workloads
+                .iter()
+                .copied()
+                .filter(|w| Workload::MICRO.contains(w))
+                .collect();
+            if !micro.is_empty() {
+                println!(
+                    "{}",
+                    figures::render_rest_figure(
+                        &sweep,
+                        &micro,
+                        "Figure 5 — micro-benchmark REST calls"
+                    )
+                );
+            }
+            let macro_w: Vec<Workload> = workloads
+                .iter()
+                .copied()
+                .filter(|w| Workload::MACRO.contains(w))
+                .collect();
+            if !macro_w.is_empty() {
+                println!(
+                    "{}",
+                    figures::render_rest_figure(
+                        &sweep,
+                        &macro_w,
+                        "Figure 6 — macro-benchmark REST calls"
+                    )
+                );
+            }
+            println!("{}", figures::render_fig7(&sweep));
+            match sweep.check_shape() {
+                Ok(()) => println!("shape check: OK (all DESIGN.md §6 assertions hold)"),
+                Err(violations) => {
+                    println!("shape check: {} violation(s)", violations.len());
+                    for v in violations {
+                        println!("  - {v}");
+                    }
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => print!("{USAGE}"),
+    }
+}

@@ -1,0 +1,269 @@
+//! REST-operation and byte accounting.
+//!
+//! The paper's evaluation is largely *counting*: how many REST operations of
+//! each type a connector issues (Tables 2 and 7, Figures 5 and 6) and how
+//! many bytes are read / written / copied on the object store (Figure 7).
+//! This module is the single source of truth for those counters.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The REST operation types the paper breaks out (Table 2), plus container
+/// HEAD which the connectors also issue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    HeadObject,
+    GetObject,
+    PutObject,
+    CopyObject,
+    DeleteObject,
+    GetContainer,
+    HeadContainer,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 7] = [
+        OpKind::HeadObject,
+        OpKind::GetObject,
+        OpKind::PutObject,
+        OpKind::CopyObject,
+        OpKind::DeleteObject,
+        OpKind::GetContainer,
+        OpKind::HeadContainer,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::HeadObject => "HEAD Object",
+            OpKind::GetObject => "GET Object",
+            OpKind::PutObject => "PUT Object",
+            OpKind::CopyObject => "COPY Object",
+            OpKind::DeleteObject => "DELETE Object",
+            OpKind::GetContainer => "GET Container",
+            OpKind::HeadContainer => "HEAD Container",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            OpKind::HeadObject => 0,
+            OpKind::GetObject => 1,
+            OpKind::PutObject => 2,
+            OpKind::CopyObject => 3,
+            OpKind::DeleteObject => 4,
+            OpKind::GetContainer => 5,
+            OpKind::HeadContainer => 6,
+        }
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Thread-safe live counters, attached to an [`crate::objectstore::ObjectStore`].
+#[derive(Debug, Default)]
+pub struct LiveCounters {
+    ops: [AtomicU64; 7],
+    bytes_read: AtomicU64,
+    bytes_written: AtomicU64,
+    bytes_copied: AtomicU64,
+}
+
+impl LiveCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record_op(&self, kind: OpKind) {
+        self.ops[kind.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_read(&self, bytes: u64) {
+        self.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_write(&self, bytes: u64) {
+        self.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_copy(&self, bytes: u64) {
+        self.bytes_copied.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Snapshot the current totals.
+    pub fn snapshot(&self) -> OpCounts {
+        OpCounts {
+            ops: std::array::from_fn(|i| self.ops[i].load(Ordering::Relaxed)),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An immutable snapshot of counters; supports diffing so a harness run can
+/// measure exactly the ops a workload issued.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct OpCounts {
+    ops: [u64; 7],
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub bytes_copied: u64,
+}
+
+impl OpCounts {
+    pub fn get(&self, kind: OpKind) -> u64 {
+        self.ops[kind.index()]
+    }
+
+    pub fn set(&mut self, kind: OpKind, v: u64) {
+        self.ops[kind.index()] = v;
+    }
+
+    pub fn add(&mut self, kind: OpKind, v: u64) {
+        self.ops[kind.index()] += v;
+    }
+
+    /// Total REST operations of all types.
+    pub fn total(&self) -> u64 {
+        self.ops.iter().sum()
+    }
+
+    /// Counter-wise difference `self - earlier` (saturating).
+    pub fn since(&self, earlier: &OpCounts) -> OpCounts {
+        OpCounts {
+            ops: std::array::from_fn(|i| self.ops[i].saturating_sub(earlier.ops[i])),
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+            bytes_written: self.bytes_written.saturating_sub(earlier.bytes_written),
+            bytes_copied: self.bytes_copied.saturating_sub(earlier.bytes_copied),
+        }
+    }
+
+    /// Counter-wise sum.
+    pub fn plus(&self, other: &OpCounts) -> OpCounts {
+        OpCounts {
+            ops: std::array::from_fn(|i| self.ops[i] + other.ops[i]),
+            bytes_read: self.bytes_read + other.bytes_read,
+            bytes_written: self.bytes_written + other.bytes_written,
+            bytes_copied: self.bytes_copied + other.bytes_copied,
+        }
+    }
+
+    /// Render the Table-2-style one-line breakdown.
+    pub fn breakdown(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for k in OpKind::ALL {
+            let n = self.get(k);
+            if n > 0 {
+                parts.push(format!("{}={}", k.name(), n));
+            }
+        }
+        if parts.is_empty() {
+            "no ops".to_string()
+        } else {
+            format!("{} (total {})", parts.join(", "), self.total())
+        }
+    }
+}
+
+impl fmt::Display for OpCounts {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.breakdown())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let live = LiveCounters::new();
+        live.record_op(OpKind::PutObject);
+        live.record_op(OpKind::PutObject);
+        live.record_op(OpKind::HeadObject);
+        live.record_write(100);
+        live.record_read(40);
+        live.record_copy(7);
+        let s = live.snapshot();
+        assert_eq!(s.get(OpKind::PutObject), 2);
+        assert_eq!(s.get(OpKind::HeadObject), 1);
+        assert_eq!(s.get(OpKind::GetObject), 0);
+        assert_eq!(s.total(), 3);
+        assert_eq!(s.bytes_written, 100);
+        assert_eq!(s.bytes_read, 40);
+        assert_eq!(s.bytes_copied, 7);
+    }
+
+    #[test]
+    fn diffing_isolates_a_window() {
+        let live = LiveCounters::new();
+        live.record_op(OpKind::GetObject);
+        let before = live.snapshot();
+        live.record_op(OpKind::GetObject);
+        live.record_op(OpKind::DeleteObject);
+        live.record_write(50);
+        let after = live.snapshot();
+        let d = after.since(&before);
+        assert_eq!(d.get(OpKind::GetObject), 1);
+        assert_eq!(d.get(OpKind::DeleteObject), 1);
+        assert_eq!(d.total(), 2);
+        assert_eq!(d.bytes_written, 50);
+    }
+
+    #[test]
+    fn plus_sums_counterwise() {
+        let mut a = OpCounts::default();
+        a.add(OpKind::PutObject, 3);
+        a.bytes_written = 10;
+        let mut b = OpCounts::default();
+        b.add(OpKind::PutObject, 4);
+        b.add(OpKind::HeadObject, 1);
+        b.bytes_read = 5;
+        let c = a.plus(&b);
+        assert_eq!(c.get(OpKind::PutObject), 7);
+        assert_eq!(c.get(OpKind::HeadObject), 1);
+        assert_eq!(c.bytes_written, 10);
+        assert_eq!(c.bytes_read, 5);
+    }
+
+    #[test]
+    fn breakdown_mentions_nonzero_kinds_only() {
+        let mut a = OpCounts::default();
+        a.add(OpKind::PutObject, 3);
+        a.add(OpKind::GetContainer, 1);
+        let s = a.breakdown();
+        assert!(s.contains("PUT Object=3"));
+        assert!(s.contains("GET Container=1"));
+        assert!(!s.contains("COPY"));
+        assert!(s.contains("total 4"));
+        assert_eq!(OpCounts::default().breakdown(), "no ops");
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        use std::sync::Arc;
+        let live = Arc::new(LiveCounters::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let l = live.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        l.record_op(OpKind::HeadObject);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(live.snapshot().get(OpKind::HeadObject), 8000);
+    }
+}

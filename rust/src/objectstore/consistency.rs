@@ -1,0 +1,74 @@
+//! The consistency model (§2.1 of the paper).
+//!
+//! GET/HEAD on an object name are read-after-write consistent (as AWS
+//! guaranteed for new objects), but **container listings are eventually
+//! consistent**: a newly created object may not appear in a listing until
+//! `create_lag` has elapsed, and a deleted object may keep appearing until
+//! `delete_lag` has elapsed. These two lags are exactly the window in which
+//! the rename-based committers mis-commit (paper §2.2.2); Stocator's
+//! correctness argument is that it never lists during commit.
+
+use crate::simclock::SimDuration;
+
+/// How container listings lag behind object mutations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConsistencyModel {
+    /// Time until a newly created object becomes visible in listings.
+    pub create_lag: SimDuration,
+    /// Time until a deleted object stops appearing in listings.
+    pub delete_lag: SimDuration,
+}
+
+impl ConsistencyModel {
+    /// Strongly consistent listings (an idealised store; useful as an
+    /// ablation baseline).
+    pub fn strong() -> Self {
+        Self {
+            create_lag: SimDuration::ZERO,
+            delete_lag: SimDuration::ZERO,
+        }
+    }
+
+    /// Typical public-cloud eventual consistency: listings lag mutations by
+    /// a few seconds.
+    pub fn eventual() -> Self {
+        Self {
+            create_lag: SimDuration::from_secs(2),
+            delete_lag: SimDuration::from_secs(2),
+        }
+    }
+
+    /// An adversarial model with long lag windows — used by the
+    /// eventual-consistency failure-injection tests to make the
+    /// rename-committer race all but certain.
+    pub fn adversarial(lag: SimDuration) -> Self {
+        Self {
+            create_lag: lag,
+            delete_lag: lag,
+        }
+    }
+
+    pub fn is_strong(&self) -> bool {
+        self.create_lag == SimDuration::ZERO && self.delete_lag == SimDuration::ZERO
+    }
+}
+
+impl Default for ConsistencyModel {
+    fn default() -> Self {
+        Self::eventual()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets() {
+        assert!(ConsistencyModel::strong().is_strong());
+        assert!(!ConsistencyModel::eventual().is_strong());
+        let a = ConsistencyModel::adversarial(SimDuration::from_secs(60));
+        assert_eq!(a.create_lag, SimDuration::from_secs(60));
+        assert_eq!(a.delete_lag, SimDuration::from_secs(60));
+    }
+}

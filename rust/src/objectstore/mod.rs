@@ -1,0 +1,26 @@
+//! An in-memory cloud object store with the semantics the paper depends on
+//! (§2.1): atomic whole-object PUT, GET/HEAD/COPY/DELETE, flat namespace
+//! with hierarchical *naming* (prefix + delimiter listings), and
+//! **eventually consistent container listings** — a listing may omit a
+//! recently created object and may still include a recently deleted one.
+//!
+//! Every operation is accounted in [`crate::metrics::LiveCounters`] and
+//! costed on the virtual clock by [`latency::LatencyModel`]; REST-op prices
+//! come from [`pricing`]. This is the substitute for the paper's IBM COS
+//! cluster (DESIGN.md §2): connector behaviour depends only on the REST API
+//! semantics and the consistency model, both implemented here.
+
+pub mod object;
+pub mod consistency;
+pub mod container;
+pub mod latency;
+pub mod pricing;
+pub mod multipart;
+pub mod store;
+
+pub use consistency::ConsistencyModel;
+pub use container::{Listing, ObjectSummary};
+pub use latency::LatencyModel;
+pub use object::{Metadata, Object};
+pub use pricing::{cost_usd, Provider, PROVIDERS};
+pub use store::{ObjectStore, StoreConfig, StoreError};

@@ -1,0 +1,157 @@
+//! S3-style multipart upload (used by S3a's "fast upload" /
+//! `S3AFastOutputStream`, paper §3.3). Each part upload is a separate PUT
+//! request; `complete` assembles parts in part-number order into the final
+//! object. The Swift analogue — chunked transfer encoding, which Stocator
+//! uses — is a *single* PUT and is modelled directly in the store.
+
+use super::object::Metadata;
+use std::collections::BTreeMap;
+
+/// Minimum part size for all but the last part (S3 enforces 5 MiB; we keep
+/// the constant configurable because our datasets are byte-scaled).
+pub const DEFAULT_MIN_PART_SIZE: u64 = 5 * 1024 * 1024;
+
+/// An in-flight multipart upload session.
+#[derive(Debug)]
+pub struct MultipartUpload {
+    pub container: String,
+    pub key: String,
+    pub metadata: Metadata,
+    /// part number -> data. BTreeMap gives assembly order for free.
+    parts: BTreeMap<u32, Vec<u8>>,
+}
+
+impl MultipartUpload {
+    pub fn new(container: &str, key: &str, metadata: Metadata) -> Self {
+        Self {
+            container: container.to_string(),
+            key: key.to_string(),
+            metadata,
+            parts: BTreeMap::new(),
+        }
+    }
+
+    /// Upload (or replace) one part.
+    pub fn put_part(&mut self, part_number: u32, data: Vec<u8>) {
+        self.parts.insert(part_number, data);
+    }
+
+    pub fn part_count(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn bytes_buffered(&self) -> u64 {
+        self.parts.values().map(|p| p.len() as u64).sum()
+    }
+
+    /// Assemble the final object content (parts in part-number order).
+    /// Returns an error if any non-final part is under `min_part_size`.
+    pub fn assemble(self, min_part_size: u64) -> Result<(Vec<u8>, Metadata), String> {
+        if self.parts.is_empty() {
+            return Err("multipart upload completed with no parts".into());
+        }
+        let last = *self.parts.keys().last().unwrap();
+        for (&num, data) in &self.parts {
+            if num != last && (data.len() as u64) < min_part_size {
+                return Err(format!(
+                    "part {} is {} bytes, below the {}-byte minimum",
+                    num,
+                    data.len(),
+                    min_part_size
+                ));
+            }
+        }
+        let total: usize = self.parts.values().map(|p| p.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for (_, data) in self.parts {
+            out.extend_from_slice(&data);
+        }
+        Ok((out, self.metadata))
+    }
+}
+
+/// The store's table of in-flight uploads, keyed by upload id.
+#[derive(Debug, Default)]
+pub struct MultipartTable {
+    next_id: u64,
+    uploads: BTreeMap<u64, MultipartUpload>,
+}
+
+impl MultipartTable {
+    pub fn initiate(&mut self, container: &str, key: &str, metadata: Metadata) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.uploads
+            .insert(id, MultipartUpload::new(container, key, metadata));
+        id
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut MultipartUpload> {
+        self.uploads.get_mut(&id)
+    }
+
+    pub fn take(&mut self, id: u64) -> Option<MultipartUpload> {
+        self.uploads.remove(&id)
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.uploads.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_in_part_order() {
+        let mut up = MultipartUpload::new("c", "k", Metadata::new());
+        up.put_part(2, b"world".to_vec());
+        up.put_part(1, b"hello ".to_vec());
+        let (data, _) = up.assemble(0).unwrap();
+        assert_eq!(data, b"hello world");
+    }
+
+    #[test]
+    fn min_part_size_enforced_except_last() {
+        let mut up = MultipartUpload::new("c", "k", Metadata::new());
+        up.put_part(1, vec![0u8; 10]);
+        up.put_part(2, vec![0u8; 3]); // last part may be small
+        assert!(up.assemble(10).is_ok());
+
+        let mut up2 = MultipartUpload::new("c", "k", Metadata::new());
+        up2.put_part(1, vec![0u8; 3]); // non-final part too small
+        up2.put_part(2, vec![0u8; 10]);
+        let err = up2.assemble(10).unwrap_err();
+        assert!(err.contains("below"), "{err}");
+    }
+
+    #[test]
+    fn empty_completion_rejected() {
+        let up = MultipartUpload::new("c", "k", Metadata::new());
+        assert!(up.assemble(0).is_err());
+    }
+
+    #[test]
+    fn replace_part() {
+        let mut up = MultipartUpload::new("c", "k", Metadata::new());
+        up.put_part(1, b"aaa".to_vec());
+        up.put_part(1, b"bb".to_vec());
+        assert_eq!(up.part_count(), 1);
+        assert_eq!(up.bytes_buffered(), 2);
+    }
+
+    #[test]
+    fn table_lifecycle() {
+        let mut t = MultipartTable::default();
+        let id1 = t.initiate("c", "a", Metadata::new());
+        let id2 = t.initiate("c", "b", Metadata::new());
+        assert_ne!(id1, id2);
+        assert_eq!(t.in_flight(), 2);
+        t.get_mut(id1).unwrap().put_part(1, b"x".to_vec());
+        let up = t.take(id1).unwrap();
+        assert_eq!(up.part_count(), 1);
+        assert_eq!(t.in_flight(), 1);
+        assert!(t.take(id1).is_none());
+    }
+}

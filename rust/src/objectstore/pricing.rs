@@ -1,0 +1,135 @@
+//! REST-operation pricing (paper Table 8).
+//!
+//! The paper computes the relative cost of each scenario's REST calls using
+//! the 2017 price sheets of IBM, AWS, Google and Azure, noting "the models
+//! are very similar [so] we report the average price". All four providers
+//! share the same *structure*: write-class operations (PUT, COPY, POST,
+//! LIST) cost roughly an order of magnitude more than read-class operations
+//! (GET, HEAD), and DELETE is free. We encode that structure with each
+//! provider's (approximate) 2017 rates, in USD per 1,000 operations.
+
+use crate::metrics::{OpCounts, OpKind};
+
+/// One provider's price sheet: USD per 1,000 operations per class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Provider {
+    pub name: &'static str,
+    /// PUT / COPY / LIST (GET Container) — "Class A" ops.
+    pub write_class_per_1k: f64,
+    /// GET / HEAD — "Class B" ops.
+    pub read_class_per_1k: f64,
+    /// DELETE — free on all four providers.
+    pub delete_per_1k: f64,
+}
+
+/// Approximate 2017 rates (USD per 1k requests).
+pub const PROVIDERS: [Provider; 4] = [
+    Provider {
+        name: "IBM",
+        write_class_per_1k: 0.005,
+        read_class_per_1k: 0.0004,
+        delete_per_1k: 0.0,
+    },
+    Provider {
+        name: "AWS",
+        write_class_per_1k: 0.005,
+        read_class_per_1k: 0.0004,
+        delete_per_1k: 0.0,
+    },
+    Provider {
+        name: "Google",
+        write_class_per_1k: 0.005,
+        read_class_per_1k: 0.0004,
+        delete_per_1k: 0.0,
+    },
+    Provider {
+        name: "Azure",
+        write_class_per_1k: 0.0036,
+        read_class_per_1k: 0.0004,
+        delete_per_1k: 0.0,
+    },
+];
+
+impl Provider {
+    /// Price of a single op of `kind`, in USD.
+    pub fn op_price(&self, kind: OpKind) -> f64 {
+        let per_1k = match kind {
+            OpKind::PutObject | OpKind::CopyObject | OpKind::GetContainer => {
+                self.write_class_per_1k
+            }
+            OpKind::GetObject | OpKind::HeadObject | OpKind::HeadContainer => {
+                self.read_class_per_1k
+            }
+            OpKind::DeleteObject => self.delete_per_1k,
+        };
+        per_1k / 1000.0
+    }
+
+    /// Total cost of an op-count snapshot on this provider, in USD.
+    pub fn cost(&self, counts: &OpCounts) -> f64 {
+        OpKind::ALL
+            .iter()
+            .map(|&k| counts.get(k) as f64 * self.op_price(k))
+            .sum()
+    }
+}
+
+/// Average cost across the four providers (what Table 8 reports).
+pub fn cost_usd(counts: &OpCounts) -> f64 {
+    PROVIDERS.iter().map(|p| p.cost(counts)).sum::<f64>() / PROVIDERS.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_class_dominates() {
+        for p in PROVIDERS {
+            assert!(p.write_class_per_1k > p.read_class_per_1k * 5.0, "{}", p.name);
+            assert_eq!(p.delete_per_1k, 0.0);
+        }
+    }
+
+    #[test]
+    fn cost_of_known_mix() {
+        // 1000 PUTs + 1000 GETs on AWS = $0.005 + $0.0004.
+        let mut c = OpCounts::default();
+        c.add(OpKind::PutObject, 1000);
+        c.add(OpKind::GetObject, 1000);
+        let aws = PROVIDERS.iter().find(|p| p.name == "AWS").unwrap();
+        assert!((aws.cost(&c) - 0.0054).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deletes_are_free() {
+        let mut c = OpCounts::default();
+        c.add(OpKind::DeleteObject, 1_000_000);
+        assert_eq!(cost_usd(&c), 0.0);
+    }
+
+    #[test]
+    fn copy_and_list_priced_as_writes() {
+        let mut copies = OpCounts::default();
+        copies.add(OpKind::CopyObject, 100);
+        let mut puts = OpCounts::default();
+        puts.add(OpKind::PutObject, 100);
+        let mut lists = OpCounts::default();
+        lists.add(OpKind::GetContainer, 100);
+        for p in PROVIDERS {
+            assert_eq!(p.cost(&copies), p.cost(&puts));
+            assert_eq!(p.cost(&lists), p.cost(&puts));
+        }
+    }
+
+    #[test]
+    fn average_is_between_min_and_max() {
+        let mut c = OpCounts::default();
+        c.add(OpKind::PutObject, 10_000);
+        let costs: Vec<f64> = PROVIDERS.iter().map(|p| p.cost(&c)).collect();
+        let avg = cost_usd(&c);
+        let min = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = costs.iter().cloned().fold(0.0, f64::max);
+        assert!(avg >= min && avg <= max);
+    }
+}

@@ -1,0 +1,666 @@
+//! The object store front end: REST-shaped API, operation accounting,
+//! virtual-time costing, consistency enforcement.
+//!
+//! Every public operation returns `(Result<T, StoreError>, SimDuration)`:
+//! failed operations (e.g. a HEAD on a missing object — the bread and
+//! butter of the legacy connectors' existence checks) still cost wire time,
+//! and the paper's op counts include them.
+
+use super::consistency::ConsistencyModel;
+use super::container::{Container, Listing};
+use super::latency::LatencyModel;
+use super::multipart::{MultipartTable, DEFAULT_MIN_PART_SIZE};
+use super::object::{Metadata, Object};
+use crate::metrics::{LiveCounters, OpCounts, OpKind};
+use crate::simclock::{SimDuration, SimInstant};
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Errors mirroring the REST error space the connectors care about.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreError {
+    NoSuchContainer(String),
+    NoSuchKey(String),
+    ContainerAlreadyExists(String),
+    NoSuchUpload(u64),
+    InvalidRequest(String),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::NoSuchContainer(c) => write!(f, "404 NoSuchContainer: {c}"),
+            StoreError::NoSuchKey(k) => write!(f, "404 NoSuchKey: {k}"),
+            StoreError::ContainerAlreadyExists(c) => write!(f, "409 ContainerExists: {c}"),
+            StoreError::NoSuchUpload(id) => write!(f, "404 NoSuchUpload: {id}"),
+            StoreError::InvalidRequest(m) => write!(f, "400 InvalidRequest: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// Head-object response: metadata + size, no data (HTTP HEAD).
+#[derive(Debug, Clone)]
+pub struct HeadResult {
+    pub size: u64,
+    pub etag: u64,
+    pub metadata: Metadata,
+    pub created_at: SimInstant,
+}
+
+/// Get-object response: data + everything HEAD returns (the read-path
+/// optimization in paper §3.4 relies on GET carrying the metadata).
+#[derive(Debug, Clone)]
+pub struct GetResult {
+    pub data: Arc<Vec<u8>>,
+    pub head: HeadResult,
+}
+
+/// Store construction parameters.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    pub latency: LatencyModel,
+    pub consistency: ConsistencyModel,
+    /// Minimum multipart part size (S3 semantics).
+    pub min_part_size: u64,
+    /// Seed for the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self {
+            latency: LatencyModel::paper_testbed(),
+            consistency: ConsistencyModel::eventual(),
+            min_part_size: DEFAULT_MIN_PART_SIZE,
+            seed: 0,
+        }
+    }
+}
+
+impl StoreConfig {
+    /// Strong consistency + zero latency: pure protocol-correctness tests.
+    pub fn instant_strong() -> Self {
+        Self {
+            latency: LatencyModel::instant(),
+            consistency: ConsistencyModel::strong(),
+            min_part_size: 0,
+            seed: 0,
+        }
+    }
+
+    /// Zero latency but eventually-consistent listings.
+    pub fn instant_eventual() -> Self {
+        Self {
+            latency: LatencyModel::instant(),
+            consistency: ConsistencyModel::eventual(),
+            min_part_size: 0,
+            seed: 0,
+        }
+    }
+}
+
+struct Inner {
+    containers: BTreeMap<String, Container>,
+    multipart: MultipartTable,
+    rng: Pcg32,
+}
+
+/// The shared object store. Cloneable handle (`Arc` inside); safe to use
+/// from the executor threads of the Spark simulator.
+pub struct ObjectStore {
+    inner: Mutex<Inner>,
+    counters: LiveCounters,
+    pub config: StoreConfig,
+}
+
+impl ObjectStore {
+    pub fn new(config: StoreConfig) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(Inner {
+                containers: BTreeMap::new(),
+                multipart: MultipartTable::default(),
+                rng: Pcg32::new(config.seed ^ 0x5106_a70c),
+            }),
+            counters: LiveCounters::new(),
+            config,
+        })
+    }
+
+    /// Live op/byte counters (for harness snapshots).
+    pub fn counters(&self) -> OpCounts {
+        self.counters.snapshot()
+    }
+
+    fn charge(&self, inner: &mut Inner, kind: OpKind, bytes: u64, entries: usize) -> SimDuration {
+        self.counters.record_op(kind);
+        let d = self.config.latency.op_duration(kind, bytes, entries);
+        self.config.latency.jittered(d, inner.rng.next_f64())
+    }
+
+    // ---- container operations -------------------------------------------
+
+    /// PUT Container (create). Counted as a PUT.
+    pub fn create_container(&self, name: &str, now: SimInstant) -> (Result<(), StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let d = self.charge(&mut inner, OpKind::PutObject, 0, 0);
+        if inner.containers.contains_key(name) {
+            return (Err(StoreError::ContainerAlreadyExists(name.into())), d);
+        }
+        inner.containers.insert(name.to_string(), Container::new(now));
+        (Ok(()), d)
+    }
+
+    /// HEAD Container.
+    pub fn head_container(&self, name: &str) -> (Result<(), StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let d = self.charge(&mut inner, OpKind::HeadContainer, 0, 0);
+        if inner.containers.contains_key(name) {
+            (Ok(()), d)
+        } else {
+            (Err(StoreError::NoSuchContainer(name.into())), d)
+        }
+    }
+
+    // ---- object operations ----------------------------------------------
+
+    /// PUT Object — atomic create/replace (§2.1). With chunked transfer
+    /// encoding this is still one PUT; the streaming *timing* benefit is
+    /// modelled by the connector (overlap with production), not here.
+    pub fn put_object(
+        &self,
+        container: &str,
+        key: &str,
+        data: Vec<u8>,
+        metadata: Metadata,
+        now: SimInstant,
+    ) -> (Result<(), StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let size = data.len() as u64;
+        let d = self.charge(&mut inner, OpKind::PutObject, size, 0);
+        let Some(c) = inner.containers.get_mut(container) else {
+            return (Err(StoreError::NoSuchContainer(container.into())), d);
+        };
+        self.counters
+            .record_write(self.config.latency.scaled_bytes(size));
+        c.put(key, Object::new(data, metadata, now), now, &self.config.consistency);
+        (Ok(()), d)
+    }
+
+    /// GET Object — returns data *and* metadata (basis of Stocator's
+    /// skip-the-HEAD read optimization, §3.4).
+    pub fn get_object(
+        &self,
+        container: &str,
+        key: &str,
+    ) -> (Result<GetResult, StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let found = inner
+            .containers
+            .get(container)
+            .ok_or_else(|| StoreError::NoSuchContainer(container.into()))
+            .and_then(|c| {
+                c.get(key)
+                    .cloned()
+                    .ok_or_else(|| StoreError::NoSuchKey(format!("{container}/{key}")))
+            });
+        match found {
+            Ok(obj) => {
+                let size = obj.size();
+                let d = self.charge(&mut inner, OpKind::GetObject, size, 0);
+                self.counters
+                    .record_read(self.config.latency.scaled_bytes(size));
+                (
+                    Ok(GetResult {
+                        data: obj.data.clone(),
+                        head: HeadResult {
+                            size,
+                            etag: obj.etag,
+                            metadata: obj.metadata.clone(),
+                            created_at: obj.created_at,
+                        },
+                    }),
+                    d,
+                )
+            }
+            Err(e) => {
+                let d = self.charge(&mut inner, OpKind::GetObject, 0, 0);
+                (Err(e), d)
+            }
+        }
+    }
+
+    /// HEAD Object.
+    pub fn head_object(
+        &self,
+        container: &str,
+        key: &str,
+    ) -> (Result<HeadResult, StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let d = self.charge(&mut inner, OpKind::HeadObject, 0, 0);
+        let found = inner
+            .containers
+            .get(container)
+            .ok_or_else(|| StoreError::NoSuchContainer(container.into()))
+            .and_then(|c| {
+                c.get(key)
+                    .ok_or_else(|| StoreError::NoSuchKey(format!("{container}/{key}")))
+                    .map(|obj| HeadResult {
+                        size: obj.size(),
+                        etag: obj.etag,
+                        metadata: obj.metadata.clone(),
+                        created_at: obj.created_at,
+                    })
+            });
+        (found, d)
+    }
+
+    /// COPY Object — the expensive server-side copy that rename is built
+    /// from. Charged by source size on the copy bandwidth.
+    pub fn copy_object(
+        &self,
+        src_container: &str,
+        src_key: &str,
+        dst_container: &str,
+        dst_key: &str,
+        now: SimInstant,
+    ) -> (Result<(), StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let src = inner
+            .containers
+            .get(src_container)
+            .ok_or_else(|| StoreError::NoSuchContainer(src_container.into()))
+            .and_then(|c| {
+                c.get(src_key)
+                    .cloned()
+                    .ok_or_else(|| StoreError::NoSuchKey(format!("{src_container}/{src_key}")))
+            });
+        match src {
+            Ok(obj) => {
+                let size = obj.size();
+                let d = self.charge(&mut inner, OpKind::CopyObject, size, 0);
+                if !inner.containers.contains_key(dst_container) {
+                    return (Err(StoreError::NoSuchContainer(dst_container.into())), d);
+                }
+                self.counters
+                    .record_copy(self.config.latency.scaled_bytes(size));
+                let copied = Object::new(
+                    obj.data.as_ref().clone(),
+                    obj.metadata.clone(),
+                    now,
+                );
+                inner
+                    .containers
+                    .get_mut(dst_container)
+                    .unwrap()
+                    .put(dst_key, copied, now, &self.config.consistency);
+                (Ok(()), d)
+            }
+            Err(e) => {
+                let d = self.charge(&mut inner, OpKind::CopyObject, 0, 0);
+                (Err(e), d)
+            }
+        }
+    }
+
+    /// DELETE Object. Deleting a missing key is a 404 but still an op.
+    pub fn delete_object(
+        &self,
+        container: &str,
+        key: &str,
+        now: SimInstant,
+    ) -> (Result<(), StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let d = self.charge(&mut inner, OpKind::DeleteObject, 0, 0);
+        let cm = self.config.consistency;
+        let Some(c) = inner.containers.get_mut(container) else {
+            return (Err(StoreError::NoSuchContainer(container.into())), d);
+        };
+        if c.delete(key, now, &cm) {
+            (Ok(()), d)
+        } else {
+            (Err(StoreError::NoSuchKey(format!("{container}/{key}"))), d)
+        }
+    }
+
+    /// GET Container — the eventually consistent listing (§2.1).
+    pub fn list(
+        &self,
+        container: &str,
+        prefix: &str,
+        delimiter: Option<char>,
+        now: SimInstant,
+    ) -> (Result<Listing, StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let result = inner
+            .containers
+            .get(container)
+            .ok_or_else(|| StoreError::NoSuchContainer(container.into()))
+            .map(|c| c.list(now, prefix, delimiter));
+        let entries = result.as_ref().map(|l| l.len()).unwrap_or(0);
+        let d = self.charge(&mut inner, OpKind::GetContainer, 0, entries);
+        (result, d)
+    }
+
+    // ---- multipart upload (S3a fast-upload path) --------------------------
+
+    /// Initiate a multipart upload. Charged as a PUT request.
+    pub fn initiate_multipart(
+        &self,
+        container: &str,
+        key: &str,
+        metadata: Metadata,
+    ) -> (Result<u64, StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let d = self.charge(&mut inner, OpKind::PutObject, 0, 0);
+        if !inner.containers.contains_key(container) {
+            return (Err(StoreError::NoSuchContainer(container.into())), d);
+        }
+        let id = inner.multipart.initiate(container, key, metadata);
+        (Ok(id), d)
+    }
+
+    /// Upload one part. Charged as a PUT of the part's size.
+    pub fn upload_part(
+        &self,
+        upload_id: u64,
+        part_number: u32,
+        data: Vec<u8>,
+    ) -> (Result<(), StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let size = data.len() as u64;
+        let d = self.charge(&mut inner, OpKind::PutObject, size, 0);
+        match inner.multipart.get_mut(upload_id) {
+            Some(up) => {
+                self.counters
+                    .record_write(self.config.latency.scaled_bytes(size));
+                up.put_part(part_number, data);
+                (Ok(()), d)
+            }
+            None => (Err(StoreError::NoSuchUpload(upload_id)), d),
+        }
+    }
+
+    /// Complete a multipart upload: assembles parts into the final object.
+    pub fn complete_multipart(
+        &self,
+        upload_id: u64,
+        now: SimInstant,
+    ) -> (Result<(), StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let d = self.charge(&mut inner, OpKind::PutObject, 0, 0);
+        let Some(up) = inner.multipart.take(upload_id) else {
+            return (Err(StoreError::NoSuchUpload(upload_id)), d);
+        };
+        let container = up.container.clone();
+        let key = up.key.clone();
+        match up.assemble(self.config.min_part_size) {
+            Ok((data, metadata)) => {
+                let cm = self.config.consistency;
+                let Some(c) = inner.containers.get_mut(&container) else {
+                    return (Err(StoreError::NoSuchContainer(container)), d);
+                };
+                // Bytes were already accounted at upload_part time.
+                c.put(&key, Object::new(data, metadata, now), now, &cm);
+                (Ok(()), d)
+            }
+            Err(msg) => (Err(StoreError::InvalidRequest(msg)), d),
+        }
+    }
+
+    /// Abort a multipart upload (task abort path). Charged as a DELETE.
+    pub fn abort_multipart(&self, upload_id: u64) -> (Result<(), StoreError>, SimDuration) {
+        let mut inner = self.inner.lock().unwrap();
+        let d = self.charge(&mut inner, OpKind::DeleteObject, 0, 0);
+        match inner.multipart.take(upload_id) {
+            Some(_) => (Ok(()), d),
+            None => (Err(StoreError::NoSuchUpload(upload_id)), d),
+        }
+    }
+
+    // ---- inspection (harness/tests only; not REST, not counted) -----------
+
+    /// Authoritative object count in a container.
+    pub fn debug_live_count(&self, container: &str) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .containers
+            .get(container)
+            .map(|c| c.live_count())
+            .unwrap_or(0)
+    }
+
+    /// Authoritative byte count in a container.
+    pub fn debug_live_bytes(&self, container: &str) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .containers
+            .get(container)
+            .map(|c| c.live_bytes())
+            .unwrap_or(0)
+    }
+
+    /// Authoritative name list (sorted) — bypasses eventual consistency.
+    pub fn debug_names(&self, container: &str, prefix: &str) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .containers
+            .get(container)
+            .map(|c| {
+                c.iter_live()
+                    .filter(|(k, _)| k.starts_with(prefix))
+                    .map(|(k, _)| k.to_string())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// In-flight multipart uploads (leak detection in tests).
+    pub fn debug_multipart_in_flight(&self) -> usize {
+        self.inner.lock().unwrap().multipart.in_flight()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> Arc<ObjectStore> {
+        let s = ObjectStore::new(StoreConfig::instant_strong());
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        s
+    }
+
+    #[test]
+    fn put_get_roundtrip_with_metadata() {
+        let s = store();
+        let mut md = Metadata::new();
+        md.insert("X-Stocator-Origin".into(), "stocator-1.0".into());
+        s.put_object("res", "d/part-0", b"abc".to_vec(), md, SimInstant(0))
+            .0
+            .unwrap();
+        let (r, _) = s.get_object("res", "d/part-0");
+        let r = r.unwrap();
+        assert_eq!(&*r.data, b"abc");
+        assert_eq!(r.head.size, 3);
+        assert_eq!(
+            r.head.metadata.get("X-Stocator-Origin").map(String::as_str),
+            Some("stocator-1.0")
+        );
+    }
+
+    #[test]
+    fn missing_key_is_404_but_counted() {
+        let s = store();
+        let before = s.counters();
+        let (r, _) = s.head_object("res", "nope");
+        assert!(matches!(r, Err(StoreError::NoSuchKey(_))));
+        let d = s.counters().since(&before);
+        assert_eq!(d.get(OpKind::HeadObject), 1);
+    }
+
+    #[test]
+    fn copy_then_delete_is_rename() {
+        let s = store();
+        s.put_object("res", "tmp/x", b"data".to_vec(), Metadata::new(), SimInstant(0))
+            .0
+            .unwrap();
+        s.copy_object("res", "tmp/x", "res", "final/x", SimInstant(1))
+            .0
+            .unwrap();
+        s.delete_object("res", "tmp/x", SimInstant(2)).0.unwrap();
+        assert!(s.get_object("res", "final/x").0.is_ok());
+        assert!(s.get_object("res", "tmp/x").0.is_err());
+        let c = s.counters();
+        assert_eq!(c.get(OpKind::CopyObject), 1);
+        assert_eq!(c.get(OpKind::DeleteObject), 1);
+        // COPY moved the bytes server-side:
+        assert_eq!(c.bytes_copied, 4);
+        assert_eq!(c.bytes_written, 4);
+    }
+
+    #[test]
+    fn atomic_put_replaces_whole_value() {
+        let s = store();
+        s.put_object("res", "k", b"first".to_vec(), Metadata::new(), SimInstant(0))
+            .0
+            .unwrap();
+        s.put_object("res", "k", b"2nd".to_vec(), Metadata::new(), SimInstant(1))
+            .0
+            .unwrap();
+        let (r, _) = s.get_object("res", "k");
+        assert_eq!(&*r.unwrap().data, b"2nd");
+        assert_eq!(s.debug_live_count("res"), 1);
+    }
+
+    #[test]
+    fn listing_is_eventually_consistent() {
+        let s = ObjectStore::new(StoreConfig::instant_eventual());
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        s.put_object("res", "a", b"1".to_vec(), Metadata::new(), SimInstant(0))
+            .0
+            .unwrap();
+        // Immediately after the PUT the listing is empty...
+        let (l, _) = s.list("res", "", None, SimInstant(0));
+        assert!(l.unwrap().is_empty());
+        // ...but after the lag (2s default) the object appears.
+        let (l, _) = s.list("res", "", None, SimInstant(2_000_000));
+        assert_eq!(l.unwrap().objects.len(), 1);
+        // GET was always consistent:
+        assert!(s.get_object("res", "a").0.is_ok());
+    }
+
+    #[test]
+    fn ops_on_missing_container_fail() {
+        let s = ObjectStore::new(StoreConfig::instant_strong());
+        assert!(matches!(
+            s.put_object("c", "k", vec![], Metadata::new(), SimInstant(0)).0,
+            Err(StoreError::NoSuchContainer(_))
+        ));
+        assert!(matches!(
+            s.list("c", "", None, SimInstant(0)).0,
+            Err(StoreError::NoSuchContainer(_))
+        ));
+        assert!(s.head_container("c").0.is_err());
+        s.create_container("c", SimInstant(0)).0.unwrap();
+        assert!(s.head_container("c").0.is_ok());
+        assert!(matches!(
+            s.create_container("c", SimInstant(0)).0,
+            Err(StoreError::ContainerAlreadyExists(_))
+        ));
+    }
+
+    #[test]
+    fn multipart_assembles_and_counts_puts() {
+        let s = store();
+        let before = s.counters();
+        let (id, _) = s.initiate_multipart("res", "big", Metadata::new());
+        let id = id.unwrap();
+        s.upload_part(id, 1, b"hello ".to_vec()).0.unwrap();
+        s.upload_part(id, 2, b"world".to_vec()).0.unwrap();
+        s.complete_multipart(id, SimInstant(5)).0.unwrap();
+        let (r, _) = s.get_object("res", "big");
+        assert_eq!(&*r.unwrap().data, b"hello world");
+        let d = s.counters().since(&before);
+        // initiate + 2 parts + complete = 4 PUT-class requests, 1 GET.
+        assert_eq!(d.get(OpKind::PutObject), 4);
+        assert_eq!(s.debug_multipart_in_flight(), 0);
+    }
+
+    #[test]
+    fn multipart_abort_cleans_up() {
+        let s = store();
+        let (id, _) = s.initiate_multipart("res", "x", Metadata::new());
+        let id = id.unwrap();
+        s.upload_part(id, 1, b"junk".to_vec()).0.unwrap();
+        s.abort_multipart(id).0.unwrap();
+        assert_eq!(s.debug_multipart_in_flight(), 0);
+        assert!(s.get_object("res", "x").0.is_err());
+        assert!(s.complete_multipart(id, SimInstant(0)).0.is_err());
+    }
+
+    #[test]
+    fn durations_follow_latency_model() {
+        let cfg = StoreConfig {
+            latency: LatencyModel::paper_testbed(),
+            consistency: ConsistencyModel::strong(),
+            min_part_size: 0,
+            seed: 0,
+        };
+        let s = ObjectStore::new(cfg);
+        let (_, d) = s.create_container("res", SimInstant::EPOCH);
+        assert_eq!(d.as_micros(), 30_000); // PUT base
+        let (_, d) = s.head_container("res");
+        assert_eq!(d.as_micros(), 15_000); // HEAD base
+        let (_, d) = s.put_object(
+            "res",
+            "k",
+            vec![0u8; 26_000_000],
+            Metadata::new(),
+            SimInstant(0),
+        );
+        assert_eq!(d.as_micros(), 30_000 + 1_000_000); // base + 1s transfer
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed() {
+        let mk = |seed| {
+            let mut lat = LatencyModel::paper_testbed();
+            lat.jitter = 0.2;
+            let cfg = StoreConfig {
+                latency: lat,
+                consistency: ConsistencyModel::strong(),
+                min_part_size: 0,
+                seed,
+            };
+            let s = ObjectStore::new(cfg);
+            let (_, d) = s.create_container("res", SimInstant::EPOCH);
+            d
+        };
+        assert_eq!(mk(1), mk(1));
+        assert_ne!(mk(1), mk(2));
+    }
+
+    #[test]
+    fn byte_accounting_scales_with_data_scale() {
+        let cfg = StoreConfig {
+            latency: LatencyModel {
+                data_scale: 1000,
+                scale_threshold: 0,
+                ..LatencyModel::instant()
+            },
+            consistency: ConsistencyModel::strong(),
+            min_part_size: 0,
+            seed: 0,
+        };
+        let s = ObjectStore::new(cfg);
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        s.put_object("res", "k", vec![0u8; 100], Metadata::new(), SimInstant(0))
+            .0
+            .unwrap();
+        assert_eq!(s.counters().bytes_written, 100_000);
+    }
+}

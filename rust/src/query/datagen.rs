@@ -1,0 +1,175 @@
+//! Star-schema synthesis: a `store_sales`-like fact table plus small
+//! dimension tables, mirroring the slice of TPC-DS the 8 queries touch.
+
+use crate::columnar::{ColType, ColumnData, RowGroup, Schema};
+use crate::util::rng::Pcg32;
+
+/// Fact-table columns (a working subset of TPC-DS `store_sales`).
+pub const FACT_COLUMNS: [(&str, ColType); 7] = [
+    ("ss_sold_date_sk", ColType::Int32),
+    ("ss_store_sk", ColType::Int32),
+    ("ss_item_sk", ColType::Int32),
+    ("ss_hdemo_sk", ColType::Int32),
+    ("ss_ticket_number", ColType::Int32),
+    ("ss_quantity", ColType::Int32),
+    ("ss_net_profit", ColType::Float32),
+];
+
+/// Dimension row: date.
+#[derive(Debug, Clone, Copy)]
+pub struct DateDim {
+    pub d_date_sk: i32,
+    pub d_year: i32,
+    pub d_dow: i32,
+    pub d_moy: i32,
+}
+
+/// Dimension row: store.
+#[derive(Debug, Clone)]
+pub struct StoreDim {
+    pub s_store_sk: i32,
+    pub s_county: u32,
+    pub s_city: u32,
+}
+
+/// Dimension row: household demographics.
+#[derive(Debug, Clone, Copy)]
+pub struct HdemoDim {
+    pub hd_demo_sk: i32,
+    pub hd_dep_count: i32,
+    pub hd_vehicle_count: i32,
+}
+
+/// The synthesized schema: dimensions in memory, fact rows generated per
+/// shard on demand (deterministic in (seed, shard)).
+pub struct StarSchema {
+    pub seed: u64,
+    pub dates: Vec<DateDim>,
+    pub stores: Vec<StoreDim>,
+    pub hdemos: Vec<HdemoDim>,
+    pub rows_per_shard: usize,
+    pub shards: usize,
+}
+
+pub const N_DATES: usize = 365 * 3;
+pub const N_STORES: usize = 24;
+pub const N_HDEMO: usize = 72;
+pub const N_ITEMS: i32 = 18_000;
+
+impl StarSchema {
+    pub fn new(seed: u64, shards: usize, rows_per_shard: usize) -> StarSchema {
+        let dates = (0..N_DATES)
+            .map(|i| DateDim {
+                d_date_sk: 2_450_000 + i as i32,
+                d_year: 1998 + (i / 365) as i32,
+                d_dow: (i % 7) as i32,
+                d_moy: ((i / 30) % 12) as i32 + 1,
+            })
+            .collect();
+        let mut rng = Pcg32::new(seed ^ 0xD1A3);
+        let stores = (0..N_STORES)
+            .map(|i| StoreDim {
+                s_store_sk: i as i32 + 1,
+                s_county: rng.next_below(8),
+                s_city: rng.next_below(12),
+            })
+            .collect();
+        let hdemos = (0..N_HDEMO)
+            .map(|i| HdemoDim {
+                hd_demo_sk: i as i32 + 1,
+                hd_dep_count: (i % 10) as i32,
+                hd_vehicle_count: (i % 5) as i32,
+            })
+            .collect();
+        StarSchema {
+            seed,
+            dates,
+            stores,
+            hdemos,
+            rows_per_shard,
+            shards,
+        }
+    }
+
+    pub fn fact_schema() -> Schema {
+        Schema::new(&FACT_COLUMNS)
+    }
+
+    /// Generate one fact shard (deterministic).
+    pub fn fact_shard(&self, shard: usize) -> RowGroup {
+        assert!(shard < self.shards);
+        let mut rng = Pcg32::with_stream(self.seed, shard as u64 + 17);
+        let n = self.rows_per_shard;
+        let mut date = Vec::with_capacity(n);
+        let mut store = Vec::with_capacity(n);
+        let mut item = Vec::with_capacity(n);
+        let mut hdemo = Vec::with_capacity(n);
+        let mut ticket = Vec::with_capacity(n);
+        let mut qty = Vec::with_capacity(n);
+        let mut profit = Vec::with_capacity(n);
+        for i in 0..n {
+            date.push(self.dates[rng.range(0, self.dates.len())].d_date_sk);
+            store.push(self.stores[rng.range(0, self.stores.len())].s_store_sk);
+            item.push(rng.range(1, N_ITEMS as usize) as i32);
+            hdemo.push(self.hdemos[rng.range(0, self.hdemos.len())].hd_demo_sk);
+            ticket.push((shard * n + i) as i32 / 4); // ~4 line items/ticket
+            qty.push(rng.range(1, 100) as i32);
+            profit.push((rng.next_f64() * 200.0 - 40.0) as f32);
+        }
+        RowGroup::new(
+            Self::fact_schema(),
+            vec![
+                ColumnData::I32(date),
+                ColumnData::I32(store),
+                ColumnData::I32(item),
+                ColumnData::I32(hdemo),
+                ColumnData::I32(ticket),
+                ColumnData::I32(qty),
+                ColumnData::F32(profit),
+            ],
+        )
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.shards * self.rows_per_shard
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_shards() {
+        let s1 = StarSchema::new(9, 4, 128);
+        let s2 = StarSchema::new(9, 4, 128);
+        assert_eq!(s1.fact_shard(2), s2.fact_shard(2));
+        assert_ne!(s1.fact_shard(0), s1.fact_shard(1));
+    }
+
+    #[test]
+    fn foreign_keys_resolve() {
+        let s = StarSchema::new(3, 2, 256);
+        let shard = s.fact_shard(0);
+        let dates: std::collections::HashSet<i32> =
+            s.dates.iter().map(|d| d.d_date_sk).collect();
+        for &sk in shard.column("ss_sold_date_sk").unwrap().as_i32() {
+            assert!(dates.contains(&sk));
+        }
+        for &sk in shard.column("ss_store_sk").unwrap().as_i32() {
+            assert!((1..=N_STORES as i32).contains(&sk));
+        }
+        for &sk in shard.column("ss_hdemo_sk").unwrap().as_i32() {
+            assert!((1..=N_HDEMO as i32).contains(&sk));
+        }
+    }
+
+    #[test]
+    fn shard_roundtrips_through_parquetish() {
+        let s = StarSchema::new(5, 1, 64);
+        let rg = s.fact_shard(0);
+        let back = RowGroup::decode(&rg.encode()).unwrap();
+        assert_eq!(back, rg);
+        assert_eq!(back.rows, 64);
+    }
+}

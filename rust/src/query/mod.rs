@@ -1,0 +1,18 @@
+//! The TPC-DS-subset mini query engine (paper §4.3: queries q34, q43,
+//! q46, q59, q68, q73, q79 and ss_max over a 50 GB star schema stored as
+//! Parquet).
+//!
+//! We implement the closest synthetic equivalent (DESIGN.md substitution
+//! table): [`datagen`] synthesizes a star schema — a `store_sales` fact
+//! table sharded into parquetish row groups on the object store, plus
+//! small in-memory dimensions — and [`queries`] implements simplified
+//! scan→filter→join(dim)→group-by plans for each of the eight queries,
+//! with the grouped aggregation running on the `tpcds_agg_chunk` XLA
+//! kernel. What the paper's evaluation measures — the *read-path REST op
+//! pattern* of scanning a columnar dataset — is preserved exactly.
+
+pub mod datagen;
+pub mod queries;
+
+pub use datagen::{StarSchema, FACT_COLUMNS};
+pub use queries::{QueryResult, QUERIES};

@@ -1,0 +1,136 @@
+//! The PJRT engine: compile `artifacts/*.hlo.txt` once, execute many times.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile`. Each model was
+//! lowered with `return_tuple=True`, so results unwrap with `to_tuple`.
+
+use super::{BUCKETS, CHUNK, GROUPS, PARTS};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Compiled executables for every model in the manifest.
+pub struct Engine {
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub platform: String,
+}
+
+impl Engine {
+    /// Load and compile all artifacts from `dir` (produced by
+    /// `make artifacts`). Verifies the manifest constants match this
+    /// crate's chunk geometry.
+    pub fn load(dir: &str) -> Result<Engine> {
+        let manifest_path = format!("{dir}/manifest.txt");
+        let manifest = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path}"))?;
+        let mut model_names = Vec::new();
+        for line in manifest.lines() {
+            let mut cols = line.split('\t');
+            match cols.next() {
+                Some("constants") => {
+                    for col in cols {
+                        let Some((k, v)) = col.split_once('=') else { continue };
+                        let v: usize = v.parse().unwrap_or(0);
+                        let expect = match k {
+                            "CHUNK" => CHUNK,
+                            "BUCKETS" => BUCKETS,
+                            "PARTS" => PARTS,
+                            "GROUPS" => GROUPS,
+                            _ => continue,
+                        };
+                        if v != expect {
+                            bail!("manifest {k}={v} but crate expects {expect} — rebuild artifacts");
+                        }
+                    }
+                }
+                Some("model") => {
+                    if let Some(name) = cols.next() {
+                        model_names.push(name.to_string());
+                    }
+                }
+                _ => {}
+            }
+        }
+        if model_names.is_empty() {
+            bail!("manifest {manifest_path} lists no models");
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let platform = client.platform_name();
+        let mut exes = HashMap::new();
+        for name in model_names {
+            let path = format!("{dir}/{name}.hlo.txt");
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            exes.insert(name, exe);
+        }
+        Ok(Engine { exes, platform })
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("model '{name}' not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} result"))?;
+        // Lowered with return_tuple=True: the root is always a tuple.
+        Ok(lit.to_tuple()?)
+    }
+
+    pub fn wordcount_chunk(&self, tokens: &[i32]) -> Result<(Vec<i32>, i32)> {
+        assert_eq!(tokens.len(), CHUNK);
+        let arg = xla::Literal::vec1(tokens);
+        let out = self.run("wordcount_chunk", &[arg])?;
+        let hist = out[0].to_vec::<i32>()?;
+        let n = out[1].to_vec::<i32>()?[0];
+        Ok((hist, n))
+    }
+
+    pub fn terasort_partition_chunk(
+        &self,
+        keys: &[i32],
+        splitters: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        assert_eq!(keys.len(), CHUNK);
+        assert_eq!(splitters.len(), PARTS - 1);
+        let out = self.run(
+            "terasort_partition_chunk",
+            &[xla::Literal::vec1(keys), xla::Literal::vec1(splitters)],
+        )?;
+        Ok((out[0].to_vec::<i32>()?, out[1].to_vec::<i32>()?))
+    }
+
+    pub fn readonly_chunk(&self, bytes: &[i32]) -> Result<[i32; 2]> {
+        assert_eq!(bytes.len(), CHUNK);
+        let out = self.run("readonly_chunk", &[xla::Literal::vec1(bytes)])?;
+        let v = out[0].to_vec::<i32>()?;
+        Ok([v[0], v[1]])
+    }
+
+    pub fn tpcds_agg_chunk(&self, keys: &[i32], vals: &[f32]) -> Result<(Vec<f32>, Vec<i32>)> {
+        assert_eq!(keys.len(), CHUNK);
+        assert_eq!(vals.len(), CHUNK);
+        let out = self.run(
+            "tpcds_agg_chunk",
+            &[xla::Literal::vec1(keys), xla::Literal::vec1(vals)],
+        )?;
+        Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<i32>()?))
+    }
+}
+
+// Tests for the XLA path live in `rust/tests/test_runtime_parity.rs` (they
+// need `make artifacts` to have run; they skip gracefully otherwise).

@@ -1,0 +1,173 @@
+//! Pure-Rust kernel implementations, the exact mirror of
+//! `python/compile/kernels/ref.py`. Used when artifacts are absent and as
+//! the parity oracle for the XLA path.
+
+use super::{BUCKETS, CHUNK, GROUPS, PARTS};
+
+/// Knuth multiplicative hash constant — must match `hash_count.py`.
+pub const HASH_MULT: u32 = 2654435761;
+
+/// Bucket for a token id (the shared hash function).
+#[inline]
+pub fn bucket_of(token: i32) -> usize {
+    ((token as u32).wrapping_mul(HASH_MULT) % BUCKETS as u32) as usize
+}
+
+/// The native backend (stateless).
+pub struct Fallback;
+
+impl Fallback {
+    pub fn wordcount_chunk(&self, tokens: &[i32]) -> (Vec<i32>, i32) {
+        assert_eq!(tokens.len(), CHUNK);
+        let mut hist = vec![0i32; BUCKETS];
+        let mut n = 0i32;
+        for &t in tokens {
+            hist[bucket_of(t)] += 1;
+            if t != 0 {
+                n += 1;
+            }
+        }
+        // Padding (token 0) hashes to bucket 0; discount it, as the L2
+        // model does.
+        let pad = CHUNK as i32 - n;
+        hist[bucket_of(0)] -= pad;
+        (hist, n)
+    }
+
+    pub fn terasort_partition_chunk(&self, keys: &[i32], splitters: &[i32]) -> (Vec<i32>, Vec<i32>) {
+        assert_eq!(keys.len(), CHUNK);
+        assert_eq!(splitters.len(), PARTS - 1);
+        let mut assign = Vec::with_capacity(CHUNK);
+        let mut hist = vec![0i32; PARTS];
+        for &k in keys {
+            // splitters ascending: partition = #{s : k >= s}. The
+            // partition_point gives the same value in O(log P).
+            let p = splitters.partition_point(|&s| k >= s);
+            assign.push(p as i32);
+            hist[p] += 1;
+        }
+        (assign, hist)
+    }
+
+    pub fn readonly_chunk(&self, bytes: &[i32]) -> [i32; 2] {
+        assert_eq!(bytes.len(), CHUNK);
+        let mut newlines = 0;
+        let mut nonzero = 0;
+        for &b in bytes {
+            if b == 10 {
+                newlines += 1;
+            }
+            if b != 0 {
+                nonzero += 1;
+            }
+        }
+        [newlines, nonzero]
+    }
+
+    pub fn tpcds_agg_chunk(&self, keys: &[i32], vals: &[f32]) -> (Vec<f32>, Vec<i32>) {
+        assert_eq!(keys.len(), CHUNK);
+        assert_eq!(vals.len(), CHUNK);
+        let mut sums = vec![0f32; GROUPS];
+        let mut counts = vec![0i32; GROUPS];
+        for (&k, &v) in keys.iter().zip(vals) {
+            if (0..GROUPS as i32).contains(&k) {
+                sums[k as usize] += v;
+                counts[k as usize] += 1;
+            }
+        }
+        (sums, counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::pad_chunk;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn wordcount_mass_conservation() {
+        check("wordcount mass", 50, |g| {
+            let n = g.usize(0..CHUNK);
+            let toks: Vec<i32> = (0..n).map(|_| g.rng().range(1, 1 << 20) as i32).collect();
+            let padded = pad_chunk(&toks, 0);
+            let (hist, count) = Fallback.wordcount_chunk(&padded);
+            assert_eq!(count as usize, n);
+            assert_eq!(hist.iter().sum::<i32>() as usize, n);
+            assert!(hist.iter().all(|&h| h >= 0));
+        });
+    }
+
+    #[test]
+    fn partition_assignment_invariants() {
+        check("partition invariants", 50, |g| {
+            let mut splitters: Vec<i32> =
+                (0..PARTS - 1).map(|_| g.rng().range(0, 1 << 20) as i32).collect();
+            splitters.sort();
+            let keys: Vec<i32> = (0..CHUNK).map(|_| g.rng().range(0, 1 << 20) as i32).collect();
+            let (assign, hist) = Fallback.terasort_partition_chunk(&keys, &splitters);
+            assert_eq!(hist.iter().sum::<i32>() as usize, CHUNK);
+            for (i, (&k, &a)) in keys.iter().zip(&assign).enumerate() {
+                assert!((0..PARTS as i32).contains(&a), "row {i}");
+                // Keys below the first splitter go to 0; above the last to
+                // PARTS-1.
+                if k < splitters[0] {
+                    assert_eq!(a, 0);
+                }
+                if k >= splitters[PARTS - 2] {
+                    assert_eq!(a, PARTS as i32 - 1);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn partition_respects_splitter_boundaries() {
+        let mut splitters: Vec<i32> = (1..PARTS as i32).map(|i| i * 100).collect();
+        splitters.sort();
+        let keys = pad_chunk(&[0, 99, 100, 101, 5000], i32::MAX);
+        let (assign, _) = Fallback.terasort_partition_chunk(&keys, &splitters);
+        assert_eq!(assign[0], 0);
+        assert_eq!(assign[1], 0);
+        assert_eq!(assign[2], 1);
+        assert_eq!(assign[3], 1);
+        assert_eq!(assign[4], 50);
+        assert_eq!(assign[5], PARTS as i32 - 1); // padding key = MAX
+    }
+
+    #[test]
+    fn readonly_counts() {
+        let mut data = vec![0i32; CHUNK];
+        data[0] = 10;
+        data[1] = 65;
+        data[2] = 10;
+        data[3] = 66;
+        let [nl, nz] = Fallback.readonly_chunk(&data);
+        assert_eq!(nl, 2);
+        assert_eq!(nz, 4);
+    }
+
+    #[test]
+    fn group_agg_matches_scalar_groupby() {
+        check("group agg", 30, |g| {
+            let keys: Vec<i32> = (0..CHUNK)
+                .map(|_| g.rng().range(0, GROUPS + 10) as i32 - 5)
+                .collect();
+            let vals: Vec<f32> = (0..CHUNK).map(|_| g.rng().next_f64() as f32).collect();
+            let (sums, counts) = Fallback.tpcds_agg_chunk(&keys, &vals);
+            let total_in: usize = keys
+                .iter()
+                .filter(|&&k| (0..GROUPS as i32).contains(&k))
+                .count();
+            assert_eq!(counts.iter().sum::<i32>() as usize, total_in);
+            let sum_all: f32 = sums.iter().sum();
+            let expect: f32 = keys
+                .iter()
+                .zip(&vals)
+                .filter(|(&k, _)| (0..GROUPS as i32).contains(&k))
+                .map(|(_, &v)| v)
+                .sum();
+            assert!((sum_all - expect).abs() < 1e-2, "{sum_all} vs {expect}");
+        });
+    }
+}

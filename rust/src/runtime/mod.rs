@@ -1,0 +1,135 @@
+//! The XLA/PJRT runtime: loads the AOT-compiled JAX/Pallas kernels
+//! (`artifacts/*.hlo.txt`, produced by `make artifacts`) and executes them
+//! from the Spark-simulator task bodies. Python never runs here — the HLO
+//! text is compiled once by the PJRT CPU client at startup (see
+//! DESIGN.md three-layer architecture and /opt/xla-example/load_hlo).
+//!
+//! [`fallback`] provides pure-Rust implementations of the same functions
+//! (mirroring `python/compile/kernels/ref.py`) so the crate's tests run
+//! before artifacts exist; [`Kernels`] dispatches between the two, and the
+//! parity tests in `rust/tests/` assert they agree when artifacts are
+//! present.
+
+pub mod engine;
+pub mod fallback;
+
+pub use engine::Engine;
+pub use fallback::Fallback;
+
+/// Chunk geometry — MUST match `python/compile/kernels/__init__.py`; the
+/// engine cross-checks against `artifacts/manifest.txt` at load time.
+pub const CHUNK: usize = 4096;
+pub const BUCKETS: usize = 512;
+pub const PARTS: usize = 64;
+pub const GROUPS: usize = 64;
+
+/// Kernel backend: AOT-compiled XLA executables, or the native fallback.
+pub enum Kernels {
+    Xla(Engine),
+    Native(Fallback),
+}
+
+impl Kernels {
+    /// Load the XLA engine from `dir`, or fall back to the native
+    /// implementations if artifacts are absent/unloadable.
+    pub fn load_or_fallback(dir: &str) -> Kernels {
+        match Engine::load(dir) {
+            Ok(e) => Kernels::Xla(e),
+            Err(err) => {
+                eprintln!(
+                    "[runtime] artifacts not loadable from '{dir}' ({err}); \
+                     using native fallback kernels"
+                );
+                Kernels::Native(Fallback)
+            }
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Kernels::Xla(_) => "xla-pjrt",
+            Kernels::Native(_) => "native-fallback",
+        }
+    }
+
+    /// Wordcount: token-id chunk (0 = padding) -> (bucket histogram,
+    /// token count).
+    pub fn wordcount_chunk(&self, tokens: &[i32]) -> anyhow::Result<(Vec<i32>, i32)> {
+        match self {
+            Kernels::Xla(e) => e.wordcount_chunk(tokens),
+            Kernels::Native(f) => Ok(f.wordcount_chunk(tokens)),
+        }
+    }
+
+    /// Terasort stage 1: (keys, splitters) -> (partition assignment,
+    /// partition histogram).
+    pub fn terasort_partition_chunk(
+        &self,
+        keys: &[i32],
+        splitters: &[i32],
+    ) -> anyhow::Result<(Vec<i32>, Vec<i32>)> {
+        match self {
+            Kernels::Xla(e) => e.terasort_partition_chunk(keys, splitters),
+            Kernels::Native(f) => Ok(f.terasort_partition_chunk(keys, splitters)),
+        }
+    }
+
+    /// Read-only: byte chunk -> [newline count, nonzero byte count].
+    pub fn readonly_chunk(&self, bytes: &[i32]) -> anyhow::Result<[i32; 2]> {
+        match self {
+            Kernels::Xla(e) => e.readonly_chunk(bytes),
+            Kernels::Native(f) => Ok(f.readonly_chunk(bytes)),
+        }
+    }
+
+    /// TPC-DS group-by: (group keys with -1 = filtered, values) ->
+    /// (sums, counts).
+    pub fn tpcds_agg_chunk(
+        &self,
+        keys: &[i32],
+        vals: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<i32>)> {
+        match self {
+            Kernels::Xla(e) => e.tpcds_agg_chunk(keys, vals),
+            Kernels::Native(f) => Ok(f.tpcds_agg_chunk(keys, vals)),
+        }
+    }
+}
+
+/// Pad (or validate) a slice to exactly `CHUNK` elements with `pad`.
+pub fn pad_chunk<T: Copy>(xs: &[T], pad: T) -> Vec<T> {
+    assert!(xs.len() <= CHUNK, "chunk overflow: {} > {CHUNK}", xs.len());
+    let mut v = Vec::with_capacity(CHUNK);
+    v.extend_from_slice(xs);
+    v.resize(CHUNK, pad);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_chunk_pads_and_validates() {
+        let v = pad_chunk(&[1i32, 2, 3], 0);
+        assert_eq!(v.len(), CHUNK);
+        assert_eq!(&v[..3], &[1, 2, 3]);
+        assert!(v[3..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk overflow")]
+    fn pad_chunk_rejects_oversize() {
+        pad_chunk(&vec![0i32; CHUNK + 1], 0);
+    }
+
+    #[test]
+    fn fallback_backend_always_available() {
+        let k = Kernels::Native(Fallback);
+        assert_eq!(k.backend_name(), "native-fallback");
+        let toks = pad_chunk(&[1i32, 2, 3], 0);
+        let (hist, n) = k.wordcount_chunk(&toks).unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(hist.iter().sum::<i32>(), 3);
+    }
+}

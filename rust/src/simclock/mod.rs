@@ -1,0 +1,199 @@
+//! Virtual time for the simulator.
+//!
+//! All "runtimes" reported by the harness are *virtual-clock* times driven
+//! by the latency model in [`crate::objectstore::latency`]; see DESIGN.md §7
+//! for the calibration. Virtual time is kept in integer microseconds so the
+//! simulation is exactly reproducible (no float drift in the event loop).
+
+use std::fmt;
+
+/// A span of virtual time, in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimDuration(pub u64);
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0);
+
+    pub fn from_micros(us: u64) -> Self {
+        SimDuration(us)
+    }
+    pub fn from_millis(ms: u64) -> Self {
+        SimDuration(ms * 1_000)
+    }
+    pub fn from_secs(s: u64) -> Self {
+        SimDuration(s * 1_000_000)
+    }
+    /// From fractional seconds; saturates at zero for negative input.
+    pub fn from_secs_f64(s: f64) -> Self {
+        SimDuration((s.max(0.0) * 1e6).round() as u64)
+    }
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn saturating_sub(self, rhs: Self) -> Self {
+        SimDuration(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl std::ops::Add for SimDuration {
+    type Output = SimDuration;
+    fn add(self, rhs: Self) -> Self {
+        SimDuration(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for SimDuration {
+    fn add_assign(&mut self, rhs: Self) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::ops::Mul<u64> for SimDuration {
+    type Output = SimDuration;
+    fn mul(self, rhs: u64) -> Self {
+        SimDuration(self.0 * rhs)
+    }
+}
+
+impl std::iter::Sum for SimDuration {
+    fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+        iter.fold(SimDuration::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for SimDuration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.as_secs_f64();
+        if s >= 1.0 {
+            write!(f, "{:.2}s", s)
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.2}ms", self.0 as f64 / 1e3)
+        } else {
+            write!(f, "{}us", self.0)
+        }
+    }
+}
+
+/// A point on the virtual time axis (microseconds since simulation start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimInstant(pub u64);
+
+impl SimInstant {
+    pub const EPOCH: SimInstant = SimInstant(0);
+
+    pub fn elapsed_since(self, earlier: SimInstant) -> SimDuration {
+        SimDuration(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl std::ops::Add<SimDuration> for SimInstant {
+    type Output = SimInstant;
+    fn add(self, rhs: SimDuration) -> SimInstant {
+        SimInstant(self.0 + rhs.0)
+    }
+}
+
+impl fmt::Display for SimInstant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t+{}", SimDuration(self.0))
+    }
+}
+
+/// A monotonically advancing virtual clock. Single-threaded by design: the
+/// Spark simulator advances it from the scheduler loop only.
+#[derive(Debug, Default)]
+pub struct SimClock {
+    now: SimInstant,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self {
+            now: SimInstant::EPOCH,
+        }
+    }
+
+    pub fn now(&self) -> SimInstant {
+        self.now
+    }
+
+    /// Advance the clock by `d`.
+    pub fn advance(&mut self, d: SimDuration) -> SimInstant {
+        self.now = self.now + d;
+        self.now
+    }
+
+    /// Advance the clock *to* `t`, which must not be in the past.
+    pub fn advance_to(&mut self, t: SimInstant) {
+        assert!(
+            t >= self.now,
+            "clock cannot move backwards: {} < {}",
+            t,
+            self.now
+        );
+        self.now = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_conversions() {
+        assert_eq!(SimDuration::from_millis(3).as_micros(), 3_000);
+        assert_eq!(SimDuration::from_secs(2).as_micros(), 2_000_000);
+        assert_eq!(SimDuration::from_secs_f64(0.5).as_micros(), 500_000);
+        assert_eq!(SimDuration::from_secs_f64(-1.0).as_micros(), 0);
+        assert!((SimDuration::from_micros(1_500_000).as_secs_f64() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duration_arithmetic() {
+        let a = SimDuration::from_millis(10);
+        let b = SimDuration::from_millis(5);
+        assert_eq!((a + b).as_micros(), 15_000);
+        assert_eq!(a.saturating_sub(b).as_micros(), 5_000);
+        assert_eq!(b.saturating_sub(a).as_micros(), 0);
+        assert_eq!((b * 4).as_micros(), 20_000);
+        let total: SimDuration = [a, b, b].into_iter().sum();
+        assert_eq!(total.as_micros(), 20_000);
+    }
+
+    #[test]
+    fn clock_advances() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), SimInstant::EPOCH);
+        c.advance(SimDuration::from_secs(1));
+        assert_eq!(c.now().0, 1_000_000);
+        c.advance_to(SimInstant(2_000_000));
+        assert_eq!(c.now().0, 2_000_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn clock_never_goes_back() {
+        let mut c = SimClock::new();
+        c.advance(SimDuration::from_secs(1));
+        c.advance_to(SimInstant(10));
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(format!("{}", SimDuration::from_micros(42)), "42us");
+        assert_eq!(format!("{}", SimDuration::from_micros(4_200)), "4.20ms");
+        assert_eq!(format!("{}", SimDuration::from_secs(90)), "90.00s");
+        assert_eq!(format!("{}", SimInstant(1_000_000)), "t+1.00s");
+    }
+
+    #[test]
+    fn instant_elapsed() {
+        let a = SimInstant(100);
+        let b = SimInstant(350);
+        assert_eq!(b.elapsed_since(a).as_micros(), 250);
+        assert_eq!(a.elapsed_since(b).as_micros(), 0);
+    }
+}

@@ -1,0 +1,809 @@
+//! The driver: schedules task attempts onto executor slots on the virtual
+//! clock, retries failures, speculatively duplicates stragglers, and runs
+//! the commit protocol (paper §2.2).
+
+use super::faults::{FaultKind, FaultPlan};
+use super::shuffle::ShuffleStore;
+use super::task::{ComputeModel, TaskBody, TaskResult, TaskRun};
+use super::SparkConfig;
+use crate::committer::{CommitAlgorithm, Committer, JobContext, TaskAttemptContext};
+use crate::connectors::naming::AttemptId;
+use crate::fs::{FileSystem, FsError, OpCtx, Path};
+use crate::metrics::OpCounts;
+use crate::objectstore::ObjectStore;
+use crate::simclock::{SimClock, SimDuration, SimInstant};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
+
+/// One Spark job: a set of tasks plus its output dataset and commit
+/// algorithm. Multi-stage applications chain jobs through a
+/// [`ShuffleStore`].
+pub struct SparkJob {
+    pub name: String,
+    /// Output dataset; `None` for jobs that only read/collect.
+    pub output: Option<Path>,
+    pub algorithm: CommitAlgorithm,
+    /// Task bodies; index = task id = part number.
+    pub tasks: Vec<TaskBody>,
+    /// Where map output goes (if this is a map stage).
+    pub shuffle_out: Option<Arc<ShuffleStore>>,
+    /// Where reduce input comes from (partition = task id).
+    pub shuffle_in: Option<Arc<ShuffleStore>>,
+    pub faults: FaultPlan,
+}
+
+impl SparkJob {
+    pub fn new(name: &str, output: Option<Path>, algorithm: CommitAlgorithm, tasks: Vec<TaskBody>) -> Self {
+        Self {
+            name: name.to_string(),
+            output,
+            algorithm,
+            tasks,
+            shuffle_out: None,
+            shuffle_in: None,
+            faults: FaultPlan::none(),
+        }
+    }
+
+    pub fn with_shuffle_out(mut self, s: Arc<ShuffleStore>) -> Self {
+        self.shuffle_out = Some(s);
+        self
+    }
+
+    pub fn with_shuffle_in(mut self, s: Arc<ShuffleStore>) -> Self {
+        self.shuffle_in = Some(s);
+        self
+    }
+
+    pub fn with_faults(mut self, f: FaultPlan) -> Self {
+        self.faults = f;
+        self
+    }
+}
+
+/// Post-run statistics for a job.
+#[derive(Debug, Clone)]
+pub struct JobStats {
+    pub name: String,
+    pub start: SimInstant,
+    pub end: SimInstant,
+    pub runtime: SimDuration,
+    /// All attempts launched (originals + retries + speculative copies).
+    pub attempts: u32,
+    pub failed_attempts: u32,
+    pub speculative_attempts: u32,
+    pub aborted_attempts: u32,
+    /// REST ops issued during this job (zero if no object store attached).
+    pub ops: OpCounts,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub records: u64,
+    /// Per-task driver-collected payloads (winner attempt's).
+    pub collected: Vec<Option<Vec<u8>>>,
+    pub success: bool,
+}
+
+struct AttemptRecord {
+    task_id: u32,
+    attempt_no: u32,
+    start: SimInstant,
+    end: SimInstant,
+    result: Result<TaskResult, FsError>,
+    #[allow(dead_code)]
+    speculative: bool,
+}
+
+/// The driver. Owns the virtual clock; jobs run back to back on it.
+pub struct Driver {
+    pub cfg: SparkConfig,
+    pub fs: Arc<dyn FileSystem>,
+    /// Attached store for op accounting (None when running on HDFS).
+    pub store: Option<Arc<ObjectStore>>,
+    pub compute: ComputeModel,
+    clock: SimClock,
+}
+
+impl Driver {
+    pub fn new(
+        cfg: SparkConfig,
+        fs: Arc<dyn FileSystem>,
+        store: Option<Arc<ObjectStore>>,
+        compute: ComputeModel,
+    ) -> Self {
+        Self {
+            cfg,
+            fs,
+            store,
+            compute,
+            clock: SimClock::new(),
+        }
+    }
+
+    pub fn now(&self) -> SimInstant {
+        self.clock.now()
+    }
+
+    /// Run a driver-side phase (e.g. input listing before a job): gives the
+    /// closure an [`OpCtx`] at the current virtual time and advances the
+    /// clock by whatever it consumed.
+    pub fn driver_phase<T>(&mut self, f: impl FnOnce(&dyn FileSystem, &mut OpCtx) -> T) -> T {
+        let mut ctx = OpCtx::new(self.clock.now());
+        let out = f(self.fs.as_ref(), &mut ctx);
+        self.clock.advance_to(ctx.now());
+        out
+    }
+
+    /// Run one job to completion; the clock advances past its end.
+    pub fn run_job(&mut self, job: &SparkJob) -> Result<JobStats, FsError> {
+        assert!(!job.tasks.is_empty(), "job '{}' has no tasks", job.name);
+        let ops_before = self.store.as_ref().map(|s| s.counters());
+        let job_start = self.clock.now();
+        let mut driver_ctx = OpCtx::new(job_start);
+
+        let committer = Committer::new(job.algorithm);
+        let job_ctx = job.output.as_ref().map(|out| JobContext::new(out.clone()));
+        if let Some(jc) = &job_ctx {
+            committer.setup_job(self.fs.as_ref(), jc, &mut driver_ctx)?;
+        }
+        let tasks_ready = driver_ctx.now();
+
+        // Executor slots: a min-heap of next-free times.
+        let mut slots: BinaryHeap<Reverse<u64>> = (0..self.cfg.slots.max(1))
+            .map(|_| Reverse(tasks_ready.0))
+            .collect();
+
+        // Ready queue of (ready_time, task, attempt_no, speculative).
+        let mut ready: BinaryHeap<Reverse<(u64, u32, u32, bool)>> = job
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(i, _)| Reverse((tasks_ready.0, i as u32, 0u32, false)))
+            .collect();
+
+        let mut stats = JobStats {
+            name: job.name.clone(),
+            start: job_start,
+            end: job_start,
+            runtime: SimDuration::ZERO,
+            attempts: 0,
+            failed_attempts: 0,
+            speculative_attempts: 0,
+            aborted_attempts: 0,
+            ops: OpCounts::default(),
+            bytes_read: 0,
+            bytes_written: 0,
+            records: 0,
+            collected: vec![None; job.tasks.len()],
+            success: true,
+        };
+
+        // Per task: the best finished-but-uncommitted attempt awaiting a
+        // speculation race, and whether the task is already done.
+        let mut awaiting: HashMap<u32, AttemptRecord> = HashMap::new();
+        let mut done: Vec<bool> = vec![false; job.tasks.len()];
+        let mut durations: Vec<SimDuration> = Vec::new();
+        let mut last_commit_end = tasks_ready;
+
+        while let Some(Reverse((ready_at, task_id, attempt_no, speculative))) = ready.pop() {
+            if done[task_id as usize] {
+                continue; // task finished while this retry/copy was queued
+            }
+            let Reverse(slot_free) = slots.pop().expect("slot");
+            let start = SimInstant(ready_at.max(slot_free));
+
+            let rec = self.execute_attempt(job, &committer, &job_ctx, task_id, attempt_no, speculative, start);
+            stats.attempts += 1;
+            if speculative {
+                stats.speculative_attempts += 1;
+            }
+            slots.push(Reverse(rec.end.0));
+
+            match &rec.result {
+                Err(_) => {
+                    stats.failed_attempts += 1;
+                    // Decide retry. Speculative copies that fail simply
+                    // lose the race; originals are retried.
+                    let next_no = attempt_no + 1;
+                    if let Some(orig) = awaiting.remove(&task_id) {
+                        // A finished original was waiting on this copy:
+                        // the original wins by default.
+                        self.finish_task(job, &committer, &job_ctx, orig, &mut stats, &mut done, &mut durations, &mut last_commit_end);
+                        continue;
+                    }
+                    if next_no >= self.cfg.max_failures {
+                        stats.success = false;
+                        done[task_id as usize] = true;
+                    } else {
+                        ready.push(Reverse((rec.end.0, task_id, next_no, false)));
+                    }
+                }
+                Ok(_) => {
+                    // Did a speculation race start for this task?
+                    if let Some(other) = awaiting.remove(&task_id) {
+                        // Race: earlier end wins.
+                        let (winner, loser) = if rec.end <= other.end {
+                            (rec, other)
+                        } else {
+                            (other, rec)
+                        };
+                        let decision = winner.end.max(SimInstant(ready_at));
+                        self.abort_loser(job, &committer, &job_ctx, &loser, decision, &mut stats);
+                        self.finish_task(job, &committer, &job_ctx, winner, &mut stats, &mut done, &mut durations, &mut last_commit_end);
+                        continue;
+                    }
+                    // Straggler + speculation on → hold the result, launch
+                    // a copy at the moment the driver would notice.
+                    let is_straggler = matches!(
+                        job.faults.get(task_id, attempt_no),
+                        Some(FaultKind::Straggle { .. })
+                    );
+                    if self.cfg.speculation && is_straggler && !speculative {
+                        let median = median_duration(&durations)
+                            .unwrap_or_else(|| rec.end.elapsed_since(rec.start));
+                        let trigger = rec.start
+                            + SimDuration::from_secs_f64(
+                                median.as_secs_f64() * self.cfg.speculation_multiplier,
+                            );
+                        ready.push(Reverse((trigger.0, task_id, attempt_no + 1, true)));
+                        awaiting.insert(task_id, rec);
+                    } else if self.cfg.speculation && is_straggler && speculative {
+                        // A speculative copy that is itself straggling:
+                        // chain one more copy (bounded by max_failures).
+                        if attempt_no + 1 < self.cfg.max_failures {
+                            let median = median_duration(&durations)
+                                .unwrap_or_else(|| rec.end.elapsed_since(rec.start));
+                            let trigger = rec.start
+                                + SimDuration::from_secs_f64(
+                                    median.as_secs_f64() * self.cfg.speculation_multiplier,
+                                );
+                            ready.push(Reverse((trigger.0, task_id, attempt_no + 1, true)));
+                            awaiting.insert(task_id, rec);
+                        } else {
+                            self.finish_task(job, &committer, &job_ctx, rec, &mut stats, &mut done, &mut durations, &mut last_commit_end);
+                        }
+                    } else {
+                        self.finish_task(job, &committer, &job_ctx, rec, &mut stats, &mut done, &mut durations, &mut last_commit_end);
+                    }
+                }
+            }
+        }
+
+        // Any attempt still awaiting a race (copy never ran) wins now.
+        let leftovers: Vec<AttemptRecord> = awaiting.drain().map(|(_, v)| v).collect();
+        for rec in leftovers {
+            self.finish_task(job, &committer, &job_ctx, rec, &mut stats, &mut done, &mut durations, &mut last_commit_end);
+        }
+
+        if done.iter().any(|d| !d) || !stats.success {
+            stats.success = false;
+        }
+
+        // Job commit runs in the driver after all tasks finished.
+        let mut commit_ctx = OpCtx::new(last_commit_end.max(driver_ctx.now()));
+        if stats.success {
+            if let Some(jc) = &job_ctx {
+                committer.commit_job(self.fs.as_ref(), jc, &mut commit_ctx)?;
+            }
+        } else if let Some(jc) = &job_ctx {
+            committer.abort_job(self.fs.as_ref(), jc, &mut commit_ctx)?;
+        }
+        let job_end = commit_ctx.now();
+        stats.end = job_end;
+        stats.runtime = job_end.elapsed_since(job_start);
+        if let (Some(store), Some(before)) = (&self.store, ops_before) {
+            stats.ops = store.counters().since(&before);
+        }
+        self.clock.advance_to(job_end);
+        Ok(stats)
+    }
+
+    /// Run a single attempt (setup, body, faults, but NOT the commit).
+    fn execute_attempt(
+        &self,
+        job: &SparkJob,
+        committer: &Committer,
+        job_ctx: &Option<JobContext>,
+        task_id: u32,
+        attempt_no: u32,
+        #[allow(dead_code)]
+    speculative: bool,
+        start: SimInstant,
+    ) -> AttemptRecord {
+        let mut ctx = OpCtx::new(start);
+        let attempt = AttemptId::new(&self.cfg.job_timestamp, "0000", task_id, attempt_no);
+        let fault = job.faults.get(task_id, attempt_no).cloned();
+
+        // CrashBeforeWrite fails before any filesystem interaction.
+        if matches!(fault, Some(FaultKind::CrashBeforeWrite)) {
+            ctx.add(SimDuration::from_millis(50)); // it got as far as starting
+            return AttemptRecord {
+                task_id,
+                attempt_no,
+                start,
+                end: ctx.now(),
+                result: Err(FsError::Io("injected crash before write".into())),
+                speculative,
+            };
+        }
+
+        let result = (|| -> Result<TaskResult, FsError> {
+            let tac = match job_ctx {
+                Some(jc) => {
+                    let tac = TaskAttemptContext::new(jc, attempt.clone());
+                    committer.setup_task(self.fs.as_ref(), &tac, &mut ctx)?;
+                    tac
+                }
+                None => {
+                    // Jobs without output still need an attempt context for
+                    // naming; use a throwaway job context.
+                    let fake = JobContext::new(Path::new(self.fs.scheme(), "none", "none"));
+                    TaskAttemptContext::new(&fake, attempt.clone())
+                }
+            };
+            let shuffle_in = match &job.shuffle_in {
+                Some(s) => {
+                    let (blocks, d) = s.fetch(task_id as usize);
+                    ctx.add(d);
+                    blocks
+                }
+                None => Vec::new(),
+            };
+            let truncate_write = match &fault {
+                Some(FaultKind::CrashAfterPartialWrite { fraction }) => Some(*fraction),
+                _ => None,
+            };
+            let mut run = TaskRun {
+                fs: self.fs.as_ref(),
+                ctx: &mut ctx,
+                committer,
+                attempt: &tac,
+                compute: &self.compute,
+                shuffle_in,
+                truncate_write,
+            };
+            let body = &job.tasks[task_id as usize];
+            body(&mut run)
+        })();
+
+        if let Some(FaultKind::Straggle { extra }) = &fault {
+            ctx.add(*extra);
+        }
+        AttemptRecord {
+            task_id,
+            attempt_no,
+            start,
+            end: ctx.now(),
+            result,
+            speculative,
+        }
+    }
+
+    /// Commit the winning attempt and record its results.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_task(
+        &self,
+        job: &SparkJob,
+        committer: &Committer,
+        job_ctx: &Option<JobContext>,
+        rec: AttemptRecord,
+        stats: &mut JobStats,
+        done: &mut [bool],
+        durations: &mut Vec<SimDuration>,
+        last_commit_end: &mut SimInstant,
+    ) {
+        let task_id = rec.task_id;
+        if done[task_id as usize] {
+            return;
+        }
+        let result = match rec.result {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        let mut end = rec.end;
+        if let Some(jc) = job_ctx {
+            // Executor-side task commit, on this attempt's timeline.
+            let attempt = AttemptId::new(&self.cfg.job_timestamp, "0000", task_id, rec.attempt_no);
+            let tac = TaskAttemptContext::new(jc, attempt);
+            let mut ctx = OpCtx::new(rec.end);
+            if committer.needs_task_commit(self.fs.as_ref(), &tac, &mut ctx) {
+                let _ = committer.commit_task(self.fs.as_ref(), &tac, &mut ctx);
+            }
+            end = ctx.now();
+        }
+        if let Some(out) = &job.shuffle_out {
+            for (part, data) in &result.shuffle_out {
+                out.push(*part, data.clone());
+            }
+        }
+        stats.bytes_read += result.bytes_read;
+        stats.bytes_written += result.bytes_written;
+        stats.records += result.records;
+        stats.collected[task_id as usize] = result.collected;
+        durations.push(rec.end.elapsed_since(rec.start));
+        done[task_id as usize] = true;
+        if end > *last_commit_end {
+            *last_commit_end = end;
+        }
+    }
+
+    /// Abort the losing attempt of a speculation race (if cleanup is on).
+    fn abort_loser(
+        &self,
+        _job: &SparkJob,
+        committer: &Committer,
+        job_ctx: &Option<JobContext>,
+        loser: &AttemptRecord,
+        decision: SimInstant,
+        stats: &mut JobStats,
+    ) {
+        if !self.cfg.cleanup_speculation {
+            return; // paper Table 3, lines 1-5 + 8-9: duplicates remain
+        }
+        if let Some(jc) = job_ctx {
+            let attempt = AttemptId::new(
+                &self.cfg.job_timestamp,
+                "0000",
+                loser.task_id,
+                loser.attempt_no,
+            );
+            let tac = TaskAttemptContext::new(jc, attempt);
+            let mut ctx = OpCtx::new(decision.max(loser.end));
+            let _ = committer.abort_task(self.fs.as_ref(), &tac, &mut ctx);
+            stats.aborted_attempts += 1;
+        }
+    }
+}
+
+fn median_duration(ds: &[SimDuration]) -> Option<SimDuration> {
+    if ds.is_empty() {
+        return None;
+    }
+    let mut v = ds.to_vec();
+    v.sort();
+    Some(v[v.len() / 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connectors::{HadoopSwift, Stocator};
+    use crate::metrics::OpKind;
+    use crate::objectstore::{ObjectStore, StoreConfig};
+    use crate::spark::task::body;
+
+    fn stocator_driver(cfg: SparkConfig) -> (Arc<ObjectStore>, Driver) {
+        let store = ObjectStore::new(StoreConfig::instant_strong());
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = Stocator::with_defaults(store.clone());
+        let d = Driver::new(cfg, fs, Some(store.clone()), ComputeModel::free());
+        (store, d)
+    }
+
+    fn writer_tasks(n: usize, bytes: usize) -> Vec<TaskBody> {
+        (0..n)
+            .map(|i| {
+                body(move |run: &mut TaskRun<'_>| {
+                    let data = vec![i as u8; bytes];
+                    let name = run.part_basename();
+                    let written = run.write_part(&name, data)?;
+                    Ok(TaskResult {
+                        bytes_written: written,
+                        records: 1,
+                        ..Default::default()
+                    })
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn three_task_job_on_stocator_matches_paper_naming() {
+        // Fig. 4 of the paper: three tasks each write a part.
+        let (store, mut driver) = stocator_driver(SparkConfig {
+            slots: 4,
+            job_timestamp: "201512062056".into(),
+            ..Default::default()
+        });
+        let out = Path::parse("swift2d://res/data.txt").unwrap();
+        let job = SparkJob::new(
+            "fig4",
+            Some(out),
+            CommitAlgorithm::V1,
+            writer_tasks(3, 4),
+        );
+        let stats = driver.run_job(&job).unwrap();
+        assert!(stats.success);
+        assert_eq!(stats.attempts, 3);
+        let names = store.debug_names("res", "data.txt/");
+        // Table 3 lines 1-3 names:
+        for t in 0..3 {
+            assert!(
+                names.contains(&format!(
+                    "data.txt/part-0000{t}_attempt_201512062056_0000_m_00000{t}_0"
+                )),
+                "{names:?}"
+            );
+        }
+        assert!(names.contains(&"data.txt/_SUCCESS".to_string()));
+        // No COPY/DELETE at all (Table 3, line 8 = "no operations").
+        assert_eq!(stats.ops.get(OpKind::CopyObject), 0);
+        assert_eq!(stats.ops.get(OpKind::DeleteObject), 0);
+    }
+
+    #[test]
+    fn retries_after_crash_produce_new_attempt_number() {
+        let (store, mut driver) = stocator_driver(SparkConfig {
+            slots: 2,
+            job_timestamp: "201512062056".into(),
+            ..Default::default()
+        });
+        let out = Path::parse("swift2d://res/d").unwrap();
+        let job = SparkJob::new("retry", Some(out), CommitAlgorithm::V1, writer_tasks(2, 3))
+            .with_faults(FaultPlan::none().with(1, 0, FaultKind::CrashBeforeWrite));
+        let stats = driver.run_job(&job).unwrap();
+        assert!(stats.success);
+        assert_eq!(stats.failed_attempts, 1);
+        assert_eq!(stats.attempts, 3); // 2 originals + 1 retry
+        let names = store.debug_names("res", "d/");
+        assert!(names.iter().any(|n| n.ends_with("m_000001_1")), "{names:?}");
+        assert!(!names.iter().any(|n| n.ends_with("m_000001_0")));
+    }
+
+    #[test]
+    fn partial_write_crash_is_masked_by_read_side_dedup() {
+        // Attempt 0 crashes mid-write leaving a truncated final object;
+        // attempt 1 completes. The List read strategy must pick attempt 1
+        // (most data = fail-stop argument, §3.2).
+        let (store, mut driver) = stocator_driver(SparkConfig {
+            slots: 2,
+            job_timestamp: "201512062056".into(),
+            ..Default::default()
+        });
+        let out = Path::parse("swift2d://res/d").unwrap();
+        let job = SparkJob::new("partial", Some(out), CommitAlgorithm::V1, writer_tasks(1, 100))
+            .with_faults(FaultPlan::none().with(
+                0,
+                0,
+                FaultKind::CrashAfterPartialWrite { fraction: 0.3 },
+            ));
+        let stats = driver.run_job(&job).unwrap();
+        assert!(stats.success);
+        // Both attempts' objects exist (crashed executors don't clean up):
+        let names = store.debug_names("res", "d/");
+        assert!(names.iter().any(|n| n.ends_with("m_000000_0")));
+        assert!(names.iter().any(|n| n.ends_with("m_000000_1")));
+        // The read path picks the complete one:
+        let fs = Stocator::with_defaults(store.clone());
+        let mut ctx = OpCtx::new(SimInstant(stats.end.0));
+        let ls = fs
+            .list_status(&Path::parse("swift2d://res/d").unwrap(), &mut ctx)
+            .unwrap();
+        let part = ls
+            .iter()
+            .find(|s| s.path.name().starts_with("part-00000"))
+            .unwrap();
+        assert!(part.path.name().ends_with("m_000000_1"));
+        assert_eq!(part.len, 100);
+    }
+
+    #[test]
+    fn speculation_cleanup_aborts_loser() {
+        // Table 3 lines 1-9 (with cleanup): the slow attempt's object is
+        // DELETEd.
+        let (store, mut driver) = stocator_driver(SparkConfig {
+            slots: 4,
+            speculation: true,
+            cleanup_speculation: true,
+            job_timestamp: "201512062056".into(),
+            ..Default::default()
+        });
+        let out = Path::parse("swift2d://res/d").unwrap();
+        let job = SparkJob::new("spec", Some(out), CommitAlgorithm::V1, writer_tasks(3, 8))
+            .with_faults(FaultPlan::none().with(
+                2,
+                0,
+                FaultKind::Straggle {
+                    extra: SimDuration::from_secs(300),
+                },
+            ));
+        let stats = driver.run_job(&job).unwrap();
+        assert!(stats.success);
+        assert_eq!(stats.speculative_attempts, 1);
+        assert_eq!(stats.aborted_attempts, 1);
+        let names = store.debug_names("res", "d/");
+        // Winner is attempt 1; attempt 0's object was deleted.
+        assert!(names.iter().any(|n| n.ends_with("m_000002_1")), "{names:?}");
+        assert!(!names.iter().any(|n| n.ends_with("m_000002_0")), "{names:?}");
+        assert!(stats.ops.get(OpKind::DeleteObject) >= 1);
+    }
+
+    #[test]
+    fn speculation_without_cleanup_leaves_duplicates_yet_reads_stay_correct() {
+        // Table 3 lines 1-5 + 8-9: Spark cannot clean up; both attempts'
+        // objects remain; the read path still returns one part per task.
+        let (store, mut driver) = stocator_driver(SparkConfig {
+            slots: 4,
+            speculation: true,
+            cleanup_speculation: false,
+            job_timestamp: "201512062056".into(),
+            ..Default::default()
+        });
+        let out = Path::parse("swift2d://res/d").unwrap();
+        let job = SparkJob::new("spec2", Some(out), CommitAlgorithm::V1, writer_tasks(3, 8))
+            .with_faults(FaultPlan::none().with(
+                2,
+                0,
+                FaultKind::Straggle {
+                    extra: SimDuration::from_secs(300),
+                },
+            ));
+        let stats = driver.run_job(&job).unwrap();
+        assert!(stats.success);
+        let names = store.debug_names("res", "d/");
+        assert!(names.iter().any(|n| n.ends_with("m_000002_0")));
+        assert!(names.iter().any(|n| n.ends_with("m_000002_1")));
+        // Read side: exactly 3 parts.
+        let fs = Stocator::with_defaults(store.clone());
+        let mut ctx = OpCtx::new(SimInstant(stats.end.0));
+        let ls = fs
+            .list_status(&Path::parse("swift2d://res/d").unwrap(), &mut ctx)
+            .unwrap();
+        let parts: Vec<_> = ls
+            .iter()
+            .filter(|s| s.path.name().starts_with("part-"))
+            .collect();
+        assert_eq!(parts.len(), 3);
+    }
+
+    #[test]
+    fn task_parallelism_bounds_runtime() {
+        // 8 tasks × 1s compute on 4 slots = 2 waves ≈ 2s; on 8 slots ≈ 1s.
+        let run = |slots: usize| -> SimDuration {
+            let store = ObjectStore::new(StoreConfig::instant_strong());
+            store.create_container("res", SimInstant::EPOCH).0.unwrap();
+            let fs = Stocator::with_defaults(store.clone());
+            let mut d = Driver::new(
+                SparkConfig {
+                    slots,
+                    ..Default::default()
+                },
+                fs,
+                Some(store),
+                ComputeModel::new(1_000_000, 1),
+            );
+            let tasks: Vec<TaskBody> = (0..8)
+                .map(|_| {
+                    body(|run: &mut TaskRun<'_>| {
+                        run.charge_compute(1_000_000); // 1s
+                        Ok(TaskResult::default())
+                    })
+                })
+                .collect();
+            let job = SparkJob::new("par", None, CommitAlgorithm::V1, tasks);
+            d.run_job(&job).unwrap().runtime
+        };
+        let t4 = run(4);
+        let t8 = run(8);
+        assert!(t4.as_secs_f64() >= 1.99 && t4.as_secs_f64() < 2.2, "{t4}");
+        assert!(t8.as_secs_f64() >= 0.99 && t8.as_secs_f64() < 1.2, "{t8}");
+    }
+
+    #[test]
+    fn v1_job_commit_is_serial_in_the_driver() {
+        // With Hadoop-Swift + v1, the job-commit copies happen after all
+        // tasks end, serially — runtime scales with task count even with
+        // plenty of slots. THE effect behind Table 5.
+        let run_with = |n_tasks: usize| -> SimDuration {
+            let mut cfg = StoreConfig::instant_strong();
+            cfg.latency.copy_base_us = 1_000_000; // 1s per COPY
+            let store = ObjectStore::new(cfg);
+            store.create_container("res", SimInstant::EPOCH).0.unwrap();
+            let fs = HadoopSwift::new(store.clone());
+            let mut d = Driver::new(
+                SparkConfig {
+                    slots: 64,
+                    ..Default::default()
+                },
+                fs,
+                Some(store),
+                ComputeModel::free(),
+            );
+            let out = Path::parse("swift://res/out").unwrap();
+            let job = SparkJob::new("serial", Some(out), CommitAlgorithm::V1, writer_tasks(n_tasks, 2));
+            d.run_job(&job).unwrap().runtime
+        };
+        let t2 = run_with(2);
+        let t8 = run_with(8);
+        // Job commit does one COPY per part serially: runtime grows ~n.
+        assert!(
+            t8.as_secs_f64() > t2.as_secs_f64() + 4.0,
+            "t2={t2} t8={t8} — job commit should serialize"
+        );
+    }
+
+    #[test]
+    fn shuffle_flows_between_stages() {
+        let (_, mut driver) = stocator_driver(SparkConfig {
+            slots: 4,
+            ..Default::default()
+        });
+        let shuffle = ShuffleStore::instant();
+        // Map stage: 4 tasks each push (task_id % 2) -> one byte.
+        let map_tasks: Vec<TaskBody> = (0..4)
+            .map(|i: u32| {
+                body(move |_run: &mut TaskRun<'_>| {
+                    Ok(TaskResult {
+                        shuffle_out: vec![((i % 2) as usize, vec![i as u8])],
+                        ..Default::default()
+                    })
+                })
+            })
+            .collect();
+        let map_job = SparkJob::new("map", None, CommitAlgorithm::V1, map_tasks)
+            .with_shuffle_out(shuffle.clone());
+        driver.run_job(&map_job).unwrap();
+        assert_eq!(shuffle.partitions(), 2);
+
+        // Reduce stage: 2 tasks count their blocks.
+        let reduce_tasks: Vec<TaskBody> = (0..2)
+            .map(|_| {
+                body(|run: &mut TaskRun<'_>| {
+                    let n = run.shuffle_in.len() as u64;
+                    Ok(TaskResult {
+                        records: n,
+                        collected: Some(vec![n as u8]),
+                        ..Default::default()
+                    })
+                })
+            })
+            .collect();
+        let reduce_job = SparkJob::new("reduce", None, CommitAlgorithm::V1, reduce_tasks)
+            .with_shuffle_in(shuffle);
+        let stats = driver.run_job(&reduce_job).unwrap();
+        assert_eq!(stats.records, 4);
+        assert_eq!(stats.collected[0], Some(vec![2]));
+        assert_eq!(stats.collected[1], Some(vec![2]));
+    }
+
+    #[test]
+    fn job_fails_after_max_failures() {
+        let (_, mut driver) = stocator_driver(SparkConfig {
+            slots: 2,
+            max_failures: 3,
+            ..Default::default()
+        });
+        let out = Path::parse("swift2d://res/d").unwrap();
+        let job = SparkJob::new("doomed", Some(out), CommitAlgorithm::V1, writer_tasks(1, 2))
+            .with_faults(
+                FaultPlan::none()
+                    .with(0, 0, FaultKind::CrashBeforeWrite)
+                    .with(0, 1, FaultKind::CrashBeforeWrite)
+                    .with(0, 2, FaultKind::CrashBeforeWrite),
+            );
+        let stats = driver.run_job(&job).unwrap();
+        assert!(!stats.success);
+        assert_eq!(stats.failed_attempts, 3);
+    }
+
+    #[test]
+    fn clock_advances_across_jobs() {
+        let (_, mut driver) = stocator_driver(SparkConfig {
+            slots: 2,
+            ..Default::default()
+        });
+        let j1 = SparkJob::new(
+            "a",
+            None,
+            CommitAlgorithm::V1,
+            vec![body(|run: &mut TaskRun<'_>| {
+                run.ctx.add(SimDuration::from_secs(5));
+                Ok(TaskResult::default())
+            })],
+        );
+        let s1 = driver.run_job(&j1).unwrap();
+        let s2 = driver.run_job(&j1).unwrap();
+        assert!(s2.start >= s1.end);
+        assert!(driver.now() >= s2.end);
+    }
+}

@@ -1,0 +1,73 @@
+//! Fault and straggler injection (paper §2.2.1: task attempts may fail or
+//! be slow; §3.5 Table 3 exercises both).
+
+use crate::simclock::SimDuration;
+use std::collections::HashMap;
+
+/// What goes wrong with a specific (task, attempt).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// The attempt crashes before writing anything.
+    CrashBeforeWrite,
+    /// The attempt writes a truncated part (`fraction` of the real output)
+    /// and then crashes — no commit, no abort (the executor died).
+    CrashAfterPartialWrite { fraction: f64 },
+    /// The attempt runs but takes `extra` longer than it should — the
+    /// speculation trigger.
+    Straggle { extra: SimDuration },
+}
+
+/// A deterministic fault schedule, keyed by (task id, attempt number).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    faults: HashMap<(u32, u32), FaultKind>,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with(mut self, task: u32, attempt: u32, kind: FaultKind) -> Self {
+        self.faults.insert((task, attempt), kind);
+        self
+    }
+
+    pub fn get(&self, task: u32, attempt: u32) -> Option<&FaultKind> {
+        self.faults.get(&(task, attempt))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Number of scheduled faults (for reporting).
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_lookup() {
+        let plan = FaultPlan::none()
+            .with(2, 0, FaultKind::CrashBeforeWrite)
+            .with(
+                2,
+                1,
+                FaultKind::Straggle {
+                    extra: SimDuration::from_secs(30),
+                },
+            );
+        assert_eq!(plan.get(2, 0), Some(&FaultKind::CrashBeforeWrite));
+        assert!(matches!(plan.get(2, 1), Some(FaultKind::Straggle { .. })));
+        assert!(plan.get(2, 2).is_none());
+        assert!(plan.get(0, 0).is_none());
+        assert_eq!(plan.len(), 2);
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::none().is_empty());
+    }
+}

@@ -1,0 +1,52 @@
+//! A Spark-like execution engine on the virtual clock (paper §2.2.1).
+//!
+//! The driver divides a job into tasks; tasks run on a fixed pool of
+//! executor slots (the paper's testbed: 3 servers × 12 executors × 4 cores
+//! = 144-way parallelism). Each *attempt* of a task gets a unique
+//! [`crate::connectors::naming::AttemptId`]; failed attempts are retried,
+//! slow attempts are **speculatively** duplicated, and the commit protocol
+//! ([`crate::committer`]) decides whose output survives. All storage I/O
+//! goes through a [`crate::fs::FileSystem`] (one of the three connectors),
+//! so the engine reproduces the paper's interaction patterns faithfully.
+
+pub mod task;
+pub mod faults;
+pub mod shuffle;
+pub mod driver;
+
+pub use driver::{Driver, JobStats, SparkJob};
+pub use faults::{FaultKind, FaultPlan};
+pub use shuffle::ShuffleStore;
+pub use task::{ComputeModel, TaskBody, TaskResult, TaskRun};
+
+/// Cluster/engine configuration (paper §4.1-§4.2 defaults).
+#[derive(Debug, Clone)]
+pub struct SparkConfig {
+    /// Total parallel task slots (paper: 144).
+    pub slots: usize,
+    /// Enable speculative execution of stragglers.
+    pub speculation: bool,
+    /// An attempt is a straggler once it has run `multiplier ×` the median
+    /// successful duration (Spark's `spark.speculation.multiplier`).
+    pub speculation_multiplier: f64,
+    /// Max task attempts before the job fails (Spark's `spark.task.maxFailures`).
+    pub max_failures: u32,
+    /// Whether Spark manages to abort/clean up losing speculative attempts
+    /// (paper Table 3 shows both outcomes).
+    pub cleanup_speculation: bool,
+    /// Job timestamp used in attempt ids.
+    pub job_timestamp: String,
+}
+
+impl Default for SparkConfig {
+    fn default() -> Self {
+        Self {
+            slots: 144,
+            speculation: false,
+            speculation_multiplier: 1.5,
+            max_failures: 4,
+            cleanup_speculation: true,
+            job_timestamp: "201702221313".to_string(),
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! The in-memory shuffle service.
+//!
+//! Between stages, map-task output is partitioned by reduce task and held
+//! by the executors (Spark's external shuffle service). We model it as a
+//! shared in-memory table plus a virtual-time transfer cost charged on the
+//! reduce side (shuffle data crosses the 10 Gbps cluster network, not the
+//! object store — the paper's REST-op counts exclude it, and so do ours).
+
+use crate::simclock::SimDuration;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Shuffle blocks grouped by reduce partition.
+#[derive(Debug, Default)]
+pub struct ShuffleStore {
+    /// partition -> blocks (one per map task that produced output for it).
+    blocks: Mutex<BTreeMap<usize, Vec<Arc<Vec<u8>>>>>,
+    /// Cluster-network bandwidth for shuffle fetch, bytes/sec of virtual
+    /// time (per reduce task stream).
+    pub fetch_bw: u64,
+    /// Simulated→paper byte scale (matches the latency model).
+    pub data_scale: u64,
+}
+
+impl ShuffleStore {
+    pub fn new(fetch_bw: u64, data_scale: u64) -> Arc<Self> {
+        Arc::new(Self {
+            blocks: Mutex::new(BTreeMap::new()),
+            fetch_bw,
+            data_scale,
+        })
+    }
+
+    /// Unlimited-bandwidth store for protocol tests.
+    pub fn instant() -> Arc<Self> {
+        Self::new(u64::MAX, 1)
+    }
+
+    /// Map side: publish one block for `partition`.
+    pub fn push(&self, partition: usize, data: Vec<u8>) {
+        self.blocks
+            .lock()
+            .unwrap()
+            .entry(partition)
+            .or_default()
+            .push(Arc::new(data));
+    }
+
+    /// Reduce side: fetch all blocks for `partition`, returning the blocks
+    /// and the virtual fetch time.
+    pub fn fetch(&self, partition: usize) -> (Vec<Arc<Vec<u8>>>, SimDuration) {
+        let blocks = self
+            .blocks
+            .lock()
+            .unwrap()
+            .get(&partition)
+            .cloned()
+            .unwrap_or_default();
+        let bytes: u64 = blocks.iter().map(|b| b.len() as u64).sum();
+        let d = if self.fetch_bw == u64::MAX {
+            SimDuration::ZERO
+        } else {
+            SimDuration::from_micros(
+                bytes.saturating_mul(self.data_scale).saturating_mul(1_000_000) / self.fetch_bw,
+            )
+        };
+        (blocks, d)
+    }
+
+    /// Total bytes currently held (diagnostics).
+    pub fn total_bytes(&self) -> u64 {
+        self.blocks
+            .lock()
+            .unwrap()
+            .values()
+            .flatten()
+            .map(|b| b.len() as u64)
+            .sum()
+    }
+
+    /// Number of partitions with data.
+    pub fn partitions(&self) -> usize {
+        self.blocks.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_fetch_roundtrip() {
+        let s = ShuffleStore::instant();
+        s.push(0, b"aa".to_vec());
+        s.push(1, b"bb".to_vec());
+        s.push(0, b"cc".to_vec());
+        let (blocks, d) = s.fetch(0);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(d, SimDuration::ZERO);
+        assert_eq!(s.total_bytes(), 6);
+        assert_eq!(s.partitions(), 2);
+        let (empty, _) = s.fetch(9);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn fetch_charges_bandwidth() {
+        let s = ShuffleStore::new(1_000, 1); // 1 KB/s
+        s.push(0, vec![0u8; 2_000]);
+        let (_, d) = s.fetch(0);
+        assert_eq!(d, SimDuration::from_secs(2));
+        // Scaled store inflates to paper bytes.
+        let s2 = ShuffleStore::new(1_000, 10);
+        s2.push(0, vec![0u8; 2_000]);
+        let (_, d2) = s2.fetch(0);
+        assert_eq!(d2, SimDuration::from_secs(20));
+    }
+}

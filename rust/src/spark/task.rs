@@ -1,0 +1,141 @@
+//! Task bodies and the per-attempt execution environment.
+
+use crate::committer::{Committer, TaskAttemptContext};
+use crate::fs::{FileSystem, FsError, OpCtx};
+use crate::simclock::SimDuration;
+use std::sync::Arc;
+
+/// CPU-side cost model for task compute, on the virtual clock. The real
+/// numeric work in this repo runs through the XLA runtime (see
+/// [`crate::runtime`]); virtual compute time is charged separately so that
+/// simulated runtimes reflect the paper's testbed rather than this
+/// machine's CPU.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    /// Sustained per-core processing rate, bytes of input per second.
+    pub bytes_per_sec: u64,
+    /// Multiplier from simulated bytes to paper-scale bytes (must match
+    /// the latency model's `data_scale`).
+    pub data_scale: u64,
+}
+
+impl ComputeModel {
+    pub fn new(bytes_per_sec: u64, data_scale: u64) -> Self {
+        Self {
+            bytes_per_sec,
+            data_scale,
+        }
+    }
+
+    /// A model that charges nothing (protocol-only tests).
+    pub fn free() -> Self {
+        Self {
+            bytes_per_sec: u64::MAX,
+            data_scale: 1,
+        }
+    }
+
+    /// Virtual time to process `bytes` simulated bytes.
+    pub fn time_for(&self, bytes: u64) -> SimDuration {
+        if self.bytes_per_sec == u64::MAX {
+            return SimDuration::ZERO;
+        }
+        SimDuration::from_micros(
+            bytes
+                .saturating_mul(self.data_scale)
+                .saturating_mul(1_000_000)
+                / self.bytes_per_sec,
+        )
+    }
+}
+
+/// What a task attempt hands back to the driver.
+#[derive(Debug, Clone, Default)]
+pub struct TaskResult {
+    /// Input bytes this attempt consumed (simulated bytes).
+    pub bytes_read: u64,
+    /// Output bytes this attempt wrote through the committer.
+    pub bytes_written: u64,
+    /// Records processed (workload-defined unit).
+    pub records: u64,
+    /// Map-side shuffle output: (reduce partition, payload).
+    pub shuffle_out: Vec<(usize, Vec<u8>)>,
+    /// Small driver-collected payload (e.g. a count).
+    pub collected: Option<Vec<u8>>,
+}
+
+/// The environment one task *attempt* runs in.
+pub struct TaskRun<'a> {
+    pub fs: &'a dyn FileSystem,
+    pub ctx: &'a mut OpCtx,
+    pub committer: &'a Committer,
+    pub attempt: &'a TaskAttemptContext,
+    pub compute: &'a ComputeModel,
+    /// Reduce-side shuffle input for this task's partition.
+    pub shuffle_in: Vec<Arc<Vec<u8>>>,
+    /// Fault injection: when set, the next `write_part` writes only this
+    /// fraction of its data and then fails, emulating an output stream cut
+    /// short by an executor crash.
+    pub truncate_write: Option<f64>,
+}
+
+impl<'a> TaskRun<'a> {
+    /// Charge virtual compute time for processing `bytes`.
+    pub fn charge_compute(&mut self, bytes: u64) {
+        let d = self.compute.time_for(bytes);
+        self.ctx.add(d);
+    }
+
+    /// Write this task's output part through the commit protocol.
+    pub fn write_part(&mut self, basename: &str, data: Vec<u8>) -> Result<u64, FsError> {
+        if let Some(fraction) = self.truncate_write {
+            // Injected crash mid-stream: a truncated object lands at the
+            // connector's target name, then the attempt dies.
+            let cut = ((data.len() as f64) * fraction).floor() as usize;
+            let partial = data[..cut.min(data.len())].to_vec();
+            self.committer
+                .write_part(self.fs, self.attempt, basename, partial, self.ctx)?;
+            return Err(FsError::Io("injected crash after partial write".into()));
+        }
+        let n = data.len() as u64;
+        self.committer
+            .write_part(self.fs, self.attempt, basename, data, self.ctx)?;
+        Ok(n)
+    }
+
+    /// The conventional basename for this task's part.
+    pub fn part_basename(&self) -> String {
+        format!("part-{:05}", self.attempt.attempt.task_id)
+    }
+}
+
+/// A task body: the closure the driver runs once per attempt. Bodies must
+/// be deterministic functions of (task id, inputs) — attempts of the same
+/// task must produce identical output, as Spark assumes.
+///
+/// Not `Send`/`Sync`: bodies capture `Arc<Kernels>`, whose PJRT handles
+/// are foreign pointers, and the engine schedules on virtual time from a
+/// single real thread anyway.
+pub type TaskBody = Arc<dyn Fn(&mut TaskRun<'_>) -> Result<TaskResult, FsError>>;
+
+/// Convenience constructor.
+pub fn body<F>(f: F) -> TaskBody
+where
+    F: Fn(&mut TaskRun<'_>) -> Result<TaskResult, FsError> + 'static,
+{
+    Arc::new(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_model_scales() {
+        let m = ComputeModel::new(1_000_000, 1);
+        assert_eq!(m.time_for(2_000_000), SimDuration::from_secs(2));
+        let scaled = ComputeModel::new(1_000_000, 100);
+        assert_eq!(scaled.time_for(20_000), SimDuration::from_secs(2));
+        assert_eq!(ComputeModel::free().time_for(u64::MAX / 4), SimDuration::ZERO);
+    }
+}

@@ -1,0 +1,126 @@
+//! A small command-line argument parser (clap is unavailable offline).
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, options, flags and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminator: everything after is positional.
+                    args.positionals.extend(iter.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| format!("option --{rest} requires a value"))?;
+                    args.options.insert(rest.to_string(), v);
+                }
+            } else if args.subcommand.is_none() && args.positionals.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str], flags: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(
+            &["run", "--workload", "teragen", "--scenario=stocator", "extra"],
+            &[],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt("workload"), Some("teragen"));
+        assert_eq!(a.opt("scenario"), Some("stocator"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn flags_do_not_eat_values() {
+        let a = parse(&["bench", "--verbose", "--iters", "3"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_u64("iters", 1).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::parse(["--key".to_string()].into_iter(), &[]).unwrap_err();
+        assert!(e.contains("requires a value"));
+    }
+
+    #[test]
+    fn numeric_parsing() {
+        let a = parse(&["x", "--n", "42", "--f", "2.5"], &[]);
+        assert_eq!(a.opt_u64("n", 0).unwrap(), 42);
+        assert_eq!(a.opt_f64("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.opt_u64("absent", 7).unwrap(), 7);
+        assert!(a.opt_u64("f", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["cmd", "--", "--not-an-option"], &[]);
+        assert_eq!(a.positionals, vec!["--not-an-option"]);
+    }
+}

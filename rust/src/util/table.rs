@@ -1,0 +1,183 @@
+//! ASCII table and bar-chart rendering for the benchmark harness — the
+//! harness reproduces the paper's *tables* as aligned text tables and its
+//! *figures* (grouped bar charts of REST calls / bytes) as horizontal ASCII
+//! bar charts.
+
+/// A simple text table with a header row and aligned columns.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with box-drawing separators; first column left-aligned,
+    /// the rest right-aligned (numeric convention).
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push('|');
+                }
+                if i == 0 {
+                    line.push_str(&format!(" {:<width$} ", cells[i], width = widths[i]));
+                } else {
+                    line.push_str(&format!(" {:>width$} ", cells[i], width = widths[i]));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A grouped horizontal bar chart: one group per label, one bar per series.
+/// Used to render the paper's Figures 5–7.
+#[derive(Debug, Clone, Default)]
+pub struct BarChart {
+    pub title: String,
+    pub series: Vec<String>,
+    /// (group label, values — one per series)
+    pub groups: Vec<(String, Vec<f64>)>,
+    /// Unit label printed after each value.
+    pub unit: String,
+}
+
+impl BarChart {
+    pub fn new(title: &str, series: &[&str], unit: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            series: series.iter().map(|s| s.to_string()).collect(),
+            groups: Vec::new(),
+            unit: unit.to_string(),
+        }
+    }
+
+    pub fn group(&mut self, label: &str, values: Vec<f64>) -> &mut Self {
+        assert_eq!(values.len(), self.series.len());
+        self.groups.push((label.to_string(), values));
+        self
+    }
+
+    /// Render; bar lengths are scaled to the global maximum.
+    pub fn render(&self) -> String {
+        const WIDTH: usize = 48;
+        let max = self
+            .groups
+            .iter()
+            .flat_map(|(_, vs)| vs.iter().copied())
+            .fold(0.0_f64, f64::max)
+            .max(1e-12);
+        let series_w = self.series.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        for (label, values) in &self.groups {
+            out.push_str(&format!("{label}\n"));
+            for (s, v) in self.series.iter().zip(values) {
+                let n = ((v / max) * WIDTH as f64).round() as usize;
+                out.push_str(&format!(
+                    "  {:<sw$} |{:<w$}| {:.1} {}\n",
+                    s,
+                    "#".repeat(n.min(WIDTH)),
+                    v,
+                    self.unit,
+                    sw = series_w,
+                    w = WIDTH
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["scenario", "ops"]);
+        t.row(vec!["Stocator".into(), "8".into()]);
+        t.row(vec!["S3a Base".into(), "117".into()]);
+        let r = t.render();
+        assert!(r.contains("== Demo =="));
+        assert!(r.contains("Stocator"));
+        // numeric column right-aligned: "  8" under "ops" width 3
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 5); // title, header, sep, 2 rows
+        assert!(lines[3].ends_with("  8 ") || lines[3].ends_with("  8"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn chart_scales_to_max() {
+        let mut c = BarChart::new("Ops", &["S3a", "Stocator"], "ops");
+        c.group("Teragen", vec![100.0, 10.0]);
+        let r = c.render();
+        // the 100-value bar should be full width (48 '#'), the 10-value ~5.
+        assert!(r.contains(&"#".repeat(48)));
+        assert!(r.contains("10.0 ops"));
+    }
+
+    #[test]
+    fn chart_handles_zero_values() {
+        let mut c = BarChart::new("z", &["a"], "x");
+        c.group("g", vec![0.0]);
+        let r = c.render();
+        assert!(r.contains("0.0 x"));
+    }
+}

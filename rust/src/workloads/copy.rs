@@ -1,0 +1,95 @@
+//! Copy workload (paper §4.3): read every input part and write it back to
+//! a new dataset — equal parts read and write.
+
+use super::readonly::discover_parts;
+use super::{WorkloadEnv, WorkloadReport};
+use crate::spark::task::{body, TaskBody, TaskResult};
+use crate::spark::SparkJob;
+
+pub fn run(env: &mut WorkloadEnv, input: &str, output: &str) -> WorkloadReport {
+    let ops_before = env.store.counters();
+    let parts = discover_parts(env, input);
+    assert!(!parts.is_empty(), "no input under {input}");
+    let expected_bytes: u64 = parts.iter().map(|(_, len)| len).sum();
+    let tasks: Vec<TaskBody> = parts
+        .iter()
+        .map(|(path, _)| {
+            let path = path.clone();
+            body(move |run| {
+                let data = run.fs.open(&path, run.ctx)?;
+                run.charge_compute(data.len() as u64);
+                let name = run.part_basename();
+                let written = run.write_part(&name, data.as_ref().clone())?;
+                Ok(TaskResult {
+                    bytes_read: data.len() as u64,
+                    bytes_written: written,
+                    records: 1,
+                    ..Default::default()
+                })
+            })
+        })
+        .collect();
+    let out_path = env.path(output);
+    let job = SparkJob::new("copy", Some(out_path), env.algorithm, tasks);
+    let stats = env.driver.run_job(&job).expect("copy job");
+
+    let ops_window = env.store.counters().since(&ops_before);
+    let validation = if !stats.success {
+        Err("job failed".into())
+    } else {
+        // Re-read both datasets and compare content byte-for-byte.
+        let in_path = env.path(input);
+        let out_path = env.path(output);
+        env.driver.driver_phase(|fs, ctx| {
+            let read_all = |ds: &crate::fs::Path, ctx: &mut crate::fs::OpCtx| -> Result<Vec<Vec<u8>>, String> {
+                let mut listing = fs.list_status(ds, ctx).map_err(|e| e.to_string())?;
+                listing.sort_by_key(|s| s.path.clone());
+                let mut out = Vec::new();
+                for st in listing {
+                    if st.is_dir || st.path.name().starts_with('_') {
+                        continue;
+                    }
+                    out.push(fs.open(&st.path, ctx).map_err(|e| e.to_string())?.as_ref().clone());
+                }
+                Ok(out)
+            };
+            let src = read_all(&in_path, ctx)?;
+            let dst = read_all(&out_path, ctx)?;
+            if src.len() != dst.len() {
+                return Err(format!("{} input parts vs {} output parts", src.len(), dst.len()));
+            }
+            let total: u64 = dst.iter().map(|d| d.len() as u64).sum();
+            if total != expected_bytes {
+                return Err(format!("copied {total} bytes, expected {expected_bytes}"));
+            }
+            // Parts may be renumbered but the multiset of contents must
+            // match; both sides are sorted by part index so compare 1:1.
+            for (i, (a, b)) in src.iter().zip(&dst).enumerate() {
+                if a != b {
+                    return Err(format!("part {i} differs after copy"));
+                }
+            }
+            Ok(format!("{} parts, {expected_bytes} bytes copied intact", dst.len()))
+        })
+    };
+    WorkloadReport::from_jobs("copy", vec![stats], validation).with_ops(ops_window)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OpKind;
+    use crate::workloads::input::upload_text_dataset;
+    use crate::workloads::tests_support::make_env;
+
+    #[test]
+    fn copy_roundtrips_content() {
+        let mut env = make_env("swift2d", 3, 1500);
+        upload_text_dataset(&env.store, "res", "src", 3, 1500, 21);
+        let report = run(&mut env, "src", "dst");
+        assert!(report.is_valid(), "{:?}", report.validation);
+        assert_eq!(report.ops.get(OpKind::CopyObject), 0);
+        assert!(report.jobs[0].bytes_read > 0);
+        assert_eq!(report.jobs[0].bytes_read, report.jobs[0].bytes_written);
+    }
+}

@@ -1,0 +1,173 @@
+//! Deterministic input generation + direct upload (the "data is already in
+//! the object store" precondition of every benchmark; upload ops happen
+//! before the measurement window).
+
+use crate::objectstore::{Metadata, ObjectStore};
+use crate::simclock::SimInstant;
+use crate::util::rng::Pcg32;
+
+/// Size of one Teragen-style record (10-byte key + 90-byte payload).
+pub const RECORD_BYTES: usize = 100;
+
+/// Vocabulary size for the Zipf-distributed Wordcount corpus.
+pub const VOCAB: usize = 10_000;
+
+/// Generate one part of line-oriented text (words drawn Zipf(1.1) from a
+/// `w<id>` vocabulary, ~8 words per line). Deterministic in (seed, part).
+/// Returns (bytes, line count, word count).
+pub fn text_part(seed: u64, part: usize, part_bytes: usize) -> (Vec<u8>, u64, u64) {
+    let mut rng = Pcg32::with_stream(seed, part as u64);
+    let mut out = Vec::with_capacity(part_bytes + 16);
+    let mut lines = 0u64;
+    let mut words = 0u64;
+    let mut col = 0usize;
+    while out.len() < part_bytes {
+        let w = rng.zipf(VOCAB, 1.1);
+        let token = format!("w{w}");
+        out.extend_from_slice(token.as_bytes());
+        words += 1;
+        col += 1;
+        if col == 8 {
+            out.push(b'\n');
+            lines += 1;
+            col = 0;
+        } else {
+            out.push(b' ');
+        }
+    }
+    if col != 0 {
+        out.push(b'\n');
+        lines += 1;
+    }
+    (out, lines, words)
+}
+
+/// Generate one part of Teragen-style binary records. Keys are the first
+/// 4 bytes, big-endian, non-negative (so they sort as i32). Deterministic
+/// in (seed, part). Returns (bytes, record count).
+pub fn tera_part(seed: u64, part: usize, part_bytes: usize) -> (Vec<u8>, u64) {
+    let mut rng = Pcg32::with_stream(seed ^ 0x7E7A, part as u64);
+    let records = (part_bytes / RECORD_BYTES).max(1);
+    let mut out = Vec::with_capacity(records * RECORD_BYTES);
+    for _ in 0..records {
+        let key = (rng.next_u32() >> 1) as i32; // non-negative
+        out.extend_from_slice(&key.to_be_bytes());
+        let mut rest = [0u8; RECORD_BYTES - 4];
+        for b in rest.iter_mut() {
+            *b = b'A' + rng.next_below(26) as u8;
+        }
+        out.extend_from_slice(&rest);
+    }
+    (out, records as u64)
+}
+
+/// Extract the i32 sort keys from a Teragen-format byte buffer.
+pub fn tera_keys(data: &[u8]) -> Vec<i32> {
+    data.chunks_exact(RECORD_BYTES)
+        .map(|r| i32::from_be_bytes(r[..4].try_into().unwrap()))
+        .collect()
+}
+
+/// Upload a text dataset directly to the store (outside any measurement
+/// window). Returns (total lines, total words, total bytes).
+pub fn upload_text_dataset(
+    store: &ObjectStore,
+    container: &str,
+    dataset: &str,
+    parts: usize,
+    part_bytes: usize,
+    seed: u64,
+) -> (u64, u64, u64) {
+    let mut lines = 0;
+    let mut words = 0;
+    let mut bytes = 0;
+    for p in 0..parts {
+        let (data, l, w) = text_part(seed, p, part_bytes);
+        lines += l;
+        words += w;
+        bytes += data.len() as u64;
+        store
+            .put_object(
+                container,
+                &format!("{dataset}/part-{p:05}"),
+                data,
+                Metadata::new(),
+                SimInstant::EPOCH,
+            )
+            .0
+            .expect("upload");
+    }
+    (lines, words, bytes)
+}
+
+/// Upload a Teragen-format dataset directly. Returns total records.
+pub fn upload_tera_dataset(
+    store: &ObjectStore,
+    container: &str,
+    dataset: &str,
+    parts: usize,
+    part_bytes: usize,
+    seed: u64,
+) -> u64 {
+    let mut records = 0;
+    for p in 0..parts {
+        let (data, r) = tera_part(seed, p, part_bytes);
+        records += r;
+        store
+            .put_object(
+                container,
+                &format!("{dataset}/part-{p:05}"),
+                data,
+                Metadata::new(),
+                SimInstant::EPOCH,
+            )
+            .0
+            .expect("upload");
+    }
+    records
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::StoreConfig;
+
+    #[test]
+    fn text_part_deterministic_and_counted() {
+        let (a, l1, w1) = text_part(1, 0, 1000);
+        let (b, l2, w2) = text_part(1, 0, 1000);
+        assert_eq!(a, b);
+        assert_eq!((l1, w1), (l2, w2));
+        let (c, _, _) = text_part(1, 1, 1000);
+        assert_ne!(a, c);
+        // Count lines/words independently.
+        let text = String::from_utf8(a).unwrap();
+        assert_eq!(text.lines().count() as u64, l1);
+        assert_eq!(text.split_whitespace().count() as u64, w1);
+    }
+
+    #[test]
+    fn tera_part_structure() {
+        let (data, n) = tera_part(2, 0, 1000);
+        assert_eq!(n, 10);
+        assert_eq!(data.len(), 1000);
+        let keys = tera_keys(&data);
+        assert_eq!(keys.len(), 10);
+        assert!(keys.iter().all(|&k| k >= 0));
+        // Payload is printable.
+        assert!(data[4..100].iter().all(|b| b.is_ascii_uppercase()));
+    }
+
+    #[test]
+    fn upload_helpers_populate_store() {
+        let store = ObjectStore::new(StoreConfig::instant_strong());
+        store.create_container("c", SimInstant::EPOCH).0.unwrap();
+        let (lines, words, bytes) = upload_text_dataset(&store, "c", "in", 3, 500, 9);
+        assert_eq!(store.debug_live_count("c"), 3);
+        assert_eq!(store.debug_live_bytes("c"), bytes);
+        assert!(lines > 0 && words > lines);
+        let recs = upload_tera_dataset(&store, "c", "tin", 2, 1000, 9);
+        assert_eq!(recs, 20);
+        assert_eq!(store.debug_live_count("c"), 5);
+    }
+}

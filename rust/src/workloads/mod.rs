@@ -1,0 +1,138 @@
+//! The paper's benchmark workloads (§4.3, Table 4): Read-only, Teragen
+//! (write-only), Copy, Wordcount, Terasort and the TPC-DS subset.
+//!
+//! Every workload runs real bytes through the full stack: data generated
+//! by [`input`], stored through a connector, computed through the XLA
+//! kernels ([`crate::runtime::Kernels`]), committed through
+//! [`crate::committer`], and validated against an independent oracle.
+
+pub mod input;
+pub mod readonly;
+pub mod teragen;
+pub mod copy;
+pub mod wordcount;
+pub mod terasort;
+pub mod tpcds;
+
+use crate::committer::CommitAlgorithm;
+use crate::fs::Path;
+use crate::metrics::OpCounts;
+use crate::objectstore::ObjectStore;
+use crate::runtime::Kernels;
+use crate::simclock::SimDuration;
+use crate::spark::{Driver, JobStats};
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Everything a workload needs to run.
+pub struct WorkloadEnv {
+    pub driver: Driver,
+    pub store: Arc<ObjectStore>,
+    pub container: String,
+    /// Path scheme of the connector under test.
+    pub scheme: String,
+    pub algorithm: CommitAlgorithm,
+    pub kernels: Rc<Kernels>,
+    /// Number of input/output parts (paper: 372 for the 46.5 GB dataset).
+    pub parts: usize,
+    /// Simulated bytes per part (scaled by the latency model's data_scale).
+    pub part_bytes: usize,
+    pub seed: u64,
+}
+
+impl WorkloadEnv {
+    pub fn path(&self, key: &str) -> Path {
+        Path::new(&self.scheme, &self.container, key)
+    }
+}
+
+/// A completed workload run.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub workload: String,
+    pub jobs: Vec<JobStats>,
+    /// End-to-end virtual runtime (sum of job runtimes).
+    pub runtime: SimDuration,
+    /// REST ops across all jobs (input preparation excluded).
+    pub ops: OpCounts,
+    /// Ok(summary) if the output validated against the oracle.
+    pub validation: Result<String, String>,
+}
+
+impl WorkloadReport {
+    pub fn from_jobs(workload: &str, jobs: Vec<JobStats>, validation: Result<String, String>) -> Self {
+        let runtime = jobs.iter().map(|j| j.runtime).sum();
+        let ops = jobs
+            .iter()
+            .fold(OpCounts::default(), |acc, j| acc.plus(&j.ops));
+        WorkloadReport {
+            workload: workload.to_string(),
+            jobs,
+            runtime,
+            ops,
+            validation,
+        }
+    }
+
+    /// Override the op counts with an explicitly measured window (jobs +
+    /// driver-side input discovery, validation reads excluded).
+    pub fn with_ops(mut self, ops: OpCounts) -> Self {
+        self.ops = ops;
+        self
+    }
+
+    pub fn is_valid(&self) -> bool {
+        self.validation.is_ok()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use super::*;
+    use crate::objectstore::StoreConfig;
+    use crate::runtime::fallback::Fallback;
+    use crate::simclock::SimInstant;
+    use crate::spark::{ComputeModel, SparkConfig};
+
+    /// Build a small test environment on the given connector scheme with
+    /// FileOutputCommitter v1 semantics.
+    pub fn make_env(scheme: &str, parts: usize, part_bytes: usize) -> WorkloadEnv {
+        make_env_with(scheme, CommitAlgorithm::V1, parts, part_bytes)
+    }
+
+    pub fn make_env_with(
+        scheme: &str,
+        algorithm: CommitAlgorithm,
+        parts: usize,
+        part_bytes: usize,
+    ) -> WorkloadEnv {
+        let store = ObjectStore::new(StoreConfig::instant_strong());
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs: Arc<dyn crate::fs::FileSystem> = match scheme {
+            "swift2d" => crate::connectors::Stocator::with_defaults(store.clone()),
+            "swift" => crate::connectors::HadoopSwift::new(store.clone()),
+            "s3a" => crate::connectors::S3a::new(store.clone(), Default::default()),
+            other => panic!("unknown scheme {other}"),
+        };
+        let driver = Driver::new(
+            SparkConfig {
+                slots: 8,
+                ..Default::default()
+            },
+            fs,
+            Some(store.clone()),
+            ComputeModel::free(),
+        );
+        WorkloadEnv {
+            driver,
+            store,
+            container: "res".into(),
+            scheme: scheme.into(),
+            algorithm,
+            kernels: Rc::new(Kernels::Native(Fallback)),
+            parts,
+            part_bytes,
+            seed: 42,
+        }
+    }
+}

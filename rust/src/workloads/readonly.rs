@@ -1,0 +1,104 @@
+//! Read-only workload (paper §4.3): read a text dataset and count its
+//! lines. One job, one task per input part; compute runs on the
+//! `readonly_chunk` kernel.
+
+use super::{WorkloadEnv, WorkloadReport};
+use crate::committer::CommitAlgorithm;
+use crate::runtime::{pad_chunk, CHUNK};
+use crate::spark::task::{body, TaskBody, TaskResult};
+use crate::spark::SparkJob;
+
+/// Discover the input parts of `dataset` driver-side (Hadoop's
+/// FileInputFormat: list, drop `_`-prefixed entries, sort).
+pub fn discover_parts(env: &mut WorkloadEnv, dataset: &str) -> Vec<(crate::fs::Path, u64)> {
+    let ds_path = env.path(dataset);
+    env.driver.driver_phase(|fs, ctx| {
+        let mut parts: Vec<(crate::fs::Path, u64)> = fs
+            .list_status(&ds_path, ctx)
+            .unwrap_or_default()
+            .into_iter()
+            .filter(|s| !s.is_dir && !s.path.name().starts_with('_') && !s.path.name().starts_with('.'))
+            .map(|s| (s.path, s.len))
+            .collect();
+        parts.sort();
+        parts
+    })
+}
+
+/// Run the Read-only workload over `dataset`. `expected_lines` is the
+/// generator's oracle.
+pub fn run(env: &mut WorkloadEnv, dataset: &str, expected_lines: u64) -> WorkloadReport {
+    let ops_before = env.store.counters();
+    let parts = discover_parts(env, dataset);
+    assert!(!parts.is_empty(), "no input parts under {dataset}");
+    let kernels = env.kernels.clone();
+    let tasks: Vec<TaskBody> = parts
+        .iter()
+        .map(|(path, _)| {
+            let path = path.clone();
+            let kernels = kernels.clone();
+            body(move |run| {
+                let data = run.fs.open(&path, run.ctx)?;
+                run.charge_compute(data.len() as u64);
+                let mut lines = 0i64;
+                for chunk in data.chunks(CHUNK) {
+                    let ints: Vec<i32> = chunk.iter().map(|&b| b as i32).collect();
+                    let padded = pad_chunk(&ints, 0);
+                    let [nl, _nz] = kernels
+                        .readonly_chunk(&padded)
+                        .map_err(|e| crate::fs::FsError::Io(e.to_string()))?;
+                    lines += nl as i64;
+                }
+                Ok(TaskResult {
+                    bytes_read: data.len() as u64,
+                    records: lines as u64,
+                    collected: Some(lines.to_le_bytes().to_vec()),
+                    ..Default::default()
+                })
+            })
+        })
+        .collect();
+    let job = SparkJob::new("readonly", None, CommitAlgorithm::V1, tasks);
+    let stats = env.driver.run_job(&job).expect("readonly job");
+    let total: i64 = stats
+        .collected
+        .iter()
+        .flatten()
+        .map(|b| i64::from_le_bytes(b[..8].try_into().unwrap()))
+        .sum();
+    let ops_window = env.store.counters().since(&ops_before);
+    let validation = if !stats.success {
+        Err("job failed".into())
+    } else if total as u64 == expected_lines {
+        Ok(format!("counted {total} lines (matches oracle)"))
+    } else {
+        Err(format!("counted {total} lines, expected {expected_lines}"))
+    };
+    WorkloadReport::from_jobs("readonly", vec![stats], validation).with_ops(ops_window)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::input::upload_text_dataset;
+    use crate::workloads::tests_support::make_env;
+
+    #[test]
+    fn readonly_counts_lines_exactly() {
+        let mut env = make_env("swift2d", 4, 2000);
+        let (lines, _, _) = upload_text_dataset(&env.store, "res", "in.txt", 4, 2000, 5);
+        let report = run(&mut env, "in.txt", lines);
+        assert!(report.is_valid(), "{:?}", report.validation);
+        assert_eq!(report.jobs.len(), 1);
+        assert!(report.ops.total() > 0);
+        assert_eq!(report.ops.get(crate::metrics::OpKind::PutObject), 0);
+    }
+
+    #[test]
+    fn readonly_detects_wrong_oracle() {
+        let mut env = make_env("swift2d", 2, 1000);
+        let (lines, _, _) = upload_text_dataset(&env.store, "res", "in.txt", 2, 1000, 5);
+        let report = run(&mut env, "in.txt", lines + 1);
+        assert!(!report.is_valid());
+    }
+}

@@ -1,0 +1,234 @@
+//! Terasort (paper §4.3): sort a Teragen dataset globally.
+//!
+//! Three phases: (1) the driver samples input keys and derives 63 range
+//! splitters; (2) a map job assigns every record to a partition on the
+//! `terasort_partition_chunk` XLA kernel and shuffles record bytes; (3) a
+//! reduce job sorts each partition and writes output parts through the
+//! commit protocol. Validation checks global order and key conservation.
+
+use super::input::{tera_keys, RECORD_BYTES};
+use super::readonly::discover_parts;
+use super::{WorkloadEnv, WorkloadReport};
+use crate::committer::CommitAlgorithm;
+use crate::runtime::{pad_chunk, CHUNK, PARTS};
+use crate::spark::task::{body, TaskBody, TaskResult};
+use crate::spark::{ShuffleStore, SparkJob};
+
+/// Sample splitters from up to 8 input parts (Spark's RangePartitioner
+/// samples a subset of partitions; with our scaled-down parts one part
+/// holds too few records for balanced quantiles).
+fn sample_splitters(env: &mut WorkloadEnv, parts: &[(crate::fs::Path, u64)]) -> Vec<i32> {
+    let sample: Vec<crate::fs::Path> = parts
+        .iter()
+        .take(8)
+        .map(|(p, _)| p.clone())
+        .collect();
+    env.driver.driver_phase(|fs, ctx| {
+        let mut keys = Vec::new();
+        for path in &sample {
+            let data = fs.open(path, ctx).expect("sample part");
+            keys.extend(tera_keys(&data));
+        }
+        keys.sort_unstable();
+        (1..PARTS)
+            .map(|i| keys[i * keys.len() / PARTS])
+            .collect()
+    })
+}
+
+pub fn run(env: &mut WorkloadEnv, input: &str, output: &str) -> WorkloadReport {
+    let ops_before = env.store.counters();
+    let parts = discover_parts(env, input);
+    assert!(!parts.is_empty(), "no input under {input}");
+    let splitters = sample_splitters(env, &parts);
+    assert_eq!(splitters.len(), PARTS - 1);
+    // Reducers fetch from many map outputs in parallel; the paper's
+    // 10 Gbps NICs sustain ~4 concurrent shuffle streams per reduce task.
+    let shuffle = ShuffleStore::new(
+        env.store.config.latency.stream_bw.saturating_mul(4),
+        env.store.config.latency.data_scale,
+    );
+
+    // --- map: partition records by key range.
+    let kernels = env.kernels.clone();
+    let map_tasks: Vec<TaskBody> = parts
+        .iter()
+        .map(|(path, _)| {
+            let path = path.clone();
+            let kernels = kernels.clone();
+            let splitters = splitters.clone();
+            body(move |run| {
+                let data = run.fs.open(&path, run.ctx)?;
+                run.charge_compute(data.len() as u64);
+                let keys = tera_keys(&data);
+                let mut buckets: Vec<Vec<u8>> = vec![Vec::new(); PARTS];
+                for (chunk_idx, chunk) in keys.chunks(CHUNK).enumerate() {
+                    // Padding keys = MAX routes to the last partition, but
+                    // we only consume `chunk.len()` assignments.
+                    let padded = pad_chunk(chunk, i32::MAX);
+                    let (assign, _hist) = kernels
+                        .terasort_partition_chunk(&padded, &splitters)
+                        .map_err(|e| crate::fs::FsError::Io(e.to_string()))?;
+                    for (i, &p) in assign[..chunk.len()].iter().enumerate() {
+                        let rec = chunk_idx * CHUNK + i;
+                        let off = rec * RECORD_BYTES;
+                        buckets[p as usize]
+                            .extend_from_slice(&data[off..off + RECORD_BYTES]);
+                    }
+                }
+                let shuffle_out = buckets
+                    .into_iter()
+                    .enumerate()
+                    .filter(|(_, b)| !b.is_empty())
+                    .collect();
+                Ok(TaskResult {
+                    bytes_read: data.len() as u64,
+                    records: keys.len() as u64,
+                    shuffle_out,
+                    ..Default::default()
+                })
+            })
+        })
+        .collect();
+    let map_job = SparkJob::new("terasort-map", None, CommitAlgorithm::V1, map_tasks)
+        .with_shuffle_out(shuffle.clone());
+    let map_stats = env.driver.run_job(&map_job).expect("map stage");
+    let total_records = map_stats.records;
+
+    // --- reduce: sort each partition, write output part.
+    let reduce_tasks: Vec<TaskBody> = (0..PARTS)
+        .map(|_| {
+            body(move |run| {
+                let mut records: Vec<&[u8]> = Vec::new();
+                let blocks = run.shuffle_in.clone();
+                for block in &blocks {
+                    for rec in block.chunks_exact(RECORD_BYTES) {
+                        records.push(rec);
+                    }
+                }
+                let bytes: u64 = (records.len() * RECORD_BYTES) as u64;
+                run.charge_compute(bytes);
+                records.sort_by_key(|r| i32::from_be_bytes(r[..4].try_into().unwrap()));
+                let mut out = Vec::with_capacity(records.len() * RECORD_BYTES);
+                for r in &records {
+                    out.extend_from_slice(r);
+                }
+                let name = run.part_basename();
+                let written = run.write_part(&name, out)?;
+                Ok(TaskResult {
+                    bytes_written: written,
+                    records: records.len() as u64,
+                    ..Default::default()
+                })
+            })
+        })
+        .collect();
+    let out_path = env.path(output);
+    let reduce_job = SparkJob::new("terasort-reduce", Some(out_path), env.algorithm, reduce_tasks)
+        .with_shuffle_in(shuffle);
+    let reduce_stats = env.driver.run_job(&reduce_job).expect("reduce stage");
+
+    let ops_window = env.store.counters().since(&ops_before);
+    let validation = validate(env, output, total_records, &map_stats, &reduce_stats);
+    WorkloadReport::from_jobs("terasort", vec![map_stats, reduce_stats], validation).with_ops(ops_window)
+}
+
+fn validate(
+    env: &mut WorkloadEnv,
+    output: &str,
+    total_records: u64,
+    map_stats: &crate::spark::JobStats,
+    reduce_stats: &crate::spark::JobStats,
+) -> Result<String, String> {
+    if !map_stats.success || !reduce_stats.success {
+        return Err("a stage failed".into());
+    }
+    if reduce_stats.records != total_records {
+        return Err(format!(
+            "reduce wrote {} records, map read {total_records}",
+            reduce_stats.records
+        ));
+    }
+    let out_path = env.path(output);
+    env.driver.driver_phase(|fs, ctx| {
+        let mut listing: Vec<_> = fs
+            .list_status(&out_path, ctx)
+            .map_err(|e| e.to_string())?
+            .into_iter()
+            .filter(|s| !s.is_dir && !s.path.name().starts_with('_'))
+            .collect();
+        listing.sort_by_key(|s| s.path.clone());
+        let mut prev_max = i32::MIN;
+        let mut count = 0u64;
+        for st in listing {
+            let data = fs.open(&st.path, ctx).map_err(|e| e.to_string())?;
+            let keys = tera_keys(&data);
+            count += keys.len() as u64;
+            for w in keys.windows(2) {
+                if w[0] > w[1] {
+                    return Err(format!("{} not sorted", st.path));
+                }
+            }
+            if let (Some(&first), Some(&last)) = (keys.first(), keys.last()) {
+                if first < prev_max {
+                    return Err(format!(
+                        "partition boundary violated at {} ({first} < {prev_max})",
+                        st.path
+                    ));
+                }
+                prev_max = last;
+            }
+        }
+        if count != total_records {
+            return Err(format!("output holds {count} records, expected {total_records}"));
+        }
+        Ok(format!("{count} records globally sorted across {PARTS} partitions"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OpKind;
+    use crate::workloads::input::upload_tera_dataset;
+    use crate::workloads::tests_support::make_env;
+
+    #[test]
+    fn terasort_produces_globally_sorted_output() {
+        let mut env = make_env("swift2d", 4, 5_000);
+        let records = upload_tera_dataset(&env.store, "res", "tin", 4, 5_000, 55);
+        assert_eq!(records, 200);
+        let report = run(&mut env, "tin", "tsorted");
+        assert!(report.is_valid(), "{:?}", report.validation);
+        assert_eq!(report.jobs.len(), 2);
+        assert_eq!(report.ops.get(OpKind::CopyObject), 0, "stocator never copies");
+    }
+
+    #[test]
+    fn terasort_conserves_key_multiset() {
+        let mut env = make_env("swift2d", 3, 3_000);
+        upload_tera_dataset(&env.store, "res", "tin", 3, 3_000, 56);
+        let report = run(&mut env, "tin", "tsorted");
+        assert!(report.is_valid());
+        // Key checksum in == out.
+        let sum_keys = |prefix: &str| -> (u64, u64) {
+            let mut sum = 0u64;
+            let mut n = 0u64;
+            for key in env.store.debug_names("res", prefix) {
+                if key.contains("_SUCCESS") || key.ends_with('/') || !key.contains("part-") {
+                    continue;
+                }
+                let (obj, _) = env.store.get_object("res", &key);
+                for k in tera_keys(&obj.unwrap().data) {
+                    sum = sum.wrapping_add(k as u64);
+                    n += 1;
+                }
+            }
+            (sum, n)
+        };
+        let (in_sum, in_n) = sum_keys("tin/");
+        let (out_sum, out_n) = sum_keys("tsorted/");
+        assert_eq!(in_n, out_n);
+        assert_eq!(in_sum, out_sum);
+    }
+}

@@ -1,0 +1,232 @@
+//! TPC-DS subset workload (paper §4.3): run the 8 Impala-subset queries
+//! over a parquetish star schema on the object store.
+//!
+//! Prep (outside the measurement window) writes the fact shards; each
+//! query is then one read-only job scanning every shard, aggregating on
+//! the `tpcds_agg_chunk` XLA kernel, merged in the driver and validated
+//! against [`crate::query::queries::reference_eval`].
+
+use super::{WorkloadEnv, WorkloadReport};
+use crate::columnar::RowGroup;
+use crate::committer::CommitAlgorithm;
+use crate::fs::Path;
+use crate::metrics::OpCounts;
+use crate::objectstore::Metadata;
+use crate::query::datagen::StarSchema;
+use crate::query::queries::{
+    self, finalize, merge_partials, merge_scalar, Broadcast, QueryResult, QUERIES,
+};
+use crate::runtime::{pad_chunk, CHUNK, GROUPS};
+use crate::simclock::SimInstant;
+use crate::spark::task::{body, TaskBody, TaskResult};
+use crate::spark::SparkJob;
+use std::rc::Rc;
+
+/// Upload the fact table as parquetish shards (prep phase).
+pub fn upload_star_schema(env: &WorkloadEnv, dataset: &str, schema: &StarSchema) -> u64 {
+    let mut bytes = 0;
+    for shard in 0..schema.shards {
+        let rg = schema.fact_shard(shard);
+        let data = rg.encode();
+        bytes += data.len() as u64;
+        env.store
+            .put_object(
+                &env.container,
+                &format!("{dataset}/part-{shard:05}.pqsh"),
+                data,
+                Metadata::new(),
+                SimInstant::EPOCH,
+            )
+            .0
+            .expect("upload shard");
+    }
+    bytes
+}
+
+/// Serialized per-task partial: [sums f64; GROUPS] + [counts i64; GROUPS]
+/// + rows u64, or for ss_max: [max_sk i32, max_profit f32, rows u64].
+fn encode_groups(sums: &[f64], counts: &[i64], rows: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(GROUPS * 16 + 8);
+    for s in sums {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    for c in counts {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    out.extend_from_slice(&rows.to_le_bytes());
+    out
+}
+
+fn decode_groups(bytes: &[u8]) -> (Vec<f64>, Vec<i64>, u64) {
+    let mut sums = Vec::with_capacity(GROUPS);
+    let mut counts = Vec::with_capacity(GROUPS);
+    for g in 0..GROUPS {
+        sums.push(f64::from_le_bytes(bytes[g * 8..g * 8 + 8].try_into().unwrap()));
+    }
+    let base = GROUPS * 8;
+    for g in 0..GROUPS {
+        counts.push(i64::from_le_bytes(
+            bytes[base + g * 8..base + g * 8 + 8].try_into().unwrap(),
+        ));
+    }
+    let rows = u64::from_le_bytes(bytes[GROUPS * 16..GROUPS * 16 + 8].try_into().unwrap());
+    (sums, counts, rows)
+}
+
+/// Run one query as a Spark job over the shard objects.
+fn run_query(
+    env: &mut WorkloadEnv,
+    query: &'static str,
+    shard_paths: &[Path],
+    bc: Rc<Broadcast>,
+) -> (crate::spark::JobStats, QueryResult) {
+    let kernels = env.kernels.clone();
+    let tasks: Vec<TaskBody> = shard_paths
+        .iter()
+        .map(|path| {
+            let path = path.clone();
+            let kernels = kernels.clone();
+            let bc = bc.clone();
+            body(move |run| {
+                let data = run.fs.open(&path, run.ctx)?;
+                run.charge_compute(data.len() as u64);
+                let rg = RowGroup::decode(&data)
+                    .map_err(|e| crate::fs::FsError::Io(format!("{path}: {e}")))?;
+                let rows = rg.rows as u64;
+                let collected = if query == "ss_max" {
+                    let (sk, p) = queries::scalar_max(&rg);
+                    let mut out = sk.to_le_bytes().to_vec();
+                    out.extend_from_slice(&p.to_le_bytes());
+                    out.extend_from_slice(&rows.to_le_bytes());
+                    out
+                } else {
+                    let (keys, vals) = queries::plan_rows(query, &rg, &bc);
+                    let mut sums = vec![0f64; GROUPS];
+                    let mut counts = vec![0i64; GROUPS];
+                    for (kc, vc) in keys.chunks(CHUNK).zip(vals.chunks(CHUNK)) {
+                        let kp = pad_chunk(kc, -1);
+                        let vp = pad_chunk(vc, 0.0);
+                        let (s, c) = kernels
+                            .tpcds_agg_chunk(&kp, &vp)
+                            .map_err(|e| crate::fs::FsError::Io(e.to_string()))?;
+                        for g in 0..GROUPS {
+                            sums[g] += s[g] as f64;
+                            counts[g] += c[g] as i64;
+                        }
+                    }
+                    encode_groups(&sums, &counts, rows)
+                };
+                Ok(TaskResult {
+                    bytes_read: data.len() as u64,
+                    records: rows,
+                    collected: Some(collected),
+                    ..Default::default()
+                })
+            })
+        })
+        .collect();
+    let job = SparkJob::new(&format!("tpcds-{query}"), None, CommitAlgorithm::V1, tasks);
+    let stats = env.driver.run_job(&job).expect("query job");
+
+    // Driver-side merge.
+    let mut acc = QueryResult::empty(query);
+    for payload in stats.collected.iter().flatten() {
+        if query == "ss_max" {
+            let sk = i32::from_le_bytes(payload[..4].try_into().unwrap());
+            let p = f32::from_le_bytes(payload[4..8].try_into().unwrap());
+            acc.rows_scanned += u64::from_le_bytes(payload[8..16].try_into().unwrap());
+            merge_scalar(&mut acc, (sk, p));
+        } else {
+            let (sums, counts, rows) = decode_groups(payload);
+            acc.rows_scanned += rows;
+            let sums_f32: Vec<f32> = sums.iter().map(|&s| s as f32).collect();
+            let counts_i32: Vec<i32> = counts.iter().map(|&c| c as i32).collect();
+            merge_partials(&mut acc, &sums_f32, &counts_i32);
+        }
+    }
+    (stats, finalize(acc))
+}
+
+/// Run all 8 queries over `dataset` (previously uploaded via
+/// [`upload_star_schema`] from `schema`).
+pub fn run(env: &mut WorkloadEnv, dataset: &str, schema: &StarSchema) -> WorkloadReport {
+    let ops_before = env.store.counters();
+    // Discover shards through the connector (read path under test).
+    let parts = super::readonly::discover_parts(env, dataset);
+    assert_eq!(parts.len(), schema.shards, "shard discovery mismatch");
+    let shard_paths: Vec<Path> = parts.into_iter().map(|(p, _)| p).collect();
+    let bc = Rc::new(Broadcast::from_schema(schema));
+
+    let mut jobs = Vec::new();
+    let mut failures = Vec::new();
+    let mut summaries = Vec::new();
+    for query in QUERIES {
+        let (stats, result) = run_query(env, query, &shard_paths, bc.clone());
+        let reference = queries::reference_eval(query, schema);
+        if !stats.success {
+            failures.push(format!("{query}: job failed"));
+        } else if !results_match(&result, &reference) {
+            failures.push(format!("{query}: result mismatch vs reference"));
+        } else {
+            summaries.push(format!(
+                "{query}={}g",
+                if query == "ss_max" { 1 } else { result.groups.len() }
+            ));
+        }
+        jobs.push(stats);
+    }
+    let ops_window = env.store.counters().since(&ops_before);
+    let validation = if failures.is_empty() {
+        Ok(format!(
+            "8/8 queries match reference over {} rows [{}]",
+            schema.total_rows(),
+            summaries.join(" ")
+        ))
+    } else {
+        Err(failures.join("; "))
+    };
+    WorkloadReport::from_jobs("tpcds", jobs, validation).with_ops(ops_window)
+}
+
+fn results_match(a: &QueryResult, b: &QueryResult) -> bool {
+    if a.rows_scanned != b.rows_scanned {
+        return false;
+    }
+    match (a.scalar_max, b.scalar_max) {
+        (Some((ska, pa)), Some((skb, pb))) => return ska == skb && (pa - pb).abs() < 1e-3,
+        (None, None) => {}
+        _ => return false,
+    }
+    if a.groups.len() != b.groups.len() {
+        return false;
+    }
+    a.groups.iter().zip(&b.groups).all(|(x, y)| {
+        x.0 == y.0 && x.2 == y.2 && (x.1 - y.1).abs() < (x.1.abs() * 1e-4).max(1.0)
+    })
+}
+
+/// Total REST ops of a TPC-DS report (used by the harness tables).
+pub fn total_ops(report: &WorkloadReport) -> OpCounts {
+    report.ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OpKind;
+    use crate::workloads::tests_support::make_env;
+
+    #[test]
+    fn tpcds_all_queries_match_reference() {
+        let mut env = make_env("swift2d", 3, 0);
+        let schema = StarSchema::new(env.seed, 3, 2 * CHUNK);
+        upload_star_schema(&env, "sales", &schema);
+        let report = run(&mut env, "sales", &schema);
+        assert!(report.is_valid(), "{:?}", report.validation);
+        assert_eq!(report.jobs.len(), 8);
+        // Read-only: no writes, no copies.
+        assert_eq!(report.ops.get(OpKind::PutObject), 0);
+        assert_eq!(report.ops.get(OpKind::CopyObject), 0);
+        assert!(report.ops.get(OpKind::GetObject) >= 24, "8 queries x 3 shards");
+    }
+}

@@ -1,0 +1,187 @@
+//! Failure injection across the consistency spectrum: what breaks, what
+//! survives, and that Stocator's two read strategies both stay exact.
+
+use std::sync::Arc;
+use stocator::committer::CommitAlgorithm;
+use stocator::connectors::{HadoopSwift, ReadStrategy, Stocator, StocatorConfig};
+use stocator::fs::{FileSystem, OpCtx, Path};
+use stocator::objectstore::{ConsistencyModel, LatencyModel, ObjectStore, StoreConfig};
+use stocator::runtime::fallback::Fallback;
+use stocator::runtime::Kernels;
+use stocator::simclock::{SimDuration, SimInstant};
+use stocator::spark::{ComputeModel, Driver, FaultKind, FaultPlan, SparkConfig, SparkJob, TaskResult};
+use stocator::spark::task::{body, TaskBody};
+
+fn store_with_lag(lag_s: u64) -> Arc<ObjectStore> {
+    let store = ObjectStore::new(StoreConfig {
+        latency: LatencyModel::instant(),
+        consistency: ConsistencyModel::adversarial(SimDuration::from_secs(lag_s)),
+        min_part_size: 0,
+        seed: 0,
+    });
+    store.create_container("res", SimInstant::EPOCH).0.unwrap();
+    store
+}
+
+fn writer_tasks(n: usize) -> Vec<TaskBody> {
+    (0..n)
+        .map(|i| {
+            body(move |run: &mut stocator::spark::TaskRun<'_>| {
+                let name = run.part_basename();
+                let written = run.write_part(&name, vec![i as u8; 50])?;
+                Ok(TaskResult {
+                    bytes_written: written,
+                    records: 1,
+                    ..Default::default()
+                })
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn legacy_connector_loses_output_under_listing_lag() {
+    let store = store_with_lag(3600);
+    let fs = HadoopSwift::new(store.clone());
+    let mut driver = Driver::new(
+        SparkConfig { slots: 4, ..Default::default() },
+        fs,
+        Some(store.clone()),
+        ComputeModel::free(),
+    );
+    let job = SparkJob::new(
+        "doomed",
+        Some(Path::parse("swift://res/out").unwrap()),
+        CommitAlgorithm::V1,
+        writer_tasks(4),
+    );
+    let stats = driver.run_job(&job).unwrap();
+    // The job "succeeds" — that is the insidious part (paper §2.2.2).
+    assert!(stats.success);
+    let finals = store
+        .debug_names("res", "out/")
+        .iter()
+        .filter(|n| n.starts_with("out/part-"))
+        .count();
+    assert_eq!(finals, 0, "every part was silently lost by lagging listings");
+}
+
+#[test]
+fn stocator_survives_listing_lag_with_manifest_reads() {
+    let store = store_with_lag(3600);
+    let fs = Stocator::new(
+        store.clone(),
+        StocatorConfig { read_strategy: ReadStrategy::Manifest, cache_capacity: 64 },
+    );
+    let mut driver = Driver::new(
+        SparkConfig { slots: 4, ..Default::default() },
+        fs.clone(),
+        Some(store.clone()),
+        ComputeModel::free(),
+    );
+    let job = SparkJob::new(
+        "safe",
+        Some(Path::parse("swift2d://res/out").unwrap()),
+        CommitAlgorithm::V1,
+        writer_tasks(4),
+    );
+    let stats = driver.run_job(&job).unwrap();
+    assert!(stats.success);
+    let mut ctx = OpCtx::new(SimInstant(stats.end.0));
+    let listing = fs
+        .list_status(&Path::parse("swift2d://res/out").unwrap(), &mut ctx)
+        .unwrap();
+    let parts = listing.iter().filter(|s| s.path.name().starts_with("part-")).count();
+    assert_eq!(parts, 4);
+}
+
+#[test]
+fn crash_retry_speculation_storm_still_yields_exact_output() {
+    // Pile every fault type onto one job; the read side must still see
+    // exactly one part per task with full content.
+    let store = ObjectStore::new(StoreConfig::instant_strong());
+    store.create_container("res", SimInstant::EPOCH).0.unwrap();
+    let fs = Stocator::with_defaults(store.clone());
+    let mut driver = Driver::new(
+        SparkConfig {
+            slots: 4,
+            speculation: true,
+            cleanup_speculation: false, // worst case: losers remain
+            ..Default::default()
+        },
+        fs.clone(),
+        Some(store.clone()),
+        ComputeModel::free(),
+    );
+    let faults = FaultPlan::none()
+        .with(0, 0, FaultKind::CrashBeforeWrite)
+        .with(1, 0, FaultKind::CrashAfterPartialWrite { fraction: 0.4 })
+        .with(2, 0, FaultKind::Straggle { extra: SimDuration::from_secs(500) });
+    let job = SparkJob::new(
+        "storm",
+        Some(Path::parse("swift2d://res/out").unwrap()),
+        CommitAlgorithm::V1,
+        writer_tasks(6),
+    )
+    .with_faults(faults);
+    let stats = driver.run_job(&job).unwrap();
+    assert!(stats.success);
+    assert!(stats.failed_attempts >= 2);
+    assert_eq!(stats.speculative_attempts, 1);
+
+    let mut ctx = OpCtx::new(SimInstant(stats.end.0));
+    let listing = fs
+        .list_status(&Path::parse("swift2d://res/out").unwrap(), &mut ctx)
+        .unwrap();
+    let parts: Vec<_> = listing
+        .iter()
+        .filter(|s| s.path.name().starts_with("part-"))
+        .collect();
+    assert_eq!(parts.len(), 6, "{parts:?}");
+    for p in parts {
+        assert_eq!(p.len, 50, "partial write must not win: {}", p.path);
+        let data = fs.open(&p.path, &mut ctx).unwrap();
+        assert_eq!(data.len(), 50);
+    }
+}
+
+#[test]
+fn kernels_work_inside_faulty_jobs() {
+    // A compute-heavy task body using the kernel dispatcher under retries.
+    let store = ObjectStore::new(StoreConfig::instant_strong());
+    store.create_container("res", SimInstant::EPOCH).0.unwrap();
+    let fs = Stocator::with_defaults(store.clone());
+    let mut driver = Driver::new(
+        SparkConfig { slots: 2, ..Default::default() },
+        fs,
+        Some(store),
+        ComputeModel::free(),
+    );
+    let kernels = std::rc::Rc::new(Kernels::Native(Fallback));
+    let tasks: Vec<TaskBody> = (0..2)
+        .map(|_| {
+            let kernels = kernels.clone();
+            body(move |run: &mut stocator::spark::TaskRun<'_>| {
+                let toks = stocator::runtime::pad_chunk(&[5i32, 9, 5], 0);
+                let (hist, n) = kernels
+                    .wordcount_chunk(&toks)
+                    .map_err(|e| stocator::fs::FsError::Io(e.to_string()))?;
+                assert_eq!(n, 3);
+                assert_eq!(hist.iter().sum::<i32>(), 3);
+                let name = run.part_basename();
+                run.write_part(&name, vec![1u8; 8])?;
+                Ok(TaskResult { records: n as u64, ..Default::default() })
+            })
+        })
+        .collect();
+    let job = SparkJob::new(
+        "kern",
+        Some(Path::parse("swift2d://res/k").unwrap()),
+        CommitAlgorithm::V2,
+        tasks,
+    )
+    .with_faults(FaultPlan::none().with(0, 0, FaultKind::CrashBeforeWrite));
+    let stats = driver.run_job(&job).unwrap();
+    assert!(stats.success);
+    assert_eq!(stats.records, 6);
+}

@@ -1,0 +1,115 @@
+//! XLA-vs-native kernel parity: the AOT-compiled artifacts must compute
+//! exactly what the pure-Rust fallback (= ref.py) computes. Requires
+//! `make artifacts`; skips (with a visible marker) when absent.
+
+use stocator::runtime::{fallback::Fallback, Engine, Kernels, BUCKETS, CHUNK, GROUPS, PARTS};
+use stocator::util::rng::Pcg32;
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP: artifacts not available ({err}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn engine_loads_all_models() {
+    let Some(e) = engine() else { return };
+    let models = e.models();
+    for m in [
+        "wordcount_chunk",
+        "terasort_partition_chunk",
+        "readonly_chunk",
+        "tpcds_agg_chunk",
+    ] {
+        assert!(models.contains(&m), "{models:?}");
+    }
+    assert_eq!(e.platform, "cpu");
+}
+
+#[test]
+fn wordcount_parity() {
+    let Some(e) = engine() else { return };
+    let mut rng = Pcg32::new(42);
+    for case in 0..5 {
+        let n = rng.range(0, CHUNK + 1);
+        let mut toks = vec![0i32; CHUNK];
+        for t in toks.iter_mut().take(n) {
+            *t = rng.range(1, 1 << 20) as i32;
+        }
+        let (xh, xn) = e.wordcount_chunk(&toks).unwrap();
+        let (nh, nn) = Fallback.wordcount_chunk(&toks);
+        assert_eq!(xn, nn, "case {case}");
+        assert_eq!(xh, nh, "case {case}");
+        assert_eq!(xh.len(), BUCKETS);
+    }
+}
+
+#[test]
+fn terasort_parity() {
+    let Some(e) = engine() else { return };
+    let mut rng = Pcg32::new(43);
+    for case in 0..5 {
+        let keys: Vec<i32> = (0..CHUNK).map(|_| rng.range(0, 1 << 20) as i32).collect();
+        let mut splitters: Vec<i32> =
+            (0..PARTS - 1).map(|_| rng.range(0, 1 << 20) as i32).collect();
+        splitters.sort();
+        let (xa, xh) = e.terasort_partition_chunk(&keys, &splitters).unwrap();
+        let (na, nh) = Fallback.terasort_partition_chunk(&keys, &splitters);
+        assert_eq!(xa, na, "case {case}");
+        assert_eq!(xh, nh, "case {case}");
+    }
+}
+
+#[test]
+fn readonly_parity() {
+    let Some(e) = engine() else { return };
+    let mut rng = Pcg32::new(44);
+    for _ in 0..5 {
+        let n = rng.range(0, CHUNK + 1);
+        let mut bytes = vec![0i32; CHUNK];
+        for b in bytes.iter_mut().take(n) {
+            *b = rng.range(1, 256) as i32;
+        }
+        assert_eq!(
+            e.readonly_chunk(&bytes).unwrap(),
+            Fallback.readonly_chunk(&bytes)
+        );
+    }
+}
+
+#[test]
+fn tpcds_parity() {
+    let Some(e) = engine() else { return };
+    let mut rng = Pcg32::new(45);
+    for case in 0..5 {
+        let keys: Vec<i32> = (0..CHUNK)
+            .map(|_| rng.range(0, GROUPS + 8) as i32 - 4)
+            .collect();
+        let vals: Vec<f32> = (0..CHUNK).map(|_| rng.next_f64() as f32).collect();
+        let (xs, xc) = e.tpcds_agg_chunk(&keys, &vals).unwrap();
+        let (ns, nc) = Fallback.tpcds_agg_chunk(&keys, &vals);
+        assert_eq!(xc, nc, "case {case}");
+        for g in 0..GROUPS {
+            assert!(
+                (xs[g] - ns[g]).abs() < 1e-3,
+                "case {case} group {g}: {} vs {}",
+                xs[g],
+                ns[g]
+            );
+        }
+    }
+}
+
+#[test]
+fn kernels_dispatcher_prefers_xla_when_available() {
+    let k = Kernels::load_or_fallback("artifacts");
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        assert_eq!(k.backend_name(), "xla-pjrt");
+    } else {
+        assert_eq!(k.backend_name(), "native-fallback");
+    }
+}
