@@ -17,6 +17,7 @@ fn adversarial_store() -> std::sync::Arc<ObjectStore> {
         consistency: ConsistencyModel::adversarial(SimDuration::from_secs(3600)),
         min_part_size: 0,
         seed: 0,
+        ..StoreConfig::default()
     });
     store.create_container("res", SimInstant::EPOCH).0.unwrap();
     store

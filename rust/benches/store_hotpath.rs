@@ -2,7 +2,7 @@
 //! simulator's hot paths — the L3 optimization target of EXPERIMENTS.md
 //! §Perf. Hand-rolled because criterion is unavailable offline.
 
-use stocator::objectstore::{Metadata, ObjectStore, StoreConfig};
+use stocator::objectstore::{BackendKind, Metadata, ObjectStore, StoreConfig};
 use stocator::simclock::SimInstant;
 use std::time::Instant;
 
@@ -52,5 +52,56 @@ fn main() {
     assert!(head_rate > 300_000.0, "HEAD path too slow: {head_rate:.0}/s");
     assert!(get_rate > 200_000.0, "GET path too slow: {get_rate:.0}/s");
     assert!(list_rate > 200.0, "LIST path too slow: {list_rate:.0}/s");
+
+    println!();
+    println!("write contention ({WRITERS} writer threads, disjoint key prefixes):");
+    let single = contended_put_rate("PUT 1KiB x8 (mem: 1 lock)", BackendKind::Mem);
+    let sharded = contended_put_rate(
+        "PUT 1KiB x8 (sharded: 16 locks)",
+        BackendKind::Sharded(16),
+    );
+    println!(
+        "sharded/single speedup: {:.2}x on {} cpus",
+        sharded / single,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    // Correctness floor only: the achievable speedup is machine-dependent
+    // (a single-core runner serialises everything), so the ratio is
+    // reported, not asserted.
+    assert!(sharded > 50_000.0, "sharded PUT too slow: {sharded:.0}/s");
     println!("store_hotpath bench OK");
+}
+
+const WRITERS: usize = 8;
+const PUTS_PER_WRITER: u64 = 25_000;
+
+/// Aggregate PUT throughput with `WRITERS` threads writing disjoint key
+/// prefixes — the Spark-executor pattern that the single global mutex
+/// serialised and key sharding parallelises.
+fn contended_put_rate(name: &str, backend: BackendKind) -> f64 {
+    let store = ObjectStore::new(StoreConfig {
+        backend,
+        ..StoreConfig::instant_strong()
+    });
+    store.create_container("c", SimInstant::EPOCH).0.unwrap();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..WRITERS {
+            let store = &store;
+            scope.spawn(move || {
+                for i in 0..PUTS_PER_WRITER {
+                    let key = format!("w{w:02}/part-{i:06}");
+                    store
+                        .put_object("c", &key, vec![7u8; 1024], Metadata::new(), SimInstant(i))
+                        .0
+                        .unwrap();
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let total = (WRITERS as u64 * PUTS_PER_WRITER) as f64;
+    let rate = total / dt;
+    println!("{name:<32} {total:>9.0} puts   {dt:>7.3}s  {rate:>12.0} ops/s");
+    rate
 }

@@ -3,7 +3,7 @@
 use crate::committer::CommitAlgorithm;
 use crate::connectors::{HadoopSwift, S3a, S3aConfig, Stocator, StocatorConfig};
 use crate::fs::FileSystem;
-use crate::objectstore::{ConsistencyModel, LatencyModel, ObjectStore, StoreConfig};
+use crate::objectstore::{BackendKind, ConsistencyModel, LatencyModel, ObjectStore, StoreConfig};
 use crate::runtime::Kernels;
 use crate::simclock::SimInstant;
 use crate::spark::{ComputeModel, Driver, SparkConfig};
@@ -101,6 +101,10 @@ pub struct Sizing {
     pub tpcds_scale: u64,
     /// Latency jitter amplitude (paper reports stddev over 10 runs).
     pub jitter: f64,
+    /// Storage backend the stores run on (`--backend` on the CLI). Op
+    /// counts and virtual-clock runtimes are backend-invariant; this picks
+    /// wall-clock concurrency (sharded) or persistence (fs).
+    pub backend: BackendKind,
 }
 
 impl Sizing {
@@ -116,6 +120,7 @@ impl Sizing {
             tpcds_rows: 8192,
             tpcds_scale: 560,
             jitter: 0.03,
+            backend: BackendKind::default(),
         }
     }
 
@@ -131,6 +136,7 @@ impl Sizing {
             tpcds_rows: 4096,
             tpcds_scale: 560,
             jitter: 0.0,
+            backend: BackendKind::default(),
         }
     }
 }
@@ -167,11 +173,22 @@ pub fn build_env(
     // with mutations (the paper's clusters completed these benchmarks).
     // Eventual consistency is exercised separately by the
     // failure-injection tests and the eventual_consistency example.
+    // Every environment is a fresh world (the in-memory backends start
+    // empty), so a persistent fs root is specialised to a unique
+    // subdirectory per env: repeated runs and sweep cells never collide on
+    // container creation, and all data stays under the user's DIR.
+    let backend = match &sizing.backend {
+        BackendKind::LocalFs(Some(root)) => {
+            BackendKind::LocalFs(Some(crate::objectstore::backend::unique_subroot(root)))
+        }
+        other => other.clone(),
+    };
     let store = ObjectStore::new(StoreConfig {
         latency,
         consistency: ConsistencyModel::strong(),
         min_part_size: 0,
         seed,
+        backend,
     });
     store.create_container("res", SimInstant::EPOCH).0.unwrap();
     // fs.s3a.multipart.size = 100 MB logical, in simulated bytes.
@@ -220,6 +237,16 @@ mod tests {
         assert_eq!(env.scheme, "swift2d");
         assert_eq!(env.parts, 4);
         assert_eq!(env.store.config.latency.data_scale, 8192);
+    }
+
+    #[test]
+    fn build_env_honours_backend_choice() {
+        let mut sizing = Sizing::small();
+        sizing.backend = BackendKind::Mem;
+        let env = build_env(Scenario::Stocator, &sizing, "teragen", 8192, 4, 1);
+        assert_eq!(env.store.backend_name(), "mem");
+        assert_eq!(env.store.config.backend, BackendKind::Mem);
+        assert_eq!(Sizing::small().backend, BackendKind::default());
     }
 
     #[test]

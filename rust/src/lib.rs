@@ -3,9 +3,16 @@
 //!
 //! This crate contains the full simulated stack described in DESIGN.md:
 //!
-//! * [`objectstore`] — an in-memory, eventually-consistent cloud object
-//!   store with REST-operation accounting, a virtual-time latency model and
-//!   per-provider pricing models.
+//! * [`objectstore`] — an eventually-consistent cloud object store with
+//!   REST-operation accounting, a virtual-time latency model and
+//!   per-provider pricing models. Storage is pluggable behind the
+//!   [`objectstore::Backend`] trait: an N-way sharded in-memory map
+//!   (default; one shard reproduces the legacy single-global-lock layout)
+//!   or a persistent local-filesystem layout, selected with
+//!   `--backend mem|sharded[:N]|fs[:DIR]` on the CLI. Op counts, byte
+//!   accounting and virtual-clock runtimes are backend-invariant — the
+//!   front end owns them — so backends trade only wall-clock concurrency
+//!   and durability.
 //! * [`fs`] — the Hadoop `FileSystem` abstraction (paths, statuses, the
 //!   trait all connectors implement) plus an in-memory HDFS-like baseline.
 //! * [`connectors`] — the three storage connectors under study:

@@ -10,6 +10,7 @@
 use stocator::harness::tables::{render_table2, Sweep};
 use stocator::harness::traces::{table1_trace, table3_trace};
 use stocator::harness::{figures, run_cell, Scenario, Sizing, Workload};
+use stocator::objectstore::BackendKind;
 use stocator::util::cli::Args;
 
 fn parse_scenario(s: &str) -> Option<Scenario> {
@@ -50,12 +51,45 @@ USAGE:
   stocator-sim trace table1
   stocator-sim trace table3 [--attempts N] [--no-cleanup]
   stocator-sim table2
-  stocator-sim run --workload W --scenario S [--small] [--runs N]
-  stocator-sim sweep [--workloads w1,w2] [--runs N] [--small]
+  stocator-sim run --workload W --scenario S [sizing] [--runs N]
+  stocator-sim sweep [--workloads w1,w2] [--runs N] [sizing]
+
+  sizing: --small (test sizing) or --paper (paper-faithful object
+          counts, the default); mutually exclusive.
+          plus --backend mem|sharded[:N]|fs[:DIR]
+            mem      in-memory map behind a single lock
+            sharded  N-way key-sharded in-memory map (default, N=16)
+            fs       persistent local-FS backend rooted at DIR (default:
+                     a fresh directory under the system temp dir, printed
+                     at startup); each run/cell works in a unique
+                     subdirectory of DIR
 
   scenarios: hs-base s3a-base stocator hs-cv2 s3a-cv2 s3a-cv2-fu
   workloads: ro50 ro500 teragen copy wordcount terasort tpcds
 ";
+
+/// Resolve experiment sizing from `--small` / `--paper` / `--backend`.
+/// `--paper` is the explicit spelling of the default; combining it with
+/// `--small` is a contradiction and is rejected.
+fn select_sizing(args: &Args) -> Result<Sizing, String> {
+    args.flag_conflict("small", "paper")?;
+    let mut sizing = if args.flag("small") {
+        Sizing::small()
+    } else {
+        // --paper (or nothing): paper-faithful object counts.
+        Sizing::paper()
+    };
+    if let Some(spec) = args.opt("backend") {
+        sizing.backend = BackendKind::parse(spec)?;
+    }
+    // Pin a concrete root for `fs` so the user can find (and reuse) the
+    // data; each run then works in a unique subdirectory of it.
+    if sizing.backend == BackendKind::LocalFs(None) {
+        sizing.backend =
+            BackendKind::LocalFs(Some(stocator::objectstore::backend::fresh_temp_root()));
+    }
+    Ok(sizing)
+}
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1), &["small", "paper", "no-cleanup"]) {
@@ -65,10 +99,12 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let sizing = if args.flag("small") {
-        Sizing::small()
-    } else {
-        Sizing::paper()
+    let sizing = match select_sizing(&args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
     };
     match args.subcommand.as_deref() {
         Some("trace") => match args.positionals.first().map(String::as_str) {
@@ -109,6 +145,7 @@ fn main() {
                 std::process::exit(2);
             };
             let runs = args.opt_u64("runs", 1).unwrap_or(1) as usize;
+            println!("backend: {}", sizing.backend.label());
             let cell = run_cell(s, w, &sizing, runs);
             println!(
                 "{} / {}: runtime {:.2}s ± {:.2}s over {} runs",
@@ -125,6 +162,7 @@ fn main() {
             }
         }
         Some("sweep") => {
+            println!("backend: {}", sizing.backend.label());
             let runs = args.opt_u64("runs", 3).unwrap_or(3) as usize;
             let workloads: Vec<Workload> = match args.opt("workloads") {
                 Some(list) => list
@@ -186,5 +224,59 @@ fn main() {
             }
         }
         _ => print!("{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(tokens: &[&str]) -> Args {
+        Args::parse(
+            tokens.iter().map(|s| s.to_string()),
+            &["small", "paper", "no-cleanup"],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn default_sizing_is_paper() {
+        let s = select_sizing(&args(&["run"])).unwrap();
+        assert_eq!(s.parts, Sizing::paper().parts);
+    }
+
+    #[test]
+    fn paper_flag_selects_paper_sizing_explicitly() {
+        let s = select_sizing(&args(&["run", "--paper"])).unwrap();
+        assert_eq!(s.parts, Sizing::paper().parts);
+        let s = select_sizing(&args(&["run", "--small"])).unwrap();
+        assert_eq!(s.parts, Sizing::small().parts);
+    }
+
+    #[test]
+    fn small_and_paper_together_are_rejected() {
+        let e = select_sizing(&args(&["run", "--small", "--paper"])).unwrap_err();
+        assert!(e.contains("mutually exclusive"), "{e}");
+    }
+
+    #[test]
+    fn backend_option_is_wired_through() {
+        let s = select_sizing(&args(&["run", "--small", "--backend", "mem"])).unwrap();
+        assert_eq!(s.backend, BackendKind::Mem);
+        let s = select_sizing(&args(&["run", "--backend", "sharded:8"])).unwrap();
+        assert_eq!(s.backend, BackendKind::Sharded(8));
+        // Bare `fs` gets pinned to a concrete (reported) temp root.
+        let s = select_sizing(&args(&["run", "--backend=fs"])).unwrap();
+        assert!(matches!(s.backend, BackendKind::LocalFs(Some(_))));
+        assert!(select_sizing(&args(&["run", "--backend", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn scenario_and_workload_parsers_cover_cli_spellings() {
+        assert_eq!(parse_scenario("stocator"), Some(Scenario::Stocator));
+        assert_eq!(parse_scenario("s3a-cv2-fu"), Some(Scenario::S3aCv2Fu));
+        assert_eq!(parse_workload("teragen"), Some(Workload::Teragen));
+        assert_eq!(parse_workload("ro500"), Some(Workload::ReadOnly500));
+        assert!(parse_workload("nope").is_none());
     }
 }

@@ -1,0 +1,532 @@
+//! Persistent local-filesystem backend.
+//!
+//! Objects live under a root directory, one file per object plus a sidecar
+//! carrying what the filesystem cannot: the ETag, the virtual-clock
+//! creation instant, and the user metadata. Layout:
+//!
+//! ```text
+//! <root>/
+//!   .tmp/                      staging area for atomic renames
+//!   .multipart/<id>/           one dir per in-flight multipart upload
+//!     upload.meta              container, key, user metadata
+//!     part-<n>                 raw part payloads
+//!   <container>/
+//!     objects/<encoded-key>    object data
+//!     meta/<encoded-key>       sidecar: etag, created_at, metadata
+//! ```
+//!
+//! Keys are percent-encoded into single path components (object-store keys
+//! are flat names that may contain `/`, which the filesystem would
+//! interpret); listings decode and sort, so pagination order matches the
+//! in-memory backends exactly. Writes go through `.tmp` + `rename`, so an
+//! individual file is installed atomically; a reopened root (process
+//! restart) sees every completed put, and multipart upload ids resume past
+//! the highest id on disk. Concurrent readers of a key being replaced may
+//! transiently pair new data with the old sidecar — the simulator drives
+//! each key from one task at a time, so this is out of contract (noted
+//! here rather than locked around, to keep real-IO benchmarking honest).
+
+use super::{AssembledUpload, Backend, BackendError, ListPage, ObjectStat};
+use crate::objectstore::container::ObjectSummary;
+use crate::objectstore::multipart::MultipartUpload;
+use crate::objectstore::object::{sampled_etag, Metadata, Object};
+use crate::simclock::SimInstant;
+use std::io::ErrorKind;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Percent-encode a store name into one safe path component. A leading
+/// `.` is always encoded, so stored files never collide with the
+/// backend's own dot-directories and dotfiles can be skipped in listings.
+/// The empty name encodes as a bare `%` (unambiguous: `%` is otherwise
+/// always followed by two hex digits).
+fn encode(name: &str) -> String {
+    if name.is_empty() {
+        return "%".to_string();
+    }
+    let mut out = String::with_capacity(name.len());
+    for (i, b) in name.bytes().enumerate() {
+        let plain = b.is_ascii_alphanumeric()
+            || b == b'_'
+            || b == b'-'
+            || (b == b'.' && i > 0);
+        if plain {
+            out.push(b as char);
+        } else {
+            out.push('%');
+            out.push_str(&format!("{b:02X}"));
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode`]; `None` for names this backend did not write.
+fn decode(enc: &str) -> Option<String> {
+    if enc == "%" {
+        return Some(String::new());
+    }
+    let bytes = enc.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            let hex = bytes.get(i + 1..i + 3)?;
+            let s = std::str::from_utf8(hex).ok()?;
+            out.push(u8::from_str_radix(s, 16).ok()?);
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).ok()
+}
+
+fn io_err(ctx: &str, e: std::io::Error) -> BackendError {
+    BackendError::Io(format!("{ctx}: {e}"))
+}
+
+/// Parsed sidecar contents.
+struct Sidecar {
+    etag: u64,
+    created_at: SimInstant,
+    metadata: Metadata,
+}
+
+impl Sidecar {
+    fn render(etag: u64, created_at: SimInstant, metadata: &Metadata) -> String {
+        let mut out = format!("etag {etag:016x}\ncreated_at {}\n", created_at.0);
+        for (k, v) in metadata {
+            out.push_str(&format!("meta {} {}\n", encode(k), encode(v)));
+        }
+        out
+    }
+
+    fn parse(text: &str) -> Sidecar {
+        let mut etag = 0;
+        let mut created_at = SimInstant::EPOCH;
+        let mut metadata = Metadata::new();
+        for line in text.lines() {
+            let mut cols = line.splitn(3, ' ');
+            match (cols.next(), cols.next(), cols.next()) {
+                (Some("etag"), Some(v), None) => {
+                    etag = u64::from_str_radix(v, 16).unwrap_or(0);
+                }
+                (Some("created_at"), Some(v), None) => {
+                    created_at = SimInstant(v.parse().unwrap_or(0));
+                }
+                (Some("meta"), Some(k), Some(v)) => {
+                    if let (Some(k), Some(v)) = (decode(k), decode(v)) {
+                        metadata.insert(k, v);
+                    }
+                }
+                _ => {}
+            }
+        }
+        Sidecar {
+            etag,
+            created_at,
+            metadata,
+        }
+    }
+}
+
+/// Objects under a root directory with sidecar metadata; see module docs.
+pub struct LocalFsBackend {
+    root: PathBuf,
+    next_upload: AtomicU64,
+    tmp_seq: AtomicU64,
+}
+
+impl LocalFsBackend {
+    /// Open (creating if needed) a backend rooted at `root`. Reopening an
+    /// existing root resumes its containers, objects and multipart ids.
+    pub fn open(root: &Path) -> Result<Self, BackendError> {
+        std::fs::create_dir_all(root.join(".tmp"))
+            .map_err(|e| io_err("creating staging dir", e))?;
+        std::fs::create_dir_all(root.join(".multipart"))
+            .map_err(|e| io_err("creating multipart dir", e))?;
+        let mut max_id = 0;
+        let entries = std::fs::read_dir(root.join(".multipart"))
+            .map_err(|e| io_err("scanning multipart dir", e))?;
+        for entry in entries.flatten() {
+            if let Some(id) = entry.file_name().to_str().and_then(|n| n.parse::<u64>().ok()) {
+                max_id = max_id.max(id + 1);
+            }
+        }
+        Ok(Self {
+            root: root.to_path_buf(),
+            next_upload: AtomicU64::new(max_id),
+            tmp_seq: AtomicU64::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn objects_dir(&self, container: &str) -> PathBuf {
+        self.root.join(encode(container)).join("objects")
+    }
+
+    fn meta_dir(&self, container: &str) -> PathBuf {
+        self.root.join(encode(container)).join("meta")
+    }
+
+    fn data_path(&self, container: &str, key: &str) -> PathBuf {
+        self.objects_dir(container).join(encode(key))
+    }
+
+    fn meta_path(&self, container: &str, key: &str) -> PathBuf {
+        self.meta_dir(container).join(encode(key))
+    }
+
+    fn upload_dir(&self, id: u64) -> PathBuf {
+        self.root.join(".multipart").join(id.to_string())
+    }
+
+    fn check_container(&self, name: &str) -> Result<(), BackendError> {
+        if self.container_exists(name) {
+            Ok(())
+        } else {
+            Err(BackendError::NoSuchContainer(name.to_string()))
+        }
+    }
+
+    /// Write `bytes` to `dest` atomically (stage in `.tmp`, then rename).
+    fn write_atomic(&self, dest: &Path, bytes: &[u8]) -> Result<(), BackendError> {
+        let tmp = self.root.join(".tmp").join(format!(
+            "t{}-{}",
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, bytes).map_err(|e| io_err("staging write", e))?;
+        std::fs::rename(&tmp, dest).map_err(|e| io_err("installing write", e))
+    }
+
+    /// Read a key's sidecar; when absent (foreign file dropped into the
+    /// root), synthesise one from the data so reads still work.
+    fn read_sidecar(&self, container: &str, key: &str) -> Result<Sidecar, BackendError> {
+        match std::fs::read_to_string(self.meta_path(container, key)) {
+            Ok(text) => Ok(Sidecar::parse(&text)),
+            Err(e) if e.kind() == ErrorKind::NotFound => {
+                let data = std::fs::read(self.data_path(container, key))
+                    .map_err(|e| io_err("reading data for missing sidecar", e))?;
+                Ok(Sidecar {
+                    etag: sampled_etag(&data),
+                    created_at: SimInstant::EPOCH,
+                    metadata: Metadata::new(),
+                })
+            }
+            Err(e) => Err(io_err("reading sidecar", e)),
+        }
+    }
+
+    /// All decoded key names in a container, unsorted.
+    fn key_names(&self, container: &str) -> Result<Vec<String>, BackendError> {
+        let entries = std::fs::read_dir(self.objects_dir(container))
+            .map_err(|e| io_err("listing objects dir", e))?;
+        let mut names = Vec::new();
+        for entry in entries.flatten() {
+            let Some(fname) = entry.file_name().to_str().map(String::from) else {
+                continue;
+            };
+            if fname.starts_with('.') {
+                continue;
+            }
+            if let Some(decoded) = decode(&fname) {
+                names.push(decoded);
+            }
+        }
+        Ok(names)
+    }
+}
+
+impl Backend for LocalFsBackend {
+    fn name(&self) -> &'static str {
+        "local-fs"
+    }
+
+    fn create_container(&self, name: &str) -> Result<(), BackendError> {
+        let objects = self.objects_dir(name);
+        if objects.is_dir() {
+            return Err(BackendError::ContainerAlreadyExists(name.to_string()));
+        }
+        std::fs::create_dir_all(&objects).map_err(|e| io_err("creating container", e))?;
+        std::fs::create_dir_all(self.meta_dir(name))
+            .map_err(|e| io_err("creating container meta dir", e))
+    }
+
+    fn container_exists(&self, name: &str) -> bool {
+        self.objects_dir(name).is_dir()
+    }
+
+    fn put(&self, container: &str, key: &str, obj: Object) -> Result<bool, BackendError> {
+        self.check_container(container)?;
+        let data_path = self.data_path(container, key);
+        let replaced = data_path.exists();
+        let sidecar = Sidecar::render(obj.etag, obj.created_at, &obj.metadata);
+        self.write_atomic(&self.meta_path(container, key), sidecar.as_bytes())?;
+        self.write_atomic(&data_path, &obj.data)?;
+        Ok(replaced)
+    }
+
+    fn get(&self, container: &str, key: &str) -> Result<Object, BackendError> {
+        self.check_container(container)?;
+        let data = match std::fs::read(self.data_path(container, key)) {
+            Ok(d) => d,
+            Err(e) if e.kind() == ErrorKind::NotFound => {
+                return Err(BackendError::no_such_key(container, key))
+            }
+            Err(e) => return Err(io_err("reading object", e)),
+        };
+        let sidecar = self.read_sidecar(container, key)?;
+        Ok(Object {
+            data: Arc::new(data),
+            metadata: sidecar.metadata,
+            created_at: sidecar.created_at,
+            etag: sidecar.etag,
+        })
+    }
+
+    fn head(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError> {
+        self.check_container(container)?;
+        let size = match std::fs::metadata(self.data_path(container, key)) {
+            Ok(m) => m.len(),
+            Err(e) if e.kind() == ErrorKind::NotFound => {
+                return Err(BackendError::no_such_key(container, key))
+            }
+            Err(e) => return Err(io_err("stat object", e)),
+        };
+        let sidecar = self.read_sidecar(container, key)?;
+        Ok(ObjectStat {
+            size,
+            etag: sidecar.etag,
+            metadata: sidecar.metadata,
+            created_at: sidecar.created_at,
+        })
+    }
+
+    fn delete(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError> {
+        let stat = self.head(container, key)?;
+        match std::fs::remove_file(self.data_path(container, key)) {
+            Ok(()) => {}
+            Err(e) if e.kind() == ErrorKind::NotFound => {
+                return Err(BackendError::no_such_key(container, key))
+            }
+            Err(e) => return Err(io_err("removing object", e)),
+        }
+        let _ = std::fs::remove_file(self.meta_path(container, key));
+        Ok(stat)
+    }
+
+    fn list_page(
+        &self,
+        container: &str,
+        prefix: &str,
+        start_after: Option<&str>,
+        max_keys: usize,
+    ) -> Result<ListPage, BackendError> {
+        self.check_container(container)?;
+        let mut names: Vec<String> = self
+            .key_names(container)?
+            .into_iter()
+            .filter(|n| n.starts_with(prefix))
+            .filter(|n| start_after.map_or(true, |s| n.as_str() > s))
+            .collect();
+        names.sort_unstable();
+        let has_more = names.len() > max_keys;
+        names.truncate(max_keys);
+        let mut entries = Vec::with_capacity(names.len());
+        for name in names {
+            // One stat + one sidecar read per returned entry (container
+            // existence was checked once above). Objects deleted between
+            // the directory scan and this stat are simply omitted
+            // (sequential use never hits this).
+            let size = match std::fs::metadata(self.data_path(container, &name)) {
+                Ok(m) => m.len(),
+                Err(e) if e.kind() == ErrorKind::NotFound => continue,
+                Err(e) => return Err(io_err("stat object", e)),
+            };
+            let sidecar = self.read_sidecar(container, &name)?;
+            entries.push(ObjectSummary {
+                name,
+                size,
+                etag: sidecar.etag,
+            });
+        }
+        let next = if has_more {
+            entries.last().map(|s| s.name.clone())
+        } else {
+            None
+        };
+        Ok(ListPage { entries, next })
+    }
+
+    fn initiate_multipart(
+        &self,
+        container: &str,
+        key: &str,
+        metadata: Metadata,
+    ) -> Result<u64, BackendError> {
+        self.check_container(container)?;
+        let id = self.next_upload.fetch_add(1, Ordering::Relaxed);
+        let dir = self.upload_dir(id);
+        std::fs::create_dir_all(&dir).map_err(|e| io_err("creating upload dir", e))?;
+        let mut meta_text = format!("container {}\nkey {}\n", encode(container), encode(key));
+        for (k, v) in &metadata {
+            meta_text.push_str(&format!("meta {} {}\n", encode(k), encode(v)));
+        }
+        self.write_atomic(&dir.join("upload.meta"), meta_text.as_bytes())?;
+        Ok(id)
+    }
+
+    fn upload_part(
+        &self,
+        upload_id: u64,
+        part_number: u32,
+        data: Vec<u8>,
+    ) -> Result<(), BackendError> {
+        let dir = self.upload_dir(upload_id);
+        if !dir.is_dir() {
+            return Err(BackendError::NoSuchUpload(upload_id));
+        }
+        self.write_atomic(&dir.join(format!("part-{part_number}")), &data)
+    }
+
+    fn complete_multipart(
+        &self,
+        upload_id: u64,
+        min_part_size: u64,
+    ) -> Result<AssembledUpload, BackendError> {
+        let dir = self.upload_dir(upload_id);
+        let meta_text = match std::fs::read_to_string(dir.join("upload.meta")) {
+            Ok(t) => t,
+            Err(e) if e.kind() == ErrorKind::NotFound => {
+                return Err(BackendError::NoSuchUpload(upload_id))
+            }
+            Err(e) => return Err(io_err("reading upload.meta", e)),
+        };
+        let mut container = String::new();
+        let mut key = String::new();
+        let mut metadata = Metadata::new();
+        for line in meta_text.lines() {
+            let mut cols = line.splitn(3, ' ');
+            match (cols.next(), cols.next(), cols.next()) {
+                (Some("container"), Some(v), None) => {
+                    container = decode(v).unwrap_or_default();
+                }
+                (Some("key"), Some(v), None) => key = decode(v).unwrap_or_default(),
+                (Some("meta"), Some(k), Some(v)) => {
+                    if let (Some(k), Some(v)) = (decode(k), decode(v)) {
+                        metadata.insert(k, v);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut upload = MultipartUpload::new(&container, &key, metadata);
+        let entries = std::fs::read_dir(&dir).map_err(|e| io_err("listing upload dir", e))?;
+        for entry in entries.flatten() {
+            let Some(fname) = entry.file_name().to_str().map(String::from) else {
+                continue;
+            };
+            let Some(num) = fname.strip_prefix("part-").and_then(|n| n.parse::<u32>().ok())
+            else {
+                continue;
+            };
+            let data = std::fs::read(entry.path()).map_err(|e| io_err("reading part", e))?;
+            upload.put_part(num, data);
+        }
+        // Consume the upload before assembling: a failed complete still
+        // invalidates the id (trait contract).
+        std::fs::remove_dir_all(&dir).map_err(|e| io_err("removing upload dir", e))?;
+        let (data, metadata) = upload
+            .assemble(min_part_size)
+            .map_err(BackendError::InvalidRequest)?;
+        Ok(AssembledUpload {
+            container,
+            key,
+            data,
+            metadata,
+        })
+    }
+
+    fn abort_multipart(&self, upload_id: u64) -> Result<(), BackendError> {
+        let dir = self.upload_dir(upload_id);
+        if !dir.is_dir() {
+            return Err(BackendError::NoSuchUpload(upload_id));
+        }
+        std::fs::remove_dir_all(&dir).map_err(|e| io_err("removing upload dir", e))
+    }
+
+    fn multipart_in_flight(&self) -> usize {
+        std::fs::read_dir(self.root.join(".multipart"))
+            .map(|entries| {
+                entries
+                    .flatten()
+                    .filter(|e| e.path().is_dir())
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    fn live_count(&self, container: &str) -> usize {
+        self.key_names(container).map(|n| n.len()).unwrap_or(0)
+    }
+
+    fn live_bytes(&self, container: &str) -> u64 {
+        let Ok(entries) = std::fs::read_dir(self.objects_dir(container)) else {
+            return 0;
+        };
+        entries
+            .flatten()
+            .filter(|e| {
+                e.file_name()
+                    .to_str()
+                    .map(|n| !n.starts_with('.'))
+                    .unwrap_or(false)
+            })
+            .filter_map(|e| e.metadata().ok())
+            .map(|m| m.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for name in ["", "plain", "a/b/part-0001", "_temporary/0/t1", ".hidden", "x%y z", "näme"] {
+            let enc = encode(name);
+            assert!(!enc.is_empty());
+            assert!(!enc.starts_with('.'), "{name} -> {enc}");
+            assert!(!enc.contains('/'), "{name} -> {enc}");
+            assert_eq!(decode(&enc).as_deref(), Some(name), "{name} -> {enc}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert_eq!(decode("%zz"), None);
+        assert_eq!(decode("a%2"), None);
+        assert_eq!(decode("a%2Fb").as_deref(), Some("a/b"));
+    }
+
+    #[test]
+    fn sidecar_roundtrip() {
+        let mut md = Metadata::new();
+        md.insert("X-Stocator-Origin".into(), "stocator 1.0".into());
+        let text = Sidecar::render(0xdead_beef, SimInstant(42), &md);
+        let s = Sidecar::parse(&text);
+        assert_eq!(s.etag, 0xdead_beef);
+        assert_eq!(s.created_at, SimInstant(42));
+        assert_eq!(
+            s.metadata.get("X-Stocator-Origin").map(String::as_str),
+            Some("stocator 1.0")
+        );
+    }
+}

@@ -1,0 +1,320 @@
+//! In-memory backend, N-way sharded by key hash.
+//!
+//! The legacy store kept every container behind one global `Mutex`, which
+//! serialised Spark executor threads on the put/get hot path. Here each
+//! object lives in the shard selected by an FNV-1a hash of
+//! `(container, key)`, and each shard has its own lock, so writers with
+//! disjoint keys proceed in parallel (see the contention benchmark in
+//! `rust/benches/store_hotpath.rs`). `ShardedMemBackend::new(1)` is
+//! exactly the legacy single-lock layout and backs `BackendKind::Mem`.
+//!
+//! The container registry is a read-mostly `RwLock` set: hot-path ops only
+//! take its read lock. Multipart uploads sit behind their own lock —
+//! they are orders of magnitude rarer than object ops.
+
+use super::{AssembledUpload, Backend, BackendError, ListPage, ObjectStat};
+use crate::objectstore::container::ObjectSummary;
+use crate::objectstore::multipart::MultipartTable;
+use crate::objectstore::object::{fnv1a, Metadata, Object};
+use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Bound;
+use std::sync::{Mutex, RwLock};
+
+/// `container -> key -> object`, restricted to the keys this shard owns.
+type ShardMap = BTreeMap<String, BTreeMap<String, Object>>;
+
+/// N-way key-sharded in-memory storage.
+pub struct ShardedMemBackend {
+    shards: Vec<Mutex<ShardMap>>,
+    containers: RwLock<BTreeSet<String>>,
+    multipart: Mutex<MultipartTable>,
+}
+
+impl ShardedMemBackend {
+    /// `shards >= 1`; one shard reproduces the legacy global-lock layout.
+    pub fn new(shards: usize) -> Self {
+        assert!(shards >= 1, "shard count must be at least 1");
+        Self {
+            shards: (0..shards).map(|_| Mutex::new(ShardMap::new())).collect(),
+            containers: RwLock::new(BTreeSet::new()),
+            multipart: Mutex::new(MultipartTable::default()),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard_idx(&self, container: &str, key: &str) -> usize {
+        let h = fnv1a(container.as_bytes()) ^ fnv1a(key.as_bytes()).rotate_left(13);
+        (h % self.shards.len() as u64) as usize
+    }
+
+    fn check_container(&self, name: &str) -> Result<(), BackendError> {
+        if self.containers.read().unwrap().contains(name) {
+            Ok(())
+        } else {
+            Err(BackendError::NoSuchContainer(name.to_string()))
+        }
+    }
+}
+
+impl Backend for ShardedMemBackend {
+    fn name(&self) -> &'static str {
+        if self.shards.len() == 1 {
+            "mem"
+        } else {
+            "sharded-mem"
+        }
+    }
+
+    fn create_container(&self, name: &str) -> Result<(), BackendError> {
+        let mut reg = self.containers.write().unwrap();
+        if !reg.insert(name.to_string()) {
+            return Err(BackendError::ContainerAlreadyExists(name.to_string()));
+        }
+        Ok(())
+    }
+
+    fn container_exists(&self, name: &str) -> bool {
+        self.containers.read().unwrap().contains(name)
+    }
+
+    fn put(&self, container: &str, key: &str, obj: Object) -> Result<bool, BackendError> {
+        self.check_container(container)?;
+        let mut shard = self.shards[self.shard_idx(container, key)].lock().unwrap();
+        let prev = shard
+            .entry(container.to_string())
+            .or_default()
+            .insert(key.to_string(), obj);
+        Ok(prev.is_some())
+    }
+
+    fn get(&self, container: &str, key: &str) -> Result<Object, BackendError> {
+        self.check_container(container)?;
+        let shard = self.shards[self.shard_idx(container, key)].lock().unwrap();
+        shard
+            .get(container)
+            .and_then(|m| m.get(key))
+            .cloned()
+            .ok_or_else(|| BackendError::no_such_key(container, key))
+    }
+
+    fn head(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError> {
+        self.check_container(container)?;
+        let shard = self.shards[self.shard_idx(container, key)].lock().unwrap();
+        shard
+            .get(container)
+            .and_then(|m| m.get(key))
+            .map(ObjectStat::of)
+            .ok_or_else(|| BackendError::no_such_key(container, key))
+    }
+
+    fn delete(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError> {
+        self.check_container(container)?;
+        let mut shard = self.shards[self.shard_idx(container, key)].lock().unwrap();
+        shard
+            .get_mut(container)
+            .and_then(|m| m.remove(key))
+            .map(|obj| ObjectStat::of(&obj))
+            .ok_or_else(|| BackendError::no_such_key(container, key))
+    }
+
+    fn list_page(
+        &self,
+        container: &str,
+        prefix: &str,
+        start_after: Option<&str>,
+        max_keys: usize,
+    ) -> Result<ListPage, BackendError> {
+        self.check_container(container)?;
+        // Gather up to max_keys+1 candidates from each shard (each shard's
+        // candidates are its smallest matching keys, so the global smallest
+        // max_keys+1 are always among them), then merge.
+        let lower: Bound<String> = match start_after {
+            Some(s) if s.as_bytes() >= prefix.as_bytes() => Bound::Excluded(s.to_string()),
+            _ => Bound::Included(prefix.to_string()),
+        };
+        let mut merged: Vec<ObjectSummary> = Vec::new();
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            let Some(m) = shard.get(container) else { continue };
+            let mut taken = 0;
+            for (k, obj) in m.range((lower.clone(), Bound::Unbounded)) {
+                if !k.starts_with(prefix) {
+                    break;
+                }
+                merged.push(ObjectSummary {
+                    name: k.clone(),
+                    size: obj.size(),
+                    etag: obj.etag,
+                });
+                taken += 1;
+                if taken > max_keys {
+                    break;
+                }
+            }
+        }
+        merged.sort_unstable_by(|a, b| a.name.cmp(&b.name));
+        let next = if merged.len() > max_keys {
+            merged.truncate(max_keys);
+            merged.last().map(|s| s.name.clone())
+        } else {
+            None
+        };
+        Ok(ListPage {
+            entries: merged,
+            next,
+        })
+    }
+
+    fn initiate_multipart(
+        &self,
+        container: &str,
+        key: &str,
+        metadata: Metadata,
+    ) -> Result<u64, BackendError> {
+        self.check_container(container)?;
+        Ok(self
+            .multipart
+            .lock()
+            .unwrap()
+            .initiate(container, key, metadata))
+    }
+
+    fn upload_part(
+        &self,
+        upload_id: u64,
+        part_number: u32,
+        data: Vec<u8>,
+    ) -> Result<(), BackendError> {
+        let mut table = self.multipart.lock().unwrap();
+        match table.get_mut(upload_id) {
+            Some(up) => {
+                up.put_part(part_number, data);
+                Ok(())
+            }
+            None => Err(BackendError::NoSuchUpload(upload_id)),
+        }
+    }
+
+    fn complete_multipart(
+        &self,
+        upload_id: u64,
+        min_part_size: u64,
+    ) -> Result<AssembledUpload, BackendError> {
+        // take() consumes the upload up front: a failed assembly still
+        // invalidates the id (see the trait contract).
+        let up = self
+            .multipart
+            .lock()
+            .unwrap()
+            .take(upload_id)
+            .ok_or(BackendError::NoSuchUpload(upload_id))?;
+        let container = up.container.clone();
+        let key = up.key.clone();
+        let (data, metadata) = up
+            .assemble(min_part_size)
+            .map_err(BackendError::InvalidRequest)?;
+        Ok(AssembledUpload {
+            container,
+            key,
+            data,
+            metadata,
+        })
+    }
+
+    fn abort_multipart(&self, upload_id: u64) -> Result<(), BackendError> {
+        match self.multipart.lock().unwrap().take(upload_id) {
+            Some(_) => Ok(()),
+            None => Err(BackendError::NoSuchUpload(upload_id)),
+        }
+    }
+
+    fn multipart_in_flight(&self) -> usize {
+        self.multipart.lock().unwrap().in_flight()
+    }
+
+    fn live_count(&self, container: &str) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .unwrap()
+                    .get(container)
+                    .map(|m| m.len())
+                    .unwrap_or(0)
+            })
+            .sum()
+    }
+
+    fn live_bytes(&self, container: &str) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .unwrap()
+                    .get(container)
+                    .map(|m| m.values().map(|o| o.size()).sum::<u64>())
+                    .unwrap_or(0)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simclock::SimInstant;
+
+    fn obj(data: &[u8]) -> Object {
+        Object::new(data.to_vec(), Metadata::new(), SimInstant::EPOCH)
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        let b = ShardedMemBackend::new(8);
+        b.create_container("c").unwrap();
+        for i in 0..64 {
+            b.put("c", &format!("k{i}"), obj(b"x")).unwrap();
+        }
+        let populated = b
+            .shards
+            .iter()
+            .filter(|s| {
+                s.lock()
+                    .unwrap()
+                    .get("c")
+                    .map(|m| !m.is_empty())
+                    .unwrap_or(false)
+            })
+            .count();
+        assert!(populated >= 4, "only {populated}/8 shards used");
+        assert_eq!(b.live_count("c"), 64);
+    }
+
+    #[test]
+    fn listing_merges_shards_in_order() {
+        let b = ShardedMemBackend::new(4);
+        b.create_container("c").unwrap();
+        let mut names: Vec<String> = (0..40).map(|i| format!("p/{i:03}")).collect();
+        for n in &names {
+            b.put("c", n, obj(b"d")).unwrap();
+        }
+        names.sort();
+        let page = b.list_page("c", "p/", None, 100).unwrap();
+        let got: Vec<&str> = page.entries.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(got, names.iter().map(String::as_str).collect::<Vec<_>>());
+        assert!(page.next.is_none());
+    }
+
+    #[test]
+    fn single_shard_is_legacy_layout() {
+        let b = ShardedMemBackend::new(1);
+        assert_eq!(b.name(), "mem");
+        assert_eq!(b.shard_count(), 1);
+        let b16 = ShardedMemBackend::new(super::super::DEFAULT_SHARDS);
+        assert_eq!(b16.name(), "sharded-mem");
+    }
+}

@@ -1,0 +1,357 @@
+//! Pluggable storage backends: the data plane behind [`crate::objectstore::ObjectStore`].
+//!
+//! The front end owns everything the paper's evaluation measures — REST op
+//! accounting, the virtual-time latency model, eventual-consistency
+//! enforcement, pricing — while a [`Backend`] owns the bytes. This module
+//! defines the seam every backend plugs into, plus two implementations:
+//!
+//! * [`ShardedMemBackend`] — an N-way key-sharded in-memory map
+//!   (shard-per-lock). One shard reproduces the legacy single-global-mutex
+//!   layout; the default 16 shards let Spark executor threads stop
+//!   serialising on the store hot path.
+//! * [`LocalFsBackend`] — objects laid out under a root directory with
+//!   sidecar metadata/ETag files. Survives process restart and supports
+//!   real-IO benchmarking.
+//!
+//! # Trait contract
+//!
+//! Every backend MUST provide these semantics; the conformance suite in
+//! `rust/tests/test_backend_conformance.rs` enforces them against each
+//! implementation:
+//!
+//! * **Atomic create/replace.** [`Backend::put`] installs the whole object
+//!   or nothing; a concurrent [`Backend::get`] sees either the old or the
+//!   new object, never a torn mixture. `put` reports whether it replaced
+//!   an existing object (the front end needs that bit for listing
+//!   visibility).
+//! * **Last writer wins.** There is no versioning: the most recent `put`
+//!   for a key defines the object, including its metadata and ETag.
+//! * **Authoritative, sorted, paginated listings.** [`Backend::list_page`]
+//!   returns keys in ascending lexicographic order, filtered by prefix,
+//!   resuming strictly after `start_after`. Listings are authoritative
+//!   (read-after-write): the *eventually consistent* listings the paper
+//!   depends on (§2.1) are synthesised above this layer by the front
+//!   end's visibility overlay, which delays newly created names and
+//!   retains ghosts of deleted ones. Backends therefore never model lag.
+//! * **ETags are content hashes.** Backends must tag objects with
+//!   [`crate::objectstore::object::sampled_etag`] over the payload so the
+//!   same bytes produce the same ETag on every backend (the conformance
+//!   suite round-trips this).
+//! * **Errors carry full names.** `NoSuchKey` messages are formatted
+//!   `"container/key"` to match the front end's REST error space.
+//! * **Multipart uploads are consumed on completion.** A
+//!   [`Backend::complete_multipart`] call removes the upload whether or
+//!   not assembly succeeds (S3 semantics: a failed complete still
+//!   invalidates the upload id). Assembly concatenates parts in
+//!   ascending part-number order and enforces `min_part_size` on every
+//!   part but the last.
+
+pub mod fs;
+pub mod mem;
+
+pub use fs::LocalFsBackend;
+pub use mem::ShardedMemBackend;
+
+use super::container::ObjectSummary;
+use super::object::{Metadata, Object};
+use crate::simclock::SimInstant;
+use std::fmt;
+use std::path::PathBuf;
+
+/// Default shard count for [`ShardedMemBackend`] (`BackendKind::Sharded`).
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// Page size the front end uses when walking a full listing.
+pub const DEFAULT_PAGE_SIZE: usize = 1000;
+
+/// Errors a backend can raise. The front end maps these onto
+/// [`crate::objectstore::StoreError`] without losing information.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendError {
+    NoSuchContainer(String),
+    /// Formatted `"container/key"`.
+    NoSuchKey(String),
+    ContainerAlreadyExists(String),
+    NoSuchUpload(u64),
+    InvalidRequest(String),
+    /// Real-IO failure (LocalFsBackend); the simulated REST space has no
+    /// equivalent, so the front end surfaces it as a 500.
+    Io(String),
+}
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BackendError::NoSuchContainer(c) => write!(f, "no such container: {c}"),
+            BackendError::NoSuchKey(k) => write!(f, "no such key: {k}"),
+            BackendError::ContainerAlreadyExists(c) => write!(f, "container exists: {c}"),
+            BackendError::NoSuchUpload(id) => write!(f, "no such upload: {id}"),
+            BackendError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            BackendError::Io(m) => write!(f, "backend io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+impl BackendError {
+    /// The canonical `NoSuchKey` error (`"container/key"` formatting —
+    /// shared by every backend so the front end's REST error space stays
+    /// uniform).
+    pub fn no_such_key(container: &str, key: &str) -> Self {
+        BackendError::NoSuchKey(format!("{container}/{key}"))
+    }
+}
+
+/// HEAD-shaped view of a stored object: everything but the data.
+#[derive(Debug, Clone)]
+pub struct ObjectStat {
+    pub size: u64,
+    pub etag: u64,
+    pub metadata: Metadata,
+    pub created_at: SimInstant,
+}
+
+impl ObjectStat {
+    pub fn of(obj: &Object) -> Self {
+        Self {
+            size: obj.size(),
+            etag: obj.etag,
+            metadata: obj.metadata.clone(),
+            created_at: obj.created_at,
+        }
+    }
+}
+
+/// One page of an authoritative listing.
+#[derive(Debug, Clone, Default)]
+pub struct ListPage {
+    /// Ascending by name; every name starts with the requested prefix.
+    pub entries: Vec<ObjectSummary>,
+    /// `Some(last_returned_key)` when more entries may follow; pass it
+    /// back as `start_after` to continue. `None` when exhausted.
+    pub next: Option<String>,
+}
+
+/// A completed multipart upload, assembled but not yet installed. The
+/// front end runs it through the normal put path so consistency overlay
+/// bookkeeping and byte accounting stay backend-agnostic.
+#[derive(Debug)]
+pub struct AssembledUpload {
+    pub container: String,
+    pub key: String,
+    pub data: Vec<u8>,
+    pub metadata: Metadata,
+}
+
+/// The storage data plane. See the module docs for the full contract.
+pub trait Backend: Send + Sync {
+    /// Human-readable backend name (for logs and benches).
+    fn name(&self) -> &'static str;
+
+    // ---- containers ------------------------------------------------------
+
+    fn create_container(&self, name: &str) -> Result<(), BackendError>;
+
+    fn container_exists(&self, name: &str) -> bool;
+
+    // ---- objects ---------------------------------------------------------
+
+    /// Atomic create/replace. Returns `true` if an existing object was
+    /// replaced.
+    fn put(&self, container: &str, key: &str, obj: Object) -> Result<bool, BackendError>;
+
+    fn get(&self, container: &str, key: &str) -> Result<Object, BackendError>;
+
+    fn head(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError>;
+
+    /// Remove an object, returning its final stat (the front end needs
+    /// size + etag to keep a listing ghost under eventual consistency).
+    fn delete(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError>;
+
+    /// One page of the authoritative listing: keys starting with `prefix`,
+    /// strictly greater than `start_after` (when given), ascending, at
+    /// most `max_keys` entries.
+    fn list_page(
+        &self,
+        container: &str,
+        prefix: &str,
+        start_after: Option<&str>,
+        max_keys: usize,
+    ) -> Result<ListPage, BackendError>;
+
+    // ---- multipart uploads ----------------------------------------------
+
+    fn initiate_multipart(
+        &self,
+        container: &str,
+        key: &str,
+        metadata: Metadata,
+    ) -> Result<u64, BackendError>;
+
+    fn upload_part(
+        &self,
+        upload_id: u64,
+        part_number: u32,
+        data: Vec<u8>,
+    ) -> Result<(), BackendError>;
+
+    /// Assemble and consume the upload (consumed even on failure).
+    fn complete_multipart(
+        &self,
+        upload_id: u64,
+        min_part_size: u64,
+    ) -> Result<AssembledUpload, BackendError>;
+
+    fn abort_multipart(&self, upload_id: u64) -> Result<(), BackendError>;
+
+    fn multipart_in_flight(&self) -> usize;
+
+    // ---- stats (harness/tests; not REST, not counted) --------------------
+
+    fn live_count(&self, container: &str) -> usize;
+
+    fn live_bytes(&self, container: &str) -> u64;
+}
+
+/// Which backend an [`crate::objectstore::ObjectStore`] should run on.
+/// Carried by `StoreConfig` (and `harness::Sizing`) and selectable on the
+/// CLI via `--backend mem|sharded[:N]|fs[:DIR]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Single-shard in-memory map — the legacy single-global-lock layout.
+    Mem,
+    /// N-way key-sharded in-memory map (shard-per-lock).
+    Sharded(usize),
+    /// Persistent local-filesystem backend rooted at the given directory;
+    /// `None` picks a fresh unique directory under the system temp dir.
+    LocalFs(Option<PathBuf>),
+}
+
+impl Default for BackendKind {
+    fn default() -> Self {
+        BackendKind::Sharded(DEFAULT_SHARDS)
+    }
+}
+
+impl BackendKind {
+    /// Parse a CLI spelling: `mem`, `sharded`, `sharded:N`, `fs`, `fs:DIR`.
+    pub fn parse(s: &str) -> Result<BackendKind, String> {
+        let (kind, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        match (kind, arg) {
+            ("mem", None) => Ok(BackendKind::Mem),
+            ("sharded", None) => Ok(BackendKind::Sharded(DEFAULT_SHARDS)),
+            ("sharded", Some(n)) => match n.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(BackendKind::Sharded(n)),
+                _ => Err(format!("sharded:{n} — shard count must be a positive integer")),
+            },
+            ("fs", None) => Ok(BackendKind::LocalFs(None)),
+            ("fs", Some(dir)) if !dir.is_empty() => {
+                Ok(BackendKind::LocalFs(Some(PathBuf::from(dir))))
+            }
+            _ => Err(format!(
+                "unknown backend '{s}' (expected mem, sharded[:N], or fs[:DIR])"
+            )),
+        }
+    }
+
+    /// The CLI spelling (for usage/help text).
+    pub fn label(&self) -> String {
+        match self {
+            BackendKind::Mem => "mem".to_string(),
+            BackendKind::Sharded(n) => format!("sharded:{n}"),
+            BackendKind::LocalFs(None) => "fs".to_string(),
+            BackendKind::LocalFs(Some(p)) => format!("fs:{}", p.display()),
+        }
+    }
+}
+
+/// Build a backend from its kind. Panics if a LocalFs root cannot be
+/// created (the store constructor is infallible by API contract; callers
+/// that need to validate a root first use [`LocalFsBackend::open`]).
+pub fn make_backend(kind: &BackendKind) -> Box<dyn Backend> {
+    match kind {
+        BackendKind::Mem => Box::new(ShardedMemBackend::new(1)),
+        BackendKind::Sharded(n) => Box::new(ShardedMemBackend::new(*n)),
+        BackendKind::LocalFs(Some(root)) => Box::new(
+            LocalFsBackend::open(root)
+                .unwrap_or_else(|e| panic!("opening fs backend at {}: {e}", root.display())),
+        ),
+        BackendKind::LocalFs(None) => {
+            let root = fresh_temp_root();
+            Box::new(
+                LocalFsBackend::open(&root)
+                    .unwrap_or_else(|e| panic!("opening fs backend at {}: {e}", root.display())),
+            )
+        }
+    }
+}
+
+/// A process-unique directory under the system temp dir.
+pub fn fresh_temp_root() -> PathBuf {
+    unique_subroot(&std::env::temp_dir())
+}
+
+/// A process-unique subdirectory of `root`. The harness derives one per
+/// workload environment so repeated runs against the same `fs:DIR` never
+/// collide on container creation (each run's store is a fresh world, as
+/// with the in-memory backends, while all data stays under `DIR` for
+/// inspection).
+pub fn unique_subroot(root: &std::path::Path) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    root.join(format!(
+        "stocator-fs-{}-{}-{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed),
+        nanos
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_backend_kinds() {
+        assert_eq!(BackendKind::parse("mem").unwrap(), BackendKind::Mem);
+        assert_eq!(
+            BackendKind::parse("sharded").unwrap(),
+            BackendKind::Sharded(DEFAULT_SHARDS)
+        );
+        assert_eq!(
+            BackendKind::parse("sharded:4").unwrap(),
+            BackendKind::Sharded(4)
+        );
+        assert_eq!(BackendKind::parse("fs").unwrap(), BackendKind::LocalFs(None));
+        assert_eq!(
+            BackendKind::parse("fs:/tmp/x").unwrap(),
+            BackendKind::LocalFs(Some(PathBuf::from("/tmp/x")))
+        );
+        assert!(BackendKind::parse("sharded:0").is_err());
+        assert!(BackendKind::parse("sharded:no").is_err());
+        assert!(BackendKind::parse("redis").is_err());
+        assert!(BackendKind::parse("fs:").is_err());
+    }
+
+    #[test]
+    fn default_is_sharded() {
+        assert_eq!(BackendKind::default(), BackendKind::Sharded(DEFAULT_SHARDS));
+        assert_eq!(BackendKind::default().label(), "sharded:16");
+    }
+
+    #[test]
+    fn temp_roots_are_unique() {
+        assert_ne!(fresh_temp_root(), fresh_temp_root());
+        let base = std::path::Path::new("/x");
+        assert_ne!(unique_subroot(base), unique_subroot(base));
+        assert!(unique_subroot(base).starts_with(base));
+    }
+}

@@ -1,24 +1,10 @@
-//! A container (bucket): a flat, sorted map of object names with
-//! eventually-consistent listing views (see [`super::consistency`]).
-
-use super::consistency::ConsistencyModel;
-use super::object::Object;
-use crate::simclock::SimInstant;
-use std::collections::BTreeMap;
-
-/// One name slot in a container. Tracks both the authoritative object state
-/// (for GET/HEAD, read-after-write consistent) and the *listing* view (for
-/// GET Container, eventually consistent).
-#[derive(Debug, Clone)]
-struct Entry {
-    /// Authoritative state: `Some` = exists, `None` = deleted.
-    obj: Option<Object>,
-    /// When this name starts appearing in listings (after create).
-    list_visible_at: SimInstant,
-    /// After a delete: the stale object that listings may still show, and
-    /// the time at which it finally disappears.
-    stale: Option<(Object, SimInstant)>,
-}
+//! Listing types for the flat-namespace-with-hierarchical-naming model:
+//! object summaries, the GET Container result, and the delimiter collapse
+//! that emulates directories (S3/Swift `prefix` + `delimiter` semantics).
+//!
+//! Storage itself lives behind [`super::backend::Backend`]; the
+//! eventually-consistent *visibility* of names in listings is applied by
+//! the front end's [`super::visibility`] overlay before the collapse here.
 
 /// Summary of one object in a listing (name + size + etag, like an S3
 /// `ListObjects` entry).
@@ -45,122 +31,15 @@ impl Listing {
     pub fn len(&self) -> usize {
         self.objects.len() + self.common_prefixes.len()
     }
-}
 
-/// A container of objects.
-#[derive(Debug, Default)]
-pub struct Container {
-    entries: BTreeMap<String, Entry>,
-    pub created_at: SimInstant,
-}
-
-impl Container {
-    pub fn new(created_at: SimInstant) -> Self {
-        Self {
-            entries: BTreeMap::new(),
-            created_at,
-        }
-    }
-
-    /// Atomic PUT (create or replace).
-    pub fn put(&mut self, name: &str, obj: Object, now: SimInstant, cm: &ConsistencyModel) {
-        let visible_at = now + cm.create_lag;
-        match self.entries.get_mut(name) {
-            Some(e) => {
-                // Replacing: if the name was already visible in listings it
-                // stays visible; a fresh create after delete gets a new lag.
-                let already_visible = e.obj.is_some() && e.list_visible_at <= now;
-                e.obj = Some(obj);
-                if !already_visible {
-                    e.list_visible_at = visible_at;
-                }
-                e.stale = None;
-            }
-            None => {
-                self.entries.insert(
-                    name.to_string(),
-                    Entry {
-                        obj: Some(obj),
-                        list_visible_at: visible_at,
-                        stale: None,
-                    },
-                );
-            }
-        }
-    }
-
-    /// Authoritative lookup (GET/HEAD path) — read-after-write consistent.
-    pub fn get(&self, name: &str) -> Option<&Object> {
-        self.entries.get(name).and_then(|e| e.obj.as_ref())
-    }
-
-    /// DELETE. Returns true if the object existed. The name may keep
-    /// appearing in listings for `delete_lag`.
-    pub fn delete(&mut self, name: &str, now: SimInstant, cm: &ConsistencyModel) -> bool {
-        match self.entries.get_mut(name) {
-            Some(e) if e.obj.is_some() => {
-                let was_listed = e.list_visible_at <= now;
-                let old = e.obj.take().unwrap();
-                e.stale = if was_listed && cm.delete_lag.as_micros() > 0 {
-                    Some((old, now + cm.delete_lag))
-                } else {
-                    None
-                };
-                true
-            }
-            _ => false,
-        }
-    }
-
-    /// Number of live objects (authoritative view).
-    pub fn live_count(&self) -> usize {
-        self.entries.values().filter(|e| e.obj.is_some()).count()
-    }
-
-    /// Total live bytes (authoritative view).
-    pub fn live_bytes(&self) -> u64 {
-        self.entries
-            .values()
-            .filter_map(|e| e.obj.as_ref())
-            .map(|o| o.size())
-            .sum()
-    }
-
-    /// Iterate authoritative live objects (name, object) — used by tests and
-    /// the harness, NOT by connectors (they must go through listings).
-    pub fn iter_live(&self) -> impl Iterator<Item = (&str, &Object)> {
-        self.entries
-            .iter()
-            .filter_map(|(k, e)| e.obj.as_ref().map(|o| (k.as_str(), o)))
-    }
-
-    /// GET Container — the *eventually consistent* listing at time `now`,
-    /// filtered by `prefix`, optionally collapsing at `delimiter`.
-    pub fn list(&self, now: SimInstant, prefix: &str, delimiter: Option<char>) -> Listing {
+    /// Build a listing from visible entries (sorted ascending, all names
+    /// starting with `prefix`), collapsing names that contain `delimiter`
+    /// after the prefix into deduplicated common prefixes.
+    pub fn collapse(prefix: &str, delimiter: Option<char>, entries: Vec<ObjectSummary>) -> Listing {
         let mut listing = Listing::default();
-        let range = self.entries.range(prefix.to_string()..);
-        for (name, e) in range {
-            if !name.starts_with(prefix) {
-                break; // BTreeMap is sorted; past the prefix block.
-            }
-            // Visibility per the consistency model:
-            let visible: Option<&Object> = if let Some(obj) = &e.obj {
-                if e.list_visible_at <= now {
-                    Some(obj)
-                } else {
-                    None // created, but not yet listed
-                }
-            } else if let Some((stale, until)) = &e.stale {
-                if *until > now {
-                    Some(stale) // deleted, but still listed
-                } else {
-                    None
-                }
-            } else {
-                None
-            };
-            let Some(obj) = visible else { continue };
-            let rest = &name[prefix.len()..];
+        for entry in entries {
+            debug_assert!(entry.name.starts_with(prefix));
+            let rest = &entry.name[prefix.len()..];
             if let Some(d) = delimiter {
                 if let Some(i) = rest.find(d) {
                     let cp = format!("{}{}", prefix, &rest[..=i]);
@@ -170,11 +49,7 @@ impl Container {
                     continue;
                 }
             }
-            listing.objects.push(ObjectSummary {
-                name: name.clone(),
-                size: obj.size(),
-                etag: obj.etag,
-            });
+            listing.objects.push(entry);
         }
         listing
     }
@@ -183,133 +58,51 @@ impl Container {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::objectstore::object::Metadata;
-    use crate::simclock::SimDuration;
 
-    fn obj(data: &[u8], t: u64) -> Object {
-        Object::new(data.to_vec(), Metadata::new(), SimInstant(t))
-    }
-
-    fn strong() -> ConsistencyModel {
-        ConsistencyModel::strong()
-    }
-
-    #[test]
-    fn put_get_delete_authoritative() {
-        let cm = strong();
-        let mut c = Container::new(SimInstant::EPOCH);
-        c.put("a/b", obj(b"xy", 0), SimInstant(0), &cm);
-        assert_eq!(c.get("a/b").unwrap().size(), 2);
-        assert!(c.get("a/c").is_none());
-        assert!(c.delete("a/b", SimInstant(1), &cm));
-        assert!(c.get("a/b").is_none());
-        assert!(!c.delete("a/b", SimInstant(2), &cm));
-    }
-
-    #[test]
-    fn strong_listing_with_prefix() {
-        let cm = strong();
-        let mut c = Container::new(SimInstant::EPOCH);
-        for name in ["d/x", "d/y", "e/z", "d2"] {
-            c.put(name, obj(b"1", 0), SimInstant(0), &cm);
+    fn summary(name: &str) -> ObjectSummary {
+        ObjectSummary {
+            name: name.to_string(),
+            size: 1,
+            etag: 0,
         }
-        let l = c.list(SimInstant(0), "d/", None);
+    }
+
+    #[test]
+    fn no_delimiter_keeps_all_objects() {
+        let l = Listing::collapse("d/", None, vec![summary("d/x"), summary("d/y")]);
         assert_eq!(
             l.objects.iter().map(|o| o.name.as_str()).collect::<Vec<_>>(),
             vec!["d/x", "d/y"]
         );
+        assert!(l.common_prefixes.is_empty());
+        assert_eq!(l.len(), 2);
+        assert!(!l.is_empty());
     }
 
     #[test]
     fn delimiter_collapses_prefixes() {
-        let cm = strong();
-        let mut c = Container::new(SimInstant::EPOCH);
-        for name in ["ds/part-0", "ds/_temporary/0/t1", "ds/_temporary/0/t2", "ds/sub/deep/x"] {
-            c.put(name, obj(b"1", 0), SimInstant(0), &cm);
-        }
-        let l = c.list(SimInstant(0), "ds/", Some('/'));
+        let l = Listing::collapse(
+            "ds/",
+            Some('/'),
+            vec![
+                summary("ds/_temporary/0/t1"),
+                summary("ds/_temporary/0/t2"),
+                summary("ds/part-0"),
+                summary("ds/sub/deep/x"),
+            ],
+        );
         assert_eq!(
             l.objects.iter().map(|o| o.name.as_str()).collect::<Vec<_>>(),
             vec!["ds/part-0"]
         );
         assert_eq!(l.common_prefixes, vec!["ds/_temporary/", "ds/sub/"]);
+        assert_eq!(l.len(), 3);
     }
 
     #[test]
-    fn eventual_create_lag_hides_new_objects_from_listing() {
-        let cm = ConsistencyModel {
-            create_lag: SimDuration::from_secs(5),
-            delete_lag: SimDuration::ZERO,
-        };
-        let mut c = Container::new(SimInstant::EPOCH);
-        c.put("k", obj(b"v", 0), SimInstant(0), &cm);
-        // GET sees it immediately (read-after-write)...
-        assert!(c.get("k").is_some());
-        // ...but the listing doesn't until t=5s.
-        assert!(c.list(SimInstant(0), "", None).is_empty());
-        assert!(c.list(SimInstant(4_999_999), "", None).is_empty());
-        assert_eq!(c.list(SimInstant(5_000_000), "", None).objects.len(), 1);
-    }
-
-    #[test]
-    fn eventual_delete_lag_keeps_ghost_in_listing() {
-        let cm = ConsistencyModel {
-            create_lag: SimDuration::ZERO,
-            delete_lag: SimDuration::from_secs(3),
-        };
-        let mut c = Container::new(SimInstant::EPOCH);
-        c.put("k", obj(b"vv", 0), SimInstant(0), &cm);
-        c.delete("k", SimInstant(1_000_000), &cm);
-        // GET is strongly consistent: gone.
-        assert!(c.get("k").is_none());
-        // Listing still shows the ghost until t=4s.
-        let l = c.list(SimInstant(2_000_000), "", None);
-        assert_eq!(l.objects.len(), 1);
-        assert_eq!(l.objects[0].size, 2);
-        assert!(c.list(SimInstant(4_000_000), "", None).is_empty());
-    }
-
-    #[test]
-    fn delete_before_listed_leaves_no_ghost() {
-        // Created and deleted within the create-lag window: never listed.
-        let cm = ConsistencyModel {
-            create_lag: SimDuration::from_secs(10),
-            delete_lag: SimDuration::from_secs(10),
-        };
-        let mut c = Container::new(SimInstant::EPOCH);
-        c.put("k", obj(b"v", 0), SimInstant(0), &cm);
-        c.delete("k", SimInstant(1), &cm);
-        for t in [0u64, 1, 5_000_000, 20_000_000] {
-            assert!(c.list(SimInstant(t), "", None).is_empty(), "t={t}");
-        }
-    }
-
-    #[test]
-    fn replace_keeps_visibility() {
-        let cm = ConsistencyModel {
-            create_lag: SimDuration::from_secs(5),
-            delete_lag: SimDuration::ZERO,
-        };
-        let mut c = Container::new(SimInstant::EPOCH);
-        c.put("k", obj(b"1", 0), SimInstant(0), &cm);
-        // Visible at t=5s; replace at t=6s must stay visible immediately.
-        c.put("k", obj(b"22", 0), SimInstant(6_000_000), &cm);
-        let l = c.list(SimInstant(6_000_000), "", None);
-        assert_eq!(l.objects.len(), 1);
-        assert_eq!(l.objects[0].size, 2);
-    }
-
-    #[test]
-    fn live_accounting() {
-        let cm = strong();
-        let mut c = Container::new(SimInstant::EPOCH);
-        c.put("a", obj(b"123", 0), SimInstant(0), &cm);
-        c.put("b", obj(b"4567", 0), SimInstant(0), &cm);
-        assert_eq!(c.live_count(), 2);
-        assert_eq!(c.live_bytes(), 7);
-        c.delete("a", SimInstant(1), &cm);
-        assert_eq!(c.live_count(), 1);
-        assert_eq!(c.live_bytes(), 4);
-        assert_eq!(c.iter_live().count(), 1);
+    fn empty_listing() {
+        let l = Listing::collapse("", Some('/'), vec![]);
+        assert!(l.is_empty());
+        assert_eq!(l.len(), 0);
     }
 }

@@ -1,23 +1,35 @@
-//! An in-memory cloud object store with the semantics the paper depends on
-//! (§2.1): atomic whole-object PUT, GET/HEAD/COPY/DELETE, flat namespace
-//! with hierarchical *naming* (prefix + delimiter listings), and
-//! **eventually consistent container listings** — a listing may omit a
-//! recently created object and may still include a recently deleted one.
+//! A cloud object store with the semantics the paper depends on (§2.1):
+//! atomic whole-object PUT, GET/HEAD/COPY/DELETE, flat namespace with
+//! hierarchical *naming* (prefix + delimiter listings), and **eventually
+//! consistent container listings** — a listing may omit a recently created
+//! object and may still include a recently deleted one.
 //!
-//! Every operation is accounted in [`crate::metrics::LiveCounters`] and
-//! costed on the virtual clock by [`latency::LatencyModel`]; REST-op prices
-//! come from [`pricing`]. This is the substitute for the paper's IBM COS
-//! cluster (DESIGN.md §2): connector behaviour depends only on the REST API
-//! semantics and the consistency model, both implemented here.
+//! The stack is split into a front end and a data plane:
+//!
+//! * [`store::ObjectStore`] — the front end: REST op accounting in
+//!   [`crate::metrics::LiveCounters`], virtual-clock costing via
+//!   [`latency::LatencyModel`], pricing via [`pricing`], and listing
+//!   consistency via the [`visibility`] overlay driven by
+//!   [`consistency::ConsistencyModel`]. This is the substitute for the
+//!   paper's IBM COS cluster (DESIGN.md §2): connector behaviour depends
+//!   only on the REST API semantics and the consistency model.
+//! * [`backend`] — pluggable storage backends behind the
+//!   [`backend::Backend`] trait: a sharded in-memory map and a persistent
+//!   local-filesystem layout. Op counts and simulated runtimes are
+//!   backend-invariant; backends trade wall-clock speed, concurrency and
+//!   durability.
 
-pub mod object;
+pub mod backend;
 pub mod consistency;
 pub mod container;
 pub mod latency;
-pub mod pricing;
 pub mod multipart;
+pub mod object;
+pub mod pricing;
 pub mod store;
+mod visibility;
 
+pub use backend::{Backend, BackendError, BackendKind, LocalFsBackend, ShardedMemBackend};
 pub use consistency::ConsistencyModel;
 pub use container::{Listing, ObjectSummary};
 pub use latency::LatencyModel;

@@ -3,6 +3,12 @@
 //! request; `complete` assembles parts in part-number order into the final
 //! object. The Swift analogue — chunked transfer encoding, which Stocator
 //! uses — is a *single* PUT and is modelled directly in the store.
+//!
+//! [`MultipartUpload`] is the shared part-buffer + assembly/validation
+//! logic for [`super::backend`] implementations: the in-memory backend
+//! keeps a [`MultipartTable`] of these, and the local-FS backend rebuilds
+//! one from its on-disk part files at complete time, so both enforce the
+//! same min-part-size rules.
 
 use super::object::Metadata;
 use std::collections::BTreeMap;

@@ -5,16 +5,25 @@
 //! failed operations (e.g. a HEAD on a missing object — the bread and
 //! butter of the legacy connectors' existence checks) still cost wire time,
 //! and the paper's op counts include them.
+//!
+//! Storage itself is delegated to a pluggable [`Backend`] (selected via
+//! [`StoreConfig::backend`]): everything the paper measures — which REST
+//! ops a connector issues, what they cost on the virtual clock, how
+//! eventually-consistent listings lag mutations — happens in this front
+//! end, so op counts and simulated runtimes are backend-invariant by
+//! construction.
 
+use super::backend::{make_backend, Backend, BackendError, DEFAULT_PAGE_SIZE};
+use super::backend::{BackendKind, ObjectStat};
 use super::consistency::ConsistencyModel;
-use super::container::{Container, Listing};
+use super::container::Listing;
 use super::latency::LatencyModel;
-use super::multipart::{MultipartTable, DEFAULT_MIN_PART_SIZE};
+use super::multipart::DEFAULT_MIN_PART_SIZE;
 use super::object::{Metadata, Object};
+use super::visibility::VisibilityMap;
 use crate::metrics::{LiveCounters, OpCounts, OpKind};
 use crate::simclock::{SimDuration, SimInstant};
 use crate::util::rng::Pcg32;
-use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::{Arc, Mutex};
 
@@ -26,6 +35,8 @@ pub enum StoreError {
     ContainerAlreadyExists(String),
     NoSuchUpload(u64),
     InvalidRequest(String),
+    /// Real-IO failure in a persistent backend (no REST analogue).
+    Backend(String),
 }
 
 impl fmt::Display for StoreError {
@@ -36,11 +47,25 @@ impl fmt::Display for StoreError {
             StoreError::ContainerAlreadyExists(c) => write!(f, "409 ContainerExists: {c}"),
             StoreError::NoSuchUpload(id) => write!(f, "404 NoSuchUpload: {id}"),
             StoreError::InvalidRequest(m) => write!(f, "400 InvalidRequest: {m}"),
+            StoreError::Backend(m) => write!(f, "500 BackendIo: {m}"),
         }
     }
 }
 
 impl std::error::Error for StoreError {}
+
+impl From<BackendError> for StoreError {
+    fn from(e: BackendError) -> Self {
+        match e {
+            BackendError::NoSuchContainer(c) => StoreError::NoSuchContainer(c),
+            BackendError::NoSuchKey(k) => StoreError::NoSuchKey(k),
+            BackendError::ContainerAlreadyExists(c) => StoreError::ContainerAlreadyExists(c),
+            BackendError::NoSuchUpload(id) => StoreError::NoSuchUpload(id),
+            BackendError::InvalidRequest(m) => StoreError::InvalidRequest(m),
+            BackendError::Io(m) => StoreError::Backend(m),
+        }
+    }
+}
 
 /// Head-object response: metadata + size, no data (HTTP HEAD).
 #[derive(Debug, Clone)]
@@ -49,6 +74,17 @@ pub struct HeadResult {
     pub etag: u64,
     pub metadata: Metadata,
     pub created_at: SimInstant,
+}
+
+impl From<ObjectStat> for HeadResult {
+    fn from(s: ObjectStat) -> Self {
+        HeadResult {
+            size: s.size,
+            etag: s.etag,
+            metadata: s.metadata,
+            created_at: s.created_at,
+        }
+    }
 }
 
 /// Get-object response: data + everything HEAD returns (the read-path
@@ -68,6 +104,8 @@ pub struct StoreConfig {
     pub min_part_size: u64,
     /// Seed for the jitter stream.
     pub seed: u64,
+    /// Which storage backend holds the bytes.
+    pub backend: BackendKind,
 }
 
 impl Default for StoreConfig {
@@ -77,6 +115,7 @@ impl Default for StoreConfig {
             consistency: ConsistencyModel::eventual(),
             min_part_size: DEFAULT_MIN_PART_SIZE,
             seed: 0,
+            backend: BackendKind::default(),
         }
     }
 }
@@ -89,6 +128,7 @@ impl StoreConfig {
             consistency: ConsistencyModel::strong(),
             min_part_size: 0,
             seed: 0,
+            backend: BackendKind::default(),
         }
     }
 
@@ -99,35 +139,42 @@ impl StoreConfig {
             consistency: ConsistencyModel::eventual(),
             min_part_size: 0,
             seed: 0,
+            backend: BackendKind::default(),
         }
     }
 }
 
-struct Inner {
-    containers: BTreeMap<String, Container>,
-    multipart: MultipartTable,
-    rng: Pcg32,
-}
-
-/// The shared object store. Cloneable handle (`Arc` inside); safe to use
-/// from the executor threads of the Spark simulator.
+/// The shared object store. Safe to use from the executor threads of the
+/// Spark simulator: the hot path contends only on the backend's shard
+/// locks (and, under eventual consistency, the visibility overlay).
 pub struct ObjectStore {
-    inner: Mutex<Inner>,
+    backend: Box<dyn Backend>,
+    visibility: Mutex<VisibilityMap>,
+    rng: Mutex<Pcg32>,
     counters: LiveCounters,
     pub config: StoreConfig,
 }
 
 impl ObjectStore {
     pub fn new(config: StoreConfig) -> Arc<Self> {
+        let backend = make_backend(&config.backend);
+        Self::with_backend(config, backend)
+    }
+
+    /// Run on an explicit backend instance (tests, pre-opened roots).
+    pub fn with_backend(config: StoreConfig, backend: Box<dyn Backend>) -> Arc<Self> {
         Arc::new(Self {
-            inner: Mutex::new(Inner {
-                containers: BTreeMap::new(),
-                multipart: MultipartTable::default(),
-                rng: Pcg32::new(config.seed ^ 0x5106_a70c),
-            }),
+            backend,
+            visibility: Mutex::new(VisibilityMap::default()),
+            rng: Mutex::new(Pcg32::new(config.seed ^ 0x5106_a70c)),
             counters: LiveCounters::new(),
             config,
         })
+    }
+
+    /// The backend's human-readable name (`mem`, `sharded-mem`, `local-fs`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Live op/byte counters (for harness snapshots).
@@ -135,30 +182,63 @@ impl ObjectStore {
         self.counters.snapshot()
     }
 
-    fn charge(&self, inner: &mut Inner, kind: OpKind, bytes: u64, entries: usize) -> SimDuration {
+    /// Record the op and price it on the virtual clock. The jitter stream
+    /// is only consulted when jitter is enabled, so the hot path takes no
+    /// lock here.
+    fn charge(&self, kind: OpKind, bytes: u64, entries: usize) -> SimDuration {
         self.counters.record_op(kind);
         let d = self.config.latency.op_duration(kind, bytes, entries);
-        self.config.latency.jittered(d, inner.rng.next_f64())
+        if self.config.latency.jitter == 0.0 {
+            d
+        } else {
+            let draw = self.rng.lock().unwrap().next_f64();
+            self.config.latency.jittered(d, draw)
+        }
+    }
+
+    /// Install an object through the backend and keep the visibility
+    /// overlay in sync (shared by PUT, COPY and multipart-complete).
+    fn apply_put(
+        &self,
+        container: &str,
+        key: &str,
+        data: Vec<u8>,
+        metadata: Metadata,
+        now: SimInstant,
+    ) -> Result<(), StoreError> {
+        let obj = Object::new(data, metadata, now);
+        let replaced = self.backend.put(container, key, obj)?;
+        if !self.config.consistency.is_strong() {
+            self.visibility.lock().unwrap().on_put(
+                container,
+                key,
+                replaced,
+                now,
+                self.config.consistency.create_lag,
+            );
+        }
+        Ok(())
     }
 
     // ---- container operations -------------------------------------------
 
     /// PUT Container (create). Counted as a PUT.
-    pub fn create_container(&self, name: &str, now: SimInstant) -> (Result<(), StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
-        let d = self.charge(&mut inner, OpKind::PutObject, 0, 0);
-        if inner.containers.contains_key(name) {
-            return (Err(StoreError::ContainerAlreadyExists(name.into())), d);
-        }
-        inner.containers.insert(name.to_string(), Container::new(now));
-        (Ok(()), d)
+    pub fn create_container(
+        &self,
+        name: &str,
+        _now: SimInstant,
+    ) -> (Result<(), StoreError>, SimDuration) {
+        let d = self.charge(OpKind::PutObject, 0, 0);
+        (
+            self.backend.create_container(name).map_err(StoreError::from),
+            d,
+        )
     }
 
     /// HEAD Container.
     pub fn head_container(&self, name: &str) -> (Result<(), StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
-        let d = self.charge(&mut inner, OpKind::HeadContainer, 0, 0);
-        if inner.containers.contains_key(name) {
+        let d = self.charge(OpKind::HeadContainer, 0, 0);
+        if self.backend.container_exists(name) {
             (Ok(()), d)
         } else {
             (Err(StoreError::NoSuchContainer(name.into())), d)
@@ -178,16 +258,16 @@ impl ObjectStore {
         metadata: Metadata,
         now: SimInstant,
     ) -> (Result<(), StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
         let size = data.len() as u64;
-        let d = self.charge(&mut inner, OpKind::PutObject, size, 0);
-        let Some(c) = inner.containers.get_mut(container) else {
-            return (Err(StoreError::NoSuchContainer(container.into())), d);
-        };
-        self.counters
-            .record_write(self.config.latency.scaled_bytes(size));
-        c.put(key, Object::new(data, metadata, now), now, &self.config.consistency);
-        (Ok(()), d)
+        let d = self.charge(OpKind::PutObject, size, 0);
+        match self.apply_put(container, key, data, metadata, now) {
+            Ok(()) => {
+                self.counters
+                    .record_write(self.config.latency.scaled_bytes(size));
+                (Ok(()), d)
+            }
+            Err(e) => (Err(e), d),
+        }
     }
 
     /// GET Object — returns data *and* metadata (basis of Stocator's
@@ -197,20 +277,10 @@ impl ObjectStore {
         container: &str,
         key: &str,
     ) -> (Result<GetResult, StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
-        let found = inner
-            .containers
-            .get(container)
-            .ok_or_else(|| StoreError::NoSuchContainer(container.into()))
-            .and_then(|c| {
-                c.get(key)
-                    .cloned()
-                    .ok_or_else(|| StoreError::NoSuchKey(format!("{container}/{key}")))
-            });
-        match found {
+        match self.backend.get(container, key) {
             Ok(obj) => {
                 let size = obj.size();
-                let d = self.charge(&mut inner, OpKind::GetObject, size, 0);
+                let d = self.charge(OpKind::GetObject, size, 0);
                 self.counters
                     .record_read(self.config.latency.scaled_bytes(size));
                 (
@@ -219,7 +289,7 @@ impl ObjectStore {
                         head: HeadResult {
                             size,
                             etag: obj.etag,
-                            metadata: obj.metadata.clone(),
+                            metadata: obj.metadata,
                             created_at: obj.created_at,
                         },
                     }),
@@ -227,8 +297,8 @@ impl ObjectStore {
                 )
             }
             Err(e) => {
-                let d = self.charge(&mut inner, OpKind::GetObject, 0, 0);
-                (Err(e), d)
+                let d = self.charge(OpKind::GetObject, 0, 0);
+                (Err(e.into()), d)
             }
         }
     }
@@ -239,22 +309,12 @@ impl ObjectStore {
         container: &str,
         key: &str,
     ) -> (Result<HeadResult, StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
-        let d = self.charge(&mut inner, OpKind::HeadObject, 0, 0);
-        let found = inner
-            .containers
-            .get(container)
-            .ok_or_else(|| StoreError::NoSuchContainer(container.into()))
-            .and_then(|c| {
-                c.get(key)
-                    .ok_or_else(|| StoreError::NoSuchKey(format!("{container}/{key}")))
-                    .map(|obj| HeadResult {
-                        size: obj.size(),
-                        etag: obj.etag,
-                        metadata: obj.metadata.clone(),
-                        created_at: obj.created_at,
-                    })
-            });
+        let d = self.charge(OpKind::HeadObject, 0, 0);
+        let found = self
+            .backend
+            .head(container, key)
+            .map(HeadResult::from)
+            .map_err(StoreError::from);
         (found, d)
     }
 
@@ -268,40 +328,27 @@ impl ObjectStore {
         dst_key: &str,
         now: SimInstant,
     ) -> (Result<(), StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
-        let src = inner
-            .containers
-            .get(src_container)
-            .ok_or_else(|| StoreError::NoSuchContainer(src_container.into()))
-            .and_then(|c| {
-                c.get(src_key)
-                    .cloned()
-                    .ok_or_else(|| StoreError::NoSuchKey(format!("{src_container}/{src_key}")))
-            });
-        match src {
+        match self.backend.get(src_container, src_key) {
             Ok(obj) => {
                 let size = obj.size();
-                let d = self.charge(&mut inner, OpKind::CopyObject, size, 0);
-                if !inner.containers.contains_key(dst_container) {
+                let d = self.charge(OpKind::CopyObject, size, 0);
+                if !self.backend.container_exists(dst_container) {
                     return (Err(StoreError::NoSuchContainer(dst_container.into())), d);
                 }
                 self.counters
                     .record_copy(self.config.latency.scaled_bytes(size));
-                let copied = Object::new(
+                let r = self.apply_put(
+                    dst_container,
+                    dst_key,
                     obj.data.as_ref().clone(),
                     obj.metadata.clone(),
                     now,
                 );
-                inner
-                    .containers
-                    .get_mut(dst_container)
-                    .unwrap()
-                    .put(dst_key, copied, now, &self.config.consistency);
-                (Ok(()), d)
+                (r, d)
             }
             Err(e) => {
-                let d = self.charge(&mut inner, OpKind::CopyObject, 0, 0);
-                (Err(e), d)
+                let d = self.charge(OpKind::CopyObject, 0, 0);
+                (Err(e.into()), d)
             }
         }
     }
@@ -313,16 +360,22 @@ impl ObjectStore {
         key: &str,
         now: SimInstant,
     ) -> (Result<(), StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
-        let d = self.charge(&mut inner, OpKind::DeleteObject, 0, 0);
-        let cm = self.config.consistency;
-        let Some(c) = inner.containers.get_mut(container) else {
-            return (Err(StoreError::NoSuchContainer(container.into())), d);
-        };
-        if c.delete(key, now, &cm) {
-            (Ok(()), d)
-        } else {
-            (Err(StoreError::NoSuchKey(format!("{container}/{key}"))), d)
+        let d = self.charge(OpKind::DeleteObject, 0, 0);
+        match self.backend.delete(container, key) {
+            Ok(stat) => {
+                if !self.config.consistency.is_strong() {
+                    self.visibility.lock().unwrap().on_delete(
+                        container,
+                        key,
+                        stat.size,
+                        stat.etag,
+                        now,
+                        self.config.consistency.delete_lag,
+                    );
+                }
+                (Ok(()), d)
+            }
+            Err(e) => (Err(e.into()), d),
         }
     }
 
@@ -334,15 +387,58 @@ impl ObjectStore {
         delimiter: Option<char>,
         now: SimInstant,
     ) -> (Result<Listing, StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
-        let result = inner
-            .containers
-            .get(container)
-            .ok_or_else(|| StoreError::NoSuchContainer(container.into()))
-            .map(|c| c.list(now, prefix, delimiter));
+        let result = self.list_visible(container, prefix, delimiter, now);
         let entries = result.as_ref().map(|l| l.len()).unwrap_or(0);
-        let d = self.charge(&mut inner, OpKind::GetContainer, 0, entries);
+        let d = self.charge(OpKind::GetContainer, 0, entries);
         (result, d)
+    }
+
+    /// Walk every page of the backend's authoritative listing.
+    fn walk_all_pages(
+        &self,
+        container: &str,
+        prefix: &str,
+    ) -> Result<Vec<super::container::ObjectSummary>, StoreError> {
+        let mut all = Vec::new();
+        let mut start_after: Option<String> = None;
+        loop {
+            let page = self.backend.list_page(
+                container,
+                prefix,
+                start_after.as_deref(),
+                DEFAULT_PAGE_SIZE,
+            )?;
+            let empty = page.entries.is_empty();
+            all.extend(page.entries);
+            match page.next {
+                Some(n) if !empty => start_after = Some(n),
+                _ => return Ok(all),
+            }
+        }
+    }
+
+    /// Walk the backend's paginated listing, apply the visibility overlay,
+    /// collapse at the delimiter.
+    fn list_visible(
+        &self,
+        container: &str,
+        prefix: &str,
+        delimiter: Option<char>,
+        now: SimInstant,
+    ) -> Result<Listing, StoreError> {
+        if !self.backend.container_exists(container) {
+            return Err(StoreError::NoSuchContainer(container.into()));
+        }
+        let raw = self.walk_all_pages(container, prefix)?;
+        let visible = if self.config.consistency.is_strong() {
+            raw
+        } else {
+            self.visibility
+                .lock()
+                .unwrap()
+                .overlay(container, prefix, now, raw)
+        };
+        Ok(Listing::collapse(prefix, delimiter, visible))
     }
 
     // ---- multipart upload (S3a fast-upload path) --------------------------
@@ -354,13 +450,13 @@ impl ObjectStore {
         key: &str,
         metadata: Metadata,
     ) -> (Result<u64, StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
-        let d = self.charge(&mut inner, OpKind::PutObject, 0, 0);
-        if !inner.containers.contains_key(container) {
-            return (Err(StoreError::NoSuchContainer(container.into())), d);
-        }
-        let id = inner.multipart.initiate(container, key, metadata);
-        (Ok(id), d)
+        let d = self.charge(OpKind::PutObject, 0, 0);
+        (
+            self.backend
+                .initiate_multipart(container, key, metadata)
+                .map_err(StoreError::from),
+            d,
+        )
     }
 
     /// Upload one part. Charged as a PUT of the part's size.
@@ -370,17 +466,15 @@ impl ObjectStore {
         part_number: u32,
         data: Vec<u8>,
     ) -> (Result<(), StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
         let size = data.len() as u64;
-        let d = self.charge(&mut inner, OpKind::PutObject, size, 0);
-        match inner.multipart.get_mut(upload_id) {
-            Some(up) => {
+        let d = self.charge(OpKind::PutObject, size, 0);
+        match self.backend.upload_part(upload_id, part_number, data) {
+            Ok(()) => {
                 self.counters
                     .record_write(self.config.latency.scaled_bytes(size));
-                up.put_part(part_number, data);
                 (Ok(()), d)
             }
-            None => (Err(StoreError::NoSuchUpload(upload_id)), d),
+            Err(e) => (Err(e.into()), d),
         }
     }
 
@@ -390,83 +484,65 @@ impl ObjectStore {
         upload_id: u64,
         now: SimInstant,
     ) -> (Result<(), StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
-        let d = self.charge(&mut inner, OpKind::PutObject, 0, 0);
-        let Some(up) = inner.multipart.take(upload_id) else {
-            return (Err(StoreError::NoSuchUpload(upload_id)), d);
+        let d = self.charge(OpKind::PutObject, 0, 0);
+        let assembled = match self
+            .backend
+            .complete_multipart(upload_id, self.config.min_part_size)
+        {
+            Ok(a) => a,
+            Err(e) => return (Err(e.into()), d),
         };
-        let container = up.container.clone();
-        let key = up.key.clone();
-        match up.assemble(self.config.min_part_size) {
-            Ok((data, metadata)) => {
-                let cm = self.config.consistency;
-                let Some(c) = inner.containers.get_mut(&container) else {
-                    return (Err(StoreError::NoSuchContainer(container)), d);
-                };
-                // Bytes were already accounted at upload_part time.
-                c.put(&key, Object::new(data, metadata, now), now, &cm);
-                (Ok(()), d)
-            }
-            Err(msg) => (Err(StoreError::InvalidRequest(msg)), d),
-        }
+        // Bytes were already accounted at upload_part time.
+        let r = self.apply_put(
+            &assembled.container,
+            &assembled.key,
+            assembled.data,
+            assembled.metadata,
+            now,
+        );
+        (r, d)
     }
 
     /// Abort a multipart upload (task abort path). Charged as a DELETE.
     pub fn abort_multipart(&self, upload_id: u64) -> (Result<(), StoreError>, SimDuration) {
-        let mut inner = self.inner.lock().unwrap();
-        let d = self.charge(&mut inner, OpKind::DeleteObject, 0, 0);
-        match inner.multipart.take(upload_id) {
-            Some(_) => (Ok(()), d),
-            None => (Err(StoreError::NoSuchUpload(upload_id)), d),
-        }
+        let d = self.charge(OpKind::DeleteObject, 0, 0);
+        (
+            self.backend
+                .abort_multipart(upload_id)
+                .map_err(StoreError::from),
+            d,
+        )
     }
 
     // ---- inspection (harness/tests only; not REST, not counted) -----------
 
     /// Authoritative object count in a container.
     pub fn debug_live_count(&self, container: &str) -> usize {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .containers
-            .get(container)
-            .map(|c| c.live_count())
-            .unwrap_or(0)
+        self.backend.live_count(container)
     }
 
     /// Authoritative byte count in a container.
     pub fn debug_live_bytes(&self, container: &str) -> u64 {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .containers
-            .get(container)
-            .map(|c| c.live_bytes())
-            .unwrap_or(0)
+        self.backend.live_bytes(container)
     }
 
     /// Authoritative name list (sorted) — bypasses eventual consistency.
     pub fn debug_names(&self, container: &str, prefix: &str) -> Vec<String> {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .containers
-            .get(container)
-            .map(|c| {
-                c.iter_live()
-                    .filter(|(k, _)| k.starts_with(prefix))
-                    .map(|(k, _)| k.to_string())
-                    .collect()
-            })
+        self.walk_all_pages(container, prefix)
+            .map(|entries| entries.into_iter().map(|e| e.name).collect())
             .unwrap_or_default()
     }
 
     /// In-flight multipart uploads (leak detection in tests).
     pub fn debug_multipart_in_flight(&self) -> usize {
-        self.inner.lock().unwrap().multipart.in_flight()
+        self.backend.multipart_in_flight()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn store() -> Arc<ObjectStore> {
         let s = ObjectStore::new(StoreConfig::instant_strong());
@@ -474,22 +550,70 @@ mod tests {
         s
     }
 
+    /// A store plus the on-disk root to reap when the test ends (fs
+    /// backend only) — keeps `cargo test` from littering the temp dir.
+    struct TestStore {
+        store: Arc<ObjectStore>,
+        root: Option<PathBuf>,
+    }
+
+    impl std::ops::Deref for TestStore {
+        type Target = ObjectStore;
+        fn deref(&self) -> &ObjectStore {
+            &self.store
+        }
+    }
+
+    impl Drop for TestStore {
+        fn drop(&mut self) {
+            if let Some(root) = &self.root {
+                let _ = std::fs::remove_dir_all(root);
+            }
+        }
+    }
+
+    fn test_store(backend: BackendKind, base: StoreConfig) -> TestStore {
+        let (backend, root) = match backend {
+            BackendKind::LocalFs(None) => {
+                let root = super::super::backend::fresh_temp_root();
+                (BackendKind::LocalFs(Some(root.clone())), Some(root))
+            }
+            other => (other, None),
+        };
+        let s = ObjectStore::new(StoreConfig { backend, ..base });
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        TestStore { store: s, root }
+    }
+
+    /// Same protocol state, on every backend kind.
+    fn all_backend_stores() -> Vec<TestStore> {
+        [
+            BackendKind::Mem,
+            BackendKind::Sharded(4),
+            BackendKind::LocalFs(None),
+        ]
+        .into_iter()
+        .map(|backend| test_store(backend, StoreConfig::instant_strong()))
+        .collect()
+    }
+
     #[test]
     fn put_get_roundtrip_with_metadata() {
-        let s = store();
-        let mut md = Metadata::new();
-        md.insert("X-Stocator-Origin".into(), "stocator-1.0".into());
-        s.put_object("res", "d/part-0", b"abc".to_vec(), md, SimInstant(0))
-            .0
-            .unwrap();
-        let (r, _) = s.get_object("res", "d/part-0");
-        let r = r.unwrap();
-        assert_eq!(&*r.data, b"abc");
-        assert_eq!(r.head.size, 3);
-        assert_eq!(
-            r.head.metadata.get("X-Stocator-Origin").map(String::as_str),
-            Some("stocator-1.0")
-        );
+        for s in all_backend_stores() {
+            let mut md = Metadata::new();
+            md.insert("X-Stocator-Origin".into(), "stocator-1.0".into());
+            s.put_object("res", "d/part-0", b"abc".to_vec(), md, SimInstant(0))
+                .0
+                .unwrap();
+            let (r, _) = s.get_object("res", "d/part-0");
+            let r = r.unwrap();
+            assert_eq!(&*r.data, b"abc", "backend {}", s.backend_name());
+            assert_eq!(r.head.size, 3);
+            assert_eq!(
+                r.head.metadata.get("X-Stocator-Origin").map(String::as_str),
+                Some("stocator-1.0")
+            );
+        }
     }
 
     #[test]
@@ -504,36 +628,38 @@ mod tests {
 
     #[test]
     fn copy_then_delete_is_rename() {
-        let s = store();
-        s.put_object("res", "tmp/x", b"data".to_vec(), Metadata::new(), SimInstant(0))
-            .0
-            .unwrap();
-        s.copy_object("res", "tmp/x", "res", "final/x", SimInstant(1))
-            .0
-            .unwrap();
-        s.delete_object("res", "tmp/x", SimInstant(2)).0.unwrap();
-        assert!(s.get_object("res", "final/x").0.is_ok());
-        assert!(s.get_object("res", "tmp/x").0.is_err());
-        let c = s.counters();
-        assert_eq!(c.get(OpKind::CopyObject), 1);
-        assert_eq!(c.get(OpKind::DeleteObject), 1);
-        // COPY moved the bytes server-side:
-        assert_eq!(c.bytes_copied, 4);
-        assert_eq!(c.bytes_written, 4);
+        for s in all_backend_stores() {
+            s.put_object("res", "tmp/x", b"data".to_vec(), Metadata::new(), SimInstant(0))
+                .0
+                .unwrap();
+            s.copy_object("res", "tmp/x", "res", "final/x", SimInstant(1))
+                .0
+                .unwrap();
+            s.delete_object("res", "tmp/x", SimInstant(2)).0.unwrap();
+            assert!(s.get_object("res", "final/x").0.is_ok());
+            assert!(s.get_object("res", "tmp/x").0.is_err());
+            let c = s.counters();
+            assert_eq!(c.get(OpKind::CopyObject), 1);
+            assert_eq!(c.get(OpKind::DeleteObject), 1);
+            // COPY moved the bytes server-side:
+            assert_eq!(c.bytes_copied, 4);
+            assert_eq!(c.bytes_written, 4);
+        }
     }
 
     #[test]
     fn atomic_put_replaces_whole_value() {
-        let s = store();
-        s.put_object("res", "k", b"first".to_vec(), Metadata::new(), SimInstant(0))
-            .0
-            .unwrap();
-        s.put_object("res", "k", b"2nd".to_vec(), Metadata::new(), SimInstant(1))
-            .0
-            .unwrap();
-        let (r, _) = s.get_object("res", "k");
-        assert_eq!(&*r.unwrap().data, b"2nd");
-        assert_eq!(s.debug_live_count("res"), 1);
+        for s in all_backend_stores() {
+            s.put_object("res", "k", b"first".to_vec(), Metadata::new(), SimInstant(0))
+                .0
+                .unwrap();
+            s.put_object("res", "k", b"2nd".to_vec(), Metadata::new(), SimInstant(1))
+                .0
+                .unwrap();
+            let (r, _) = s.get_object("res", "k");
+            assert_eq!(&*r.unwrap().data, b"2nd");
+            assert_eq!(s.debug_live_count("res"), 1);
+        }
     }
 
     #[test]
@@ -551,6 +677,26 @@ mod tests {
         assert_eq!(l.unwrap().objects.len(), 1);
         // GET was always consistent:
         assert!(s.get_object("res", "a").0.is_ok());
+    }
+
+    #[test]
+    fn delete_ghost_lingers_in_listing_on_every_backend() {
+        for backend in [BackendKind::Mem, BackendKind::LocalFs(None)] {
+            let s = test_store(backend, StoreConfig::instant_eventual());
+            s.put_object("res", "k", b"vv".to_vec(), Metadata::new(), SimInstant(0))
+                .0
+                .unwrap();
+            s.delete_object("res", "k", SimInstant(2_500_000)).0.unwrap();
+            // GET is strongly consistent: gone.
+            assert!(s.get_object("res", "k").0.is_err());
+            // Listing still shows the ghost (2s delete lag), with the old size.
+            let (l, _) = s.list("res", "", None, SimInstant(3_000_000));
+            let l = l.unwrap();
+            assert_eq!(l.objects.len(), 1, "backend {}", s.backend_name());
+            assert_eq!(l.objects[0].size, 2);
+            let (l, _) = s.list("res", "", None, SimInstant(5_000_000));
+            assert!(l.unwrap().is_empty());
+        }
     }
 
     #[test]
@@ -575,31 +721,33 @@ mod tests {
 
     #[test]
     fn multipart_assembles_and_counts_puts() {
-        let s = store();
-        let before = s.counters();
-        let (id, _) = s.initiate_multipart("res", "big", Metadata::new());
-        let id = id.unwrap();
-        s.upload_part(id, 1, b"hello ".to_vec()).0.unwrap();
-        s.upload_part(id, 2, b"world".to_vec()).0.unwrap();
-        s.complete_multipart(id, SimInstant(5)).0.unwrap();
-        let (r, _) = s.get_object("res", "big");
-        assert_eq!(&*r.unwrap().data, b"hello world");
-        let d = s.counters().since(&before);
-        // initiate + 2 parts + complete = 4 PUT-class requests, 1 GET.
-        assert_eq!(d.get(OpKind::PutObject), 4);
-        assert_eq!(s.debug_multipart_in_flight(), 0);
+        for s in all_backend_stores() {
+            let before = s.counters();
+            let (id, _) = s.initiate_multipart("res", "big", Metadata::new());
+            let id = id.unwrap();
+            s.upload_part(id, 1, b"hello ".to_vec()).0.unwrap();
+            s.upload_part(id, 2, b"world".to_vec()).0.unwrap();
+            s.complete_multipart(id, SimInstant(5)).0.unwrap();
+            let (r, _) = s.get_object("res", "big");
+            assert_eq!(&*r.unwrap().data, b"hello world");
+            let d = s.counters().since(&before);
+            // initiate + 2 parts + complete = 4 PUT-class requests, 1 GET.
+            assert_eq!(d.get(OpKind::PutObject), 4);
+            assert_eq!(s.debug_multipart_in_flight(), 0);
+        }
     }
 
     #[test]
     fn multipart_abort_cleans_up() {
-        let s = store();
-        let (id, _) = s.initiate_multipart("res", "x", Metadata::new());
-        let id = id.unwrap();
-        s.upload_part(id, 1, b"junk".to_vec()).0.unwrap();
-        s.abort_multipart(id).0.unwrap();
-        assert_eq!(s.debug_multipart_in_flight(), 0);
-        assert!(s.get_object("res", "x").0.is_err());
-        assert!(s.complete_multipart(id, SimInstant(0)).0.is_err());
+        for s in all_backend_stores() {
+            let (id, _) = s.initiate_multipart("res", "x", Metadata::new());
+            let id = id.unwrap();
+            s.upload_part(id, 1, b"junk".to_vec()).0.unwrap();
+            s.abort_multipart(id).0.unwrap();
+            assert_eq!(s.debug_multipart_in_flight(), 0);
+            assert!(s.get_object("res", "x").0.is_err());
+            assert!(s.complete_multipart(id, SimInstant(0)).0.is_err());
+        }
     }
 
     #[test]
@@ -609,6 +757,7 @@ mod tests {
             consistency: ConsistencyModel::strong(),
             min_part_size: 0,
             seed: 0,
+            backend: BackendKind::default(),
         };
         let s = ObjectStore::new(cfg);
         let (_, d) = s.create_container("res", SimInstant::EPOCH);
@@ -635,6 +784,7 @@ mod tests {
                 consistency: ConsistencyModel::strong(),
                 min_part_size: 0,
                 seed,
+                backend: BackendKind::default(),
             };
             let s = ObjectStore::new(cfg);
             let (_, d) = s.create_container("res", SimInstant::EPOCH);
@@ -655,6 +805,7 @@ mod tests {
             consistency: ConsistencyModel::strong(),
             min_part_size: 0,
             seed: 0,
+            backend: BackendKind::default(),
         };
         let s = ObjectStore::new(cfg);
         s.create_container("res", SimInstant::EPOCH).0.unwrap();

@@ -1,0 +1,257 @@
+//! Listing-visibility overlay: the front end's eventual-consistency state.
+//!
+//! Backends keep authoritative, read-after-write state (see
+//! [`super::backend`]); the *eventually consistent* container listings of
+//! paper §2.1 are synthesised here. For each container the overlay tracks:
+//!
+//! * **pending** names — created but not yet visible in listings (until
+//!   `create_lag` elapses), and
+//! * **ghosts** — deleted names that listings must keep showing (with the
+//!   deleted object's size and ETag) until `delete_lag` elapses.
+//!
+//! The rules mirror the legacy per-entry bookkeeping exactly:
+//! replacing an already-visible object keeps it visible immediately, a
+//! fresh create after delete (or a replace inside the create-lag window)
+//! restarts the lag, and an object created and deleted entirely within its
+//! create-lag window never appears at all. Entries are pure functions of
+//! the timestamps recorded at mutation time, so queries may arrive with
+//! non-monotonic `now` values (independent task clocks) and still agree
+//! with the legacy semantics.
+
+use super::container::ObjectSummary;
+use crate::simclock::{SimDuration, SimInstant};
+use std::collections::BTreeMap;
+
+/// A deleted object that listings may still show.
+#[derive(Debug, Clone)]
+struct Ghost {
+    size: u64,
+    etag: u64,
+    until: SimInstant,
+}
+
+#[derive(Debug, Default)]
+struct ContainerVisibility {
+    /// Name -> instant it becomes visible in listings.
+    pending: BTreeMap<String, SimInstant>,
+    /// Name -> stale view shown until the recorded instant.
+    ghosts: BTreeMap<String, Ghost>,
+}
+
+/// Per-container visibility state; owned by the store, consulted only when
+/// the consistency model is not strong.
+#[derive(Debug, Default)]
+pub struct VisibilityMap {
+    containers: BTreeMap<String, ContainerVisibility>,
+}
+
+impl VisibilityMap {
+    /// Record a PUT. `replaced` is whether the backend overwrote an
+    /// existing object.
+    pub fn on_put(
+        &mut self,
+        container: &str,
+        key: &str,
+        replaced: bool,
+        now: SimInstant,
+        create_lag: SimDuration,
+    ) {
+        let cv = self.containers.entry(container.to_string()).or_default();
+        cv.ghosts.remove(key);
+        let already_visible = replaced && cv.pending.get(key).map_or(true, |t| *t <= now);
+        if already_visible {
+            cv.pending.remove(key);
+        } else {
+            cv.pending.insert(key.to_string(), now + create_lag);
+        }
+    }
+
+    /// Record a DELETE of an object whose final size/etag were `size`/`etag`.
+    pub fn on_delete(
+        &mut self,
+        container: &str,
+        key: &str,
+        size: u64,
+        etag: u64,
+        now: SimInstant,
+        delete_lag: SimDuration,
+    ) {
+        let cv = self.containers.entry(container.to_string()).or_default();
+        let was_listed = cv.pending.get(key).map_or(true, |t| *t <= now);
+        cv.pending.remove(key);
+        if was_listed && delete_lag.as_micros() > 0 {
+            cv.ghosts.insert(
+                key.to_string(),
+                Ghost {
+                    size,
+                    etag,
+                    until: now + delete_lag,
+                },
+            );
+        }
+    }
+
+    /// Apply the overlay to an authoritative listing: drop names still in
+    /// their create-lag window, merge in ghosts whose delete-lag window is
+    /// open. `raw` must be sorted ascending (backends guarantee it); the
+    /// result is too.
+    pub fn overlay(
+        &self,
+        container: &str,
+        prefix: &str,
+        now: SimInstant,
+        raw: Vec<ObjectSummary>,
+    ) -> Vec<ObjectSummary> {
+        let Some(cv) = self.containers.get(container) else {
+            return raw;
+        };
+        let ghosts: Vec<ObjectSummary> = cv
+            .ghosts
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .filter(|(_, g)| g.until > now)
+            .map(|(k, g)| ObjectSummary {
+                name: k.clone(),
+                size: g.size,
+                etag: g.etag,
+            })
+            .collect();
+        // Merge two sorted, disjoint streams (a key is never both live in
+        // the backend and a ghost: put clears its ghost, delete removes it
+        // from the backend).
+        let mut out = Vec::with_capacity(raw.len() + ghosts.len());
+        let mut gi = ghosts.into_iter().peekable();
+        for entry in raw {
+            while gi.peek().is_some_and(|g| g.name < entry.name) {
+                out.push(gi.next().unwrap());
+            }
+            if let Some(t) = cv.pending.get(&entry.name) {
+                if *t > now {
+                    continue; // created, but not yet listed
+                }
+            }
+            out.push(entry);
+        }
+        out.extend(gi);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LAG5: SimDuration = SimDuration(5_000_000);
+    const LAG3: SimDuration = SimDuration(3_000_000);
+
+    fn summary(name: &str, size: u64) -> ObjectSummary {
+        ObjectSummary {
+            name: name.to_string(),
+            size,
+            etag: size ^ 0x5a5a,
+        }
+    }
+
+    fn names(entries: &[ObjectSummary]) -> Vec<&str> {
+        entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    #[test]
+    fn create_lag_hides_new_objects() {
+        let mut v = VisibilityMap::default();
+        v.on_put("c", "k", false, SimInstant(0), LAG5);
+        let raw = vec![summary("k", 1)];
+        assert!(v.overlay("c", "", SimInstant(0), raw.clone()).is_empty());
+        assert!(v.overlay("c", "", SimInstant(4_999_999), raw.clone()).is_empty());
+        assert_eq!(names(&v.overlay("c", "", SimInstant(5_000_000), raw)), ["k"]);
+    }
+
+    #[test]
+    fn delete_lag_keeps_ghost_with_old_size() {
+        let mut v = VisibilityMap::default();
+        v.on_put("c", "k", false, SimInstant(0), SimDuration::ZERO);
+        v.on_delete("c", "k", 2, 77, SimInstant(1_000_000), LAG3);
+        // Backend no longer lists the key; the ghost stands in.
+        let l = v.overlay("c", "", SimInstant(2_000_000), vec![]);
+        assert_eq!(names(&l), ["k"]);
+        assert_eq!(l[0].size, 2);
+        assert_eq!(l[0].etag, 77);
+        assert!(v.overlay("c", "", SimInstant(4_000_000), vec![]).is_empty());
+    }
+
+    #[test]
+    fn delete_before_listed_leaves_no_ghost() {
+        let mut v = VisibilityMap::default();
+        v.on_put("c", "k", false, SimInstant(0), SimDuration::from_secs(10));
+        v.on_delete("c", "k", 1, 0, SimInstant(1), SimDuration::from_secs(10));
+        for t in [0u64, 1, 5_000_000, 20_000_000] {
+            assert!(v.overlay("c", "", SimInstant(t), vec![]).is_empty(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn replace_keeps_visibility() {
+        let mut v = VisibilityMap::default();
+        v.on_put("c", "k", false, SimInstant(0), LAG5);
+        // Visible at t=5s; replacing at t=6s must stay visible immediately.
+        v.on_put("c", "k", true, SimInstant(6_000_000), LAG5);
+        let l = v.overlay("c", "", SimInstant(6_000_000), vec![summary("k", 2)]);
+        assert_eq!(l.len(), 1);
+        assert_eq!(l[0].size, 2);
+    }
+
+    #[test]
+    fn replace_within_lag_window_restarts_lag() {
+        let mut v = VisibilityMap::default();
+        v.on_put("c", "k", false, SimInstant(0), LAG5);
+        // Still hidden at t=3s; the replace restarts the clock.
+        v.on_put("c", "k", true, SimInstant(3_000_000), LAG5);
+        let raw = vec![summary("k", 1)];
+        assert!(v.overlay("c", "", SimInstant(5_000_000), raw.clone()).is_empty());
+        assert_eq!(v.overlay("c", "", SimInstant(8_000_000), raw).len(), 1);
+    }
+
+    #[test]
+    fn recreate_after_delete_gets_fresh_lag_and_clears_ghost() {
+        let mut v = VisibilityMap::default();
+        v.on_put("c", "k", false, SimInstant(0), SimDuration::ZERO);
+        v.on_delete("c", "k", 9, 1, SimInstant(1_000_000), LAG3);
+        // Recreate while the ghost is still open: ghost replaced by the
+        // (lagged) fresh object.
+        v.on_put("c", "k", false, SimInstant(2_000_000), LAG5);
+        let raw = vec![summary("k", 4)];
+        let mid = v.overlay("c", "", SimInstant(3_000_000), raw.clone());
+        assert!(mid.is_empty(), "ghost must be gone, create still lagged");
+        let later = v.overlay("c", "", SimInstant(7_000_000), raw);
+        assert_eq!(later[0].size, 4);
+    }
+
+    #[test]
+    fn ghosts_merge_sorted_into_listing() {
+        let mut v = VisibilityMap::default();
+        for k in ["a", "c", "e"] {
+            v.on_put("c", k, false, SimInstant(0), SimDuration::ZERO);
+        }
+        v.on_delete("c", "b", 1, 0, SimInstant(0), LAG3);
+        v.on_delete("c", "f", 1, 0, SimInstant(0), LAG3);
+        let raw = vec![summary("a", 1), summary("c", 1), summary("e", 1)];
+        let l = v.overlay("c", "", SimInstant(1), raw);
+        assert_eq!(names(&l), ["a", "b", "c", "e", "f"]);
+    }
+
+    #[test]
+    fn prefix_restricts_ghosts() {
+        let mut v = VisibilityMap::default();
+        v.on_delete("c", "d/x", 1, 0, SimInstant(0), LAG3);
+        v.on_delete("c", "e/y", 1, 0, SimInstant(0), LAG3);
+        let l = v.overlay("c", "d/", SimInstant(1), vec![]);
+        assert_eq!(names(&l), ["d/x"]);
+    }
+
+    #[test]
+    fn unknown_container_passes_through() {
+        let v = VisibilityMap::default();
+        let raw = vec![summary("k", 1)];
+        assert_eq!(v.overlay("nope", "", SimInstant(0), raw.clone()), raw);
+    }
+}

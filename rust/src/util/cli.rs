@@ -66,6 +66,15 @@ impl Args {
         }
     }
 
+    /// Error when two mutually exclusive flags were both given.
+    pub fn flag_conflict(&self, a: &str, b: &str) -> Result<(), String> {
+        if self.flag(a) && self.flag(b) {
+            Err(format!("--{a} and --{b} are mutually exclusive"))
+        } else {
+            Ok(())
+        }
+    }
+
     pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
         match self.opt(name) {
             None => Ok(default),
@@ -116,6 +125,15 @@ mod tests {
         assert_eq!(a.opt_f64("f", 0.0).unwrap(), 2.5);
         assert_eq!(a.opt_u64("absent", 7).unwrap(), 7);
         assert!(a.opt_u64("f", 0).is_err());
+    }
+
+    #[test]
+    fn flag_conflicts() {
+        let a = parse(&["run", "--small", "--paper"], &["small", "paper"]);
+        assert!(a.flag_conflict("small", "paper").is_err());
+        assert!(a.flag_conflict("small", "verbose").is_ok());
+        let b = parse(&["run", "--small"], &["small", "paper"]);
+        assert!(b.flag_conflict("small", "paper").is_ok());
     }
 
     #[test]

@@ -1,0 +1,410 @@
+//! Backend conformance: one shared suite asserting the `Backend` trait
+//! contract (put/get/head/list-pagination/delete/multipart/ETag
+//! round-trip), instantiated against every backend via a macro — plus
+//! fs-only persistence checks and the front-end invariance criterion:
+//! the same workload issues the same REST ops on every backend.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use stocator::harness::{run_cell, Scenario, Sizing, Workload};
+use stocator::objectstore::backend::{Backend, BackendError, LocalFsBackend, ShardedMemBackend};
+use stocator::objectstore::{BackendKind, Metadata, Object};
+use stocator::simclock::SimInstant;
+
+fn unique_root(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "stocator-conformance-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// A backend under test, with optional on-disk state removed on drop
+/// (including on panic, so failed runs don't litter the temp dir).
+struct Fixture {
+    backend: Box<dyn Backend>,
+    cleanup: Option<PathBuf>,
+}
+
+impl Fixture {
+    fn backend(&self) -> &dyn Backend {
+        &*self.backend
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        if let Some(root) = &self.cleanup {
+            let _ = std::fs::remove_dir_all(root);
+        }
+    }
+}
+
+fn mem_fixture(shards: usize) -> Fixture {
+    Fixture {
+        backend: Box::new(ShardedMemBackend::new(shards)),
+        cleanup: None,
+    }
+}
+
+fn fs_fixture() -> Fixture {
+    let root = unique_root("fx");
+    Fixture {
+        backend: Box::new(LocalFsBackend::open(&root).unwrap()),
+        cleanup: Some(root),
+    }
+}
+
+fn obj(data: &[u8], t: u64) -> Object {
+    Object::new(data.to_vec(), Metadata::new(), SimInstant(t))
+}
+
+// ---- the shared checks ----------------------------------------------------
+
+fn check_container_ops(b: &dyn Backend) {
+    assert!(!b.container_exists("res"));
+    assert!(matches!(
+        b.put("res", "k", obj(b"x", 0)),
+        Err(BackendError::NoSuchContainer(_))
+    ));
+    assert!(matches!(
+        b.get("res", "k"),
+        Err(BackendError::NoSuchContainer(_))
+    ));
+    assert!(matches!(
+        b.list_page("res", "", None, 10),
+        Err(BackendError::NoSuchContainer(_))
+    ));
+    b.create_container("res").unwrap();
+    assert!(b.container_exists("res"));
+    assert!(matches!(
+        b.create_container("res"),
+        Err(BackendError::ContainerAlreadyExists(_))
+    ));
+    assert_eq!(b.live_count("res"), 0);
+}
+
+fn check_put_get_head_etag_roundtrip(b: &dyn Backend) {
+    b.create_container("res").unwrap();
+    let mut md = Metadata::new();
+    md.insert("X-Stocator-Origin".into(), "stocator 1.0/a+b".into());
+    let stored = Object::new(b"payload".to_vec(), md, SimInstant(7));
+    let etag = stored.etag;
+    assert!(!b.put("res", "d/part-0001", stored).unwrap());
+    let got = b.get("res", "d/part-0001").unwrap();
+    assert_eq!(&**got.data, b"payload");
+    assert_eq!(got.etag, etag);
+    assert_eq!(got.created_at, SimInstant(7));
+    assert_eq!(
+        got.metadata.get("X-Stocator-Origin").map(String::as_str),
+        Some("stocator 1.0/a+b")
+    );
+    let head = b.head("res", "d/part-0001").unwrap();
+    assert_eq!(head.size, 7);
+    assert_eq!(head.etag, etag);
+    assert_eq!(head.created_at, SimInstant(7));
+    assert_eq!(
+        head.metadata.get("X-Stocator-Origin").map(String::as_str),
+        Some("stocator 1.0/a+b")
+    );
+    assert!(matches!(
+        b.get("res", "d/part-0002"),
+        Err(BackendError::NoSuchKey(_))
+    ));
+    assert!(matches!(
+        b.head("res", "nope"),
+        Err(BackendError::NoSuchKey(_))
+    ));
+}
+
+fn check_last_writer_wins(b: &dyn Backend) {
+    b.create_container("res").unwrap();
+    assert!(!b.put("res", "k", obj(b"first", 0)).unwrap());
+    assert!(b.put("res", "k", obj(b"2nd", 1)).unwrap());
+    let got = b.get("res", "k").unwrap();
+    assert_eq!(&**got.data, b"2nd");
+    assert_eq!(got.etag, Object::new(b"2nd".to_vec(), Metadata::new(), SimInstant(9)).etag);
+    assert_eq!(b.live_count("res"), 1);
+    assert_eq!(b.live_bytes("res"), 3);
+}
+
+fn check_delete(b: &dyn Backend) {
+    b.create_container("res").unwrap();
+    b.put("res", "k", obj(b"data", 0)).unwrap();
+    let stat = b.delete("res", "k").unwrap();
+    assert_eq!(stat.size, 4);
+    assert_eq!(stat.etag, obj(b"data", 5).etag);
+    assert!(matches!(b.get("res", "k"), Err(BackendError::NoSuchKey(_))));
+    assert!(matches!(
+        b.delete("res", "k"),
+        Err(BackendError::NoSuchKey(k)) if k == "res/k"
+    ));
+    assert_eq!(b.live_count("res"), 0);
+    assert_eq!(b.live_bytes("res"), 0);
+}
+
+fn check_list_pagination(b: &dyn Backend) {
+    b.create_container("res").unwrap();
+    let mut expect = Vec::new();
+    for i in 0..25 {
+        let name = format!("p/part-{i:03}");
+        b.put("res", &name, obj(&[i as u8; 3], 0)).unwrap();
+        expect.push(name);
+    }
+    b.put("res", "q/other", obj(b"x", 0)).unwrap();
+    // Page through prefix "p/" ten entries at a time.
+    let mut got = Vec::new();
+    let mut start_after: Option<String> = None;
+    let mut pages = 0;
+    loop {
+        let page = b
+            .list_page("res", "p/", start_after.as_deref(), 10)
+            .unwrap();
+        assert!(page.entries.len() <= 10);
+        for e in &page.entries {
+            assert!(e.name.starts_with("p/"));
+            assert_eq!(e.size, 3);
+        }
+        got.extend(page.entries.iter().map(|e| e.name.clone()));
+        pages += 1;
+        match page.next {
+            Some(n) => {
+                assert_eq!(Some(&n), got.last(), "next token is the last key returned");
+                start_after = Some(n);
+            }
+            None => break,
+        }
+        assert!(pages < 10, "pagination failed to terminate");
+    }
+    assert_eq!(got, expect, "sorted, complete, no duplicates");
+    assert!(pages >= 3, "25 entries at page size 10 need >= 3 pages");
+    // start_after past the end yields an empty final page.
+    let tail = b.list_page("res", "p/", Some("p/part-999"), 10).unwrap();
+    assert!(tail.entries.is_empty() && tail.next.is_none());
+}
+
+fn check_multipart_lifecycle(b: &dyn Backend) {
+    b.create_container("res").unwrap();
+    let id = b.initiate_multipart("res", "big", Metadata::new()).unwrap();
+    assert_eq!(b.multipart_in_flight(), 1);
+    b.upload_part(id, 2, b"world".to_vec()).unwrap();
+    b.upload_part(id, 1, b"hello ".to_vec()).unwrap();
+    let asm = b.complete_multipart(id, 0).unwrap();
+    assert_eq!(asm.container, "res");
+    assert_eq!(asm.key, "big");
+    assert_eq!(asm.data, b"hello world");
+    assert_eq!(b.multipart_in_flight(), 0);
+    // The id is consumed.
+    assert!(matches!(
+        b.complete_multipart(id, 0),
+        Err(BackendError::NoSuchUpload(_))
+    ));
+    assert!(matches!(
+        b.upload_part(id, 3, vec![]),
+        Err(BackendError::NoSuchUpload(_))
+    ));
+    // Abort path.
+    let id2 = b.initiate_multipart("res", "x", Metadata::new()).unwrap();
+    b.upload_part(id2, 1, b"junk".to_vec()).unwrap();
+    b.abort_multipart(id2).unwrap();
+    assert_eq!(b.multipart_in_flight(), 0);
+    assert!(matches!(
+        b.abort_multipart(id2),
+        Err(BackendError::NoSuchUpload(_))
+    ));
+    // Initiating against a missing container fails.
+    assert!(matches!(
+        b.initiate_multipart("nope", "k", Metadata::new()),
+        Err(BackendError::NoSuchContainer(_))
+    ));
+}
+
+fn check_multipart_min_part_size(b: &dyn Backend) {
+    b.create_container("res").unwrap();
+    let id = b.initiate_multipart("res", "k", Metadata::new()).unwrap();
+    b.upload_part(id, 1, vec![0u8; 3]).unwrap(); // non-final part too small
+    b.upload_part(id, 2, vec![0u8; 10]).unwrap();
+    assert!(matches!(
+        b.complete_multipart(id, 10),
+        Err(BackendError::InvalidRequest(_))
+    ));
+    // A failed complete still consumes the upload (S3 semantics).
+    assert_eq!(b.multipart_in_flight(), 0);
+    assert!(matches!(
+        b.complete_multipart(id, 10),
+        Err(BackendError::NoSuchUpload(_))
+    ));
+}
+
+// ---- instantiate the suite per backend ------------------------------------
+
+macro_rules! conformance_suite {
+    ($modname:ident, $mk:expr) => {
+        mod $modname {
+            use super::*;
+
+            fn run(check: fn(&dyn Backend)) {
+                let fixture = $mk;
+                check(fixture.backend());
+            }
+
+            #[test]
+            fn container_ops() {
+                run(check_container_ops);
+            }
+
+            #[test]
+            fn put_get_head_etag_roundtrip() {
+                run(check_put_get_head_etag_roundtrip);
+            }
+
+            #[test]
+            fn last_writer_wins() {
+                run(check_last_writer_wins);
+            }
+
+            #[test]
+            fn delete_returns_final_stat() {
+                run(check_delete);
+            }
+
+            #[test]
+            fn list_pagination() {
+                run(check_list_pagination);
+            }
+
+            #[test]
+            fn multipart_lifecycle() {
+                run(check_multipart_lifecycle);
+            }
+
+            #[test]
+            fn multipart_min_part_size() {
+                run(check_multipart_min_part_size);
+            }
+        }
+    };
+}
+
+conformance_suite!(single_mem, mem_fixture(1));
+conformance_suite!(sharded_mem, mem_fixture(16));
+conformance_suite!(local_fs, fs_fixture());
+
+// ---- cross-backend and fs-specific checks ---------------------------------
+
+#[test]
+fn etags_agree_across_backends() {
+    let mem = mem_fixture(16);
+    let fsx = fs_fixture();
+    for f in [&mem, &fsx] {
+        f.backend().create_container("res").unwrap();
+        f.backend().put("res", "k", obj(b"same bytes", 3)).unwrap();
+    }
+    let a = mem.backend().head("res", "k").unwrap();
+    let b = fsx.backend().head("res", "k").unwrap();
+    assert_eq!(a.etag, b.etag);
+    assert_eq!(a.size, b.size);
+}
+
+#[test]
+fn fs_state_survives_reopen() {
+    let root = unique_root("persist");
+    {
+        let b = LocalFsBackend::open(&root).unwrap();
+        b.create_container("res").unwrap();
+        let mut md = Metadata::new();
+        md.insert("origin".into(), "first process".into());
+        b.put(
+            "res",
+            "d/part-0",
+            Object::new(b"durable".to_vec(), md, SimInstant(11)),
+        )
+        .unwrap();
+        let id = b.initiate_multipart("res", "pending", Metadata::new()).unwrap();
+        b.upload_part(id, 1, b"half".to_vec()).unwrap();
+    } // "process exit"
+    let b = LocalFsBackend::open(&root).unwrap();
+    assert!(b.container_exists("res"));
+    let got = b.get("res", "d/part-0").unwrap();
+    assert_eq!(&**got.data, b"durable");
+    assert_eq!(got.created_at, SimInstant(11));
+    assert_eq!(got.etag, obj(b"durable", 0).etag);
+    assert_eq!(got.metadata.get("origin").map(String::as_str), Some("first process"));
+    // The in-flight upload survived, and fresh ids do not collide with it.
+    assert_eq!(b.multipart_in_flight(), 1);
+    let id2 = b.initiate_multipart("res", "another", Metadata::new()).unwrap();
+    b.upload_part(id2, 1, b"part".to_vec()).unwrap();
+    let asm = b.complete_multipart(id2, 0).unwrap();
+    assert_eq!(asm.key, "another");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn fs_keys_with_hostile_names_roundtrip() {
+    let f = fs_fixture();
+    let b = f.backend();
+    b.create_container("res").unwrap();
+    for key in [
+        "a/b/c/part-0",
+        "_temporary/0/_temporary/attempt_x/part-1",
+        ".hidden",
+        "sp ace%and%percent",
+        "_SUCCESS",
+    ] {
+        b.put("res", key, obj(b"v", 0)).unwrap();
+    }
+    let page = b.list_page("res", "", None, 100).unwrap();
+    let mut names: Vec<&str> = page.entries.iter().map(|e| e.name.as_str()).collect();
+    names.sort_unstable();
+    assert_eq!(
+        names,
+        vec![
+            ".hidden",
+            "_SUCCESS",
+            "_temporary/0/_temporary/attempt_x/part-1",
+            "a/b/c/part-0",
+            "sp ace%and%percent",
+        ]
+    );
+    assert!(b.get("res", ".hidden").is_ok());
+}
+
+/// Reusing one fs root across repetitions and invocations must not
+/// collide: the harness gives every environment a unique subdirectory.
+#[test]
+fn fs_root_is_reusable_across_runs() {
+    let root = unique_root("reuse");
+    let mut sizing = Sizing::small();
+    sizing.backend = BackendKind::LocalFs(Some(root.clone()));
+    let cell = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 2);
+    assert!(cell.valid, "{}", cell.validation);
+    // A "second process" against the same DIR works too.
+    let again = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+    assert!(again.valid, "{}", again.validation);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance criterion: the front end's REST op accounting is
+/// backend-invariant — a full Stocator Teragen cell issues identical op
+/// counts and bytes on every backend.
+#[test]
+fn front_end_op_counts_are_backend_invariant() {
+    let run_with = |backend: BackendKind| {
+        let mut sizing = Sizing::small();
+        sizing.backend = backend;
+        let cell = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+        assert!(cell.valid, "{}", cell.validation);
+        (cell.ops, cell.runtime_mean_s)
+    };
+    let (mem_ops, mem_rt) = run_with(BackendKind::Mem);
+    let (sharded_ops, sharded_rt) = run_with(BackendKind::Sharded(16));
+    let fs_root = unique_root("invariance");
+    let (fs_ops, fs_rt) = run_with(BackendKind::LocalFs(Some(fs_root.clone())));
+    let _ = std::fs::remove_dir_all(&fs_root);
+    assert_eq!(mem_ops, sharded_ops);
+    assert_eq!(mem_ops, fs_ops);
+    // Virtual-clock runtime is also invariant (jitter is 0 in small sizing).
+    assert_eq!(mem_rt, sharded_rt);
+    assert_eq!(mem_rt, fs_rt);
+}

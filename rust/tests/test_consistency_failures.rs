@@ -18,6 +18,7 @@ fn store_with_lag(lag_s: u64) -> Arc<ObjectStore> {
         consistency: ConsistencyModel::adversarial(SimDuration::from_secs(lag_s)),
         min_part_size: 0,
         seed: 0,
+        ..StoreConfig::default()
     });
     store.create_container("res", SimInstant::EPOCH).0.unwrap();
     store
