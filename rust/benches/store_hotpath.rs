@@ -2,6 +2,8 @@
 //! simulator's hot paths — the L3 optimization target of EXPERIMENTS.md
 //! §Perf. Hand-rolled because criterion is unavailable offline.
 
+use stocator::connectors::Stocator;
+use stocator::fs::{FileSystem, OpCtx, Path};
 use stocator::objectstore::{BackendKind, Metadata, ObjectStore, StoreConfig};
 use stocator::simclock::SimInstant;
 use std::time::Instant;
@@ -69,7 +71,46 @@ fn main() {
     // (a single-core runner serialises everything), so the ratio is
     // reported, not asserted.
     assert!(sharded > 50_000.0, "sharded PUT too slow: {sharded:.0}/s");
+
+    println!();
+    println!("write path through the connector (streaming vs whole-buffer):");
+    write_path_rates();
     println!("store_hotpath bench OK");
+}
+
+const WRITE_BYTES: usize = 64 * 1024;
+const WRITE_CHUNK: usize = 1024;
+
+/// Stocator's chunked-PUT write path, exercised both ways the API allows:
+/// one whole-buffer `write_all` vs 64 separate 1 KiB `write` calls through
+/// an `FsOutputStream`. Both are exactly one PUT; the streaming path's
+/// per-call overhead must stay negligible next to the store hot path.
+fn write_path_rates() {
+    let store = ObjectStore::new(StoreConfig::instant_strong());
+    store.create_container("c", SimInstant::EPOCH).0.unwrap();
+    let fs = Stocator::with_defaults(store);
+    let path = |i: u64| {
+        Path::parse(&format!("swift2d://c/bench/part-{:06}", i % 50_000)).unwrap()
+    };
+    let whole = bench("write_all 64KiB (1 PUT)", 20_000, |i| {
+        let mut ctx = OpCtx::new(SimInstant(i));
+        fs.write_all(&path(i), vec![5u8; WRITE_BYTES], true, &mut ctx)
+            .unwrap();
+    });
+    let chunk = [5u8; WRITE_CHUNK];
+    let streamed = bench("stream 64x1KiB (1 chunked PUT)", 20_000, |i| {
+        let mut ctx = OpCtx::new(SimInstant(i));
+        let mut out = fs.create(&path(i), true, &mut ctx).unwrap();
+        for _ in 0..WRITE_BYTES / WRITE_CHUNK {
+            out.write(&chunk, &mut ctx).unwrap();
+        }
+        out.close(&mut ctx).unwrap();
+    });
+    println!("streaming/whole-buffer ratio: {:.2}x", streamed / whole);
+    // Same gating style as above: absolute floors, generous for loaded
+    // shared runners.
+    assert!(whole > 5_000.0, "whole-buffer write too slow: {whole:.0}/s");
+    assert!(streamed > 5_000.0, "streamed write too slow: {streamed:.0}/s");
 }
 
 const WRITERS: usize = 8;

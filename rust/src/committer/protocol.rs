@@ -1,7 +1,7 @@
 //! The commit protocol implementation (Hadoop 2.7.3 semantics).
 
 use crate::connectors::naming::AttemptId;
-use crate::fs::{FileSystem, FsError, OpCtx, Path};
+use crate::fs::{FileSystem, FsError, FsOutputStream, OpCtx, Path};
 
 /// Which commit algorithm a scenario runs (paper §4.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -127,7 +127,23 @@ impl Committer {
         }
     }
 
-    /// Executor: write one part file for this attempt.
+    /// Executor: open this attempt's output stream for a part file. The
+    /// task streams bytes through the connector's write path as it
+    /// produces them; dropping the stream without `close` is the
+    /// executor-crash abort path.
+    pub fn create_part<'a>(
+        &self,
+        fs: &'a dyn FileSystem,
+        task: &TaskAttemptContext,
+        basename: &str,
+        ctx: &mut OpCtx,
+    ) -> Result<Box<dyn FsOutputStream + 'a>, FsError> {
+        let path = task.work_path(self.algorithm, basename);
+        fs.create(&path, true, ctx)
+    }
+
+    /// Executor: write one whole part file for this attempt (convenience
+    /// over [`Committer::create_part`]; identical accounting).
     pub fn write_part(
         &self,
         fs: &dyn FileSystem,
@@ -136,8 +152,9 @@ impl Committer {
         data: Vec<u8>,
         ctx: &mut OpCtx,
     ) -> Result<(), FsError> {
-        let path = task.work_path(self.algorithm, basename);
-        fs.create(&path, data, true, ctx)
+        let mut out = self.create_part(fs, task, basename, ctx)?;
+        out.write(&data, ctx)?;
+        out.close(ctx)
     }
 
     /// Executor: does this attempt have output to commit?
@@ -211,14 +228,26 @@ impl Committer {
                     }
                 }
                 self.cleanup(fs, job, ctx)?;
-                fs.create(&job.success_path(), Vec::new(), true, ctx)
+                self.write_success(fs, job, ctx)
             }
             CommitAlgorithm::V2 => {
                 self.cleanup(fs, job, ctx)?;
-                fs.create(&job.success_path(), Vec::new(), true, ctx)
+                self.write_success(fs, job, ctx)
             }
-            CommitAlgorithm::Direct => fs.create(&job.success_path(), Vec::new(), true, ctx),
+            CommitAlgorithm::Direct => self.write_success(fs, job, ctx),
         }
+    }
+
+    /// Driver: stream the zero-byte `_SUCCESS` object (a connector may
+    /// substitute its own body — Stocator writes the manifest here).
+    fn write_success(
+        &self,
+        fs: &dyn FileSystem,
+        job: &JobContext,
+        ctx: &mut OpCtx,
+    ) -> Result<(), FsError> {
+        let mut out = fs.create(&job.success_path(), true, ctx)?;
+        out.close(ctx)
     }
 
     /// Driver: abort the whole job.
@@ -326,7 +355,7 @@ mod tests {
         // final state
         let mut c2 = ctx();
         let out = Path::parse("hdfs://res/data.txt/part-00001").unwrap();
-        assert_eq!(&*fs.open(&out, &mut c2).unwrap(), b"the output");
+        assert_eq!(&*fs.read_all(&out, &mut c2).unwrap(), b"the output");
     }
 
     #[test]
@@ -402,7 +431,7 @@ mod tests {
         }
         committer.commit_job(&*swift, &job, &mut c).unwrap();
         let data = swift
-            .open(&Path::parse("swift://res/out/part-00000").unwrap(), &mut c)
+            .read_all(&Path::parse("swift://res/out/part-00000").unwrap(), &mut c)
             .unwrap();
         assert_eq!(&*data, b"attempt1");
         // No stray task-temp leftovers.

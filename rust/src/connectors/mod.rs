@@ -26,7 +26,12 @@ pub use s3a::{S3a, S3aConfig};
 pub use stocator::{ReadStrategy, Stocator, StocatorConfig};
 pub use swift::HadoopSwift;
 
+use crate::fs::interface::{FsError, FsInputStream, OpCtx};
 use crate::fs::Path;
+use crate::objectstore::store::HeadResult;
+use crate::objectstore::{ObjectStore, StoreError};
+use head_cache::HeadCache;
+use std::sync::Arc;
 
 /// Map a Hadoop path onto (container, object key).
 pub(crate) fn container_key(path: &Path) -> (&str, &str) {
@@ -37,4 +42,121 @@ pub(crate) fn container_key(path: &Path) -> (&str, &str) {
 /// S3a "fake directory" convention; we use it for Swift too).
 pub(crate) fn marker_key(key: &str) -> String {
     format!("{key}/")
+}
+
+/// Map a store error onto the filesystem error space. Shared by every
+/// connector so 404s surface as `NotFound` and 416s as `InvalidRange`
+/// uniformly, whichever connector a caller reads through.
+pub(crate) fn map_store_error(e: StoreError, path: &Path) -> FsError {
+    match e {
+        StoreError::NoSuchKey(_) | StoreError::NoSuchContainer(_) => {
+            FsError::NotFound(path.to_string())
+        }
+        StoreError::InvalidRange(m) => FsError::InvalidRange(m),
+        other => FsError::Io(other.to_string()),
+    }
+}
+
+/// Unwrap an `Arc<Vec<u8>>` without copying when this is the only holder
+/// (ranged GETs build a fresh buffer, so this is the common case).
+pub(crate) fn unwrap_bytes(data: Arc<Vec<u8>>) -> Vec<u8> {
+    Arc::try_unwrap(data).unwrap_or_else(|a| a.as_ref().clone())
+}
+
+/// The shared read handle over one store object. Two personalities:
+///
+/// * **HEAD-on-open** (Hadoop-Swift, S3a, via [`StoreInputStream::new`]):
+///   the existence/size probe already happened in `open`, so the size is
+///   known up front.
+/// * **Lazy** (Stocator, via [`StoreInputStream::lazy_with_cache`]): no
+///   request until the first read (§3.4 — never a HEAD before GET); the
+///   GET response's head warms the connector's HEAD cache.
+///
+/// Every read issues its own GET — full or ranged — against the store.
+pub(crate) struct StoreInputStream<'a> {
+    store: &'a ObjectStore,
+    /// Trace actor name ("swift" / "s3a" / "stocator").
+    actor: &'static str,
+    path: Path,
+    /// Known object size (from open-time HEAD or a previous read).
+    size: Option<u64>,
+    /// When present, every read's response head is cached (Stocator).
+    cache: Option<&'a HeadCache>,
+}
+
+impl<'a> StoreInputStream<'a> {
+    pub(crate) fn new(store: &'a ObjectStore, actor: &'static str, path: &Path, size: u64) -> Self {
+        Self {
+            store,
+            actor,
+            path: path.clone(),
+            size: Some(size),
+            cache: None,
+        }
+    }
+
+    pub(crate) fn lazy_with_cache(
+        store: &'a ObjectStore,
+        actor: &'static str,
+        path: &Path,
+        cache: &'a HeadCache,
+    ) -> Self {
+        Self {
+            store,
+            actor,
+            path: path.clone(),
+            size: None,
+            cache: Some(cache),
+        }
+    }
+
+    /// Note a GET response's head: remember the size, warm the cache.
+    fn note_head(&mut self, head: &HeadResult) {
+        self.size = Some(head.size);
+        if let Some(cache) = self.cache {
+            let (_, key) = container_key(&self.path);
+            cache.put(key, head.clone());
+        }
+    }
+}
+
+impl FsInputStream for StoreInputStream<'_> {
+    fn size_hint(&self) -> Option<u64> {
+        if let Some(size) = self.size {
+            return Some(size);
+        }
+        let cache = self.cache?;
+        let (_, key) = container_key(&self.path);
+        cache.get(key).map(|h| h.size)
+    }
+
+    fn read_range(&mut self, offset: u64, len: u64, ctx: &mut OpCtx) -> Result<Vec<u8>, FsError> {
+        let (cont, key) = container_key(&self.path);
+        let (r, d) = self.store.get_object_range(cont, key, offset, len);
+        ctx.add(d);
+        ctx.record(self.actor, || {
+            format!("GET {cont}/{key} bytes={offset}+{len}")
+        });
+        match r {
+            Ok(g) => {
+                self.note_head(&g.head);
+                Ok(unwrap_bytes(g.data))
+            }
+            Err(e) => Err(map_store_error(e, &self.path)),
+        }
+    }
+
+    fn read_to_end(&mut self, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
+        let (cont, key) = container_key(&self.path);
+        let (r, d) = self.store.get_object(cont, key);
+        ctx.add(d);
+        ctx.record(self.actor, || format!("GET {cont}/{key}"));
+        match r {
+            Ok(g) => {
+                self.note_head(&g.head);
+                Ok(g.data)
+            }
+            Err(e) => Err(map_store_error(e, &self.path)),
+        }
+    }
 }

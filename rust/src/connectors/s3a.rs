@@ -17,10 +17,10 @@
 //!   (`S3AFastOutputStream`, §3.3) is on, which streams via multipart
 //!   upload at the cost of ≥5 MB in-memory parts.
 
-use super::{container_key, marker_key};
+use super::{container_key, map_store_error, marker_key, StoreInputStream};
 use crate::fs::status::FileStatus;
-use crate::fs::{FileSystem, FsError, OpCtx, Path};
-use crate::objectstore::{Metadata, ObjectStore, StoreError};
+use crate::fs::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx, Path};
+use crate::objectstore::{Metadata, ObjectStore};
 use crate::simclock::SimInstant;
 use std::sync::Arc;
 
@@ -59,15 +59,6 @@ impl S3a {
         })
     }
 
-    fn not_found(e: StoreError, path: &Path) -> FsError {
-        match e {
-            StoreError::NoSuchKey(_) | StoreError::NoSuchContainer(_) => {
-                FsError::NotFound(path.to_string())
-            }
-            other => FsError::Io(other.to_string()),
-        }
-    }
-
     /// The triple probe: HEAD key, HEAD key/, LIST prefix=key/.
     fn probe_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {
         let (cont, key) = container_key(path);
@@ -77,7 +68,7 @@ impl S3a {
             ctx.record("s3a", || format!("HEAD container {cont}"));
             return r
                 .map(|_| FileStatus::dir(path.clone(), SimInstant::EPOCH))
-                .map_err(|e| Self::not_found(e, path));
+                .map_err(|e| map_store_error(e, path));
         }
         let (r, d) = self.store.head_object(cont, key);
         ctx.add(d);
@@ -144,38 +135,131 @@ impl S3a {
         }
     }
 
-    /// Upload a file's content: plain PUT via local-disk buffer, or
-    /// multipart when fast upload is enabled and the object is large.
-    fn upload(&self, cont: &str, key: &str, data: Vec<u8>, ctx: &mut OpCtx) -> Result<(), FsError> {
-        if self.cfg.fast_upload && data.len() as u64 > self.cfg.multipart_size {
-            // S3AFastOutputStream: stream parts as they fill (no disk).
-            let (r, d) = self.store.initiate_multipart(cont, key, Metadata::new());
-            ctx.add(d);
-            ctx.record("s3a", || format!("POST {cont}/{key}?uploads (initiate)"));
-            let id = r.map_err(|e| FsError::Io(e.to_string()))?;
-            let psize = self.cfg.multipart_size as usize;
-            for (i, chunk) in data.chunks(psize.max(1)).enumerate() {
-                let (r, d) = self.store.upload_part(id, i as u32 + 1, chunk.to_vec());
+}
+
+/// S3a output stream. Two §3.3 personalities:
+///
+/// * **base** (`fast_upload = false`): every `write` spools to local
+///   disk; one PUT uploads the whole part at `close`. A dropped stream
+///   loses the spool — nothing reaches the store.
+/// * **fast upload** (`S3AFastOutputStream`): writes buffer in memory
+///   and, the moment the buffer exceeds `multipart_size`, the upload is
+///   initiated and full parts are PUT *during* `write` — multipart REST
+///   ops interleave with task compute on the virtual clock instead of
+///   bundling at close. `close` uploads the final partial part and
+///   completes the upload; only the complete makes the object visible. A
+///   dropped stream strands an **orphaned multipart upload** (the real
+///   S3 hazard — crashed writers leave uploads in flight), with no
+///   visible object.
+struct S3aOutputStream<'a> {
+    fs: &'a S3a,
+    path: Path,
+    buf: Vec<u8>,
+    upload: Option<u64>,
+    next_part: u32,
+    closed: bool,
+}
+
+impl S3aOutputStream<'_> {
+    /// Flush every full `multipart_size` chunk, initiating the upload on
+    /// the first flush. Chunk boundaries depend only on the byte count,
+    /// never on how callers split their `write`s, so op accounting is
+    /// chunking-invariant. Flushed bytes are consumed by index and the
+    /// buffer compacted once at the end — one memmove per `write`, not
+    /// one per part.
+    fn flush_full_parts(&mut self, ctx: &mut OpCtx) -> Result<(), FsError> {
+        let psize = self.fs.cfg.multipart_size.max(1) as usize;
+        let (cont, key) = container_key(&self.path);
+        let mut consumed = 0usize;
+        let mut failure = None;
+        while self.buf.len() - consumed > psize {
+            if self.upload.is_none() {
+                let (r, d) = self.fs.store.initiate_multipart(cont, key, Metadata::new());
                 ctx.add(d);
-                ctx.record("s3a", || format!("PUT {cont}/{key}?partNumber={}", i + 1));
+                ctx.record("s3a", || format!("POST {cont}/{key}?uploads (initiate)"));
+                match r {
+                    Ok(id) => self.upload = Some(id),
+                    Err(e) => {
+                        failure = Some(FsError::Io(e.to_string()));
+                        break;
+                    }
+                }
+            }
+            let chunk = self.buf[consumed..consumed + psize].to_vec();
+            let part = self.next_part;
+            let (r, d) = self.fs.store.upload_part(self.upload.unwrap(), part, chunk);
+            ctx.add(d);
+            ctx.record("s3a", || format!("PUT {cont}/{key}?partNumber={part}"));
+            if let Err(e) = r {
+                failure = Some(FsError::Io(e.to_string()));
+                break;
+            }
+            consumed += psize;
+            self.next_part += 1;
+        }
+        if consumed > 0 {
+            self.buf.drain(..consumed);
+        }
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl FsOutputStream for S3aOutputStream<'_> {
+    fn write(&mut self, data: &[u8], ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("write on closed stream {}", self.path)));
+        }
+        if self.fs.cfg.fast_upload {
+            self.buf.extend_from_slice(data);
+            self.flush_full_parts(ctx)
+        } else {
+            // Buffer to local disk first (paper §3.3); disk time accrues
+            // on the cumulative spool size, chunking-invariantly.
+            let latency = &self.fs.store.config.latency;
+            let old = self.buf.len() as u64;
+            self.buf.extend_from_slice(data);
+            ctx.add_spool_delta(old, self.buf.len() as u64, |b| latency.local_disk_time(b));
+            Ok(())
+        }
+    }
+
+    fn close(&mut self, ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("double close on {}", self.path)));
+        }
+        self.closed = true;
+        let (cont, key) = container_key(&self.path);
+        let data = std::mem::take(&mut self.buf);
+        match self.upload {
+            Some(id) => {
+                if !data.is_empty() {
+                    let part = self.next_part;
+                    let (r, d) = self.fs.store.upload_part(id, part, data);
+                    ctx.add(d);
+                    ctx.record("s3a", || format!("PUT {cont}/{key}?partNumber={part}"));
+                    r.map_err(|e| FsError::Io(e.to_string()))?;
+                    self.next_part += 1;
+                }
+                let (r, d) = self.fs.store.complete_multipart(id, ctx.now());
+                ctx.add(d);
+                ctx.record("s3a", || format!("POST {cont}/{key} (complete)"));
                 r.map_err(|e| FsError::Io(e.to_string()))?;
             }
-            let (r, d) = self.store.complete_multipart(id, ctx.now());
-            ctx.add(d);
-            ctx.record("s3a", || format!("POST {cont}/{key} (complete)"));
-            r.map_err(|e| FsError::Io(e.to_string()))
-        } else {
-            if !self.cfg.fast_upload {
-                // Buffer the whole part on local disk first (paper §3.3).
-                ctx.add(self.store.config.latency.local_disk_time(data.len() as u64));
+            None => {
+                let (r, d) = self
+                    .fs
+                    .store
+                    .put_object(cont, key, data, Metadata::new(), ctx.now());
+                ctx.add(d);
+                ctx.record("s3a", || format!("PUT {cont}/{key}"));
+                r.map_err(|e| FsError::Io(e.to_string()))?;
             }
-            let (r, d) = self
-                .store
-                .put_object(cont, key, data, Metadata::new(), ctx.now());
-            ctx.add(d);
-            ctx.record("s3a", || format!("PUT {cont}/{key}"));
-            r.map_err(|e| FsError::Io(e.to_string()))
         }
+        self.fs.delete_unnecessary_fake_directories(&self.path, ctx);
+        Ok(())
     }
 }
 
@@ -210,17 +294,15 @@ impl FileSystem for S3a {
             .put_object(cont, &mk, Vec::new(), Metadata::new(), ctx.now());
         ctx.add(d);
         ctx.record("s3a", || format!("PUT {cont}/{mk} (fake dir)"));
-        r.map_err(|e| Self::not_found(e, path))
+        r.map_err(|e| map_store_error(e, path))
     }
 
     fn create(
         &self,
         path: &Path,
-        data: Vec<u8>,
         overwrite: bool,
         ctx: &mut OpCtx,
-    ) -> Result<(), FsError> {
-        let (cont, key) = container_key(path);
+    ) -> Result<Box<dyn FsOutputStream + '_>, FsError> {
         // S3a always probes the target (even with overwrite=true it checks
         // it isn't a directory).
         match self.probe_status(path, ctx) {
@@ -228,22 +310,29 @@ impl FileSystem for S3a {
             Ok(_) if !overwrite => return Err(FsError::AlreadyExists(path.to_string())),
             _ => {}
         }
-        self.upload(cont, key, data, ctx)?;
-        self.delete_unnecessary_fake_directories(path, ctx);
-        Ok(())
+        Ok(Box::new(S3aOutputStream {
+            fs: self,
+            path: path.clone(),
+            buf: Vec::new(),
+            upload: None,
+            next_part: 1,
+            closed: false,
+        }))
     }
 
-    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
-        let (cont, key) = container_key(path);
-        // getFileStatus first (S3AInputStream does), then GET.
+    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Box<dyn FsInputStream + '_>, FsError> {
+        // getFileStatus first (S3AInputStream does); GETs happen per read
+        // call on the returned handle.
         let st = self.probe_status(path, ctx)?;
         if st.is_dir {
             return Err(FsError::IsADirectory(path.to_string()));
         }
-        let (r, d) = self.store.get_object(cont, key);
-        ctx.add(d);
-        ctx.record("s3a", || format!("GET {cont}/{key}"));
-        r.map(|g| g.data).map_err(|e| Self::not_found(e, path))
+        Ok(Box::new(StoreInputStream::new(
+            &self.store,
+            "s3a",
+            path,
+            st.len,
+        )))
     }
 
     fn get_file_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {
@@ -264,7 +353,7 @@ impl FileSystem for S3a {
         let (r, d) = self.store.list(cont, &prefix, Some('/'), ctx.now());
         ctx.add(d);
         ctx.record("s3a", || format!("GET container ?prefix={prefix}&delimiter=/"));
-        let l = r.map_err(|e| Self::not_found(e, path))?;
+        let l = r.map_err(|e| map_store_error(e, path))?;
         let mut out = Vec::new();
         for o in l.objects {
             if o.name == prefix {
@@ -304,11 +393,11 @@ impl FileSystem for S3a {
             let (r, d) = self.store.copy_object(cont, skey, cont, &dkey, ctx.now());
             ctx.add(d);
             ctx.record("s3a", || format!("COPY {skey} -> {dkey}"));
-            r.map_err(|e| Self::not_found(e, src))?;
+            r.map_err(|e| map_store_error(e, src))?;
             let (r, d) = self.store.delete_object(cont, skey, ctx.now());
             ctx.add(d);
             ctx.record("s3a", || format!("DELETE {skey}"));
-            r.map_err(|e| Self::not_found(e, src))?;
+            r.map_err(|e| map_store_error(e, src))?;
             self.delete_unnecessary_fake_directories(dst, ctx);
             if let Some(sparent) = src.parent() {
                 self.create_fake_directory_if_necessary(&sparent, ctx);
@@ -320,7 +409,7 @@ impl FileSystem for S3a {
         let (r, d) = self.store.list(cont, &sprefix, None, ctx.now());
         ctx.add(d);
         ctx.record("s3a", || format!("GET container ?prefix={sprefix}"));
-        let l = r.map_err(|e| Self::not_found(e, src))?;
+        let l = r.map_err(|e| map_store_error(e, src))?;
         for o in l.objects {
             let suffix = &o.name[sprefix.len()..];
             let new_key = if suffix.is_empty() {
@@ -358,7 +447,7 @@ impl FileSystem for S3a {
             let (r, d) = self.store.delete_object(cont, key, ctx.now());
             ctx.add(d);
             ctx.record("s3a", || format!("DELETE {key}"));
-            r.map_err(|e| Self::not_found(e, path))?;
+            r.map_err(|e| map_store_error(e, path))?;
             if let Some(parent) = path.parent() {
                 self.create_fake_directory_if_necessary(&parent, ctx);
             }
@@ -368,7 +457,7 @@ impl FileSystem for S3a {
         let (r, d) = self.store.list(cont, &prefix, None, ctx.now());
         ctx.add(d);
         ctx.record("s3a", || format!("GET container ?prefix={prefix}"));
-        let l = r.map_err(|e| Self::not_found(e, path))?;
+        let l = r.map_err(|e| map_store_error(e, path))?;
         if !recursive && l.objects.iter().any(|o| o.name != prefix) {
             return Err(FsError::Io(format!("directory {path} not empty")));
         }
@@ -424,7 +513,7 @@ mod tests {
         let mut c = ctx();
         fs.mkdirs(&p("s3a://res/d"), &mut c).unwrap();
         assert!(store.debug_names("res", "").contains(&"d/".to_string()));
-        fs.create(&p("s3a://res/d/f"), b"x".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("s3a://res/d/f"), b"x".to_vec(), true, &mut c).unwrap();
         // The fake marker for d/ is gone after the file PUT.
         assert!(!store.debug_names("res", "").contains(&"d/".to_string()));
         // The directory still "exists" via the implicit-list probe:
@@ -435,7 +524,7 @@ mod tests {
     fn delete_last_file_recreates_parent_marker() {
         let (store, fs) = setup(S3aConfig::default());
         let mut c = ctx();
-        fs.create(&p("s3a://res/d/f"), b"x".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("s3a://res/d/f"), b"x".to_vec(), true, &mut c).unwrap();
         fs.delete(&p("s3a://res/d/f"), false, &mut c).unwrap();
         assert!(
             store.debug_names("res", "").contains(&"d/".to_string()),
@@ -451,12 +540,76 @@ mod tests {
         });
         let mut c = ctx();
         let before = store.counters();
-        fs.create(&p("s3a://res/big"), vec![7u8; 10], true, &mut c).unwrap();
+        fs.write_all(&p("s3a://res/big"), vec![7u8; 10], true, &mut c).unwrap();
         let d = store.counters().since(&before);
         // initiate + 3 parts (4+4+2) + complete = 5 PUT-class ops.
         assert_eq!(d.get(OpKind::PutObject), 5);
         let mut c2 = ctx();
-        assert_eq!(*fs.open(&p("s3a://res/big"), &mut c2).unwrap(), vec![7u8; 10]);
+        assert_eq!(*fs.read_all(&p("s3a://res/big"), &mut c2).unwrap(), vec![7u8; 10]);
+    }
+
+    #[test]
+    fn fast_upload_flushes_parts_during_write() {
+        // The §3.3 point of S3AFastOutputStream: part PUTs happen while
+        // the task is still producing bytes, not bundled at close.
+        let (store, fs) = setup(S3aConfig {
+            fast_upload: true,
+            multipart_size: 4,
+        });
+        let mut c = ctx();
+        let mut out = fs.create(&p("s3a://res/big"), true, &mut c).unwrap();
+        let before = store.counters();
+        out.write(&[1u8; 5], &mut c).unwrap(); // buffer exceeds 4: initiate + part 1
+        let mid = store.counters().since(&before);
+        assert_eq!(mid.get(OpKind::PutObject), 2, "initiate + part 1 during write");
+        out.write(&[2u8; 5], &mut c).unwrap(); // part 2 flushes mid-write
+        assert_eq!(store.counters().since(&before).get(OpKind::PutObject), 3);
+        out.close(&mut c).unwrap(); // final part + complete
+        assert_eq!(store.counters().since(&before).get(OpKind::PutObject), 5);
+        let mut c2 = ctx();
+        let data = fs.read_all(&p("s3a://res/big"), &mut c2).unwrap();
+        assert_eq!(data.len(), 10);
+        // Chunking must not change op counts vs the whole-buffer wrapper:
+        let before = store.counters();
+        fs.write_all(&p("s3a://res/big2"), {
+            let mut v = vec![1u8; 5];
+            v.extend_from_slice(&[2u8; 5]);
+            v
+        }, true, &mut c).unwrap();
+        assert_eq!(
+            store.counters().since(&before).get(OpKind::PutObject),
+            5,
+            "same 10 bytes, same multipart shape"
+        );
+    }
+
+    #[test]
+    fn dropped_fast_upload_stream_strands_the_upload() {
+        let (store, fs) = setup(S3aConfig {
+            fast_upload: true,
+            multipart_size: 4,
+        });
+        let mut c = ctx();
+        {
+            let mut out = fs.create(&p("s3a://res/crashed"), true, &mut c).unwrap();
+            out.write(&[9u8; 9], &mut c).unwrap(); // initiate + 2 parts
+            // dropped without close: executor died
+        }
+        // No visible object — only the orphaned in-flight upload remains.
+        assert!(fs.get_file_status(&p("s3a://res/crashed"), &mut c).is_err());
+        assert_eq!(store.debug_multipart_in_flight(), 1);
+    }
+
+    #[test]
+    fn dropped_buffered_stream_leaves_nothing() {
+        let (store, fs) = setup(S3aConfig::default());
+        let mut c = ctx();
+        {
+            let mut out = fs.create(&p("s3a://res/crashed"), true, &mut c).unwrap();
+            out.write(b"spooled to disk", &mut c).unwrap();
+        }
+        assert!(store.debug_names("res", "crashed").is_empty());
+        assert_eq!(store.debug_multipart_in_flight(), 0);
     }
 
     #[test]
@@ -467,7 +620,7 @@ mod tests {
         });
         let mut c = ctx();
         let before = store.counters();
-        fs.create(&p("s3a://res/small"), vec![1u8; 10], true, &mut c).unwrap();
+        fs.write_all(&p("s3a://res/small"), vec![1u8; 10], true, &mut c).unwrap();
         assert_eq!(store.counters().since(&before).get(OpKind::PutObject), 1);
     }
 
@@ -485,11 +638,11 @@ mod tests {
             },
         );
         let mut c = ctx();
-        fast.create(&p("s3a://res/f"), vec![0u8; 1000], true, &mut c).unwrap();
+        fast.write_all(&p("s3a://res/f"), vec![0u8; 1000], true, &mut c).unwrap();
         assert_eq!(c.elapsed.as_micros(), 0, "fast upload must not touch disk");
         let slow = S3a::new(store, S3aConfig::default());
         let mut c2 = ctx();
-        slow.create(&p("s3a://res/g"), vec![0u8; 1000], true, &mut c2).unwrap();
+        slow.write_all(&p("s3a://res/g"), vec![0u8; 1000], true, &mut c2).unwrap();
         assert!(c2.elapsed.as_secs_f64() > 100.0, "buffered path must pay disk time");
     }
 
@@ -497,12 +650,12 @@ mod tests {
     fn rename_file_and_marker_maintenance() {
         let (store, fs) = setup(S3aConfig::default());
         let mut c = ctx();
-        fs.create(&p("s3a://res/a/f"), b"zz".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("s3a://res/a/f"), b"zz".to_vec(), true, &mut c).unwrap();
         assert!(fs
             .rename(&p("s3a://res/a/f"), &p("s3a://res/b/f"), &mut c)
             .unwrap());
-        assert!(fs.open(&p("s3a://res/b/f"), &mut c).is_ok());
-        assert!(fs.open(&p("s3a://res/a/f"), &mut c).is_err());
+        assert!(fs.read_all(&p("s3a://res/b/f"), &mut c).is_ok());
+        assert!(fs.read_all(&p("s3a://res/a/f"), &mut c).is_err());
         // Source parent "a" became empty: marker restored.
         assert!(store.debug_names("res", "").contains(&"a/".to_string()));
         assert_eq!(store.counters().get(OpKind::CopyObject), 1);
@@ -523,12 +676,12 @@ mod tests {
             let mut c = ctx();
             let d = Path::parse(&format!("{scheme}://res/out")).unwrap();
             fs.mkdirs(&d.child("_temporary/0"), &mut c).unwrap();
-            fs.create(&d.child("_temporary/0/part-0"), b"x".to_vec(), true, &mut c)
+            fs.write_all(&d.child("_temporary/0/part-0"), b"x".to_vec(), true, &mut c)
                 .unwrap();
             fs.rename(&d.child("_temporary/0/part-0"), &d.child("part-0"), &mut c)
                 .unwrap();
             fs.delete(&d.child("_temporary"), true, &mut c).unwrap();
-            fs.create(&d.child("_SUCCESS"), vec![], true, &mut c).unwrap();
+            fs.write_all(&d.child("_SUCCESS"), vec![], true, &mut c).unwrap();
         };
         work(&*swift, "swift");
         work(&*s3a, "s3a");

@@ -24,9 +24,9 @@
 
 use super::head_cache::HeadCache;
 use super::naming::{self, AttemptId, TempPath};
-use super::{container_key, marker_key};
+use super::{container_key, map_store_error, marker_key, StoreInputStream};
 use crate::fs::status::FileStatus;
-use crate::fs::{FileSystem, FsError, OpCtx, Path};
+use crate::fs::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx, Path};
 use crate::objectstore::store::HeadResult;
 use crate::objectstore::{Metadata, ObjectStore, StoreError};
 use crate::simclock::SimInstant;
@@ -117,13 +117,16 @@ impl Stocator {
         self.cache.hits()
     }
 
-    fn not_found(e: StoreError, path: &Path) -> FsError {
-        match e {
-            StoreError::NoSuchKey(_) | StoreError::NoSuchContainer(_) => {
-                FsError::NotFound(path.to_string())
-            }
-            other => FsError::Io(other.to_string()),
-        }
+    /// Record one written part in the per-dataset write-tracking state.
+    fn register_part(&self, dataset: &str, attempt: &str, rec: PartRecord) {
+        let mut state = self.state.lock().unwrap();
+        state
+            .entry(dataset.to_string())
+            .or_default()
+            .written
+            .entry(attempt.to_string())
+            .or_default()
+            .push(rec);
     }
 
     /// HEAD through the cache.
@@ -144,7 +147,7 @@ impl Stocator {
                 self.cache.put(key, h.clone());
                 Ok(h)
             }
-            Err(e) => Err(Self::not_found(
+            Err(e) => Err(map_store_error(
                 e,
                 &Path::new(&self.scheme, cont, key),
             )),
@@ -261,7 +264,7 @@ impl Stocator {
         let (r, d) = self.store.list(cont, &prefix, Some('/'), ctx.now());
         ctx.add(d);
         ctx.record("stocator", || format!("GET container ?prefix={prefix}&delimiter=/"));
-        let l = r.map_err(|e| Self::not_found(e, path))?;
+        let l = r.map_err(|e| map_store_error(e, path))?;
         // Group attempt-qualified parts by basename; pass through plain
         // objects (inputs not written by Stocator) unchanged.
         let mut winners: BTreeMap<String, (String, u64)> = BTreeMap::new();
@@ -303,6 +306,162 @@ impl Stocator {
     }
 }
 
+/// What a Stocator output stream is writing.
+enum StocTarget {
+    /// An intercepted task temporary file, streaming to its final,
+    /// attempt-qualified name (§3.1).
+    Part {
+        final_key: String,
+        dataset: String,
+        attempt: String,
+        basename: String,
+    },
+    /// `_SUCCESS`: the body written by the caller is ignored — the
+    /// manifest of committed attempts is generated at close (§3.2).
+    Success { dataset: String },
+    /// Any other plain object.
+    Plain,
+}
+
+/// Stocator output stream: a single chunked-transfer PUT with **zero
+/// local-disk cost** (§3.3). The HTTP request is conceptually open from
+/// the first `write`; `close` ends the chunked body, which is when the
+/// object (and the one PUT op, on the caller's clock) completes.
+///
+/// Dropping the stream without close models the executor dying
+/// mid-transfer: the object store keeps the bytes that already arrived,
+/// so a **truncated object lands at the target name** — exactly the
+/// fail-stop debris the §3.2 read strategies are built to tolerate
+/// (List picks the attempt with the most data; Manifest only lists
+/// committed attempts).
+struct StocatorOutputStream<'a> {
+    fs: &'a Stocator,
+    cont: String,
+    key: String,
+    path: Path,
+    target: StocTarget,
+    buf: Vec<u8>,
+    /// Whether any `write` happened (an untouched stream leaves nothing).
+    wrote: bool,
+    closed: bool,
+    /// Virtual instant of the last write — the crash time used when the
+    /// stream is dropped without close.
+    last_now: SimInstant,
+}
+
+impl StocatorOutputStream<'_> {
+    /// The object key this stream ultimately lands at.
+    fn put_key(&self) -> &str {
+        match &self.target {
+            StocTarget::Part { final_key, .. } => final_key,
+            _ => &self.key,
+        }
+    }
+}
+
+impl FsOutputStream for StocatorOutputStream<'_> {
+    fn write(&mut self, data: &[u8], ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("write on closed stream {}", self.path)));
+        }
+        // Chunked transfer: bytes go straight onto the wire — no disk.
+        self.buf.extend_from_slice(data);
+        self.wrote = true;
+        self.last_now = ctx.now();
+        Ok(())
+    }
+
+    fn close(&mut self, ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("double close on {}", self.path)));
+        }
+        self.closed = true;
+        let data = match &self.target {
+            StocTarget::Success { dataset } => self.fs.manifest_body(dataset),
+            _ => std::mem::take(&mut self.buf),
+        };
+        let size = data.len() as u64;
+        let put_key = self.put_key().to_string();
+        let cont = self.cont.clone();
+        let (r, d) = self
+            .fs
+            .store
+            .put_object(&cont, &put_key, data, Metadata::new(), ctx.now());
+        ctx.add(d);
+        let intercepted = matches!(self.target, StocTarget::Part { .. });
+        ctx.record("stocator", || {
+            if intercepted {
+                format!("(intercept) PUT {cont}/{put_key}")
+            } else {
+                format!("PUT {cont}/{put_key}")
+            }
+        });
+        r.map_err(|e| map_store_error(e, &self.path))?;
+        self.fs.cache.invalidate(&put_key);
+        if let StocTarget::Part {
+            final_key,
+            dataset,
+            attempt,
+            basename,
+        } = &self.target
+        {
+            self.fs.register_part(
+                dataset,
+                attempt,
+                PartRecord {
+                    basename: basename.clone(),
+                    key: final_key.clone(),
+                    size,
+                },
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Drop for StocatorOutputStream<'_> {
+    fn drop(&mut self) {
+        if self.closed || !self.wrote {
+            return;
+        }
+        // Executor crash mid-chunked-PUT: the store keeps what arrived —
+        // a truncated object at the target name. (_SUCCESS bodies are
+        // generated at close, so a dropped one leaves nothing.)
+        if matches!(self.target, StocTarget::Success { .. }) {
+            return;
+        }
+        let put_key = self.put_key().to_string();
+        let data = std::mem::take(&mut self.buf);
+        let size = data.len() as u64;
+        let _ = self
+            .fs
+            .store
+            .put_object(&self.cont, &put_key, data, Metadata::new(), self.last_now)
+            .0;
+        self.fs.cache.invalidate(&put_key);
+        if let StocTarget::Part {
+            final_key,
+            dataset,
+            attempt,
+            basename,
+        } = &self.target
+        {
+            // Track the debris so a later abort-by-constructed-name can
+            // still delete it (mirrors the real connector, whose write
+            // state outlives the stream).
+            self.fs.register_part(
+                dataset,
+                attempt,
+                PartRecord {
+                    basename: basename.clone(),
+                    key: final_key.clone(),
+                    size,
+                },
+            );
+        }
+    }
+}
+
 impl FileSystem for Stocator {
     fn scheme(&self) -> &str {
         &self.scheme
@@ -337,7 +496,7 @@ impl FileSystem for Stocator {
                         format!("PUT {cont}/{dataset} (dataset marker)")
                     });
                     self.cache.invalidate(&dataset);
-                    r.map_err(|e| Self::not_found(e, path))?;
+                    r.map_err(|e| map_store_error(e, path))?;
                 }
                 ctx.record("stocator", || {
                     format!("(intercept) mkdirs {key} -> no-op")
@@ -356,7 +515,7 @@ impl FileSystem for Stocator {
                 let mut state = self.state.lock().unwrap();
                 state.entry(key.to_string()).or_default().marker_written = true;
                 drop(state);
-                r.map_err(|e| Self::not_found(e, path))
+                r.map_err(|e| map_store_error(e, path))
             }
         }
     }
@@ -364,81 +523,61 @@ impl FileSystem for Stocator {
     fn create(
         &self,
         path: &Path,
-        data: Vec<u8>,
         _overwrite: bool,
         ctx: &mut OpCtx,
-    ) -> Result<(), FsError> {
+    ) -> Result<Box<dyn FsOutputStream + '_>, FsError> {
         let (cont, key) = container_key(path);
-        match naming::classify(key) {
+        let target = match naming::classify(key) {
             Some(TempPath::TaskTempFile {
                 dataset,
                 attempt,
                 basename,
             }) => {
-                // THE interception (§3.1): write directly to the final,
-                // attempt-qualified name. Chunked transfer encoding: a
-                // single streaming PUT, no local buffering.
+                // THE interception (§3.1): the stream writes directly to
+                // the final, attempt-qualified name.
                 let final_key = naming::stocator_final_key(&dataset, &basename, &attempt);
-                let size = data.len() as u64;
-                let (r, d) =
-                    self.store
-                        .put_object(cont, &final_key, data, Metadata::new(), ctx.now());
-                ctx.add(d);
-                ctx.record("stocator", || {
-                    format!("(intercept) PUT {cont}/{final_key}")
-                });
-                r.map_err(|e| Self::not_found(e, path))?;
-                self.cache.invalidate(&final_key);
-                let mut state = self.state.lock().unwrap();
-                state
-                    .entry(dataset)
-                    .or_default()
-                    .written
-                    .entry(attempt.to_string())
-                    .or_default()
-                    .push(PartRecord {
-                        basename,
-                        key: final_key,
-                        size,
-                    });
-                Ok(())
+                StocTarget::Part {
+                    final_key,
+                    dataset,
+                    attempt: attempt.to_string(),
+                    basename,
+                }
             }
-            Some(other) => Err(FsError::Io(format!(
-                "create on non-file temporary path {other:?}"
-            ))),
-            None => {
-                // Plain object. `_SUCCESS` gets the manifest body (§3.2).
-                let body = if path.name() == "_SUCCESS" {
-                    let dataset = path.parent().map(|p| p.key).unwrap_or_default();
-                    self.manifest_body(&dataset)
-                } else {
-                    data
-                };
-                let (r, d) = self
-                    .store
-                    .put_object(cont, key, body, Metadata::new(), ctx.now());
-                ctx.add(d);
-                ctx.record("stocator", || format!("PUT {cont}/{key}"));
-                self.cache.invalidate(key);
-                r.map_err(|e| Self::not_found(e, path))
+            Some(other) => {
+                return Err(FsError::Io(format!(
+                    "create on non-file temporary path {other:?}"
+                )))
             }
-        }
+            None if path.name() == "_SUCCESS" => {
+                // `_SUCCESS` gets the manifest body, built at close (§3.2).
+                let dataset = path.parent().map(|p| p.key).unwrap_or_default();
+                StocTarget::Success { dataset }
+            }
+            None => StocTarget::Plain,
+        };
+        Ok(Box::new(StocatorOutputStream {
+            fs: self,
+            cont: cont.to_string(),
+            key: key.to_string(),
+            path: path.clone(),
+            target,
+            buf: Vec::new(),
+            wrote: false,
+            closed: false,
+            last_now: ctx.now(),
+        }))
     }
 
-    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
-        // §3.4 optimization 1: GET directly — no preceding HEAD; the GET
-        // response carries the metadata, which warms the cache.
-        let (cont, key) = container_key(path);
-        let (r, d) = self.store.get_object(cont, key);
-        ctx.add(d);
-        ctx.record("stocator", || format!("GET {cont}/{key}"));
-        match r {
-            Ok(g) => {
-                self.cache.put(key, g.head.clone());
-                Ok(g.data)
-            }
-            Err(e) => Err(Self::not_found(e, path)),
-        }
+    fn open(&self, path: &Path, _ctx: &mut OpCtx) -> Result<Box<dyn FsInputStream + '_>, FsError> {
+        // §3.4 optimization 1: no HEAD before GET. The handle is fully
+        // lazy — the first read call issues the (possibly ranged) GET,
+        // whose response carries the metadata and warms the cache.
+        Ok(Box::new(StoreInputStream::lazy_with_cache(
+            &self.store,
+            "stocator",
+            path,
+            &self.cache,
+        )))
     }
 
     fn get_file_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {
@@ -449,7 +588,7 @@ impl FileSystem for Stocator {
             ctx.record("stocator", || format!("HEAD container {cont}"));
             return r
                 .map(|_| FileStatus::dir(path.clone(), SimInstant::EPOCH))
-                .map_err(|e| Self::not_found(e, path));
+                .map_err(|e| map_store_error(e, path));
         }
         if let Some(tp) = naming::classify(key) {
             // Temporary paths are virtual. Attempt dirs "exist" iff the
@@ -591,7 +730,7 @@ impl FileSystem for Stocator {
                         Ok(true)
                     }
                     Err(StoreError::NoSuchKey(_)) => Ok(false),
-                    Err(e) => Err(Self::not_found(e, src)),
+                    Err(e) => Err(map_store_error(e, src)),
                 }
             }
         }
@@ -738,7 +877,7 @@ mod tests {
     fn temp_write_lands_at_final_attempt_qualified_name() {
         let (store, fs) = setup(ReadStrategy::List);
         let mut c = ctx();
-        fs.create(&temp_file("data.txt", 0, 0, "part-00000"), b"hello".to_vec(), true, &mut c)
+        fs.write_all(&temp_file("data.txt", 0, 0, "part-00000"), b"hello".to_vec(), true, &mut c)
             .unwrap();
         let names = store.debug_names("res", "data.txt/");
         assert_eq!(
@@ -757,7 +896,7 @@ mod tests {
     fn commit_renames_are_free() {
         let (store, fs) = setup(ReadStrategy::List);
         let mut c = ctx();
-        fs.create(&temp_file("d", 0, 0, "part-0"), b"x".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 0, 0, "part-0"), b"x".to_vec(), true, &mut c).unwrap();
         let before = store.counters();
         // Task commit (v1 shape): rename attempt dir -> job temp dir.
         assert!(fs
@@ -823,9 +962,9 @@ mod tests {
     fn abort_deletes_by_constructed_name() {
         let (store, fs) = setup(ReadStrategy::List);
         let mut c = ctx();
-        fs.create(&temp_file("d", 2, 0, "part-2"), b"aa".to_vec(), true, &mut c).unwrap();
-        fs.create(&temp_file("d", 2, 2, "part-2"), b"bb".to_vec(), true, &mut c).unwrap();
-        fs.create(&temp_file("d", 2, 1, "part-2"), b"cc".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 2, 0, "part-2"), b"aa".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 2, 2, "part-2"), b"bb".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 2, 1, "part-2"), b"cc".to_vec(), true, &mut c).unwrap();
         let before = store.counters();
         // Abort attempts 0 and 2 (paper Table 3 lines 6-7).
         fs.delete(&attempt_dir("d", 2, 0), true, &mut c).unwrap();
@@ -844,15 +983,15 @@ mod tests {
         // Task 2 ran three times; attempt 1 wrote the most data (fail-stop:
         // the completed attempt's object is complete, dead attempts may
         // have truncated objects).
-        fs.create(&temp_file("d", 0, 0, "part-0"), b"full0".to_vec(), true, &mut c).unwrap();
-        fs.create(&temp_file("d", 2, 0, "part-2"), b"xy".to_vec(), true, &mut c).unwrap();
-        fs.create(&temp_file("d", 2, 1, "part-2"), b"complete".to_vec(), true, &mut c).unwrap();
-        fs.create(&temp_file("d", 2, 2, "part-2"), b"z".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 0, 0, "part-0"), b"full0".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 2, 0, "part-2"), b"xy".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 2, 1, "part-2"), b"complete".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 2, 2, "part-2"), b"z".to_vec(), true, &mut c).unwrap();
         fs.rename(&attempt_dir("d", 0, 0), &p("swift2d://res/d/_temporary/0/task_x"), &mut c)
             .unwrap();
         fs.rename(&attempt_dir("d", 2, 1), &p("swift2d://res/d/_temporary/0/task_y"), &mut c)
             .unwrap();
-        fs.create(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
+        fs.write_all(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
 
         let ls = fs.list_status(&p("swift2d://res/d"), &mut c).unwrap();
         let parts: Vec<&str> = ls
@@ -874,15 +1013,15 @@ mod tests {
         let (store, fs) = setup(ReadStrategy::Manifest);
         let mut c = ctx();
         fs.mkdirs(&p("swift2d://res/d"), &mut c).unwrap();
-        fs.create(&temp_file("d", 0, 0, "part-0"), b"AA".to_vec(), true, &mut c).unwrap();
-        fs.create(&temp_file("d", 1, 0, "part-1"), b"BBB".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 0, 0, "part-0"), b"AA".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 1, 0, "part-1"), b"BBB".to_vec(), true, &mut c).unwrap();
         // Extra uncommitted attempt — must NOT appear via manifest.
-        fs.create(&temp_file("d", 1, 1, "part-1"), b"ZZZZ".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 1, 1, "part-1"), b"ZZZZ".to_vec(), true, &mut c).unwrap();
         fs.rename(&attempt_dir("d", 0, 0), &p("swift2d://res/d/_temporary/0/task_a"), &mut c)
             .unwrap();
         fs.rename(&attempt_dir("d", 1, 0), &p("swift2d://res/d/_temporary/0/task_b"), &mut c)
             .unwrap();
-        fs.create(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
+        fs.write_all(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
 
         // The manifest body landed in _SUCCESS:
         let (g, _) = store.get_object("res", "d/_SUCCESS");
@@ -927,10 +1066,10 @@ mod tests {
             },
         );
         let mut c = ctx();
-        fs.create(&temp_file("d", 0, 0, "part-0"), b"DATA".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 0, 0, "part-0"), b"DATA".to_vec(), true, &mut c).unwrap();
         fs.rename(&attempt_dir("d", 0, 0), &p("swift2d://res/d/_temporary/0/task_a"), &mut c)
             .unwrap();
-        fs.create(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
+        fs.write_all(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
         // A listing would see NOTHING (1-hour lag):
         let (l, _) = store.list("res", "d/", None, SimInstant(0));
         assert!(l.unwrap().is_empty());
@@ -943,7 +1082,7 @@ mod tests {
             .collect();
         assert_eq!(parts, vec!["part-0_attempt_201512062056_0000_m_000000_0"]);
         // And the data is readable (GET is read-after-write consistent):
-        let data = fs.open(&ls[0].path, &mut c).unwrap();
+        let data = fs.read_all(&ls[0].path, &mut c).unwrap();
         assert_eq!(&*data, b"DATA");
     }
 
@@ -951,9 +1090,9 @@ mod tests {
     fn open_skips_head_and_warms_cache() {
         let (store, fs) = setup(ReadStrategy::List);
         let mut c = ctx();
-        fs.create(&p("swift2d://res/in/part-0"), b"input".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("swift2d://res/in/part-0"), b"input".to_vec(), true, &mut c).unwrap();
         let before = store.counters();
-        let _ = fs.open(&p("swift2d://res/in/part-0"), &mut c).unwrap();
+        let _ = fs.read_all(&p("swift2d://res/in/part-0"), &mut c).unwrap();
         let d = store.counters().since(&before);
         assert_eq!(d.get(OpKind::HeadObject), 0, "no HEAD before GET (§3.4)");
         assert_eq!(d.get(OpKind::GetObject), 1);
@@ -966,10 +1105,81 @@ mod tests {
     }
 
     #[test]
+    fn dropped_part_stream_leaves_truncated_object_that_read_side_rejects() {
+        // Executor dies mid-chunked-PUT: the bytes that reached the store
+        // form a truncated object at the attempt-qualified name (§3.2
+        // fail-stop debris). A complete later attempt wins the dedup.
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        {
+            let mut out = fs.create(&temp_file("d", 0, 0, "part-0"), true, &mut c).unwrap();
+            out.write(b"trunc", &mut c).unwrap();
+            // dropped without close — attempt 0 crashed
+        }
+        fs.write_all(&temp_file("d", 0, 1, "part-0"), b"complete!".to_vec(), true, &mut c)
+            .unwrap();
+        let names = store.debug_names("res", "d/");
+        assert!(names.iter().any(|n| n.ends_with("m_000000_0")), "{names:?}");
+        assert!(names.iter().any(|n| n.ends_with("m_000000_1")), "{names:?}");
+        // Commit attempt 1, then read: exactly one part-0, the full one.
+        fs.rename(&attempt_dir("d", 0, 1), &p("swift2d://res/d/_temporary/0/task_a"), &mut c)
+            .unwrap();
+        let ls = fs.list_status(&p("swift2d://res/d"), &mut c).unwrap();
+        let parts: Vec<_> = ls
+            .iter()
+            .filter(|s| s.path.name().starts_with("part-0"))
+            .collect();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].len, 9, "the truncated attempt must lose");
+        assert!(parts[0].path.name().ends_with("m_000000_1"));
+    }
+
+    #[test]
+    fn dropped_untouched_stream_leaves_nothing() {
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        let before = store.counters();
+        {
+            let _out = fs.create(&temp_file("d", 1, 0, "part-1"), true, &mut c).unwrap();
+            // dropped before any write
+        }
+        assert_eq!(store.counters().since(&before).total(), 0);
+        assert!(store.debug_names("res", "d/").is_empty());
+    }
+
+    #[test]
+    fn range_read_skips_head_and_moves_only_the_slice() {
+        let (store, fs) = setup(ReadStrategy::List);
+        let mut c = ctx();
+        fs.write_all(&p("swift2d://res/in/part-0"), (0u8..80).collect(), true, &mut c)
+            .unwrap();
+        let before = store.counters();
+        let mut input = fs.open(&p("swift2d://res/in/part-0"), &mut c).unwrap();
+        assert_eq!(input.size_hint(), None, "lazy handle: nothing issued yet");
+        let slice = input.read_range(16, 8, &mut c).unwrap();
+        assert_eq!(slice, (16u8..24).collect::<Vec<u8>>());
+        let d = store.counters().since(&before);
+        assert_eq!(d.get(OpKind::HeadObject), 0, "no HEAD before GET (§3.4)");
+        assert_eq!(d.get(OpKind::GetObject), 1);
+        assert_eq!(d.bytes_read, 8);
+        // The ranged GET's response warmed the cache with the FULL size.
+        assert_eq!(input.size_hint(), Some(80));
+        let before = store.counters();
+        let st = fs.get_file_status(&p("swift2d://res/in/part-0"), &mut c).unwrap();
+        assert_eq!(st.len, 80);
+        assert_eq!(store.counters().since(&before).total(), 0, "served from cache");
+        // Past-EOF offset surfaces uniformly as InvalidRange.
+        assert!(matches!(
+            input.read_range(81, 1, &mut c),
+            Err(FsError::InvalidRange(_))
+        ));
+    }
+
+    #[test]
     fn head_cache_dedups_repeat_probes() {
         let (store, fs) = setup(ReadStrategy::List);
         let mut c = ctx();
-        fs.create(&p("swift2d://res/in/f"), b"abc".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("swift2d://res/in/f"), b"abc".to_vec(), true, &mut c).unwrap();
         let before = store.counters();
         for _ in 0..5 {
             fs.get_file_status(&p("swift2d://res/in/f"), &mut c).unwrap();
@@ -986,8 +1196,8 @@ mod tests {
         let (store, fs) = setup(ReadStrategy::List);
         let mut c = ctx();
         fs.mkdirs(&p("swift2d://res/d"), &mut c).unwrap();
-        fs.create(&temp_file("d", 0, 0, "part-0"), b"x".to_vec(), true, &mut c).unwrap();
-        fs.create(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
+        fs.write_all(&temp_file("d", 0, 0, "part-0"), b"x".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("swift2d://res/d/_SUCCESS"), vec![], true, &mut c).unwrap();
         assert!(fs.delete(&p("swift2d://res/d"), true, &mut c).unwrap());
         assert!(store.debug_names("res", "d").is_empty());
         assert!(!fs.exists(&p("swift2d://res/d"), &mut c));

@@ -14,10 +14,10 @@
 //!   PUT (no chunked transfer encoding, §3.3);
 //! * reads HEAD the object before GETting it.
 
-use super::{container_key, marker_key};
-use crate::fs::{FileSystem, FsError, OpCtx, Path};
+use super::{container_key, map_store_error, marker_key, StoreInputStream};
+use crate::fs::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx, Path};
 use crate::fs::status::FileStatus;
-use crate::objectstore::{Metadata, ObjectStore, StoreError};
+use crate::objectstore::{Metadata, ObjectStore};
 use crate::simclock::SimInstant;
 use std::sync::Arc;
 
@@ -34,15 +34,6 @@ impl HadoopSwift {
         })
     }
 
-    fn not_found(e: StoreError, path: &Path) -> FsError {
-        match e {
-            StoreError::NoSuchKey(_) | StoreError::NoSuchContainer(_) => {
-                FsError::NotFound(path.to_string())
-            }
-            other => FsError::Io(other.to_string()),
-        }
-    }
-
     /// The probe cascade behind `getFileStatus`:
     /// HEAD `<key>` → HEAD `<key>/` → GET container `?prefix=<key>/`.
     fn probe_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {
@@ -53,7 +44,7 @@ impl HadoopSwift {
             ctx.record("swift", || format!("HEAD container {cont}"));
             return r
                 .map(|_| FileStatus::dir(path.clone(), SimInstant::EPOCH))
-                .map_err(|e| Self::not_found(e, path));
+                .map_err(|e| map_store_error(e, path));
         }
         // 1. file probe
         let (r, d) = self.store.head_object(cont, key);
@@ -78,6 +69,50 @@ impl HadoopSwift {
             Ok(l) if !l.is_empty() => Ok(FileStatus::dir(path.clone(), SimInstant::EPOCH)),
             _ => Err(FsError::NotFound(path.to_string())),
         }
+    }
+}
+
+/// Hadoop-Swift output stream (paper §3.3): every `write` spools to the
+/// Spark server's **local disk** (no chunked transfer encoding); the one
+/// PUT happens at `close`, after the whole part is on disk. Disk time is
+/// charged on the *cumulative* spool size (telescoping), so the total
+/// cost — including the scale-threshold decision — is identical however
+/// callers chunk their writes. Dropping the stream without close — an
+/// executor crash — loses the local spool: nothing ever reaches the
+/// object store.
+struct SwiftOutputStream<'a> {
+    fs: &'a HadoopSwift,
+    path: Path,
+    buf: Vec<u8>,
+    closed: bool,
+}
+
+impl FsOutputStream for SwiftOutputStream<'_> {
+    fn write(&mut self, data: &[u8], ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("write on closed stream {}", self.path)));
+        }
+        let latency = &self.fs.store.config.latency;
+        let old = self.buf.len() as u64;
+        self.buf.extend_from_slice(data);
+        ctx.add_spool_delta(old, self.buf.len() as u64, |b| latency.local_disk_time(b));
+        Ok(())
+    }
+
+    fn close(&mut self, ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("double close on {}", self.path)));
+        }
+        self.closed = true;
+        let (cont, key) = container_key(&self.path);
+        let data = std::mem::take(&mut self.buf);
+        let (r, d) = self
+            .fs
+            .store
+            .put_object(cont, key, data, Metadata::new(), ctx.now());
+        ctx.add(d);
+        ctx.record("swift", || format!("PUT {cont}/{key}"));
+        r.map_err(|e| map_store_error(e, &self.path))
     }
 }
 
@@ -109,7 +144,7 @@ impl FileSystem for HadoopSwift {
                             .put_object(cont, &mk, Vec::new(), Metadata::new(), ctx.now());
                     ctx.add(d);
                     ctx.record("swift", || format!("PUT {cont}/{mk} (dir marker)"));
-                    r.map_err(|e| Self::not_found(e, &level))?;
+                    r.map_err(|e| map_store_error(e, &level))?;
                 }
                 Err(e) => return Err(e),
             }
@@ -120,11 +155,9 @@ impl FileSystem for HadoopSwift {
     fn create(
         &self,
         path: &Path,
-        data: Vec<u8>,
         overwrite: bool,
         ctx: &mut OpCtx,
-    ) -> Result<(), FsError> {
-        let (cont, key) = container_key(path);
+    ) -> Result<Box<dyn FsOutputStream + '_>, FsError> {
         if !overwrite {
             match self.probe_status(path, ctx) {
                 Ok(st) if st.is_dir => return Err(FsError::IsADirectory(path.to_string())),
@@ -133,29 +166,30 @@ impl FileSystem for HadoopSwift {
                 Err(e) => return Err(e),
             }
         }
-        // Buffer the whole output to local disk first (paper §3.3), then
-        // upload.
-        ctx.add(self.store.config.latency.local_disk_time(data.len() as u64));
-        let (r, d) = self
-            .store
-            .put_object(cont, key, data, Metadata::new(), ctx.now());
-        ctx.add(d);
-        ctx.record("swift", || format!("PUT {cont}/{key}"));
-        r.map_err(|e| Self::not_found(e, path))
+        // Writes spool to local disk; the PUT happens at close (§3.3).
+        Ok(Box::new(SwiftOutputStream {
+            fs: self,
+            path: path.clone(),
+            buf: Vec::new(),
+            closed: false,
+        }))
     }
 
-    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
+    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Box<dyn FsInputStream + '_>, FsError> {
         let (cont, key) = container_key(path);
         // The legacy connectors HEAD before GET (paper §3.4 — the naive
-        // two-op pattern Stocator removes).
+        // two-op pattern Stocator removes). The GETs themselves happen per
+        // read call on the returned handle.
         let (h, d) = self.store.head_object(cont, key);
         ctx.add(d);
         ctx.record("swift", || format!("HEAD {cont}/{key}"));
-        h.map_err(|e| Self::not_found(e, path))?;
-        let (r, d) = self.store.get_object(cont, key);
-        ctx.add(d);
-        ctx.record("swift", || format!("GET {cont}/{key}"));
-        r.map(|g| g.data).map_err(|e| Self::not_found(e, path))
+        let h = h.map_err(|e| map_store_error(e, path))?;
+        Ok(Box::new(StoreInputStream::new(
+            &self.store,
+            "swift",
+            path,
+            h.size,
+        )))
     }
 
     fn get_file_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {
@@ -176,7 +210,7 @@ impl FileSystem for HadoopSwift {
         let (r, d) = self.store.list(cont, &prefix, Some('/'), ctx.now());
         ctx.add(d);
         ctx.record("swift", || format!("GET container ?prefix={prefix}&delimiter=/"));
-        let l = r.map_err(|e| Self::not_found(e, path))?;
+        let l = r.map_err(|e| map_store_error(e, path))?;
         let mut out = Vec::new();
         for o in l.objects {
             if o.name == prefix {
@@ -208,11 +242,11 @@ impl FileSystem for HadoopSwift {
             let (r, d) = self.store.copy_object(cont, skey, cont, &dkey, ctx.now());
             ctx.add(d);
             ctx.record("swift", || format!("COPY {skey} -> {dkey}"));
-            r.map_err(|e| Self::not_found(e, src))?;
+            r.map_err(|e| map_store_error(e, src))?;
             let (r, d) = self.store.delete_object(cont, skey, ctx.now());
             ctx.add(d);
             ctx.record("swift", || format!("DELETE {skey}"));
-            r.map_err(|e| Self::not_found(e, src))?;
+            r.map_err(|e| map_store_error(e, src))?;
             return Ok(true);
         }
         // Directory: list the subtree (eventual consistency risk lives
@@ -222,7 +256,7 @@ impl FileSystem for HadoopSwift {
         let (r, d) = self.store.list(cont, &sprefix, None, ctx.now());
         ctx.add(d);
         ctx.record("swift", || format!("GET container ?prefix={sprefix}"));
-        let l = r.map_err(|e| Self::not_found(e, src))?;
+        let l = r.map_err(|e| map_store_error(e, src))?;
         for o in l.objects {
             let suffix = &o.name[sprefix.len()..];
             let new_key = if suffix.is_empty() {
@@ -262,14 +296,14 @@ impl FileSystem for HadoopSwift {
             let (r, d) = self.store.delete_object(cont, key, ctx.now());
             ctx.add(d);
             ctx.record("swift", || format!("DELETE {key}"));
-            r.map_err(|e| Self::not_found(e, path))?;
+            r.map_err(|e| map_store_error(e, path))?;
             return Ok(true);
         }
         let prefix = marker_key(key);
         let (r, d) = self.store.list(cont, &prefix, None, ctx.now());
         ctx.add(d);
         ctx.record("swift", || format!("GET container ?prefix={prefix}"));
-        let l = r.map_err(|e| Self::not_found(e, path))?;
+        let l = r.map_err(|e| map_store_error(e, path))?;
         if !recursive && l.objects.iter().any(|o| o.name != prefix) {
             return Err(FsError::Io(format!("directory {path} not empty")));
         }
@@ -322,9 +356,9 @@ mod tests {
     fn create_and_open_roundtrip() {
         let (_, fs) = setup();
         let mut c = ctx();
-        fs.create(&p("swift://res/d/f"), b"hello".to_vec(), true, &mut c)
+        fs.write_all(&p("swift://res/d/f"), b"hello".to_vec(), true, &mut c)
             .unwrap();
-        let data = fs.open(&p("swift://res/d/f"), &mut c).unwrap();
+        let data = fs.read_all(&p("swift://res/d/f"), &mut c).unwrap();
         assert_eq!(&*data, b"hello");
         // Implicit directory now visible:
         let st = fs.get_file_status(&p("swift://res/d"), &mut c).unwrap();
@@ -335,9 +369,9 @@ mod tests {
     fn create_no_overwrite_fails_on_existing() {
         let (_, fs) = setup();
         let mut c = ctx();
-        fs.create(&p("swift://res/f"), b"1".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("swift://res/f"), b"1".to_vec(), true, &mut c).unwrap();
         assert!(matches!(
-            fs.create(&p("swift://res/f"), b"2".to_vec(), false, &mut c),
+            fs.write_all(&p("swift://res/f"), b"2".to_vec(), false, &mut c),
             Err(FsError::AlreadyExists(_))
         ));
     }
@@ -346,15 +380,15 @@ mod tests {
     fn rename_file_is_copy_plus_delete() {
         let (store, fs) = setup();
         let mut c = ctx();
-        fs.create(&p("swift://res/a"), b"xyz".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("swift://res/a"), b"xyz".to_vec(), true, &mut c).unwrap();
         let before = store.counters();
         assert!(fs.rename(&p("swift://res/a"), &p("swift://res/b"), &mut c).unwrap());
         let d = store.counters().since(&before);
         assert_eq!(d.get(OpKind::CopyObject), 1);
         assert_eq!(d.get(OpKind::DeleteObject), 1);
         assert_eq!(d.bytes_copied, 3);
-        assert_eq!(&*fs.open(&p("swift://res/b"), &mut c).unwrap(), b"xyz");
-        assert!(fs.open(&p("swift://res/a"), &mut c).is_err());
+        assert_eq!(&*fs.read_all(&p("swift://res/b"), &mut c).unwrap(), b"xyz");
+        assert!(fs.read_all(&p("swift://res/a"), &mut c).is_err());
     }
 
     #[test]
@@ -362,14 +396,14 @@ mod tests {
         let (store, fs) = setup();
         let mut c = ctx();
         fs.mkdirs(&p("swift://res/t/src"), &mut c).unwrap();
-        fs.create(&p("swift://res/t/src/p0"), b"00".to_vec(), true, &mut c).unwrap();
-        fs.create(&p("swift://res/t/src/p1"), b"11".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("swift://res/t/src/p0"), b"00".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("swift://res/t/src/p1"), b"11".to_vec(), true, &mut c).unwrap();
         assert!(fs
             .rename(&p("swift://res/t/src"), &p("swift://res/t/dst"), &mut c)
             .unwrap());
-        assert!(fs.open(&p("swift://res/t/dst/p0"), &mut c).is_ok());
-        assert!(fs.open(&p("swift://res/t/dst/p1"), &mut c).is_ok());
-        assert!(fs.open(&p("swift://res/t/src/p0"), &mut c).is_err());
+        assert!(fs.read_all(&p("swift://res/t/dst/p0"), &mut c).is_ok());
+        assert!(fs.read_all(&p("swift://res/t/dst/p1"), &mut c).is_ok());
+        assert!(fs.read_all(&p("swift://res/t/src/p0"), &mut c).is_err());
         // 2 files + 1 marker copied.
         assert_eq!(store.counters().get(OpKind::CopyObject), 3);
     }
@@ -385,7 +419,7 @@ mod tests {
     fn list_status_files_and_dirs() {
         let (_, fs) = setup();
         let mut c = ctx();
-        fs.create(&p("swift://res/d/f1"), b"1".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("swift://res/d/f1"), b"1".to_vec(), true, &mut c).unwrap();
         fs.mkdirs(&p("swift://res/d/sub"), &mut c).unwrap();
         let ls = fs.list_status(&p("swift://res/d"), &mut c).unwrap();
         let mut names: Vec<(&str, bool)> =
@@ -399,7 +433,7 @@ mod tests {
         let (store, fs) = setup();
         let mut c = ctx();
         fs.mkdirs(&p("swift://res/d/sub"), &mut c).unwrap();
-        fs.create(&p("swift://res/d/f"), b"1".to_vec(), true, &mut c).unwrap();
+        fs.write_all(&p("swift://res/d/f"), b"1".to_vec(), true, &mut c).unwrap();
         assert!(fs.delete(&p("swift://res/d"), true, &mut c).unwrap());
         assert!(store.debug_names("res", "").is_empty());
         assert!(!fs.exists(&p("swift://res/d"), &mut c));
@@ -414,8 +448,44 @@ mod tests {
         store.create_container("res", SimInstant::EPOCH).0.unwrap();
         let fs = HadoopSwift::new(store);
         let mut c = ctx();
-        fs.create(&p("swift://res/f"), vec![0u8; 2_000], true, &mut c).unwrap();
+        fs.write_all(&p("swift://res/f"), vec![0u8; 2_000], true, &mut c).unwrap();
         assert!(c.elapsed.as_secs_f64() >= 2.0, "disk time not charged");
+    }
+
+    #[test]
+    fn dropped_stream_loses_the_local_spool() {
+        // Executor crash mid-write: the part was spooling to local disk,
+        // so NOTHING reaches the object store — no object, no REST op.
+        let (store, fs) = setup();
+        let mut c = ctx();
+        let before = store.counters();
+        {
+            let mut out = fs.create(&p("swift://res/doomed"), true, &mut c).unwrap();
+            out.write(b"partial bytes", &mut c).unwrap();
+            // dropped without close
+        }
+        assert_eq!(store.counters().since(&before).total(), 0);
+        assert!(store.debug_names("res", "").is_empty());
+    }
+
+    #[test]
+    fn range_read_is_one_head_plus_one_ranged_get() {
+        let (store, fs) = setup();
+        let mut c = ctx();
+        fs.write_all(&p("swift://res/f"), (0u8..50).collect(), true, &mut c).unwrap();
+        let before = store.counters();
+        let mut input = fs.open(&p("swift://res/f"), &mut c).unwrap();
+        assert_eq!(input.size_hint(), Some(50));
+        let mid = input.read_range(10, 4, &mut c).unwrap();
+        assert_eq!(mid, vec![10, 11, 12, 13]);
+        let d = store.counters().since(&before);
+        assert_eq!(d.get(OpKind::HeadObject), 1, "HEAD at open (§3.4 legacy)");
+        assert_eq!(d.get(OpKind::GetObject), 1);
+        assert_eq!(d.bytes_read, 4, "only the slice crosses the wire");
+        assert!(matches!(
+            input.read_range(51, 1, &mut c),
+            Err(FsError::InvalidRange(_))
+        ));
     }
 
     #[test]
@@ -427,7 +497,7 @@ mod tests {
         let fs = HadoopSwift::new(store.clone());
         let mut c = ctx();
         fs.mkdirs(&p("swift://res/d/src"), &mut c).unwrap();
-        fs.create(&p("swift://res/d/src/part-0"), b"data".to_vec(), true, &mut c)
+        fs.write_all(&p("swift://res/d/src/part-0"), b"data".to_vec(), true, &mut c)
             .unwrap();
         // Rename immediately (listing lag is 2s of virtual time; zero
         // virtual time has passed).

@@ -9,7 +9,7 @@
 //! metadata-only rename — which is exactly why the HMRCC commit protocol is
 //! cheap on HDFS and ruinous on object stores.
 
-use super::interface::{FileSystem, FsError, OpCtx};
+use super::interface::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx};
 use super::path::Path;
 use super::status::FileStatus;
 use crate::simclock::{SimDuration, SimInstant};
@@ -82,6 +82,43 @@ impl Hdfs {
         }
     }
 
+    /// Validate a file target and implicitly create parent directories
+    /// (Hadoop `create()` semantics), under the caller-held node-table
+    /// lock. Shared by `create()` (conflicts surface before any byte is
+    /// written) and the stream's `close()` (the tree may have changed
+    /// while the stream was open — re-establishing the invariants in the
+    /// same lock as the insert keeps file+parents mutations as atomic as
+    /// the old whole-buffer create).
+    fn validate_and_make_parents(
+        nodes: &mut BTreeMap<String, Node>,
+        path: &Path,
+        overwrite: bool,
+    ) -> Result<(), FsError> {
+        let key = Self::full_key(path);
+        match nodes.get(&key) {
+            Some(Node::Dir) => return Err(FsError::IsADirectory(key)),
+            Some(Node::File { .. }) if !overwrite => {
+                return Err(FsError::AlreadyExists(key));
+            }
+            _ => {}
+        }
+        if let Some(parent) = path.parent() {
+            let mut cur = path.container.clone();
+            nodes.entry(cur.clone()).or_insert(Node::Dir);
+            for seg in parent.key.split('/').filter(|s| !s.is_empty()) {
+                cur = format!("{cur}/{seg}");
+                match nodes.get(&cur) {
+                    Some(Node::File { .. }) => return Err(FsError::NotADirectory(cur)),
+                    Some(Node::Dir) => {}
+                    None => {
+                        nodes.insert(cur.clone(), Node::Dir);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Children of `key` (direct only).
     fn children(nodes: &BTreeMap<String, Node>, key: &str) -> Vec<String> {
         let prefix = format!("{key}/");
@@ -96,6 +133,99 @@ impl Hdfs {
             }
         }
         out
+    }
+}
+
+/// HDFS write pipeline: bytes stream to the 3-replica pipeline as they
+/// are produced (`write` pays the replication-bottlenecked disk time);
+/// the file becomes visible at `close`. A stream dropped without close —
+/// a crashed writer — leaves nothing behind: HDFS files materialise on
+/// close, so there is no partial object to clean up.
+struct HdfsOutputStream<'a> {
+    fs: &'a Hdfs,
+    path: Path,
+    key: String,
+    buf: Vec<u8>,
+    closed: bool,
+}
+
+impl FsOutputStream for HdfsOutputStream<'_> {
+    fn write(&mut self, data: &[u8], ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("write on closed stream {}", self.path)));
+        }
+        // Pipeline time accrues on the cumulative bytes written, so
+        // chunking never changes the total.
+        let old = self.buf.len() as u64;
+        self.buf.extend_from_slice(data);
+        ctx.add_spool_delta(old, self.buf.len() as u64, |b| self.fs.latency.data_time(b));
+        Ok(())
+    }
+
+    fn close(&mut self, ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("double close on {}", self.path)));
+        }
+        self.closed = true;
+        let data = std::mem::take(&mut self.buf);
+        let len = data.len();
+        let path = self.path.clone();
+        ctx.record("create", || format!("{path} ({len} bytes)"));
+        let mut nodes = self.fs.nodes.lock().unwrap();
+        // Revalidate under the lock: neither a directory that appeared at
+        // this path since create() nor a file that replaced an ancestor
+        // may be corrupted by the insert. (overwrite=false was enforced
+        // at create time — the no-clobber guarantee covers the create
+        // instant, as documented on `FileSystem::create`.)
+        Hdfs::validate_and_make_parents(&mut nodes, &self.path, true)?;
+        nodes.insert(
+            self.key.clone(),
+            Node::File {
+                data: Arc::new(data),
+                mtime: ctx.now(),
+            },
+        );
+        Ok(())
+    }
+}
+
+/// HDFS read handle: the NameNode lookup happened at `open`; reads stream
+/// from the DataNodes at disk bandwidth.
+struct HdfsInputStream<'a> {
+    fs: &'a Hdfs,
+    path: Path,
+    data: Arc<Vec<u8>>,
+}
+
+impl FsInputStream for HdfsInputStream<'_> {
+    fn size_hint(&self) -> Option<u64> {
+        Some(self.data.len() as u64)
+    }
+
+    fn read_range(&mut self, offset: u64, len: u64, ctx: &mut OpCtx) -> Result<Vec<u8>, FsError> {
+        // Same clamp/416 rule as the object-store backends — one shared
+        // implementation of the range contract for the whole stack.
+        use crate::objectstore::backend::{clamp_range, BackendError};
+        let size = self.data.len() as u64;
+        let (start, end) =
+            clamp_range(&self.path.container, &self.path.key, offset, len, size).map_err(
+                |e| match e {
+                    BackendError::InvalidRange(m) => FsError::InvalidRange(m),
+                    other => FsError::Io(other.to_string()),
+                },
+            )?;
+        let slice = self.data[start..end].to_vec();
+        ctx.add(self.fs.latency.data_time(slice.len() as u64));
+        let path = self.path.clone();
+        ctx.record("open", || format!("{path} [{offset}+{len})"));
+        Ok(slice)
+    }
+
+    fn read_to_end(&mut self, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
+        ctx.add(self.fs.latency.data_time(self.data.len() as u64));
+        let path = self.path.clone();
+        ctx.record("open", || path.to_string());
+        Ok(self.data.clone())
     }
 }
 
@@ -128,60 +258,38 @@ impl FileSystem for Hdfs {
     fn create(
         &self,
         path: &Path,
-        data: Vec<u8>,
         overwrite: bool,
         ctx: &mut OpCtx,
-    ) -> Result<(), FsError> {
-        let mut nodes = self.nodes.lock().unwrap();
-        ctx.add(self.latency.meta_time() + self.latency.data_time(data.len() as u64));
-        ctx.record("create", || format!("{path} ({} bytes)", data.len()));
-        let key = Self::full_key(path);
-        match nodes.get(&key) {
-            Some(Node::Dir) => return Err(FsError::IsADirectory(key)),
-            Some(Node::File { .. }) if !overwrite => {
-                return Err(FsError::AlreadyExists(key));
-            }
-            _ => {}
+    ) -> Result<Box<dyn FsOutputStream + '_>, FsError> {
+        // One NameNode round trip opens the write pipeline; conflicts and
+        // implicit parent creation happen here, before any byte moves.
+        ctx.add(self.latency.meta_time());
+        {
+            let mut nodes = self.nodes.lock().unwrap();
+            Self::validate_and_make_parents(&mut nodes, path, overwrite)?;
         }
-        // Implicitly create parent dirs (Hadoop create() does).
-        if let Some(parent) = path.parent() {
-            let mut cur = path.container.clone();
-            nodes.entry(cur.clone()).or_insert(Node::Dir);
-            for seg in parent.key.split('/').filter(|s| !s.is_empty()) {
-                cur = format!("{cur}/{seg}");
-                match nodes.get(&cur) {
-                    Some(Node::File { .. }) => return Err(FsError::NotADirectory(cur)),
-                    Some(Node::Dir) => {}
-                    None => {
-                        nodes.insert(cur.clone(), Node::Dir);
-                    }
-                }
-            }
-        }
-        nodes.insert(
-            key,
-            Node::File {
-                data: Arc::new(data),
-                mtime: ctx.now(),
-            },
-        );
-        Ok(())
+        Ok(Box::new(HdfsOutputStream {
+            fs: self,
+            path: path.clone(),
+            key: Self::full_key(path),
+            buf: Vec::new(),
+            closed: false,
+        }))
     }
 
-    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
+    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Box<dyn FsInputStream + '_>, FsError> {
+        // NameNode lookup; data streams per read call.
+        ctx.add(self.latency.meta_time());
         let nodes = self.nodes.lock().unwrap();
         let key = Self::full_key(path);
         match nodes.get(&key) {
-            Some(Node::File { data, .. }) => {
-                ctx.add(self.latency.meta_time() + self.latency.data_time(data.len() as u64));
-                ctx.record("open", || path.to_string());
-                Ok(data.clone())
-            }
+            Some(Node::File { data, .. }) => Ok(Box::new(HdfsInputStream {
+                fs: self,
+                path: path.clone(),
+                data: data.clone(),
+            })),
             Some(Node::Dir) => Err(FsError::IsADirectory(key)),
-            None => {
-                ctx.add(self.latency.meta_time());
-                Err(FsError::NotFound(key))
-            }
+            None => Err(FsError::NotFound(key)),
         }
     }
 
@@ -299,9 +407,9 @@ mod tests {
     fn create_open_roundtrip() {
         let fs = Hdfs::new();
         let mut c = ctx();
-        fs.create(&p("hdfs://res/data.txt/part-0"), b"abc".to_vec(), false, &mut c)
+        fs.write_all(&p("hdfs://res/data.txt/part-0"), b"abc".to_vec(), false, &mut c)
             .unwrap();
-        let data = fs.open(&p("hdfs://res/data.txt/part-0"), &mut c).unwrap();
+        let data = fs.read_all(&p("hdfs://res/data.txt/part-0"), &mut c).unwrap();
         assert_eq!(&*data, b"abc");
         // Implicit parent dir exists:
         let st = fs.get_file_status(&p("hdfs://res/data.txt"), &mut c).unwrap();
@@ -316,7 +424,7 @@ mod tests {
         fs.mkdirs(&p("hdfs://res/a/b/c"), &mut c).unwrap();
         assert!(fs.get_file_status(&p("hdfs://res/a/b"), &mut c).unwrap().is_dir);
         // mkdirs through a file fails:
-        fs.create(&p("hdfs://res/f"), vec![], false, &mut c).unwrap();
+        fs.write_all(&p("hdfs://res/f"), vec![], false, &mut c).unwrap();
         assert!(fs.mkdirs(&p("hdfs://res/f/x"), &mut c).is_err());
     }
 
@@ -325,29 +433,29 @@ mod tests {
         let fs = Hdfs::new();
         let mut c = ctx();
         let f = p("hdfs://res/x");
-        fs.create(&f, b"1".to_vec(), false, &mut c).unwrap();
+        fs.write_all(&f, b"1".to_vec(), false, &mut c).unwrap();
         assert!(matches!(
-            fs.create(&f, b"2".to_vec(), false, &mut c),
+            fs.write_all(&f, b"2".to_vec(), false, &mut c),
             Err(FsError::AlreadyExists(_))
         ));
-        fs.create(&f, b"2".to_vec(), true, &mut c).unwrap();
-        assert_eq!(&*fs.open(&f, &mut c).unwrap(), b"2");
+        fs.write_all(&f, b"2".to_vec(), true, &mut c).unwrap();
+        assert_eq!(&*fs.read_all(&f, &mut c).unwrap(), b"2");
     }
 
     #[test]
     fn rename_moves_subtree_atomically() {
         let fs = Hdfs::new();
         let mut c = ctx();
-        fs.create(&p("hdfs://res/t/_tmp/a/part-0"), b"x".to_vec(), false, &mut c)
+        fs.write_all(&p("hdfs://res/t/_tmp/a/part-0"), b"x".to_vec(), false, &mut c)
             .unwrap();
-        fs.create(&p("hdfs://res/t/_tmp/a/part-1"), b"y".to_vec(), false, &mut c)
+        fs.write_all(&p("hdfs://res/t/_tmp/a/part-1"), b"y".to_vec(), false, &mut c)
             .unwrap();
         assert!(fs
             .rename(&p("hdfs://res/t/_tmp/a"), &p("hdfs://res/t/final"), &mut c)
             .unwrap());
-        assert!(fs.open(&p("hdfs://res/t/final/part-0"), &mut c).is_ok());
-        assert!(fs.open(&p("hdfs://res/t/final/part-1"), &mut c).is_ok());
-        assert!(fs.open(&p("hdfs://res/t/_tmp/a/part-0"), &mut c).is_err());
+        assert!(fs.read_all(&p("hdfs://res/t/final/part-0"), &mut c).is_ok());
+        assert!(fs.read_all(&p("hdfs://res/t/final/part-1"), &mut c).is_ok());
+        assert!(fs.read_all(&p("hdfs://res/t/_tmp/a/part-0"), &mut c).is_err());
         // Renaming a missing source is the benign false case.
         assert!(!fs
             .rename(&p("hdfs://res/none"), &p("hdfs://res/other"), &mut c)
@@ -363,7 +471,7 @@ mod tests {
         };
         let fs = Hdfs::with_latency(lat);
         let mut c = ctx();
-        fs.create(&p("hdfs://res/big"), vec![0u8; 10_000], false, &mut c)
+        fs.write_all(&p("hdfs://res/big"), vec![0u8; 10_000], false, &mut c)
             .unwrap();
         let before = c.elapsed;
         fs.rename(&p("hdfs://res/big"), &p("hdfs://res/big2"), &mut c)
@@ -376,8 +484,8 @@ mod tests {
     fn list_status_direct_children_only() {
         let fs = Hdfs::new();
         let mut c = ctx();
-        fs.create(&p("hdfs://res/d/f1"), vec![1], false, &mut c).unwrap();
-        fs.create(&p("hdfs://res/d/sub/f2"), vec![2], false, &mut c).unwrap();
+        fs.write_all(&p("hdfs://res/d/f1"), vec![1], false, &mut c).unwrap();
+        fs.write_all(&p("hdfs://res/d/sub/f2"), vec![2], false, &mut c).unwrap();
         let ls = fs.list_status(&p("hdfs://res/d"), &mut c).unwrap();
         let names: Vec<&str> = ls.iter().map(|s| s.path.name()).collect();
         assert_eq!(names, vec!["f1", "sub"]);
@@ -391,7 +499,7 @@ mod tests {
     fn delete_recursive_guard() {
         let fs = Hdfs::new();
         let mut c = ctx();
-        fs.create(&p("hdfs://res/d/f"), vec![], false, &mut c).unwrap();
+        fs.write_all(&p("hdfs://res/d/f"), vec![], false, &mut c).unwrap();
         assert!(fs.delete(&p("hdfs://res/d"), false, &mut c).is_err());
         assert!(fs.delete(&p("hdfs://res/d"), true, &mut c).unwrap());
         assert!(!fs.exists(&p("hdfs://res/d"), &mut c));
@@ -399,11 +507,67 @@ mod tests {
     }
 
     #[test]
+    fn dropped_stream_leaves_no_file() {
+        // A writer that dies before close: HDFS materialises files at
+        // close, so nothing becomes visible.
+        let fs = Hdfs::new();
+        let mut c = ctx();
+        {
+            let mut out = fs.create(&p("hdfs://res/doomed"), true, &mut c).unwrap();
+            out.write(b"half a part", &mut c).unwrap();
+            // dropped without close
+        }
+        assert!(!fs.exists(&p("hdfs://res/doomed"), &mut c));
+    }
+
+    #[test]
+    fn close_refuses_to_clobber_a_directory() {
+        // A dir that appears at the path between create() and close()
+        // survives; the stream errors instead of corrupting the tree.
+        let fs = Hdfs::new();
+        let mut c = ctx();
+        let mut out = fs.create(&p("hdfs://res/x"), true, &mut c).unwrap();
+        out.write(b"data", &mut c).unwrap();
+        fs.mkdirs(&p("hdfs://res/x"), &mut c).unwrap();
+        assert!(matches!(out.close(&mut c), Err(FsError::IsADirectory(_))));
+        assert!(fs.get_file_status(&p("hdfs://res/x"), &mut c).unwrap().is_dir);
+    }
+
+    #[test]
+    fn range_reads_and_invalid_ranges() {
+        let fs = Hdfs::new();
+        let mut c = ctx();
+        fs.write_all(&p("hdfs://res/f"), (0u8..100).collect(), false, &mut c)
+            .unwrap();
+        let mut input = fs.open(&p("hdfs://res/f"), &mut c).unwrap();
+        assert_eq!(input.size_hint(), Some(100));
+        assert_eq!(input.read_range(10, 5, &mut c).unwrap(), vec![10, 11, 12, 13, 14]);
+        assert!(input.read_range(10, 0, &mut c).unwrap().is_empty());
+        assert_eq!(input.read_range(90, 1000, &mut c).unwrap().len(), 10, "clamped to EOF");
+        assert!(input.read_range(100, 5, &mut c).unwrap().is_empty(), "offset == EOF");
+        assert!(matches!(
+            input.read_range(101, 1, &mut c),
+            Err(FsError::InvalidRange(_))
+        ));
+    }
+
+    #[test]
+    fn streamed_write_equals_whole_buffer_write() {
+        let fs = Hdfs::new();
+        let mut c = ctx();
+        let mut out = fs.create(&p("hdfs://res/streamed"), true, &mut c).unwrap();
+        out.write(b"abc", &mut c).unwrap();
+        out.write(b"def", &mut c).unwrap();
+        out.close(&mut c).unwrap();
+        assert_eq!(&*fs.read_all(&p("hdfs://res/streamed"), &mut c).unwrap(), b"abcdef");
+    }
+
+    #[test]
     fn trace_records_op_sequence() {
         let fs = Hdfs::new();
         let mut c = OpCtx::traced(SimInstant::EPOCH);
         fs.mkdirs(&p("hdfs://res/data.txt/_temporary/0"), &mut c).unwrap();
-        fs.create(&p("hdfs://res/data.txt/_temporary/0/part-0"), vec![0], false, &mut c)
+        fs.write_all(&p("hdfs://res/data.txt/_temporary/0/part-0"), vec![0], false, &mut c)
             .unwrap();
         fs.rename(
             &p("hdfs://res/data.txt/_temporary/0/part-0"),

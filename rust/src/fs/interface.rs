@@ -1,14 +1,28 @@
-//! The Hadoop `FileSystem` trait and the per-task operation context.
+//! The Hadoop `FileSystem` trait, its streaming I/O handles, and the
+//! per-task operation context.
 //!
 //! Every filesystem call threads an [`OpCtx`], which (a) advances the
 //! caller's position on the virtual clock as storage operations complete,
 //! and (b) optionally records a human-readable trace — this is how the
 //! harness regenerates the paper's Tables 1 and 3 (operation sequences).
+//!
+//! I/O is stream-shaped, mirroring Hadoop's `FSDataOutputStream` /
+//! `FSDataInputStream`: [`FileSystem::create`] hands back an
+//! [`FsOutputStream`] and [`FileSystem::open`] an [`FsInputStream`]. *How*
+//! bytes move is the connectors' differentiator (paper §3.3): Hadoop-Swift
+//! and base S3a spool every [`FsOutputStream::write`] to simulated local
+//! disk and upload at [`FsOutputStream::close`]; S3a fast-upload flushes
+//! full multipart parts *during* `write`; Stocator streams a single
+//! chunked-transfer PUT from the first byte. Whole-buffer call shapes
+//! survive as the default-method wrappers [`FileSystem::write_all`] /
+//! [`FileSystem::read_all`], which are exactly `create`+`write`+`close`
+//! and `open`+`read_to_end`, so accounting is identical either way.
 
 use super::path::Path;
 use super::status::FileStatus;
 use crate::simclock::{SimDuration, SimInstant};
 use std::fmt;
+use std::sync::Arc;
 
 /// Filesystem-level errors (connector faults map store errors into these).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -17,6 +31,8 @@ pub enum FsError {
     AlreadyExists(String),
     NotADirectory(String),
     IsADirectory(String),
+    /// A ranged read whose offset lies beyond end-of-file (HTTP 416).
+    InvalidRange(String),
     Io(String),
 }
 
@@ -27,6 +43,7 @@ impl fmt::Display for FsError {
             FsError::AlreadyExists(p) => write!(f, "already exists: {p}"),
             FsError::NotADirectory(p) => write!(f, "not a directory: {p}"),
             FsError::IsADirectory(p) => write!(f, "is a directory: {p}"),
+            FsError::InvalidRange(m) => write!(f, "invalid range: {m}"),
             FsError::Io(m) => write!(f, "io error: {m}"),
         }
     }
@@ -75,6 +92,16 @@ impl OpCtx {
         self.elapsed += d;
     }
 
+    /// Charge the cost of growing a spool/pipeline from `old` to `new`
+    /// cumulative bytes under a cumulative cost function. Telescoping: the
+    /// sum over any sequence of writes equals `cost(total)`, so virtual
+    /// time never depends on how callers chunk their writes — THE
+    /// invariant the buffer-to-disk output streams rely on.
+    #[inline]
+    pub fn add_spool_delta(&mut self, old: u64, new: u64, cost: impl Fn(u64) -> SimDuration) {
+        self.add(cost(new).saturating_sub(cost(old)));
+    }
+
     /// Record a trace line (no-op unless tracing).
     pub fn record(&mut self, actor: &str, line: impl FnOnce() -> String) {
         if let Some(t) = &mut self.trace {
@@ -88,10 +115,58 @@ impl OpCtx {
     }
 }
 
+/// A writable file handle, mirroring Hadoop's `FSDataOutputStream`.
+///
+/// Contract:
+///
+/// * [`write`](FsOutputStream::write) appends bytes; each connector pays
+///   its write-path cost here, on the caller's virtual clock (local-disk
+///   spooling, multipart part flushes, …).
+/// * [`close`](FsOutputStream::close) finishes the write — the object
+///   becomes durable/visible per the connector's semantics. Call it
+///   exactly once; `write` or `close` after `close` is an error.
+/// * **Dropping a stream without `close` models an executor crash
+///   mid-write** — the real abort path. What (if anything) remains
+///   visible is connector-defined: buffer-to-disk connectors lose the
+///   local spool (nothing reaches the store), S3a fast-upload strands an
+///   orphaned multipart upload, and Stocator's chunked-transfer PUT
+///   leaves a truncated object at the target name (the §3.2 fail-stop
+///   case its read-side dedup/manifest tolerates).
+pub trait FsOutputStream {
+    /// Append `data` to the stream.
+    fn write(&mut self, data: &[u8], ctx: &mut OpCtx) -> Result<(), FsError>;
+
+    /// Finish the write and install the object.
+    fn close(&mut self, ctx: &mut OpCtx) -> Result<(), FsError>;
+}
+
+/// A readable file handle, mirroring Hadoop's `FSDataInputStream`.
+///
+/// Handles are cheap: connectors that HEAD-on-open do so in
+/// [`FileSystem::open`]; Stocator's handle is fully lazy (§3.4 — no HEAD
+/// before GET) and issues its first request on the first read. Each read
+/// call issues its own GET (full or ranged) — readers are stateless
+/// between calls, there is no cursor.
+pub trait FsInputStream {
+    /// The object's size, when the connector already knows it (learned at
+    /// `open` or from a previous read). `None` until the lazy connectors
+    /// issue their first request.
+    fn size_hint(&self) -> Option<u64>;
+
+    /// Read bytes `[offset, offset + len)`, clamped to end-of-file. An
+    /// offset strictly past EOF is [`FsError::InvalidRange`]; a
+    /// zero-length range is valid and returns no bytes.
+    fn read_range(&mut self, offset: u64, len: u64, ctx: &mut OpCtx)
+        -> Result<Vec<u8>, FsError>;
+
+    /// Read the whole object.
+    fn read_to_end(&mut self, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError>;
+}
+
 /// The Hadoop FileSystem interface (paper Fig. 1) — the contract all three
-/// connectors and the HDFS baseline implement. File writes are modelled as
-/// whole-file `create` (Spark's output streams are closed exactly once per
-/// part; buffering behaviour is a connector-internal timing matter).
+/// connectors and the HDFS baseline implement. `create`/`open` hand back
+/// streaming handles; the whole-buffer wrappers [`FileSystem::write_all`]
+/// and [`FileSystem::read_all`] are thin default methods over them.
 pub trait FileSystem: Send + Sync {
     /// URI scheme this filesystem serves (e.g. `swift2d`).
     fn scheme(&self) -> &str;
@@ -99,18 +174,40 @@ pub trait FileSystem: Send + Sync {
     /// Create all missing directories down to `path`.
     fn mkdirs(&self, path: &Path, ctx: &mut OpCtx) -> Result<(), FsError>;
 
-    /// Create a file with the given content. `overwrite=false` fails on an
-    /// existing file.
+    /// Open a file for writing. `overwrite=false` fails on an existing
+    /// file (checked here, before any byte is written — not re-checked at
+    /// `close`, so the no-clobber guarantee covers the create instant,
+    /// as with Hadoop's lease-at-create; the simulator drives each path
+    /// from one writer at a time). The write-path semantics live in the
+    /// returned stream.
     fn create(
+        &self,
+        path: &Path,
+        overwrite: bool,
+        ctx: &mut OpCtx,
+    ) -> Result<Box<dyn FsOutputStream + '_>, FsError>;
+
+    /// Open a file for reading.
+    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<Box<dyn FsInputStream + '_>, FsError>;
+
+    /// Whole-buffer write convenience: `create` + one `write` + `close`.
+    /// Issues exactly the REST ops of the streaming path.
+    fn write_all(
         &self,
         path: &Path,
         data: Vec<u8>,
         overwrite: bool,
         ctx: &mut OpCtx,
-    ) -> Result<(), FsError>;
+    ) -> Result<(), FsError> {
+        let mut out = self.create(path, overwrite, ctx)?;
+        out.write(&data, ctx)?;
+        out.close(ctx)
+    }
 
-    /// Read a whole file.
-    fn open(&self, path: &Path, ctx: &mut OpCtx) -> Result<std::sync::Arc<Vec<u8>>, FsError>;
+    /// Whole-buffer read convenience: `open` + `read_to_end`.
+    fn read_all(&self, path: &Path, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
+        self.open(path, ctx)?.read_to_end(ctx)
+    }
 
     /// Status of a file or directory.
     fn get_file_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError>;

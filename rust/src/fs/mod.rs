@@ -3,15 +3,24 @@
 //! Spark talks to storage through the Hadoop Map Reduce Client Core
 //! (HMRCC), which talks to a *connector* implementing the Hadoop
 //! `FileSystem` interface. This module defines that interface
-//! ([`interface::FileSystem`]), Hadoop-style paths ([`path::Path`]) and
-//! file statuses, plus an in-memory HDFS-like filesystem used for the
-//! paper's Table 1 trace and the copy-via-HDFS ablation.
+//! ([`interface::FileSystem`]) and its streaming I/O handles
+//! ([`interface::FsOutputStream`] / [`interface::FsInputStream`] —
+//! Hadoop's `FSDataOutputStream`/`FSDataInputStream` analogues),
+//! Hadoop-style paths ([`path::Path`]) and file statuses, plus an
+//! in-memory HDFS-like filesystem used for the paper's Table 1 trace and
+//! the copy-via-HDFS ablation.
+//!
+//! The stream shape is what lets each connector express its paper-§3.3
+//! write path honestly — spool-then-PUT, multipart-during-write, or
+//! single chunked-transfer PUT — and what makes *dropping a stream
+//! without close* (an executor crash) a first-class, connector-defined
+//! event instead of a fraction-of-a-buffer hack.
 
 pub mod path;
 pub mod status;
 pub mod interface;
 pub mod hdfs;
 
-pub use interface::{FileSystem, FsError, OpCtx};
+pub use interface::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx};
 pub use path::Path;
 pub use status::FileStatus;

@@ -5,8 +5,9 @@
 //!
 //! * [`objectstore`] — an eventually-consistent cloud object store with
 //!   REST-operation accounting, a virtual-time latency model and
-//!   per-provider pricing models. Storage is pluggable behind the
-//!   [`objectstore::Backend`] trait: an N-way sharded in-memory map
+//!   per-provider pricing models. GETs may be **ranged** (HTTP Range
+//!   semantics, priced per returned byte). Storage is pluggable behind
+//!   the [`objectstore::Backend`] trait: an N-way sharded in-memory map
 //!   (default; one shard reproduces the legacy single-global-lock layout)
 //!   or a persistent local-filesystem layout, selected with
 //!   `--backend mem|sharded[:N]|fs[:DIR]` on the CLI. Op counts, byte
@@ -14,7 +15,14 @@
 //!   front end owns them — so backends trade only wall-clock concurrency
 //!   and durability.
 //! * [`fs`] — the Hadoop `FileSystem` abstraction (paths, statuses, the
-//!   trait all connectors implement) plus an in-memory HDFS-like baseline.
+//!   trait all connectors implement) plus an in-memory HDFS-like
+//!   baseline. I/O is **stream-shaped** (`FsOutputStream` /
+//!   `FsInputStream`, mirroring Hadoop's FSData streams): connectors
+//!   express their §3.3 write paths — spool-then-PUT,
+//!   multipart-during-write, single chunked-transfer PUT — byte by byte
+//!   on the virtual clock, dropping a stream without `close` is the
+//!   executor-crash abort path, and partial reads (`read_range`) reach
+//!   all the way down to the backends.
 //! * [`connectors`] — the three storage connectors under study:
 //!   Hadoop-Swift, S3a (with optional fast upload) and Stocator itself.
 //! * [`committer`] — Hadoop's `FileOutputCommitter` algorithm versions 1

@@ -290,6 +290,31 @@ impl Backend for LocalFsBackend {
         })
     }
 
+    fn get_range(
+        &self,
+        container: &str,
+        key: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<(Vec<u8>, ObjectStat), BackendError> {
+        use std::io::{Read, Seek, SeekFrom};
+        let stat = self.head(container, key)?;
+        let (start, end) = super::clamp_range(container, key, offset, len, stat.size)?;
+        let take = end - start;
+        if take == 0 {
+            return Ok((Vec::new(), stat));
+        }
+        // Real ranged IO: seek + bounded read, never the whole file.
+        let mut f = std::fs::File::open(self.data_path(container, key))
+            .map_err(|e| io_err("opening object for ranged read", e))?;
+        f.seek(SeekFrom::Start(start as u64))
+            .map_err(|e| io_err("seeking object", e))?;
+        let mut out = vec![0u8; take];
+        f.read_exact(&mut out)
+            .map_err(|e| io_err("ranged read", e))?;
+        Ok((out, stat))
+    }
+
     fn head(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError> {
         self.check_container(container)?;
         let size = match std::fs::metadata(self.data_path(container, key)) {

@@ -101,6 +101,23 @@ impl Backend for ShardedMemBackend {
             .ok_or_else(|| BackendError::no_such_key(container, key))
     }
 
+    fn get_range(
+        &self,
+        container: &str,
+        key: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<(Vec<u8>, ObjectStat), BackendError> {
+        self.check_container(container)?;
+        let shard = self.shards[self.shard_idx(container, key)].lock().unwrap();
+        let obj = shard
+            .get(container)
+            .and_then(|m| m.get(key))
+            .ok_or_else(|| BackendError::no_such_key(container, key))?;
+        let (start, end) = super::clamp_range(container, key, offset, len, obj.size())?;
+        Ok((obj.data[start..end].to_vec(), ObjectStat::of(obj)))
+    }
+
     fn head(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError> {
         self.check_container(container)?;
         let shard = self.shards[self.shard_idx(container, key)].lock().unwrap();

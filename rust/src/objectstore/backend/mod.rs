@@ -33,6 +33,11 @@
 //!   depends on (§2.1) are synthesised above this layer by the front
 //!   end's visibility overlay, which delays newly created names and
 //!   retains ghosts of deleted ones. Backends therefore never model lag.
+//! * **Ranged reads follow HTTP semantics.** [`Backend::get_range`]
+//!   returns `[offset, offset+len)` clamped to EOF together with the full
+//!   object's stat; an offset strictly past EOF is
+//!   [`BackendError::InvalidRange`] (see [`clamp_range`], the shared
+//!   implementation of the rule).
 //! * **ETags are content hashes.** Backends must tag objects with
 //!   [`crate::objectstore::object::sampled_etag`] over the payload so the
 //!   same bytes produce the same ETag on every backend (the conformance
@@ -74,6 +79,9 @@ pub enum BackendError {
     ContainerAlreadyExists(String),
     NoSuchUpload(u64),
     InvalidRequest(String),
+    /// A ranged read whose offset lies strictly past end-of-file (the
+    /// HTTP 416 case; see [`clamp_range`] for the exact contract).
+    InvalidRange(String),
     /// Real-IO failure (LocalFsBackend); the simulated REST space has no
     /// equivalent, so the front end surfaces it as a 500.
     Io(String),
@@ -87,6 +95,7 @@ impl fmt::Display for BackendError {
             BackendError::ContainerAlreadyExists(c) => write!(f, "container exists: {c}"),
             BackendError::NoSuchUpload(id) => write!(f, "no such upload: {id}"),
             BackendError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            BackendError::InvalidRange(m) => write!(f, "invalid range: {m}"),
             BackendError::Io(m) => write!(f, "backend io error: {m}"),
         }
     }
@@ -101,6 +110,32 @@ impl BackendError {
     pub fn no_such_key(container: &str, key: &str) -> Self {
         BackendError::NoSuchKey(format!("{container}/{key}"))
     }
+}
+
+/// The shared ranged-read contract (HTTP Range semantics), used by every
+/// backend so [`Backend::get_range`] behaves identically across them:
+///
+/// * ranges are **clamped to EOF** — `offset + len` may exceed the object
+///   size and simply returns fewer bytes;
+/// * `offset == size` is valid and yields an empty slice;
+/// * `offset > size` is [`BackendError::InvalidRange`] (HTTP 416);
+/// * a zero-length range is valid and returns no bytes.
+///
+/// Returns the half-open byte bounds `[start, end)` to read.
+pub fn clamp_range(
+    container: &str,
+    key: &str,
+    offset: u64,
+    len: u64,
+    size: u64,
+) -> Result<(usize, usize), BackendError> {
+    if offset > size {
+        return Err(BackendError::InvalidRange(format!(
+            "{container}/{key}: offset {offset} past EOF (size {size})"
+        )));
+    }
+    let end = offset.saturating_add(len).min(size);
+    Ok((offset as usize, end as usize))
 }
 
 /// HEAD-shaped view of a stored object: everything but the data.
@@ -162,6 +197,19 @@ pub trait Backend: Send + Sync {
     fn put(&self, container: &str, key: &str, obj: Object) -> Result<bool, BackendError>;
 
     fn get(&self, container: &str, key: &str) -> Result<Object, BackendError>;
+
+    /// Ranged read: bytes `[offset, offset + len)` of an object plus its
+    /// **full** stat (HTTP `Content-Range` semantics: the stat's `size` is
+    /// the whole object's, not the slice's). Range handling must follow
+    /// [`clamp_range`]; the conformance suite checks mid-object,
+    /// zero-length, exact-EOF and past-EOF cases against every backend.
+    fn get_range(
+        &self,
+        container: &str,
+        key: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<(Vec<u8>, ObjectStat), BackendError>;
 
     fn head(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError>;
 

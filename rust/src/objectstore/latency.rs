@@ -124,14 +124,41 @@ impl LatencyModel {
         bytes.saturating_mul(self.data_scale)
     }
 
-    /// Transfer time for `bytes` *simulated* bytes over the per-stream link.
+    /// Transfer time for `logical` (already-scaled) bytes over the
+    /// per-stream link.
     #[inline]
-    pub fn transfer_time(&self, bytes: u64) -> SimDuration {
+    fn transfer_of_logical(&self, logical: u64) -> SimDuration {
         if self.stream_bw == u64::MAX {
             return SimDuration::ZERO;
         }
-        let logical = self.scaled_bytes(bytes);
         SimDuration::from_micros(logical.saturating_mul(1_000_000) / self.stream_bw)
+    }
+
+    /// Transfer time for `bytes` *simulated* bytes over the per-stream link.
+    #[inline]
+    pub fn transfer_time(&self, bytes: u64) -> SimDuration {
+        self.transfer_of_logical(self.scaled_bytes(bytes))
+    }
+
+    /// Scale a ranged-read `slice` of an object whose full size is
+    /// `full_size`. Whether paper-scaling applies is a property of the
+    /// *object* (a slice of a dataset part is dataset bytes, however small
+    /// the slice), so the threshold test uses the full size and the
+    /// multiplier then applies to the slice.
+    #[inline]
+    pub fn scaled_range_bytes(&self, slice: u64, full_size: u64) -> u64 {
+        if full_size < self.scale_threshold {
+            return slice;
+        }
+        slice.saturating_mul(self.data_scale)
+    }
+
+    /// Duration of a ranged GET returning `slice` simulated bytes of a
+    /// `full_size`-byte object.
+    #[inline]
+    pub fn range_get_duration(&self, slice: u64, full_size: u64) -> SimDuration {
+        SimDuration::from_micros(self.get_us)
+            + self.transfer_of_logical(self.scaled_range_bytes(slice, full_size))
     }
 
     /// Local-disk write/read time (buffer-to-disk connectors).
@@ -213,6 +240,22 @@ mod tests {
         let t2 = ms.op_duration(OpKind::GetObject, 26_000, 0);
         // 26 KB scaled 1000x = same as above.
         assert_eq!(t2, t1);
+    }
+
+    #[test]
+    fn range_scaling_follows_the_full_object_size() {
+        let m = LatencyModel::paper_testbed_scaled(4096);
+        // A small slice of a big (scaled) data object IS dataset bytes:
+        // the multiplier applies even though the slice is sub-threshold.
+        assert_eq!(m.scaled_range_bytes(1_000, 32 * 1024), 1_000 * 4096);
+        // A slice of a small metadata object keeps its real size.
+        assert_eq!(m.scaled_range_bytes(10, 100), 10);
+        // Whole-object ranges agree with the plain GET scaling.
+        assert_eq!(m.scaled_range_bytes(32 * 1024, 32 * 1024), m.scaled_bytes(32 * 1024));
+        assert_eq!(
+            m.range_get_duration(32 * 1024, 32 * 1024),
+            m.op_duration(OpKind::GetObject, 32 * 1024, 0)
+        );
     }
 
     #[test]

@@ -35,6 +35,8 @@ pub enum StoreError {
     ContainerAlreadyExists(String),
     NoSuchUpload(u64),
     InvalidRequest(String),
+    /// Ranged GET with an offset strictly past end-of-file (HTTP 416).
+    InvalidRange(String),
     /// Real-IO failure in a persistent backend (no REST analogue).
     Backend(String),
 }
@@ -47,6 +49,7 @@ impl fmt::Display for StoreError {
             StoreError::ContainerAlreadyExists(c) => write!(f, "409 ContainerExists: {c}"),
             StoreError::NoSuchUpload(id) => write!(f, "404 NoSuchUpload: {id}"),
             StoreError::InvalidRequest(m) => write!(f, "400 InvalidRequest: {m}"),
+            StoreError::InvalidRange(m) => write!(f, "416 InvalidRange: {m}"),
             StoreError::Backend(m) => write!(f, "500 BackendIo: {m}"),
         }
     }
@@ -62,6 +65,7 @@ impl From<BackendError> for StoreError {
             BackendError::ContainerAlreadyExists(c) => StoreError::ContainerAlreadyExists(c),
             BackendError::NoSuchUpload(id) => StoreError::NoSuchUpload(id),
             BackendError::InvalidRequest(m) => StoreError::InvalidRequest(m),
+            BackendError::InvalidRange(m) => StoreError::InvalidRange(m),
             BackendError::Io(m) => StoreError::Backend(m),
         }
     }
@@ -186,8 +190,13 @@ impl ObjectStore {
     /// is only consulted when jitter is enabled, so the hot path takes no
     /// lock here.
     fn charge(&self, kind: OpKind, bytes: u64, entries: usize) -> SimDuration {
+        self.charge_duration(kind, self.config.latency.op_duration(kind, bytes, entries))
+    }
+
+    /// Record the op and jitter an explicitly computed duration (ranged
+    /// GETs price themselves, since scaling depends on the full object).
+    fn charge_duration(&self, kind: OpKind, d: SimDuration) -> SimDuration {
         self.counters.record_op(kind);
-        let d = self.config.latency.op_duration(kind, bytes, entries);
         if self.config.latency.jitter == 0.0 {
             d
         } else {
@@ -292,6 +301,48 @@ impl ObjectStore {
                             metadata: obj.metadata,
                             created_at: obj.created_at,
                         },
+                    }),
+                    d,
+                )
+            }
+            Err(e) => {
+                let d = self.charge(OpKind::GetObject, 0, 0);
+                (Err(e.into()), d)
+            }
+        }
+    }
+
+    /// GET Object with an HTTP `Range` header: bytes `[offset, offset+len)`
+    /// clamped to EOF (an offset strictly past EOF is a 416). Still one
+    /// GET REST op, but transfer time and byte accounting cover only the
+    /// returned slice — this is what makes partial reads (e.g. sampling a
+    /// part's prefix) cheaper than whole-object GETs on the virtual clock.
+    /// Whether paper-scaling applies is decided by the FULL object size
+    /// (see [`LatencyModel::scaled_range_bytes`]), so a small slice of a
+    /// scaled dataset part is still charged as dataset bytes. The result's
+    /// `head` describes the FULL object (`Content-Range` total), so a
+    /// ranged GET still carries the metadata (§3.4 applies to ranged
+    /// reads too).
+    pub fn get_object_range(
+        &self,
+        container: &str,
+        key: &str,
+        offset: u64,
+        len: u64,
+    ) -> (Result<GetResult, StoreError>, SimDuration) {
+        match self.backend.get_range(container, key, offset, len) {
+            Ok((data, stat)) => {
+                let n = data.len() as u64;
+                let d = self.charge_duration(
+                    OpKind::GetObject,
+                    self.config.latency.range_get_duration(n, stat.size),
+                );
+                self.counters
+                    .record_read(self.config.latency.scaled_range_bytes(n, stat.size));
+                (
+                    Ok(GetResult {
+                        data: Arc::new(data),
+                        head: stat.into(),
                     }),
                     d,
                 )
@@ -614,6 +665,99 @@ mod tests {
                 Some("stocator-1.0")
             );
         }
+    }
+
+    #[test]
+    fn ranged_get_on_every_backend() {
+        for s in all_backend_stores() {
+            s.put_object("res", "k", (0u8..200).collect(), Metadata::new(), SimInstant(0))
+                .0
+                .unwrap();
+            let (r, _) = s.get_object_range("res", "k", 50, 10);
+            let r = r.unwrap();
+            assert_eq!(
+                &*r.data,
+                &(50u8..60).collect::<Vec<u8>>()[..],
+                "backend {}",
+                s.backend_name()
+            );
+            assert_eq!(r.head.size, 200, "head carries the FULL object size");
+            // Past-EOF offset is a 416; a missing key stays a 404.
+            assert!(matches!(
+                s.get_object_range("res", "k", 201, 1).0,
+                Err(StoreError::InvalidRange(_))
+            ));
+            assert!(matches!(
+                s.get_object_range("res", "nope", 0, 1).0,
+                Err(StoreError::NoSuchKey(_))
+            ));
+            // Every ranged read (failed ones included) is one GET op;
+            // bytes_read covers only the returned slice.
+            let c = s.counters();
+            assert_eq!(c.get(OpKind::GetObject), 3);
+            assert_eq!(c.bytes_read, 10);
+        }
+    }
+
+    #[test]
+    fn ranged_get_charges_slice_transfer_time() {
+        let cfg = StoreConfig {
+            latency: LatencyModel::paper_testbed(),
+            consistency: ConsistencyModel::strong(),
+            min_part_size: 0,
+            seed: 0,
+            backend: BackendKind::default(),
+        };
+        let s = ObjectStore::new(cfg);
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        s.put_object("res", "k", vec![0u8; 52_000_000], Metadata::new(), SimInstant(0))
+            .0
+            .unwrap();
+        let (_, d_full) = s.get_object("res", "k");
+        let (r, d_half) = s.get_object_range("res", "k", 0, 26_000_000);
+        assert!(r.is_ok());
+        // 26 MB at 26 MB/s = 1s + 25ms first-byte latency.
+        assert_eq!(d_half.as_micros(), 25_000 + 1_000_000);
+        assert!(d_full > d_half, "partial read must cost less than a full GET");
+    }
+
+    #[test]
+    fn ranged_get_scales_by_the_full_object_size() {
+        // A sub-threshold slice of a scaled dataset part is still dataset
+        // bytes: the data_scale multiplier must apply.
+        let cfg = StoreConfig {
+            latency: LatencyModel {
+                data_scale: 1000,
+                scale_threshold: 64,
+                ..LatencyModel::instant()
+            },
+            consistency: ConsistencyModel::strong(),
+            min_part_size: 0,
+            seed: 0,
+            backend: BackendKind::default(),
+        };
+        let s = ObjectStore::new(cfg);
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        s.put_object("res", "part", vec![0u8; 100], Metadata::new(), SimInstant(0))
+            .0
+            .unwrap();
+        s.put_object("res", "meta", vec![0u8; 10], Metadata::new(), SimInstant(0))
+            .0
+            .unwrap();
+        let before = s.counters();
+        s.get_object_range("res", "part", 0, 5).0.unwrap();
+        assert_eq!(
+            s.counters().since(&before).bytes_read,
+            5 * 1000,
+            "slice of a scaled part reads paper-scale bytes"
+        );
+        let before = s.counters();
+        s.get_object_range("res", "meta", 0, 5).0.unwrap();
+        assert_eq!(
+            s.counters().since(&before).bytes_read,
+            5,
+            "slice of a metadata object keeps its real size"
+        );
     }
 
     #[test]

@@ -349,7 +349,7 @@ impl Driver {
                 }
                 None => Vec::new(),
             };
-            let truncate_write = match &fault {
+            let drop_stream_after = match &fault {
                 Some(FaultKind::CrashAfterPartialWrite { fraction }) => Some(*fraction),
                 _ => None,
             };
@@ -360,7 +360,7 @@ impl Driver {
                 attempt: &tac,
                 compute: &self.compute,
                 shuffle_in,
-                truncate_write,
+                drop_stream_after,
             };
             let body = &job.tasks[task_id as usize];
             body(&mut run)

@@ -9,8 +9,10 @@ use std::collections::HashMap;
 pub enum FaultKind {
     /// The attempt crashes before writing anything.
     CrashBeforeWrite,
-    /// The attempt writes a truncated part (`fraction` of the real output)
-    /// and then crashes — no commit, no abort (the executor died).
+    /// The attempt streams `fraction` of its output and then crashes: its
+    /// output stream is dropped without `close` — no commit, no abort
+    /// (the executor died). Whether a truncated object survives is the
+    /// connector's write-path semantics.
     CrashAfterPartialWrite { fraction: f64 },
     /// The attempt runs but takes `extra` longer than it should — the
     /// speculation trigger.

@@ -73,10 +73,14 @@ pub struct TaskRun<'a> {
     pub compute: &'a ComputeModel,
     /// Reduce-side shuffle input for this task's partition.
     pub shuffle_in: Vec<Arc<Vec<u8>>>,
-    /// Fault injection: when set, the next `write_part` writes only this
-    /// fraction of its data and then fails, emulating an output stream cut
-    /// short by an executor crash.
-    pub truncate_write: Option<f64>,
+    /// Fault injection: when set, the next `write_part` streams only this
+    /// fraction of its output and then **drops the stream without
+    /// `close`** — the real executor-crash abort path. What (if anything)
+    /// remains visible is the connector's semantics: Stocator's chunked
+    /// PUT leaves a truncated object at the target name, buffer-to-disk
+    /// connectors lose the local spool, fast-upload strands an orphaned
+    /// multipart upload.
+    pub drop_stream_after: Option<f64>,
 }
 
 impl<'a> TaskRun<'a> {
@@ -86,20 +90,23 @@ impl<'a> TaskRun<'a> {
         self.ctx.add(d);
     }
 
-    /// Write this task's output part through the commit protocol.
+    /// Stream this task's output part through the commit protocol.
     pub fn write_part(&mut self, basename: &str, data: Vec<u8>) -> Result<u64, FsError> {
-        if let Some(fraction) = self.truncate_write {
-            // Injected crash mid-stream: a truncated object lands at the
-            // connector's target name, then the attempt dies.
+        let mut out = self
+            .committer
+            .create_part(self.fs, self.attempt, basename, self.ctx)?;
+        if let Some(fraction) = self.drop_stream_after {
+            // Injected crash mid-stream: part of the output goes onto the
+            // wire, then the executor dies — the stream is dropped, never
+            // closed.
             let cut = ((data.len() as f64) * fraction).floor() as usize;
-            let partial = data[..cut.min(data.len())].to_vec();
-            self.committer
-                .write_part(self.fs, self.attempt, basename, partial, self.ctx)?;
-            return Err(FsError::Io("injected crash after partial write".into()));
+            out.write(&data[..cut.min(data.len())], self.ctx)?;
+            drop(out);
+            return Err(FsError::Io("injected crash mid-stream".into()));
         }
         let n = data.len() as u64;
-        self.committer
-            .write_part(self.fs, self.attempt, basename, data, self.ctx)?;
+        out.write(&data, self.ctx)?;
+        out.close(self.ctx)?;
         Ok(n)
     }
 

@@ -16,7 +16,7 @@ pub fn run(env: &mut WorkloadEnv, input: &str, output: &str) -> WorkloadReport {
         .map(|(path, _)| {
             let path = path.clone();
             body(move |run| {
-                let data = run.fs.open(&path, run.ctx)?;
+                let data = run.fs.open(&path, run.ctx)?.read_to_end(run.ctx)?;
                 run.charge_compute(data.len() as u64);
                 let name = run.part_basename();
                 let written = run.write_part(&name, data.as_ref().clone())?;
@@ -49,7 +49,9 @@ pub fn run(env: &mut WorkloadEnv, input: &str, output: &str) -> WorkloadReport {
                     if st.is_dir || st.path.name().starts_with('_') {
                         continue;
                     }
-                    out.push(fs.open(&st.path, ctx).map_err(|e| e.to_string())?.as_ref().clone());
+                    let mut stream = fs.open(&st.path, ctx).map_err(|e| e.to_string())?;
+                    let data = stream.read_to_end(ctx).map_err(|e| e.to_string())?;
+                    out.push(data.as_ref().clone());
                 }
                 Ok(out)
             };

@@ -38,7 +38,7 @@ pub fn run(env: &mut WorkloadEnv, dataset: &str, expected_lines: u64) -> Workloa
             let path = path.clone();
             let kernels = kernels.clone();
             body(move |run| {
-                let data = run.fs.open(&path, run.ctx)?;
+                let data = run.fs.open(&path, run.ctx)?.read_to_end(run.ctx)?;
                 run.charge_compute(data.len() as u64);
                 let mut lines = 0i64;
                 for chunk in data.chunks(CHUNK) {

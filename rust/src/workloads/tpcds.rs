@@ -88,7 +88,7 @@ fn run_query(
             let kernels = kernels.clone();
             let bc = bc.clone();
             body(move |run| {
-                let data = run.fs.open(&path, run.ctx)?;
+                let data = run.fs.open(&path, run.ctx)?.read_to_end(run.ctx)?;
                 run.charge_compute(data.len() as u64);
                 let rg = RowGroup::decode(&data)
                     .map_err(|e| crate::fs::FsError::Io(format!("{path}: {e}")))?;

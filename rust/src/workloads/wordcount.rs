@@ -64,7 +64,7 @@ pub fn run(env: &mut WorkloadEnv, input: &str, output: &str, expected_words: u64
             let path = path.clone();
             let kernels = kernels.clone();
             body(move |run| {
-                let data = run.fs.open(&path, run.ctx)?;
+                let data = run.fs.open(&path, run.ctx)?.read_to_end(run.ctx)?;
                 run.charge_compute(data.len() as u64);
                 let text = String::from_utf8_lossy(&data);
                 let tokens: Vec<i32> = text.split_whitespace().map(token_id).collect();
@@ -171,7 +171,8 @@ fn validate(
             if st.is_dir || st.path.name().starts_with('_') {
                 continue;
             }
-            let data = fs.open(&st.path, ctx).map_err(|e| e.to_string())?;
+            let mut stream = fs.open(&st.path, ctx).map_err(|e| e.to_string())?;
+            let data = stream.read_to_end(ctx).map_err(|e| e.to_string())?;
             for line in String::from_utf8_lossy(&data).lines() {
                 let (_, c) = line.split_once(',').ok_or("bad output line")?;
                 sum += c.parse::<u64>().map_err(|e| e.to_string())?;

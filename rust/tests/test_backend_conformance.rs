@@ -1,6 +1,6 @@
 //! Backend conformance: one shared suite asserting the `Backend` trait
-//! contract (put/get/head/list-pagination/delete/multipart/ETag
-//! round-trip), instantiated against every backend via a macro — plus
+//! contract (put/get/ranged-get/head/list-pagination/delete/multipart/
+//! ETag round-trip), instantiated against every backend via a macro — plus
 //! fs-only persistence checks and the front-end invariance criterion:
 //! the same workload issues the same REST ops on every backend.
 
@@ -144,6 +144,42 @@ fn check_delete(b: &dyn Backend) {
     assert_eq!(b.live_bytes("res"), 0);
 }
 
+fn check_get_range_contract(b: &dyn Backend) {
+    b.create_container("res").unwrap();
+    let payload: Vec<u8> = (0u8..100).collect();
+    b.put("res", "d/obj", obj(&payload, 3)).unwrap();
+    // Mid-object slice, with the FULL object's stat (Content-Range total).
+    let (bytes, stat) = b.get_range("res", "d/obj", 10, 5).unwrap();
+    assert_eq!(bytes, &payload[10..15]);
+    assert_eq!(stat.size, 100, "stat must carry the full size");
+    assert_eq!(stat.etag, obj(&payload, 9).etag, "stat carries the object etag");
+    // Zero-length range: valid, empty.
+    let (bytes, _) = b.get_range("res", "d/obj", 10, 0).unwrap();
+    assert!(bytes.is_empty());
+    // Exact-EOF range.
+    let (bytes, _) = b.get_range("res", "d/obj", 90, 10).unwrap();
+    assert_eq!(bytes, &payload[90..100]);
+    // Over-long ranges clamp to EOF (HTTP semantics).
+    let (bytes, _) = b.get_range("res", "d/obj", 90, 1_000).unwrap();
+    assert_eq!(bytes, &payload[90..100]);
+    // offset == size: valid, empty, whatever the length.
+    let (bytes, _) = b.get_range("res", "d/obj", 100, 7).unwrap();
+    assert!(bytes.is_empty());
+    // offset strictly past EOF: InvalidRange, not Io, not NoSuchKey.
+    assert!(matches!(
+        b.get_range("res", "d/obj", 101, 1),
+        Err(BackendError::InvalidRange(_))
+    ));
+    // Missing key stays NoSuchKey even with a bad range.
+    assert!(matches!(
+        b.get_range("res", "missing", 9_999, 1),
+        Err(BackendError::NoSuchKey(_))
+    ));
+    // Whole object via one range.
+    let (bytes, _) = b.get_range("res", "d/obj", 0, 100).unwrap();
+    assert_eq!(bytes, payload);
+}
+
 fn check_list_pagination(b: &dyn Backend) {
     b.create_container("res").unwrap();
     let mut expect = Vec::new();
@@ -267,6 +303,11 @@ macro_rules! conformance_suite {
             #[test]
             fn delete_returns_final_stat() {
                 run(check_delete);
+            }
+
+            #[test]
+            fn get_range_contract() {
+                run(check_get_range_contract);
             }
 
             #[test]

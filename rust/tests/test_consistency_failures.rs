@@ -141,7 +141,7 @@ fn crash_retry_speculation_storm_still_yields_exact_output() {
     assert_eq!(parts.len(), 6, "{parts:?}");
     for p in parts {
         assert_eq!(p.len, 50, "partial write must not win: {}", p.path);
-        let data = fs.open(&p.path, &mut ctx).unwrap();
+        let data = fs.read_all(&p.path, &mut ctx).unwrap();
         assert_eq!(data.len(), 50);
     }
 }

@@ -1,0 +1,229 @@
+//! Golden REST-op snapshots for the paper's one-object job (§2.3 /
+//! Table 2 shape), per deployment scenario — the accounting safety net
+//! under the streaming I/O API.
+//!
+//! The redesign's core invariance claim: *how* a caller feeds bytes into
+//! an `FsOutputStream` (one whole-buffer `write_all`, or many small
+//! `write` calls) must never change which REST operations reach the
+//! store, in which order. These tests run the same one-object job twice
+//! per scenario — once through the whole-buffer wrappers (the legacy
+//! pre-stream call shape) and once streaming in 7-byte chunks — and
+//! assert byte-for-byte identical REST traces, plus an exact hardcoded
+//! sequence for Stocator (whose Table 2 row is the paper's headline) and
+//! per-kind op-count snapshots.
+
+use std::sync::Arc;
+use stocator::committer::{Committer, JobContext, TaskAttemptContext};
+use stocator::connectors::naming::AttemptId;
+use stocator::fs::{FileSystem, OpCtx, Path};
+use stocator::harness::{run_cell, Scenario, Sizing, Workload};
+use stocator::metrics::{OpCounts, OpKind};
+use stocator::objectstore::{
+    BackendKind, ConsistencyModel, LatencyModel, ObjectStore, StoreConfig,
+};
+use stocator::simclock::SimInstant;
+
+const PART_BYTES: usize = 200;
+/// Small enough that the 200-byte part multiparts under S3a fast upload
+/// (the harness scales `fs.s3a.multipart.size` the same way).
+const MULTIPART_SIZE: u64 = 64;
+
+fn build(scenario: Scenario) -> (Arc<ObjectStore>, Arc<dyn FileSystem>) {
+    let store = ObjectStore::new(StoreConfig {
+        latency: LatencyModel::paper_testbed(),
+        consistency: ConsistencyModel::strong(),
+        min_part_size: 0,
+        seed: 0,
+        backend: BackendKind::Mem,
+    });
+    store.create_container("res", SimInstant::EPOCH).0.unwrap();
+    let fs = scenario.connector(store.clone(), MULTIPART_SIZE);
+    (store, fs)
+}
+
+/// Keep only trace lines that are REST operations (every REST line names
+/// its HTTP verb; intercepted *no-op* lines never do).
+fn rest_ops(trace: &[String]) -> Vec<String> {
+    const VERBS: [&str; 6] = ["PUT ", "GET ", "HEAD ", "DELETE ", "COPY ", "POST "];
+    trace
+        .iter()
+        .filter(|l| VERBS.iter().any(|v| l.contains(v)))
+        .cloned()
+        .collect()
+}
+
+/// The one-object job + read-back, writing the part through `write`
+/// calls of `chunk` bytes (`usize::MAX` = the whole-buffer wrapper
+/// shape). Returns (REST trace, virtual elapsed micros, op counts).
+fn one_object_job(
+    store: &ObjectStore,
+    fs: &dyn FileSystem,
+    scenario: Scenario,
+    chunk: usize,
+) -> (Vec<String>, u64, OpCounts) {
+    let before = store.counters();
+    let mut ctx = OpCtx::traced(SimInstant::EPOCH);
+    let out = Path::parse(&format!("{}://res/data.txt", scenario.scheme())).unwrap();
+    let job = JobContext::new(out.clone());
+    let committer = Committer::new(scenario.algorithm());
+    committer.setup_job(fs, &job, &mut ctx).unwrap();
+    let task = TaskAttemptContext::new(&job, AttemptId::new("201512062056", "0000", 0, 0));
+    committer.setup_task(fs, &task, &mut ctx).unwrap();
+    let data = vec![7u8; PART_BYTES];
+    if chunk >= PART_BYTES {
+        committer
+            .write_part(fs, &task, "part-00000", data, &mut ctx)
+            .unwrap();
+    } else {
+        let mut stream = committer
+            .create_part(fs, &task, "part-00000", &mut ctx)
+            .unwrap();
+        for piece in data.chunks(chunk) {
+            stream.write(piece, &mut ctx).unwrap();
+        }
+        stream.close(&mut ctx).unwrap();
+    }
+    if committer.needs_task_commit(fs, &task, &mut ctx) {
+        committer.commit_task(fs, &task, &mut ctx).unwrap();
+    }
+    committer.commit_job(fs, &job, &mut ctx).unwrap();
+    // Read-back: discover the dataset, read its one part end to end.
+    let parts: Vec<_> = fs
+        .list_status(&out, &mut ctx)
+        .unwrap()
+        .into_iter()
+        .filter(|s| !s.is_dir && !s.path.name().starts_with('_'))
+        .collect();
+    assert_eq!(parts.len(), 1, "{scenario:?}: {parts:?}");
+    let read = fs.read_all(&parts[0].path, &mut ctx).unwrap();
+    assert_eq!(read.len(), PART_BYTES, "{scenario:?}");
+    let elapsed = ctx.elapsed.as_micros();
+    (
+        rest_ops(&ctx.take_trace()),
+        elapsed,
+        store.counters().since(&before),
+    )
+}
+
+/// Whole-buffer wrapper path vs 7-byte streaming path: identical REST
+/// sequences, for every scenario. This is the "before/after the stream
+/// refactor" proof — `write_all` IS the legacy call shape.
+#[test]
+fn streaming_preserves_rest_sequences_in_every_scenario() {
+    for scenario in Scenario::ALL {
+        let (store_w, fs_w) = build(scenario);
+        let (whole, _, whole_ops) = one_object_job(&store_w, &*fs_w, scenario, usize::MAX);
+        let (store_s, fs_s) = build(scenario);
+        let (streamed, _, streamed_ops) = one_object_job(&store_s, &*fs_s, scenario, 7);
+        assert!(!whole.is_empty(), "{scenario:?} produced no REST ops");
+        assert_eq!(
+            whole, streamed,
+            "{scenario:?}: REST sequence must not depend on write chunking"
+        );
+        assert_eq!(whole_ops, streamed_ops, "{scenario:?}: op counts diverged");
+    }
+}
+
+/// The job is fully deterministic: re-running it reproduces the same
+/// trace, the same counts and the same virtual runtime.
+#[test]
+fn one_object_job_is_deterministic() {
+    for scenario in Scenario::ALL {
+        let (store_a, fs_a) = build(scenario);
+        let a = one_object_job(&store_a, &*fs_a, scenario, usize::MAX);
+        let (store_b, fs_b) = build(scenario);
+        let b = one_object_job(&store_b, &*fs_b, scenario, usize::MAX);
+        assert_eq!(a.0, b.0, "{scenario:?} trace");
+        assert_eq!(a.1, b.1, "{scenario:?} virtual runtime");
+        assert_eq!(a.2, b.2, "{scenario:?} op counts");
+    }
+}
+
+/// Virtual runtime is chunking-invariant everywhere: chunked-transfer
+/// writers (Stocator) and fast upload pay no per-chunk cost, and the
+/// spool-to-disk connectors charge disk time on the cumulative spool
+/// (telescoping), so the total — including the scale-threshold decision —
+/// never depends on how callers split their writes.
+#[test]
+fn chunking_does_not_change_virtual_runtime() {
+    for scenario in Scenario::ALL {
+        let (store_w, fs_w) = build(scenario);
+        let (_, whole_us, _) = one_object_job(&store_w, &*fs_w, scenario, usize::MAX);
+        let (store_s, fs_s) = build(scenario);
+        let (_, streamed_us, _) = one_object_job(&store_s, &*fs_s, scenario, 7);
+        assert_eq!(whole_us, streamed_us, "{scenario:?}");
+    }
+}
+
+/// The exact Stocator sequence (paper Table 2's headline row): three
+/// PUTs to write the dataset — marker, part (intercepted to its final
+/// attempt-qualified name), `_SUCCESS` — then HEAD + one listing + one
+/// GET to read it back. No COPY, no DELETE, ever.
+#[test]
+fn stocator_golden_sequence() {
+    let (store, fs) = build(Scenario::Stocator);
+    let (ops, _, counts) = one_object_job(&store, &*fs, Scenario::Stocator, usize::MAX);
+    let expect = vec![
+        "stocator: PUT res/data.txt (dataset marker)",
+        "stocator: (intercept) PUT res/data.txt/part-00000_attempt_201512062056_0000_m_000000_0",
+        "stocator: PUT res/data.txt/_SUCCESS",
+        "stocator: HEAD res/data.txt/_SUCCESS",
+        "stocator: GET container ?prefix=data.txt/&delimiter=/",
+        "stocator: GET res/data.txt/part-00000_attempt_201512062056_0000_m_000000_0",
+    ];
+    assert_eq!(ops, expect);
+    assert_eq!(counts.get(OpKind::PutObject), 3);
+    assert_eq!(counts.get(OpKind::HeadObject), 1);
+    assert_eq!(counts.get(OpKind::GetObject), 1);
+    assert_eq!(counts.get(OpKind::GetContainer), 1);
+    assert_eq!(counts.get(OpKind::CopyObject), 0);
+    assert_eq!(counts.get(OpKind::DeleteObject), 0);
+    assert_eq!(counts.bytes_written, PART_BYTES as u64 + {
+        // the _SUCCESS manifest: header + one part line
+        let manifest = format!(
+            "stocator-manifest-v1\npart-00000\tattempt_201512062056_0000_m_000000_0\t{PART_BYTES}\n"
+        );
+        manifest.len() as u64
+    });
+    assert_eq!(counts.bytes_copied, 0);
+}
+
+/// The paper's scenario ordering (Table 2): Stocator ≪ Hadoop-Swift <
+/// S3a on total REST ops for the same logical job; fast upload turns the
+/// one part PUT into initiate + ceil(200/64)=4 parts + complete.
+#[test]
+fn scenario_op_totals_keep_paper_ordering() {
+    let total = |scenario: Scenario| {
+        let (store, fs) = build(scenario);
+        let (_, _, counts) = one_object_job(&store, &*fs, scenario, usize::MAX);
+        counts.total()
+    };
+    let st = total(Scenario::Stocator);
+    let sw = total(Scenario::HadoopSwiftBase);
+    let s3 = total(Scenario::S3aBase);
+    assert!(st < sw / 3, "stocator {st} vs swift {sw}");
+    assert!(sw < s3, "swift {sw} vs s3a {s3}");
+
+    // Fast upload: multipart ops appear, named per part.
+    let (store, fs) = build(Scenario::S3aCv2Fu);
+    let (ops, _, _) = one_object_job(&store, &*fs, Scenario::S3aCv2Fu, usize::MAX);
+    let initiates = ops.iter().filter(|l| l.contains("?uploads (initiate)")).count();
+    let parts = ops.iter().filter(|l| l.contains("?partNumber=")).count();
+    let completes = ops.iter().filter(|l| l.contains("(complete)")).count();
+    assert_eq!((initiates, parts, completes), (1, 4, 1));
+}
+
+/// Whole-cell determinism: a full Teragen cell (driver, committer,
+/// connector, store) reproduces identical op counts and virtual runtime
+/// run over run — the cell-level half of the accounting snapshot.
+#[test]
+fn teragen_cell_runtime_and_ops_are_reproducible() {
+    let sizing = Sizing::small();
+    let a = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+    let b = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+    assert!(a.valid, "{}", a.validation);
+    assert_eq!(a.ops, b.ops);
+    assert_eq!(a.runtime_mean_s, b.runtime_mean_s);
+    assert_eq!(a.ops.get(OpKind::CopyObject), 0);
+    assert_eq!(a.ops.get(OpKind::DeleteObject), 0);
+}
