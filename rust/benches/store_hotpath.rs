@@ -3,7 +3,7 @@
 //! §Perf. Hand-rolled because criterion is unavailable offline.
 
 use stocator::connectors::Stocator;
-use stocator::fs::{FileSystem, OpCtx, Path};
+use stocator::fs::{FileSystem, FsInputStream, FsOutputStream, OpCtx, Path};
 use stocator::objectstore::{BackendKind, Metadata, ObjectStore, StoreConfig};
 use stocator::simclock::SimInstant;
 use std::time::Instant;
@@ -75,6 +75,10 @@ fn main() {
     println!();
     println!("write path through the connector (streaming vs whole-buffer):");
     write_path_rates();
+
+    println!();
+    println!("read path through the connector (small reads: readahead vs naive):");
+    read_path_rates();
     println!("store_hotpath bench OK");
 }
 
@@ -111,6 +115,68 @@ fn write_path_rates() {
     // shared runners.
     assert!(whole > 5_000.0, "whole-buffer write too slow: {whole:.0}/s");
     assert!(streamed > 5_000.0, "streamed write too slow: {streamed:.0}/s");
+}
+
+const READ_OBJ_BYTES: usize = 64 * 1024;
+const READ_CHUNK: usize = 1024;
+
+/// The small-reads hot loop both ways: 64 sequential 1 KiB `read_range`
+/// calls per open, once as bare per-read GETs and once through a 16 KiB
+/// readahead window (3 growing fills + 61 window hits). The wrapper does
+/// strictly less store work per read, so it must not be slower
+/// wall-clock — that is the gate; the speedup itself is
+/// machine-dependent and only reported.
+fn read_path_rates() {
+    let mk = |readahead: u64| {
+        let store = ObjectStore::new(StoreConfig {
+            readahead,
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("c", SimInstant::EPOCH).0.unwrap();
+        let fs = Stocator::with_defaults(store);
+        let mut ctx = OpCtx::new(SimInstant::EPOCH);
+        fs.write_all(
+            &Path::parse("swift2d://c/in/part-0").unwrap(),
+            vec![9u8; READ_OBJ_BYTES],
+            true,
+            &mut ctx,
+        )
+        .unwrap();
+        fs
+    };
+    let path = Path::parse("swift2d://c/in/part-0").unwrap();
+    let reads = READ_OBJ_BYTES / READ_CHUNK;
+    let naive_fs = mk(0);
+    let naive = bench("64x1KiB reads (naive GETs)", 5_000, |i| {
+        let mut ctx = OpCtx::new(SimInstant(i));
+        let mut input = naive_fs.open(&path, &mut ctx).unwrap();
+        for k in 0..reads {
+            std::hint::black_box(
+                input
+                    .read_range((k * READ_CHUNK) as u64, READ_CHUNK as u64, &mut ctx)
+                    .unwrap(),
+            );
+        }
+    });
+    let ra_fs = mk(16 * 1024);
+    let ra = bench("64x1KiB reads (readahead 16KiB)", 5_000, |i| {
+        let mut ctx = OpCtx::new(SimInstant(i));
+        let mut input = ra_fs.open(&path, &mut ctx).unwrap();
+        for k in 0..reads {
+            std::hint::black_box(
+                input
+                    .read_range((k * READ_CHUNK) as u64, READ_CHUNK as u64, &mut ctx)
+                    .unwrap(),
+            );
+        }
+    });
+    println!("readahead/naive ratio: {:.2}x", ra / naive);
+    // The gate: coalescing must never cost wall-clock time (5% margin for
+    // timer noise on loaded shared runners).
+    assert!(
+        ra >= naive * 0.95,
+        "readahead read path slower than naive: {ra:.0}/s vs {naive:.0}/s"
+    );
 }
 
 const WRITERS: usize = 8;

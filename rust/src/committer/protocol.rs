@@ -153,7 +153,7 @@ impl Committer {
         ctx: &mut OpCtx,
     ) -> Result<(), FsError> {
         let mut out = self.create_part(fs, task, basename, ctx)?;
-        out.write(&data, ctx)?;
+        out.write_owned(data, ctx)?;
         out.close(ctx)
     }
 

@@ -27,6 +27,7 @@ pub use stocator::{ReadStrategy, Stocator, StocatorConfig};
 pub use swift::HadoopSwift;
 
 use crate::fs::interface::{FsError, FsInputStream, OpCtx};
+use crate::fs::readahead::ReadaheadStream;
 use crate::fs::Path;
 use crate::objectstore::store::HeadResult;
 use crate::objectstore::{ObjectStore, StoreError};
@@ -63,6 +64,22 @@ pub(crate) fn unwrap_bytes(data: Arc<Vec<u8>>) -> Vec<u8> {
     Arc::try_unwrap(data).unwrap_or_else(|a| a.as_ref().clone())
 }
 
+/// Apply the store's readahead policy to a freshly opened stream: with
+/// `StoreConfig::readahead > 0` the handle is wrapped in a
+/// [`ReadaheadStream`] (prefetch window, misses coalesce into single
+/// ranged GETs); with 0 the bare handle is returned and every read stays
+/// its own GET. Shared by all three connectors so the knob means the same
+/// thing everywhere.
+pub(crate) fn maybe_readahead<'a>(
+    store: &ObjectStore,
+    inner: StoreInputStream<'a>,
+) -> Box<dyn FsInputStream + 'a> {
+    match store.config.readahead {
+        0 => Box::new(inner),
+        window => Box::new(ReadaheadStream::new(Box::new(inner), window)),
+    }
+}
+
 /// The shared read handle over one store object. Two personalities:
 ///
 /// * **HEAD-on-open** (Hadoop-Swift, S3a, via [`StoreInputStream::new`]):
@@ -72,7 +89,9 @@ pub(crate) fn unwrap_bytes(data: Arc<Vec<u8>>) -> Vec<u8> {
 ///   request until the first read (§3.4 — never a HEAD before GET); the
 ///   GET response's head warms the connector's HEAD cache.
 ///
-/// Every read issues its own GET — full or ranged — against the store.
+/// Every read issues its own GET — full or ranged — against the store;
+/// GET coalescing lives a layer up, in the optional [`ReadaheadStream`]
+/// wrapper (see [`maybe_readahead`]).
 pub(crate) struct StoreInputStream<'a> {
     store: &'a ObjectStore,
     /// Trace actor name ("swift" / "s3a" / "stocator").

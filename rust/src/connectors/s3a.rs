@@ -17,7 +17,7 @@
 //!   (`S3AFastOutputStream`, §3.3) is on, which streams via multipart
 //!   upload at the cost of ≥5 MB in-memory parts.
 
-use super::{container_key, map_store_error, marker_key, StoreInputStream};
+use super::{container_key, map_store_error, marker_key, maybe_readahead, StoreInputStream};
 use crate::fs::status::FileStatus;
 use crate::fs::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx, Path};
 use crate::objectstore::{Metadata, ObjectStore};
@@ -226,6 +226,24 @@ impl FsOutputStream for S3aOutputStream<'_> {
         }
     }
 
+    fn write_owned(&mut self, data: Vec<u8>, ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("write on closed stream {}", self.path)));
+        }
+        // Zero-copy fast path: an empty buffer adopts the caller's vector
+        // outright; accounting (spool delta / part flushes) is unchanged.
+        if self.fs.cfg.fast_upload {
+            crate::fs::interface::adopt_buf(&mut self.buf, data);
+            self.flush_full_parts(ctx)
+        } else {
+            let latency = &self.fs.store.config.latency;
+            let old = self.buf.len() as u64;
+            crate::fs::interface::adopt_buf(&mut self.buf, data);
+            ctx.add_spool_delta(old, self.buf.len() as u64, |b| latency.local_disk_time(b));
+            Ok(())
+        }
+    }
+
     fn close(&mut self, ctx: &mut OpCtx) -> Result<(), FsError> {
         if self.closed {
             return Err(FsError::Io(format!("double close on {}", self.path)));
@@ -327,12 +345,10 @@ impl FileSystem for S3a {
         if st.is_dir {
             return Err(FsError::IsADirectory(path.to_string()));
         }
-        Ok(Box::new(StoreInputStream::new(
+        Ok(maybe_readahead(
             &self.store,
-            "s3a",
-            path,
-            st.len,
-        )))
+            StoreInputStream::new(&self.store, "s3a", path, st.len),
+        ))
     }
 
     fn get_file_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {

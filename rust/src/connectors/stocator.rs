@@ -24,7 +24,7 @@
 
 use super::head_cache::HeadCache;
 use super::naming::{self, AttemptId, TempPath};
-use super::{container_key, map_store_error, marker_key, StoreInputStream};
+use super::{container_key, map_store_error, marker_key, maybe_readahead, StoreInputStream};
 use crate::fs::status::FileStatus;
 use crate::fs::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx, Path};
 use crate::objectstore::store::HeadResult;
@@ -371,6 +371,18 @@ impl FsOutputStream for StocatorOutputStream<'_> {
         Ok(())
     }
 
+    fn write_owned(&mut self, data: Vec<u8>, ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("write on closed stream {}", self.path)));
+        }
+        // Zero-copy: a whole-part writer's buffer becomes the chunked-PUT
+        // body directly (no memcpy — the common shape for task output).
+        crate::fs::interface::adopt_buf(&mut self.buf, data);
+        self.wrote = true;
+        self.last_now = ctx.now();
+        Ok(())
+    }
+
     fn close(&mut self, ctx: &mut OpCtx) -> Result<(), FsError> {
         if self.closed {
             return Err(FsError::Io(format!("double close on {}", self.path)));
@@ -571,13 +583,12 @@ impl FileSystem for Stocator {
     fn open(&self, path: &Path, _ctx: &mut OpCtx) -> Result<Box<dyn FsInputStream + '_>, FsError> {
         // §3.4 optimization 1: no HEAD before GET. The handle is fully
         // lazy — the first read call issues the (possibly ranged) GET,
-        // whose response carries the metadata and warms the cache.
-        Ok(Box::new(StoreInputStream::lazy_with_cache(
+        // whose response carries the metadata and warms the cache. With
+        // readahead on, that first GET is the first prefetch fill.
+        Ok(maybe_readahead(
             &self.store,
-            "stocator",
-            path,
-            &self.cache,
-        )))
+            StoreInputStream::lazy_with_cache(&self.store, "stocator", path, &self.cache),
+        ))
     }
 
     fn get_file_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {

@@ -14,7 +14,7 @@
 //!   PUT (no chunked transfer encoding, §3.3);
 //! * reads HEAD the object before GETting it.
 
-use super::{container_key, map_store_error, marker_key, StoreInputStream};
+use super::{container_key, map_store_error, marker_key, maybe_readahead, StoreInputStream};
 use crate::fs::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx, Path};
 use crate::fs::status::FileStatus;
 use crate::objectstore::{Metadata, ObjectStore};
@@ -95,6 +95,19 @@ impl FsOutputStream for SwiftOutputStream<'_> {
         let latency = &self.fs.store.config.latency;
         let old = self.buf.len() as u64;
         self.buf.extend_from_slice(data);
+        ctx.add_spool_delta(old, self.buf.len() as u64, |b| latency.local_disk_time(b));
+        Ok(())
+    }
+
+    fn write_owned(&mut self, data: Vec<u8>, ctx: &mut OpCtx) -> Result<(), FsError> {
+        if self.closed {
+            return Err(FsError::Io(format!("write on closed stream {}", self.path)));
+        }
+        // Whole-part writers hand over their buffer: adopt it instead of
+        // copying into the spool. Accounting is identical to `write`.
+        let latency = &self.fs.store.config.latency;
+        let old = self.buf.len() as u64;
+        crate::fs::interface::adopt_buf(&mut self.buf, data);
         ctx.add_spool_delta(old, self.buf.len() as u64, |b| latency.local_disk_time(b));
         Ok(())
     }
@@ -184,12 +197,10 @@ impl FileSystem for HadoopSwift {
         ctx.add(d);
         ctx.record("swift", || format!("HEAD {cont}/{key}"));
         let h = h.map_err(|e| map_store_error(e, path))?;
-        Ok(Box::new(StoreInputStream::new(
+        Ok(maybe_readahead(
             &self.store,
-            "swift",
-            path,
-            h.size,
-        )))
+            StoreInputStream::new(&self.store, "swift", path, h.size),
+        ))
     }
 
     fn get_file_status(&self, path: &Path, ctx: &mut OpCtx) -> Result<FileStatus, FsError> {

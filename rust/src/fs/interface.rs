@@ -115,6 +115,20 @@ impl OpCtx {
     }
 }
 
+/// Adopt `data` into an empty stream buffer (zero-copy) or append it.
+/// Shared by every connector's [`FsOutputStream::write_owned`] override
+/// so the owned-write byte handling stays identical everywhere — each
+/// impl then differs only in its connector-specific accounting, which
+/// must mirror its borrowing `write` exactly (the chunking-invariance
+/// golden tests rely on that lockstep).
+pub(crate) fn adopt_buf(buf: &mut Vec<u8>, data: Vec<u8>) {
+    if buf.is_empty() {
+        *buf = data;
+    } else {
+        buf.extend_from_slice(&data);
+    }
+}
+
 /// A writable file handle, mirroring Hadoop's `FSDataOutputStream`.
 ///
 /// Contract:
@@ -136,6 +150,17 @@ pub trait FsOutputStream {
     /// Append `data` to the stream.
     fn write(&mut self, data: &[u8], ctx: &mut OpCtx) -> Result<(), FsError>;
 
+    /// Append `data`, taking ownership of the buffer. Identical semantics
+    /// and accounting to [`write`](FsOutputStream::write); connectors
+    /// whose streams buffer bytes override this to adopt the vector when
+    /// the stream is empty — the zero-copy fast path for whole-part
+    /// writers, who hand the stream their entire output in one call (hot
+    /// on the 500 GB cells, where each part is megabytes of simulated
+    /// bytes). The default falls back to a borrowing `write`.
+    fn write_owned(&mut self, data: Vec<u8>, ctx: &mut OpCtx) -> Result<(), FsError> {
+        self.write(&data, ctx)
+    }
+
     /// Finish the write and install the object.
     fn close(&mut self, ctx: &mut OpCtx) -> Result<(), FsError>;
 }
@@ -144,9 +169,13 @@ pub trait FsOutputStream {
 ///
 /// Handles are cheap: connectors that HEAD-on-open do so in
 /// [`FileSystem::open`]; Stocator's handle is fully lazy (§3.4 — no HEAD
-/// before GET) and issues its first request on the first read. Each read
-/// call issues its own GET (full or ranged) — readers are stateless
-/// between calls, there is no cursor.
+/// before GET) and issues its first request on the first read. A bare
+/// handle issues one GET (full or ranged) per read call — readers keep no
+/// cursor. With readahead enabled (`StoreConfig::readahead` /
+/// `--readahead`), connectors wrap the handle in
+/// [`crate::fs::readahead::ReadaheadStream`], which prefetches a window
+/// on each miss and serves in-window reads from memory, coalescing many
+/// small `read_range` calls into few ranged GETs.
 pub trait FsInputStream {
     /// The object's size, when the connector already knows it (learned at
     /// `open` or from a previous read). `None` until the lazy connectors
@@ -200,7 +229,7 @@ pub trait FileSystem: Send + Sync {
         ctx: &mut OpCtx,
     ) -> Result<(), FsError> {
         let mut out = self.create(path, overwrite, ctx)?;
-        out.write(&data, ctx)?;
+        out.write_owned(data, ctx)?;
         out.close(ctx)
     }
 

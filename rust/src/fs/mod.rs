@@ -14,13 +14,18 @@
 //! write path honestly — spool-then-PUT, multipart-during-write, or
 //! single chunked-transfer PUT — and what makes *dropping a stream
 //! without close* (an executor crash) a first-class, connector-defined
-//! event instead of a fraction-of-a-buffer hack.
+//! event instead of a fraction-of-a-buffer hack. On the read side,
+//! [`readahead::ReadaheadStream`] gives every connector an
+//! S3AInputStream-style prefetch window so many small `read_range` calls
+//! coalesce into few ranged GETs (`--readahead BYTES` on the CLI).
 
 pub mod path;
 pub mod status;
 pub mod interface;
 pub mod hdfs;
+pub mod readahead;
 
 pub use interface::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx};
 pub use path::Path;
+pub use readahead::ReadaheadStream;
 pub use status::FileStatus;

@@ -1,0 +1,369 @@
+//! Connector-level readahead: an S3AInputStream-style prefetch buffer
+//! under [`FsInputStream`].
+//!
+//! PR 2's streaming read API made partial reads expressible, but every
+//! `read_range` call still issued its own GET — so small-record readers
+//! (terasort splitter sampling, wordcount line scans, TPC-DS column
+//! probes) pay one REST round trip per sliver, exactly the request
+//! amplification the paper's Table 2/7 op-count reductions attack.
+//! [`ReadaheadStream`] coalesces them: it tracks the caller's position,
+//! serves reads that fall inside a prefetched window from memory (zero
+//! REST ops, zero virtual time — the bytes are already on the Spark
+//! server), and on a miss issues **one** ranged GET of
+//! `max(requested, window)` bytes.
+//!
+//! Policy (modelled on Hadoop's `S3AInputStream` sequential/random modes):
+//!
+//! * the window starts at the configured `readahead` size;
+//! * a *sequential* miss (the read starts exactly where the previous read
+//!   ended) doubles the window, up to [`MAX_WINDOW_MULTIPLE`] × the
+//!   configured size — streaming readers amortise ever more round trips;
+//! * a *non-contiguous* miss resets the window to the configured size,
+//!   and after [`RANDOM_MISS_THRESHOLD`] consecutive non-contiguous
+//!   misses the window collapses to zero — a random reader (columnar
+//!   footer probes, index lookups) stops paying for bytes it will never
+//!   use. A later sequential miss re-opens the window.
+//!
+//! Fills inherit the range contract of the layer below ([the shared
+//! `clamp_range`](crate::objectstore::backend::clamp_range)): a fill that
+//! starts before EOF but extends past it is **clamped** (HTTP 206 partial
+//! content), never an error; only a read starting strictly past EOF
+//! surfaces [`FsError::InvalidRange`] (HTTP 416). Pricing is the layer
+//! below's too: each fill is one GET whose duration and byte accounting
+//! cover the fetched slice, paper-scaled by the full object size
+//! ([`LatencyModel::range_get_duration`](crate::objectstore::LatencyModel::range_get_duration)),
+//! so coalescing N small reads into one fill replaces N first-byte
+//! latencies with one without changing the bytes billed.
+//!
+//! The wrapper is connector-agnostic: Swift/S3a wrap their HEAD-on-open
+//! streams, Stocator its lazy no-HEAD stream (the first fill's GET still
+//! warms the HEAD cache, §3.4), and HDFS its DataNode reader — enabled by
+//! `StoreConfig::readahead` / `--readahead BYTES` (0/`off` disables it,
+//! leaving every read a bare GET exactly as before).
+
+use super::interface::{FsError, FsInputStream, OpCtx};
+use std::sync::Arc;
+
+/// Window growth cap: the window may grow to this multiple of the
+/// configured readahead size under sustained sequential reads.
+pub const MAX_WINDOW_MULTIPLE: u64 = 4;
+
+/// Consecutive non-contiguous misses after which the stream falls back to
+/// random-read mode (fills fetch exactly the requested bytes).
+pub const RANDOM_MISS_THRESHOLD: u32 = 4;
+
+/// A prefetching wrapper over any [`FsInputStream`]. See the module docs
+/// for the policy.
+pub struct ReadaheadStream<'a> {
+    inner: Box<dyn FsInputStream + 'a>,
+    /// Configured window size (bytes); invariant: > 0.
+    readahead: u64,
+    /// Current fill size (0 = random-read fallback: no over-fetch).
+    window_target: u64,
+    /// Buffered bytes `[window_start, window_start + window.len())`.
+    window: Vec<u8>,
+    window_start: u64,
+    /// Offset one past the last byte served (sequential-read detection).
+    expected_next: Option<u64>,
+    /// Consecutive non-contiguous misses.
+    noncontig_misses: u32,
+    /// Fill count (ranged GETs issued), for tests and benches.
+    fills: u64,
+    /// Window-served read count, for tests and benches.
+    hits: u64,
+}
+
+impl<'a> ReadaheadStream<'a> {
+    /// Wrap `inner` with a `readahead_bytes`-sized prefetch window.
+    /// `readahead_bytes` must be positive — callers gate on the config
+    /// knob and skip the wrapper entirely when readahead is off.
+    pub fn new(inner: Box<dyn FsInputStream + 'a>, readahead_bytes: u64) -> Self {
+        assert!(readahead_bytes > 0, "readahead window must be positive");
+        Self {
+            inner,
+            readahead: readahead_bytes,
+            window_target: readahead_bytes,
+            window: Vec::new(),
+            window_start: 0,
+            expected_next: None,
+            noncontig_misses: 0,
+            fills: 0,
+            hits: 0,
+        }
+    }
+
+    /// Ranged GETs issued so far (fills; misses of the window).
+    pub fn fills(&self) -> u64 {
+        self.fills
+    }
+
+    /// Reads served from the prefetch window without a REST op.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// End offset (exclusive) of the buffered window.
+    fn window_end(&self) -> u64 {
+        self.window_start + self.window.len() as u64
+    }
+
+    /// Serve `[offset, offset + len)` from the buffered window. Caller
+    /// guarantees the range lies within it.
+    fn serve(&mut self, offset: u64, len: usize) -> Vec<u8> {
+        let s = (offset - self.window_start) as usize;
+        let out = self.window[s..s + len].to_vec();
+        self.hits += 1;
+        self.expected_next = Some(offset + len as u64);
+        out
+    }
+
+    /// Adapt the window to this miss and return the fill length.
+    fn plan_fill(&mut self, offset: u64, len: u64) -> u64 {
+        let sequential = self.expected_next == Some(offset);
+        if sequential {
+            self.noncontig_misses = 0;
+            self.window_target = if self.window_target == 0 {
+                // Random fallback ended: the reader went sequential again.
+                self.readahead
+            } else {
+                self.window_target
+                    .saturating_mul(2)
+                    .min(self.readahead.saturating_mul(MAX_WINDOW_MULTIPLE))
+            };
+        } else if self.expected_next.is_some() {
+            // A true seek (the very first read of a stream is not one).
+            self.noncontig_misses += 1;
+            self.window_target = if self.noncontig_misses >= RANDOM_MISS_THRESHOLD {
+                0 // random-read fallback: fetch exactly what was asked
+            } else {
+                self.readahead
+            };
+        }
+        len.max(self.window_target)
+    }
+}
+
+impl FsInputStream for ReadaheadStream<'_> {
+    fn size_hint(&self) -> Option<u64> {
+        self.inner.size_hint()
+    }
+
+    fn read_range(&mut self, offset: u64, len: u64, ctx: &mut OpCtx) -> Result<Vec<u8>, FsError> {
+        let wend = self.window_end();
+        let in_window_start = !self.window.is_empty() && offset >= self.window_start;
+        // Fully buffered: serve from memory, zero REST ops.
+        if in_window_start && offset.saturating_add(len) <= wend {
+            return Ok(self.serve(offset, len as usize));
+        }
+        // The read starts inside a window that already reaches EOF: the
+        // clamped (partial-content) answer is fully buffered too — a
+        // refill would re-fetch bytes we hold and return nothing new.
+        // (`offset <= wend <= size` here, so past-EOF reads never take
+        // this path and still surface 416 from the fill below.)
+        if in_window_start && offset <= wend {
+            if let Some(size) = self.inner.size_hint() {
+                if wend >= size {
+                    let clamped = (wend - offset) as usize;
+                    return Ok(self.serve(offset, clamped));
+                }
+            }
+        }
+        // Miss: one ranged GET of max(requested, window), clamped at EOF
+        // by the layer below; an offset strictly past EOF is its 416.
+        let fetch = self.plan_fill(offset, len);
+        let data = self.inner.read_range(offset, fetch, ctx)?;
+        self.fills += 1;
+        let served = (len as usize).min(data.len());
+        let out = data[..served].to_vec();
+        self.window = data;
+        self.window_start = offset;
+        self.expected_next = Some(offset + served as u64);
+        Ok(out)
+    }
+
+    fn read_to_end(&mut self, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
+        // Whole-object reads bypass the window (one full GET, exactly as
+        // without readahead) — unless the window already holds the entire
+        // object, in which case the bytes never cross the wire again.
+        if !self.window.is_empty() && self.window_start == 0 {
+            if let Some(size) = self.inner.size_hint() {
+                if self.window_end() >= size {
+                    self.hits += 1;
+                    self.expected_next = Some(size);
+                    return Ok(Arc::new(self.window.clone()));
+                }
+            }
+        }
+        self.inner.read_to_end(ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::backend::{clamp_range, BackendError};
+    use crate::simclock::SimInstant;
+
+    /// An in-memory stream honouring the store's range contract.
+    struct MemStream {
+        data: Vec<u8>,
+    }
+
+    impl FsInputStream for MemStream {
+        fn size_hint(&self) -> Option<u64> {
+            Some(self.data.len() as u64)
+        }
+
+        fn read_range(
+            &mut self,
+            offset: u64,
+            len: u64,
+            _ctx: &mut OpCtx,
+        ) -> Result<Vec<u8>, FsError> {
+            let (s, e) = clamp_range("c", "k", offset, len, self.data.len() as u64)
+                .map_err(|e| match e {
+                    BackendError::InvalidRange(m) => FsError::InvalidRange(m),
+                    other => FsError::Io(other.to_string()),
+                })?;
+            Ok(self.data[s..e].to_vec())
+        }
+
+        fn read_to_end(&mut self, _ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
+            Ok(Arc::new(self.data.clone()))
+        }
+    }
+
+    fn stream(size: usize, readahead: u64) -> ReadaheadStream<'static> {
+        let data: Vec<u8> = (0..size).map(|i| (i % 251) as u8).collect();
+        ReadaheadStream::new(Box::new(MemStream { data }), readahead)
+    }
+
+    fn ctx() -> OpCtx {
+        OpCtx::new(SimInstant::EPOCH)
+    }
+
+    fn expect(size: usize, offset: usize, len: usize) -> Vec<u8> {
+        (offset..(offset + len).min(size)).map(|i| (i % 251) as u8).collect()
+    }
+
+    #[test]
+    fn sequential_small_reads_coalesce_with_window_growth() {
+        let mut s = stream(400, 64);
+        let mut c = ctx();
+        let mut got = Vec::new();
+        for off in (0..400).step_by(8) {
+            got.extend(s.read_range(off as u64, 8, &mut c).unwrap());
+        }
+        assert_eq!(got, expect(400, 0, 400), "bytes must be identical");
+        // Fills at 0 (64), 64 (128: doubled), 192 (256: doubled, clamped
+        // to 400): 3 GETs for 50 reads.
+        assert_eq!(s.fills(), 3);
+        assert_eq!(s.hits(), 47);
+    }
+
+    #[test]
+    fn fill_count_is_chunking_invariant() {
+        // 8-byte and 16-byte steps hit the same window boundaries.
+        let fills = |step: usize| {
+            let mut s = stream(400, 64);
+            let mut c = ctx();
+            for off in (0..400).step_by(step) {
+                s.read_range(off as u64, step as u64, &mut c).unwrap();
+            }
+            s.fills()
+        };
+        assert_eq!(fills(8), fills(16));
+    }
+
+    #[test]
+    fn fill_spanning_eof_clamps_instead_of_416() {
+        // The regression the readahead layer must never introduce: the
+        // over-fetch `max(requested, window)` extends past EOF — partial
+        // content, not InvalidRange.
+        let mut s = stream(100, 64);
+        let mut c = ctx();
+        let tail = s.read_range(90, 8, &mut c).unwrap();
+        assert_eq!(tail, expect(100, 90, 8));
+        assert_eq!(s.fills(), 1, "one clamped fill");
+        // The next read extends past EOF but starts before it: clamped,
+        // and served from the EOF-touching window without another GET.
+        let rest = s.read_range(98, 10, &mut c).unwrap();
+        assert_eq!(rest, expect(100, 98, 2));
+        assert_eq!(s.fills(), 1);
+        // Reading exactly at EOF is valid and empty; strictly past is 416.
+        assert!(s.read_range(100, 5, &mut c).unwrap().is_empty());
+        assert!(matches!(
+            s.read_range(101, 1, &mut c),
+            Err(FsError::InvalidRange(_))
+        ));
+    }
+
+    #[test]
+    fn random_reads_fall_back_to_exact_fetches() {
+        let mut s = stream(100_000, 64);
+        let mut c = ctx();
+        // A scatter of seeks, far enough apart that nothing hits.
+        for off in [10_000u64, 70_000, 30_000, 90_000, 50_000, 20_000] {
+            let got = s.read_range(off, 8, &mut c).unwrap();
+            assert_eq!(got, expect(100_000, off as usize, 8));
+        }
+        // After RANDOM_MISS_THRESHOLD non-contiguous misses the window
+        // collapsed: later fills fetch exactly the requested 8 bytes.
+        assert_eq!(s.window.len(), 8, "random fallback fetches no extra");
+        // Going sequential again re-opens the window.
+        let next = 20_008u64;
+        s.read_range(next, 8, &mut c).unwrap();
+        assert_eq!(s.window.len() as u64, 64, "sequential read re-arms readahead");
+    }
+
+    #[test]
+    fn window_growth_is_capped() {
+        let mut s = stream(100_000, 64);
+        let mut c = ctx();
+        let mut off = 0u64;
+        // Long sequential scan: window must stop at 4x the configured size.
+        for _ in 0..200 {
+            let got = s.read_range(off, 64, &mut c).unwrap();
+            off += got.len() as u64;
+        }
+        assert!(s.window.len() as u64 <= 64 * MAX_WINDOW_MULTIPLE);
+        assert!(s.fills() < 200 / 2, "most reads must be window hits");
+    }
+
+    #[test]
+    fn read_to_end_delegates_unless_fully_buffered() {
+        let mut s = stream(100, 64);
+        let mut c = ctx();
+        let all = s.read_to_end(&mut c).unwrap();
+        assert_eq!(&*all, &expect(100, 0, 100));
+        assert_eq!(s.fills(), 0, "read_to_end is a plain full GET, not a fill");
+        // Now buffer the whole object via a ranged read, then read_to_end
+        // again: served from the window.
+        let mut s = stream(100, 256);
+        let first = s.read_range(0, 10, &mut c).unwrap();
+        assert_eq!(first, expect(100, 0, 10));
+        assert_eq!(s.fills(), 1);
+        let all = s.read_to_end(&mut c).unwrap();
+        assert_eq!(&*all, &expect(100, 0, 100));
+        assert_eq!(s.fills(), 1, "whole object was already buffered");
+        assert_eq!(s.hits(), 1);
+    }
+
+    #[test]
+    fn zero_length_reads_are_valid() {
+        let mut s = stream(100, 64);
+        let mut c = ctx();
+        assert!(s.read_range(0, 0, &mut c).unwrap().is_empty());
+        s.read_range(10, 20, &mut c).unwrap();
+        assert!(s.read_range(15, 0, &mut c).unwrap().is_empty());
+    }
+
+    #[test]
+    fn size_hint_passes_through() {
+        let mut s = stream(1234, 64);
+        assert_eq!(s.size_hint(), Some(1234));
+        let mut c = ctx();
+        s.read_range(0, 8, &mut c).unwrap();
+        assert_eq!(s.size_hint(), Some(1234));
+    }
+}

@@ -20,9 +20,14 @@
 //!   `FsInputStream`, mirroring Hadoop's FSData streams): connectors
 //!   express their §3.3 write paths — spool-then-PUT,
 //!   multipart-during-write, single chunked-transfer PUT — byte by byte
-//!   on the virtual clock, dropping a stream without `close` is the
+//!   on the virtual clock (with a zero-copy `write_owned` fast path for
+//!   whole-part writers), dropping a stream without `close` is the
 //!   executor-crash abort path, and partial reads (`read_range`) reach
-//!   all the way down to the backends.
+//!   all the way down to the backends. An optional S3AInputStream-style
+//!   readahead window ([`fs::readahead`], `--readahead BYTES` on the
+//!   CLI) coalesces small sequential reads into few ranged GETs;
+//!   off by default, so every paper table reproduces the legacy
+//!   one-GET-per-read behaviour byte-identically.
 //! * [`connectors`] — the three storage connectors under study:
 //!   Hadoop-Swift, S3a (with optional fast upload) and Stocator itself.
 //! * [`committer`] — Hadoop's `FileOutputCommitter` algorithm versions 1

@@ -63,14 +63,20 @@ USAGE:
                      a fresh directory under the system temp dir, printed
                      at startup); each run/cell works in a unique
                      subdirectory of DIR
+          plus --readahead BYTES|off (default: off)
+            connector-level prefetch window, simulated bytes: small
+            sequential read_range calls coalesce into one ranged GET per
+            window fill (S3AInputStream-style; grows on sequential reads,
+            collapses for random readers). 'off' (or 0) reproduces the
+            paper's one-GET-per-read behaviour exactly.
 
   scenarios: hs-base s3a-base stocator hs-cv2 s3a-cv2 s3a-cv2-fu
   workloads: ro50 ro500 teragen copy wordcount terasort tpcds
 ";
 
-/// Resolve experiment sizing from `--small` / `--paper` / `--backend`.
-/// `--paper` is the explicit spelling of the default; combining it with
-/// `--small` is a contradiction and is rejected.
+/// Resolve experiment sizing from `--small` / `--paper` / `--backend` /
+/// `--readahead`. `--paper` is the explicit spelling of the default;
+/// combining it with `--small` is a contradiction and is rejected.
 fn select_sizing(args: &Args) -> Result<Sizing, String> {
     args.flag_conflict("small", "paper")?;
     let mut sizing = if args.flag("small") {
@@ -81,6 +87,14 @@ fn select_sizing(args: &Args) -> Result<Sizing, String> {
     };
     if let Some(spec) = args.opt("backend") {
         sizing.backend = BackendKind::parse(spec)?;
+    }
+    if let Some(spec) = args.opt("readahead") {
+        sizing.readahead = match spec {
+            "off" => 0,
+            s => s.parse().map_err(|_| {
+                format!("--readahead expects a byte count or 'off', got '{s}'")
+            })?,
+        };
     }
     // Pin a concrete root for `fs` so the user can find (and reuse) the
     // data; each run then works in a unique subdirectory of it.
@@ -269,6 +283,17 @@ mod tests {
         let s = select_sizing(&args(&["run", "--backend=fs"])).unwrap();
         assert!(matches!(s.backend, BackendKind::LocalFs(Some(_))));
         assert!(select_sizing(&args(&["run", "--backend", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn readahead_option_is_wired_through() {
+        // Default: off, reproducing the paper's one-GET-per-read reads.
+        assert_eq!(select_sizing(&args(&["run"])).unwrap().readahead, 0);
+        let s = select_sizing(&args(&["run", "--readahead", "131072"])).unwrap();
+        assert_eq!(s.readahead, 131_072);
+        let s = select_sizing(&args(&["run", "--readahead=off"])).unwrap();
+        assert_eq!(s.readahead, 0);
+        assert!(select_sizing(&args(&["run", "--readahead", "lots"])).is_err());
     }
 
     #[test]

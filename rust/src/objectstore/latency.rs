@@ -154,7 +154,11 @@ impl LatencyModel {
     }
 
     /// Duration of a ranged GET returning `slice` simulated bytes of a
-    /// `full_size`-byte object.
+    /// `full_size`-byte object. This is also what prices a readahead
+    /// *fill* ([`crate::fs::readahead::ReadaheadStream`]): one GET base
+    /// latency plus transfer of the whole fetched window — so coalescing
+    /// N small reads into one fill pays `get_us` once instead of N times
+    /// while the bytes billed stay those that cross the wire.
     #[inline]
     pub fn range_get_duration(&self, slice: u64, full_size: u64) -> SimDuration {
         SimDuration::from_micros(self.get_us)
@@ -255,6 +259,26 @@ mod tests {
         assert_eq!(
             m.range_get_duration(32 * 1024, 32 * 1024),
             m.op_duration(OpKind::GetObject, 32 * 1024, 0)
+        );
+    }
+
+    #[test]
+    fn one_fill_undercuts_equivalent_sliver_gets() {
+        // The readahead economics: fetching a 64 KiB window in one ranged
+        // GET costs one first-byte latency; the same bytes as 64 separate
+        // 1 KiB GETs cost sixty-four. Transfer time is identical.
+        let m = LatencyModel::paper_testbed();
+        // Sliver size divisible by stream_bw/1e6 = 26 so integer-µs
+        // transfer times add exactly.
+        let full = 2_000_000;
+        let fill = m.range_get_duration(64 * 26_000, full);
+        let slivers: u64 = (0..64)
+            .map(|_| m.range_get_duration(26_000, full).as_micros())
+            .sum();
+        assert_eq!(
+            slivers - fill.as_micros(),
+            63 * m.get_us,
+            "coalescing saves exactly the per-request latencies"
         );
     }
 

@@ -110,6 +110,13 @@ pub struct StoreConfig {
     pub seed: u64,
     /// Which storage backend holds the bytes.
     pub backend: BackendKind,
+    /// Connector-side readahead window in *simulated* bytes; 0 disables
+    /// it. When set, every connector wraps the streams it hands out in a
+    /// [`crate::fs::readahead::ReadaheadStream`], so small sequential
+    /// `read_range` calls coalesce into few ranged GETs. Off by default:
+    /// with 0, every read issues its own GET and all op counts and
+    /// virtual runtimes are byte-identical to the pre-readahead stack.
+    pub readahead: u64,
 }
 
 impl Default for StoreConfig {
@@ -120,6 +127,7 @@ impl Default for StoreConfig {
             min_part_size: DEFAULT_MIN_PART_SIZE,
             seed: 0,
             backend: BackendKind::default(),
+            readahead: 0,
         }
     }
 }
@@ -133,6 +141,7 @@ impl StoreConfig {
             min_part_size: 0,
             seed: 0,
             backend: BackendKind::default(),
+            readahead: 0,
         }
     }
 
@@ -144,6 +153,7 @@ impl StoreConfig {
             min_part_size: 0,
             seed: 0,
             backend: BackendKind::default(),
+            readahead: 0,
         }
     }
 }
@@ -703,10 +713,7 @@ mod tests {
     fn ranged_get_charges_slice_transfer_time() {
         let cfg = StoreConfig {
             latency: LatencyModel::paper_testbed(),
-            consistency: ConsistencyModel::strong(),
-            min_part_size: 0,
-            seed: 0,
-            backend: BackendKind::default(),
+            ..StoreConfig::instant_strong()
         };
         let s = ObjectStore::new(cfg);
         s.create_container("res", SimInstant::EPOCH).0.unwrap();
@@ -731,10 +738,7 @@ mod tests {
                 scale_threshold: 64,
                 ..LatencyModel::instant()
             },
-            consistency: ConsistencyModel::strong(),
-            min_part_size: 0,
-            seed: 0,
-            backend: BackendKind::default(),
+            ..StoreConfig::instant_strong()
         };
         let s = ObjectStore::new(cfg);
         s.create_container("res", SimInstant::EPOCH).0.unwrap();
@@ -898,10 +902,7 @@ mod tests {
     fn durations_follow_latency_model() {
         let cfg = StoreConfig {
             latency: LatencyModel::paper_testbed(),
-            consistency: ConsistencyModel::strong(),
-            min_part_size: 0,
-            seed: 0,
-            backend: BackendKind::default(),
+            ..StoreConfig::instant_strong()
         };
         let s = ObjectStore::new(cfg);
         let (_, d) = s.create_container("res", SimInstant::EPOCH);
@@ -925,10 +926,8 @@ mod tests {
             lat.jitter = 0.2;
             let cfg = StoreConfig {
                 latency: lat,
-                consistency: ConsistencyModel::strong(),
-                min_part_size: 0,
                 seed,
-                backend: BackendKind::default(),
+                ..StoreConfig::instant_strong()
             };
             let s = ObjectStore::new(cfg);
             let (_, d) = s.create_container("res", SimInstant::EPOCH);
@@ -946,10 +945,7 @@ mod tests {
                 scale_threshold: 0,
                 ..LatencyModel::instant()
             },
-            consistency: ConsistencyModel::strong(),
-            min_part_size: 0,
-            seed: 0,
-            backend: BackendKind::default(),
+            ..StoreConfig::instant_strong()
         };
         let s = ObjectStore::new(cfg);
         s.create_container("res", SimInstant::EPOCH).0.unwrap();

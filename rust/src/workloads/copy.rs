@@ -2,6 +2,7 @@
 //! a new dataset — equal parts read and write.
 
 use super::readonly::discover_parts;
+use crate::fs::FsInputStream;
 use super::{WorkloadEnv, WorkloadReport};
 use crate::spark::task::{body, TaskBody, TaskResult};
 use crate::spark::SparkJob;

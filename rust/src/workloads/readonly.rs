@@ -4,6 +4,7 @@
 
 use super::{WorkloadEnv, WorkloadReport};
 use crate::committer::CommitAlgorithm;
+use crate::fs::FsInputStream;
 use crate::runtime::{pad_chunk, CHUNK};
 use crate::spark::task::{body, TaskBody, TaskResult};
 use crate::spark::SparkJob;

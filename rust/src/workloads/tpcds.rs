@@ -9,7 +9,7 @@
 use super::{WorkloadEnv, WorkloadReport};
 use crate::columnar::RowGroup;
 use crate::committer::CommitAlgorithm;
-use crate::fs::Path;
+use crate::fs::{FsInputStream, Path};
 use crate::metrics::OpCounts;
 use crate::objectstore::Metadata;
 use crate::query::datagen::StarSchema;

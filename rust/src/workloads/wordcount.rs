@@ -10,6 +10,7 @@
 use super::readonly::discover_parts;
 use super::{WorkloadEnv, WorkloadReport};
 use crate::committer::CommitAlgorithm;
+use crate::fs::FsInputStream;
 use crate::objectstore::object::fnv1a;
 use crate::runtime::{fallback::bucket_of, pad_chunk, BUCKETS, CHUNK};
 use crate::spark::task::{body, TaskBody, TaskResult};

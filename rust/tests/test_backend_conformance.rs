@@ -449,3 +449,70 @@ fn front_end_op_counts_are_backend_invariant() {
     assert_eq!(mem_rt, sharded_rt);
     assert_eq!(mem_rt, fs_rt);
 }
+
+/// Regression (readahead × range contract): a readahead *fill* is
+/// `max(requested, window)` bytes, so near end-of-file it routinely asks
+/// for more than the object holds. A fill that starts before EOF must be
+/// clamped to partial content — never surfaced as `InvalidRange` — on
+/// every backend (the fs backend does a real seek+read); only a read
+/// starting strictly past EOF is the 416. Exercised through the full
+/// stack: connector → ReadaheadStream → ObjectStore → Backend.
+#[test]
+fn readahead_fill_clamps_at_eof_on_every_backend() {
+    use stocator::connectors::Stocator;
+    use stocator::fs::{FileSystem, FsError, FsInputStream, OpCtx, Path};
+    use stocator::objectstore::{ObjectStore, StoreConfig};
+
+    struct Reap(Option<PathBuf>);
+    impl Drop for Reap {
+        fn drop(&mut self) {
+            if let Some(p) = &self.0 {
+                let _ = std::fs::remove_dir_all(p);
+            }
+        }
+    }
+
+    let fs_root = unique_root("readahead-eof");
+    for kind in [
+        BackendKind::Mem,
+        BackendKind::Sharded(4),
+        BackendKind::LocalFs(Some(fs_root.clone())),
+    ] {
+        let _reap = Reap(match &kind {
+            BackendKind::LocalFs(Some(p)) => Some(p.clone()),
+            _ => None,
+        });
+        let store = ObjectStore::new(StoreConfig {
+            backend: kind.clone(),
+            readahead: 64,
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = Stocator::with_defaults(store.clone());
+        let mut c = OpCtx::new(SimInstant::EPOCH);
+        let path = Path::parse("swift2d://res/in/part-0").unwrap();
+        fs.write_all(&path, (0u8..100).collect(), true, &mut c).unwrap();
+        let mut input = fs.open(&path, &mut c).unwrap();
+        // The fill fetches 64 bytes from offset 90 — 54 past EOF: partial
+        // content, not a 416.
+        let tail = input.read_range(90, 8, &mut c).unwrap();
+        assert_eq!(tail, (90u8..98).collect::<Vec<u8>>(), "backend {kind:?}");
+        // A read spanning EOF clamps too (served from the EOF-touching
+        // window without another fill).
+        let spill = input.read_range(95, 20, &mut c).unwrap();
+        assert_eq!(spill, (95u8..100).collect::<Vec<u8>>(), "backend {kind:?}");
+        // Exactly at EOF: valid and empty. Strictly past: the 416,
+        // surfaced uniformly as FsError::InvalidRange.
+        assert!(input.read_range(100, 1, &mut c).unwrap().is_empty());
+        assert!(
+            matches!(input.read_range(101, 1, &mut c), Err(FsError::InvalidRange(_))),
+            "backend {kind:?}"
+        );
+        // And a fresh stream whose FIRST fill starts past EOF also 416s.
+        let mut fresh = fs.open(&path, &mut c).unwrap();
+        assert!(matches!(
+            fresh.read_range(200, 4, &mut c),
+            Err(FsError::InvalidRange(_))
+        ));
+    }
+}

@@ -15,7 +15,7 @@
 use std::sync::Arc;
 use stocator::committer::{Committer, JobContext, TaskAttemptContext};
 use stocator::connectors::naming::AttemptId;
-use stocator::fs::{FileSystem, OpCtx, Path};
+use stocator::fs::{FileSystem, FsInputStream, FsOutputStream, OpCtx, Path};
 use stocator::harness::{run_cell, Scenario, Sizing, Workload};
 use stocator::metrics::{OpCounts, OpKind};
 use stocator::objectstore::{
@@ -29,12 +29,20 @@ const PART_BYTES: usize = 200;
 const MULTIPART_SIZE: u64 = 64;
 
 fn build(scenario: Scenario) -> (Arc<ObjectStore>, Arc<dyn FileSystem>) {
+    build_with_readahead(scenario, 0)
+}
+
+fn build_with_readahead(
+    scenario: Scenario,
+    readahead: u64,
+) -> (Arc<ObjectStore>, Arc<dyn FileSystem>) {
     let store = ObjectStore::new(StoreConfig {
         latency: LatencyModel::paper_testbed(),
         consistency: ConsistencyModel::strong(),
         min_part_size: 0,
         seed: 0,
         backend: BackendKind::Mem,
+        readahead,
     });
     store.create_container("res", SimInstant::EPOCH).0.unwrap();
     let fs = scenario.connector(store.clone(), MULTIPART_SIZE);
@@ -211,6 +219,143 @@ fn scenario_op_totals_keep_paper_ordering() {
     let parts = ops.iter().filter(|l| l.contains("?partNumber=")).count();
     let completes = ops.iter().filter(|l| l.contains("(complete)")).count();
     assert_eq!((initiates, parts, completes), (1, 4, 1));
+}
+
+// ---- readahead snapshots ---------------------------------------------------
+//
+// The GET-coalescing half of the accounting safety net: a many-small-reads
+// job must issue ≥4× fewer GETs with readahead on — on every connector —
+// while returning identical bytes, and everything the paper's tables pin
+// (the one-object REST sequences, virtual runtimes with readahead off)
+// must stay byte-identical.
+
+/// Readahead window for the snapshots below (simulated bytes).
+const READAHEAD: u64 = 64;
+/// One small-record input object, read in `step`-byte sequential slices.
+const SMALL_OBJ_BYTES: usize = 400;
+
+/// Write one plain input object, then read it back in `step`-byte
+/// sequential `read_range` calls — the terasort-sampling/small-record
+/// shape. Returns (read-phase REST trace, read-phase op counts,
+/// read-phase virtual micros); the bytes read back are asserted
+/// byte-identical to the object inside.
+fn many_small_reads(
+    store: &ObjectStore,
+    fs: &dyn FileSystem,
+    scenario: Scenario,
+    step: usize,
+) -> (Vec<String>, OpCounts, u64) {
+    let path = Path::parse(&format!("{}://res/in/part-00000", scenario.scheme())).unwrap();
+    let data: Vec<u8> = (0..SMALL_OBJ_BYTES).map(|i| (i % 251) as u8).collect();
+    let mut setup = OpCtx::new(SimInstant::EPOCH);
+    fs.write_all(&path, data.clone(), true, &mut setup).unwrap();
+    let before = store.counters();
+    let mut ctx = OpCtx::traced(SimInstant::EPOCH);
+    let mut input = fs.open(&path, &mut ctx).unwrap();
+    let mut got = Vec::new();
+    for off in (0..SMALL_OBJ_BYTES).step_by(step) {
+        got.extend(input.read_range(off as u64, step as u64, &mut ctx).unwrap());
+    }
+    assert_eq!(got, data, "{scenario:?}: readback must be byte-identical");
+    let elapsed = ctx.elapsed.as_micros();
+    (
+        rest_ops(&ctx.take_trace()),
+        store.counters().since(&before),
+        elapsed,
+    )
+}
+
+/// Readahead on vs off, every scenario: identical bytes (asserted inside
+/// the job), ≥4× fewer GET ops, identical bytes over the wire (a pure
+/// sequential scan fetches the object exactly once either way), no change
+/// to any other op kind, and a strictly smaller virtual runtime.
+#[test]
+fn readahead_coalesces_many_small_reads_on_every_connector() {
+    for scenario in Scenario::ALL {
+        let (store_off, fs_off) = build(scenario);
+        let (_, off, t_off) = many_small_reads(&store_off, &*fs_off, scenario, 8);
+        let (store_on, fs_on) = build_with_readahead(scenario, READAHEAD);
+        let (_, on, t_on) = many_small_reads(&store_on, &*fs_on, scenario, 8);
+        let (gets_off, gets_on) = (off.get(OpKind::GetObject), on.get(OpKind::GetObject));
+        assert!(
+            gets_on * 4 <= gets_off,
+            "{scenario:?}: {gets_on} GETs with readahead vs {gets_off} without — want ≥4x fewer"
+        );
+        assert_eq!(
+            on.bytes_read, off.bytes_read,
+            "{scenario:?}: a sequential scan must not over-fetch"
+        );
+        for kind in [
+            OpKind::HeadObject,
+            OpKind::HeadContainer,
+            OpKind::PutObject,
+            OpKind::CopyObject,
+            OpKind::DeleteObject,
+            OpKind::GetContainer,
+        ] {
+            assert_eq!(
+                on.get(kind),
+                off.get(kind),
+                "{scenario:?}: readahead must only touch GETs ({kind:?})"
+            );
+        }
+        assert!(
+            t_on < t_off,
+            "{scenario:?}: readahead runtime {t_on}us must beat naive {t_off}us"
+        );
+    }
+}
+
+/// The exact Stocator fill sequence: window 64 doubles to 128 then 256 on
+/// sequential misses (clamped at EOF below), so 50 reads are 3 ranged
+/// GETs — still no HEAD before GET (§3.4; the first fill warms the
+/// cache).
+#[test]
+fn stocator_readahead_golden_fill_sequence() {
+    let (store, fs) = build_with_readahead(Scenario::Stocator, READAHEAD);
+    let (trace, counts, _) = many_small_reads(&store, &*fs, Scenario::Stocator, 8);
+    let expect = vec![
+        "stocator: GET res/in/part-00000 bytes=0+64",
+        "stocator: GET res/in/part-00000 bytes=64+128",
+        "stocator: GET res/in/part-00000 bytes=192+256",
+    ];
+    assert_eq!(trace, expect);
+    assert_eq!(counts.get(OpKind::GetObject), 3);
+    assert_eq!(counts.get(OpKind::HeadObject), 0, "no HEAD before GET (§3.4)");
+    assert_eq!(counts.bytes_read, SMALL_OBJ_BYTES as u64, "last fill clamps at EOF");
+}
+
+/// Caller chunking must not change the fills: 8-byte and 16-byte read
+/// steps hit the same window boundaries, so the REST sequences and the
+/// virtual runtimes are identical — the read-side analogue of the
+/// write-chunking invariance above.
+#[test]
+fn readahead_fills_are_chunking_invariant() {
+    for scenario in Scenario::ALL {
+        let (store_a, fs_a) = build_with_readahead(scenario, READAHEAD);
+        let (trace_a, ops_a, t_a) = many_small_reads(&store_a, &*fs_a, scenario, 8);
+        let (store_b, fs_b) = build_with_readahead(scenario, READAHEAD);
+        let (trace_b, ops_b, t_b) = many_small_reads(&store_b, &*fs_b, scenario, 16);
+        assert_eq!(trace_a, trace_b, "{scenario:?}: fill sequence must not depend on read chunking");
+        assert_eq!(ops_a, ops_b, "{scenario:?}");
+        assert_eq!(t_a, t_b, "{scenario:?}: virtual runtime must be chunking-invariant");
+    }
+}
+
+/// Whole-object reads bypass the window, so the paper's one-object job —
+/// Table 2's REST sequences, including the exact Stocator row — is
+/// byte-identical whether the readahead knob is on or off.
+#[test]
+fn one_object_job_rest_sequence_is_readahead_invariant() {
+    for scenario in Scenario::ALL {
+        let (store_off, fs_off) = build(scenario);
+        let (off, t_off, ops_off) = one_object_job(&store_off, &*fs_off, scenario, usize::MAX);
+        let (store_on, fs_on) = build_with_readahead(scenario, READAHEAD);
+        let (on, t_on, ops_on) = one_object_job(&store_on, &*fs_on, scenario, usize::MAX);
+        assert_eq!(off, on, "{scenario:?}: Table 2 sequence must not move");
+        assert_eq!(t_off, t_on, "{scenario:?}: virtual runtime must not move");
+        assert_eq!(ops_off, ops_on, "{scenario:?}");
+    }
 }
 
 /// Whole-cell determinism: a full Teragen cell (driver, committer,
