@@ -79,7 +79,65 @@ fn main() {
     println!();
     println!("read path through the connector (small reads: readahead vs naive):");
     read_path_rates();
+
+    println!();
+    println!("fault plane (zero-fault config must be free; faulted+retry for reference):");
+    retry_path_rates();
     println!("store_hotpath bench OK");
+}
+
+/// The transient-fault plane's hot-path tax: with NO faults armed the
+/// injector check is one relaxed atomic load per op, so a store built
+/// with a (never-firing) retry budget must match the plain write path —
+/// that is the gate. A config that actually faults every object's PUT
+/// once (and retries it) is measured for reference only: it does
+/// strictly more store work by design.
+fn retry_path_rates() {
+    use stocator::objectstore::{FaultOp, FaultRule, FaultSpec, RetryPolicy};
+    let mk = |faults: FaultSpec, retries: u32| {
+        let store = ObjectStore::new(StoreConfig {
+            faults,
+            retry: RetryPolicy::with_retries(retries),
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("c", SimInstant::EPOCH).0.unwrap();
+        Stocator::with_defaults(store)
+    };
+    let path = |i: u64| {
+        Path::parse(&format!("swift2d://c/bench/part-{:06}", i % 50_000)).unwrap()
+    };
+    let plain_fs = mk(FaultSpec::none(), 0);
+    let plain = bench("write_all 64KiB (no fault plane)", 20_000, |i| {
+        let mut ctx = OpCtx::new(SimInstant(i));
+        plain_fs.write_all(&path(i), vec![5u8; WRITE_BYTES], true, &mut ctx)
+            .unwrap();
+    });
+    let armed_fs = mk(FaultSpec::none(), 2);
+    let armed = bench("write_all 64KiB (retries armed)", 20_000, |i| {
+        let mut ctx = OpCtx::new(SimInstant(i));
+        armed_fs.write_all(&path(i), vec![5u8; WRITE_BYTES], true, &mut ctx)
+            .unwrap();
+    });
+    // Reference only: one scheduled fault fires during warmup, after
+    // which the expired rule is dropped and the plane is idle again —
+    // steady state must look like the plain path.
+    let faulty_fs = mk(
+        FaultSpec::none().with(FaultRule::new(FaultOp::Put, "", 1, 1)),
+        1,
+    );
+    let faulted = bench("write_all 64KiB (after 1 fault fired)", 20_000, |i| {
+        let mut ctx = OpCtx::new(SimInstant(i));
+        faulty_fs.write_all(&path(i), vec![5u8; WRITE_BYTES], true, &mut ctx)
+            .unwrap();
+    });
+    println!("armed/plain ratio: {:.2}x, post-fault/plain: {:.2}x", armed / plain, faulted / plain);
+    // The gate: an idle fault plane must be wall-clock-neutral (10%
+    // margin for timer noise on loaded shared runners).
+    assert!(
+        armed >= plain * 0.90,
+        "idle fault plane slowed the write path: {armed:.0}/s vs {plain:.0}/s"
+    );
+    assert!(armed > 5_000.0, "armed write path too slow: {armed:.0}/s");
 }
 
 const WRITE_BYTES: usize = 64 * 1024;

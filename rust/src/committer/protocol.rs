@@ -196,6 +196,31 @@ impl Committer {
         }
     }
 
+    /// Executor-side cleanup after a FAILED attempt — how a task-body
+    /// error maps onto the commit protocol. Crash-class failures mean
+    /// the executor died mid-write: nobody is left to clean up, the
+    /// attempt's debris stays, and the read-side strategies must
+    /// tolerate it (paper §3.2). An exhausted transient budget
+    /// ([`FsError::TransientExhausted`]) leaves the executor *alive*, so
+    /// — like real Spark calling `abortTask` after a task failure — the
+    /// attempt is aborted properly before the driver schedules the
+    /// re-attempt. Returns whether an abort ran.
+    pub fn cleanup_failed_attempt(
+        &self,
+        fs: &dyn FileSystem,
+        task: &TaskAttemptContext,
+        err: &FsError,
+        ctx: &mut OpCtx,
+    ) -> bool {
+        match err {
+            FsError::TransientExhausted(_) => {
+                let _ = self.abort_task(fs, task, ctx);
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Executor: abort an attempt — delete its working directory.
     pub fn abort_task(
         &self,
@@ -475,6 +500,38 @@ mod tests {
             swift.exists(&Path::parse("swift://res/unsafe/part-00000").unwrap(), &mut c),
             "direct committer cannot undo a failed attempt"
         );
+    }
+
+    #[test]
+    fn cleanup_failed_attempt_aborts_only_transient_exhaustion() {
+        let store = ObjectStore::new(StoreConfig::instant_strong());
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let swift = HadoopSwift::new(store.clone());
+        let job = JobContext::new(Path::parse("swift://res/out").unwrap());
+        let committer = Committer::new(CommitAlgorithm::V1);
+        let mut c = ctx();
+        committer.setup_job(&*swift, &job, &mut c).unwrap();
+        let t = TaskAttemptContext::new(&job, attempt(0, 0));
+        committer.setup_task(&*swift, &t, &mut c).unwrap();
+        committer
+            .write_part(&*swift, &t, "part-00000", b"half-done".to_vec(), &mut c)
+            .unwrap();
+        // A crash-class failure: the executor died — nothing is cleaned.
+        assert!(!committer.cleanup_failed_attempt(
+            &*swift,
+            &t,
+            &FsError::Io("injected crash mid-stream".into()),
+            &mut c,
+        ));
+        assert!(swift.exists(&t.attempt_dir(), &mut c));
+        // Transient exhaustion: the live executor aborts the attempt.
+        assert!(committer.cleanup_failed_attempt(
+            &*swift,
+            &t,
+            &FsError::TransientExhausted("503".into()),
+            &mut c,
+        ));
+        assert!(!swift.exists(&t.attempt_dir(), &mut c));
     }
 
     #[test]

@@ -47,15 +47,81 @@ pub(crate) fn marker_key(key: &str) -> String {
 
 /// Map a store error onto the filesystem error space. Shared by every
 /// connector so 404s surface as `NotFound` and 416s as `InvalidRange`
-/// uniformly, whichever connector a caller reads through.
+/// uniformly, whichever connector a caller reads through. A
+/// `TransientFailure` that reaches this map was not (or no longer)
+/// retryable on its path — by definition its retry budget is exhausted,
+/// so it surfaces as [`FsError::TransientExhausted`] and the scheduler's
+/// task re-attempt machinery takes over.
 pub(crate) fn map_store_error(e: StoreError, path: &Path) -> FsError {
     match e {
         StoreError::NoSuchKey(_) | StoreError::NoSuchContainer(_) => {
             FsError::NotFound(path.to_string())
         }
         StoreError::InvalidRange(m) => FsError::InvalidRange(m),
+        StoreError::TransientFailure(m) => FsError::TransientExhausted(m),
         other => FsError::Io(other.to_string()),
     }
+}
+
+/// Drive one whole-object PUT under the store's [`RetryPolicy`]
+/// (`StoreConfig::retry`): on an injected `TransientFailure` the failed
+/// request is visible in the trace as `"<label> (503 transient)"`, the
+/// exponential virtual-clock backoff is charged, and the PUT is
+/// re-issued with the same body — callers whose bytes survive locally
+/// (spool connectors, markers, Stocator's buffered chunked PUT) all
+/// resume by re-sending, which is exactly what the wire sees. Exhausted
+/// budgets surface as [`FsError::TransientExhausted`]. With zero
+/// retries (the default) and no injected faults this is byte-for-byte
+/// the old single-PUT path: same ops, same trace lines, same clock.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn put_with_retry(
+    store: &ObjectStore,
+    actor: &'static str,
+    path: &Path,
+    cont: &str,
+    key: &str,
+    data: Vec<u8>,
+    metadata: crate::objectstore::Metadata,
+    label: &str,
+    ctx: &mut OpCtx,
+) -> Result<(), FsError> {
+    // An idle injector can never produce a TransientFailure, so a single
+    // attempt suffices and the payload is moved, never cloned — the
+    // fault-free hot path stays copy-free whatever the retry budget.
+    let attempts = if store.faults_idle() {
+        1
+    } else {
+        store.config.retry.attempts()
+    };
+    let mut body = Some(data);
+    for attempt in 1..=attempts {
+        // Clone only when a later re-send might need the bytes again.
+        let payload = if attempt == attempts {
+            body.take().expect("payload")
+        } else {
+            body.clone().expect("payload")
+        };
+        let (r, d) = store.put_object(cont, key, payload, metadata.clone(), ctx.now());
+        ctx.add(d);
+        match r {
+            Ok(()) => {
+                ctx.record(actor, || label.to_string());
+                return Ok(());
+            }
+            Err(StoreError::TransientFailure(m)) => {
+                ctx.record(actor, || format!("{label} (503 transient)"));
+                if attempt == attempts {
+                    return Err(FsError::TransientExhausted(m));
+                }
+                ctx.add(store.config.retry.backoff(attempt));
+            }
+            Err(e) => {
+                ctx.record(actor, || label.to_string());
+                return Err(map_store_error(e, path));
+            }
+        }
+    }
+    unreachable!("retry loop returns on its final attempt")
 }
 
 /// Unwrap an `Arc<Vec<u8>>` without copying when this is the only holder
@@ -151,31 +217,66 @@ impl FsInputStream for StoreInputStream<'_> {
 
     fn read_range(&mut self, offset: u64, len: u64, ctx: &mut OpCtx) -> Result<Vec<u8>, FsError> {
         let (cont, key) = container_key(&self.path);
-        let (r, d) = self.store.get_object_range(cont, key, offset, len);
-        ctx.add(d);
-        ctx.record(self.actor, || {
-            format!("GET {cont}/{key} bytes={offset}+{len}")
-        });
-        match r {
-            Ok(g) => {
-                self.note_head(&g.head);
-                Ok(unwrap_bytes(g.data))
+        // GETs are idempotent, so the stream retry contract is simple:
+        // re-issue the same ranged GET after the backoff, up to the
+        // shared retry budget.
+        let attempts = self.store.config.retry.attempts();
+        for attempt in 1..=attempts {
+            let (r, d) = self.store.get_object_range(cont, key, offset, len);
+            ctx.add(d);
+            match r {
+                Ok(g) => {
+                    ctx.record(self.actor, || {
+                        format!("GET {cont}/{key} bytes={offset}+{len}")
+                    });
+                    self.note_head(&g.head);
+                    return Ok(unwrap_bytes(g.data));
+                }
+                Err(StoreError::TransientFailure(m)) => {
+                    ctx.record(self.actor, || {
+                        format!("GET {cont}/{key} bytes={offset}+{len} (503 transient)")
+                    });
+                    if attempt == attempts {
+                        return Err(FsError::TransientExhausted(m));
+                    }
+                    ctx.add(self.store.config.retry.backoff(attempt));
+                }
+                Err(e) => {
+                    ctx.record(self.actor, || {
+                        format!("GET {cont}/{key} bytes={offset}+{len}")
+                    });
+                    return Err(map_store_error(e, &self.path));
+                }
             }
-            Err(e) => Err(map_store_error(e, &self.path)),
         }
+        unreachable!("retry loop returns on its final attempt")
     }
 
     fn read_to_end(&mut self, ctx: &mut OpCtx) -> Result<Arc<Vec<u8>>, FsError> {
         let (cont, key) = container_key(&self.path);
-        let (r, d) = self.store.get_object(cont, key);
-        ctx.add(d);
-        ctx.record(self.actor, || format!("GET {cont}/{key}"));
-        match r {
-            Ok(g) => {
-                self.note_head(&g.head);
-                Ok(g.data)
+        let attempts = self.store.config.retry.attempts();
+        for attempt in 1..=attempts {
+            let (r, d) = self.store.get_object(cont, key);
+            ctx.add(d);
+            match r {
+                Ok(g) => {
+                    ctx.record(self.actor, || format!("GET {cont}/{key}"));
+                    self.note_head(&g.head);
+                    return Ok(g.data);
+                }
+                Err(StoreError::TransientFailure(m)) => {
+                    ctx.record(self.actor, || format!("GET {cont}/{key} (503 transient)"));
+                    if attempt == attempts {
+                        return Err(FsError::TransientExhausted(m));
+                    }
+                    ctx.add(self.store.config.retry.backoff(attempt));
+                }
+                Err(e) => {
+                    ctx.record(self.actor, || format!("GET {cont}/{key}"));
+                    return Err(map_store_error(e, &self.path));
+                }
             }
-            Err(e) => Err(map_store_error(e, &self.path)),
         }
+        unreachable!("retry loop returns on its final attempt")
     }
 }

@@ -17,10 +17,12 @@
 //!   (`S3AFastOutputStream`, §3.3) is on, which streams via multipart
 //!   upload at the cost of ≥5 MB in-memory parts.
 
-use super::{container_key, map_store_error, marker_key, maybe_readahead, StoreInputStream};
+use super::{
+    container_key, map_store_error, marker_key, maybe_readahead, put_with_retry, StoreInputStream,
+};
 use crate::fs::status::FileStatus;
 use crate::fs::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx, Path};
-use crate::objectstore::{Metadata, ObjectStore};
+use crate::objectstore::{Metadata, ObjectStore, StoreError};
 use crate::simclock::SimInstant;
 use std::sync::Arc;
 
@@ -127,11 +129,20 @@ impl S3a {
         ctx.add(d);
         ctx.record("s3a", || format!("GET container ?prefix={mk} (empty check)"));
         if matches!(r, Ok(l) if l.is_empty()) {
-            let (_, d) = self
-                .store
-                .put_object(cont, &mk, Vec::new(), Metadata::new(), ctx.now());
-            ctx.add(d);
-            ctx.record("s3a", || format!("PUT {cont}/{mk} (fake dir)"));
+            // Best-effort like the real connector (failure is swallowed),
+            // but transients still get the shared retry budget so a
+            // flaky PUT doesn't silently lose the marker.
+            let _ = put_with_retry(
+                &self.store,
+                "s3a",
+                dir,
+                cont,
+                &mk,
+                Vec::new(),
+                Metadata::new(),
+                &format!("PUT {cont}/{mk} (fake dir)"),
+                ctx,
+            );
         }
     }
 
@@ -161,6 +172,90 @@ struct S3aOutputStream<'a> {
 }
 
 impl S3aOutputStream<'_> {
+    /// PUT one part under the shared retry contract: fast upload's
+    /// recovery advantage is that a transient part failure re-sends
+    /// ONLY that part (the bytes are still in memory) — the initiated
+    /// upload, all previously accepted parts, and the rest of the
+    /// buffer are untouched. Exhausted budgets leave the upload in
+    /// flight (the stranded-upload hazard the `--multipart-ttl` sweep
+    /// reaps).
+    fn upload_part_with_retry(
+        &self,
+        upload: u64,
+        part: u32,
+        data: Vec<u8>,
+        ctx: &mut OpCtx,
+    ) -> Result<(), FsError> {
+        let (cont, key) = container_key(&self.path);
+        // Idle injector = no possible 503 = one attempt, zero clones.
+        let attempts = if self.fs.store.faults_idle() {
+            1
+        } else {
+            self.fs.store.config.retry.attempts()
+        };
+        let mut body = Some(data);
+        for attempt in 1..=attempts {
+            // Clone only when a later re-send might need the part again.
+            let payload = if attempt == attempts {
+                body.take().expect("part payload")
+            } else {
+                body.clone().expect("part payload")
+            };
+            let (r, d) = self.fs.store.upload_part(upload, part, payload);
+            ctx.add(d);
+            match r {
+                Ok(()) => {
+                    ctx.record("s3a", || format!("PUT {cont}/{key}?partNumber={part}"));
+                    return Ok(());
+                }
+                Err(StoreError::TransientFailure(m)) => {
+                    ctx.record("s3a", || {
+                        format!("PUT {cont}/{key}?partNumber={part} (503 transient)")
+                    });
+                    if attempt == attempts {
+                        return Err(FsError::TransientExhausted(m));
+                    }
+                    ctx.add(self.fs.store.config.retry.backoff(attempt));
+                }
+                Err(e) => {
+                    ctx.record("s3a", || format!("PUT {cont}/{key}?partNumber={part}"));
+                    return Err(FsError::Io(e.to_string()));
+                }
+            }
+        }
+        unreachable!("retry loop returns on its final attempt")
+    }
+
+    /// Complete the upload under the retry contract. A transient
+    /// completion failure leaves the upload (and every part) intact on
+    /// the store, so the retry is a bare re-POST — nothing is re-sent.
+    fn complete_with_retry(&self, upload: u64, ctx: &mut OpCtx) -> Result<(), FsError> {
+        let (cont, key) = container_key(&self.path);
+        let attempts = self.fs.store.config.retry.attempts();
+        for attempt in 1..=attempts {
+            let (r, d) = self.fs.store.complete_multipart(upload, ctx.now());
+            ctx.add(d);
+            match r {
+                Ok(()) => {
+                    ctx.record("s3a", || format!("POST {cont}/{key} (complete)"));
+                    return Ok(());
+                }
+                Err(StoreError::TransientFailure(m)) => {
+                    ctx.record("s3a", || format!("POST {cont}/{key} (complete) (503 transient)"));
+                    if attempt == attempts {
+                        return Err(FsError::TransientExhausted(m));
+                    }
+                    ctx.add(self.fs.store.config.retry.backoff(attempt));
+                }
+                Err(e) => {
+                    ctx.record("s3a", || format!("POST {cont}/{key} (complete)"));
+                    return Err(FsError::Io(e.to_string()));
+                }
+            }
+        }
+        unreachable!("retry loop returns on its final attempt")
+    }
+
     /// Flush every full `multipart_size` chunk, initiating the upload on
     /// the first flush. Chunk boundaries depend only on the byte count,
     /// never on how callers split their `write`s, so op accounting is
@@ -174,7 +269,10 @@ impl S3aOutputStream<'_> {
         let mut failure = None;
         while self.buf.len() - consumed > psize {
             if self.upload.is_none() {
-                let (r, d) = self.fs.store.initiate_multipart(cont, key, Metadata::new());
+                let (r, d) = self
+                    .fs
+                    .store
+                    .initiate_multipart(cont, key, Metadata::new(), ctx.now());
                 ctx.add(d);
                 ctx.record("s3a", || format!("POST {cont}/{key}?uploads (initiate)"));
                 match r {
@@ -185,13 +283,11 @@ impl S3aOutputStream<'_> {
                     }
                 }
             }
-            let chunk = self.buf[consumed..consumed + psize].to_vec();
             let part = self.next_part;
-            let (r, d) = self.fs.store.upload_part(self.upload.unwrap(), part, chunk);
-            ctx.add(d);
-            ctx.record("s3a", || format!("PUT {cont}/{key}?partNumber={part}"));
-            if let Err(e) = r {
-                failure = Some(FsError::Io(e.to_string()));
+            let upload = self.upload.unwrap();
+            let chunk = self.buf[consumed..consumed + psize].to_vec();
+            if let Err(e) = self.upload_part_with_retry(upload, part, chunk, ctx) {
+                failure = Some(e);
                 break;
             }
             consumed += psize;
@@ -255,25 +351,26 @@ impl FsOutputStream for S3aOutputStream<'_> {
             Some(id) => {
                 if !data.is_empty() {
                     let part = self.next_part;
-                    let (r, d) = self.fs.store.upload_part(id, part, data);
-                    ctx.add(d);
-                    ctx.record("s3a", || format!("PUT {cont}/{key}?partNumber={part}"));
-                    r.map_err(|e| FsError::Io(e.to_string()))?;
+                    self.upload_part_with_retry(id, part, data, ctx)?;
                     self.next_part += 1;
                 }
-                let (r, d) = self.fs.store.complete_multipart(id, ctx.now());
-                ctx.add(d);
-                ctx.record("s3a", || format!("POST {cont}/{key} (complete)"));
-                r.map_err(|e| FsError::Io(e.to_string()))?;
+                self.complete_with_retry(id, ctx)?;
             }
             None => {
-                let (r, d) = self
-                    .fs
-                    .store
-                    .put_object(cont, key, data, Metadata::new(), ctx.now());
-                ctx.add(d);
-                ctx.record("s3a", || format!("PUT {cont}/{key}"));
-                r.map_err(|e| FsError::Io(e.to_string()))?;
+                // Base path: the whole part is spooled on local disk, so
+                // a transient PUT failure resumes cheaply — re-PUT the
+                // spool (wire transfer repeats; disk time does not).
+                put_with_retry(
+                    &self.fs.store,
+                    "s3a",
+                    &self.path,
+                    cont,
+                    key,
+                    data,
+                    Metadata::new(),
+                    &format!("PUT {cont}/{key}"),
+                    ctx,
+                )?;
             }
         }
         self.fs.delete_unnecessary_fake_directories(&self.path, ctx);
@@ -307,12 +404,17 @@ impl FileSystem for S3a {
         }
         let (cont, key) = container_key(path);
         let mk = marker_key(key);
-        let (r, d) = self
-            .store
-            .put_object(cont, &mk, Vec::new(), Metadata::new(), ctx.now());
-        ctx.add(d);
-        ctx.record("s3a", || format!("PUT {cont}/{mk} (fake dir)"));
-        r.map_err(|e| map_store_error(e, path))
+        put_with_retry(
+            &self.store,
+            "s3a",
+            path,
+            cont,
+            &mk,
+            Vec::new(),
+            Metadata::new(),
+            &format!("PUT {cont}/{mk} (fake dir)"),
+            ctx,
+        )
     }
 
     fn create(
@@ -660,6 +762,109 @@ mod tests {
         let mut c2 = ctx();
         slow.write_all(&p("s3a://res/g"), vec![0u8; 1000], true, &mut c2).unwrap();
         assert!(c2.elapsed.as_secs_f64() > 100.0, "buffered path must pay disk time");
+    }
+
+    #[test]
+    fn fast_upload_retries_only_the_failed_part() {
+        use crate::objectstore::{FaultOp, FaultSpec, RetryPolicy};
+        let store = ObjectStore::new(StoreConfig {
+            faults: FaultSpec::one(FaultOp::UploadPart, "big", 2),
+            retry: RetryPolicy::with_retries(1),
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = S3a::new(
+            store.clone(),
+            S3aConfig {
+                fast_upload: true,
+                multipart_size: 4,
+            },
+        );
+        let mut c = OpCtx::traced(SimInstant::EPOCH);
+        fs.write_all(&p("s3a://res/big"), vec![7u8; 10], true, &mut c).unwrap();
+        let rest: Vec<String> = c
+            .take_trace()
+            .into_iter()
+            .filter(|l| l.contains("partNumber") || l.contains("uploads") || l.contains("complete"))
+            .collect();
+        assert_eq!(
+            rest,
+            vec![
+                "s3a: POST res/big?uploads (initiate)",
+                "s3a: PUT res/big?partNumber=1",
+                "s3a: PUT res/big?partNumber=2 (503 transient)",
+                "s3a: PUT res/big?partNumber=2",
+                "s3a: PUT res/big?partNumber=3",
+                "s3a: POST res/big (complete)",
+            ],
+            "only part 2 is re-sent"
+        );
+        // Wire bytes: 10 object bytes + the 4-byte re-sent part.
+        assert_eq!(store.counters().bytes_written, 14);
+        let mut c2 = OpCtx::new(SimInstant::EPOCH);
+        assert_eq!(*fs.read_all(&p("s3a://res/big"), &mut c2).unwrap(), vec![7u8; 10]);
+    }
+
+    #[test]
+    fn exhausted_part_retries_strand_the_upload() {
+        use crate::objectstore::{FaultOp, FaultRule, FaultSpec, RetryPolicy};
+        // Part 2 fails on every try: the stream errors with
+        // TransientExhausted and the initiated upload stays in flight —
+        // the stranded-upload debris the multipart GC sweep reaps.
+        let store = ObjectStore::new(StoreConfig {
+            faults: FaultSpec::none().with(FaultRule::new(FaultOp::UploadPart, "big", 2, 10)),
+            retry: RetryPolicy::with_retries(2),
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = S3a::new(
+            store.clone(),
+            S3aConfig {
+                fast_upload: true,
+                multipart_size: 4,
+            },
+        );
+        let mut c = ctx();
+        let err = fs.write_all(&p("s3a://res/big"), vec![7u8; 10], true, &mut c);
+        assert!(matches!(err, Err(FsError::TransientExhausted(_))));
+        assert!(fs.get_file_status(&p("s3a://res/big"), &mut c).is_err());
+        assert_eq!(store.debug_multipart_in_flight(), 1);
+        // Part 1 (4 bytes) is parked in the stranded upload...
+        assert_eq!(store.debug_stranded_multipart_bytes(), 4);
+        // ...until the lifecycle sweep aborts it.
+        let (sweep, _) = store.sweep_stale_multiparts(
+            SimInstant(10_000_000),
+            crate::simclock::SimDuration::from_secs(1),
+        );
+        assert_eq!((sweep.aborted, sweep.freed_bytes), (1, 4));
+        assert_eq!(store.debug_multipart_in_flight(), 0);
+    }
+
+    #[test]
+    fn transient_complete_is_reposted_without_resending_parts() {
+        use crate::objectstore::{FaultOp, FaultSpec, RetryPolicy};
+        let store = ObjectStore::new(StoreConfig {
+            faults: FaultSpec::one(FaultOp::CompleteMultipart, "big", 1),
+            retry: RetryPolicy::with_retries(1),
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = S3a::new(
+            store.clone(),
+            S3aConfig {
+                fast_upload: true,
+                multipart_size: 4,
+            },
+        );
+        let mut c = ctx();
+        let before = store.counters();
+        fs.write_all(&p("s3a://res/big"), vec![7u8; 10], true, &mut c).unwrap();
+        let d = store.counters().since(&before);
+        // initiate + 3 parts + failed complete + retried complete.
+        assert_eq!(d.get(OpKind::PutObject), 6);
+        assert_eq!(d.bytes_written, 10, "no part is ever re-sent");
+        let mut c2 = ctx();
+        assert_eq!(fs.read_all(&p("s3a://res/big"), &mut c2).unwrap().len(), 10);
     }
 
     #[test]

@@ -210,11 +210,30 @@ impl Stocator {
         match self.cfg.read_strategy {
             ReadStrategy::Manifest => {
                 // GET _SUCCESS (carries the manifest); reconstruct names.
-                let (r, d) = self.store.get_object(cont, &success_key);
-                ctx.add(d);
-                ctx.record("stocator", || format!("GET {cont}/{success_key} (manifest)"));
-                match r {
-                    Ok(g) => {
+                // Transient failures are retried under the shared policy
+                // first — only an exhausted budget (or a real miss)
+                // degrades to the listing fallback.
+                let attempts = self.store.config.retry.attempts();
+                let mut fetched = None;
+                for attempt in 1..=attempts {
+                    let (r, d) = self.store.get_object(cont, &success_key);
+                    ctx.add(d);
+                    if matches!(r, Err(StoreError::TransientFailure(_))) {
+                        ctx.record("stocator", || {
+                            format!("GET {cont}/{success_key} (manifest) (503 transient)")
+                        });
+                        if attempt < attempts {
+                            ctx.add(self.store.config.retry.backoff(attempt));
+                            continue;
+                        }
+                        break;
+                    }
+                    ctx.record("stocator", || format!("GET {cont}/{success_key} (manifest)"));
+                    fetched = Some(r);
+                    break;
+                }
+                match fetched {
+                    Some(Ok(g)) => {
                         if let Some(records) = Self::parse_manifest(&g.data) {
                             let mut out = Vec::new();
                             for (basename, attempt, size) in records {
@@ -239,7 +258,9 @@ impl Stocator {
                         // by someone else): fall back to listing.
                         self.list_dataset(path, ctx)
                     }
-                    Err(_) => self.list_dataset(path, ctx),
+                    // Missing _SUCCESS or an exhausted transient budget:
+                    // degrade to the listing read path.
+                    _ => self.list_dataset(path, ctx),
                 }
             }
             ReadStrategy::List => {
@@ -395,20 +416,34 @@ impl FsOutputStream for StocatorOutputStream<'_> {
         let size = data.len() as u64;
         let put_key = self.put_key().to_string();
         let cont = self.cont.clone();
-        let (r, d) = self
-            .fs
-            .store
-            .put_object(&cont, &put_key, data, Metadata::new(), ctx.now());
-        ctx.add(d);
         let intercepted = matches!(self.target, StocTarget::Part { .. });
-        ctx.record("stocator", || {
-            if intercepted {
-                format!("(intercept) PUT {cont}/{put_key}")
-            } else {
-                format!("PUT {cont}/{put_key}")
-            }
-        });
-        r.map_err(|e| map_store_error(e, &self.path))?;
+        let label = if intercepted {
+            format!("(intercept) PUT {cont}/{put_key}")
+        } else {
+            format!("PUT {cont}/{put_key}")
+        };
+        // THE paper's fragility footnote (§3.3): a chunked-transfer PUT
+        // cannot be resumed. On a transient failure the whole streamed
+        // body — which Stocator never spooled to disk — must be re-sent
+        // from offset 0, so every retry re-pays the full object's wire
+        // bytes (visible in Fig 7-style accounting), where fast upload
+        // re-sends one part and the spool connectors re-PUT for free
+        // disk-wise. The restart targets the same attempt-qualified
+        // name (an atomic overwrite of whatever partial state the
+        // failed transfer left); a *genuinely* fresh attempt name
+        // arrives only when retries exhaust and the scheduler launches
+        // a new task attempt.
+        super::put_with_retry(
+            &self.fs.store,
+            "stocator",
+            &self.path,
+            &cont,
+            &put_key,
+            data,
+            Metadata::new(),
+            &label,
+            ctx,
+        )?;
         self.fs.cache.invalidate(&put_key);
         if let StocTarget::Part {
             final_key,
@@ -501,14 +536,31 @@ impl FileSystem for Stocator {
                 if need_marker && !dataset.is_empty() {
                     let mut md = Metadata::new();
                     md.insert(ORIGIN_KEY.into(), ORIGIN_VALUE.into());
-                    let (r, d) =
-                        self.store.put_object(cont, &dataset, Vec::new(), md, ctx.now());
-                    ctx.add(d);
-                    ctx.record("stocator", || {
-                        format!("PUT {cont}/{dataset} (dataset marker)")
-                    });
+                    let r = super::put_with_retry(
+                        &self.store,
+                        "stocator",
+                        path,
+                        cont,
+                        &dataset,
+                        Vec::new(),
+                        md,
+                        &format!("PUT {cont}/{dataset} (dataset marker)"),
+                        ctx,
+                    );
                     self.cache.invalidate(&dataset);
-                    r.map_err(|e| map_store_error(e, path))?;
+                    if r.is_err() {
+                        // The marker never landed: release the latch so a
+                        // task re-attempt (or the next mkdirs) re-writes
+                        // it instead of permanently losing the §3.1
+                        // origin marker.
+                        self.state
+                            .lock()
+                            .unwrap()
+                            .entry(dataset.clone())
+                            .or_default()
+                            .marker_written = false;
+                    }
+                    r?;
                 }
                 ctx.record("stocator", || {
                     format!("(intercept) mkdirs {key} -> no-op")
@@ -520,14 +572,24 @@ impl FileSystem for Stocator {
                 // the Stocator origin metadata (§3.1).
                 let mut md = Metadata::new();
                 md.insert(ORIGIN_KEY.into(), ORIGIN_VALUE.into());
-                let (r, d) = self.store.put_object(cont, key, Vec::new(), md, ctx.now());
-                ctx.add(d);
-                ctx.record("stocator", || format!("PUT {cont}/{key} (dataset marker)"));
+                let r = super::put_with_retry(
+                    &self.store,
+                    "stocator",
+                    path,
+                    cont,
+                    key,
+                    Vec::new(),
+                    md,
+                    &format!("PUT {cont}/{key} (dataset marker)"),
+                    ctx,
+                );
                 self.cache.invalidate(key);
+                // Latch only a marker that actually landed, so a failed
+                // PUT is re-driven by the next mkdirs/attempt.
                 let mut state = self.state.lock().unwrap();
-                state.entry(key.to_string()).or_default().marker_written = true;
+                state.entry(key.to_string()).or_default().marker_written = r.is_ok();
                 drop(state);
-                r.map_err(|e| map_store_error(e, path))
+                r
             }
         }
     }
@@ -1143,6 +1205,85 @@ mod tests {
         assert_eq!(parts.len(), 1);
         assert_eq!(parts[0].len, 9, "the truncated attempt must lose");
         assert!(parts[0].path.name().ends_with("m_000000_1"));
+    }
+
+    #[test]
+    fn transient_put_restarts_the_whole_chunked_transfer() {
+        use crate::objectstore::{FaultOp, FaultSpec, RetryPolicy, StoreConfig};
+        // The §3.3 fragility footnote: the chunked PUT cannot resume, so
+        // the retry re-sends the ENTIRE object — wire bytes double.
+        let store = ObjectStore::new(StoreConfig {
+            faults: FaultSpec::one(FaultOp::Put, "d/part-0_attempt", 1),
+            retry: RetryPolicy::with_retries(1),
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = Stocator::with_defaults(store.clone());
+        let mut c = OpCtx::traced(SimInstant::EPOCH);
+        fs.write_all(&temp_file("d", 0, 0, "part-0"), vec![9u8; 100], true, &mut c)
+            .unwrap();
+        let trace = c.take_trace();
+        let key = "d/part-0_attempt_201512062056_0000_m_000000_0";
+        assert_eq!(
+            trace,
+            vec![
+                format!("stocator: (intercept) PUT res/{key} (503 transient)"),
+                format!("stocator: (intercept) PUT res/{key}"),
+            ]
+        );
+        // Full-object re-send: 100 bytes twice over the wire, vs fast
+        // upload's single-part re-send.
+        assert_eq!(store.counters().bytes_written, 200);
+        // Exactly one (complete) object landed, at the same
+        // attempt-qualified name, and the read side sees it.
+        assert_eq!(store.debug_names("res", "d/"), vec![key.to_string()]);
+        let mut c2 = ctx();
+        let data = fs
+            .read_all(&p(&format!("swift2d://res/{key}")), &mut c2)
+            .unwrap();
+        assert_eq!(data.len(), 100);
+    }
+
+    #[test]
+    fn exhausted_chunked_put_leaves_no_object_but_burns_wire_bytes() {
+        use crate::objectstore::{FaultOp, FaultRule, FaultSpec, RetryPolicy, StoreConfig};
+        let store = ObjectStore::new(StoreConfig {
+            faults: FaultSpec::none()
+                .with(FaultRule::new(FaultOp::Put, "d/part-0_attempt", 1, 5)),
+            retry: RetryPolicy::with_retries(2),
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = Stocator::with_defaults(store.clone());
+        let mut c = ctx();
+        let err = fs.write_all(&temp_file("d", 0, 0, "part-0"), vec![9u8; 50], true, &mut c);
+        assert!(matches!(err, Err(FsError::TransientExhausted(_))));
+        // 3 failed attempts × 50 bytes each went onto the wire...
+        assert_eq!(store.counters().bytes_written, 150);
+        // ...but the store rejected each transfer: no debris object.
+        assert!(store.debug_names("res", "d/").is_empty());
+    }
+
+    #[test]
+    fn transient_get_retries_and_reads_identical_bytes() {
+        use crate::objectstore::{FaultOp, FaultSpec, RetryPolicy, StoreConfig};
+        let store = ObjectStore::new(StoreConfig {
+            faults: FaultSpec::one(FaultOp::Get, "in/", 1),
+            retry: RetryPolicy::with_retries(1),
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = Stocator::with_defaults(store.clone());
+        let mut c = ctx();
+        fs.write_all(&p("swift2d://res/in/part-0"), (0u8..80).collect(), true, &mut c)
+            .unwrap();
+        let before = store.counters();
+        let data = fs.read_all(&p("swift2d://res/in/part-0"), &mut c).unwrap();
+        assert_eq!(&*data, &(0u8..80).collect::<Vec<u8>>()[..]);
+        let d = store.counters().since(&before);
+        assert_eq!(d.get(OpKind::GetObject), 2, "failed GET + retried GET");
+        assert_eq!(d.bytes_read, 80, "only the successful GET moves bytes");
+        assert_eq!(d.get(OpKind::HeadObject), 0, "still no HEAD before GET (§3.4)");
     }
 
     #[test]

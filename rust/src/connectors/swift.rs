@@ -14,7 +14,9 @@
 //!   PUT (no chunked transfer encoding, §3.3);
 //! * reads HEAD the object before GETting it.
 
-use super::{container_key, map_store_error, marker_key, maybe_readahead, StoreInputStream};
+use super::{
+    container_key, map_store_error, marker_key, maybe_readahead, put_with_retry, StoreInputStream,
+};
 use crate::fs::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx, Path};
 use crate::fs::status::FileStatus;
 use crate::objectstore::{Metadata, ObjectStore};
@@ -119,13 +121,20 @@ impl FsOutputStream for SwiftOutputStream<'_> {
         self.closed = true;
         let (cont, key) = container_key(&self.path);
         let data = std::mem::take(&mut self.buf);
-        let (r, d) = self
-            .fs
-            .store
-            .put_object(cont, key, data, Metadata::new(), ctx.now());
-        ctx.add(d);
-        ctx.record("swift", || format!("PUT {cont}/{key}"));
-        r.map_err(|e| map_store_error(e, &self.path))
+        // The whole part sits on local disk, so a transient PUT failure
+        // resumes cheaply: re-PUT the spool — no disk time is re-paid
+        // (the spool survives), only the wire transfer repeats.
+        put_with_retry(
+            &self.fs.store,
+            "swift",
+            &self.path,
+            cont,
+            key,
+            data,
+            Metadata::new(),
+            &format!("PUT {cont}/{key}"),
+            ctx,
+        )
     }
 }
 
@@ -152,12 +161,17 @@ impl FileSystem for HadoopSwift {
                 Ok(_) => {} // already a directory
                 Err(FsError::NotFound(_)) => {
                     let mk = marker_key(&level.key);
-                    let (r, d) =
-                        self.store
-                            .put_object(cont, &mk, Vec::new(), Metadata::new(), ctx.now());
-                    ctx.add(d);
-                    ctx.record("swift", || format!("PUT {cont}/{mk} (dir marker)"));
-                    r.map_err(|e| map_store_error(e, &level))?;
+                    put_with_retry(
+                        &self.store,
+                        "swift",
+                        &level,
+                        cont,
+                        &mk,
+                        Vec::new(),
+                        Metadata::new(),
+                        &format!("PUT {cont}/{mk} (dir marker)"),
+                        ctx,
+                    )?;
                 }
                 Err(e) => return Err(e),
             }
@@ -477,6 +491,56 @@ mod tests {
         }
         assert_eq!(store.counters().since(&before).total(), 0);
         assert!(store.debug_names("res", "").is_empty());
+    }
+
+    #[test]
+    fn transient_put_resumes_from_spool_without_repaying_disk() {
+        use crate::objectstore::{FaultOp, FaultSpec, RetryPolicy};
+        // Slow local disk + a fault on the part PUT: the retry re-sends
+        // from the spool, so disk time is paid ONCE and the recovery
+        // cost is one extra PUT + the backoff.
+        let mut cfg = StoreConfig::instant_strong();
+        cfg.latency.local_disk_bw = 1_000; // 1 KB/s
+        cfg.faults = FaultSpec::one(FaultOp::Put, "d/f", 1);
+        cfg.retry = RetryPolicy::with_retries(1);
+        let store = ObjectStore::new(cfg);
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = HadoopSwift::new(store.clone());
+        let mut c = OpCtx::traced(SimInstant::EPOCH);
+        fs.write_all(&p("swift://res/d/f"), vec![0u8; 2_000], true, &mut c)
+            .unwrap();
+        // 2 KB at 1 KB/s = 2s of disk, once; plus the 0.1s retry backoff.
+        assert_eq!(c.elapsed.as_micros(), 2_000_000 + 100_000);
+        let trace = c.take_trace();
+        assert_eq!(
+            trace,
+            vec![
+                "swift: PUT res/d/f (503 transient)",
+                "swift: PUT res/d/f",
+            ]
+        );
+        // Both PUTs burned wire bytes; exactly one object landed.
+        let counts = store.counters();
+        assert_eq!(counts.get(crate::metrics::OpKind::PutObject), 2 + 1 /*container*/);
+        assert_eq!(counts.bytes_written, 4_000);
+        let mut c2 = OpCtx::new(SimInstant::EPOCH);
+        assert_eq!(fs.read_all(&p("swift://res/d/f"), &mut c2).unwrap().len(), 2_000);
+    }
+
+    #[test]
+    fn exhausted_retries_surface_as_transient_exhausted() {
+        use crate::objectstore::{FaultOp, FaultRule, FaultSpec, RetryPolicy};
+        let mut cfg = StoreConfig::instant_strong();
+        cfg.faults = FaultSpec::none().with(FaultRule::new(FaultOp::Put, "d/f", 1, 2));
+        cfg.retry = RetryPolicy::with_retries(1);
+        let store = ObjectStore::new(cfg);
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = HadoopSwift::new(store);
+        let mut c = ctx();
+        assert!(matches!(
+            fs.write_all(&p("swift://res/d/f"), b"x".to_vec(), true, &mut c),
+            Err(FsError::TransientExhausted(_))
+        ));
     }
 
     #[test]

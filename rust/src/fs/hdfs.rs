@@ -13,6 +13,7 @@ use super::interface::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx
 use super::path::Path;
 use super::readahead::ReadaheadStream;
 use super::status::FileStatus;
+use crate::objectstore::faults::{FaultInjector, FaultOp, FaultSpec, RetryPolicy};
 use crate::simclock::{SimDuration, SimInstant};
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -64,6 +65,12 @@ pub struct Hdfs {
     /// Read prefetch window in simulated bytes; 0 = every read streams
     /// its own slice from the DataNodes (the pre-readahead behaviour).
     readahead: u64,
+    /// Transient-fault plane: injected pipeline-write failures (the
+    /// HDFS analogue of `StoreConfig::faults` — a `put` rule matched
+    /// against the file's key fails the write pipeline at close).
+    faults: FaultInjector,
+    /// How many times a failed pipeline write is re-driven.
+    retry: RetryPolicy,
 }
 
 impl Hdfs {
@@ -79,10 +86,23 @@ impl Hdfs {
     /// `StoreConfig::readahead`; the real HDFS client's
     /// `dfs.datanode.readahead.bytes`).
     pub fn with_config(latency: HdfsLatency, readahead: u64) -> Arc<Self> {
+        Self::with_faults(latency, readahead, &FaultSpec::none(), RetryPolicy::none())
+    }
+
+    /// Build with the full transient-fault plane: `faults` schedules
+    /// pipeline-write failures, `retry` bounds the re-drives.
+    pub fn with_faults(
+        latency: HdfsLatency,
+        readahead: u64,
+        faults: &FaultSpec,
+        retry: RetryPolicy,
+    ) -> Arc<Self> {
         Arc::new(Self {
             nodes: Mutex::new(BTreeMap::new()),
             latency,
             readahead,
+            faults: FaultInjector::new(faults),
+            retry,
         })
     }
 
@@ -194,6 +214,27 @@ impl FsOutputStream for HdfsOutputStream<'_> {
         let data = std::mem::take(&mut self.buf);
         let len = data.len();
         let path = self.path.clone();
+        // Transient pipeline failure (a DataNode in the replica pipeline
+        // died): HDFS re-drives the whole write through a rebuilt
+        // pipeline, so each retry re-pays the full replication data
+        // time — the bytes stream to the DataNodes again — before the
+        // file can materialise at close.
+        let attempts = self.fs.retry.attempts();
+        for attempt in 1..=attempts {
+            if self.fs.faults.check(FaultOp::Put, &self.path.key).is_none() {
+                break;
+            }
+            let p = self.path.clone();
+            ctx.record("create", || format!("{p} (pipeline failure)"));
+            if attempt == attempts {
+                return Err(FsError::TransientExhausted(format!(
+                    "write pipeline for {} failed {attempts} time(s)",
+                    self.path
+                )));
+            }
+            ctx.add(self.fs.retry.backoff(attempt));
+            ctx.add(self.fs.latency.data_time(len as u64));
+        }
         ctx.record("create", || format!("{path} ({len} bytes)"));
         let mut nodes = self.fs.nodes.lock().unwrap();
         // Revalidate under the lock: neither a directory that appeared at
@@ -548,6 +589,42 @@ mod tests {
             // dropped without close
         }
         assert!(!fs.exists(&p("hdfs://res/doomed"), &mut c));
+    }
+
+    #[test]
+    fn transient_pipeline_failure_is_redriven_at_data_cost() {
+        use crate::objectstore::faults::{FaultOp, FaultRule, FaultSpec, RetryPolicy};
+        let lat = HdfsLatency {
+            meta_us: 0,
+            disk_bw: 1_000, // 1 KB/s: data time dominates
+            data_scale: 1,
+        };
+        let fs = Hdfs::with_faults(
+            lat,
+            0,
+            &FaultSpec::one(FaultOp::Put, "f", 1),
+            RetryPolicy::with_retries(1),
+        );
+        let mut c = ctx();
+        fs.write_all(&p("hdfs://res/f"), vec![0u8; 2_000], false, &mut c)
+            .unwrap();
+        // First pipeline drive (2s) + backoff (0.1s) + full re-drive (2s).
+        assert_eq!(c.elapsed.as_micros(), 2_000_000 + 100_000 + 2_000_000);
+        assert_eq!(fs.read_all(&p("hdfs://res/f"), &mut c).unwrap().len(), 2_000);
+
+        // Exhausted retries: no file materialises.
+        let fs2 = Hdfs::with_faults(
+            HdfsLatency::default(),
+            0,
+            &FaultSpec::none().with(FaultRule::new(FaultOp::Put, "g", 1, 5)),
+            RetryPolicy::with_retries(1),
+        );
+        let mut c2 = ctx();
+        assert!(matches!(
+            fs2.write_all(&p("hdfs://res/g"), vec![1u8; 10], false, &mut c2),
+            Err(FsError::TransientExhausted(_))
+        ));
+        assert!(!fs2.exists(&p("hdfs://res/g"), &mut c2));
     }
 
     #[test]

@@ -33,6 +33,12 @@ pub enum FsError {
     IsADirectory(String),
     /// A ranged read whose offset lies beyond end-of-file (HTTP 416).
     InvalidRange(String),
+    /// A transient (5xx/timeout) storage failure that survived every
+    /// retry the connector's [`crate::objectstore::RetryPolicy`] allowed
+    /// (a policy of zero retries exhausts on the first failure). The
+    /// committer/driver escalate this into a failed task attempt and the
+    /// scheduler's re-attempt machinery takes over.
+    TransientExhausted(String),
     Io(String),
 }
 
@@ -44,6 +50,7 @@ impl fmt::Display for FsError {
             FsError::NotADirectory(p) => write!(f, "not a directory: {p}"),
             FsError::IsADirectory(p) => write!(f, "is a directory: {p}"),
             FsError::InvalidRange(m) => write!(f, "invalid range: {m}"),
+            FsError::TransientExhausted(m) => write!(f, "transient failure, retries exhausted: {m}"),
             FsError::Io(m) => write!(f, "io error: {m}"),
         }
     }
@@ -146,6 +153,14 @@ pub(crate) fn adopt_buf(buf: &mut Vec<u8>, data: Vec<u8>) {
 ///   orphaned multipart upload, and Stocator's chunked-transfer PUT
 ///   leaves a truncated object at the target name (the §3.2 fail-stop
 ///   case its read-side dedup/manifest tolerates).
+/// * **Transient REST failures are retried under the shared
+///   [`crate::objectstore::RetryPolicy`]**, with per-connector resume
+///   semantics: buffer-to-disk connectors re-PUT from the local spool
+///   (cheap — the spool survives), fast upload re-sends only the failed
+///   part, Stocator restarts the whole chunked-transfer PUT from offset
+///   0 (the paper's fragility footnote — chunked transfer cannot be
+///   resumed), and HDFS re-drives the replication pipeline. Exhausted
+///   retries surface as [`FsError::TransientExhausted`].
 pub trait FsOutputStream {
     /// Append `data` to the stream.
     fn write(&mut self, data: &[u8], ctx: &mut OpCtx) -> Result<(), FsError>;

@@ -81,11 +81,55 @@ pub struct CellResult {
     pub valid: bool,
     pub validation: String,
     pub runs: usize,
+    /// Paper-scaled bytes stranded in orphaned multipart uploads at the
+    /// end of the first run, before / after the `--multipart-ttl`
+    /// lifecycle sweep (the Table 8 addendum's inputs).
+    pub stranded_mp_bytes: u64,
+    pub stranded_mp_bytes_after_sweep: u64,
 }
 
-/// Execute one repetition; returns the workload report.
+/// Execute one repetition; returns the workload report (with post-run
+/// stranded-multipart accounting and, when `--multipart-ttl` is set, the
+/// age-based GC sweep applied).
 fn run_once(scenario: Scenario, workload: Workload, sizing: &Sizing, seed: u64) -> WorkloadReport {
+    let (env, mut report) = run_workload(scenario, workload, sizing, seed);
+    // Stranded fast-upload debris: what crashed / transiently-exhausted
+    // writers left in flight. The lifecycle sweep models the store-side
+    // `AbortIncompleteMultipartUpload` rule firing `multipart_ttl_secs`
+    // of virtual time later — server-side housekeeping, outside the
+    // measured job window.
+    report.stranded_mp_bytes = env.store.debug_stranded_multipart_bytes();
+    report.stranded_mp_bytes_after_sweep = report.stranded_mp_bytes;
+    if sizing.multipart_ttl_secs > 0 && report.stranded_mp_bytes > 0 {
+        let ttl = crate::simclock::SimDuration::from_secs(sizing.multipart_ttl_secs);
+        let sweep_at = env.driver.now() + ttl;
+        let _ = env.store.sweep_stale_multiparts(sweep_at, ttl);
+        report.stranded_mp_bytes_after_sweep = env.store.debug_stranded_multipart_bytes();
+    }
+    report
+}
+
+/// Build the environment and run the workload body once.
+///
+/// The `--faults` schedule is armed on the store only AFTER input
+/// preparation: input datasets model pre-existing data (their uploads sit
+/// outside every measured window), so fault-rule match counters start at
+/// the measured workload's first operation — `put@1` means "the
+/// workload's first PUT", deterministically, for every workload.
+fn run_workload(
+    scenario: Scenario,
+    workload: Workload,
+    sizing: &Sizing,
+    seed: u64,
+) -> (crate::workloads::WorkloadEnv, WorkloadReport) {
     let rate_key = workload.rate_key();
+    // Build the environment fault-free; the schedule is armed post-prep.
+    let fault_schedule = sizing.faults.clone();
+    let prep = Sizing {
+        faults: crate::objectstore::FaultSpec::none(),
+        ..sizing.clone()
+    };
+    let sizing = &prep;
     match workload {
         Workload::ReadOnly50 | Workload::ReadOnly500 => {
             let parts = if workload == Workload::ReadOnly500 {
@@ -102,7 +146,9 @@ fn run_once(scenario: Scenario, workload: Workload, sizing: &Sizing, seed: u64) 
                 sizing.part_bytes,
                 seed,
             );
-            readonly::run(&mut env, "in.txt", lines)
+            env.store.arm_faults(&fault_schedule);
+            let report = readonly::run(&mut env, "in.txt", lines);
+            (env, report)
         }
         Workload::Teragen => {
             let mut env = build_env(
@@ -113,7 +159,9 @@ fn run_once(scenario: Scenario, workload: Workload, sizing: &Sizing, seed: u64) 
                 sizing.parts,
                 seed,
             );
-            teragen::run(&mut env, "teraout")
+            env.store.arm_faults(&fault_schedule);
+            let report = teragen::run(&mut env, "teraout");
+            (env, report)
         }
         Workload::Copy => {
             let mut env = build_env(
@@ -132,7 +180,9 @@ fn run_once(scenario: Scenario, workload: Workload, sizing: &Sizing, seed: u64) 
                 sizing.part_bytes,
                 seed,
             );
-            copy::run(&mut env, "src", "dst")
+            env.store.arm_faults(&fault_schedule);
+            let report = copy::run(&mut env, "src", "dst");
+            (env, report)
         }
         Workload::Wordcount => {
             let mut env = build_env(
@@ -151,7 +201,9 @@ fn run_once(scenario: Scenario, workload: Workload, sizing: &Sizing, seed: u64) 
                 sizing.part_bytes,
                 seed,
             );
-            wordcount::run(&mut env, "corpus", "wc-out", words)
+            env.store.arm_faults(&fault_schedule);
+            let report = wordcount::run(&mut env, "corpus", "wc-out", words);
+            (env, report)
         }
         Workload::Terasort => {
             let mut env = build_env(
@@ -170,7 +222,9 @@ fn run_once(scenario: Scenario, workload: Workload, sizing: &Sizing, seed: u64) 
                 sizing.part_bytes,
                 seed,
             );
-            terasort::run(&mut env, "tin", "tsorted")
+            env.store.arm_faults(&fault_schedule);
+            let report = terasort::run(&mut env, "tin", "tsorted");
+            (env, report)
         }
         Workload::TpcDs => {
             let mut env = build_env(
@@ -183,7 +237,9 @@ fn run_once(scenario: Scenario, workload: Workload, sizing: &Sizing, seed: u64) 
             );
             let schema = StarSchema::new(seed, sizing.tpcds_shards, sizing.tpcds_rows);
             tpcds::upload_star_schema(&env, "sales", &schema);
-            tpcds::run(&mut env, "sales", &schema)
+            env.store.arm_faults(&fault_schedule);
+            let report = tpcds::run(&mut env, "sales", &schema);
+            (env, report)
         }
     }
 }
@@ -195,6 +251,8 @@ pub fn run_cell(scenario: Scenario, workload: Workload, sizing: &Sizing, runs: u
     let mut ops = OpCounts::default();
     let mut valid = true;
     let mut validation = String::new();
+    let mut stranded_mp_bytes = 0;
+    let mut stranded_mp_bytes_after_sweep = 0;
     for r in 0..runs {
         let seed = 0xBEEF ^ (r as u64) << 8;
         let report = run_once(scenario, workload, sizing, seed);
@@ -206,6 +264,8 @@ pub fn run_cell(scenario: Scenario, workload: Workload, sizing: &Sizing, runs: u
                 Ok(s) => s.clone(),
                 Err(s) => format!("INVALID: {s}"),
             };
+            stranded_mp_bytes = report.stranded_mp_bytes;
+            stranded_mp_bytes_after_sweep = report.stranded_mp_bytes_after_sweep;
         }
     }
     let mean = times.iter().sum::<f64>() / times.len() as f64;
@@ -223,6 +283,8 @@ pub fn run_cell(scenario: Scenario, workload: Workload, sizing: &Sizing, runs: u
         valid,
         validation,
         runs,
+        stranded_mp_bytes,
+        stranded_mp_bytes_after_sweep,
     }
 }
 
@@ -238,6 +300,51 @@ mod tests {
         assert!(cell.valid, "{}", cell.validation);
         assert!(cell.runtime_mean_s > 0.0);
         assert_eq!(cell.ops.get(OpKind::CopyObject), 0);
+    }
+
+    #[test]
+    fn fault_schedule_spares_input_preparation() {
+        use crate::objectstore::{FaultOp, FaultSpec};
+        // `put@1` (the grammar's own example) must target the measured
+        // workload's first PUT — never the harness's input uploads,
+        // which model pre-existing data and have no retry path.
+        let mut sizing = Sizing::small();
+        sizing.faults = FaultSpec::one(FaultOp::Put, "", 1);
+        let cell = run_cell(Scenario::Stocator, Workload::ReadOnly50, &sizing, 1);
+        assert!(cell.valid, "{}", cell.validation);
+    }
+
+    #[test]
+    fn faulted_fast_upload_strands_uploads_and_ttl_sweeps_them() {
+        use crate::objectstore::{FaultOp, FaultRule, FaultSpec};
+        let mut sizing = Sizing::small();
+        // Exceed fs.s3a.multipart.size (100 MB / data_scale = 12.5 KiB
+        // simulated) so fast upload actually multiparts.
+        sizing.part_bytes = 16 * 1024;
+        // No stream retries: the 2nd part PUT of the job exhausts
+        // immediately, failing that attempt mid-upload — its initiated
+        // multipart upload (first part already accepted) strands.
+        sizing.faults =
+            FaultSpec::none().with(FaultRule::new(FaultOp::UploadPart, "teraout/", 2, 1));
+        let no_sweep = run_cell(Scenario::S3aCv2Fu, Workload::Teragen, &sizing, 1);
+        assert!(no_sweep.valid, "{}", no_sweep.validation);
+        assert!(
+            no_sweep.stranded_mp_bytes > 0,
+            "the failed attempt must strand its upload"
+        );
+        assert_eq!(
+            no_sweep.stranded_mp_bytes, no_sweep.stranded_mp_bytes_after_sweep,
+            "no TTL configured: the debris keeps billing storage"
+        );
+
+        sizing.multipart_ttl_secs = 3600;
+        let swept = run_cell(Scenario::S3aCv2Fu, Workload::Teragen, &sizing, 1);
+        assert!(swept.valid, "{}", swept.validation);
+        assert_eq!(swept.stranded_mp_bytes, no_sweep.stranded_mp_bytes);
+        assert_eq!(
+            swept.stranded_mp_bytes_after_sweep, 0,
+            "the lifecycle sweep reaps every stranded upload"
+        );
     }
 
     #[test]

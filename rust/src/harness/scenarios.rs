@@ -3,7 +3,9 @@
 use crate::committer::CommitAlgorithm;
 use crate::connectors::{HadoopSwift, S3a, S3aConfig, Stocator, StocatorConfig};
 use crate::fs::FileSystem;
-use crate::objectstore::{BackendKind, ConsistencyModel, LatencyModel, ObjectStore, StoreConfig};
+use crate::objectstore::{
+    BackendKind, ConsistencyModel, FaultSpec, LatencyModel, ObjectStore, RetryPolicy, StoreConfig,
+};
 use crate::runtime::Kernels;
 use crate::simclock::SimInstant;
 use crate::spark::{ComputeModel, Driver, SparkConfig};
@@ -112,6 +114,18 @@ pub struct Sizing {
     /// turning it on coalesces small sequential reads into few ranged
     /// GETs (snapshot-tested in `test_golden_opcounts.rs`).
     pub readahead: u64,
+    /// Deterministic transient-REST-fault schedule (`--faults` on the
+    /// CLI). Empty by default: all paper cells reproduce the fault-free
+    /// stack byte-identically. The harness arms the schedule only AFTER
+    /// input preparation (see `runner::run_workload`), so rule counters
+    /// start at the measured workload's first operation.
+    pub faults: FaultSpec,
+    /// Stream-layer retries per operation (`--retries`; 0 = fail fast).
+    pub retries: u32,
+    /// Age, in virtual seconds, after which the post-run lifecycle sweep
+    /// aborts stranded multipart uploads (`--multipart-ttl`; 0 = no
+    /// sweep — stranded parts keep billing storage).
+    pub multipart_ttl_secs: u64,
 }
 
 impl Sizing {
@@ -129,6 +143,9 @@ impl Sizing {
             jitter: 0.03,
             backend: BackendKind::default(),
             readahead: 0,
+            faults: FaultSpec::none(),
+            retries: 0,
+            multipart_ttl_secs: 0,
         }
     }
 
@@ -146,6 +163,9 @@ impl Sizing {
             jitter: 0.0,
             backend: BackendKind::default(),
             readahead: 0,
+            faults: FaultSpec::none(),
+            retries: 0,
+            multipart_ttl_secs: 0,
         }
     }
 }
@@ -207,6 +227,8 @@ pub fn build_env(
         seed,
         backend,
         readahead: sizing.readahead,
+        faults: sizing.faults.clone(),
+        retry: RetryPolicy::with_retries(sizing.retries),
     });
     store.create_container("res", SimInstant::EPOCH).0.unwrap();
     // fs.s3a.multipart.size = 100 MB logical, in simulated bytes.
@@ -277,6 +299,22 @@ mod tests {
         // one-GET-per-read stack byte-identically.
         assert_eq!(Sizing::small().readahead, 0);
         assert_eq!(Sizing::paper().readahead, 0);
+    }
+
+    #[test]
+    fn build_env_honours_fault_plane_knobs() {
+        use crate::objectstore::FaultOp;
+        let mut sizing = Sizing::small();
+        sizing.faults = FaultSpec::one(FaultOp::Put, "out/", 1);
+        sizing.retries = 2;
+        let env = build_env(Scenario::Stocator, &sizing, "teragen", 8192, 4, 1);
+        assert_eq!(env.store.config.faults, sizing.faults);
+        assert_eq!(env.store.config.retry.retries, 2);
+        // Defaults: no faults, no retries, no sweep — the fault-free
+        // stack byte-identically.
+        assert!(Sizing::small().faults.is_empty());
+        assert_eq!(Sizing::small().retries, 0);
+        assert_eq!(Sizing::paper().multipart_ttl_secs, 0);
     }
 
     #[test]

@@ -239,7 +239,31 @@ impl Sweep {
             }
             t.row(row);
         }
-        t.render()
+        let mut out = t.render();
+        // Addendum: stranded fast-upload multipart debris is billed as
+        // ordinary storage until a lifecycle sweep aborts it. Only
+        // rendered when some cell actually stranded bytes (a fault-free
+        // sweep reproduces the stock Table 8 output).
+        let before: u64 = self.cells.iter().map(|c| c.stranded_mp_bytes).sum();
+        if before > 0 {
+            let after: u64 = self
+                .cells
+                .iter()
+                .map(|c| c.stranded_mp_bytes_after_sweep)
+                .sum();
+            out.push_str(&format!(
+                "stranded multipart debris: {before} B (${:.6}/month) before sweep, \
+                 {after} B (${:.6}/month) after (--multipart-ttl {})\n",
+                crate::objectstore::storage_cost_usd_month(before),
+                crate::objectstore::storage_cost_usd_month(after),
+                if self.sizing.multipart_ttl_secs > 0 {
+                    format!("{}s", self.sizing.multipart_ttl_secs)
+                } else {
+                    "off".to_string()
+                },
+            ));
+        }
+        out
     }
 
     /// Shape assertions (DESIGN.md §6) — Err lists violations.
@@ -352,5 +376,22 @@ mod tests {
         assert!(t7.contains("x"));
         let t8 = sweep.render_table8();
         assert!(t8.contains("x"));
+        // Fault-free: no stranded-debris addendum, stock output.
+        assert!(!t8.contains("stranded"), "{t8}");
+    }
+
+    #[test]
+    fn table8_addendum_prices_stranded_debris() {
+        use crate::objectstore::{FaultOp, FaultRule, FaultSpec};
+        let mut sizing = Sizing::small();
+        sizing.part_bytes = 16 * 1024; // above fs.s3a.multipart.size
+        sizing.faults =
+            FaultSpec::none().with(FaultRule::new(FaultOp::UploadPart, "teraout/", 2, 1));
+        sizing.multipart_ttl_secs = 600;
+        let sweep = Sweep::run(&sizing, 1, &[Workload::Teragen]);
+        let t8 = sweep.render_table8();
+        assert!(t8.contains("stranded multipart debris"), "{t8}");
+        assert!(t8.contains("--multipart-ttl 600s"), "{t8}");
+        assert!(t8.contains(", 0 B"), "swept clean: {t8}");
     }
 }

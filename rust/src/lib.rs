@@ -13,7 +13,13 @@
 //!   `--backend mem|sharded[:N]|fs[:DIR]` on the CLI. Op counts, byte
 //!   accounting and virtual-clock runtimes are backend-invariant — the
 //!   front end owns them — so backends trade only wall-clock concurrency
-//!   and durability.
+//!   and durability. A deterministic **transient-fault plane**
+//!   ([`objectstore::faults`], `--faults` on the CLI) injects retryable
+//!   5xx failures into specific PUTs/GETs/multipart ops — priced like
+//!   real requests (latency, op, wire bytes) — and an age-based
+//!   multipart GC sweep (`--multipart-ttl`) reaps uploads stranded by
+//!   crashed fast-upload writers, with the stranded bytes priced in the
+//!   Table 8 addendum.
 //! * [`fs`] — the Hadoop `FileSystem` abstraction (paths, statuses, the
 //!   trait all connectors implement) plus an in-memory HDFS-like
 //!   baseline. I/O is **stream-shaped** (`FsOutputStream` /
@@ -23,7 +29,13 @@
 //!   on the virtual clock (with a zero-copy `write_owned` fast path for
 //!   whole-part writers), dropping a stream without `close` is the
 //!   executor-crash abort path, and partial reads (`read_range`) reach
-//!   all the way down to the backends. An optional S3AInputStream-style
+//!   all the way down to the backends. Streams retry transient REST
+//!   failures under a shared `RetryPolicy` (`--retries`) with
+//!   per-connector resume semantics: re-PUT from the local spool,
+//!   re-send one multipart part, or — Stocator's chunked-transfer
+//!   fragility, the paper's §3.3 footnote — restart the whole PUT from
+//!   offset 0; exhausted budgets fail the task attempt and the Spark
+//!   scheduler re-attempts it. An optional S3AInputStream-style
 //!   readahead window ([`fs::readahead`], `--readahead BYTES` on the
 //!   CLI) coalesces small sequential reads into few ranged GETs;
 //!   off by default, so every paper table reproduces the legacy

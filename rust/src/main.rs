@@ -69,6 +69,24 @@ USAGE:
             window fill (S3AInputStream-style; grows on sequential reads,
             collapses for random readers). 'off' (or 0) reproduces the
             paper's one-GET-per-read behaviour exactly.
+          plus --faults SPEC (default: none)
+            deterministic transient REST faults: comma-separated rules
+            OP[:KEY_PREFIX]@NTH[xCOUNT] with OP one of put|get|part|
+            complete — the NTH matching operation (and the COUNT-1
+            after it) fails with a retryable 503 that still burns
+            latency, the op, and (for PUT-class ops) the payload bytes.
+            Example: --faults put:teraout/@1 fails the first part PUT.
+          plus --retries N (default: 0)
+            stream-layer retries per operation, exponential virtual-clock
+            backoff. Recovery semantics are the connector's: Swift/S3a
+            re-PUT from the local spool, fast upload re-sends only the
+            failed part, Stocator restarts its whole chunked PUT from
+            offset 0 (the paper's fragility footnote). Exhausted budgets
+            fail the task attempt and Spark re-attempts it.
+          plus --multipart-ttl SECS (default: off)
+            age-based lifecycle sweep aborting multipart uploads
+            stranded by crashed/exhausted fast-upload writers; the
+            Table 8 addendum prices the stranded bytes before/after.
 
   scenarios: hs-base s3a-base stocator hs-cv2 s3a-cv2 s3a-cv2-fu
   workloads: ro50 ro500 teragen copy wordcount terasort tpcds
@@ -96,6 +114,16 @@ fn select_sizing(args: &Args) -> Result<Sizing, String> {
             })?,
         };
     }
+    if let Some(spec) = args.opt("faults") {
+        sizing.faults = stocator::objectstore::FaultSpec::parse(spec)?;
+    }
+    sizing.retries = args.opt_u64("retries", 0)? as u32;
+    sizing.multipart_ttl_secs = match args.opt("multipart-ttl") {
+        Some("off") | None => 0,
+        Some(s) => s.parse().map_err(|_| {
+            format!("--multipart-ttl expects seconds or 'off', got '{s}'")
+        })?,
+    };
     // Pin a concrete root for `fs` so the user can find (and reuse) the
     // data; each run then works in a unique subdirectory of it.
     if sizing.backend == BackendKind::LocalFs(None) {
@@ -294,6 +322,42 @@ mod tests {
         let s = select_sizing(&args(&["run", "--readahead=off"])).unwrap();
         assert_eq!(s.readahead, 0);
         assert!(select_sizing(&args(&["run", "--readahead", "lots"])).is_err());
+    }
+
+    #[test]
+    fn fault_plane_knobs_are_wired_through() {
+        use stocator::objectstore::{FaultOp, FaultRule};
+        // Defaults: no faults, no retries, no sweep.
+        let s = select_sizing(&args(&["run"])).unwrap();
+        assert!(s.faults.is_empty());
+        assert_eq!(s.retries, 0);
+        assert_eq!(s.multipart_ttl_secs, 0);
+        // Full spelling.
+        let s = select_sizing(&args(&[
+            "run",
+            "--faults",
+            "put:teraout/@1x2,part@3",
+            "--retries",
+            "2",
+            "--multipart-ttl",
+            "3600",
+        ]))
+        .unwrap();
+        assert_eq!(s.faults.rules[0], FaultRule::new(FaultOp::Put, "teraout/", 1, 2));
+        assert_eq!(s.faults.rules[1], FaultRule::new(FaultOp::UploadPart, "", 3, 1));
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.multipart_ttl_secs, 3600);
+        // Malformed specs are rejected with a parse error.
+        assert!(select_sizing(&args(&["run", "--faults", "frob@1"])).is_err());
+        assert!(select_sizing(&args(&["run", "--faults", "put@0"])).is_err());
+        assert!(select_sizing(&args(&["run", "--retries", "many"])).is_err());
+        assert!(select_sizing(&args(&["run", "--multipart-ttl", "soon"])).is_err());
+        assert_eq!(
+            select_sizing(&args(&["run", "--multipart-ttl", "off"]))
+                .unwrap()
+                .multipart_ttl_secs,
+            0
+        );
     }
 
     #[test]

@@ -1,0 +1,393 @@
+//! The transient-fault plane: deterministic REST fault injection and the
+//! shared stream retry policy.
+//!
+//! The paper's fault-tolerance argument (§2.2.1, §3.3) is about what
+//! survives when operations *fail* — including the footnote that
+//! Stocator's chunked-transfer PUT cannot be resumed after a transient
+//! failure, so the whole object must be re-sent, where S3a's fast upload
+//! re-sends only the failed part and the buffer-to-disk connectors
+//! re-PUT cheaply from their local spool. The Spark layer already models
+//! fail-stop executor crashes ([`crate::spark::FaultKind`]); this module
+//! adds the *REST-level* half: a 5xx/timeout on one specific PUT or GET,
+//! visible to the connector that issued it, priced like a real request
+//! (latency burned, op counted, payload bytes on the wire — real stores
+//! bill failed requests too).
+//!
+//! * [`FaultRule`] / [`FaultSpec`] — a deterministic schedule: fail the
+//!   Nth operation matching an (op-kind, key-prefix) pattern, optionally
+//!   for several consecutive matches. Parsed from the CLI `--faults`
+//!   spec; carried by [`crate::objectstore::StoreConfig::faults`].
+//! * [`FaultInjector`] — the armed rule set threaded through
+//!   `put_object` / `get_object` / `get_object_range` / `upload_part` /
+//!   `complete_multipart` on the store front end. Rules can also be
+//!   armed mid-run ([`crate::objectstore::ObjectStore::arm_faults`]) —
+//!   that is how [`crate::spark::FaultKind::TransientOps`] schedules
+//!   flaky ops for one specific task attempt.
+//! * [`RetryPolicy`] — the stream-layer retry contract every connector
+//!   follows: up to `retries` re-attempts per operation with
+//!   exponential virtual-clock backoff. The *semantics* of a retry are
+//!   per-connector (re-PUT from spool, re-send one part, restart the
+//!   whole chunked PUT, re-drive the HDFS pipeline); the budget and the
+//!   backoff schedule are shared so `--retries N` means the same thing
+//!   everywhere.
+//!
+//! Determinism: with an empty spec nothing ever fires and every golden
+//! REST sequence and virtual runtime is byte-identical to the
+//! fault-free stack; with a spec, which ops fail is a pure function of
+//! the operation sequence (exact Nth-match counting, no randomness), so
+//! fault schedules replay exactly and are backend-invariant.
+
+use crate::simclock::SimDuration;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Which store operation class a fault rule matches. Only the operations
+/// the connectors' data paths issue are injectable; control-plane ops
+/// (HEAD, LIST, DELETE, COPY) stay reliable — the paper's fragility
+/// story is about the *write/read* paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOp {
+    /// `put_object` — whole-object PUTs (spool uploads, chunked-transfer
+    /// PUTs, markers, `_SUCCESS`).
+    Put,
+    /// `get_object` / `get_object_range` — full and ranged GETs.
+    Get,
+    /// `upload_part` — one multipart part PUT (S3a fast upload).
+    UploadPart,
+    /// `complete_multipart` — the multipart completion POST.
+    CompleteMultipart,
+}
+
+impl FaultOp {
+    /// CLI spelling (`--faults put:...`, `get`, `part`, `complete`).
+    pub fn parse(s: &str) -> Option<FaultOp> {
+        match s {
+            "put" => Some(FaultOp::Put),
+            "get" => Some(FaultOp::Get),
+            "part" => Some(FaultOp::UploadPart),
+            "complete" => Some(FaultOp::CompleteMultipart),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultOp::Put => "put",
+            FaultOp::Get => "get",
+            FaultOp::UploadPart => "part",
+            FaultOp::CompleteMultipart => "complete",
+        }
+    }
+}
+
+impl fmt::Display for FaultOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One deterministic fault: fail matches `nth .. nth + count` (1-based)
+/// of the (op, key-prefix) pattern with a retryable 503.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultRule {
+    pub op: FaultOp,
+    /// Object-key prefix the operation's target must start with
+    /// (empty = every key). Multipart ops match on the upload's target
+    /// key.
+    pub key_prefix: String,
+    /// Fail starting at the Nth matching operation (1-based).
+    pub nth: u64,
+    /// How many consecutive matching operations fail (≥ 1). `count`
+    /// larger than the retry budget forces [`exhaustion`](crate::fs::FsError::TransientExhausted).
+    pub count: u64,
+}
+
+impl FaultRule {
+    pub fn new(op: FaultOp, key_prefix: &str, nth: u64, count: u64) -> Self {
+        Self {
+            op,
+            key_prefix: key_prefix.to_string(),
+            nth: nth.max(1),
+            count: count.max(1),
+        }
+    }
+}
+
+impl fmt::Display for FaultRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}@{}x{}", self.op, self.key_prefix, self.nth, self.count)
+    }
+}
+
+/// A deterministic fault schedule: zero or more [`FaultRule`]s. The
+/// default (empty) spec injects nothing and reproduces the fault-free
+/// stack byte-identically.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultSpec {
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultSpec {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Builder: add one rule.
+    pub fn with(mut self, rule: FaultRule) -> Self {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Convenience: a single one-shot fault on the Nth matching op.
+    pub fn one(op: FaultOp, key_prefix: &str, nth: u64) -> Self {
+        Self::none().with(FaultRule::new(op, key_prefix, nth, 1))
+    }
+
+    /// Parse the CLI grammar:
+    ///
+    /// ```text
+    /// SPEC := RULE ( ',' RULE )*
+    /// RULE := OP [ ':' KEY_PREFIX ] '@' NTH [ 'x' COUNT ]
+    /// OP   := put | get | part | complete
+    /// ```
+    ///
+    /// Examples: `put@1` (the very first PUT fails once),
+    /// `put:out/@3x2` (the 3rd and 4th PUTs under `out/` fail),
+    /// `part:out/@2,complete@1` (two rules).
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::none();
+        for raw in s.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            let (head, tail) = raw
+                .split_once('@')
+                .ok_or_else(|| format!("fault rule '{raw}' is missing '@NTH'"))?;
+            let (op_s, prefix) = match head.split_once(':') {
+                Some((o, p)) => (o, p),
+                None => (head, ""),
+            };
+            let op = FaultOp::parse(op_s)
+                .ok_or_else(|| format!("unknown fault op '{op_s}' (put|get|part|complete)"))?;
+            let (nth_s, count_s) = match tail.split_once('x') {
+                Some((n, c)) => (n, c),
+                None => (tail, "1"),
+            };
+            let nth: u64 = nth_s
+                .parse()
+                .ok()
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| format!("fault rule '{raw}': NTH must be a positive integer"))?;
+            let count: u64 = count_s
+                .parse()
+                .ok()
+                .filter(|&c| c >= 1)
+                .ok_or_else(|| format!("fault rule '{raw}': COUNT must be a positive integer"))?;
+            spec.rules.push(FaultRule::new(op, prefix, nth, count));
+        }
+        if spec.is_empty() {
+            return Err("empty --faults spec".to_string());
+        }
+        Ok(spec)
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let rules: Vec<String> = self.rules.iter().map(|r| r.to_string()).collect();
+        f.write_str(&rules.join(","))
+    }
+}
+
+/// A rule plus its live match counter.
+#[derive(Debug)]
+struct ArmedRule {
+    rule: FaultRule,
+    /// Matching operations seen so far (armed rules count from the
+    /// moment they are armed, so a [`crate::spark::FaultKind::TransientOps`]
+    /// schedule counts ops from its attempt's start).
+    seen: u64,
+}
+
+/// The armed fault rules a store consults on every injectable operation.
+/// Thread-safe; the zero-rule fast path is one relaxed atomic load, so
+/// the fault-free hot path stays wall-clock-neutral.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    n_rules: AtomicUsize,
+    armed: Mutex<Vec<ArmedRule>>,
+}
+
+impl FaultInjector {
+    pub fn new(spec: &FaultSpec) -> Self {
+        let inj = Self::default();
+        inj.arm(spec);
+        inj
+    }
+
+    /// Append `spec`'s rules with fresh match counters. Rules are never
+    /// removed: a fired rule simply stops matching once its
+    /// `nth + count` window passes.
+    pub fn arm(&self, spec: &FaultSpec) {
+        if spec.is_empty() {
+            return;
+        }
+        let mut armed = self.armed.lock().unwrap();
+        for rule in &spec.rules {
+            armed.push(ArmedRule {
+                rule: rule.clone(),
+                seen: 0,
+            });
+        }
+        self.n_rules.store(armed.len(), Ordering::Relaxed);
+    }
+
+    /// No rules armed at all — the hot-path hint retry loops use to skip
+    /// defensive payload clones (an idle injector can never produce a
+    /// `TransientFailure`, so a single attempt needs no re-send copy).
+    pub fn is_idle(&self) -> bool {
+        self.n_rules.load(Ordering::Relaxed) == 0
+    }
+
+    /// Record one (op, key) operation against every armed rule; returns
+    /// a failure description if any rule's window covers this match.
+    /// Rules whose windows have fully passed are dropped, so the idle
+    /// fast path (and the connectors' clone-free retry loops) come back
+    /// once every scheduled fault has fired.
+    pub fn check(&self, op: FaultOp, key: &str) -> Option<String> {
+        if self.n_rules.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        let mut armed = self.armed.lock().unwrap();
+        let mut fired: Option<String> = None;
+        for a in armed.iter_mut() {
+            if a.rule.op != op || !key.starts_with(a.rule.key_prefix.as_str()) {
+                continue;
+            }
+            a.seen += 1;
+            if a.seen >= a.rule.nth && a.seen < a.rule.nth + a.rule.count && fired.is_none() {
+                fired = Some(format!(
+                    "injected fault on {op} {key} (match {} of rule {})",
+                    a.seen, a.rule
+                ));
+            }
+        }
+        armed.retain(|a| a.seen + 1 < a.rule.nth + a.rule.count);
+        self.n_rules.store(armed.len(), Ordering::Relaxed);
+        fired
+    }
+}
+
+/// The shared stream-layer retry contract (`--retries N`): how many times
+/// a connector re-attempts a transiently failed operation, and the
+/// virtual-clock backoff charged before each re-attempt. What a
+/// re-attempt *does* is the connector's write-path semantics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first try (0 = fail fast; the default, so
+    /// the fault-free stack is reproduced byte-identically).
+    pub retries: u32,
+    /// Backoff before the first re-attempt, in virtual microseconds;
+    /// doubles on each further re-attempt (exponential, no jitter — the
+    /// schedule must replay deterministically).
+    pub backoff_us: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            retries: 0,
+            backoff_us: 100_000,
+        }
+    }
+}
+
+impl RetryPolicy {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_retries(retries: u32) -> Self {
+        Self {
+            retries,
+            ..Self::default()
+        }
+    }
+
+    /// Total tries per operation (first attempt + retries).
+    pub fn attempts(&self) -> u32 {
+        self.retries + 1
+    }
+
+    /// Virtual-clock backoff before re-attempt `retry_index` (1-based):
+    /// `backoff_us << (retry_index - 1)`.
+    pub fn backoff(&self, retry_index: u32) -> SimDuration {
+        let shift = retry_index.saturating_sub(1).min(20);
+        SimDuration::from_micros(self.backoff_us << shift)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_roundtrip() {
+        let spec = FaultSpec::parse("put:out/@3x2,part@1,complete:d/@2").unwrap();
+        assert_eq!(spec.rules.len(), 3);
+        assert_eq!(spec.rules[0], FaultRule::new(FaultOp::Put, "out/", 3, 2));
+        assert_eq!(spec.rules[1], FaultRule::new(FaultOp::UploadPart, "", 1, 1));
+        assert_eq!(
+            spec.rules[2],
+            FaultRule::new(FaultOp::CompleteMultipart, "d/", 2, 1)
+        );
+        // Display re-parses to the same spec.
+        assert_eq!(FaultSpec::parse(&spec.to_string()).unwrap(), spec);
+    }
+
+    #[test]
+    fn spec_rejects_malformed_rules() {
+        assert!(FaultSpec::parse("").is_err());
+        assert!(FaultSpec::parse("put").is_err(), "missing @NTH");
+        assert!(FaultSpec::parse("frob@1").is_err(), "unknown op");
+        assert!(FaultSpec::parse("put@0").is_err(), "NTH is 1-based");
+        assert!(FaultSpec::parse("put@2x0").is_err(), "COUNT must be >= 1");
+        assert!(FaultSpec::parse("put@abc").is_err());
+    }
+
+    #[test]
+    fn injector_fires_exactly_the_nth_window() {
+        let inj = FaultInjector::new(&FaultSpec::parse("put:d/@2x2").unwrap());
+        assert!(inj.check(FaultOp::Put, "d/a").is_none(), "match 1");
+        assert!(inj.check(FaultOp::Put, "elsewhere").is_none(), "prefix miss");
+        assert!(inj.check(FaultOp::Get, "d/a").is_none(), "op miss");
+        assert!(inj.check(FaultOp::Put, "d/b").is_some(), "match 2 fires");
+        assert!(inj.check(FaultOp::Put, "d/c").is_some(), "match 3 fires");
+        assert!(inj.check(FaultOp::Put, "d/d").is_none(), "window passed");
+    }
+
+    #[test]
+    fn arming_mid_run_counts_from_arming() {
+        let inj = FaultInjector::default();
+        assert!(inj.check(FaultOp::Put, "k").is_none());
+        inj.arm(&FaultSpec::one(FaultOp::Put, "", 1));
+        assert!(inj.check(FaultOp::Put, "k").is_some(), "fresh counter");
+        assert!(inj.check(FaultOp::Put, "k").is_none());
+    }
+
+    #[test]
+    fn retry_policy_backoff_doubles() {
+        let p = RetryPolicy::with_retries(3);
+        assert_eq!(p.attempts(), 4);
+        assert_eq!(p.backoff(1).as_micros(), 100_000);
+        assert_eq!(p.backoff(2).as_micros(), 200_000);
+        assert_eq!(p.backoff(3).as_micros(), 400_000);
+        assert_eq!(RetryPolicy::none().attempts(), 1);
+    }
+}

@@ -8,9 +8,11 @@
 //!
 //! * [`store::ObjectStore`] — the front end: REST op accounting in
 //!   [`crate::metrics::LiveCounters`], virtual-clock costing via
-//!   [`latency::LatencyModel`], pricing via [`pricing`], and listing
+//!   [`latency::LatencyModel`], pricing via [`pricing`], listing
 //!   consistency via the [`visibility`] overlay driven by
-//!   [`consistency::ConsistencyModel`]. This is the substitute for the
+//!   [`consistency::ConsistencyModel`], and deterministic transient REST
+//!   faults via [`faults::FaultInjector`] (a failed request still burns
+//!   latency, an op and wire bytes — stores bill failures too). This is the substitute for the
 //!   paper's IBM COS cluster (DESIGN.md §2): connector behaviour depends
 //!   only on the REST API semantics and the consistency model.
 //! * [`backend`] — pluggable storage backends behind the
@@ -22,6 +24,7 @@
 pub mod backend;
 pub mod consistency;
 pub mod container;
+pub mod faults;
 pub mod latency;
 pub mod multipart;
 pub mod object;
@@ -32,7 +35,8 @@ mod visibility;
 pub use backend::{Backend, BackendError, BackendKind, LocalFsBackend, ShardedMemBackend};
 pub use consistency::ConsistencyModel;
 pub use container::{Listing, ObjectSummary};
+pub use faults::{FaultInjector, FaultOp, FaultRule, FaultSpec, RetryPolicy};
 pub use latency::LatencyModel;
 pub use object::{Metadata, Object};
-pub use pricing::{cost_usd, Provider, PROVIDERS};
-pub use store::{ObjectStore, StoreConfig, StoreError};
+pub use pricing::{cost_usd, storage_cost_usd_month, Provider, PROVIDERS};
+pub use store::{MultipartSweep, ObjectStore, StoreConfig, StoreError};

@@ -79,6 +79,18 @@ pub fn cost_usd(counts: &OpCounts) -> f64 {
     PROVIDERS.iter().map(|p| p.cost(counts)).sum::<f64>() / PROVIDERS.len() as f64
 }
 
+/// Flat 2017-era object-storage price used for the Table 8 stranded-bytes
+/// addendum (the four providers' standard tiers cluster around
+/// $0.021–0.025 per GB-month). Parts parked in orphaned multipart
+/// uploads are billed at exactly this rate until a lifecycle sweep
+/// aborts them — the cost the `--multipart-ttl` GC knob eliminates.
+pub const STORAGE_USD_PER_GB_MONTH: f64 = 0.023;
+
+/// Monthly storage cost of `bytes` stranded bytes, in USD.
+pub fn storage_cost_usd_month(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0 * 1024.0) * STORAGE_USD_PER_GB_MONTH
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +132,14 @@ mod tests {
             assert_eq!(p.cost(&copies), p.cost(&puts));
             assert_eq!(p.cost(&lists), p.cost(&puts));
         }
+    }
+
+    #[test]
+    fn stranded_storage_is_priced_per_gb_month() {
+        assert_eq!(storage_cost_usd_month(0), 0.0);
+        let one_gb = 1024 * 1024 * 1024;
+        assert!((storage_cost_usd_month(one_gb) - STORAGE_USD_PER_GB_MONTH).abs() < 1e-12);
+        assert!(storage_cost_usd_month(10 * one_gb) > storage_cost_usd_month(one_gb));
     }
 
     #[test]

@@ -17,6 +17,7 @@ use super::backend::{make_backend, Backend, BackendError, DEFAULT_PAGE_SIZE};
 use super::backend::{BackendKind, ObjectStat};
 use super::consistency::ConsistencyModel;
 use super::container::Listing;
+use super::faults::{FaultInjector, FaultOp, FaultSpec, RetryPolicy};
 use super::latency::LatencyModel;
 use super::multipart::DEFAULT_MIN_PART_SIZE;
 use super::object::{Metadata, Object};
@@ -24,6 +25,7 @@ use super::visibility::VisibilityMap;
 use crate::metrics::{LiveCounters, OpCounts, OpKind};
 use crate::simclock::{SimDuration, SimInstant};
 use crate::util::rng::Pcg32;
+use std::collections::HashMap;
 use std::fmt;
 use std::sync::{Arc, Mutex};
 
@@ -37,6 +39,11 @@ pub enum StoreError {
     InvalidRequest(String),
     /// Ranged GET with an offset strictly past end-of-file (HTTP 416).
     InvalidRange(String),
+    /// A retryable 5xx/timeout injected by the [`FaultInjector`]. The
+    /// request reached the store (latency burned, op counted, payload
+    /// bytes on the wire) but had no effect; connectors may retry it
+    /// under their [`RetryPolicy`].
+    TransientFailure(String),
     /// Real-IO failure in a persistent backend (no REST analogue).
     Backend(String),
 }
@@ -50,6 +57,7 @@ impl fmt::Display for StoreError {
             StoreError::NoSuchUpload(id) => write!(f, "404 NoSuchUpload: {id}"),
             StoreError::InvalidRequest(m) => write!(f, "400 InvalidRequest: {m}"),
             StoreError::InvalidRange(m) => write!(f, "416 InvalidRange: {m}"),
+            StoreError::TransientFailure(m) => write!(f, "503 Transient: {m}"),
             StoreError::Backend(m) => write!(f, "500 BackendIo: {m}"),
         }
     }
@@ -117,6 +125,13 @@ pub struct StoreConfig {
     /// with 0, every read issues its own GET and all op counts and
     /// virtual runtimes are byte-identical to the pre-readahead stack.
     pub readahead: u64,
+    /// Deterministic transient-fault schedule (`--faults` on the CLI).
+    /// Empty by default: nothing fires and every golden REST sequence
+    /// and virtual runtime reproduces the fault-free stack exactly.
+    pub faults: FaultSpec,
+    /// The stream-layer retry contract the connectors follow
+    /// (`--retries` on the CLI). Zero retries by default.
+    pub retry: RetryPolicy,
 }
 
 impl Default for StoreConfig {
@@ -128,6 +143,8 @@ impl Default for StoreConfig {
             seed: 0,
             backend: BackendKind::default(),
             readahead: 0,
+            faults: FaultSpec::none(),
+            retry: RetryPolicy::none(),
         }
     }
 }
@@ -139,9 +156,7 @@ impl StoreConfig {
             latency: LatencyModel::instant(),
             consistency: ConsistencyModel::strong(),
             min_part_size: 0,
-            seed: 0,
-            backend: BackendKind::default(),
-            readahead: 0,
+            ..Self::default()
         }
     }
 
@@ -151,11 +166,31 @@ impl StoreConfig {
             latency: LatencyModel::instant(),
             consistency: ConsistencyModel::eventual(),
             min_part_size: 0,
-            seed: 0,
-            backend: BackendKind::default(),
-            readahead: 0,
+            ..Self::default()
         }
     }
+}
+
+/// Front-end record of one in-flight multipart upload: who it targets,
+/// when it started, and the (scaled) bytes parked in it. This is what
+/// the age-based GC sweep and the stranded-bytes accounting read — the
+/// backend only stores the part buffers.
+#[derive(Debug, Clone)]
+struct MultipartTracker {
+    /// Target object key (what fault rules match against).
+    key: String,
+    started: SimInstant,
+    /// part number -> paper-scaled bytes uploaded for that part.
+    part_bytes: HashMap<u32, u64>,
+}
+
+/// Result of one [`ObjectStore::sweep_stale_multiparts`] pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MultipartSweep {
+    /// Uploads aborted by this sweep.
+    pub aborted: usize,
+    /// Paper-scaled bytes those uploads had parked (freed by the sweep).
+    pub freed_bytes: u64,
 }
 
 /// The shared object store. Safe to use from the executor threads of the
@@ -166,6 +201,9 @@ pub struct ObjectStore {
     visibility: Mutex<VisibilityMap>,
     rng: Mutex<Pcg32>,
     counters: LiveCounters,
+    injector: FaultInjector,
+    /// In-flight multipart uploads, by upload id (see [`MultipartTracker`]).
+    multipart: Mutex<HashMap<u64, MultipartTracker>>,
     pub config: StoreConfig,
 }
 
@@ -182,8 +220,25 @@ impl ObjectStore {
             visibility: Mutex::new(VisibilityMap::default()),
             rng: Mutex::new(Pcg32::new(config.seed ^ 0x5106_a70c)),
             counters: LiveCounters::new(),
+            injector: FaultInjector::new(&config.faults),
+            multipart: Mutex::new(HashMap::new()),
             config,
         })
+    }
+
+    /// Arm additional fault rules mid-run (fresh match counters, counted
+    /// from now). This is how the Spark driver turns a
+    /// [`crate::spark::FaultKind::TransientOps`] schedule into live REST
+    /// faults for one task attempt.
+    pub fn arm_faults(&self, spec: &FaultSpec) {
+        self.injector.arm(spec);
+    }
+
+    /// Whether the fault injector has no rules armed (see
+    /// [`FaultInjector::is_idle`]): connectors use this to skip the
+    /// defensive payload clones their retry loops would otherwise make.
+    pub fn faults_idle(&self) -> bool {
+        self.injector.is_idle()
     }
 
     /// The backend's human-readable name (`mem`, `sharded-mem`, `local-fs`).
@@ -278,6 +333,16 @@ impl ObjectStore {
         now: SimInstant,
     ) -> (Result<(), StoreError>, SimDuration) {
         let size = data.len() as u64;
+        // Injected transient failure: the whole body went onto the wire
+        // before the 503 came back — latency, the op AND the payload
+        // bytes are all burned (real stores bill failed PUTs), but the
+        // backend never sees the object.
+        if let Some(msg) = self.injector.check(FaultOp::Put, key) {
+            let d = self.charge(OpKind::PutObject, size, 0);
+            self.counters
+                .record_write(self.config.latency.scaled_bytes(size));
+            return (Err(StoreError::TransientFailure(msg)), d);
+        }
         let d = self.charge(OpKind::PutObject, size, 0);
         match self.apply_put(container, key, data, metadata, now) {
             Ok(()) => {
@@ -296,6 +361,12 @@ impl ObjectStore {
         container: &str,
         key: &str,
     ) -> (Result<GetResult, StoreError>, SimDuration) {
+        // Injected transient failure: the 503 arrives before the body,
+        // so only the request latency and the op are burned.
+        if let Some(msg) = self.injector.check(FaultOp::Get, key) {
+            let d = self.charge(OpKind::GetObject, 0, 0);
+            return (Err(StoreError::TransientFailure(msg)), d);
+        }
         match self.backend.get(container, key) {
             Ok(obj) => {
                 let size = obj.size();
@@ -340,6 +411,10 @@ impl ObjectStore {
         offset: u64,
         len: u64,
     ) -> (Result<GetResult, StoreError>, SimDuration) {
+        if let Some(msg) = self.injector.check(FaultOp::Get, key) {
+            let d = self.charge(OpKind::GetObject, 0, 0);
+            return (Err(StoreError::TransientFailure(msg)), d);
+        }
         match self.backend.get_range(container, key, offset, len) {
             Ok((data, stat)) => {
                 let n = data.len() as u64;
@@ -504,20 +579,41 @@ impl ObjectStore {
 
     // ---- multipart upload (S3a fast-upload path) --------------------------
 
-    /// Initiate a multipart upload. Charged as a PUT request.
+    /// The target key of an in-flight upload (for fault matching).
+    fn multipart_target(&self, upload_id: u64) -> Option<String> {
+        self.multipart
+            .lock()
+            .unwrap()
+            .get(&upload_id)
+            .map(|t| t.key.clone())
+    }
+
+    /// Initiate a multipart upload. Charged as a PUT request. `now` is
+    /// recorded as the upload's start time — the age the
+    /// [`ObjectStore::sweep_stale_multiparts`] lifecycle sweep measures.
     pub fn initiate_multipart(
         &self,
         container: &str,
         key: &str,
         metadata: Metadata,
+        now: SimInstant,
     ) -> (Result<u64, StoreError>, SimDuration) {
         let d = self.charge(OpKind::PutObject, 0, 0);
-        (
-            self.backend
-                .initiate_multipart(container, key, metadata)
-                .map_err(StoreError::from),
-            d,
-        )
+        let r = self
+            .backend
+            .initiate_multipart(container, key, metadata)
+            .map_err(StoreError::from);
+        if let Ok(id) = &r {
+            self.multipart.lock().unwrap().insert(
+                *id,
+                MultipartTracker {
+                    key: key.to_string(),
+                    started: now,
+                    part_bytes: HashMap::new(),
+                },
+            );
+        }
+        (r, d)
     }
 
     /// Upload one part. Charged as a PUT of the part's size.
@@ -528,11 +624,27 @@ impl ObjectStore {
         data: Vec<u8>,
     ) -> (Result<(), StoreError>, SimDuration) {
         let size = data.len() as u64;
+        // Injected transient failure: like a failed whole-object PUT,
+        // the part's bytes crossed the wire before the 503 — latency,
+        // op and payload bytes all burn; the part is not stored.
+        let target = self.multipart_target(upload_id);
+        if let Some(msg) = self
+            .injector
+            .check(FaultOp::UploadPart, target.as_deref().unwrap_or(""))
+        {
+            let d = self.charge(OpKind::PutObject, size, 0);
+            self.counters
+                .record_write(self.config.latency.scaled_bytes(size));
+            return (Err(StoreError::TransientFailure(msg)), d);
+        }
         let d = self.charge(OpKind::PutObject, size, 0);
         match self.backend.upload_part(upload_id, part_number, data) {
             Ok(()) => {
-                self.counters
-                    .record_write(self.config.latency.scaled_bytes(size));
+                let scaled = self.config.latency.scaled_bytes(size);
+                self.counters.record_write(scaled);
+                if let Some(t) = self.multipart.lock().unwrap().get_mut(&upload_id) {
+                    t.part_bytes.insert(part_number, scaled);
+                }
                 (Ok(()), d)
             }
             Err(e) => (Err(e.into()), d),
@@ -545,7 +657,21 @@ impl ObjectStore {
         upload_id: u64,
         now: SimInstant,
     ) -> (Result<(), StoreError>, SimDuration) {
+        // An injected transient failure on the completion POST leaves
+        // the upload alive (the request never took effect), so a retry
+        // can complete it without re-sending any part.
+        let target = self.multipart_target(upload_id);
+        if let Some(msg) = self
+            .injector
+            .check(FaultOp::CompleteMultipart, target.as_deref().unwrap_or(""))
+        {
+            let d = self.charge(OpKind::PutObject, 0, 0);
+            return (Err(StoreError::TransientFailure(msg)), d);
+        }
         let d = self.charge(OpKind::PutObject, 0, 0);
+        // The backend consumes the upload whether or not assembly
+        // succeeds (S3 semantics) — drop the tracker either way.
+        self.multipart.lock().unwrap().remove(&upload_id);
         let assembled = match self
             .backend
             .complete_multipart(upload_id, self.config.min_part_size)
@@ -567,12 +693,47 @@ impl ObjectStore {
     /// Abort a multipart upload (task abort path). Charged as a DELETE.
     pub fn abort_multipart(&self, upload_id: u64) -> (Result<(), StoreError>, SimDuration) {
         let d = self.charge(OpKind::DeleteObject, 0, 0);
+        self.multipart.lock().unwrap().remove(&upload_id);
         (
             self.backend
                 .abort_multipart(upload_id)
                 .map_err(StoreError::from),
             d,
         )
+    }
+
+    /// Age-based multipart GC — the lifecycle rule real stores offer
+    /// (`AbortIncompleteMultipartUpload`): abort every in-flight upload
+    /// initiated at or before `now - max_age`, freeing the parked part
+    /// bytes. Crashed or transiently-exhausted fast-upload writers
+    /// strand uploads (nobody aborts for a dead executor), and stranded
+    /// parts are *billed storage* until reaped. Each abort is charged as
+    /// a DELETE via [`ObjectStore::abort_multipart`]; the summed
+    /// durations are returned for callers that account the sweep on a
+    /// clock (the harness treats it as server-side housekeeping).
+    pub fn sweep_stale_multiparts(
+        &self,
+        now: SimInstant,
+        max_age: SimDuration,
+    ) -> (MultipartSweep, SimDuration) {
+        let stale: Vec<(u64, u64)> = {
+            let mp = self.multipart.lock().unwrap();
+            mp.iter()
+                .filter(|(_, t)| now.elapsed_since(t.started) >= max_age)
+                .map(|(id, t)| (*id, t.part_bytes.values().sum::<u64>()))
+                .collect()
+        };
+        let mut sweep = MultipartSweep::default();
+        let mut elapsed = SimDuration::ZERO;
+        for (id, bytes) in stale {
+            let (r, d) = self.abort_multipart(id);
+            elapsed += d;
+            if r.is_ok() {
+                sweep.aborted += 1;
+                sweep.freed_bytes += bytes;
+            }
+        }
+        (sweep, elapsed)
     }
 
     // ---- inspection (harness/tests only; not REST, not counted) -----------
@@ -597,6 +758,18 @@ impl ObjectStore {
     /// In-flight multipart uploads (leak detection in tests).
     pub fn debug_multipart_in_flight(&self) -> usize {
         self.backend.multipart_in_flight()
+    }
+
+    /// Paper-scaled bytes parked in in-flight multipart uploads — the
+    /// stranded fast-upload debris the Table 8 addendum prices and the
+    /// [`ObjectStore::sweep_stale_multiparts`] lifecycle sweep frees.
+    pub fn debug_stranded_multipart_bytes(&self) -> u64 {
+        self.multipart
+            .lock()
+            .unwrap()
+            .values()
+            .map(|t| t.part_bytes.values().sum::<u64>())
+            .sum()
     }
 }
 
@@ -871,7 +1044,7 @@ mod tests {
     fn multipart_assembles_and_counts_puts() {
         for s in all_backend_stores() {
             let before = s.counters();
-            let (id, _) = s.initiate_multipart("res", "big", Metadata::new());
+            let (id, _) = s.initiate_multipart("res", "big", Metadata::new(), SimInstant(0));
             let id = id.unwrap();
             s.upload_part(id, 1, b"hello ".to_vec()).0.unwrap();
             s.upload_part(id, 2, b"world".to_vec()).0.unwrap();
@@ -888,7 +1061,7 @@ mod tests {
     #[test]
     fn multipart_abort_cleans_up() {
         for s in all_backend_stores() {
-            let (id, _) = s.initiate_multipart("res", "x", Metadata::new());
+            let (id, _) = s.initiate_multipart("res", "x", Metadata::new(), SimInstant(0));
             let id = id.unwrap();
             s.upload_part(id, 1, b"junk".to_vec()).0.unwrap();
             s.abort_multipart(id).0.unwrap();
@@ -935,6 +1108,130 @@ mod tests {
         };
         assert_eq!(mk(1), mk(1));
         assert_ne!(mk(1), mk(2));
+    }
+
+    #[test]
+    fn injected_put_fault_burns_latency_op_and_bytes() {
+        use super::super::faults::{FaultOp, FaultSpec};
+        let cfg = StoreConfig {
+            latency: LatencyModel::paper_testbed(),
+            faults: FaultSpec::one(FaultOp::Put, "d/", 1),
+            ..StoreConfig::instant_strong()
+        };
+        let s = ObjectStore::new(cfg);
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let body = vec![0u8; 26_000_000];
+        let (r, d) = s.put_object("res", "d/part-0", body.clone(), Metadata::new(), SimInstant(0));
+        assert!(matches!(r, Err(StoreError::TransientFailure(_))));
+        // Full PUT pricing: base latency + transfer of the whole body.
+        assert_eq!(d.as_micros(), 30_000 + 1_000_000);
+        let c = s.counters();
+        assert_eq!(c.get(OpKind::PutObject), 1 + 1 /* container */);
+        assert_eq!(c.bytes_written, 26_000_000, "failed PUT bytes hit the wire");
+        // Nothing landed in the backend.
+        assert!(s.get_object("res", "d/part-0").0.is_err());
+        // The second matching PUT (the retry) succeeds.
+        let (r, _) = s.put_object("res", "d/part-0", body, Metadata::new(), SimInstant(1));
+        assert!(r.is_ok());
+        assert_eq!(s.counters().bytes_written, 52_000_000, "re-send doubles wire bytes");
+    }
+
+    #[test]
+    fn injected_get_fault_burns_op_but_no_bytes() {
+        use super::super::faults::{FaultOp, FaultSpec};
+        let cfg = StoreConfig {
+            faults: FaultSpec::none()
+                .with(super::super::faults::FaultRule::new(FaultOp::Get, "", 1, 1))
+                .with(super::super::faults::FaultRule::new(FaultOp::Get, "", 3, 1)),
+            ..StoreConfig::instant_strong()
+        };
+        let s = ObjectStore::new(cfg);
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        s.put_object("res", "k", (0u8..100).collect(), Metadata::new(), SimInstant(0))
+            .0
+            .unwrap();
+        // GET match 1: injected.
+        assert!(matches!(
+            s.get_object("res", "k").0,
+            Err(StoreError::TransientFailure(_))
+        ));
+        // GET match 2: fine. Match 3 (ranged): injected again.
+        assert!(s.get_object("res", "k").0.is_ok());
+        assert!(matches!(
+            s.get_object_range("res", "k", 0, 10).0,
+            Err(StoreError::TransientFailure(_))
+        ));
+        let c = s.counters();
+        assert_eq!(c.get(OpKind::GetObject), 3, "failed GETs are still ops");
+        assert_eq!(c.bytes_read, 100, "only the successful GET moved bytes");
+    }
+
+    #[test]
+    fn transient_complete_leaves_upload_retryable() {
+        use super::super::faults::{FaultOp, FaultSpec};
+        let cfg = StoreConfig {
+            faults: FaultSpec::one(FaultOp::CompleteMultipart, "big", 1),
+            ..StoreConfig::instant_strong()
+        };
+        let s = ObjectStore::new(cfg);
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let (id, _) = s.initiate_multipart("res", "big", Metadata::new(), SimInstant(0));
+        let id = id.unwrap();
+        s.upload_part(id, 1, b"hello".to_vec()).0.unwrap();
+        // First complete: injected 503. The upload must stay alive.
+        assert!(matches!(
+            s.complete_multipart(id, SimInstant(1)).0,
+            Err(StoreError::TransientFailure(_))
+        ));
+        assert_eq!(s.debug_multipart_in_flight(), 1);
+        // Retry completes without re-sending any part.
+        s.complete_multipart(id, SimInstant(2)).0.unwrap();
+        assert_eq!(&*s.get_object("res", "big").0.unwrap().data, b"hello");
+        assert_eq!(s.debug_multipart_in_flight(), 0);
+        assert_eq!(s.debug_stranded_multipart_bytes(), 0);
+    }
+
+    #[test]
+    fn multipart_gc_sweeps_only_stale_uploads() {
+        let s = store();
+        let (old_id, _) = s.initiate_multipart("res", "old", Metadata::new(), SimInstant(0));
+        let old_id = old_id.unwrap();
+        s.upload_part(old_id, 1, vec![1u8; 100]).0.unwrap();
+        s.upload_part(old_id, 2, vec![2u8; 50]).0.unwrap();
+        let (new_id, _) =
+            s.initiate_multipart("res", "new", Metadata::new(), SimInstant(5_000_000));
+        let new_id = new_id.unwrap();
+        s.upload_part(new_id, 1, vec![3u8; 10]).0.unwrap();
+        assert_eq!(s.debug_stranded_multipart_bytes(), 160);
+
+        // Sweep at t=6s with a 2s TTL: only the t=0 upload is stale.
+        let before = s.counters();
+        let (sweep, _) =
+            s.sweep_stale_multiparts(SimInstant(6_000_000), SimDuration::from_secs(2));
+        assert_eq!(sweep.aborted, 1);
+        assert_eq!(sweep.freed_bytes, 150);
+        assert_eq!(s.debug_multipart_in_flight(), 1);
+        assert_eq!(s.debug_stranded_multipart_bytes(), 10);
+        assert_eq!(
+            s.counters().since(&before).get(OpKind::DeleteObject),
+            1,
+            "each abort is a DELETE-class request"
+        );
+        // The reaped upload is gone for good; the young one still works.
+        assert!(s.complete_multipart(old_id, SimInstant(7_000_000)).0.is_err());
+        assert!(s.complete_multipart(new_id, SimInstant(7_000_000)).0.is_ok());
+    }
+
+    #[test]
+    fn default_config_injects_nothing() {
+        let s = store();
+        for i in 0..50u64 {
+            s.put_object("res", &format!("k{i}"), vec![0u8; 8], Metadata::new(), SimInstant(i))
+                .0
+                .unwrap();
+            s.get_object("res", &format!("k{i}")).0.unwrap();
+        }
+        assert_eq!(s.counters().get(OpKind::PutObject), 51);
     }
 
     #[test]

@@ -72,6 +72,10 @@ pub struct JobStats {
     /// All attempts launched (originals + retries + speculative copies).
     pub attempts: u32,
     pub failed_attempts: u32,
+    /// Subset of `failed_attempts` that failed by exhausting a transient
+    /// retry budget (`FsError::TransientExhausted`) — the executor
+    /// survived, aborted the attempt, and the driver re-scheduled.
+    pub transient_exhausted_attempts: u32,
     pub speculative_attempts: u32,
     pub aborted_attempts: u32,
     /// REST ops issued during this job (zero if no object store attached).
@@ -168,6 +172,7 @@ impl Driver {
             runtime: SimDuration::ZERO,
             attempts: 0,
             failed_attempts: 0,
+            transient_exhausted_attempts: 0,
             speculative_attempts: 0,
             aborted_attempts: 0,
             ops: OpCounts::default(),
@@ -200,8 +205,11 @@ impl Driver {
             slots.push(Reverse(rec.end.0));
 
             match &rec.result {
-                Err(_) => {
+                Err(e) => {
                     stats.failed_attempts += 1;
+                    if matches!(e, FsError::TransientExhausted(_)) {
+                        stats.transient_exhausted_attempts += 1;
+                    }
                     // Decide retry. Speculative copies that fail simply
                     // lose the race; originals are retried.
                     let next_no = attempt_no + 1;
@@ -327,6 +335,15 @@ impl Driver {
             };
         }
 
+        // TransientOps arms flaky REST ops on the store for this attempt
+        // (match counters run from here; attempts execute serially on the
+        // virtual clock, so the armed rules hit this attempt's ops).
+        if let Some(FaultKind::TransientOps { spec }) = &fault {
+            if let Some(store) = &self.store {
+                store.arm_faults(spec);
+            }
+        }
+
         let result = (|| -> Result<TaskResult, FsError> {
             let tac = match job_ctx {
                 Some(jc) => {
@@ -365,6 +382,15 @@ impl Driver {
             let body = &job.tasks[task_id as usize];
             body(&mut run)
         })();
+
+        // A failed attempt whose executor is still alive (transient
+        // budget exhausted, as opposed to a crash) aborts its own task
+        // attempt before the driver reschedules — the committer decides
+        // what that means per algorithm/connector.
+        if let (Err(e), Some(jc)) = (&result, job_ctx) {
+            let tac = TaskAttemptContext::new(jc, attempt.clone());
+            committer.cleanup_failed_attempt(self.fs.as_ref(), &tac, e, &mut ctx);
+        }
 
         if let Some(FaultKind::Straggle { extra }) = &fault {
             ctx.add(*extra);
@@ -585,6 +611,82 @@ mod tests {
             .unwrap();
         assert!(part.path.name().ends_with("m_000000_1"));
         assert_eq!(part.len, 100);
+    }
+
+    #[test]
+    fn transient_exhaustion_escalates_into_successful_reattempt() {
+        use crate::objectstore::{FaultOp, FaultSpec};
+        // No stream-level retries: the attempt's one PUT try fails, the
+        // live executor aborts the attempt, and the driver's ordinary
+        // re-attempt machinery produces the correct output under a fresh
+        // attempt name.
+        let (store, mut driver) = stocator_driver(SparkConfig {
+            slots: 2,
+            job_timestamp: "201512062056".into(),
+            ..Default::default()
+        });
+        let out = Path::parse("swift2d://res/d").unwrap();
+        let job = SparkJob::new("flaky", Some(out), CommitAlgorithm::V1, writer_tasks(1, 16))
+            .with_faults(FaultPlan::none().with(
+                0,
+                0,
+                FaultKind::TransientOps {
+                    spec: FaultSpec::one(FaultOp::Put, "d/part-00000", 1),
+                },
+            ));
+        let stats = driver.run_job(&job).unwrap();
+        assert!(stats.success);
+        assert_eq!(stats.attempts, 2);
+        assert_eq!(stats.failed_attempts, 1);
+        assert_eq!(stats.transient_exhausted_attempts, 1);
+        let names = store.debug_names("res", "d/");
+        assert!(
+            names.iter().any(|n| n.ends_with("m_000000_1")),
+            "re-attempt writes under a fresh attempt name: {names:?}"
+        );
+        assert!(
+            !names.iter().any(|n| n.ends_with("m_000000_0")),
+            "the failed transfer left no object: {names:?}"
+        );
+        // The dataset reads back correctly.
+        let fs = Stocator::with_defaults(store.clone());
+        let mut ctx = OpCtx::new(SimInstant(stats.end.0));
+        let ls = fs
+            .list_status(&Path::parse("swift2d://res/d").unwrap(), &mut ctx)
+            .unwrap();
+        let part = ls.iter().find(|s| s.path.name().starts_with("part-")).unwrap();
+        assert_eq!(part.len, 16);
+    }
+
+    #[test]
+    fn stream_retries_absorb_faults_without_task_failure() {
+        use crate::objectstore::{FaultOp, FaultRule, FaultSpec, RetryPolicy};
+        // With --retries 1, a single injected PUT fault is absorbed at
+        // the stream layer: no failed attempt ever reaches the driver.
+        let mut cfg = StoreConfig::instant_strong();
+        cfg.faults = FaultSpec::none().with(FaultRule::new(FaultOp::Put, "d/part-00000", 1, 1));
+        cfg.retry = RetryPolicy::with_retries(1);
+        let store = ObjectStore::new(cfg);
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = Stocator::with_defaults(store.clone());
+        let mut driver = Driver::new(
+            SparkConfig {
+                slots: 2,
+                job_timestamp: "201512062056".into(),
+                ..Default::default()
+            },
+            fs,
+            Some(store.clone()),
+            ComputeModel::free(),
+        );
+        let out = Path::parse("swift2d://res/d").unwrap();
+        let job = SparkJob::new("absorbed", Some(out), CommitAlgorithm::V1, writer_tasks(1, 16));
+        let stats = driver.run_job(&job).unwrap();
+        assert!(stats.success);
+        assert_eq!(stats.attempts, 1, "the retry hid the fault from the scheduler");
+        assert_eq!(stats.failed_attempts, 0);
+        let names = store.debug_names("res", "d/");
+        assert!(names.iter().any(|n| n.ends_with("m_000000_0")), "{names:?}");
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Fault and straggler injection (paper §2.2.1: task attempts may fail or
-//! be slow; §3.5 Table 3 exercises both).
+//! be slow; §3.5 Table 3 exercises both). Crash faults model fail-stop
+//! executor death; [`FaultKind::TransientOps`] models the *other* failure
+//! class — flaky REST operations — by arming the object store's
+//! [`crate::objectstore::FaultInjector`] for the scheduled attempt, so
+//! one schedule can mix crashes, stragglers and 5xx storms.
 
+use crate::objectstore::FaultSpec;
 use crate::simclock::SimDuration;
 use std::collections::HashMap;
 
@@ -17,6 +22,14 @@ pub enum FaultKind {
     /// The attempt runs but takes `extra` longer than it should — the
     /// speculation trigger.
     Straggle { extra: SimDuration },
+    /// The attempt's REST operations hit injected transient failures:
+    /// `spec`'s rules are armed on the object store when the attempt
+    /// starts (match counters run from that moment). The executor stays
+    /// alive — the connector retries under its `RetryPolicy`, and only
+    /// an exhausted budget fails the attempt
+    /// ([`crate::fs::FsError::TransientExhausted`]), which the driver
+    /// escalates into the ordinary re-attempt machinery.
+    TransientOps { spec: FaultSpec },
 }
 
 /// A deterministic fault schedule, keyed by (task id, attempt number).
@@ -71,5 +84,24 @@ mod tests {
         assert_eq!(plan.len(), 2);
         assert!(!plan.is_empty());
         assert!(FaultPlan::none().is_empty());
+    }
+
+    #[test]
+    fn plans_can_mix_crashes_stragglers_and_transient_ops() {
+        use crate::objectstore::{FaultOp, FaultSpec};
+        let plan = FaultPlan::none()
+            .with(0, 0, FaultKind::CrashBeforeWrite)
+            .with(
+                1,
+                0,
+                FaultKind::TransientOps {
+                    spec: FaultSpec::one(FaultOp::Put, "d/", 1),
+                },
+            );
+        assert!(matches!(
+            plan.get(1, 0),
+            Some(FaultKind::TransientOps { spec }) if spec.rules.len() == 1
+        ));
+        assert_eq!(plan.len(), 2);
     }
 }

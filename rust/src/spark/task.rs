@@ -91,6 +91,14 @@ impl<'a> TaskRun<'a> {
     }
 
     /// Stream this task's output part through the commit protocol.
+    ///
+    /// Transient REST faults on the write path are invisible here while
+    /// the connector's `RetryPolicy` absorbs them (re-PUT from spool,
+    /// re-send one part, restart the chunked PUT); only an exhausted
+    /// budget surfaces, as [`FsError::TransientExhausted`], failing this
+    /// attempt — the stream is dropped un-closed, so connector-defined
+    /// debris (e.g. a stranded fast-upload multipart) remains for the
+    /// committer's abort / the multipart GC sweep to reap.
     pub fn write_part(&mut self, basename: &str, data: Vec<u8>) -> Result<u64, FsError> {
         let mut out = self
             .committer

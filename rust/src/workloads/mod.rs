@@ -57,6 +57,13 @@ pub struct WorkloadReport {
     pub ops: OpCounts,
     /// Ok(summary) if the output validated against the oracle.
     pub validation: Result<String, String>,
+    /// Paper-scaled bytes parked in orphaned multipart uploads when the
+    /// workload finished (fast-upload crash/fault debris; 0 unless
+    /// faults stranded an upload).
+    pub stranded_mp_bytes: u64,
+    /// The same figure after the `--multipart-ttl` lifecycle sweep
+    /// (equal to `stranded_mp_bytes` when the sweep is off).
+    pub stranded_mp_bytes_after_sweep: u64,
 }
 
 impl WorkloadReport {
@@ -71,6 +78,8 @@ impl WorkloadReport {
             runtime,
             ops,
             validation,
+            stranded_mp_bytes: 0,
+            stranded_mp_bytes_after_sweep: 0,
         }
     }
 

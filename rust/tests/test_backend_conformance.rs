@@ -516,3 +516,77 @@ fn readahead_fill_clamps_at_eof_on_every_backend() {
         ));
     }
 }
+
+#[test]
+fn fault_injection_is_backend_invariant() {
+    use stocator::connectors::Stocator;
+    use stocator::fs::{FileSystem, OpCtx, Path};
+    use stocator::objectstore::{FaultOp, FaultSpec, ObjectStore, RetryPolicy, StoreConfig};
+
+    // The fault plane lives in the store FRONT END, so the same fault
+    // schedule over the same op sequence must fire at the same op on
+    // every backend: identical retry traces, identical op/byte
+    // counters, identical surviving objects.
+    struct Reap(Option<PathBuf>);
+    impl Drop for Reap {
+        fn drop(&mut self) {
+            if let Some(p) = &self.0 {
+                let _ = std::fs::remove_dir_all(p);
+            }
+        }
+    }
+
+    let fs_root = unique_root("faults");
+    let mut snapshots: Vec<(String, Vec<String>, u64, u64, Vec<String>)> = Vec::new();
+    for kind in [
+        BackendKind::Mem,
+        BackendKind::Sharded(4),
+        BackendKind::LocalFs(Some(fs_root.clone())),
+    ] {
+        let _reap = Reap(match &kind {
+            BackendKind::LocalFs(Some(p)) => Some(p.clone()),
+            _ => None,
+        });
+        let store = ObjectStore::new(StoreConfig {
+            backend: kind.clone(),
+            faults: FaultSpec::one(FaultOp::Put, "d/part", 1),
+            retry: RetryPolicy::with_retries(1),
+            ..StoreConfig::instant_strong()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = Stocator::with_defaults(store.clone());
+        let mut c = OpCtx::traced(SimInstant::EPOCH);
+        let temp = Path::parse(
+            "swift2d://res/d/_temporary/0/_temporary/attempt_201512062056_0000_m_000000_0/part-0",
+        )
+        .unwrap();
+        fs.write_all(&temp, (0u8..50).collect(), true, &mut c).unwrap();
+        // And one faulted read for the GET side of the plane.
+        let armed = FaultSpec::one(FaultOp::Get, "d/part", 1);
+        store.arm_faults(&armed);
+        let final_key = "d/part-0_attempt_201512062056_0000_m_000000_0";
+        let data = fs
+            .read_all(&Path::parse(&format!("swift2d://res/{final_key}")).unwrap(), &mut c)
+            .unwrap();
+        assert_eq!(&*data, &(0u8..50).collect::<Vec<u8>>()[..], "backend {kind:?}");
+        let counts = store.counters();
+        snapshots.push((
+            format!("{kind:?}"),
+            c.take_trace(),
+            counts.total(),
+            counts.bytes_written,
+            store.debug_names("res", "d/"),
+        ));
+    }
+    let (_, trace0, total0, bytes0, names0) = &snapshots[0];
+    assert!(
+        trace0.iter().any(|l| l.contains("(503 transient)")),
+        "the fault must actually fire: {trace0:?}"
+    );
+    for (kind, trace, total, bytes, names) in &snapshots[1..] {
+        assert_eq!(trace, trace0, "trace diverged on {kind}");
+        assert_eq!(total, total0, "op total diverged on {kind}");
+        assert_eq!(bytes, bytes0, "wire bytes diverged on {kind}");
+        assert_eq!(names, names0, "surviving objects diverged on {kind}");
+    }
+}

@@ -19,7 +19,8 @@ use stocator::fs::{FileSystem, FsInputStream, FsOutputStream, OpCtx, Path};
 use stocator::harness::{run_cell, Scenario, Sizing, Workload};
 use stocator::metrics::{OpCounts, OpKind};
 use stocator::objectstore::{
-    BackendKind, ConsistencyModel, LatencyModel, ObjectStore, StoreConfig,
+    BackendKind, ConsistencyModel, FaultOp, FaultSpec, LatencyModel, ObjectStore, RetryPolicy,
+    StoreConfig,
 };
 use stocator::simclock::SimInstant;
 
@@ -36,6 +37,23 @@ fn build_with_readahead(
     scenario: Scenario,
     readahead: u64,
 ) -> (Arc<ObjectStore>, Arc<dyn FileSystem>) {
+    build_with(scenario, readahead, FaultSpec::none(), 0)
+}
+
+fn build_with_faults(
+    scenario: Scenario,
+    faults: FaultSpec,
+    retries: u32,
+) -> (Arc<ObjectStore>, Arc<dyn FileSystem>) {
+    build_with(scenario, 0, faults, retries)
+}
+
+fn build_with(
+    scenario: Scenario,
+    readahead: u64,
+    faults: FaultSpec,
+    retries: u32,
+) -> (Arc<ObjectStore>, Arc<dyn FileSystem>) {
     let store = ObjectStore::new(StoreConfig {
         latency: LatencyModel::paper_testbed(),
         consistency: ConsistencyModel::strong(),
@@ -43,6 +61,8 @@ fn build_with_readahead(
         seed: 0,
         backend: BackendKind::Mem,
         readahead,
+        faults,
+        retry: RetryPolicy::with_retries(retries),
     });
     store.create_container("res", SimInstant::EPOCH).0.unwrap();
     let fs = scenario.connector(store.clone(), MULTIPART_SIZE);
@@ -356,6 +376,145 @@ fn one_object_job_rest_sequence_is_readahead_invariant() {
         assert_eq!(t_off, t_on, "{scenario:?}: virtual runtime must not move");
         assert_eq!(ops_off, ops_on, "{scenario:?}");
     }
+}
+
+// ---- transient-fault snapshots ---------------------------------------------
+//
+// The fault-plane half of the accounting safety net: one injected
+// transient PUT fault per connector produces an EXACT golden retry
+// sequence — the baseline trace with the failed request inserted — and
+// an exactly priced recovery (the failed op's full duration + the
+// backoff), with per-connector resume semantics visible in the wire-byte
+// accounting (spool re-PUT and chunked-PUT restart re-send the whole
+// object; fast upload re-sends one part).
+
+/// With the fault plane explicitly at its defaults (empty spec, zero
+/// retries), every scenario's trace, runtime and op counts are
+/// byte-identical to the stock build — the defaults knob is a no-op.
+#[test]
+fn fault_plane_defaults_change_nothing() {
+    for scenario in Scenario::ALL {
+        let (store_a, fs_a) = build(scenario);
+        let a = one_object_job(&store_a, &*fs_a, scenario, usize::MAX);
+        let (store_b, fs_b) = build_with_faults(scenario, FaultSpec::none(), 0);
+        let b = one_object_job(&store_b, &*fs_b, scenario, usize::MAX);
+        assert_eq!(a.0, b.0, "{scenario:?} trace");
+        assert_eq!(a.1, b.1, "{scenario:?} virtual runtime");
+        assert_eq!(a.2, b.2, "{scenario:?} op counts");
+    }
+}
+
+/// One injected transient fault on the part write, `--retries 1`, every
+/// connector family: the REST trace is EXACTLY the baseline with the
+/// failed request inserted before its retry, the virtual runtime grows
+/// by EXACTLY the failed op + backoff, and the extra wire bytes are the
+/// connector's re-send unit — full object for the spool connectors and
+/// for Stocator's unresumable chunked PUT, one part for fast upload.
+#[test]
+fn injected_put_fault_golden_retry_sequences() {
+    let attempt_part_key =
+        "data.txt/_temporary/0/_temporary/attempt_201512062056_0000_m_000000_0/part-00000";
+    let stoc_final_key = "data.txt/part-00000_attempt_201512062056_0000_m_000000_0";
+    struct Case {
+        scenario: Scenario,
+        spec: FaultSpec,
+        /// The success line of the faulted operation (the failed twin is
+        /// inserted right before it).
+        target: String,
+        /// Simulated payload bytes the failed request burned = the
+        /// connector's re-send unit.
+        failed_bytes: u64,
+    }
+    let cases = vec![
+        Case {
+            scenario: Scenario::HadoopSwiftBase,
+            spec: FaultSpec::one(FaultOp::Put, attempt_part_key, 1),
+            target: format!("swift: PUT res/{attempt_part_key}"),
+            failed_bytes: PART_BYTES as u64,
+        },
+        Case {
+            scenario: Scenario::S3aBase,
+            spec: FaultSpec::one(FaultOp::Put, attempt_part_key, 1),
+            target: format!("s3a: PUT res/{attempt_part_key}"),
+            failed_bytes: PART_BYTES as u64,
+        },
+        Case {
+            scenario: Scenario::Stocator,
+            spec: FaultSpec::one(FaultOp::Put, stoc_final_key, 1),
+            target: format!("stocator: (intercept) PUT res/{stoc_final_key}"),
+            failed_bytes: PART_BYTES as u64,
+        },
+        Case {
+            // Fast upload: fail the SECOND part PUT — only that part is
+            // re-sent; initiate, part 1 and part 3 are untouched.
+            scenario: Scenario::S3aCv2Fu,
+            spec: FaultSpec::one(FaultOp::UploadPart, attempt_part_key, 2),
+            target: format!("s3a: PUT res/{attempt_part_key}?partNumber=2"),
+            failed_bytes: MULTIPART_SIZE,
+        },
+    ];
+    for case in &cases {
+        let (store_base, fs_base) = build(case.scenario);
+        let (baseline, t_base, ops_base) =
+            one_object_job(&store_base, &*fs_base, case.scenario, usize::MAX);
+        let (store_f, fs_f) = build_with_faults(case.scenario, case.spec.clone(), 1);
+        let (faulted, t_fault, ops_fault) =
+            one_object_job(&store_f, &*fs_f, case.scenario, usize::MAX);
+
+        // Exact golden trace: baseline + the failed request, in place.
+        let idx = baseline
+            .iter()
+            .position(|l| l == &case.target)
+            .unwrap_or_else(|| panic!("{:?}: target line missing in {baseline:?}", case.scenario));
+        let mut expected = baseline.clone();
+        expected.insert(idx, format!("{} (503 transient)", case.target));
+        assert_eq!(faulted, expected, "{:?}", case.scenario);
+
+        // Exact recovery price: the failed op's full duration + backoff.
+        let lat = LatencyModel::paper_testbed();
+        let extra = lat.op_duration(OpKind::PutObject, case.failed_bytes, 0)
+            + RetryPolicy::with_retries(1).backoff(1);
+        assert_eq!(
+            t_fault,
+            t_base + extra.as_micros(),
+            "{:?}: recovery must cost exactly one failed op + backoff",
+            case.scenario
+        );
+
+        // Wire bytes: the re-send unit, and exactly one extra PUT op.
+        assert_eq!(
+            ops_fault.bytes_written,
+            ops_base.bytes_written + case.failed_bytes,
+            "{:?}",
+            case.scenario
+        );
+        assert_eq!(
+            ops_fault.get(OpKind::PutObject),
+            ops_base.get(OpKind::PutObject) + 1,
+            "{:?}",
+            case.scenario
+        );
+        for kind in [
+            OpKind::HeadObject,
+            OpKind::HeadContainer,
+            OpKind::GetObject,
+            OpKind::CopyObject,
+            OpKind::DeleteObject,
+            OpKind::GetContainer,
+        ] {
+            assert_eq!(
+                ops_fault.get(kind),
+                ops_base.get(kind),
+                "{:?}: a PUT fault must only add PUT-class ops ({kind:?})",
+                case.scenario
+            );
+        }
+    }
+    // THE paper-footnote contrast: Stocator's unresumable chunked PUT
+    // re-sends the whole object where fast upload re-sends one part.
+    assert!(cases[2].failed_bytes > cases[3].failed_bytes);
+    assert_eq!(cases[2].failed_bytes, PART_BYTES as u64);
+    assert_eq!(cases[3].failed_bytes, MULTIPART_SIZE);
 }
 
 /// Whole-cell determinism: a full Teragen cell (driver, committer,
