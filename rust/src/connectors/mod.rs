@@ -48,19 +48,45 @@ pub(crate) fn marker_key(key: &str) -> String {
 /// Map a store error onto the filesystem error space. Shared by every
 /// connector so 404s surface as `NotFound` and 416s as `InvalidRange`
 /// uniformly, whichever connector a caller reads through. A
-/// `TransientFailure` that reaches this map was not (or no longer)
-/// retryable on its path — by definition its retry budget is exhausted,
-/// so it surfaces as [`FsError::TransientExhausted`] and the scheduler's
-/// task re-attempt machinery takes over.
+/// `TransientFailure` or `Throttled` that reaches this map was not (or
+/// no longer) retryable on its path — by definition its retry budget is
+/// exhausted, so it surfaces as [`FsError::TransientExhausted`] and the
+/// scheduler's task re-attempt machinery takes over.
 pub(crate) fn map_store_error(e: StoreError, path: &Path) -> FsError {
     match e {
         StoreError::NoSuchKey(_) | StoreError::NoSuchContainer(_) => {
             FsError::NotFound(path.to_string())
         }
         StoreError::InvalidRange(m) => FsError::InvalidRange(m),
-        StoreError::TransientFailure(m) => FsError::TransientExhausted(m),
+        StoreError::TransientFailure(m) | StoreError::Throttled(m) => {
+            FsError::TransientExhausted(m)
+        }
         other => FsError::Io(other.to_string()),
     }
+}
+
+/// Handle one transient failure (503 or 429) inside a connector retry
+/// loop: record the class-tagged trace line, surface
+/// [`FsError::TransientExhausted`] when this was the final attempt, and
+/// otherwise charge the class-appropriate virtual-clock pause
+/// (exponential backoff for 503s, flat Retry-After for 429s).
+/// `Ok(())` means: go re-attempt. Shared by every uniform retry site so
+/// a new transient class is one edit, not six.
+pub(crate) fn note_transient(
+    store: &ObjectStore,
+    e: StoreError,
+    attempt: u32,
+    attempts: u32,
+    actor: &'static str,
+    label: impl FnOnce() -> String,
+    ctx: &mut OpCtx,
+) -> Result<(), FsError> {
+    ctx.record(actor, || format!("{} ({})", label(), e.transient_tag()));
+    if attempt == attempts {
+        return Err(FsError::TransientExhausted(e.into_msg()));
+    }
+    ctx.add(store.config.retry.retry_delay(attempt, &e));
+    Ok(())
 }
 
 /// Drive one whole-object PUT under the store's [`RetryPolicy`]
@@ -108,12 +134,8 @@ pub(crate) fn put_with_retry(
                 ctx.record(actor, || label.to_string());
                 return Ok(());
             }
-            Err(StoreError::TransientFailure(m)) => {
-                ctx.record(actor, || format!("{label} (503 transient)"));
-                if attempt == attempts {
-                    return Err(FsError::TransientExhausted(m));
-                }
-                ctx.add(store.config.retry.backoff(attempt));
+            Err(e) if e.is_transient() => {
+                note_transient(store, e, attempt, attempts, actor, || label.to_string(), ctx)?;
             }
             Err(e) => {
                 ctx.record(actor, || label.to_string());
@@ -232,14 +254,16 @@ impl FsInputStream for StoreInputStream<'_> {
                     self.note_head(&g.head);
                     return Ok(unwrap_bytes(g.data));
                 }
-                Err(StoreError::TransientFailure(m)) => {
-                    ctx.record(self.actor, || {
-                        format!("GET {cont}/{key} bytes={offset}+{len} (503 transient)")
-                    });
-                    if attempt == attempts {
-                        return Err(FsError::TransientExhausted(m));
-                    }
-                    ctx.add(self.store.config.retry.backoff(attempt));
+                Err(e) if e.is_transient() => {
+                    note_transient(
+                        self.store,
+                        e,
+                        attempt,
+                        attempts,
+                        self.actor,
+                        || format!("GET {cont}/{key} bytes={offset}+{len}"),
+                        ctx,
+                    )?;
                 }
                 Err(e) => {
                     ctx.record(self.actor, || {
@@ -264,12 +288,16 @@ impl FsInputStream for StoreInputStream<'_> {
                     self.note_head(&g.head);
                     return Ok(g.data);
                 }
-                Err(StoreError::TransientFailure(m)) => {
-                    ctx.record(self.actor, || format!("GET {cont}/{key} (503 transient)"));
-                    if attempt == attempts {
-                        return Err(FsError::TransientExhausted(m));
-                    }
-                    ctx.add(self.store.config.retry.backoff(attempt));
+                Err(e) if e.is_transient() => {
+                    note_transient(
+                        self.store,
+                        e,
+                        attempt,
+                        attempts,
+                        self.actor,
+                        || format!("GET {cont}/{key}"),
+                        ctx,
+                    )?;
                 }
                 Err(e) => {
                     ctx.record(self.actor, || format!("GET {cont}/{key}"));

@@ -22,7 +22,7 @@ use super::{
 };
 use crate::fs::status::FileStatus;
 use crate::fs::{FileSystem, FsError, FsInputStream, FsOutputStream, OpCtx, Path};
-use crate::objectstore::{Metadata, ObjectStore, StoreError};
+use crate::objectstore::{Metadata, ObjectStore};
 use crate::simclock::SimInstant;
 use std::sync::Arc;
 
@@ -208,14 +208,16 @@ impl S3aOutputStream<'_> {
                     ctx.record("s3a", || format!("PUT {cont}/{key}?partNumber={part}"));
                     return Ok(());
                 }
-                Err(StoreError::TransientFailure(m)) => {
-                    ctx.record("s3a", || {
-                        format!("PUT {cont}/{key}?partNumber={part} (503 transient)")
-                    });
-                    if attempt == attempts {
-                        return Err(FsError::TransientExhausted(m));
-                    }
-                    ctx.add(self.fs.store.config.retry.backoff(attempt));
+                Err(e) if e.is_transient() => {
+                    super::note_transient(
+                        &self.fs.store,
+                        e,
+                        attempt,
+                        attempts,
+                        "s3a",
+                        || format!("PUT {cont}/{key}?partNumber={part}"),
+                        ctx,
+                    )?;
                 }
                 Err(e) => {
                     ctx.record("s3a", || format!("PUT {cont}/{key}?partNumber={part}"));
@@ -240,12 +242,16 @@ impl S3aOutputStream<'_> {
                     ctx.record("s3a", || format!("POST {cont}/{key} (complete)"));
                     return Ok(());
                 }
-                Err(StoreError::TransientFailure(m)) => {
-                    ctx.record("s3a", || format!("POST {cont}/{key} (complete) (503 transient)"));
-                    if attempt == attempts {
-                        return Err(FsError::TransientExhausted(m));
-                    }
-                    ctx.add(self.fs.store.config.retry.backoff(attempt));
+                Err(e) if e.is_transient() => {
+                    super::note_transient(
+                        &self.fs.store,
+                        e,
+                        attempt,
+                        attempts,
+                        "s3a",
+                        || format!("POST {cont}/{key} (complete)"),
+                        ctx,
+                    )?;
                 }
                 Err(e) => {
                     ctx.record("s3a", || format!("POST {cont}/{key} (complete)"));

@@ -218,15 +218,18 @@ impl Stocator {
                 for attempt in 1..=attempts {
                     let (r, d) = self.store.get_object(cont, &success_key);
                     ctx.add(d);
-                    if matches!(r, Err(StoreError::TransientFailure(_))) {
-                        ctx.record("stocator", || {
-                            format!("GET {cont}/{success_key} (manifest) (503 transient)")
-                        });
-                        if attempt < attempts {
-                            ctx.add(self.store.config.retry.backoff(attempt));
-                            continue;
+                    if let Err(e) = &r {
+                        if e.is_transient() {
+                            let tag = e.transient_tag();
+                            ctx.record("stocator", || {
+                                format!("GET {cont}/{success_key} (manifest) ({tag})")
+                            });
+                            if attempt < attempts {
+                                ctx.add(self.store.config.retry.retry_delay(attempt, e));
+                                continue;
+                            }
+                            break;
                         }
-                        break;
                     }
                     ctx.record("stocator", || format!("GET {cont}/{success_key} (manifest)"));
                     fetched = Some(r);

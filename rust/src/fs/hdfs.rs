@@ -91,6 +91,12 @@ impl Hdfs {
 
     /// Build with the full transient-fault plane: `faults` schedules
     /// pipeline-write failures, `retry` bounds the re-drives.
+    ///
+    /// HDFS has no REST surface, so the spec's *trigger* grammar applies
+    /// but the class semantics collapse: every fired rule — including
+    /// `!429` — is a pipeline failure (full data-time re-pay, exponential
+    /// backoff), and probabilistic rules draw from a fixed seed (HDFS is
+    /// the latency baseline; it takes no `--seed`).
     pub fn with_faults(
         latency: HdfsLatency,
         readahead: u64,

@@ -1,0 +1,526 @@
+//! `HttpBackend` — a [`Backend`] implementation that speaks the gateway
+//! protocol over real sockets.
+//!
+//! The mirror image of [`super::server`]: every trait method becomes one
+//! HTTP request (ranged reads of length zero become a HEAD — HTTP cannot
+//! spell an empty byte range — with the clamp check applied locally,
+//! which is observationally identical). Connections are pooled and
+//! reused (HTTP/1.1 keep-alive); a request that fails on a pooled —
+//! possibly stale — connection is retried once on a fresh one.
+//!
+//! Name-bearing errors are reconstructed from the response's
+//! `x-error-kind` plus the *caller's* names, so a `NoSuchKey` from a
+//! remote gateway is byte-identical to one from an in-process backend —
+//! including when a [`namespace`](HttpBackend::connect) prefixes
+//! container names on the wire (the HTTP analogue of the `fs` backend's
+//! unique per-run subdirectory).
+
+use super::encoding::{encode_query, meta_header, pct_decode, pct_encode};
+use super::http::{read_response, write_request, Headers, Response, STALE_CONNECTION};
+use crate::objectstore::backend::{
+    clamp_range, AssembledUpload, Backend, BackendError, ListPage, ObjectStat,
+};
+use crate::objectstore::container::ObjectSummary;
+use crate::objectstore::object::{Metadata, Object};
+use crate::simclock::SimInstant;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+/// A `Backend` over the gateway's REST protocol. `Send + Sync`; safe to
+/// share across executor threads (each request takes a pooled
+/// connection for its duration).
+pub struct HttpBackend {
+    addr: String,
+    /// Optional container namespace: `c` travels as `{ns}.{c}`.
+    ns: Option<String>,
+    /// Idle keep-alive connections.
+    pool: Mutex<Vec<TcpStream>>,
+}
+
+fn io_err(ctx: &str, e: std::io::Error) -> BackendError {
+    BackendError::Io(format!("http backend {ctx}: {e}"))
+}
+
+/// A failed exchange, tagged with whether the failure proves the server
+/// never executed the request (making a re-send safe):
+///
+/// * a **write-side** failure — the request never fully reached the
+///   server, so it cannot have been parsed, let alone executed;
+/// * EOF **before any response byte** ([`STALE_CONNECTION`]) — the
+///   gateway answers every request it parses, so a connection that
+///   closed without a single byte never processed one.
+///
+/// A failure while reading a partially received response gives no such
+/// guarantee and is NOT retried: several requests are not idempotent.
+struct SendFailure {
+    retry_safe: bool,
+    error: std::io::Error,
+}
+
+impl HttpBackend {
+    /// Connect to a gateway at `addr` (`host:port`, with an optional
+    /// `http://` prefix). `ns`, when given, prefixes every container
+    /// name on the wire so independent clients of one served store get
+    /// disjoint worlds. Fails fast if the gateway is unreachable.
+    pub fn connect(addr: &str, ns: Option<String>) -> Result<Self, BackendError> {
+        let addr = addr.trim_start_matches("http://").trim_end_matches('/');
+        if !addr.contains(':') {
+            return Err(BackendError::Io(format!(
+                "http backend address '{addr}' must be HOST:PORT"
+            )));
+        }
+        let probe = TcpStream::connect(addr).map_err(|e| io_err("connect", e))?;
+        Ok(Self {
+            addr: addr.to_string(),
+            ns,
+            pool: Mutex::new(vec![probe]),
+        })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn wire_container(&self, container: &str) -> String {
+        match &self.ns {
+            Some(ns) => format!("{ns}.{container}"),
+            None => container.to_string(),
+        }
+    }
+
+    fn strip_ns(&self, wire: &str) -> String {
+        match &self.ns {
+            Some(ns) => wire
+                .strip_prefix(&format!("{ns}."))
+                .unwrap_or(wire)
+                .to_string(),
+            None => wire.to_string(),
+        }
+    }
+
+    fn object_target(&self, container: &str, key: &str) -> String {
+        format!(
+            "/v1/{}/{}",
+            pct_encode(&self.wire_container(container)),
+            pct_encode(key)
+        )
+    }
+
+    fn container_target(&self, container: &str) -> String {
+        format!("/v1/{}", pct_encode(&self.wire_container(container)))
+    }
+
+    /// Issue one request, reusing a pooled connection when available. A
+    /// pooled connection may have gone stale; the request is re-sent on
+    /// a fresh connection ONLY when the failure proves the server never
+    /// executed it (see [`SendFailure`]) — a blind re-send could leak an
+    /// orphaned upload from `initiate` or turn a successful
+    /// `create_container` into a spurious 409.
+    fn request(
+        &self,
+        method: &str,
+        target: &str,
+        headers: &Headers,
+        body: &[u8],
+    ) -> Result<Response, BackendError> {
+        let pooled = self.pool.lock().unwrap().pop();
+        if let Some(stream) = pooled {
+            match self.send_on(stream, method, target, headers, body) {
+                Ok(resp) => return Ok(resp),
+                Err(f) if f.retry_safe => { /* stale; reconnect */ }
+                Err(f) => return Err(io_err("request", f.error)),
+            }
+        }
+        let fresh = TcpStream::connect(&self.addr).map_err(|e| io_err("connect", e))?;
+        self.send_on(fresh, method, target, headers, body)
+            .map_err(|f| io_err("request", f.error))
+    }
+
+    fn send_on(
+        &self,
+        stream: TcpStream,
+        method: &str,
+        target: &str,
+        headers: &Headers,
+        body: &[u8],
+    ) -> Result<Response, SendFailure> {
+        let mut write_half = stream.try_clone().map_err(|error| SendFailure {
+            retry_safe: true,
+            error,
+        })?;
+        // Write-side failures are retry-safe: the request never fully
+        // left, so the server cannot have parsed (or executed) it.
+        write_request(&mut write_half, method, target, headers, body).map_err(|error| {
+            SendFailure {
+                retry_safe: true,
+                error,
+            }
+        })?;
+        let mut reader = BufReader::new(stream);
+        let resp = read_response(&mut reader).map_err(|error| SendFailure {
+            // Read-side: only EOF before any response byte proves the
+            // request was never processed.
+            retry_safe: error.kind() == std::io::ErrorKind::UnexpectedEof
+                && error.to_string() == STALE_CONNECTION,
+            error,
+        })?;
+        // The whole body was consumed; the connection is reusable.
+        self.pool.lock().unwrap().push(reader.into_inner());
+        Ok(resp)
+    }
+
+    /// Rebuild the exact [`BackendError`] from a gateway error response,
+    /// using the caller's (un-namespaced) names.
+    fn decode_error(
+        &self,
+        resp: &Response,
+        container: &str,
+        key: &str,
+        upload_id: u64,
+    ) -> BackendError {
+        let msg = || {
+            resp.headers
+                .get("x-error-msg")
+                .and_then(pct_decode)
+                .unwrap_or_else(|| format!("HTTP {}", resp.status))
+        };
+        match resp.headers.get("x-error-kind") {
+            Some("no-such-container") => BackendError::NoSuchContainer(container.to_string()),
+            Some("no-such-key") => BackendError::no_such_key(container, key),
+            Some("container-exists") => {
+                BackendError::ContainerAlreadyExists(container.to_string())
+            }
+            Some("no-such-upload") => BackendError::NoSuchUpload(upload_id),
+            Some("invalid-request") => BackendError::InvalidRequest(msg()),
+            Some("invalid-range") => {
+                // Rebuilt below by the ranged-read path (it knows the
+                // offset); elsewhere surface the raw message.
+                BackendError::InvalidRange(msg())
+            }
+            Some("io") => BackendError::Io(msg()),
+            _ => BackendError::Io(format!(
+                "unexpected gateway response: HTTP {} for {container}/{key}",
+                resp.status
+            )),
+        }
+    }
+
+    fn meta_headers(metadata: &Metadata) -> Headers {
+        let mut headers = Headers::new();
+        for (k, v) in metadata {
+            let (name, value) = meta_header(k, v);
+            headers.push(name, value);
+        }
+        headers
+    }
+
+    /// Decode the stat carried on an object response's headers.
+    fn decode_stat(resp: &Response) -> Result<ObjectStat, BackendError> {
+        let etag = resp
+            .headers
+            .get("etag")
+            .map(|v| v.trim_matches('"'))
+            .and_then(|v| u64::from_str_radix(v, 16).ok())
+            .ok_or_else(|| BackendError::Io("gateway response missing ETag".into()))?;
+        let size: u64 = resp
+            .headers
+            .get("x-object-size")
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| BackendError::Io("gateway response missing x-object-size".into()))?;
+        let created_at = SimInstant(
+            resp.headers
+                .get("x-sim-created-at")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0),
+        );
+        Ok(ObjectStat {
+            size,
+            etag,
+            metadata: Self::decode_meta(resp)?,
+            created_at,
+        })
+    }
+
+    fn decode_meta(resp: &Response) -> Result<Metadata, BackendError> {
+        let mut md = Metadata::new();
+        for (k, v) in resp.headers.with_prefix("x-object-meta-") {
+            let (Some(k), Some(v)) = (pct_decode(k), pct_decode(v)) else {
+                return Err(BackendError::Io("undecodable x-object-meta header".into()));
+            };
+            md.insert(k, v);
+        }
+        Ok(md)
+    }
+}
+
+impl Backend for HttpBackend {
+    fn name(&self) -> &'static str {
+        "http"
+    }
+
+    fn create_container(&self, name: &str) -> Result<(), BackendError> {
+        let resp = self.request("PUT", &self.container_target(name), &Headers::new(), b"")?;
+        match resp.status {
+            201 => Ok(()),
+            _ => Err(self.decode_error(&resp, name, "", 0)),
+        }
+    }
+
+    fn container_exists(&self, name: &str) -> bool {
+        // The trait returns a bare bool, so a transport failure cannot
+        // surface as an error here; warn loudly instead of letting a
+        // dead gateway masquerade as a missing container (the very next
+        // fallible operation will surface the real I/O error).
+        match self.request("HEAD", &self.container_target(name), &Headers::new(), b"") {
+            Ok(resp) => resp.status == 200,
+            Err(e) => {
+                eprintln!("warning: http backend container_exists({name}): {e}");
+                false
+            }
+        }
+    }
+
+    fn put(&self, container: &str, key: &str, obj: Object) -> Result<bool, BackendError> {
+        let mut headers = Self::meta_headers(&obj.metadata);
+        headers.push("x-sim-created-at", obj.created_at.0.to_string());
+        let resp = self.request(
+            "PUT",
+            &self.object_target(container, key),
+            &headers,
+            &obj.data,
+        )?;
+        match resp.status {
+            201 => Ok(resp.headers.get("x-replaced") == Some("true")),
+            _ => Err(self.decode_error(&resp, container, key, 0)),
+        }
+    }
+
+    fn get(&self, container: &str, key: &str) -> Result<Object, BackendError> {
+        let resp = self.request("GET", &self.object_target(container, key), &Headers::new(), b"")?;
+        match resp.status {
+            200 => {
+                let stat = Self::decode_stat(&resp)?;
+                Ok(Object {
+                    data: Arc::new(resp.body),
+                    metadata: stat.metadata,
+                    created_at: stat.created_at,
+                    etag: stat.etag,
+                })
+            }
+            _ => Err(self.decode_error(&resp, container, key, 0)),
+        }
+    }
+
+    fn get_range(
+        &self,
+        container: &str,
+        key: &str,
+        offset: u64,
+        len: u64,
+    ) -> Result<(Vec<u8>, ObjectStat), BackendError> {
+        if len == 0 {
+            // HTTP cannot spell an empty byte range; a HEAD plus the
+            // shared clamp check is observationally identical (stat +
+            // empty slice, or the 416 for offsets past EOF).
+            let stat = self.head(container, key)?;
+            clamp_range(container, key, offset, 0, stat.size)?;
+            return Ok((Vec::new(), stat));
+        }
+        let mut headers = Headers::new();
+        headers.push("Range", format!("bytes={}-{}", offset, offset + len - 1));
+        let resp = self.request("GET", &self.object_target(container, key), &headers, b"")?;
+        match resp.status {
+            206 => {
+                let stat = Self::decode_stat(&resp)?;
+                Ok((resp.body, stat))
+            }
+            416 => {
+                // Rebuild the clamp_range error exactly, from the
+                // standard `Content-Range: bytes */SIZE` total.
+                let size: u64 = resp
+                    .headers
+                    .get("content-range")
+                    .and_then(|v| v.strip_prefix("bytes */"))
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(0);
+                Err(clamp_range(container, key, offset, len, size)
+                    .err()
+                    .unwrap_or_else(|| {
+                        BackendError::Io("gateway 416 for a satisfiable range".into())
+                    }))
+            }
+            _ => Err(self.decode_error(&resp, container, key, 0)),
+        }
+    }
+
+    fn head(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError> {
+        let resp = self.request("HEAD", &self.object_target(container, key), &Headers::new(), b"")?;
+        match resp.status {
+            200 => Self::decode_stat(&resp),
+            _ => Err(self.decode_error(&resp, container, key, 0)),
+        }
+    }
+
+    fn delete(&self, container: &str, key: &str) -> Result<ObjectStat, BackendError> {
+        let resp = self.request(
+            "DELETE",
+            &self.object_target(container, key),
+            &Headers::new(),
+            b"",
+        )?;
+        match resp.status {
+            204 => Self::decode_stat(&resp),
+            _ => Err(self.decode_error(&resp, container, key, 0)),
+        }
+    }
+
+    fn list_page(
+        &self,
+        container: &str,
+        prefix: &str,
+        start_after: Option<&str>,
+        max_keys: usize,
+    ) -> Result<ListPage, BackendError> {
+        let mut params = vec![
+            ("prefix", prefix.to_string()),
+            ("limit", max_keys.to_string()),
+        ];
+        if let Some(marker) = start_after {
+            params.push(("marker", marker.to_string()));
+        }
+        let target = format!("{}?{}", self.container_target(container), encode_query(&params));
+        let resp = self.request("GET", &target, &Headers::new(), b"")?;
+        if resp.status != 200 {
+            return Err(self.decode_error(&resp, container, "", 0));
+        }
+        let text = String::from_utf8(resp.body)
+            .map_err(|_| BackendError::Io("non-UTF-8 listing body".into()))?;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let mut cols = line.split(' ');
+            let (Some(name_enc), Some(size_s), Some(etag_s), None) =
+                (cols.next(), cols.next(), cols.next(), cols.next())
+            else {
+                return Err(BackendError::Io(format!("malformed listing line '{line}'")));
+            };
+            let (Some(name), Ok(size), Ok(etag)) = (
+                pct_decode(name_enc),
+                size_s.parse::<u64>(),
+                u64::from_str_radix(etag_s, 16),
+            ) else {
+                return Err(BackendError::Io(format!("malformed listing line '{line}'")));
+            };
+            entries.push(ObjectSummary { name, size, etag });
+        }
+        let next = match resp.headers.get("x-next-marker") {
+            None => None,
+            Some(enc) => Some(
+                pct_decode(enc)
+                    .ok_or_else(|| BackendError::Io("undecodable x-next-marker".into()))?,
+            ),
+        };
+        Ok(ListPage { entries, next })
+    }
+
+    fn initiate_multipart(
+        &self,
+        container: &str,
+        key: &str,
+        metadata: Metadata,
+    ) -> Result<u64, BackendError> {
+        let headers = Self::meta_headers(&metadata);
+        let target = format!("{}?uploads=", self.object_target(container, key));
+        let resp = self.request("POST", &target, &headers, b"")?;
+        match resp.status {
+            200 => resp
+                .headers
+                .get("x-upload-id")
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| BackendError::Io("gateway response missing x-upload-id".into())),
+            _ => Err(self.decode_error(&resp, container, key, 0)),
+        }
+    }
+
+    fn upload_part(
+        &self,
+        upload_id: u64,
+        part_number: u32,
+        data: Vec<u8>,
+    ) -> Result<(), BackendError> {
+        let target = format!("/v1-upload/{upload_id}/{part_number}");
+        let resp = self.request("PUT", &target, &Headers::new(), &data)?;
+        match resp.status {
+            201 => Ok(()),
+            _ => Err(self.decode_error(&resp, "", "", upload_id)),
+        }
+    }
+
+    fn complete_multipart(
+        &self,
+        upload_id: u64,
+        min_part_size: u64,
+    ) -> Result<AssembledUpload, BackendError> {
+        let target = format!("/v1-upload/{upload_id}?min-part-size={min_part_size}");
+        let resp = self.request("POST", &target, &Headers::new(), b"")?;
+        match resp.status {
+            200 => {
+                let container_wire = resp
+                    .headers
+                    .get("x-container")
+                    .and_then(pct_decode)
+                    .ok_or_else(|| BackendError::Io("gateway response missing x-container".into()))?;
+                let key = resp
+                    .headers
+                    .get("x-key")
+                    .and_then(pct_decode)
+                    .ok_or_else(|| BackendError::Io("gateway response missing x-key".into()))?;
+                Ok(AssembledUpload {
+                    container: self.strip_ns(&container_wire),
+                    key,
+                    data: resp.body,
+                    metadata: Self::decode_meta(&resp)?,
+                })
+            }
+            _ => Err(self.decode_error(&resp, "", "", upload_id)),
+        }
+    }
+
+    fn abort_multipart(&self, upload_id: u64) -> Result<(), BackendError> {
+        let target = format!("/v1-upload/{upload_id}");
+        let resp = self.request("DELETE", &target, &Headers::new(), b"")?;
+        match resp.status {
+            204 => Ok(()),
+            _ => Err(self.decode_error(&resp, "", "", upload_id)),
+        }
+    }
+
+    fn multipart_in_flight(&self) -> usize {
+        self.request("GET", "/v1-upload", &Headers::new(), b"")
+            .ok()
+            .filter(|resp| resp.status == 200)
+            .and_then(|resp| String::from_utf8(resp.body).ok())
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(0)
+    }
+
+    fn live_count(&self, container: &str) -> usize {
+        self.live_stat(container, "count") as usize
+    }
+
+    fn live_bytes(&self, container: &str) -> u64 {
+        self.live_stat(container, "bytes")
+    }
+}
+
+impl HttpBackend {
+    fn live_stat(&self, container: &str, which: &str) -> u64 {
+        let target = format!("{}?live={which}", self.container_target(container));
+        self.request("GET", &target, &Headers::new(), b"")
+            .ok()
+            .filter(|resp| resp.status == 200)
+            .and_then(|resp| String::from_utf8(resp.body).ok())
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(0)
+    }
+}

@@ -1,0 +1,145 @@
+//! Percent-encoding and query-string helpers shared by the gateway
+//! server and the `HttpBackend` client.
+//!
+//! Object-store keys are flat names that may contain anything — spaces,
+//! `%`, `/`, unicode — while URLs and header values may not. The rule
+//! here is RFC 3986's strictest useful subset: everything outside the
+//! unreserved set (`A–Z a–z 0–9 - . _ ~`) is `%XX`-encoded, *including*
+//! `/`, so an entire key always travels as one opaque path segment and
+//! the server never has to guess where a container ends and a key
+//! begins. The output alphabet is also header-safe, so the same encoder
+//! carries metadata keys/values in `x-object-meta-*` headers.
+
+/// Percent-encode every byte outside the RFC 3986 unreserved set
+/// (`/` included — a key is one path segment). Allocation-free per
+/// byte: hex nibbles come from a lookup, not `format!` (every request
+/// target and metadata header funnels through here).
+pub fn pct_encode(s: &str) -> String {
+    const HEX: &[u8; 16] = b"0123456789ABCDEF";
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        if b.is_ascii_alphanumeric() || matches!(b, b'-' | b'.' | b'_' | b'~') {
+            out.push(b as char);
+        } else {
+            out.push('%');
+            out.push(HEX[(b >> 4) as usize] as char);
+            out.push(HEX[(b & 0xF) as usize] as char);
+        }
+    }
+    out
+}
+
+/// Render one object-metadata pair as its `x-object-meta-*` wire header.
+/// The single definition both the gateway server and `HttpBackend` use,
+/// so the metadata round-trip cannot drift between the two ends.
+pub fn meta_header(key: &str, value: &str) -> (String, String) {
+    (format!("x-object-meta-{}", pct_encode(key)), pct_encode(value))
+}
+
+/// Strict inverse of [`pct_encode`]: `%XX` escapes decode, unreserved
+/// bytes and literal `/` pass through (a client that left slashes bare
+/// still round-trips), anything else — malformed escapes, raw control
+/// bytes, invalid UTF-8 — is `None`.
+pub fn pct_decode(s: &str) -> Option<String> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let hex = bytes.get(i + 1..i + 3)?;
+                let hex = std::str::from_utf8(hex).ok()?;
+                out.push(u8::from_str_radix(hex, 16).ok()?);
+                i += 3;
+            }
+            b if b.is_ascii_graphic() || b >= 0x80 => {
+                out.push(b);
+                i += 1;
+            }
+            _ => return None,
+        }
+    }
+    String::from_utf8(out).ok()
+}
+
+/// Render query pairs as `k=v&k2=v2`, both sides percent-encoded.
+/// Empty input renders as an empty string (no `?`).
+pub fn encode_query(pairs: &[(&str, String)]) -> String {
+    pairs
+        .iter()
+        .map(|(k, v)| format!("{}={}", pct_encode(k), pct_encode(v)))
+        .collect::<Vec<_>>()
+        .join("&")
+}
+
+/// Parse a raw query string into decoded pairs; pairs that fail to
+/// decode are dropped (a hostile querystring cannot poison routing).
+pub fn parse_query(q: &str) -> Vec<(String, String)> {
+    q.split('&')
+        .filter(|kv| !kv.is_empty())
+        .filter_map(|kv| {
+            let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+            Some((pct_decode(k)?, pct_decode(v)?))
+        })
+        .collect()
+}
+
+/// Look up a decoded query parameter.
+pub fn query_param<'a>(pairs: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    pairs
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hostile_names_roundtrip() {
+        for name in [
+            "",
+            "plain",
+            "a/b/c/part-0",
+            "sp ace%and%percent",
+            "uni-cöde-日本",
+            "query?amp&eq=1",
+            "plus+sign~tilde",
+            "_temporary/0/_temporary/attempt_x/part-1",
+        ] {
+            let enc = pct_encode(name);
+            assert!(
+                enc.bytes()
+                    .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'-' | b'.' | b'_' | b'~' | b'%')),
+                "{name} -> {enc} has unsafe bytes"
+            );
+            assert!(!enc.contains('/'), "{name} -> {enc}");
+            assert_eq!(pct_decode(&enc).as_deref(), Some(name), "{name} -> {enc}");
+        }
+    }
+
+    #[test]
+    fn decode_accepts_literal_slashes_rejects_garbage() {
+        assert_eq!(pct_decode("a/b").as_deref(), Some("a/b"));
+        assert_eq!(pct_decode("a%2Fb").as_deref(), Some("a/b"));
+        assert_eq!(pct_decode("%zz"), None);
+        assert_eq!(pct_decode("a%2"), None);
+        assert_eq!(pct_decode("a b"), None, "raw space is not valid in a URL");
+    }
+
+    #[test]
+    fn query_roundtrip() {
+        let q = encode_query(&[
+            ("prefix", "d/part ".to_string()),
+            ("marker", "d/part-0001".to_string()),
+            ("limit", "10".to_string()),
+        ]);
+        let pairs = parse_query(&q);
+        assert_eq!(query_param(&pairs, "prefix"), Some("d/part "));
+        assert_eq!(query_param(&pairs, "marker"), Some("d/part-0001"));
+        assert_eq!(query_param(&pairs, "limit"), Some("10"));
+        assert_eq!(query_param(&pairs, "absent"), None);
+        assert_eq!(parse_query(""), vec![]);
+    }
+}

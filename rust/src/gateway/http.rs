@@ -1,0 +1,342 @@
+//! Hand-rolled HTTP/1.1 message framing (no external dependencies).
+//!
+//! Only what the gateway protocol needs: request/status lines, headers,
+//! `Content-Length`-framed bodies, persistent connections (HTTP/1.1
+//! default). No chunked transfer encoding — both ends of this protocol
+//! always know their body sizes up front — and no TLS. Limits on line
+//! length, header count and body size keep a hostile peer from ballooning
+//! memory.
+
+use std::io::{self, BufRead, Read, Write};
+
+/// Longest accepted request/status/header line, in bytes.
+const MAX_LINE: usize = 64 * 1024;
+/// Most headers accepted per message.
+const MAX_HEADERS: usize = 256;
+/// Largest accepted body (1 GiB — far above any simulated object).
+const MAX_BODY: u64 = 1 << 30;
+
+/// An ordered header list. Names are matched case-insensitively (HTTP
+/// semantics) but stored verbatim, so `x-object-meta-*` suffixes keep
+/// their exact spelling.
+#[derive(Debug, Clone, Default)]
+pub struct Headers(Vec<(String, String)>);
+
+impl Headers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, value: impl Into<String>) {
+        self.0.push((name.into(), value.into()));
+    }
+
+    /// First value whose name matches case-insensitively.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.0
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// All `(name-suffix, value)` pairs whose name starts with `prefix`
+    /// (prefix matched case-insensitively, suffix returned verbatim).
+    pub fn with_prefix<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = (&'a str, &'a str)> + 'a {
+        self.0.iter().filter_map(move |(n, v)| {
+            // get() (not slicing) so a multi-byte name shorter than the
+            // prefix, or one split mid-codepoint, is a miss, not a panic.
+            match n.get(..prefix.len()) {
+                Some(head) if head.eq_ignore_ascii_case(prefix) => {
+                    Some((&n[prefix.len()..], v.as_str()))
+                }
+                _ => None,
+            }
+        })
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.0.iter().map(|(n, v)| (n.as_str(), v.as_str()))
+    }
+}
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path component of the target, still percent-encoded.
+    pub path: String,
+    /// Raw query string (no `?`), empty when absent.
+    pub query: String,
+    pub headers: Headers,
+    pub body: Vec<u8>,
+}
+
+/// A parsed (or to-be-written) HTTP response.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Headers,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Self {
+        Self {
+            status,
+            headers: Headers::new(),
+            body: Vec::new(),
+        }
+    }
+
+    pub fn with_body(mut self, body: Vec<u8>) -> Self {
+        self.body = body;
+        self
+    }
+
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Self {
+        self.headers.push(name, value.into());
+        self
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        204 => "No Content",
+        206 => "Partial Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        416 => "Range Not Satisfiable",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Read one CRLF-terminated line (LF tolerated), without the terminator.
+/// `Ok(None)` = clean EOF before any byte.
+fn read_line(r: &mut impl BufRead) -> io::Result<Option<String>> {
+    let mut buf = Vec::new();
+    let mut limited = r.take(MAX_LINE as u64 + 1);
+    let n = limited.read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        return Err(bad("line too long or truncated"));
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| bad("non-UTF-8 header line"))
+}
+
+/// Read headers up to the blank line.
+fn read_headers(r: &mut impl BufRead) -> io::Result<Headers> {
+    let mut headers = Headers::new();
+    for _ in 0..MAX_HEADERS {
+        let line = read_line(r)?.ok_or_else(|| bad("EOF inside headers"))?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| bad(format!("malformed header line '{line}'")))?;
+        headers.push(name.trim(), value.trim());
+    }
+    Err(bad("too many headers"))
+}
+
+fn read_body(r: &mut impl BufRead, headers: &Headers) -> io::Result<Vec<u8>> {
+    let len: u64 = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v.parse().map_err(|_| bad("bad Content-Length"))?,
+    };
+    if len > MAX_BODY {
+        return Err(bad("body too large"));
+    }
+    // Grow with the data actually received (Take bounds the read), so a
+    // peer declaring a huge Content-Length and sending nothing cannot
+    // make us preallocate the declared size.
+    let mut body = Vec::with_capacity(len.min(64 * 1024) as usize);
+    let got = r.take(len).read_to_end(&mut body)?;
+    if (got as u64) < len {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "truncated body",
+        ));
+    }
+    Ok(body)
+}
+
+/// Read one request. `Ok(None)` = the peer closed a keep-alive
+/// connection cleanly between requests.
+pub fn read_request(r: &mut impl BufRead) -> io::Result<Option<Request>> {
+    let Some(line) = read_line(r)? else {
+        return Ok(None);
+    };
+    let mut parts = line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => return Err(bad(format!("malformed request line '{line}'"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad(format!("unsupported version '{version}'")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    let headers = read_headers(r)?;
+    let body = read_body(r, &headers)?;
+    Ok(Some(Request {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        body,
+    }))
+}
+
+/// Write one request with an exact `Content-Length` (always present, so
+/// the peer frames uniformly).
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    target: &str,
+    headers: &Headers,
+    body: &[u8],
+) -> io::Result<()> {
+    let mut out = format!("{method} {target} HTTP/1.1\r\n");
+    for (n, v) in headers.iter() {
+        out.push_str(&format!("{n}: {v}\r\n"));
+    }
+    out.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+    w.write_all(out.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Error message marking EOF before any response byte arrived: the
+/// peer closed a keep-alive connection between requests, so the request
+/// was provably not executed and a client may safely re-send it on a
+/// fresh connection. Any later failure gives no such guarantee.
+pub const STALE_CONNECTION: &str = "stale keep-alive connection (EOF before status line)";
+
+/// Read one response. Responses always carry an exact `Content-Length`
+/// (this protocol never sends bodiless-by-method responses the client
+/// would have to special-case).
+pub fn read_response(r: &mut impl BufRead) -> io::Result<Response> {
+    let line = read_line(r)?
+        .ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, STALE_CONNECTION))?;
+    let mut parts = line.splitn(3, ' ');
+    let status: u16 = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => {
+            code.parse().map_err(|_| bad("bad status code"))?
+        }
+        _ => return Err(bad(format!("malformed status line '{line}'"))),
+    };
+    let headers = read_headers(r)?;
+    let body = read_body(r, &headers)?;
+    Ok(Response {
+        status,
+        headers,
+        body,
+    })
+}
+
+/// Write one response with an exact `Content-Length`.
+pub fn write_response(w: &mut impl Write, resp: &Response) -> io::Result<()> {
+    let mut out = format!("HTTP/1.1 {} {}\r\n", resp.status, reason(resp.status));
+    for (n, v) in resp.headers.iter() {
+        out.push_str(&format!("{n}: {v}\r\n"));
+    }
+    out.push_str(&format!("Content-Length: {}\r\n\r\n", resp.body.len()));
+    w.write_all(out.as_bytes())?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn request_roundtrip() {
+        let mut headers = Headers::new();
+        headers.push("x-sim-created-at", "7");
+        headers.push("X-Object-Meta-Origin", "stocator%201.0");
+        let mut wire = Vec::new();
+        write_request(&mut wire, "PUT", "/v1/res/d%2Fpart-0", &headers, b"payload").unwrap();
+        let mut r = BufReader::new(&wire[..]);
+        let req = read_request(&mut r).unwrap().expect("one request");
+        assert_eq!(req.method, "PUT");
+        assert_eq!(req.path, "/v1/res/d%2Fpart-0");
+        assert_eq!(req.query, "");
+        assert_eq!(req.body, b"payload");
+        assert_eq!(req.headers.get("X-SIM-CREATED-AT"), Some("7"));
+        let metas: Vec<_> = req.headers.with_prefix("x-object-meta-").collect();
+        assert_eq!(metas, vec![("Origin", "stocator%201.0")]);
+        // The stream is exhausted: next read is a clean keep-alive EOF.
+        assert!(read_request(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn request_with_query_splits_target() {
+        let mut wire = Vec::new();
+        write_request(
+            &mut wire,
+            "GET",
+            "/v1/res?prefix=d%2F&limit=10",
+            &Headers::new(),
+            b"",
+        )
+        .unwrap();
+        let req = read_request(&mut BufReader::new(&wire[..])).unwrap().unwrap();
+        assert_eq!(req.path, "/v1/res");
+        assert_eq!(req.query, "prefix=d%2F&limit=10");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn response_roundtrip_binary_body() {
+        let body: Vec<u8> = (0u8..=255).collect();
+        let resp = Response::new(206)
+            .with_header("ETag", "\"00000000deadbeef\"")
+            .with_header("Content-Range", "bytes 0-255/1000")
+            .with_body(body.clone());
+        let mut wire = Vec::new();
+        write_response(&mut wire, &resp).unwrap();
+        let got = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(got.status, 206);
+        assert_eq!(got.headers.get("etag"), Some("\"00000000deadbeef\""));
+        assert_eq!(got.body, body);
+    }
+
+    #[test]
+    fn malformed_inputs_error_cleanly() {
+        let mut r = BufReader::new(&b"NOT-HTTP\r\n\r\n"[..]);
+        assert!(read_request(&mut r).is_err());
+        let mut r = BufReader::new(&b"GET /x HTTP/1.1\r\nbad header\r\n\r\n"[..]);
+        assert!(read_request(&mut r).is_err());
+        let mut r = BufReader::new(&b"GET /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n"[..]);
+        assert!(read_request(&mut r).is_err());
+        // Truncated body.
+        let mut r = BufReader::new(&b"GET /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nab"[..]);
+        assert!(read_request(&mut r).is_err());
+    }
+}

@@ -1,0 +1,598 @@
+//! The gateway REST server: any [`Backend`] behind Swift/S3-style HTTP
+//! routes on a std `TcpListener`.
+//!
+//! # Routes
+//!
+//! | Route | Backend call |
+//! |---|---|
+//! | `PUT /v1/{container}` | `create_container` (201 / 409) |
+//! | `HEAD /v1/{container}` | `container_exists` (200 / 404) |
+//! | `GET /v1/{container}?prefix=&marker=&limit=` | `list_page` (body: `name size etag` lines, `x-next-marker`) |
+//! | `GET /v1/{container}?live=count\|bytes` | `live_count` / `live_bytes` |
+//! | `PUT /v1/{container}/{key}` | `put` (201, `ETag`, `x-replaced`) |
+//! | `GET /v1/{container}/{key}` [+`Range`] | `get` / `get_range` (200 / 206 / 416) |
+//! | `HEAD /v1/{container}/{key}` | `head` (200, stat headers) |
+//! | `DELETE /v1/{container}/{key}` | `delete` (204, final stat headers) |
+//! | `POST /v1/{container}/{key}?uploads` | `initiate_multipart` (200, `x-upload-id`) |
+//! | `PUT /v1-upload/{id}/{part}` | `upload_part` (201) |
+//! | `POST /v1-upload/{id}?min-part-size=N` | `complete_multipart` (200, assembled body + target headers) |
+//! | `DELETE /v1-upload/{id}` | `abort_multipart` (204) |
+//! | `GET /v1-upload` | `multipart_in_flight` (200, body: count) |
+//!
+//! Containers and keys travel percent-encoded ([`super::encoding`]);
+//! object metadata rides as `x-object-meta-<pct-key>: <pct-value>`
+//! headers, the virtual-clock creation instant as `x-sim-created-at`,
+//! and every object response carries `ETag` (quoted 16-hex-digit FNV
+//! tag) plus `x-object-size` (the FULL object size — the
+//! `Content-Range` total — even on partial responses). Backend errors
+//! map onto HTTP statuses with a machine-readable `x-error-kind` header
+//! so [`super::client::HttpBackend`] can reconstruct the exact
+//! [`BackendError`] without parsing prose.
+//!
+//! One thread per connection (keep-alive until the peer closes);
+//! concurrency safety is the inner backend's contract (`Backend` is
+//! `Send + Sync`, and its atomic-PUT guarantee is what makes concurrent
+//! gateway clients safe).
+
+use super::encoding::{meta_header, parse_query, pct_decode, pct_encode, query_param};
+use super::http::{read_request, write_response, Request, Response};
+use crate::objectstore::backend::{Backend, BackendError};
+use crate::objectstore::object::{Metadata, Object};
+use crate::simclock::SimInstant;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A bound-but-not-yet-serving gateway. Bind first (so callers learn
+/// the ephemeral port), then [`GatewayServer::spawn`] or
+/// [`GatewayServer::run`].
+pub struct GatewayServer {
+    listener: TcpListener,
+    backend: Arc<dyn Backend>,
+}
+
+/// Handle to a spawned gateway: keeps the accept loop alive; stops it
+/// on [`GatewayHandle::shutdown`] or drop.
+pub struct GatewayHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl GatewayServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) over
+    /// `backend`.
+    pub fn bind(addr: &str, backend: Arc<dyn Backend>) -> std::io::Result<Self> {
+        Ok(Self {
+            listener: TcpListener::bind(addr)?,
+            backend,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Serve on a background thread; the returned handle stops the
+    /// server when shut down or dropped.
+    pub fn spawn(self) -> GatewayHandle {
+        let addr = self.local_addr();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::spawn(move || self.accept_loop(&stop2));
+        GatewayHandle {
+            addr,
+            stop,
+            join: Some(join),
+        }
+    }
+
+    /// Serve on the calling thread, forever (the `serve` subcommand).
+    pub fn run(self) {
+        self.accept_loop(&AtomicBool::new(false));
+    }
+
+    fn accept_loop(self, stop: &AtomicBool) {
+        for conn in self.listener.incoming() {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let Ok(stream) = conn else { continue };
+            let backend = self.backend.clone();
+            // Detached per-connection thread: exits when the peer
+            // closes (read returns EOF) or sends garbage.
+            std::thread::spawn(move || serve_connection(stream, &*backend));
+        }
+    }
+}
+
+impl GatewayHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop. Established connections
+    /// die with their client sockets.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        let Some(join) = self.join.take() else { return };
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the accept() call.
+        let _ = TcpStream::connect(self.addr);
+        let _ = join.join();
+    }
+}
+
+impl Drop for GatewayHandle {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Keep-alive request loop for one connection.
+fn serve_connection(stream: TcpStream, backend: &dyn Backend) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut write_half = write_half;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut req = match read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return, // clean close between requests
+            Err(_) => {
+                // Malformed request: answer 400 and drop the connection
+                // (framing may be lost).
+                let _ = write_response(&mut write_half, &Response::new(400));
+                return;
+            }
+        };
+        let resp = route(backend, &mut req);
+        if write_response(&mut write_half, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+// ---- error mapping ---------------------------------------------------------
+
+/// Machine-readable error kinds (the `x-error-kind` header values).
+fn error_response(e: &BackendError) -> Response {
+    let (status, kind) = match e {
+        BackendError::NoSuchContainer(_) => (404, "no-such-container"),
+        BackendError::NoSuchKey(_) => (404, "no-such-key"),
+        BackendError::ContainerAlreadyExists(_) => (409, "container-exists"),
+        BackendError::NoSuchUpload(_) => (404, "no-such-upload"),
+        BackendError::InvalidRequest(_) => (400, "invalid-request"),
+        BackendError::InvalidRange(_) => (416, "invalid-range"),
+        BackendError::Io(_) => (500, "io"),
+    };
+    let resp = Response::new(status).with_header("x-error-kind", kind);
+    match e {
+        // The client rebuilds name-bearing errors from its own local
+        // names; only free-text messages need to travel.
+        BackendError::InvalidRequest(m) | BackendError::Io(m) => {
+            resp.with_header("x-error-msg", pct_encode(m))
+        }
+        _ => resp,
+    }
+}
+
+fn bad_request(msg: &str) -> Response {
+    Response::new(400)
+        .with_header("x-error-kind", "invalid-request")
+        .with_header("x-error-msg", pct_encode(msg))
+}
+
+// ---- header rendering / parsing -------------------------------------------
+
+fn push_meta_headers(resp: &mut Response, metadata: &Metadata) {
+    for (k, v) in metadata {
+        let (name, value) = meta_header(k, v);
+        resp.headers.push(name, value);
+    }
+}
+
+fn parse_meta_headers(req: &Request) -> Option<Metadata> {
+    let mut md = Metadata::new();
+    for (k, v) in req.headers.with_prefix("x-object-meta-") {
+        md.insert(pct_decode(k)?, pct_decode(v)?);
+    }
+    Some(md)
+}
+
+fn created_at(req: &Request) -> SimInstant {
+    SimInstant(
+        req.headers
+            .get("x-sim-created-at")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0),
+    )
+}
+
+fn stat_headers(resp: &mut Response, size: u64, etag: u64, created: SimInstant, md: &Metadata) {
+    resp.headers.push("ETag", format!("\"{etag:016x}\""));
+    resp.headers.push("x-object-size", size.to_string());
+    resp.headers.push("x-sim-created-at", created.0.to_string());
+    push_meta_headers(resp, md);
+}
+
+/// Parse `Range: bytes=a-b` into `(offset, len)`. The gateway only ever
+/// receives the closed form its own client sends. Checked arithmetic:
+/// `bytes=0-u64::MAX` must be a clean 400, not an overflow.
+fn parse_range(spec: &str) -> Option<(u64, u64)> {
+    let (a, b) = spec.strip_prefix("bytes=")?.split_once('-')?;
+    let start: u64 = a.parse().ok()?;
+    let end: u64 = b.parse().ok()?;
+    let len = end.checked_sub(start)?.checked_add(1)?;
+    Some((start, len))
+}
+
+// ---- routing ---------------------------------------------------------------
+
+/// Dispatch one request against the backend. Takes the request mutably
+/// so body-consuming routes (object PUT, part upload) can move the
+/// payload out instead of copying it.
+fn route(backend: &dyn Backend, req: &mut Request) -> Response {
+    let path = std::mem::take(&mut req.path);
+    let trimmed = path.trim_start_matches('/');
+    if let Some(rest) = trimmed.strip_prefix("v1-upload") {
+        return route_upload(backend, req, rest.trim_start_matches('/'));
+    }
+    if let Some(rest) = trimmed.strip_prefix("v1/") {
+        return match rest.split_once('/') {
+            None => route_container(backend, req, rest),
+            Some((container, key)) => route_object(backend, req, container, key),
+        };
+    }
+    bad_request(&format!("no such route: {} {path}", req.method))
+}
+
+fn route_container(backend: &dyn Backend, req: &mut Request, container_enc: &str) -> Response {
+    let Some(container) = pct_decode(container_enc) else {
+        return bad_request("undecodable container name");
+    };
+    let query = parse_query(&req.query);
+    match req.method.as_str() {
+        "PUT" => match backend.create_container(&container) {
+            Ok(()) => Response::new(201),
+            Err(e) => error_response(&e),
+        },
+        "HEAD" => {
+            if backend.container_exists(&container) {
+                Response::new(200)
+            } else {
+                error_response(&BackendError::NoSuchContainer(container))
+            }
+        }
+        "GET" => match query_param(&query, "live") {
+            Some("count") => {
+                Response::new(200).with_body(backend.live_count(&container).to_string().into_bytes())
+            }
+            Some("bytes") => {
+                Response::new(200).with_body(backend.live_bytes(&container).to_string().into_bytes())
+            }
+            Some(other) => bad_request(&format!("unknown live stat '{other}'")),
+            None => {
+                let prefix = query_param(&query, "prefix").unwrap_or("");
+                let marker = query_param(&query, "marker");
+                let limit: usize = match query_param(&query, "limit").map(str::parse) {
+                    None => 1000,
+                    Some(Ok(n)) => n,
+                    Some(Err(_)) => return bad_request("bad limit"),
+                };
+                match backend.list_page(&container, prefix, marker, limit) {
+                    Ok(page) => {
+                        let mut body = String::new();
+                        for e in &page.entries {
+                            body.push_str(&format!(
+                                "{} {} {:016x}\n",
+                                pct_encode(&e.name),
+                                e.size,
+                                e.etag
+                            ));
+                        }
+                        let mut resp = Response::new(200).with_body(body.into_bytes());
+                        if let Some(next) = &page.next {
+                            resp.headers.push("x-next-marker", pct_encode(next));
+                        }
+                        resp
+                    }
+                    Err(e) => error_response(&e),
+                }
+            }
+        },
+        m => bad_request(&format!("method {m} not valid for a container")),
+    }
+}
+
+fn route_object(
+    backend: &dyn Backend,
+    req: &mut Request,
+    container_enc: &str,
+    key_enc: &str,
+) -> Response {
+    let (Some(container), Some(key)) = (pct_decode(container_enc), pct_decode(key_enc)) else {
+        return bad_request("undecodable container/key");
+    };
+    match req.method.as_str() {
+        "PUT" => {
+            let Some(metadata) = parse_meta_headers(req) else {
+                return bad_request("undecodable x-object-meta header");
+            };
+            // Move the payload out — the request is done with it.
+            let obj = Object::new(std::mem::take(&mut req.body), metadata, created_at(req));
+            let etag = obj.etag;
+            match backend.put(&container, &key, obj) {
+                Ok(replaced) => Response::new(201)
+                    .with_header("ETag", format!("\"{etag:016x}\""))
+                    .with_header("x-replaced", if replaced { "true" } else { "false" }),
+                Err(e) => error_response(&e),
+            }
+        }
+        "GET" => match req.headers.get("range") {
+            None => match backend.get(&container, &key) {
+                Ok(obj) => {
+                    let mut resp = Response::new(200).with_body(obj.data.as_ref().clone());
+                    stat_headers(&mut resp, obj.size(), obj.etag, obj.created_at, &obj.metadata);
+                    resp
+                }
+                Err(e) => error_response(&e),
+            },
+            Some(spec) => {
+                let Some((offset, len)) = parse_range(spec) else {
+                    return bad_request(&format!("unparseable Range '{spec}'"));
+                };
+                match backend.get_range(&container, &key, offset, len) {
+                    Ok((data, stat)) => {
+                        let mut resp = Response::new(206);
+                        if !data.is_empty() {
+                            resp.headers.push(
+                                "Content-Range",
+                                format!(
+                                    "bytes {}-{}/{}",
+                                    offset,
+                                    offset + data.len() as u64 - 1,
+                                    stat.size
+                                ),
+                            );
+                        }
+                        stat_headers(&mut resp, stat.size, stat.etag, stat.created_at, &stat.metadata);
+                        resp.with_body(data)
+                    }
+                    Err(BackendError::InvalidRange(_)) => {
+                        // The 416: the client rebuilds the error from
+                        // the standard unsatisfied-range total.
+                        let size = backend.head(&container, &key).map(|s| s.size).unwrap_or(0);
+                        Response::new(416)
+                            .with_header("x-error-kind", "invalid-range")
+                            .with_header("Content-Range", format!("bytes */{size}"))
+                    }
+                    Err(e) => error_response(&e),
+                }
+            }
+        },
+        "HEAD" => match backend.head(&container, &key) {
+            Ok(stat) => {
+                let mut resp = Response::new(200);
+                stat_headers(&mut resp, stat.size, stat.etag, stat.created_at, &stat.metadata);
+                resp
+            }
+            Err(e) => error_response(&e),
+        },
+        "DELETE" => match backend.delete(&container, &key) {
+            Ok(stat) => {
+                let mut resp = Response::new(204);
+                stat_headers(&mut resp, stat.size, stat.etag, stat.created_at, &stat.metadata);
+                resp
+            }
+            Err(e) => error_response(&e),
+        },
+        "POST" if query_param(&parse_query(&req.query), "uploads").is_some() => {
+            let Some(metadata) = parse_meta_headers(req) else {
+                return bad_request("undecodable x-object-meta header");
+            };
+            match backend.initiate_multipart(&container, &key, metadata) {
+                Ok(id) => Response::new(200).with_header("x-upload-id", id.to_string()),
+                Err(e) => error_response(&e),
+            }
+        }
+        m => bad_request(&format!(
+            "method {m}{} not valid for an object",
+            if m == "POST" { " (without ?uploads)" } else { "" }
+        )),
+    }
+}
+
+/// `/v1-upload[/{id}[/{part}]]` — the multipart lifecycle.
+fn route_upload(backend: &dyn Backend, req: &mut Request, rest: &str) -> Response {
+    if rest.is_empty() {
+        return match req.method.as_str() {
+            "GET" => Response::new(200)
+                .with_body(backend.multipart_in_flight().to_string().into_bytes()),
+            m => bad_request(&format!("method {m} not valid for the upload root")),
+        };
+    }
+    let (id_s, part_s) = match rest.split_once('/') {
+        Some((i, p)) => (i, Some(p)),
+        None => (rest, None),
+    };
+    let Ok(id) = id_s.parse::<u64>() else {
+        return bad_request(&format!("bad upload id '{id_s}'"));
+    };
+    match (req.method.as_str(), part_s) {
+        ("PUT", Some(part_s)) => {
+            let Ok(part) = part_s.parse::<u32>() else {
+                return bad_request(&format!("bad part number '{part_s}'"));
+            };
+            match backend.upload_part(id, part, std::mem::take(&mut req.body)) {
+                Ok(()) => Response::new(201),
+                Err(e) => error_response(&e),
+            }
+        }
+        ("POST", None) => {
+            let query = parse_query(&req.query);
+            let min_part_size: u64 = match query_param(&query, "min-part-size").map(str::parse) {
+                None => 0,
+                Some(Ok(n)) => n,
+                Some(Err(_)) => return bad_request("bad min-part-size"),
+            };
+            match backend.complete_multipart(id, min_part_size) {
+                Ok(asm) => {
+                    let mut resp = Response::new(200)
+                        .with_header("x-container", pct_encode(&asm.container))
+                        .with_header("x-key", pct_encode(&asm.key));
+                    push_meta_headers(&mut resp, &asm.metadata);
+                    resp.with_body(asm.data)
+                }
+                Err(e) => error_response(&e),
+            }
+        }
+        ("DELETE", None) => match backend.abort_multipart(id) {
+            Ok(()) => Response::new(204),
+            Err(e) => error_response(&e),
+        },
+        (m, _) => bad_request(&format!("method {m} not valid for an upload")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::HttpBackend;
+    use crate::objectstore::backend::{clamp_range, ShardedMemBackend};
+
+    fn gateway() -> (GatewayHandle, HttpBackend) {
+        let inner = Arc::new(ShardedMemBackend::new(4));
+        let server = GatewayServer::bind("127.0.0.1:0", inner).expect("bind ephemeral");
+        let handle = server.spawn();
+        let client =
+            HttpBackend::connect(&handle.addr().to_string(), None).expect("connect");
+        (handle, client)
+    }
+
+    fn obj(data: &[u8], t: u64) -> Object {
+        Object::new(data.to_vec(), Metadata::new(), SimInstant(t))
+    }
+
+    #[test]
+    fn full_protocol_over_a_real_socket() {
+        let (_handle, b) = gateway();
+        // Containers.
+        assert!(!b.container_exists("res"));
+        b.create_container("res").unwrap();
+        assert!(b.container_exists("res"));
+        assert!(matches!(
+            b.create_container("res"),
+            Err(BackendError::ContainerAlreadyExists(c)) if c == "res"
+        ));
+        // Objects with metadata + created_at + ETag round-trip.
+        let mut md = Metadata::new();
+        md.insert("X-Stocator-Origin".into(), "stocator 1.0/a+b".into());
+        let stored = Object::new(b"payload".to_vec(), md, SimInstant(7));
+        let etag = stored.etag;
+        assert!(!b.put("res", "d/part-0", stored).unwrap());
+        assert!(b.put("res", "d/part-0", obj(b"payload", 7)).unwrap(), "replace");
+        let got = b.get("res", "d/part-0").unwrap();
+        assert_eq!(&**got.data, b"payload");
+        assert_eq!(got.etag, etag);
+        assert_eq!(got.created_at, SimInstant(7));
+        // Ranged GET carries the FULL stat; 416 matches clamp_range.
+        let (bytes, stat) = b.get_range("res", "d/part-0", 2, 3).unwrap();
+        assert_eq!(bytes, b"ylo");
+        assert_eq!(stat.size, 7);
+        let err = b.get_range("res", "d/part-0", 8, 1).unwrap_err();
+        assert_eq!(err, clamp_range("res", "d/part-0", 8, 1, 7).unwrap_err());
+        // Listing + pagination token.
+        for i in 0..5 {
+            b.put("res", &format!("p/{i}"), obj(b"x", 0)).unwrap();
+        }
+        let page = b.list_page("res", "p/", None, 3).unwrap();
+        assert_eq!(page.entries.len(), 3);
+        assert_eq!(page.next.as_deref(), Some("p/2"));
+        let rest = b.list_page("res", "p/", page.next.as_deref(), 10).unwrap();
+        assert_eq!(rest.entries.len(), 2);
+        assert!(rest.next.is_none());
+        // Multipart lifecycle.
+        let id = b.initiate_multipart("res", "big", Metadata::new()).unwrap();
+        b.upload_part(id, 2, b"world".to_vec()).unwrap();
+        b.upload_part(id, 1, b"hello ".to_vec()).unwrap();
+        assert_eq!(b.multipart_in_flight(), 1);
+        let asm = b.complete_multipart(id, 0).unwrap();
+        assert_eq!(asm.container, "res");
+        assert_eq!(asm.key, "big");
+        assert_eq!(asm.data, b"hello world");
+        assert_eq!(b.multipart_in_flight(), 0);
+        assert!(matches!(
+            b.abort_multipart(id),
+            Err(BackendError::NoSuchUpload(got)) if got == id
+        ));
+        // Delete returns the final stat; live stats flow through.
+        assert!(b.live_count("res") >= 6);
+        let stat = b.delete("res", "d/part-0").unwrap();
+        assert_eq!(stat.size, 7);
+        assert!(matches!(
+            b.get("res", "d/part-0"),
+            Err(BackendError::NoSuchKey(k)) if k == "res/d/part-0"
+        ));
+    }
+
+    #[test]
+    fn namespaced_clients_get_disjoint_worlds() {
+        let inner = Arc::new(ShardedMemBackend::new(2));
+        let server = GatewayServer::bind("127.0.0.1:0", inner.clone()).unwrap();
+        let handle = server.spawn();
+        let addr = handle.addr().to_string();
+        let a = HttpBackend::connect(&addr, Some("w1".into())).unwrap();
+        let c = HttpBackend::connect(&addr, Some("w2".into())).unwrap();
+        // Both create "res" — no collision, because the wire names differ.
+        a.create_container("res").unwrap();
+        c.create_container("res").unwrap();
+        a.put("res", "k", obj(b"from-a", 0)).unwrap();
+        assert!(matches!(c.get("res", "k"), Err(BackendError::NoSuchKey(k)) if k == "res/k"));
+        // The inner backend really holds both namespaced containers.
+        assert!(inner.container_exists("w1.res"));
+        assert!(inner.container_exists("w2.res"));
+        // Multipart targets un-namespace on the way back.
+        let id = a.initiate_multipart("res", "mp", Metadata::new()).unwrap();
+        a.upload_part(id, 1, b"x".to_vec()).unwrap();
+        let asm = a.complete_multipart(id, 0).unwrap();
+        assert_eq!(asm.container, "res");
+    }
+
+    #[test]
+    fn server_survives_malformed_requests() {
+        use std::io::{Read, Write};
+        let (handle, b) = gateway();
+        b.create_container("res").unwrap();
+        // A raw garbage connection gets a 400 and a close — and the
+        // server keeps serving real clients afterwards.
+        let mut garbage = TcpStream::connect(handle.addr()).unwrap();
+        garbage.write_all(b"NOT HTTP AT ALL\r\n\r\n").unwrap();
+        garbage.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut resp = String::new();
+        let _ = garbage.read_to_string(&mut resp);
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        b.put("res", "k", obj(b"still alive", 1)).unwrap();
+        assert_eq!(&**b.get("res", "k").unwrap().data, b"still alive");
+        // Unknown routes are clean 400s, not hangs.
+        let mut w = TcpStream::connect(handle.addr()).unwrap();
+        w.write_all(b"GET /nope HTTP/1.1\r\n\r\n").unwrap();
+        w.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut resp = String::new();
+        let _ = w.read_to_string(&mut resp);
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        // A Range whose closed form overflows u64 is a clean 400 too
+        // (checked arithmetic in parse_range, not a panic).
+        let mut o = TcpStream::connect(handle.addr()).unwrap();
+        o.write_all(b"GET /v1/res/k HTTP/1.1\r\nRange: bytes=0-18446744073709551615\r\n\r\n")
+            .unwrap();
+        o.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut resp = String::new();
+        let _ = o.read_to_string(&mut resp);
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+    }
+}

@@ -211,13 +211,19 @@ pub fn build_env(
     // Eventual consistency is exercised separately by the
     // failure-injection tests and the eventual_consistency example.
     // Every environment is a fresh world (the in-memory backends start
-    // empty), so a persistent fs root is specialised to a unique
-    // subdirectory per env: repeated runs and sweep cells never collide on
-    // container creation, and all data stays under the user's DIR.
+    // empty), so the shared-storage backends are specialised per env: a
+    // persistent fs root gets a unique subdirectory, and an http gateway
+    // gets a unique container namespace. Repeated runs and sweep cells
+    // never collide on container creation, while all data stays under
+    // the user's DIR / on the served store.
     let backend = match &sizing.backend {
         BackendKind::LocalFs(Some(root)) => {
             BackendKind::LocalFs(Some(crate::objectstore::backend::unique_subroot(root)))
         }
+        BackendKind::Http { addr, ns: None } => BackendKind::Http {
+            addr: addr.clone(),
+            ns: Some(crate::gateway::unique_namespace()),
+        },
         other => other.clone(),
     };
     let store = ObjectStore::new(StoreConfig {

@@ -19,7 +19,17 @@
 //!   real requests (latency, op, wire bytes) — and an age-based
 //!   multipart GC sweep (`--multipart-ttl`) reaps uploads stranded by
 //!   crashed fast-upload writers, with the stranded bytes priced in the
-//!   Table 8 addendum.
+//!   Table 8 addendum. Fault rules may be exact-Nth point faults, seeded
+//!   per-op probabilities (`put@p=0.05`), or 429 throttles (`!429` —
+//!   an op and base latency, zero wire bytes, flat Retry-After retry
+//!   pause).
+//! * [`gateway`] — the HTTP object-store gateway: a dependency-free
+//!   (std `TcpListener`, hand-rolled HTTP/1.1) REST server exposing any
+//!   backend over Swift/S3-style routes (`stocator-sim serve`), and
+//!   [`gateway::HttpBackend`], the matching `Backend` client — so the
+//!   whole simulator can run over real sockets with
+//!   `--backend http:HOST:PORT`, byte-identical in op counts and
+//!   virtual runtimes to the in-memory backends.
 //! * [`fs`] — the Hadoop `FileSystem` abstraction (paths, statuses, the
 //!   trait all connectors implement) plus an in-memory HDFS-like
 //!   baseline. I/O is **stream-shaped** (`FsOutputStream` /
@@ -61,6 +71,7 @@
 pub mod util;
 pub mod simclock;
 pub mod objectstore;
+pub mod gateway;
 pub mod fs;
 pub mod connectors;
 pub mod committer;

@@ -53,16 +53,28 @@ USAGE:
   stocator-sim table2
   stocator-sim run --workload W --scenario S [sizing] [--runs N]
   stocator-sim sweep [--workloads w1,w2] [--runs N] [sizing]
+  stocator-sim serve [--backend B] [--addr HOST:PORT] [--addr-file PATH]
+
+  serve: expose a backend as an HTTP object-store gateway (REST routes
+         PUT/GET/HEAD/DELETE /v1/{container}/{key}, Range reads, ETags,
+         paginated listings, multipart). --addr defaults to 127.0.0.1:0
+         (ephemeral port, printed at startup; also written to
+         --addr-file when given). Point any run/sweep at it with
+         --backend http:HOST:PORT — op counts and virtual runtimes are
+         byte-identical to the in-process backends.
 
   sizing: --small (test sizing) or --paper (paper-faithful object
           counts, the default); mutually exclusive.
-          plus --backend mem|sharded[:N]|fs[:DIR]
+          plus --backend mem|sharded[:N]|fs[:DIR]|http:HOST:PORT
             mem      in-memory map behind a single lock
             sharded  N-way key-sharded in-memory map (default, N=16)
             fs       persistent local-FS backend rooted at DIR (default:
                      a fresh directory under the system temp dir, printed
                      at startup); each run/cell works in a unique
                      subdirectory of DIR
+            http     remote gateway served by `stocator-sim serve`; each
+                     run/cell works in a unique container namespace on
+                     the served store
           plus --readahead BYTES|off (default: off)
             connector-level prefetch window, simulated bytes: small
             sequential read_range calls coalesce into one ranged GET per
@@ -71,18 +83,25 @@ USAGE:
             paper's one-GET-per-read behaviour exactly.
           plus --faults SPEC (default: none)
             deterministic transient REST faults: comma-separated rules
-            OP[:KEY_PREFIX]@NTH[xCOUNT] with OP one of put|get|part|
-            complete — the NTH matching operation (and the COUNT-1
-            after it) fails with a retryable 503 that still burns
-            latency, the op, and (for PUT-class ops) the payload bytes.
-            Example: --faults put:teraout/@1 fails the first part PUT.
+            OP[:KEY_PREFIX]@TRIGGER[!429] with OP one of put|get|part|
+            complete and TRIGGER either NTH[xCOUNT] (the NTH matching
+            operation, and the COUNT-1 after it, fail) or p=P (each
+            matching operation fails with probability P, deterministic
+            under --seed — sustained degraded service). Failures are
+            retryable 503s that still burn latency, the op, and (for
+            PUT-class ops) the payload bytes; with !429 they are
+            throttles instead — an op and base latency, ZERO wire
+            bytes, and the flat Retry-After pause on retry.
+            Examples: --faults put:teraout/@1 fails the first part PUT;
+            --faults put@p=0.05,get@p=0.01!429 models a degraded store.
           plus --retries N (default: 0)
             stream-layer retries per operation, exponential virtual-clock
-            backoff. Recovery semantics are the connector's: Swift/S3a
-            re-PUT from the local spool, fast upload re-sends only the
-            failed part, Stocator restarts its whole chunked PUT from
-            offset 0 (the paper's fragility footnote). Exhausted budgets
-            fail the task attempt and Spark re-attempts it.
+            backoff (flat Retry-After for 429s). Recovery semantics are
+            the connector's: Swift/S3a re-PUT from the local spool, fast
+            upload re-sends only the failed part, Stocator restarts its
+            whole chunked PUT from offset 0 (the paper's fragility
+            footnote). Exhausted budgets fail the task attempt and Spark
+            re-attempts it.
           plus --multipart-ttl SECS (default: off)
             age-based lifecycle sweep aborting multipart uploads
             stranded by crashed/exhausted fast-upload writers; the
@@ -177,6 +196,29 @@ fn main() {
             }
         },
         Some("table2") => print!("{}", render_table2()),
+        Some("serve") => {
+            use std::sync::Arc;
+            let addr = args.opt_or("addr", "127.0.0.1:0");
+            let backend: Arc<dyn stocator::objectstore::Backend> =
+                Arc::from(stocator::objectstore::backend::make_backend(&sizing.backend));
+            let server = match stocator::gateway::GatewayServer::bind(addr, backend) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error: binding {addr}: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let local = server.local_addr();
+            println!("gateway: serving backend {} on http://{local}", sizing.backend.label());
+            println!("gateway: connect with --backend http:{local}");
+            if let Some(path) = args.opt("addr-file") {
+                if let Err(e) = std::fs::write(path, local.to_string()) {
+                    eprintln!("error: writing --addr-file {path}: {e}");
+                    std::process::exit(1);
+                }
+            }
+            server.run();
+        }
         Some("run") => {
             let Some(w) = args.opt("workload").and_then(parse_workload) else {
                 eprintln!("--workload required\n{USAGE}");
@@ -310,6 +352,17 @@ mod tests {
         // Bare `fs` gets pinned to a concrete (reported) temp root.
         let s = select_sizing(&args(&["run", "--backend=fs"])).unwrap();
         assert!(matches!(s.backend, BackendKind::LocalFs(Some(_))));
+        // `http:` parses without connecting (the env connects per cell)
+        // and leaves the namespace unset for build_env to specialise.
+        let s = select_sizing(&args(&["run", "--backend", "http:127.0.0.1:4321"])).unwrap();
+        assert_eq!(
+            s.backend,
+            BackendKind::Http {
+                addr: "127.0.0.1:4321".to_string(),
+                ns: None
+            }
+        );
+        assert!(select_sizing(&args(&["run", "--backend", "http:nope"])).is_err());
         assert!(select_sizing(&args(&["run", "--backend", "bogus"])).is_err());
     }
 

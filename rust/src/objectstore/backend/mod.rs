@@ -13,6 +13,11 @@
 //!   sidecar metadata/ETag files. Survives process restart and supports
 //!   real-IO benchmarking.
 //!
+//! A third implementation lives in [`crate::gateway::HttpBackend`]: the
+//! same contract spoken over real sockets to a gateway started with
+//! `stocator-sim serve` (selected via `--backend http:HOST:PORT`); it
+//! passes this module's conformance suite through an in-process server.
+//!
 //! # Trait contract
 //!
 //! Every backend MUST provide these semantics; the conformance suite in
@@ -264,7 +269,7 @@ pub trait Backend: Send + Sync {
 
 /// Which backend an [`crate::objectstore::ObjectStore`] should run on.
 /// Carried by `StoreConfig` (and `harness::Sizing`) and selectable on the
-/// CLI via `--backend mem|sharded[:N]|fs[:DIR]`.
+/// CLI via `--backend mem|sharded[:N]|fs[:DIR]|http:HOST:PORT`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum BackendKind {
     /// Single-shard in-memory map — the legacy single-global-lock layout.
@@ -274,6 +279,12 @@ pub enum BackendKind {
     /// Persistent local-filesystem backend rooted at the given directory;
     /// `None` picks a fresh unique directory under the system temp dir.
     LocalFs(Option<PathBuf>),
+    /// Remote gateway ([`crate::gateway`]) reached over real sockets.
+    /// `ns`, when set, prefixes container names on the wire so each
+    /// client gets a disjoint world on a shared served store (the
+    /// harness sets a unique one per workload environment, mirroring
+    /// the `fs` backend's per-env subdirectory).
+    Http { addr: String, ns: Option<String> },
 }
 
 impl Default for BackendKind {
@@ -283,7 +294,8 @@ impl Default for BackendKind {
 }
 
 impl BackendKind {
-    /// Parse a CLI spelling: `mem`, `sharded`, `sharded:N`, `fs`, `fs:DIR`.
+    /// Parse a CLI spelling: `mem`, `sharded`, `sharded:N`, `fs`,
+    /// `fs:DIR`, `http:HOST:PORT` (`http://HOST:PORT` also accepted).
     pub fn parse(s: &str) -> Result<BackendKind, String> {
         let (kind, arg) = match s.split_once(':') {
             Some((k, a)) => (k, Some(a)),
@@ -300,8 +312,21 @@ impl BackendKind {
             ("fs", Some(dir)) if !dir.is_empty() => {
                 Ok(BackendKind::LocalFs(Some(PathBuf::from(dir))))
             }
+            ("http", Some(addr)) => {
+                let addr = addr.trim_start_matches("//").trim_end_matches('/');
+                if addr.split_once(':').map_or(false, |(host, port)| {
+                    !host.is_empty() && port.parse::<u16>().is_ok()
+                }) {
+                    Ok(BackendKind::Http {
+                        addr: addr.to_string(),
+                        ns: None,
+                    })
+                } else {
+                    Err(format!("http:{addr} — expected http:HOST:PORT"))
+                }
+            }
             _ => Err(format!(
-                "unknown backend '{s}' (expected mem, sharded[:N], or fs[:DIR])"
+                "unknown backend '{s}' (expected mem, sharded[:N], fs[:DIR], or http:HOST:PORT)"
             )),
         }
     }
@@ -313,6 +338,7 @@ impl BackendKind {
             BackendKind::Sharded(n) => format!("sharded:{n}"),
             BackendKind::LocalFs(None) => "fs".to_string(),
             BackendKind::LocalFs(Some(p)) => format!("fs:{}", p.display()),
+            BackendKind::Http { addr, .. } => format!("http:{addr}"),
         }
     }
 }
@@ -335,6 +361,10 @@ pub fn make_backend(kind: &BackendKind) -> Box<dyn Backend> {
                     .unwrap_or_else(|e| panic!("opening fs backend at {}: {e}", root.display())),
             )
         }
+        BackendKind::Http { addr, ns } => Box::new(
+            crate::gateway::HttpBackend::connect(addr, ns.clone())
+                .unwrap_or_else(|e| panic!("connecting http backend at {addr}: {e}")),
+        ),
     }
 }
 
@@ -387,6 +417,26 @@ mod tests {
         assert!(BackendKind::parse("sharded:no").is_err());
         assert!(BackendKind::parse("redis").is_err());
         assert!(BackendKind::parse("fs:").is_err());
+        assert_eq!(
+            BackendKind::parse("http:127.0.0.1:8080").unwrap(),
+            BackendKind::Http {
+                addr: "127.0.0.1:8080".to_string(),
+                ns: None
+            }
+        );
+        // The scheme-prefixed spelling normalises to HOST:PORT.
+        assert_eq!(
+            BackendKind::parse("http://127.0.0.1:8080").unwrap(),
+            BackendKind::parse("http:127.0.0.1:8080").unwrap()
+        );
+        assert_eq!(
+            BackendKind::parse("http:localhost:9000").unwrap().label(),
+            "http:localhost:9000"
+        );
+        assert!(BackendKind::parse("http").is_err());
+        assert!(BackendKind::parse("http:").is_err());
+        assert!(BackendKind::parse("http:noport").is_err());
+        assert!(BackendKind::parse("http:host:notaport").is_err());
     }
 
     #[test]

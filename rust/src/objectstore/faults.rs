@@ -15,8 +15,16 @@
 //!
 //! * [`FaultRule`] / [`FaultSpec`] — a deterministic schedule: fail the
 //!   Nth operation matching an (op-kind, key-prefix) pattern, optionally
-//!   for several consecutive matches. Parsed from the CLI `--faults`
-//!   spec; carried by [`crate::objectstore::StoreConfig::faults`].
+//!   for several consecutive matches — or, for sustained degraded
+//!   service, fail each matching operation with a seeded probability
+//!   (`op[:prefix]@p=0.05`). Every rule also carries a [`FaultClass`]:
+//!   the default 503 transient, or (with a `!429` suffix) a throttle —
+//!   the store shed the request before reading the body, so it costs an
+//!   op and base latency but puts **zero** payload bytes on the wire,
+//!   and connectors pause for the Retry-After-shaped
+//!   [`RetryPolicy::retry_after_us`] instead of the exponential backoff.
+//!   Parsed from the CLI `--faults` spec; carried by
+//!   [`crate::objectstore::StoreConfig::faults`].
 //! * [`FaultInjector`] — the armed rule set threaded through
 //!   `put_object` / `get_object` / `get_object_range` / `upload_part` /
 //!   `complete_multipart` on the store front end. Rules can also be
@@ -34,10 +42,13 @@
 //! Determinism: with an empty spec nothing ever fires and every golden
 //! REST sequence and virtual runtime is byte-identical to the
 //! fault-free stack; with a spec, which ops fail is a pure function of
-//! the operation sequence (exact Nth-match counting, no randomness), so
-//! fault schedules replay exactly and are backend-invariant.
+//! the operation sequence — exact-Nth rules count matches, and
+//! probabilistic rules draw from a PCG32 stream seeded by the store's
+//! `--seed` — so fault schedules replay exactly and are
+//! backend-invariant.
 
 use crate::simclock::SimDuration;
+use crate::util::rng::Pcg32;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -87,8 +98,29 @@ impl fmt::Display for FaultOp {
     }
 }
 
-/// One deterministic fault: fail matches `nth .. nth + count` (1-based)
-/// of the (op, key-prefix) pattern with a retryable 503.
+/// Which failure a rule injects when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultClass {
+    /// Retryable 5xx/timeout (a 503): the request crossed the wire
+    /// before failing, so PUT-class payload bytes are burned.
+    #[default]
+    Transient,
+    /// 429 Too Many Requests: the store shed the request before reading
+    /// the body — an op and base latency, **zero** wire bytes, and the
+    /// retry pause is the flat Retry-After
+    /// ([`RetryPolicy::retry_after_us`]), not the exponential backoff.
+    Throttle,
+}
+
+/// One deterministic fault rule over the (op, key-prefix) pattern. Two
+/// trigger modes:
+///
+/// * **exact-Nth** (`prob_ppm == 0`): fail matches `nth .. nth + count`
+///   (1-based) — point faults for golden retry traces;
+/// * **probabilistic** (`prob_ppm > 0`): fail each match independently
+///   with probability `prob_ppm / 1e6`, drawn from the injector's seeded
+///   PCG32 stream — sustained degraded service, deterministic per
+///   `--seed`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FaultRule {
     pub op: FaultOp,
@@ -101,6 +133,12 @@ pub struct FaultRule {
     /// How many consecutive matching operations fail (≥ 1). `count`
     /// larger than the retry budget forces [`exhaustion`](crate::fs::FsError::TransientExhausted).
     pub count: u64,
+    /// Per-match failure probability in parts per million; 0 selects the
+    /// exact-Nth mode. (Stored integrally so rules stay `Eq` and the CLI
+    /// grammar round-trips exactly.)
+    pub prob_ppm: u32,
+    /// What firing injects: a 503 transient (default) or a 429 throttle.
+    pub class: FaultClass,
 }
 
 impl FaultRule {
@@ -110,13 +148,44 @@ impl FaultRule {
             key_prefix: key_prefix.to_string(),
             nth: nth.max(1),
             count: count.max(1),
+            prob_ppm: 0,
+            class: FaultClass::Transient,
         }
+    }
+
+    /// A probabilistic rule: each matching op fails with probability `p`
+    /// (clamped to `(0, 1]`, ppm resolution).
+    pub fn probabilistic(op: FaultOp, key_prefix: &str, p: f64) -> Self {
+        let ppm = (p * 1e6).round().clamp(1.0, 1e6) as u32;
+        Self {
+            prob_ppm: ppm,
+            ..Self::new(op, key_prefix, 1, 1)
+        }
+    }
+
+    /// Builder: select the failure class (`!429` in the CLI grammar).
+    pub fn with_class(mut self, class: FaultClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    pub fn is_probabilistic(&self) -> bool {
+        self.prob_ppm > 0
     }
 }
 
 impl fmt::Display for FaultRule {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}:{}@{}x{}", self.op, self.key_prefix, self.nth, self.count)
+        write!(f, "{}:{}@", self.op, self.key_prefix)?;
+        if self.is_probabilistic() {
+            write!(f, "p={}", self.prob_ppm as f64 / 1e6)?;
+        } else {
+            write!(f, "{}x{}", self.nth, self.count)?;
+        }
+        if self.class == FaultClass::Throttle {
+            write!(f, "!429")?;
+        }
+        Ok(())
     }
 }
 
@@ -151,14 +220,17 @@ impl FaultSpec {
     /// Parse the CLI grammar:
     ///
     /// ```text
-    /// SPEC := RULE ( ',' RULE )*
-    /// RULE := OP [ ':' KEY_PREFIX ] '@' NTH [ 'x' COUNT ]
-    /// OP   := put | get | part | complete
+    /// SPEC    := RULE ( ',' RULE )*
+    /// RULE    := OP [ ':' KEY_PREFIX ] '@' TRIGGER [ '!429' ]
+    /// TRIGGER := NTH [ 'x' COUNT ] | 'p=' P
+    /// OP      := put | get | part | complete
     /// ```
     ///
     /// Examples: `put@1` (the very first PUT fails once),
     /// `put:out/@3x2` (the 3rd and 4th PUTs under `out/` fail),
-    /// `part:out/@2,complete@1` (two rules).
+    /// `part:out/@2,complete@1` (two rules),
+    /// `put@p=0.05` (each PUT fails with probability 5%, seeded),
+    /// `get@p=0.01!429` (1% of GETs are 429-throttled instead of 503s).
     pub fn parse(s: &str) -> Result<FaultSpec, String> {
         let mut spec = FaultSpec::none();
         for raw in s.split(',') {
@@ -168,28 +240,49 @@ impl FaultSpec {
             }
             let (head, tail) = raw
                 .split_once('@')
-                .ok_or_else(|| format!("fault rule '{raw}' is missing '@NTH'"))?;
+                .ok_or_else(|| format!("fault rule '{raw}' is missing '@NTH' or '@p=P'"))?;
             let (op_s, prefix) = match head.split_once(':') {
                 Some((o, p)) => (o, p),
                 None => (head, ""),
             };
             let op = FaultOp::parse(op_s)
                 .ok_or_else(|| format!("unknown fault op '{op_s}' (put|get|part|complete)"))?;
-            let (nth_s, count_s) = match tail.split_once('x') {
-                Some((n, c)) => (n, c),
-                None => (tail, "1"),
+            let (tail, class) = match tail.strip_suffix("!429") {
+                Some(t) => (t, FaultClass::Throttle),
+                None => (tail, FaultClass::Transient),
             };
-            let nth: u64 = nth_s
-                .parse()
-                .ok()
-                .filter(|&n| n >= 1)
-                .ok_or_else(|| format!("fault rule '{raw}': NTH must be a positive integer"))?;
-            let count: u64 = count_s
-                .parse()
-                .ok()
-                .filter(|&c| c >= 1)
-                .ok_or_else(|| format!("fault rule '{raw}': COUNT must be a positive integer"))?;
-            spec.rules.push(FaultRule::new(op, prefix, nth, count));
+            let rule = if let Some(p_s) = tail.strip_prefix("p=") {
+                // Lower bound is the grammar's ppm resolution: silently
+                // rounding p=1e-7 up to 1 ppm would inflate the
+                // requested rate tenfold.
+                let p: f64 = p_s
+                    .parse()
+                    .ok()
+                    .filter(|p| *p >= 1e-6 && *p <= 1.0)
+                    .ok_or_else(|| {
+                        format!(
+                            "fault rule '{raw}': P must be a probability in [0.000001, 1]"
+                        )
+                    })?;
+                FaultRule::probabilistic(op, prefix, p)
+            } else {
+                let (nth_s, count_s) = match tail.split_once('x') {
+                    Some((n, c)) => (n, c),
+                    None => (tail, "1"),
+                };
+                let nth: u64 = nth_s
+                    .parse()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| format!("fault rule '{raw}': NTH must be a positive integer"))?;
+                let count: u64 = count_s
+                    .parse()
+                    .ok()
+                    .filter(|&c| c >= 1)
+                    .ok_or_else(|| format!("fault rule '{raw}': COUNT must be a positive integer"))?;
+                FaultRule::new(op, prefix, nth, count)
+            };
+            spec.rules.push(rule.with_class(class));
         }
         if spec.is_empty() {
             return Err("empty --faults spec".to_string());
@@ -215,18 +308,49 @@ struct ArmedRule {
     seen: u64,
 }
 
+/// A fired fault as the store front end sees it: which class to surface
+/// (and price) plus the human-readable description.
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    pub class: FaultClass,
+    pub msg: String,
+}
+
 /// The armed fault rules a store consults on every injectable operation.
 /// Thread-safe; the zero-rule fast path is one relaxed atomic load, so
 /// the fault-free hot path stays wall-clock-neutral.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct FaultInjector {
     n_rules: AtomicUsize,
     armed: Mutex<Vec<ArmedRule>>,
+    /// The seeded stream probabilistic rules draw from (one draw per
+    /// matching op per probabilistic rule, fired or not, so the stream
+    /// stays aligned with the op sequence).
+    rng: Mutex<Pcg32>,
+}
+
+impl Default for FaultInjector {
+    fn default() -> Self {
+        Self {
+            n_rules: AtomicUsize::new(0),
+            armed: Mutex::new(Vec::new()),
+            rng: Mutex::new(Pcg32::new(0x7412_0f4a)),
+        }
+    }
 }
 
 impl FaultInjector {
     pub fn new(spec: &FaultSpec) -> Self {
-        let inj = Self::default();
+        Self::with_seed(spec, 0)
+    }
+
+    /// Build with the seed probabilistic rules draw under (the store
+    /// passes its `--seed`, so `p=` schedules replay per seed).
+    pub fn with_seed(spec: &FaultSpec, seed: u64) -> Self {
+        let inj = Self {
+            rng: Mutex::new(Pcg32::new(seed ^ 0x7412_0f4a)),
+            ..Self::default()
+        };
         inj.arm(spec);
         inj
     }
@@ -256,29 +380,42 @@ impl FaultInjector {
     }
 
     /// Record one (op, key) operation against every armed rule; returns
-    /// a failure description if any rule's window covers this match.
-    /// Rules whose windows have fully passed are dropped, so the idle
-    /// fast path (and the connectors' clone-free retry loops) come back
-    /// once every scheduled fault has fired.
-    pub fn check(&self, op: FaultOp, key: &str) -> Option<String> {
+    /// the injected failure if any rule covers this match (exact-Nth
+    /// window, or a probabilistic draw under the seeded stream).
+    /// Exact-Nth rules whose windows have fully passed are dropped, so
+    /// the idle fast path (and the connectors' clone-free retry loops)
+    /// come back once every scheduled point fault has fired;
+    /// probabilistic rules stay armed for the store's lifetime.
+    pub fn check(&self, op: FaultOp, key: &str) -> Option<InjectedFault> {
         if self.n_rules.load(Ordering::Relaxed) == 0 {
             return None;
         }
         let mut armed = self.armed.lock().unwrap();
-        let mut fired: Option<String> = None;
+        let mut fired: Option<InjectedFault> = None;
         for a in armed.iter_mut() {
             if a.rule.op != op || !key.starts_with(a.rule.key_prefix.as_str()) {
                 continue;
             }
             a.seen += 1;
-            if a.seen >= a.rule.nth && a.seen < a.rule.nth + a.rule.count && fired.is_none() {
-                fired = Some(format!(
-                    "injected fault on {op} {key} (match {} of rule {})",
-                    a.seen, a.rule
-                ));
+            let hit = if a.rule.is_probabilistic() {
+                // Draw even when another rule already fired: the stream
+                // position must be a pure function of the op sequence.
+                let draw = self.rng.lock().unwrap().next_f64();
+                draw < a.rule.prob_ppm as f64 / 1e6
+            } else {
+                a.seen >= a.rule.nth && a.seen < a.rule.nth + a.rule.count
+            };
+            if hit && fired.is_none() {
+                fired = Some(InjectedFault {
+                    class: a.rule.class,
+                    msg: format!(
+                        "injected fault on {op} {key} (match {} of rule {})",
+                        a.seen, a.rule
+                    ),
+                });
             }
         }
-        armed.retain(|a| a.seen + 1 < a.rule.nth + a.rule.count);
+        armed.retain(|a| a.rule.is_probabilistic() || a.seen + 1 < a.rule.nth + a.rule.count);
         self.n_rules.store(armed.len(), Ordering::Relaxed);
         fired
     }
@@ -297,6 +434,11 @@ pub struct RetryPolicy {
     /// doubles on each further re-attempt (exponential, no jitter — the
     /// schedule must replay deterministically).
     pub backoff_us: u64,
+    /// The flat Retry-After pause honoured before retrying a 429
+    /// [`crate::objectstore::StoreError::Throttled`] request: the server
+    /// names the pause, so it does not grow per attempt the way the
+    /// exponential 503 backoff does.
+    pub retry_after_us: u64,
 }
 
 impl Default for RetryPolicy {
@@ -304,6 +446,7 @@ impl Default for RetryPolicy {
         Self {
             retries: 0,
             backoff_us: 100_000,
+            retry_after_us: 1_000_000,
         }
     }
 }
@@ -330,6 +473,22 @@ impl RetryPolicy {
     pub fn backoff(&self, retry_index: u32) -> SimDuration {
         let shift = retry_index.saturating_sub(1).min(20);
         SimDuration::from_micros(self.backoff_us << shift)
+    }
+
+    /// The pause before re-attempt `retry_index` for a given transient
+    /// failure: 429 throttles wait the flat Retry-After, everything else
+    /// takes the exponential backoff.
+    pub fn retry_delay(
+        &self,
+        retry_index: u32,
+        err: &crate::objectstore::StoreError,
+    ) -> SimDuration {
+        match err {
+            crate::objectstore::StoreError::Throttled(_) => {
+                SimDuration::from_micros(self.retry_after_us)
+            }
+            _ => self.backoff(retry_index),
+        }
     }
 }
 
@@ -389,5 +548,72 @@ mod tests {
         assert_eq!(p.backoff(2).as_micros(), 200_000);
         assert_eq!(p.backoff(3).as_micros(), 400_000);
         assert_eq!(RetryPolicy::none().attempts(), 1);
+    }
+
+    #[test]
+    fn probabilistic_and_throttle_grammar_roundtrip() {
+        let spec = FaultSpec::parse("put@p=0.05,get:d/@p=0.5!429,put:out/@2x3!429").unwrap();
+        assert_eq!(spec.rules.len(), 3);
+        assert_eq!(spec.rules[0], FaultRule::probabilistic(FaultOp::Put, "", 0.05));
+        assert_eq!(spec.rules[0].prob_ppm, 50_000);
+        assert_eq!(
+            spec.rules[1],
+            FaultRule::probabilistic(FaultOp::Get, "d/", 0.5).with_class(FaultClass::Throttle)
+        );
+        assert_eq!(
+            spec.rules[2],
+            FaultRule::new(FaultOp::Put, "out/", 2, 3).with_class(FaultClass::Throttle)
+        );
+        // Display re-parses to the same spec (including class and p).
+        assert_eq!(FaultSpec::parse(&spec.to_string()).unwrap(), spec);
+        // Probability bounds are enforced, including the ppm floor
+        // (sub-ppm rates would silently round up tenfold or more).
+        assert!(FaultSpec::parse("put@p=0").is_err());
+        assert!(FaultSpec::parse("put@p=0.0000001").is_err());
+        assert!(FaultSpec::parse("put@p=1.5").is_err());
+        assert!(FaultSpec::parse("put@p=lots").is_err());
+        assert!(FaultSpec::parse("put@p=0.000001").is_ok(), "exactly 1 ppm is the floor");
+    }
+
+    #[test]
+    fn probabilistic_rules_are_deterministic_per_seed() {
+        let fired = |seed: u64| -> Vec<bool> {
+            let inj = FaultInjector::with_seed(
+                &FaultSpec::parse("put@p=0.3").unwrap(),
+                seed,
+            );
+            (0..64).map(|i| inj.check(FaultOp::Put, &format!("k{i}")).is_some()).collect()
+        };
+        assert_eq!(fired(7), fired(7), "same seed, same schedule");
+        assert_ne!(fired(7), fired(8), "different seed, different schedule");
+        let hits = fired(7).iter().filter(|b| **b).count();
+        assert!((5..=30).contains(&hits), "p=0.3 over 64 ops fired {hits} times");
+        // p=1 fires on every match; the rule never expires, so the
+        // injector never goes idle (retry loops must keep their clones).
+        let always = FaultInjector::with_seed(&FaultSpec::parse("put@p=1").unwrap(), 1);
+        for i in 0..8 {
+            assert!(always.check(FaultOp::Put, &format!("k{i}")).is_some());
+        }
+        assert!(!always.is_idle());
+    }
+
+    #[test]
+    fn throttle_rules_carry_their_class() {
+        let inj = FaultInjector::new(&FaultSpec::parse("put@1!429,get@1").unwrap());
+        let put = inj.check(FaultOp::Put, "k").expect("put fires");
+        assert_eq!(put.class, FaultClass::Throttle);
+        let get = inj.check(FaultOp::Get, "k").expect("get fires");
+        assert_eq!(get.class, FaultClass::Transient);
+    }
+
+    #[test]
+    fn retry_delay_is_flat_for_throttles() {
+        use crate::objectstore::StoreError;
+        let p = RetryPolicy::with_retries(3);
+        let throttled = StoreError::Throttled("429".into());
+        let transient = StoreError::TransientFailure("503".into());
+        assert_eq!(p.retry_delay(1, &throttled).as_micros(), 1_000_000);
+        assert_eq!(p.retry_delay(3, &throttled).as_micros(), 1_000_000, "flat, not exponential");
+        assert_eq!(p.retry_delay(3, &transient), p.backoff(3));
     }
 }

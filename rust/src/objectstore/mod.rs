@@ -35,7 +35,7 @@ mod visibility;
 pub use backend::{Backend, BackendError, BackendKind, LocalFsBackend, ShardedMemBackend};
 pub use consistency::ConsistencyModel;
 pub use container::{Listing, ObjectSummary};
-pub use faults::{FaultInjector, FaultOp, FaultRule, FaultSpec, RetryPolicy};
+pub use faults::{FaultClass, FaultInjector, FaultOp, FaultRule, FaultSpec, InjectedFault, RetryPolicy};
 pub use latency::LatencyModel;
 pub use object::{Metadata, Object};
 pub use pricing::{cost_usd, storage_cost_usd_month, Provider, PROVIDERS};

@@ -17,7 +17,7 @@ use super::backend::{make_backend, Backend, BackendError, DEFAULT_PAGE_SIZE};
 use super::backend::{BackendKind, ObjectStat};
 use super::consistency::ConsistencyModel;
 use super::container::Listing;
-use super::faults::{FaultInjector, FaultOp, FaultSpec, RetryPolicy};
+use super::faults::{FaultClass, FaultInjector, FaultOp, FaultSpec, InjectedFault, RetryPolicy};
 use super::latency::LatencyModel;
 use super::multipart::DEFAULT_MIN_PART_SIZE;
 use super::object::{Metadata, Object};
@@ -44,6 +44,13 @@ pub enum StoreError {
     /// bytes on the wire) but had no effect; connectors may retry it
     /// under their [`RetryPolicy`].
     TransientFailure(String),
+    /// A 429 Too Many Requests injected by the [`FaultInjector`]: the
+    /// store shed the request before reading its body, so the op and
+    /// base latency are burned but **zero** payload bytes crossed the
+    /// wire. Retryable like a 503, but connectors pause for the flat
+    /// Retry-After ([`RetryPolicy::retry_after_us`]) instead of the
+    /// exponential backoff.
+    Throttled(String),
     /// Real-IO failure in a persistent backend (no REST analogue).
     Backend(String),
 }
@@ -58,12 +65,42 @@ impl fmt::Display for StoreError {
             StoreError::InvalidRequest(m) => write!(f, "400 InvalidRequest: {m}"),
             StoreError::InvalidRange(m) => write!(f, "416 InvalidRange: {m}"),
             StoreError::TransientFailure(m) => write!(f, "503 Transient: {m}"),
+            StoreError::Throttled(m) => write!(f, "429 Throttled: {m}"),
             StoreError::Backend(m) => write!(f, "500 BackendIo: {m}"),
         }
     }
 }
 
 impl std::error::Error for StoreError {}
+
+impl StoreError {
+    /// The retryable failure classes the stream-layer retry contract
+    /// covers: injected 503 transients and 429 throttles.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            StoreError::TransientFailure(_) | StoreError::Throttled(_)
+        )
+    }
+
+    /// Trace-line tag for a failed transient request (`"503 transient"`
+    /// / `"429 throttle"`).
+    pub fn transient_tag(&self) -> &'static str {
+        match self {
+            StoreError::TransientFailure(_) => "503 transient",
+            StoreError::Throttled(_) => "429 throttle",
+            _ => "error",
+        }
+    }
+
+    /// Extract the failure description (for exhaustion reporting).
+    pub fn into_msg(self) -> String {
+        match self {
+            StoreError::TransientFailure(m) | StoreError::Throttled(m) => m,
+            other => other.to_string(),
+        }
+    }
+}
 
 impl From<BackendError> for StoreError {
     fn from(e: BackendError) -> Self {
@@ -220,7 +257,7 @@ impl ObjectStore {
             visibility: Mutex::new(VisibilityMap::default()),
             rng: Mutex::new(Pcg32::new(config.seed ^ 0x5106_a70c)),
             counters: LiveCounters::new(),
-            injector: FaultInjector::new(&config.faults),
+            injector: FaultInjector::with_seed(&config.faults, config.seed),
             multipart: Mutex::new(HashMap::new()),
             config,
         })
@@ -267,6 +304,33 @@ impl ObjectStore {
         } else {
             let draw = self.rng.lock().unwrap().next_f64();
             self.config.latency.jittered(d, draw)
+        }
+    }
+
+    /// Price one injected failure and surface it as the matching error.
+    /// A 503 transient behaves like a real request that died late: full
+    /// latency, the op, and (for PUT-class ops) the payload bytes on the
+    /// wire. A 429 throttle was shed before the body was read: the op
+    /// and base latency only — zero wire bytes.
+    fn charge_injected(
+        &self,
+        kind: OpKind,
+        fault: InjectedFault,
+        payload_bytes: u64,
+    ) -> (StoreError, SimDuration) {
+        match fault.class {
+            FaultClass::Transient => {
+                let d = self.charge(kind, payload_bytes, 0);
+                if payload_bytes > 0 {
+                    self.counters
+                        .record_write(self.config.latency.scaled_bytes(payload_bytes));
+                }
+                (StoreError::TransientFailure(fault.msg), d)
+            }
+            FaultClass::Throttle => {
+                let d = self.charge(kind, 0, 0);
+                (StoreError::Throttled(fault.msg), d)
+            }
         }
     }
 
@@ -333,15 +397,13 @@ impl ObjectStore {
         now: SimInstant,
     ) -> (Result<(), StoreError>, SimDuration) {
         let size = data.len() as u64;
-        // Injected transient failure: the whole body went onto the wire
-        // before the 503 came back — latency, the op AND the payload
-        // bytes are all burned (real stores bill failed PUTs), but the
-        // backend never sees the object.
-        if let Some(msg) = self.injector.check(FaultOp::Put, key) {
-            let d = self.charge(OpKind::PutObject, size, 0);
-            self.counters
-                .record_write(self.config.latency.scaled_bytes(size));
-            return (Err(StoreError::TransientFailure(msg)), d);
+        // Injected failure: a 503 means the whole body went onto the
+        // wire before the error came back (real stores bill failed
+        // PUTs); a 429 was shed before the body. Either way the backend
+        // never sees the object.
+        if let Some(fault) = self.injector.check(FaultOp::Put, key) {
+            let (e, d) = self.charge_injected(OpKind::PutObject, fault, size);
+            return (Err(e), d);
         }
         let d = self.charge(OpKind::PutObject, size, 0);
         match self.apply_put(container, key, data, metadata, now) {
@@ -361,11 +423,11 @@ impl ObjectStore {
         container: &str,
         key: &str,
     ) -> (Result<GetResult, StoreError>, SimDuration) {
-        // Injected transient failure: the 503 arrives before the body,
-        // so only the request latency and the op are burned.
-        if let Some(msg) = self.injector.check(FaultOp::Get, key) {
-            let d = self.charge(OpKind::GetObject, 0, 0);
-            return (Err(StoreError::TransientFailure(msg)), d);
+        // Injected failure: the error arrives before the body, so only
+        // the request latency and the op are burned, whatever the class.
+        if let Some(fault) = self.injector.check(FaultOp::Get, key) {
+            let (e, d) = self.charge_injected(OpKind::GetObject, fault, 0);
+            return (Err(e), d);
         }
         match self.backend.get(container, key) {
             Ok(obj) => {
@@ -411,9 +473,9 @@ impl ObjectStore {
         offset: u64,
         len: u64,
     ) -> (Result<GetResult, StoreError>, SimDuration) {
-        if let Some(msg) = self.injector.check(FaultOp::Get, key) {
-            let d = self.charge(OpKind::GetObject, 0, 0);
-            return (Err(StoreError::TransientFailure(msg)), d);
+        if let Some(fault) = self.injector.check(FaultOp::Get, key) {
+            let (e, d) = self.charge_injected(OpKind::GetObject, fault, 0);
+            return (Err(e), d);
         }
         match self.backend.get_range(container, key, offset, len) {
             Ok((data, stat)) => {
@@ -624,18 +686,16 @@ impl ObjectStore {
         data: Vec<u8>,
     ) -> (Result<(), StoreError>, SimDuration) {
         let size = data.len() as u64;
-        // Injected transient failure: like a failed whole-object PUT,
-        // the part's bytes crossed the wire before the 503 — latency,
-        // op and payload bytes all burn; the part is not stored.
+        // Injected failure: like a failed whole-object PUT — a 503
+        // burns latency, op and payload bytes; a 429 costs the op and
+        // base latency only. Either way the part is not stored.
         let target = self.multipart_target(upload_id);
-        if let Some(msg) = self
+        if let Some(fault) = self
             .injector
             .check(FaultOp::UploadPart, target.as_deref().unwrap_or(""))
         {
-            let d = self.charge(OpKind::PutObject, size, 0);
-            self.counters
-                .record_write(self.config.latency.scaled_bytes(size));
-            return (Err(StoreError::TransientFailure(msg)), d);
+            let (e, d) = self.charge_injected(OpKind::PutObject, fault, size);
+            return (Err(e), d);
         }
         let d = self.charge(OpKind::PutObject, size, 0);
         match self.backend.upload_part(upload_id, part_number, data) {
@@ -657,16 +717,16 @@ impl ObjectStore {
         upload_id: u64,
         now: SimInstant,
     ) -> (Result<(), StoreError>, SimDuration) {
-        // An injected transient failure on the completion POST leaves
-        // the upload alive (the request never took effect), so a retry
-        // can complete it without re-sending any part.
+        // An injected failure on the completion POST leaves the upload
+        // alive (the request never took effect), so a retry can
+        // complete it without re-sending any part.
         let target = self.multipart_target(upload_id);
-        if let Some(msg) = self
+        if let Some(fault) = self
             .injector
             .check(FaultOp::CompleteMultipart, target.as_deref().unwrap_or(""))
         {
-            let d = self.charge(OpKind::PutObject, 0, 0);
-            return (Err(StoreError::TransientFailure(msg)), d);
+            let (e, d) = self.charge_injected(OpKind::PutObject, fault, 0);
+            return (Err(e), d);
         }
         let d = self.charge(OpKind::PutObject, 0, 0);
         // The backend consumes the upload whether or not assembly
@@ -1164,6 +1224,58 @@ mod tests {
         let c = s.counters();
         assert_eq!(c.get(OpKind::GetObject), 3, "failed GETs are still ops");
         assert_eq!(c.bytes_read, 100, "only the successful GET moved bytes");
+    }
+
+    #[test]
+    fn injected_throttle_burns_op_and_latency_but_zero_bytes() {
+        use super::super::faults::FaultSpec;
+        let cfg = StoreConfig {
+            latency: LatencyModel::paper_testbed(),
+            faults: FaultSpec::parse("put:d/@1!429").unwrap(),
+            ..StoreConfig::instant_strong()
+        };
+        let s = ObjectStore::new(cfg);
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let body = vec![0u8; 26_000_000];
+        let (r, d) = s.put_object("res", "d/part-0", body.clone(), Metadata::new(), SimInstant(0));
+        assert!(matches!(r, Err(StoreError::Throttled(_))));
+        // The 429 was shed before the body: base PUT latency only, no
+        // transfer time, and NO payload bytes on the wire.
+        assert_eq!(d.as_micros(), 30_000);
+        let c = s.counters();
+        assert_eq!(c.get(OpKind::PutObject), 1 + 1 /* container */);
+        assert_eq!(c.bytes_written, 0, "a throttled PUT puts nothing on the wire");
+        assert!(s.get_object("res", "d/part-0").0.is_err());
+        // The retry (match 2, outside the rule window) succeeds and pays
+        // the full freight once.
+        let (r, _) = s.put_object("res", "d/part-0", body, Metadata::new(), SimInstant(1));
+        assert!(r.is_ok());
+        assert_eq!(s.counters().bytes_written, 26_000_000);
+    }
+
+    #[test]
+    fn probabilistic_faults_follow_the_store_seed() {
+        use super::super::faults::FaultSpec;
+        let run = |seed: u64| -> Vec<bool> {
+            let cfg = StoreConfig {
+                faults: FaultSpec::parse("put@p=0.4").unwrap(),
+                seed,
+                ..StoreConfig::instant_strong()
+            };
+            let s = ObjectStore::new(cfg);
+            s.create_container("res", SimInstant::EPOCH).0.unwrap();
+            (0..32)
+                .map(|i| {
+                    s.put_object("res", &format!("k{i}"), vec![1], Metadata::new(), SimInstant(i))
+                        .0
+                        .is_err()
+                })
+                .collect()
+        };
+        assert_eq!(run(11), run(11), "same --seed, same fault schedule");
+        assert_ne!(run(11), run(12), "different --seed, different schedule");
+        assert!(run(11).iter().any(|b| *b), "p=0.4 over 32 PUTs fires");
+        assert!(!run(11).iter().all(|b| *b), "p=0.4 is not p=1");
     }
 
     #[test]

@@ -1,11 +1,16 @@
 //! Backend conformance: one shared suite asserting the `Backend` trait
 //! contract (put/get/ranged-get/head/list-pagination/delete/multipart/
-//! ETag round-trip), instantiated against every backend via a macro — plus
-//! fs-only persistence checks and the front-end invariance criterion:
-//! the same workload issues the same REST ops on every backend.
+//! ETag round-trip), instantiated against every backend via a macro —
+//! including `HttpBackend` speaking to an in-process gateway over a real
+//! socket — plus fs-only persistence checks, hostile-key round-trips
+//! over the wire, and the front-end invariance criterion: the same
+//! workload issues the same REST ops (and virtual runtimes, and fault
+//! traces) on every backend.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use stocator::gateway::{GatewayHandle, GatewayServer, HttpBackend};
 use stocator::harness::{run_cell, Scenario, Sizing, Workload};
 use stocator::objectstore::backend::{Backend, BackendError, LocalFsBackend, ShardedMemBackend};
 use stocator::objectstore::{BackendKind, Metadata, Object};
@@ -21,10 +26,15 @@ fn unique_root(tag: &str) -> PathBuf {
 }
 
 /// A backend under test, with optional on-disk state removed on drop
-/// (including on panic, so failed runs don't litter the temp dir).
+/// (including on panic, so failed runs don't litter the temp dir) and,
+/// for the http fixtures, the in-process gateway kept alive for the
+/// backend's lifetime. Field order matters: the client (`backend`)
+/// drops before `gateway`, closing its pooled connections before the
+/// accept loop joins.
 struct Fixture {
     backend: Box<dyn Backend>,
     cleanup: Option<PathBuf>,
+    gateway: Option<GatewayHandle>,
 }
 
 impl Fixture {
@@ -45,6 +55,7 @@ fn mem_fixture(shards: usize) -> Fixture {
     Fixture {
         backend: Box::new(ShardedMemBackend::new(shards)),
         cleanup: None,
+        gateway: None,
     }
 }
 
@@ -53,6 +64,37 @@ fn fs_fixture() -> Fixture {
     Fixture {
         backend: Box::new(LocalFsBackend::open(&root).unwrap()),
         cleanup: Some(root),
+        gateway: None,
+    }
+}
+
+/// The tentpole fixture: every conformance check runs through
+/// `HttpBackend` → a real TCP socket → an in-process `GatewayServer` on
+/// an ephemeral port → a sharded in-memory backend.
+fn http_fixture() -> Fixture {
+    let inner = Arc::new(ShardedMemBackend::new(4));
+    let server = GatewayServer::bind("127.0.0.1:0", inner).expect("bind ephemeral gateway");
+    let handle = server.spawn();
+    let client = HttpBackend::connect(&handle.addr().to_string(), None).expect("connect gateway");
+    Fixture {
+        backend: Box::new(client),
+        cleanup: None,
+        gateway: Some(handle),
+    }
+}
+
+/// An http fixture over a *persistent* inner backend (gateway → fs),
+/// for the hostile-key wire tests.
+fn http_over_fs_fixture() -> Fixture {
+    let root = unique_root("http-fs");
+    let inner = Arc::new(LocalFsBackend::open(&root).unwrap());
+    let server = GatewayServer::bind("127.0.0.1:0", inner).expect("bind ephemeral gateway");
+    let handle = server.spawn();
+    let client = HttpBackend::connect(&handle.addr().to_string(), None).expect("connect gateway");
+    Fixture {
+        backend: Box::new(client),
+        cleanup: Some(root),
+        gateway: Some(handle),
     }
 }
 
@@ -331,6 +373,7 @@ macro_rules! conformance_suite {
 conformance_suite!(single_mem, mem_fixture(1));
 conformance_suite!(sharded_mem, mem_fixture(16));
 conformance_suite!(local_fs, fs_fixture());
+conformance_suite!(http_gateway, http_fixture());
 
 // ---- cross-backend and fs-specific checks ---------------------------------
 
@@ -411,6 +454,62 @@ fn fs_keys_with_hostile_names_roundtrip() {
     assert!(b.get("res", ".hidden").is_ok());
 }
 
+/// Hostile key names over the wire: the conformance suite's hostile
+/// cases (plus unicode, query metacharacters and `+`) must round-trip
+/// through `HttpBackend` → percent-encoded URL → gateway → every kind
+/// of inner backend — data, listings, ranged reads, HEAD and DELETE.
+#[test]
+fn hostile_keys_roundtrip_over_the_wire_on_every_inner_backend() {
+    const HOSTILE: [&str; 8] = [
+        "a/b/c/part-0",
+        "_temporary/0/_temporary/attempt_x/part-1",
+        ".hidden",
+        "sp ace%and%percent",
+        "_SUCCESS",
+        "uni-cöde-日本-ключ",
+        "query?amp&eq=1#frag",
+        "plus+sign~tilde,comma",
+    ];
+    for fixture in [http_fixture(), http_over_fs_fixture()] {
+        let b = fixture.backend();
+        b.create_container("res").unwrap();
+        for (i, key) in HOSTILE.iter().enumerate() {
+            let body = format!("payload-{i}");
+            b.put("res", key, obj(body.as_bytes(), i as u64)).unwrap();
+            // Whole-object read carries data + stat back through the
+            // percent-decoded response.
+            let got = b.get("res", key).unwrap();
+            assert_eq!(&**got.data, body.as_bytes(), "key {key:?}");
+            assert_eq!(got.created_at, SimInstant(i as u64), "key {key:?}");
+            // Ranged read on the same hostile URL.
+            let (bytes, stat) = b.get_range("res", key, 0, 7).unwrap();
+            assert_eq!(bytes, b"payload", "key {key:?}");
+            assert_eq!(stat.size, body.len() as u64, "key {key:?}");
+            // HEAD agrees.
+            assert_eq!(b.head("res", key).unwrap().etag, got.etag, "key {key:?}");
+        }
+        // Listings come back decoded, sorted, complete.
+        let page = b.list_page("res", "", None, 100).unwrap();
+        let names: Vec<&str> = page.entries.iter().map(|e| e.name.as_str()).collect();
+        let mut expect: Vec<&str> = HOSTILE.to_vec();
+        expect.sort_unstable();
+        assert_eq!(names, expect);
+        // Prefix listings work on hostile prefixes too.
+        let page = b.list_page("res", "sp ace%", None, 100).unwrap();
+        assert_eq!(page.entries.len(), 1);
+        assert_eq!(page.entries[0].name, "sp ace%and%percent");
+        // Delete round-trips and 404s stay exact.
+        for key in HOSTILE {
+            b.delete("res", key).unwrap();
+            assert!(
+                matches!(b.get("res", key), Err(BackendError::NoSuchKey(k)) if k == format!("res/{key}")),
+                "key {key:?}"
+            );
+        }
+        assert_eq!(b.live_count("res"), 0);
+    }
+}
+
 /// Reusing one fs root across repetitions and invocations must not
 /// collide: the harness gives every environment a unique subdirectory.
 #[test]
@@ -428,7 +527,10 @@ fn fs_root_is_reusable_across_runs() {
 
 /// Acceptance criterion: the front end's REST op accounting is
 /// backend-invariant — a full Stocator Teragen cell issues identical op
-/// counts and bytes on every backend.
+/// counts and bytes on every backend, *including over a real socket*
+/// through an in-process gateway. This is the golden-opcount scenario
+/// for the HTTP path: REST op counts and virtual runtimes must be
+/// byte-identical to `mem`.
 #[test]
 fn front_end_op_counts_are_backend_invariant() {
     let run_with = |backend: BackendKind| {
@@ -443,11 +545,41 @@ fn front_end_op_counts_are_backend_invariant() {
     let fs_root = unique_root("invariance");
     let (fs_ops, fs_rt) = run_with(BackendKind::LocalFs(Some(fs_root.clone())));
     let _ = std::fs::remove_dir_all(&fs_root);
+    let gateway = GatewayServer::bind("127.0.0.1:0", Arc::new(ShardedMemBackend::new(4)))
+        .expect("bind gateway")
+        .spawn();
+    let (http_ops, http_rt) = run_with(BackendKind::Http {
+        addr: gateway.addr().to_string(),
+        ns: None,
+    });
     assert_eq!(mem_ops, sharded_ops);
     assert_eq!(mem_ops, fs_ops);
+    assert_eq!(mem_ops, http_ops, "REST ops over the wire must match mem exactly");
     // Virtual-clock runtime is also invariant (jitter is 0 in small sizing).
     assert_eq!(mem_rt, sharded_rt);
     assert_eq!(mem_rt, fs_rt);
+    assert_eq!(mem_rt, http_rt, "virtual runtime over the wire must match mem exactly");
+}
+
+/// Two cells against ONE long-lived gateway must not collide: the
+/// harness namespaces each environment's containers (the http analogue
+/// of the fs backend's per-env subdirectory), and results stay
+/// identical run over run.
+#[test]
+fn repeated_cells_share_one_gateway_without_collisions() {
+    let gateway = GatewayServer::bind("127.0.0.1:0", Arc::new(ShardedMemBackend::new(4)))
+        .expect("bind gateway")
+        .spawn();
+    let mut sizing = Sizing::small();
+    sizing.backend = BackendKind::Http {
+        addr: gateway.addr().to_string(),
+        ns: None,
+    };
+    let first = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 2);
+    assert!(first.valid, "{}", first.validation);
+    let again = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+    assert!(again.valid, "{}", again.validation);
+    assert_eq!(first.ops, again.ops);
 }
 
 /// Regression (readahead × range contract): a readahead *fill* is
@@ -537,11 +669,18 @@ fn fault_injection_is_backend_invariant() {
     }
 
     let fs_root = unique_root("faults");
+    let gateway = GatewayServer::bind("127.0.0.1:0", Arc::new(ShardedMemBackend::new(4)))
+        .expect("bind gateway")
+        .spawn();
     let mut snapshots: Vec<(String, Vec<String>, u64, u64, Vec<String>)> = Vec::new();
     for kind in [
         BackendKind::Mem,
         BackendKind::Sharded(4),
         BackendKind::LocalFs(Some(fs_root.clone())),
+        BackendKind::Http {
+            addr: gateway.addr().to_string(),
+            ns: Some("faults-inv".to_string()),
+        },
     ] {
         let _reap = Reap(match &kind {
             BackendKind::LocalFs(Some(p)) => Some(p.clone()),

@@ -517,6 +517,72 @@ fn injected_put_fault_golden_retry_sequences() {
     assert_eq!(cases[3].failed_bytes, MULTIPART_SIZE);
 }
 
+/// One injected 429 THROTTLE on Stocator's chunked PUT, `--retries 1`:
+/// the golden trace is the baseline with a `(429 throttle)` line
+/// inserted, recovery costs EXACTLY one base PUT latency (the body was
+/// shed — no transfer time) + the flat Retry-After, and — the contrast
+/// with a 503 — the wire-byte accounting is UNCHANGED: a throttled PUT
+/// puts zero payload bytes on the wire.
+#[test]
+fn injected_throttle_golden_retry_sequence() {
+    let stoc_final_key = "data.txt/part-00000_attempt_201512062056_0000_m_000000_0";
+    let scenario = Scenario::Stocator;
+    let (store_base, fs_base) = build(scenario);
+    let (baseline, t_base, ops_base) = one_object_job(&store_base, &*fs_base, scenario, usize::MAX);
+    let spec = FaultSpec::parse(&format!("put:{stoc_final_key}@1!429")).unwrap();
+    let (store_f, fs_f) = build_with_faults(scenario, spec, 1);
+    let (faulted, t_fault, ops_fault) = one_object_job(&store_f, &*fs_f, scenario, usize::MAX);
+
+    let target = format!("stocator: (intercept) PUT res/{stoc_final_key}");
+    let idx = baseline
+        .iter()
+        .position(|l| l == &target)
+        .unwrap_or_else(|| panic!("target line missing in {baseline:?}"));
+    let mut expected = baseline.clone();
+    expected.insert(idx, format!("{target} (429 throttle)"));
+    assert_eq!(faulted, expected);
+
+    // Recovery price: base PUT latency (zero transfer) + flat Retry-After.
+    let lat = LatencyModel::paper_testbed();
+    let policy = RetryPolicy::with_retries(1);
+    let extra = lat.op_duration(OpKind::PutObject, 0, 0).as_micros() + policy.retry_after_us;
+    assert_eq!(t_fault, t_base + extra, "throttle recovery = base latency + Retry-After");
+
+    // The op is counted; the bytes are NOT (contrast with the 503 case).
+    assert_eq!(ops_fault.get(OpKind::PutObject), ops_base.get(OpKind::PutObject) + 1);
+    assert_eq!(
+        ops_fault.bytes_written, ops_base.bytes_written,
+        "a throttled PUT must put zero payload bytes on the wire"
+    );
+}
+
+/// Probabilistic fault rates drive whole cells deterministically: the
+/// same seeded `p=` schedule reproduces identical op counts and
+/// runtimes run over run, only ever ADDS retry ops relative to the
+/// fault-free cell, and the job output still validates under a
+/// sufficient retry budget.
+#[test]
+fn probabilistic_fault_cells_are_deterministic_and_recoverable() {
+    let mut sizing = Sizing::small();
+    let base = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+    assert!(base.valid, "{}", base.validation);
+    sizing.faults = FaultSpec::parse("put@p=0.05").unwrap();
+    sizing.retries = 5;
+    let a = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+    let b = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+    assert!(a.valid, "{}", a.validation);
+    assert_eq!(a.ops, b.ops, "seeded p= schedules replay exactly");
+    assert_eq!(a.runtime_mean_s, b.runtime_mean_s);
+    assert!(
+        a.ops.total() >= base.ops.total(),
+        "probabilistic faults can only add retry ops"
+    );
+    assert!(
+        a.ops.bytes_written >= base.ops.bytes_written,
+        "503-class re-sends never shrink wire bytes"
+    );
+}
+
 /// Whole-cell determinism: a full Teragen cell (driver, committer,
 /// connector, store) reproduces identical op counts and virtual runtime
 /// run over run — the cell-level half of the accounting snapshot.
