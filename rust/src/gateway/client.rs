@@ -34,9 +34,16 @@ pub struct HttpBackend {
     addr: String,
     /// Optional container namespace: `c` travels as `{ns}.{c}`.
     ns: Option<String>,
-    /// Idle keep-alive connections.
+    /// Idle keep-alive connections, at most [`MAX_POOLED_IDLE`].
     pool: Mutex<Vec<TcpStream>>,
 }
+
+/// Cap on idle pooled connections per backend. Under a concurrency
+/// burst every in-flight request holds its own connection (unbounded by
+/// design — the server is thread-per-connection), but once the burst
+/// drains only this many sockets are kept; the rest close on drop
+/// instead of accumulating as idle fds for the life of the backend.
+pub const MAX_POOLED_IDLE: usize = 8;
 
 fn io_err(ctx: &str, e: std::io::Error) -> BackendError {
     BackendError::Io(format!("http backend {ctx}: {e}"))
@@ -165,9 +172,19 @@ impl HttpBackend {
                 && error.to_string() == STALE_CONNECTION,
             error,
         })?;
-        // The whole body was consumed; the connection is reusable.
-        self.pool.lock().unwrap().push(reader.into_inner());
+        // The whole body was consumed; the connection is reusable —
+        // but only up to the idle cap: beyond it, dropping the stream
+        // closes the socket and the pool stops growing.
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < MAX_POOLED_IDLE {
+            pool.push(reader.into_inner());
+        }
         Ok(resp)
+    }
+
+    /// Current idle pooled connections (test/diagnostic hook).
+    pub fn pooled_idle(&self) -> usize {
+        self.pool.lock().unwrap().len()
     }
 
     /// Rebuild the exact [`BackendError`] from a gateway error response,
@@ -522,5 +539,54 @@ impl HttpBackend {
             .and_then(|resp| String::from_utf8(resp.body).ok())
             .and_then(|s| s.trim().parse().ok())
             .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::GatewayServer;
+    use crate::objectstore::backend::ShardedMemBackend;
+
+    #[test]
+    fn idle_pool_is_capped_and_recovers_after_a_burst() {
+        let server = GatewayServer::bind("127.0.0.1:0", Arc::new(ShardedMemBackend::new(4)))
+            .expect("bind ephemeral");
+        let handle = server.spawn();
+        let b = Arc::new(HttpBackend::connect(&handle.addr().to_string(), None).unwrap());
+        b.create_container("res").unwrap();
+        // Exhaust: a burst far wider than the cap, every thread holding
+        // a connection at once (a barrier forces the overlap, so the
+        // pool is empty mid-burst and each thread opens its own socket).
+        let n = 4 * MAX_POOLED_IDLE;
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        let threads: Vec<_> = (0..n)
+            .map(|i| {
+                let b = b.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let key = format!("k/{i}");
+                    let obj = Object::new(vec![i as u8; 64], Metadata::new(), SimInstant::EPOCH);
+                    b.put("res", &key, obj).unwrap();
+                    assert_eq!(b.get("res", &key).unwrap().size(), 64);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // Release: the burst drained; the pool kept at most the cap.
+        assert!(
+            b.pooled_idle() <= MAX_POOLED_IDLE,
+            "pool grew to {} (> cap {MAX_POOLED_IDLE})",
+            b.pooled_idle()
+        );
+        // Recover: the backend still serves requests afterwards.
+        assert_eq!(b.live_count("res"), n);
+        b.put("res", "after", Object::new(b"x".to_vec(), Metadata::new(), SimInstant::EPOCH))
+            .unwrap();
+        assert_eq!(&**b.get("res", "after").unwrap().data, b"x");
+        assert!(b.pooled_idle() <= MAX_POOLED_IDLE);
     }
 }

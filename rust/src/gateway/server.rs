@@ -18,6 +18,7 @@
 //! | `POST /v1-upload/{id}?min-part-size=N` | `complete_multipart` (200, assembled body + target headers) |
 //! | `DELETE /v1-upload/{id}` | `abort_multipart` (204) |
 //! | `GET /v1-upload` | `multipart_in_flight` (200, body: count) |
+//! | `GET`/`HEAD /healthz` | readiness probe (200 `ok`; no backend call) |
 //!
 //! Containers and keys travel percent-encoded ([`super::encoding`]);
 //! object metadata rides as `x-object-meta-<pct-key>: <pct-value>`
@@ -239,6 +240,16 @@ fn parse_range(spec: &str) -> Option<(u64, u64)> {
 fn route(backend: &dyn Backend, req: &mut Request) -> Response {
     let path = std::mem::take(&mut req.path);
     let trimmed = path.trim_start_matches('/');
+    if trimmed == "healthz" {
+        // Liveness/readiness: answering at all proves the accept loop,
+        // connection thread and router are up. Load drivers poll this
+        // instead of sleeping after spawn.
+        return match req.method.as_str() {
+            "GET" => Response::new(200).with_body(b"ok".to_vec()),
+            "HEAD" => Response::new(200),
+            m => bad_request(&format!("method {m} not valid for /healthz")),
+        };
+    }
     if let Some(rest) = trimmed.strip_prefix("v1-upload") {
         return route_upload(backend, req, rest.trim_start_matches('/'));
     }
@@ -561,6 +572,27 @@ mod tests {
         a.upload_part(id, 1, b"x".to_vec()).unwrap();
         let asm = a.complete_multipart(id, 0).unwrap();
         assert_eq!(asm.container, "res");
+    }
+
+    #[test]
+    fn healthz_answers_without_touching_the_backend() {
+        use std::io::{Read, Write};
+        let (handle, _b) = gateway();
+        for req in ["GET /healthz HTTP/1.1\r\n\r\n", "HEAD /healthz HTTP/1.1\r\n\r\n"] {
+            let mut s = TcpStream::connect(handle.addr()).unwrap();
+            s.write_all(req.as_bytes()).unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut resp = String::new();
+            let _ = s.read_to_string(&mut resp);
+            assert!(resp.starts_with("HTTP/1.1 200"), "{req} got: {resp}");
+        }
+        // Other methods are clean 400s.
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"DELETE /healthz HTTP/1.1\r\n\r\n").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut resp = String::new();
+        let _ = s.read_to_string(&mut resp);
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
     }
 
     #[test]

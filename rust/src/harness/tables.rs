@@ -336,6 +336,68 @@ impl Sweep {
     }
 }
 
+// ---- stress load-plane tables ---------------------------------------------
+//
+// Unlike every table above, these report *measured wall-clock* numbers
+// from the `stress` load plane, not virtual-clock simulation — the text
+// rendering of what BENCH_6.json serializes.
+
+/// Per-op-class latency table for one stress run.
+pub fn render_stress_latency(run: &crate::loadgen::StressRun) -> String {
+    let mut t = Table::new(
+        &format!(
+            "stress — {} clients, {} shards, payload ≤{} B, seed {} ({:.2}s, {:.0} ops/s)",
+            run.clients,
+            match run.shards {
+                Some(n) => n.to_string(),
+                None => "target".to_string(),
+            },
+            run.payload,
+            run.seed,
+            run.elapsed_s,
+            run.ops_per_sec,
+        ),
+        &["op class", "count", "mean µs", "p50 µs", "p95 µs", "p99 µs", "max µs"],
+    );
+    for c in crate::loadgen::OpClass::ALL {
+        let s = run.summary_for(c);
+        t.row(vec![
+            c.name().to_string(),
+            s.count.to_string(),
+            format!("{:.1}", s.mean_us),
+            format!("{:.1}", s.p50_us),
+            format!("{:.1}", s.p95_us),
+            format!("{:.1}", s.p99_us),
+            format!("{:.1}", s.max_us),
+        ]);
+    }
+    t.render()
+}
+
+/// The clients × shards × payload throughput matrix.
+pub fn render_stress_matrix(cells: &[crate::loadgen::MatrixCell]) -> String {
+    let mut t = Table::new(
+        "stress matrix — clients × shards × payload",
+        &["clients", "shards", "payload B", "ops", "ops/s", "write MiB/s", "put p95 µs", "violations"],
+    );
+    for m in cells {
+        t.row(vec![
+            m.clients.to_string(),
+            match m.shards {
+                Some(n) => n.to_string(),
+                None => "target".to_string(),
+            },
+            m.payload.to_string(),
+            m.total_ops.to_string(),
+            format!("{:.0}", m.ops_per_sec),
+            format!("{:.2}", m.write_mib_per_sec),
+            format!("{:.1}", m.put_p95_us),
+            m.violation_count.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 /// Paper Table 8 row for quick reference in benches.
 pub fn table8_paper_note() -> &'static str {
     "paper: Teragen cost ratios — H-S Base x8.23, S3a Base x27.82, \
@@ -378,6 +440,31 @@ mod tests {
         assert!(t8.contains("x"));
         // Fault-free: no stranded-debris addendum, stock output.
         assert!(!t8.contains("stranded"), "{t8}");
+    }
+
+    #[test]
+    fn stress_tables_render() {
+        use crate::loadgen::{aggregate, MatrixCell, OpClass, WorkerReport, OP_CLASSES};
+        use crate::metrics::Histogram;
+        let mut r = WorkerReport {
+            executed: [0; OP_CLASSES],
+            hists: vec![Histogram::new(); OP_CLASSES],
+            violations: Vec::new(),
+            violation_count: 0,
+            upload_ids: Vec::new(),
+            bytes_written: 4096,
+            bytes_read: 0,
+        };
+        r.executed[OpClass::Put.index()] = 5;
+        r.hists[OpClass::Put.index()].record_nanos(10_000);
+        let run = aggregate(vec![r], 1, Some(4), 1024, 7, 1.0);
+        let lat = render_stress_latency(&run);
+        assert!(lat.contains("put"), "{lat}");
+        assert!(lat.contains("p95"), "{lat}");
+        assert!(lat.contains("seed 7"), "{lat}");
+        let mat = render_stress_matrix(&[MatrixCell::of(&run)]);
+        assert!(mat.contains("ops/s"), "{mat}");
+        assert!(mat.contains("1024"), "{mat}");
     }
 
     #[test]

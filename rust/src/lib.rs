@@ -64,6 +64,13 @@
 //!   kernels (`artifacts/*.hlo.txt`) and the pure-Rust fallback.
 //! * [`harness`] — the benchmark harness regenerating every table and
 //!   figure from the paper's evaluation section.
+//! * [`loadgen`] — the real-concurrency load plane (`stocator-sim
+//!   stress`): N OS threads, each with its own [`gateway::HttpBackend`],
+//!   hammer a served store with a seeded mixed workload, verify
+//!   correctness inline (byte/ETag round-trips, multipart-id uniqueness,
+//!   listing completeness at quiesce), record measured wall-clock
+//!   latency into per-worker [`metrics::Histogram`]s, and serialize
+//!   every run to `BENCH_6.json` — the measured-perf trajectory.
 //!
 //! The paper's contribution — the Stocator commit protocol — lives in
 //! [`connectors::stocator`]; everything else is the substrate it needs.
@@ -82,3 +89,4 @@ pub mod workloads;
 pub mod runtime;
 pub mod metrics;
 pub mod harness;
+pub mod loadgen;

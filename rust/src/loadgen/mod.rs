@@ -1,0 +1,350 @@
+//! Real-concurrency load plane: N OS threads hammering one gateway.
+//!
+//! Everything else in the repo measures the simulator under a *virtual*
+//! clock; this module is the measured-wall-clock counterpart the paper's
+//! evaluation actually ran: real threads, real sockets, real latency.
+//! `stocator-sim stress` spawns `--clients` workers, each owning its own
+//! [`crate::gateway::HttpBackend`] against a served store — an
+//! in-process [`GatewayServer`] over a [`ShardedMemBackend`] by default,
+//! or any `--target HOST:PORT` (e.g. a `stocator-sim serve` in another
+//! process) — and drives the seeded mixed workload of
+//! [`workload::run_worker`]: PUT / GET / ranged GET / list / delete plus
+//! full multipart lifecycles and deliberate aborts, drawn from
+//! per-thread PCG32 streams derived from `--seed`.
+//!
+//! Design rules, in order:
+//!
+//! 1. **Measurement must not serialize the workers.** Every worker
+//!    records into a private [`crate::metrics::Histogram`] per op class;
+//!    the harness merges after join ([`report::aggregate`]). No shared
+//!    recorder, no lock on the hot path.
+//! 2. **Correctness is checked while the hammer swings**, not after:
+//!    byte/ETag round-trips, multipart-id uniqueness across ALL threads,
+//!    and exact listing completeness at quiesce. A run that goes fast by
+//!    being wrong reports `violations > 0` and exits non-zero.
+//! 3. **Reproducibility**: with a fixed op budget the executed op mix is
+//!    a pure function of `(seed, worker id)`.
+//!
+//! Readiness is polled on the gateway's `/healthz` ([`wait_healthy`]) —
+//! never a sleep. Every run serializes to `BENCH_6.json`
+//! ([`report::StressReport`]), establishing the `BENCH_<n>.json`
+//! perf-trajectory convention: one measured-performance artifact per PR,
+//! diffable across the repo's history.
+
+pub mod report;
+pub mod workload;
+
+pub use report::{aggregate, MatrixCell, StressReport, StressRun, BENCH_FILE};
+pub use workload::{run_worker, OpClass, WorkerConfig, WorkerReport, OP_CLASSES};
+
+use crate::gateway::http::{read_response, write_request, Headers};
+use crate::gateway::{unique_namespace, GatewayHandle, GatewayServer};
+use crate::metrics::Histogram;
+use crate::objectstore::backend::ShardedMemBackend;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// How long [`run_stress`] waits for a gateway to answer `/healthz`.
+const HEALTHY_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Fixed per-client op budget for matrix sweep cells: small enough that
+/// a full sweep stays interactive, large enough to exercise every op
+/// class.
+const MATRIX_OPS_PER_CLIENT: u64 = 64;
+
+/// Everything `stocator-sim stress` configures.
+#[derive(Debug, Clone)]
+pub struct StressConfig {
+    /// Number of worker threads (each with its own connection pool).
+    pub clients: usize,
+    /// Shard count for the in-process backend (ignored with `target`).
+    pub shards: usize,
+    /// External gateway `HOST:PORT`; `None` = spawn in-process.
+    pub target: Option<String>,
+    /// Maximum payload size in bytes.
+    pub payload: usize,
+    pub seed: u64,
+    /// Wall-clock budget per worker (duration mode).
+    pub duration: Option<Duration>,
+    /// Fixed op budget per worker (deterministic mode; wins over
+    /// `duration`).
+    pub ops_per_client: Option<u64>,
+    /// Run the clients × shards × payload sweep after the main hammer.
+    pub matrix: bool,
+    /// Where to write the BENCH JSON; `None` = don't write.
+    pub bench_path: Option<PathBuf>,
+}
+
+impl Default for StressConfig {
+    fn default() -> Self {
+        Self {
+            clients: 8,
+            shards: 16,
+            target: None,
+            payload: 16 * 1024,
+            seed: 7,
+            duration: Some(Duration::from_secs(2)),
+            ops_per_client: None,
+            matrix: true,
+            bench_path: Some(PathBuf::from(BENCH_FILE)),
+        }
+    }
+}
+
+/// One `GET /healthz` probe; true iff the gateway answered 200.
+fn probe_healthz(addr: &str) -> bool {
+    let Ok(stream) = TcpStream::connect(addr) else {
+        return false;
+    };
+    let Ok(mut write_half) = stream.try_clone() else {
+        return false;
+    };
+    if write_request(&mut write_half, "GET", "/healthz", &Headers::new(), b"").is_err() {
+        return false;
+    }
+    let mut reader = BufReader::new(stream);
+    matches!(read_response(&mut reader), Ok(resp) if resp.status == 200)
+}
+
+/// Poll `/healthz` until the gateway answers 200 or `timeout` passes —
+/// readiness without a blind sleep.
+pub fn wait_healthy(addr: &str, timeout: Duration) -> Result<(), String> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if probe_healthz(addr) {
+            return Ok(());
+        }
+        if Instant::now() >= deadline {
+            return Err(format!(
+                "gateway at {addr} did not answer /healthz within {timeout:?}"
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Spawn an in-process gateway over a fresh sharded in-memory store.
+fn serve_in_process(shards: usize) -> Result<(String, GatewayHandle), String> {
+    let backend = Arc::new(ShardedMemBackend::new(shards));
+    let server =
+        GatewayServer::bind("127.0.0.1:0", backend).map_err(|e| format!("bind gateway: {e}"))?;
+    let handle = server.spawn();
+    Ok((handle.addr().to_string(), handle))
+}
+
+/// One hammer run: `clients` workers against the gateway at `addr`,
+/// started together behind a [`Barrier`] so the throughput clock only
+/// measures concurrent execution. Returns the merged, verified run.
+fn hammer(
+    addr: &str,
+    clients: usize,
+    shards: Option<usize>,
+    payload: usize,
+    seed: u64,
+    ops: Option<u64>,
+    duration: Option<Duration>,
+) -> StressRun {
+    // One namespace per run: repeated runs (and sweep cells) against a
+    // long-lived served store never collide on container creation.
+    let ns = Some(unique_namespace());
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let handles: Vec<_> = (0..clients)
+        .map(|id| {
+            let barrier = barrier.clone();
+            let addr = addr.to_string();
+            let ns = ns.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                // Duration mode starts each worker's clock at the
+                // barrier, not at spawn.
+                let deadline = duration.map(|d| Instant::now() + d);
+                run_worker(WorkerConfig {
+                    id,
+                    addr,
+                    ns,
+                    seed,
+                    payload,
+                    ops,
+                    deadline,
+                })
+            })
+        })
+        .collect();
+    barrier.wait();
+    let t0 = Instant::now();
+    let reports: Vec<WorkerReport> = handles
+        .into_iter()
+        .enumerate()
+        .map(|(id, h)| {
+            h.join().unwrap_or_else(|_| WorkerReport {
+                executed: [0; OP_CLASSES],
+                hists: vec![Histogram::new(); OP_CLASSES],
+                violations: vec![format!("worker {id}: panicked")],
+                violation_count: 1,
+                upload_ids: Vec::new(),
+                bytes_written: 0,
+                bytes_read: 0,
+            })
+        })
+        .collect();
+    let elapsed = t0.elapsed().as_secs_f64();
+    aggregate(reports, clients, shards, payload, seed, elapsed)
+}
+
+/// Deduplicated, ascending sweep axis.
+fn axis(values: Vec<usize>) -> Vec<usize> {
+    let mut v: Vec<usize> = values.into_iter().filter(|&x| x > 0).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// The clients × shards × payload sweep. Each shard count gets one fresh
+/// in-process gateway reused across its clients × payload cells (each
+/// cell runs in its own namespace); an external target contributes a
+/// single `shards = as-served` plane. Cells run a fixed op budget so the
+/// matrix is comparable across machines.
+fn sweep_matrix(cfg: &StressConfig) -> Result<Vec<MatrixCell>, String> {
+    let clients_axis = axis(vec![1, cfg.clients / 2, cfg.clients]);
+    let payload_axis = axis(vec![
+        (cfg.payload / 16).max(64),
+        (cfg.payload / 4).max(64),
+        cfg.payload,
+    ]);
+    let shard_axis: Vec<Option<usize>> = match cfg.target {
+        Some(_) => vec![None],
+        None => axis(vec![1, 4, cfg.shards]).into_iter().map(Some).collect(),
+    };
+    let mut cells = Vec::new();
+    let mut cell_idx = 0u64;
+    for &shards in &shard_axis {
+        let (addr, handle) = match (cfg.target.as_deref(), shards) {
+            (Some(t), _) => (t.to_string(), None),
+            (None, Some(n)) => {
+                let (a, h) = serve_in_process(n)?;
+                (a, Some(h))
+            }
+            (None, None) => unreachable!("in-process shard axis is always Some"),
+        };
+        wait_healthy(&addr, HEALTHY_TIMEOUT)?;
+        for &clients in &clients_axis {
+            for &payload in &payload_axis {
+                cell_idx += 1;
+                // Distinct seed per cell; still derived from --seed.
+                let seed = cfg.seed.wrapping_add(cell_idx.wrapping_mul(0x9E37_79B9));
+                let run = hammer(
+                    &addr,
+                    clients,
+                    shards,
+                    payload,
+                    seed,
+                    Some(MATRIX_OPS_PER_CLIENT),
+                    None,
+                );
+                cells.push(MatrixCell::of(&run));
+            }
+        }
+        if let Some(h) = handle {
+            h.shutdown();
+        }
+    }
+    Ok(cells)
+}
+
+/// Run the whole stress deliverable: the main hammer, the optional
+/// matrix sweep, and the BENCH JSON. Errors are infrastructure failures
+/// (bind, readiness, file write); correctness *violations* come back in
+/// the report for the caller to surface and turn into an exit code.
+pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
+    let ops = cfg.ops_per_client;
+    // Op budget wins; otherwise duration, defaulting to 2s.
+    let duration = if ops.is_some() {
+        None
+    } else {
+        Some(cfg.duration.unwrap_or(Duration::from_secs(2)))
+    };
+    let (run, target_desc) = match cfg.target.as_deref() {
+        Some(addr) => {
+            wait_healthy(addr, HEALTHY_TIMEOUT)?;
+            let run = hammer(addr, cfg.clients, None, cfg.payload, cfg.seed, ops, duration);
+            (run, addr.to_string())
+        }
+        None => {
+            let (addr, handle) = serve_in_process(cfg.shards)?;
+            wait_healthy(&addr, HEALTHY_TIMEOUT)?;
+            let run = hammer(
+                &addr,
+                cfg.clients,
+                Some(cfg.shards),
+                cfg.payload,
+                cfg.seed,
+                ops,
+                duration,
+            );
+            handle.shutdown();
+            (run, "in-process".to_string())
+        }
+    };
+    let matrix = if cfg.matrix {
+        sweep_matrix(cfg)?
+    } else {
+        Vec::new()
+    };
+    let report = StressReport {
+        target: target_desc,
+        run,
+        matrix,
+    };
+    if let Some(path) = &cfg.bench_path {
+        report
+            .to_json()
+            .write_file(path)
+            .map_err(|e| format!("write {}: {e}", path.display()))?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_dedups_sorts_and_drops_zero() {
+        assert_eq!(axis(vec![4, 1, 4, 0]), vec![1, 4]);
+        assert_eq!(axis(vec![8, 8, 8]), vec![8]);
+    }
+
+    #[test]
+    fn wait_healthy_succeeds_on_live_gateway_and_fails_fast_on_dead() {
+        let (addr, handle) = serve_in_process(2).unwrap();
+        wait_healthy(&addr, Duration::from_secs(5)).expect("live gateway is healthy");
+        handle.shutdown();
+        // A port nothing listens on: bind-then-drop to find one.
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(wait_healthy(&dead, Duration::from_millis(80)).is_err());
+    }
+
+    #[test]
+    fn minimal_stress_run_is_clean() {
+        let cfg = StressConfig {
+            clients: 2,
+            shards: 2,
+            payload: 512,
+            ops_per_client: Some(12),
+            matrix: false,
+            bench_path: None,
+            ..StressConfig::default()
+        };
+        let report = run_stress(&cfg).expect("stress run");
+        assert_eq!(report.run.violation_count, 0, "{:?}", report.run.violations);
+        assert_eq!(report.run.total_ops, 24);
+        assert_eq!(report.target, "in-process");
+        assert!(report.matrix.is_empty());
+    }
+}

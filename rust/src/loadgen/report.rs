@@ -1,0 +1,312 @@
+//! Aggregation and serialization for the stress load plane: merge the
+//! worker-private recorders into per-op-class percentile summaries, fold
+//! the sweep cells into the clients × shards × payload throughput
+//! matrix, and serialize the whole run to `BENCH_<n>.json` — the
+//! perf-trajectory convention (one benchmark JSON per PR, diffable
+//! across sessions).
+
+use super::workload::{OpClass, WorkerReport, OP_CLASSES};
+use crate::metrics::{Histogram, LatencySummary};
+use crate::util::json::Json;
+
+/// The BENCH file this PR's load plane writes by default.
+pub const BENCH_FILE: &str = "BENCH_6.json";
+
+/// One aggregated hammer run: N clients against one gateway.
+#[derive(Debug)]
+pub struct StressRun {
+    pub clients: usize,
+    /// Backend shard count for an in-process gateway; `None` when the
+    /// run drove an external `--target` (whose sharding we can't see).
+    pub shards: Option<usize>,
+    /// Max payload bytes.
+    pub payload: usize,
+    pub seed: u64,
+    /// Measured wall-clock from the start barrier to the last join.
+    pub elapsed_s: f64,
+    /// Executed ops per [`OpClass::index`].
+    pub executed: [u64; OP_CLASSES],
+    /// Merged per-class latency summaries, in [`OpClass::ALL`] order.
+    pub summaries: [LatencySummary; OP_CLASSES],
+    pub total_ops: u64,
+    pub ops_per_sec: f64,
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    /// Sample messages (capped); `violation_count` is exact.
+    pub violations: Vec<String>,
+    pub violation_count: u64,
+    pub upload_ids_issued: u64,
+    pub upload_ids_unique: u64,
+}
+
+/// Cap on violation sample messages carried in a run / the BENCH file.
+const MAX_SAMPLES: usize = 32;
+
+/// Fold joined worker reports into one [`StressRun`]. The multipart-id
+/// uniqueness invariant is checked here, across ALL workers: the gateway
+/// must never issue the same upload id to two racing initiates.
+pub fn aggregate(
+    reports: Vec<WorkerReport>,
+    clients: usize,
+    shards: Option<usize>,
+    payload: usize,
+    seed: u64,
+    elapsed_s: f64,
+) -> StressRun {
+    let mut executed = [0u64; OP_CLASSES];
+    let mut hists = vec![Histogram::new(); OP_CLASSES];
+    let mut violations = Vec::new();
+    let mut violation_count = 0u64;
+    let mut ids: Vec<u64> = Vec::new();
+    let mut bytes_written = 0u64;
+    let mut bytes_read = 0u64;
+    for r in reports {
+        for i in 0..OP_CLASSES {
+            executed[i] += r.executed[i];
+            hists[i].merge(&r.hists[i]);
+        }
+        violation_count += r.violation_count;
+        for v in r.violations {
+            if violations.len() < MAX_SAMPLES {
+                violations.push(v);
+            }
+        }
+        ids.extend(r.upload_ids);
+        bytes_written += r.bytes_written;
+        bytes_read += r.bytes_read;
+    }
+    let issued = ids.len() as u64;
+    ids.sort_unstable();
+    ids.dedup();
+    let unique = ids.len() as u64;
+    if unique != issued {
+        violation_count += issued - unique;
+        if violations.len() < MAX_SAMPLES {
+            violations.push(format!(
+                "multipart-id collision: {issued} issued, {unique} unique"
+            ));
+        }
+    }
+    let total_ops: u64 = executed.iter().sum();
+    let summaries = std::array::from_fn(|i| hists[i].summary());
+    StressRun {
+        clients,
+        shards,
+        payload,
+        seed,
+        elapsed_s,
+        executed,
+        summaries,
+        total_ops,
+        ops_per_sec: if elapsed_s > 0.0 {
+            total_ops as f64 / elapsed_s
+        } else {
+            0.0
+        },
+        bytes_written,
+        bytes_read,
+        violations,
+        violation_count,
+        upload_ids_issued: issued,
+        upload_ids_unique: unique,
+    }
+}
+
+impl StressRun {
+    pub fn summary_for(&self, class: OpClass) -> &LatencySummary {
+        &self.summaries[class.index()]
+    }
+
+    /// PUT-side goodput in MiB/s of measured wall-clock.
+    pub fn write_mib_per_sec(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.bytes_written as f64 / (1024.0 * 1024.0) / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One cell of the clients × shards × payload throughput sweep.
+#[derive(Debug, Clone)]
+pub struct MatrixCell {
+    pub clients: usize,
+    /// `None` = external target (sharding not ours to vary).
+    pub shards: Option<usize>,
+    pub payload: usize,
+    pub total_ops: u64,
+    pub elapsed_s: f64,
+    pub ops_per_sec: f64,
+    pub write_mib_per_sec: f64,
+    pub put_p95_us: f64,
+    pub violation_count: u64,
+}
+
+impl MatrixCell {
+    pub fn of(run: &StressRun) -> MatrixCell {
+        MatrixCell {
+            clients: run.clients,
+            shards: run.shards,
+            payload: run.payload,
+            total_ops: run.total_ops,
+            elapsed_s: run.elapsed_s,
+            ops_per_sec: run.ops_per_sec,
+            write_mib_per_sec: run.write_mib_per_sec(),
+            put_p95_us: run.summary_for(OpClass::Put).p95_us,
+            violation_count: run.violation_count,
+        }
+    }
+}
+
+/// The whole deliverable: the main hammer run plus the sweep matrix.
+#[derive(Debug)]
+pub struct StressReport {
+    /// `"in-process"` or the `--target` address.
+    pub target: String,
+    pub run: StressRun,
+    pub matrix: Vec<MatrixCell>,
+}
+
+fn shards_json(shards: Option<usize>) -> Json {
+    match shards {
+        Some(n) => Json::from(n),
+        None => Json::Str("target".into()),
+    }
+}
+
+fn summary_json(s: &LatencySummary) -> Json {
+    Json::obj()
+        .set("count", s.count)
+        .set("mean_us", s.mean_us)
+        .set("p50_us", s.p50_us)
+        .set("p95_us", s.p95_us)
+        .set("p99_us", s.p99_us)
+        .set("max_us", s.max_us)
+}
+
+impl StressReport {
+    /// Serialize for `BENCH_6.json`: per-op-class wall-clock percentiles
+    /// plus the clients × shards × payload throughput matrix.
+    pub fn to_json(&self) -> Json {
+        let run = &self.run;
+        let mut classes = Json::obj();
+        for c in OpClass::ALL {
+            classes = classes.set(c.name(), summary_json(run.summary_for(c)));
+        }
+        let matrix: Vec<Json> = self
+            .matrix
+            .iter()
+            .map(|m| {
+                Json::obj()
+                    .set("clients", m.clients)
+                    .set("shards", shards_json(m.shards))
+                    .set("payload_bytes", m.payload)
+                    .set("total_ops", m.total_ops)
+                    .set("elapsed_s", m.elapsed_s)
+                    .set("ops_per_sec", m.ops_per_sec)
+                    .set("write_mib_per_sec", m.write_mib_per_sec)
+                    .set("put_p95_us", m.put_p95_us)
+                    .set("violations", m.violation_count)
+            })
+            .collect();
+        Json::obj()
+            .set("bench", "stress-loadplane")
+            .set("issue", 6u64)
+            .set("target", self.target.as_str())
+            .set("seed", run.seed)
+            .set("clients", run.clients)
+            .set("shards", shards_json(run.shards))
+            .set("payload_bytes", run.payload)
+            .set("elapsed_s", run.elapsed_s)
+            .set("total_ops", run.total_ops)
+            .set("ops_per_sec", run.ops_per_sec)
+            .set("bytes_written", run.bytes_written)
+            .set("bytes_read", run.bytes_read)
+            .set("write_mib_per_sec", run.write_mib_per_sec())
+            .set(
+                "multipart_ids",
+                Json::obj()
+                    .set("issued", run.upload_ids_issued)
+                    .set("unique", run.upload_ids_unique),
+            )
+            .set("violations", run.violation_count)
+            .set(
+                "violation_samples",
+                Json::Arr(run.violations.iter().map(|v| Json::from(v.as_str())).collect()),
+            )
+            .set("op_classes", classes)
+            .set("matrix", Json::Arr(matrix))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_report(ids: Vec<u64>) -> WorkerReport {
+        let mut r = WorkerReport {
+            executed: [0; OP_CLASSES],
+            hists: vec![Histogram::new(); OP_CLASSES],
+            violations: Vec::new(),
+            violation_count: 0,
+            upload_ids: ids,
+            bytes_written: 1024,
+            bytes_read: 512,
+        };
+        r.executed[OpClass::Put.index()] = 10;
+        r.hists[OpClass::Put.index()].record_nanos(5_000);
+        r
+    }
+
+    #[test]
+    fn aggregate_merges_and_checks_id_uniqueness() {
+        let run = aggregate(
+            vec![fake_report(vec![1, 2]), fake_report(vec![3, 4])],
+            2,
+            Some(4),
+            1024,
+            7,
+            2.0,
+        );
+        assert_eq!(run.executed[OpClass::Put.index()], 20);
+        assert_eq!(run.total_ops, 20);
+        assert_eq!(run.ops_per_sec, 10.0);
+        assert_eq!(run.bytes_written, 2048);
+        assert_eq!(run.violation_count, 0);
+        assert_eq!(run.upload_ids_issued, 4);
+        assert_eq!(run.upload_ids_unique, 4);
+        assert_eq!(run.summary_for(OpClass::Put).count, 20);
+        // A colliding id across workers is a violation.
+        let bad = aggregate(
+            vec![fake_report(vec![5]), fake_report(vec![5])],
+            2,
+            Some(4),
+            1024,
+            7,
+            1.0,
+        );
+        assert_eq!(bad.violation_count, 1);
+        assert!(bad.violations.iter().any(|v| v.contains("collision")));
+    }
+
+    #[test]
+    fn bench_json_carries_percentiles_and_matrix() {
+        let run = aggregate(vec![fake_report(vec![1])], 1, Some(2), 512, 9, 1.0);
+        let report = StressReport {
+            target: "in-process".into(),
+            matrix: vec![MatrixCell::of(&run)],
+            run,
+        };
+        let j = report.to_json();
+        let text = j.to_pretty();
+        for field in [
+            "\"bench\"", "\"op_classes\"", "\"put\"", "\"p50_us\"", "\"p95_us\"",
+            "\"p99_us\"", "\"matrix\"", "\"ops_per_sec\"", "\"payload_bytes\"",
+            "\"multipart_ids\"",
+        ] {
+            assert!(text.contains(field), "missing {field} in {text}");
+        }
+        assert_eq!(j.get("violations").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j.get("seed").and_then(Json::as_f64), Some(9.0));
+    }
+}

@@ -1,0 +1,587 @@
+//! One load-generator worker: a seeded mixed workload against a gateway,
+//! verifying correctness as it goes.
+//!
+//! Each worker owns its own [`HttpBackend`] (its own socket pool), its
+//! own PCG32 stream derived from the run seed, and its own container on
+//! the served store — so workers never contend above the gateway, and
+//! every cross-thread effect they *do* observe (multipart-id allocation,
+//! backend sharding) is the server's concurrency under test, not the
+//! client's. With a fixed op budget the whole per-worker execution is a
+//! pure function of `(seed, worker id)`: op-mix counts are reproducible
+//! across runs, which `rust/tests/test_loadgen.rs` pins.
+//!
+//! Verification is inline: every GET round-trips exact bytes and the
+//! content ETag, every ranged GET matches the expected slice and full
+//! stat size, every listing entry must name a key the worker owns, a
+//! completed multipart must assemble to the concatenated parts, an
+//! aborted upload must reject further parts, and at quiesce a full
+//! paginated listing must equal the worker's live-key set exactly.
+
+use crate::gateway::HttpBackend;
+use crate::metrics::Histogram;
+use crate::objectstore::backend::{Backend, BackendError};
+use crate::objectstore::object::{sampled_etag, Metadata, Object};
+use crate::simclock::SimInstant;
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// The measured operation classes. `Multipart` times the whole
+/// initiate→parts→complete→install lifecycle as one sample; `Abort`
+/// times a deliberate initiate→part→abort.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Put,
+    Get,
+    RangedGet,
+    List,
+    Delete,
+    Multipart,
+    Abort,
+}
+
+/// Number of [`OpClass`] variants.
+pub const OP_CLASSES: usize = 7;
+
+impl OpClass {
+    pub const ALL: [OpClass; OP_CLASSES] = [
+        OpClass::Put,
+        OpClass::Get,
+        OpClass::RangedGet,
+        OpClass::List,
+        OpClass::Delete,
+        OpClass::Multipart,
+        OpClass::Abort,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Put => "put",
+            OpClass::Get => "get",
+            OpClass::RangedGet => "ranged-get",
+            OpClass::List => "list",
+            OpClass::Delete => "delete",
+            OpClass::Multipart => "multipart",
+            OpClass::Abort => "abort",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            OpClass::Put => 0,
+            OpClass::Get => 1,
+            OpClass::RangedGet => 2,
+            OpClass::List => 3,
+            OpClass::Delete => 4,
+            OpClass::Multipart => 5,
+            OpClass::Abort => 6,
+        }
+    }
+}
+
+/// Everything one worker needs to run.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub id: usize,
+    /// Gateway address (`HOST:PORT`).
+    pub addr: String,
+    /// Run-wide container namespace on the served store.
+    pub ns: Option<String>,
+    /// The run seed; the worker derives its private stream from it.
+    pub seed: u64,
+    /// Maximum payload size in bytes (sizes draw uniformly from
+    /// `1..=payload`).
+    pub payload: usize,
+    /// Fixed op budget (deterministic mode); `None` = run to `deadline`.
+    pub ops: Option<u64>,
+    /// Wall-clock stop time for duration mode.
+    pub deadline: Option<Instant>,
+}
+
+/// What a worker brings home. Plain data, merged by the harness.
+#[derive(Debug)]
+pub struct WorkerReport {
+    /// Executed-op counts per [`OpClass::index`].
+    pub executed: [u64; OP_CLASSES],
+    /// Per-class wall-clock histograms (worker-private; merged after join).
+    pub hists: Vec<Histogram>,
+    /// Correctness violations (messages capped; `violation_count` exact).
+    pub violations: Vec<String>,
+    pub violation_count: u64,
+    /// Every multipart upload id this worker was issued (completed AND
+    /// aborted) — the harness checks global uniqueness.
+    pub upload_ids: Vec<u64>,
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+}
+
+impl WorkerReport {
+    fn new() -> Self {
+        Self {
+            executed: [0; OP_CLASSES],
+            hists: vec![Histogram::new(); OP_CLASSES],
+            violations: Vec::new(),
+            violation_count: 0,
+            upload_ids: Vec::new(),
+            bytes_written: 0,
+            bytes_read: 0,
+        }
+    }
+}
+
+/// Compact descriptor of an object the worker wrote: enough to
+/// regenerate the exact expected bytes without holding the payloads of
+/// every live object in memory.
+#[derive(Debug, Clone, Copy)]
+struct Expected {
+    size: usize,
+    fill: u8,
+    id: u64,
+}
+
+impl Expected {
+    /// The exact bytes: the object id little-endian in the first 8 bytes
+    /// (truncated for tiny objects), `fill` everywhere else.
+    fn materialize(&self) -> Vec<u8> {
+        let mut v = vec![self.fill; self.size];
+        for (i, b) in self.id.to_le_bytes().iter().enumerate().take(self.size) {
+            v[i] = *b;
+        }
+        v
+    }
+
+    fn etag(&self) -> u64 {
+        sampled_etag(&self.materialize())
+    }
+}
+
+const MAX_VIOLATION_MESSAGES: usize = 16;
+
+struct Worker {
+    cfg: WorkerConfig,
+    backend: HttpBackend,
+    container: String,
+    rng: Pcg32,
+    /// Live keys this worker owns, with their expected content.
+    live: BTreeMap<String, Expected>,
+    next_id: u64,
+    report: WorkerReport,
+}
+
+/// Run one worker to completion. Connection failure is reported as a
+/// violation rather than a panic so the harness can aggregate it.
+pub fn run_worker(cfg: WorkerConfig) -> WorkerReport {
+    let backend = match HttpBackend::connect(&cfg.addr, cfg.ns.clone()) {
+        Ok(b) => b,
+        Err(e) => {
+            let mut report = WorkerReport::new();
+            report.violation_count = 1;
+            report
+                .violations
+                .push(format!("worker {}: connect {}: {e}", cfg.id, cfg.addr));
+            return report;
+        }
+    };
+    // Independent per-worker stream: same run seed, distinct stream id.
+    let rng = Pcg32::with_stream(cfg.seed, 0x10ad_0000 ^ cfg.id as u64);
+    let container = format!("c{}", cfg.id);
+    let mut w = Worker {
+        backend,
+        container,
+        rng,
+        live: BTreeMap::new(),
+        next_id: 0,
+        report: WorkerReport::new(),
+        cfg,
+    };
+    w.run();
+    w.report
+}
+
+impl Worker {
+    fn run(&mut self) {
+        if let Err(e) = self.backend.create_container(&self.container) {
+            self.violation(format!("create_container({}): {e}", self.container));
+            return;
+        }
+        let mut done = 0u64;
+        loop {
+            match (self.cfg.ops, self.cfg.deadline) {
+                (Some(budget), _) if done >= budget => break,
+                (None, Some(deadline)) if Instant::now() >= deadline => break,
+                (None, None) => {
+                    if done >= 1 {
+                        break; // misconfigured: no stop condition — do one op
+                    }
+                }
+                _ => {}
+            }
+            self.step();
+            done += 1;
+        }
+        self.verify_quiesce();
+    }
+
+    /// One op from the seeded mix. Weights: 30% PUT, 25% GET, 15% ranged
+    /// GET, 10% list, 10% delete, 7% full multipart, 3% abort. Read-class
+    /// ops fall back to a PUT while the worker owns no objects, so the
+    /// executed mix is still a pure function of the rng stream.
+    fn step(&mut self) {
+        let roll = self.rng.next_below(100);
+        match roll {
+            0..=29 => self.do_put(),
+            30..=54 => self.do_get(),
+            55..=69 => self.do_ranged_get(),
+            70..=79 => self.do_list(),
+            80..=89 => self.do_delete(),
+            90..=96 => self.do_multipart(),
+            _ => self.do_abort(),
+        }
+    }
+
+    fn violation(&mut self, msg: String) {
+        self.report.violation_count += 1;
+        if self.report.violations.len() < MAX_VIOLATION_MESSAGES {
+            self.report
+                .violations
+                .push(format!("worker {}: {msg}", self.cfg.id));
+        }
+    }
+
+    fn record(&mut self, class: OpClass, start: Instant) {
+        self.report.executed[class.index()] += 1;
+        self.report.hists[class.index()].record(start.elapsed());
+    }
+
+    fn fresh_expected(&mut self) -> Expected {
+        let id = self.next_id;
+        self.next_id += 1;
+        Expected {
+            size: 1 + self.rng.next_below(self.cfg.payload.max(1) as u32) as usize,
+            fill: (self.rng.next_u32() & 0xFF) as u8,
+            id,
+        }
+    }
+
+    /// A uniformly random live key, or `None` when the worker owns
+    /// nothing yet. Draws from the rng either way so the stream stays a
+    /// pure function of the op sequence.
+    fn pick_live(&mut self) -> Option<(String, Expected)> {
+        let n = self.live.len();
+        let draw = self.rng.next_below(n.max(1) as u32) as usize;
+        if n == 0 {
+            return None;
+        }
+        self.live
+            .iter()
+            .nth(draw)
+            .map(|(k, e)| (k.clone(), *e))
+    }
+
+    fn do_put(&mut self) {
+        let exp = self.fresh_expected();
+        let key = format!("k/{:08}", exp.id);
+        let data = exp.materialize();
+        let len = data.len() as u64;
+        let start = Instant::now();
+        let res = self.backend.put(
+            &self.container,
+            &key,
+            Object::new(data, Metadata::new(), SimInstant::EPOCH),
+        );
+        self.record(OpClass::Put, start);
+        match res {
+            Ok(replaced) => {
+                // Key ids are monotone: a fresh key can never replace.
+                if replaced {
+                    self.violation(format!("put {key}: spurious replace"));
+                }
+                self.report.bytes_written += len;
+                self.live.insert(key, exp);
+            }
+            Err(e) => self.violation(format!("put {key}: {e}")),
+        }
+    }
+
+    fn do_get(&mut self) {
+        let Some((key, exp)) = self.pick_live() else {
+            return self.do_put();
+        };
+        let start = Instant::now();
+        let res = self.backend.get(&self.container, &key);
+        self.record(OpClass::Get, start);
+        match res {
+            Ok(obj) => {
+                self.report.bytes_read += obj.size();
+                if **obj.data != exp.materialize() {
+                    self.violation(format!("get {key}: byte round-trip mismatch"));
+                } else if obj.etag != exp.etag() {
+                    self.violation(format!("get {key}: etag mismatch"));
+                }
+            }
+            Err(e) => self.violation(format!("get {key}: {e}")),
+        }
+    }
+
+    fn do_ranged_get(&mut self) {
+        let Some((key, exp)) = self.pick_live() else {
+            return self.do_put();
+        };
+        let offset = self.rng.next_below(exp.size as u32) as u64;
+        let len = 1 + self.rng.next_below((exp.size as u64 - offset) as u32) as u64;
+        let start = Instant::now();
+        let res = self.backend.get_range(&self.container, &key, offset, len);
+        self.record(OpClass::RangedGet, start);
+        match res {
+            Ok((bytes, stat)) => {
+                self.report.bytes_read += bytes.len() as u64;
+                let whole = exp.materialize();
+                let want = &whole[offset as usize..(offset + len) as usize];
+                if bytes != want {
+                    self.violation(format!("get_range {key} [{offset},+{len}): slice mismatch"));
+                }
+                if stat.size != exp.size as u64 {
+                    self.violation(format!(
+                        "get_range {key}: stat size {} != {}",
+                        stat.size, exp.size
+                    ));
+                }
+            }
+            Err(e) => self.violation(format!("get_range {key} [{offset},+{len}): {e}")),
+        }
+    }
+
+    fn do_list(&mut self) {
+        let start = Instant::now();
+        let res = self.backend.list_page(&self.container, "k/", None, 50);
+        self.record(OpClass::List, start);
+        match res {
+            Ok(page) => {
+                // Single-writer container on a strongly consistent
+                // backend: every listed entry must be a key this worker
+                // owns, with the exact size and content etag.
+                for e in &page.entries {
+                    match self.live.get(&e.name).copied() {
+                        None => {
+                            let name = e.name.clone();
+                            self.violation(format!("list: unknown key {name}"));
+                        }
+                        Some(exp) => {
+                            if e.size != exp.size as u64 || e.etag != exp.etag() {
+                                let name = e.name.clone();
+                                self.violation(format!("list: stale entry for {name}"));
+                            }
+                        }
+                    }
+                }
+            }
+            Err(e) => self.violation(format!("list: {e}")),
+        }
+    }
+
+    fn do_delete(&mut self) {
+        let Some((key, exp)) = self.pick_live() else {
+            return self.do_put();
+        };
+        let start = Instant::now();
+        let res = self.backend.delete(&self.container, &key);
+        self.record(OpClass::Delete, start);
+        match res {
+            Ok(stat) => {
+                if stat.size != exp.size as u64 {
+                    self.violation(format!(
+                        "delete {key}: final stat size {} != {}",
+                        stat.size, exp.size
+                    ));
+                }
+                self.live.remove(&key);
+            }
+            Err(e) => self.violation(format!("delete {key}: {e}")),
+        }
+    }
+
+    /// Full multipart lifecycle: initiate → 2-4 parts → complete →
+    /// install the assembled object via the normal put path (what the
+    /// store front end does with an `AssembledUpload`), timed as one
+    /// sample.
+    fn do_multipart(&mut self) {
+        let exp = self.fresh_expected();
+        let key = format!("mp/{:08}", exp.id);
+        let whole = exp.materialize();
+        let nparts = 2 + self.rng.next_below(3) as usize;
+        let start = Instant::now();
+        let id = match self
+            .backend
+            .initiate_multipart(&self.container, &key, Metadata::new())
+        {
+            Ok(id) => id,
+            Err(e) => {
+                self.record(OpClass::Multipart, start);
+                return self.violation(format!("initiate {key}: {e}"));
+            }
+        };
+        self.report.upload_ids.push(id);
+        let base = (whole.len() / nparts).max(1);
+        let mut uploaded = 0u64;
+        for (i, chunk) in whole.chunks(base).enumerate() {
+            uploaded += chunk.len() as u64;
+            if let Err(e) = self.backend.upload_part(id, i as u32 + 1, chunk.to_vec()) {
+                self.record(OpClass::Multipart, start);
+                return self.violation(format!("upload_part {key}#{}: {e}", i + 1));
+            }
+        }
+        self.report.bytes_written += uploaded;
+        match self.backend.complete_multipart(id, 0) {
+            Ok(asm) => {
+                if asm.data != whole {
+                    self.violation(format!("complete {key}: assembled bytes mismatch"));
+                }
+                if asm.container != self.container || asm.key != key {
+                    self.violation(format!(
+                        "complete {key}: target {}/{} mismatch",
+                        asm.container, asm.key
+                    ));
+                }
+                // Install, as the store front end would.
+                let len = asm.data.len() as u64;
+                match self.backend.put(
+                    &self.container,
+                    &key,
+                    Object::new(asm.data, Metadata::new(), SimInstant::EPOCH),
+                ) {
+                    Ok(_) => {
+                        self.report.bytes_written += len;
+                        self.live.insert(key, exp);
+                    }
+                    Err(e) => self.violation(format!("install {key}: {e}")),
+                }
+            }
+            Err(e) => self.violation(format!("complete {key}: {e}")),
+        }
+        self.record(OpClass::Multipart, start);
+    }
+
+    /// Deliberate abort: initiate → one part → abort, then verify the id
+    /// is dead (a further part upload must be `NoSuchUpload`).
+    fn do_abort(&mut self) {
+        let exp = self.fresh_expected();
+        let key = format!("ab/{:08}", exp.id);
+        let start = Instant::now();
+        let id = match self
+            .backend
+            .initiate_multipart(&self.container, &key, Metadata::new())
+        {
+            Ok(id) => id,
+            Err(e) => {
+                self.record(OpClass::Abort, start);
+                return self.violation(format!("initiate(abort) {key}: {e}"));
+            }
+        };
+        self.report.upload_ids.push(id);
+        let chunk = exp.materialize();
+        self.report.bytes_written += chunk.len() as u64;
+        if let Err(e) = self.backend.upload_part(id, 1, chunk) {
+            self.record(OpClass::Abort, start);
+            return self.violation(format!("upload_part(abort) {key}: {e}"));
+        }
+        if let Err(e) = self.backend.abort_multipart(id) {
+            self.record(OpClass::Abort, start);
+            return self.violation(format!("abort {key}: {e}"));
+        }
+        self.record(OpClass::Abort, start);
+        // The id must be dead now.
+        match self.backend.upload_part(id, 2, vec![0u8]) {
+            Err(BackendError::NoSuchUpload(got)) if got == id => {}
+            Err(e) => self.violation(format!("post-abort part {key}: wrong error {e}")),
+            Ok(()) => self.violation(format!("post-abort part {key}: accepted on dead upload")),
+        }
+    }
+
+    /// Listing completeness at quiesce: a full paginated walk of the
+    /// worker's container must equal its live-key set exactly — every
+    /// owned key present with the right size and etag, nothing extra.
+    fn verify_quiesce(&mut self) {
+        let mut seen: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+        let mut marker: Option<String> = None;
+        loop {
+            match self
+                .backend
+                .list_page(&self.container, "", marker.as_deref(), 100)
+            {
+                Ok(page) => {
+                    for e in page.entries {
+                        seen.insert(e.name, (e.size, e.etag));
+                    }
+                    match page.next {
+                        Some(next) => marker = Some(next),
+                        None => break,
+                    }
+                }
+                Err(e) => {
+                    self.violation(format!("quiesce list: {e}"));
+                    return;
+                }
+            }
+        }
+        if seen.len() != self.live.len() {
+            self.violation(format!(
+                "quiesce: listing has {} keys, worker owns {}",
+                seen.len(),
+                self.live.len()
+            ));
+        }
+        // Collect messages first: `violation` needs `&mut self` while the
+        // walks below borrow `self.live`.
+        let mut msgs: Vec<String> = Vec::new();
+        for (key, exp) in &self.live {
+            match seen.get(key) {
+                None => msgs.push(format!("quiesce: missing key {key}")),
+                Some(&(size, etag)) => {
+                    if size != exp.size as u64 || etag != exp.etag() {
+                        msgs.push(format!("quiesce: wrong stat for {key}"));
+                    }
+                }
+            }
+        }
+        for key in seen.keys() {
+            if !self.live.contains_key(key) {
+                msgs.push(format!("quiesce: phantom key {key}"));
+            }
+        }
+        for m in msgs {
+            self.violation(m);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_class_indexing_is_a_bijection() {
+        for (i, c) in OpClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+        }
+        let names: Vec<&str> = OpClass::ALL.iter().map(|c| c.name()).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), OP_CLASSES);
+        assert_eq!(dedup.len(), OP_CLASSES);
+    }
+
+    #[test]
+    fn expected_materialization_is_deterministic_and_tagged() {
+        let e = Expected { size: 100, fill: 0xAB, id: 7 };
+        let a = e.materialize();
+        let b = e.materialize();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 100);
+        assert_eq!(&a[..8], &7u64.to_le_bytes());
+        assert!(a[8..].iter().all(|&x| x == 0xAB));
+        assert_eq!(e.etag(), sampled_etag(&a));
+        // Tiny objects truncate the id header instead of panicking.
+        let tiny = Expected { size: 3, fill: 0, id: u64::MAX };
+        assert_eq!(tiny.materialize(), vec![0xFF, 0xFF, 0xFF]);
+    }
+}

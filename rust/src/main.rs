@@ -6,6 +6,10 @@
 //! * `run --workload W --scenario S [--small] [--runs N]` — one cell.
 //! * `sweep [--workloads a,b,...] [--runs N] [--small]` — Tables 5-8 and
 //!   Figures 5-7 from one sweep, with the shape check.
+//! * `serve` — expose a backend as an HTTP gateway on a real socket.
+//! * `stress [--clients N] [--seed S] ...` — measured-wall-clock load
+//!   plane: N threads hammer a gateway, verify as they go, and write
+//!   `BENCH_6.json`.
 
 use stocator::harness::tables::{render_table2, Sweep};
 use stocator::harness::traces::{table1_trace, table3_trace};
@@ -54,6 +58,23 @@ USAGE:
   stocator-sim run --workload W --scenario S [sizing] [--runs N]
   stocator-sim sweep [--workloads w1,w2] [--runs N] [sizing]
   stocator-sim serve [--backend B] [--addr HOST:PORT] [--addr-file PATH]
+  stocator-sim stress [--clients N] [--shards N] [--target HOST:PORT]
+                      [--payload BYTES] [--duration D | --ops N]
+                      [--seed S] [--no-matrix] [--bench-out PATH]
+
+  stress: real-concurrency load plane — N worker threads (default 8),
+          each with its own HttpBackend connection pool, hammer a served
+          store with a seeded PUT/GET/ranged-GET/list/delete/multipart/
+          abort mix, verifying bytes, ETags, multipart-id uniqueness and
+          listing completeness as they go. Serves an in-process gateway
+          over sharded:N (default 16) unless --target points at a
+          `stocator-sim serve`. --duration (default 2s; accepts 2s/
+          500ms/1.5) times the run; --ops N fixes a per-client op budget
+          instead (deterministic mix for a given --seed). Prints per-op-
+          class wall-clock p50/p95/p99 and (unless --no-matrix) a
+          clients × shards × payload throughput matrix; writes both to
+          --bench-out (default BENCH_6.json). Exits non-zero on any
+          correctness violation.
 
   serve: expose a backend as an HTTP object-store gateway (REST routes
          PUT/GET/HEAD/DELETE /v1/{container}/{key}, Range reads, ETags,
@@ -152,8 +173,40 @@ fn select_sizing(args: &Args) -> Result<Sizing, String> {
     Ok(sizing)
 }
 
+/// Build the stress config from CLI options over [`StressConfig`]'s
+/// defaults.
+fn stress_config(args: &Args) -> Result<stocator::loadgen::StressConfig, String> {
+    let dflt = stocator::loadgen::StressConfig::default();
+    let duration = match args.opt("duration") {
+        None => dflt.duration,
+        Some(s) => Some(
+            stocator::util::cli::parse_duration(s).map_err(|e| format!("--duration: {e}"))?,
+        ),
+    };
+    let ops_per_client = match args.opt("ops") {
+        None => None,
+        Some(_) => Some(args.opt_u64("ops", 0)?),
+    };
+    Ok(stocator::loadgen::StressConfig {
+        clients: args.opt_u64("clients", dflt.clients as u64)?.max(1) as usize,
+        shards: args.opt_u64("shards", dflt.shards as u64)?.max(1) as usize,
+        target: args.opt("target").map(str::to_string),
+        payload: args.opt_u64("payload", dflt.payload as u64)?.max(1) as usize,
+        seed: args.opt_u64("seed", dflt.seed)?,
+        duration,
+        ops_per_client,
+        matrix: !args.flag("no-matrix"),
+        bench_path: Some(std::path::PathBuf::from(
+            args.opt_or("bench-out", stocator::loadgen::BENCH_FILE),
+        )),
+    })
+}
+
 fn main() {
-    let args = match Args::parse(std::env::args().skip(1), &["small", "paper", "no-cleanup"]) {
+    let args = match Args::parse(
+        std::env::args().skip(1),
+        &["small", "paper", "no-cleanup", "no-matrix"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -218,6 +271,50 @@ fn main() {
                 }
             }
             server.run();
+        }
+        Some("stress") => {
+            use stocator::harness::tables::{render_stress_latency, render_stress_matrix};
+            let cfg = match stress_config(&args) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("error: {e}\n{USAGE}");
+                    std::process::exit(2);
+                }
+            };
+            println!(
+                "stress: {} clients, payload ≤{} B, seed {}, target {}",
+                cfg.clients,
+                cfg.payload,
+                cfg.seed,
+                cfg.target.as_deref().unwrap_or("in-process gateway"),
+            );
+            match stocator::loadgen::run_stress(&cfg) {
+                Ok(report) => {
+                    print!("{}", render_stress_latency(&report.run));
+                    if !report.matrix.is_empty() {
+                        print!("{}", render_stress_matrix(&report.matrix));
+                    }
+                    if let Some(p) = &cfg.bench_path {
+                        println!("bench: wrote {}", p.display());
+                    }
+                    // Matrix cells count too: a sweep that only goes
+                    // wrong under some clients × shards × payload shape
+                    // must still fail the run.
+                    let total_violations = report.run.violation_count
+                        + report.matrix.iter().map(|m| m.violation_count).sum::<u64>();
+                    println!("violations: {total_violations}");
+                    for v in &report.run.violations {
+                        println!("  - {v}");
+                    }
+                    if total_violations > 0 {
+                        std::process::exit(1);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    std::process::exit(1);
+                }
+            }
         }
         Some("run") => {
             let Some(w) = args.opt("workload").and_then(parse_workload) else {
@@ -318,7 +415,7 @@ mod tests {
     fn args(tokens: &[&str]) -> Args {
         Args::parse(
             tokens.iter().map(|s| s.to_string()),
-            &["small", "paper", "no-cleanup"],
+            &["small", "paper", "no-cleanup", "no-matrix"],
         )
         .unwrap()
     }
@@ -411,6 +508,45 @@ mod tests {
                 .multipart_ttl_secs,
             0
         );
+    }
+
+    #[test]
+    fn stress_config_defaults_and_overrides() {
+        use std::time::Duration;
+        let c = stress_config(&args(&["stress"])).unwrap();
+        assert_eq!(c.clients, 8);
+        assert_eq!(c.shards, 16);
+        assert_eq!(c.target, None);
+        assert_eq!(c.duration, Some(Duration::from_secs(2)));
+        assert_eq!(c.ops_per_client, None);
+        assert!(c.matrix);
+        assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("BENCH_6.json"));
+        let c = stress_config(&args(&[
+            "stress",
+            "--clients", "32",
+            "--shards", "4",
+            "--target", "127.0.0.1:9999",
+            "--payload", "4096",
+            "--duration", "500ms",
+            "--seed", "11",
+            "--no-matrix",
+            "--bench-out", "out.json",
+        ]))
+        .unwrap();
+        assert_eq!(c.clients, 32);
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.target.as_deref(), Some("127.0.0.1:9999"));
+        assert_eq!(c.payload, 4096);
+        assert_eq!(c.duration, Some(Duration::from_millis(500)));
+        assert_eq!(c.seed, 11);
+        assert!(!c.matrix);
+        assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("out.json"));
+        // --ops switches to the deterministic fixed-budget mode.
+        let c = stress_config(&args(&["stress", "--ops", "40"])).unwrap();
+        assert_eq!(c.ops_per_client, Some(40));
+        // Bad spellings are parse errors, not panics.
+        assert!(stress_config(&args(&["stress", "--duration", "soon"])).is_err());
+        assert!(stress_config(&args(&["stress", "--clients", "many"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,232 @@
+//! Fixed-bucket latency histograms for *measured wall-clock* time.
+//!
+//! The simulator's virtual clock gives exact per-op durations, but the
+//! load plane ([`crate::loadgen`]) measures real socket round-trips, and
+//! real measurements need a recorder that (a) costs O(1) per sample with
+//! no allocation, and (b) merges cheaply so every worker thread can own
+//! a private recorder and the harness can combine them after join — the
+//! sharded-recorder pattern: workers never share a cache line, let alone
+//! a lock.
+//!
+//! Buckets are geometric: bucket 0 holds everything under 1µs, then each
+//! bucket grows by 2^(1/4) (~19%), covering 1µs to ~1 hour in
+//! [`BUCKETS`] buckets. Quantiles are therefore upper bounds with ≤19%
+//! relative error — ample for p50/p95/p99 reporting — while `min`,
+//! `max`, `sum` and `count` are exact.
+
+/// Number of geometric buckets (1µs × 2^((i-1)/4); see module docs).
+pub const BUCKETS: usize = 128;
+
+/// Smallest non-underflow bucket boundary, in nanoseconds.
+const BASE_NANOS: f64 = 1000.0;
+
+fn bucket_index(nanos: u64) -> usize {
+    if nanos < BASE_NANOS as u64 {
+        return 0;
+    }
+    let idx = 1 + ((nanos as f64 / BASE_NANOS).log2() * 4.0).floor() as usize;
+    idx.min(BUCKETS - 1)
+}
+
+/// Upper bound (nanoseconds) of bucket `idx`: every sample recorded into
+/// the bucket is ≤ this (except the final overflow bucket).
+fn bucket_upper_nanos(idx: usize) -> u64 {
+    (BASE_NANOS * 2f64.powf(idx as f64 / 4.0)) as u64
+}
+
+/// A fixed-bucket wall-clock latency histogram. Plain data — no locks,
+/// no atomics: one per worker thread, merged after the workers join.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum_nanos: u64,
+    min_nanos: u64,
+    max_nanos: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum_nanos: 0,
+            min_nanos: u64::MAX,
+            max_nanos: 0,
+        }
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record_nanos(&mut self, nanos: u64) {
+        self.counts[bucket_index(nanos)] += 1;
+        self.count += 1;
+        self.sum_nanos = self.sum_nanos.saturating_add(nanos);
+        self.min_nanos = self.min_nanos.min(nanos);
+        self.max_nanos = self.max_nanos.max(nanos);
+    }
+
+    /// Record an elapsed [`std::time::Duration`].
+    #[inline]
+    pub fn record(&mut self, elapsed: std::time::Duration) {
+        self.record_nanos(elapsed.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn max_nanos(&self) -> u64 {
+        self.max_nanos
+    }
+
+    /// Fold another histogram into this one (the post-join merge).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_nanos = self.sum_nanos.saturating_add(other.sum_nanos);
+        self.min_nanos = self.min_nanos.min(other.min_nanos);
+        self.max_nanos = self.max_nanos.max(other.max_nanos);
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`) in nanoseconds: the upper bound of
+    /// the bucket where the cumulative count crosses `q·count`, clamped
+    /// into the exact observed `[min, max]` range. Zero when empty.
+    pub fn quantile_nanos(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &n) in self.counts.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return bucket_upper_nanos(idx)
+                    .clamp(self.min_nanos, self.max_nanos);
+            }
+        }
+        self.max_nanos
+    }
+
+    /// Summarise into the p50/p95/p99 shape the reports serialize.
+    pub fn summary(&self) -> LatencySummary {
+        let us = |n: u64| n as f64 / 1000.0;
+        LatencySummary {
+            count: self.count,
+            mean_us: if self.count == 0 {
+                0.0
+            } else {
+                self.sum_nanos as f64 / self.count as f64 / 1000.0
+            },
+            p50_us: us(self.quantile_nanos(0.50)),
+            p95_us: us(self.quantile_nanos(0.95)),
+            p99_us: us(self.quantile_nanos(0.99)),
+            max_us: us(self.max_nanos),
+        }
+    }
+}
+
+/// Immutable percentile summary of one histogram, in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cover_and_bound() {
+        // Every value lands in a bucket whose upper bound is >= it
+        // (except the overflow bucket), within 19% relative error.
+        for v in [1u64, 999, 1000, 1001, 5_000, 1_000_000, 3_000_000_000] {
+            let idx = bucket_index(v);
+            assert!(idx < BUCKETS);
+            if idx < BUCKETS - 1 {
+                let upper = bucket_upper_nanos(idx);
+                assert!(upper >= v, "upper {upper} < value {v}");
+                assert!((upper as f64) <= v as f64 * 1.20, "upper {upper} too loose for {v}");
+            }
+        }
+        // Monotone index.
+        assert!(bucket_index(100) <= bucket_index(2000));
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_track_known_distribution() {
+        let mut h = Histogram::new();
+        // 100 samples: 1..=100 µs.
+        for i in 1..=100u64 {
+            h.record_nanos(i * 1000);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_nanos(0.50) as f64;
+        let p99 = h.quantile_nanos(0.99) as f64;
+        // Bucketed answer within 20% above the exact quantile.
+        assert!((50_000.0..=62_000.0).contains(&p50), "p50 {p50}");
+        assert!((99_000.0..=120_000.0).contains(&p99), "p99 {p99}");
+        assert_eq!(h.quantile_nanos(1.0), 100_000);
+        assert_eq!(h.max_nanos(), 100_000);
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert!((s.mean_us - 50.5).abs() < 0.01, "mean {}", s.mean_us);
+        assert_eq!(s.max_us, 100.0);
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for i in 0..500u64 {
+            let v = (i * 7919) % 2_000_000;
+            if i % 2 == 0 { a.record_nanos(v) } else { b.record_nanos(v) }
+            whole.record_nanos(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.max_nanos(), whole.max_nanos());
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            assert_eq!(a.quantile_nanos(q), whole.quantile_nanos(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_nanos(0.5), 0);
+        let s = h.summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean_us, 0.0);
+        assert_eq!(s.p99_us, 0.0);
+    }
+
+    #[test]
+    fn duration_recording() {
+        let mut h = Histogram::new();
+        h.record(std::time::Duration::from_micros(42));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max_nanos(), 42_000);
+    }
+}

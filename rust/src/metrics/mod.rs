@@ -4,6 +4,15 @@
 //! each type a connector issues (Tables 2 and 7, Figures 5 and 6) and how
 //! many bytes are read / written / copied on the object store (Figure 7).
 //! This module is the single source of truth for those counters.
+//!
+//! [`histogram`] adds the *measured-time* counterpart: fixed-bucket
+//! wall-clock latency histograms ([`Histogram`]/[`LatencySummary`]) used
+//! by the `stress` load plane, shaped so every worker thread records
+//! privately and the results merge after join.
+
+pub mod histogram;
+
+pub use histogram::{Histogram, LatencySummary};
 
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -85,6 +85,26 @@ impl Args {
     }
 }
 
+/// Parse a human-friendly duration: `2s`, `500ms`, `1.5s`, or bare
+/// seconds (`2`, `0.25`).
+pub fn parse_duration(s: &str) -> Result<std::time::Duration, String> {
+    let err = || format!("expected a duration like '2s', '500ms' or '1.5', got '{s}'");
+    let (num, is_ms) = if let Some(v) = s.strip_suffix("ms") {
+        (v, true)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, false)
+    } else {
+        (s, false)
+    };
+    let n: f64 = num.trim().parse().map_err(|_| err())?;
+    // from_secs_f64 panics on negative/non-finite input; reject first.
+    if !n.is_finite() || n < 0.0 {
+        return Err(err());
+    }
+    let secs = if is_ms { n / 1000.0 } else { n };
+    Ok(std::time::Duration::from_secs_f64(secs))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +160,18 @@ mod tests {
     fn double_dash_terminator() {
         let a = parse(&["cmd", "--", "--not-an-option"], &[]);
         assert_eq!(a.positionals, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn duration_spellings() {
+        use std::time::Duration;
+        assert_eq!(parse_duration("2s").unwrap(), Duration::from_secs(2));
+        assert_eq!(parse_duration("500ms").unwrap(), Duration::from_millis(500));
+        assert_eq!(parse_duration("1.5s").unwrap(), Duration::from_millis(1500));
+        assert_eq!(parse_duration("3").unwrap(), Duration::from_secs(3));
+        assert_eq!(parse_duration("0.25").unwrap(), Duration::from_millis(250));
+        for bad in ["", "s", "ms", "-1s", "soon", "inf"] {
+            assert!(parse_duration(bad).is_err(), "accepted '{bad}'");
+        }
     }
 }

@@ -72,6 +72,12 @@ impl Json {
         out
     }
 
+    /// Write the pretty-printed document to `path` (how the
+    /// `BENCH_<n>.json` perf-trajectory files are emitted).
+    pub fn write_file(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_pretty())
+    }
+
     fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
         let (nl, pad, pad_in) = match indent {
             Some(w) => (
@@ -241,6 +247,17 @@ mod tests {
     fn set_replaces_existing_key() {
         let j = Json::obj().set("k", 1u64).set("k", 2u64);
         assert_eq!(j.get("k").and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn write_file_round_trips_pretty_text() {
+        let dir = std::env::temp_dir().join(format!("stocator-json-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        let j = Json::obj().set("bench", "x").set("n", 3u64);
+        j.write_file(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), j.to_pretty());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,105 @@
+//! Concurrency-invariant smoke tests for the `stress` load plane: a
+//! small hammer run against a real in-process gateway must be correct
+//! (zero violations), must never see colliding multipart upload ids
+//! across threads, and — in fixed-op-budget mode — must execute a
+//! deterministic op mix for a fixed seed.
+
+use stocator::loadgen::{run_stress, OpClass, StressConfig};
+
+fn smoke_config() -> StressConfig {
+    StressConfig {
+        clients: 4,
+        shards: 4,
+        payload: 1024,
+        seed: 7,
+        ops_per_client: Some(40),
+        matrix: false,
+        bench_path: None,
+        ..StressConfig::default()
+    }
+}
+
+#[test]
+fn stress_smoke_is_violation_free_with_unique_upload_ids() {
+    let report = run_stress(&smoke_config()).expect("stress run");
+    let run = &report.run;
+    assert_eq!(
+        run.violation_count, 0,
+        "correctness violations: {:?}",
+        run.violations
+    );
+    assert_eq!(run.total_ops, 4 * 40);
+    // The mixed workload reached the multipart paths, and every upload
+    // id issued across all 4 racing workers was distinct.
+    assert!(run.upload_ids_issued > 0, "mix never initiated an upload");
+    assert_eq!(run.upload_ids_unique, run.upload_ids_issued);
+    // Every op class ran and was measured.
+    for c in OpClass::ALL {
+        let s = run.summary_for(c);
+        assert_eq!(s.count, run.executed[c.index()], "{}", c.name());
+        if s.count > 0 {
+            assert!(s.max_us > 0.0, "{}: zero-latency samples", c.name());
+            assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us, "{}", c.name());
+        }
+    }
+    assert!(run.bytes_written > 0);
+    assert!(run.elapsed_s > 0.0);
+    assert!(run.ops_per_sec > 0.0);
+}
+
+#[test]
+fn fixed_budget_op_mix_is_deterministic_for_a_seed() {
+    let a = run_stress(&smoke_config()).expect("first run");
+    let b = run_stress(&smoke_config()).expect("second run");
+    // Wall-clock differs run to run; the executed mix must not.
+    assert_eq!(a.run.executed, b.run.executed);
+    assert_eq!(a.run.bytes_written, b.run.bytes_written);
+    assert_eq!(a.run.upload_ids_issued, b.run.upload_ids_issued);
+    // A different seed draws a different workload (the op-count vector
+    // alone could coincide; the written-byte total — a sum of 160
+    // uniform size draws — cannot).
+    let c = run_stress(&StressConfig {
+        seed: 8,
+        ..smoke_config()
+    })
+    .expect("reseeded run");
+    assert!(
+        a.run.executed != c.run.executed || a.run.bytes_written != c.run.bytes_written,
+        "seeds 7 and 8 produced identical workloads"
+    );
+}
+
+#[test]
+fn bench_json_lands_on_disk_with_percentiles_and_matrix() {
+    let dir = std::env::temp_dir().join(format!("stocator-loadgen-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_6.json");
+    let cfg = StressConfig {
+        clients: 2,
+        shards: 2,
+        payload: 512,
+        seed: 7,
+        ops_per_client: Some(16),
+        matrix: true,
+        bench_path: Some(path.clone()),
+        ..StressConfig::default()
+    };
+    let report = run_stress(&cfg).expect("stress run with matrix");
+    assert!(!report.matrix.is_empty());
+    assert!(report.matrix.iter().all(|m| m.violation_count == 0));
+    let text = std::fs::read_to_string(&path).expect("BENCH json written");
+    for field in [
+        "\"bench\"",
+        "\"op_classes\"",
+        "\"p50_us\"",
+        "\"p95_us\"",
+        "\"p99_us\"",
+        "\"matrix\"",
+        "\"ops_per_sec\"",
+        "\"multipart_ids\"",
+        "\"violations\": 0",
+    ] {
+        assert!(text.contains(field), "missing {field}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
