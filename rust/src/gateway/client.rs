@@ -15,6 +15,16 @@
 //! container names on the wire (the HTTP analogue of the `fs` backend's
 //! unique per-run subdirectory).
 
+//! Server-side backpressure — a real `429 Too Many Requests` from the
+//! gateway's token-bucket limiter, or a `503 over-capacity` shed at the
+//! connection cap — is absorbed *below* the `Backend` trait: both are
+//! written before the request executes, so the client sleeps out the
+//! server's `Retry-After` and blindly re-sends within a bounded budget.
+//! Callers above the trait (the store front end, the stress workers)
+//! see identical op counts and results whether the gateway throttles or
+//! not; [`HttpBackend::throttled_429s`]/[`HttpBackend::shed_503s`]
+//! count what was absorbed.
+
 use super::encoding::{encode_query, meta_header, pct_decode, pct_encode};
 use super::http::{read_response, write_request, Headers, Response, STALE_CONNECTION};
 use crate::objectstore::backend::{
@@ -25,7 +35,9 @@ use crate::objectstore::object::{Metadata, Object};
 use crate::simclock::SimInstant;
 use std::io::BufReader;
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// A `Backend` over the gateway's REST protocol. `Send + Sync`; safe to
 /// share across executor threads (each request takes a pooled
@@ -34,8 +46,37 @@ pub struct HttpBackend {
     addr: String,
     /// Optional container namespace: `c` travels as `{ns}.{c}`.
     ns: Option<String>,
+    /// Bearer token sent as `Authorization` on every request.
+    token: Option<String>,
     /// Idle keep-alive connections, at most [`MAX_POOLED_IDLE`].
     pool: Mutex<Vec<TcpStream>>,
+    /// `429`s absorbed by the backpressure retry loop.
+    throttled: AtomicU64,
+    /// Over-capacity `503`s absorbed by the backpressure retry loop.
+    shed: AtomicU64,
+}
+
+/// Most blind re-sends after backpressure rejections before the
+/// rejection surfaces to the caller as an error.
+const MAX_BACKPRESSURE_RETRIES: u32 = 32;
+/// Total wall-clock sleep budget across one request's backpressure
+/// retries.
+const MAX_BACKPRESSURE_WAIT: Duration = Duration::from_secs(30);
+/// Cap on a single `Retry-After` sleep, so a hostile header cannot
+/// park a worker for minutes.
+const MAX_RETRY_AFTER_SECS: f64 = 5.0;
+
+/// The server's `Retry-After`, parsed as (possibly fractional)
+/// delta-seconds per RFC 9110; a missing or unparseable header falls
+/// back to a small flat pause.
+fn retry_after(resp: &Response) -> Duration {
+    let secs = resp
+        .headers
+        .get("retry-after")
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .filter(|s| s.is_finite() && *s >= 0.0)
+        .unwrap_or(0.05);
+    Duration::from_secs_f64(secs.min(MAX_RETRY_AFTER_SECS))
 }
 
 /// Cap on idle pooled connections per backend. Under a concurrency
@@ -81,12 +122,32 @@ impl HttpBackend {
         Ok(Self {
             addr: addr.to_string(),
             ns,
+            token: None,
             pool: Mutex::new(vec![probe]),
+            throttled: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
         })
+    }
+
+    /// Attach a bearer token, sent as `Authorization: Bearer <token>` on
+    /// every request (required when the gateway runs with `auth_token`).
+    pub fn with_token(mut self, token: impl Into<String>) -> Self {
+        self.token = Some(token.into());
+        self
     }
 
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// `429`s absorbed (slept out and re-sent) by this backend.
+    pub fn throttled_429s(&self) -> u64 {
+        self.throttled.load(Ordering::Relaxed)
+    }
+
+    /// Over-capacity `503`s absorbed by this backend.
+    pub fn shed_503s(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
     }
 
     fn wire_container(&self, container: &str) -> String {
@@ -118,12 +179,13 @@ impl HttpBackend {
         format!("/v1/{}", pct_encode(&self.wire_container(container)))
     }
 
-    /// Issue one request, reusing a pooled connection when available. A
-    /// pooled connection may have gone stale; the request is re-sent on
-    /// a fresh connection ONLY when the failure proves the server never
-    /// executed it (see [`SendFailure`]) — a blind re-send could leak an
-    /// orphaned upload from `initiate` or turn a successful
-    /// `create_container` into a spurious 409.
+    /// Issue one request, absorbing server-side backpressure: a `429`
+    /// (token bucket drained) or an over-capacity `503` (shed at the
+    /// connection cap) is written *before* the request executes, so the
+    /// client sleeps out the server's `Retry-After` and re-sends —
+    /// blindly, for every verb — within a bounded budget. Past the
+    /// budget the rejection is returned and the caller maps it to an
+    /// error. Any other response passes through untouched.
     fn request(
         &self,
         method: &str,
@@ -131,6 +193,54 @@ impl HttpBackend {
         headers: &Headers,
         body: &[u8],
     ) -> Result<Response, BackendError> {
+        let mut attempts = 0u32;
+        let mut waited = Duration::ZERO;
+        loop {
+            let resp = self.exchange(method, target, headers, body)?;
+            let backpressure = resp.status == 429
+                || (resp.status == 503
+                    && resp.headers.get("x-error-kind") == Some("over-capacity"));
+            if !backpressure {
+                return Ok(resp);
+            }
+            let pause = retry_after(&resp);
+            attempts += 1;
+            if attempts > MAX_BACKPRESSURE_RETRIES || waited + pause > MAX_BACKPRESSURE_WAIT {
+                return Ok(resp);
+            }
+            if resp.status == 429 {
+                self.throttled.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+            }
+            std::thread::sleep(pause);
+            waited += pause;
+        }
+    }
+
+    /// One wire exchange, reusing a pooled connection when available. A
+    /// pooled connection may have gone stale; the request is re-sent on
+    /// a fresh connection ONLY when the failure proves the server never
+    /// executed it (see [`SendFailure`]) — a blind re-send could leak an
+    /// orphaned upload from `initiate` or turn a successful
+    /// `create_container` into a spurious 409.
+    fn exchange(
+        &self,
+        method: &str,
+        target: &str,
+        headers: &Headers,
+        body: &[u8],
+    ) -> Result<Response, BackendError> {
+        let authed;
+        let headers = match &self.token {
+            None => headers,
+            Some(token) => {
+                let mut h = headers.clone();
+                h.push("Authorization", format!("Bearer {token}"));
+                authed = h;
+                &authed
+            }
+        };
         let pooled = self.pool.lock().unwrap().pop();
         if let Some(stream) = pooled {
             match self.send_on(stream, method, target, headers, body) {
@@ -216,6 +326,18 @@ impl HttpBackend {
                 BackendError::InvalidRange(msg())
             }
             Some("io") => BackendError::Io(msg()),
+            Some("unauthorized") => {
+                BackendError::Io("gateway auth: 401 unauthorized (missing bearer token)".into())
+            }
+            Some("forbidden") => {
+                BackendError::Io("gateway auth: 403 forbidden (bearer token rejected)".into())
+            }
+            Some("throttled") => BackendError::Io(
+                "gateway throttled: 429 persisted past the client retry budget".into(),
+            ),
+            Some("over-capacity") => BackendError::Io(
+                "gateway over capacity: 503 persisted past the client retry budget".into(),
+            ),
             _ => BackendError::Io(format!(
                 "unexpected gateway response: HTTP {} for {container}/{key}",
                 resp.status
@@ -547,6 +669,21 @@ mod tests {
     use super::*;
     use crate::gateway::GatewayServer;
     use crate::objectstore::backend::ShardedMemBackend;
+
+    #[test]
+    fn retry_after_parses_fractional_integer_and_garbage() {
+        let with = |v: &str| Response::new(429).with_header("Retry-After", v);
+        assert_eq!(retry_after(&with("0.02")), Duration::from_secs_f64(0.02));
+        assert_eq!(retry_after(&with("1")), Duration::from_secs(1));
+        // Hostile values fall back or clamp instead of parking a worker.
+        assert_eq!(retry_after(&with("soon")), Duration::from_secs_f64(0.05));
+        assert_eq!(retry_after(&with("-3")), Duration::from_secs_f64(0.05));
+        assert_eq!(
+            retry_after(&with("99999")),
+            Duration::from_secs_f64(MAX_RETRY_AFTER_SECS)
+        );
+        assert_eq!(retry_after(&Response::new(429)), Duration::from_secs_f64(0.05));
+    }
 
     #[test]
     fn idle_pool_is_capped_and_recovers_after_a_burst() {

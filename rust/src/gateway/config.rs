@@ -1,0 +1,523 @@
+//! Gateway configuration and the production control plane.
+//!
+//! [`GatewayConfig`] is resolved in strictly increasing precedence:
+//! built-in defaults → TOML config file (`--config PATH`) →
+//! `STOCATOR_GATEWAY_*` environment variables → explicit CLI flags.
+//! The TOML reader is a deliberate std-only subset (one `key = value`
+//! per line, `#` comments, an optional `[gateway]` section header) —
+//! enough for a service config file without pulling in a parser crate.
+//!
+//! [`Gatekeeper`] is the part of the production plane that is shared
+//! verbatim by both server cores (threaded and reactor): bearer-token
+//! auth (`401` missing / `403` mismatch) and a token-bucket rate
+//! limiter that emits *real* `429 Too Many Requests` with a
+//! fractional-seconds `Retry-After` the client honors. `/healthz` is
+//! exempt from both so readiness probes and idle keep-alive holders
+//! never consume quota. Screening happens after a request is fully
+//! parsed but before it is routed, so a `429`/`401`/`403` provably
+//! never executed — which is what makes the client's blind re-send
+//! safe for every verb, mutating ones included.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::http::{Request, Response};
+
+/// Which connection-handling core the gateway runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatewayMode {
+    /// Legacy thread-per-connection core (PR 5). Library default, so
+    /// `GatewayServer::bind` keeps its original behavior byte-for-byte.
+    Threaded,
+    /// Single-threaded non-blocking event loop (`gateway::reactor`).
+    /// Default for the `serve` CLI.
+    Reactor,
+}
+
+impl GatewayMode {
+    pub fn parse(s: &str) -> Result<GatewayMode, String> {
+        match s.trim() {
+            "threaded" => Ok(GatewayMode::Threaded),
+            "reactor" => Ok(GatewayMode::Reactor),
+            other => Err(format!(
+                "unknown gateway mode '{other}' (expected 'reactor' or 'threaded')"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GatewayMode::Threaded => "threaded",
+            GatewayMode::Reactor => "reactor",
+        }
+    }
+}
+
+/// Resolved gateway configuration. See the module docs for precedence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatewayConfig {
+    pub mode: GatewayMode,
+    /// Hard cap on simultaneous connections; excess accepts are shed
+    /// with an immediate `503` + `x-error-kind: over-capacity`.
+    pub max_conns: usize,
+    /// Sustained request rate in requests/second; `0.0` disables the
+    /// limiter entirely (the default — conformance stays byte-identical).
+    pub rate_limit: f64,
+    /// Token-bucket capacity: how many requests may burst above the
+    /// sustained rate before `429`s start.
+    pub burst: u32,
+    /// When set, every non-`/healthz` request must carry
+    /// `Authorization: Bearer <token>`.
+    pub auth_token: Option<String>,
+    /// Slow-loris guard: a connection holding a *partial* request this
+    /// long with no progress gets `408` and is closed. Idle keep-alive
+    /// connections (empty input buffer) are never reaped.
+    pub read_timeout: Duration,
+    /// Graceful-shutdown budget: in-flight requests get this long to
+    /// finish before the reactor gives up and returns.
+    pub drain_timeout: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            mode: GatewayMode::Threaded,
+            max_conns: 16_384,
+            rate_limit: 0.0,
+            burst: 64,
+            auth_token: None,
+            read_timeout: Duration::from_secs(5),
+            drain_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+impl GatewayConfig {
+    /// Defaults for the `serve` CLI: same as [`Default`] but the
+    /// reactor core, so new deployments get the scalable path while
+    /// the library entry point stays backward compatible.
+    pub fn serve_default() -> Self {
+        GatewayConfig { mode: GatewayMode::Reactor, ..GatewayConfig::default() }
+    }
+
+    /// Set one configuration key from its string form. Shared by the
+    /// TOML reader, the env-var layer, and the CLI so all three agree
+    /// on names, parsing, and validation.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T, String> {
+            value
+                .trim()
+                .parse::<T>()
+                .map_err(|_| format!("bad value '{value}' for gateway key '{key}'"))
+        }
+        match key {
+            "mode" => self.mode = GatewayMode::parse(value)?,
+            "max_conns" => {
+                self.max_conns = num::<usize>(key, value)?;
+                if self.max_conns == 0 {
+                    return Err("max_conns must be >= 1".into());
+                }
+            }
+            "rate_limit" => {
+                self.rate_limit = num::<f64>(key, value)?;
+                if !self.rate_limit.is_finite() || self.rate_limit < 0.0 {
+                    return Err(format!("rate_limit must be finite and >= 0, got '{value}'"));
+                }
+            }
+            "burst" => {
+                self.burst = num::<u32>(key, value)?;
+                if self.burst == 0 {
+                    return Err("burst must be >= 1".into());
+                }
+            }
+            "auth_token" => {
+                let t = value.trim();
+                self.auth_token = if t.is_empty() { None } else { Some(t.to_string()) };
+            }
+            "read_timeout_ms" => self.read_timeout = Duration::from_millis(num(key, value)?),
+            "drain_timeout_ms" => self.drain_timeout = Duration::from_millis(num(key, value)?),
+            other => return Err(format!("unknown gateway config key '{other}'")),
+        }
+        Ok(())
+    }
+
+    /// Apply a TOML-subset document on top of `self`. Unknown keys are
+    /// hard errors — a typo'd limit silently defaulting is exactly the
+    /// failure a config file exists to prevent.
+    pub fn apply_toml(&mut self, text: &str) -> Result<(), String> {
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line.starts_with('[') {
+                if line == "[gateway]" {
+                    continue;
+                }
+                return Err(format!(
+                    "config line {}: unknown section '{line}' (only [gateway] is recognized)",
+                    lineno + 1
+                ));
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("config line {}: expected 'key = value'", lineno + 1))?;
+            let value = toml_scalar(value)
+                .map_err(|e| format!("config line {}: {e}", lineno + 1))?;
+            self.set(key.trim(), &value)
+                .map_err(|e| format!("config line {}: {e}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Apply `STOCATOR_GATEWAY_*` overrides. The lookup function is
+    /// injected so tests can run in parallel without mutating process
+    /// environment; production callers pass [`GatewayConfig::apply_env`].
+    pub fn apply_env_with(
+        &mut self,
+        get: impl Fn(&str) -> Option<String>,
+    ) -> Result<(), String> {
+        const KEYS: &[&str] = &[
+            "mode",
+            "max_conns",
+            "rate_limit",
+            "burst",
+            "auth_token",
+            "read_timeout_ms",
+            "drain_timeout_ms",
+        ];
+        for key in KEYS {
+            let var = format!("STOCATOR_GATEWAY_{}", key.to_ascii_uppercase());
+            if let Some(value) = get(&var) {
+                self.set(key, &value).map_err(|e| format!("{var}: {e}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply overrides from the real process environment.
+    pub fn apply_env(&mut self) -> Result<(), String> {
+        self.apply_env_with(|k| std::env::var(k).ok())
+    }
+
+    /// Read and apply a TOML config file.
+    pub fn apply_file(&mut self, path: &Path) -> Result<(), String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read gateway config {}: {e}", path.display()))?;
+        self.apply_toml(&text)
+    }
+
+    /// One-line human summary for the `serve` banner.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} core, max-conns {}, rate-limit {}, auth {}",
+            self.mode.name(),
+            self.max_conns,
+            if self.rate_limit > 0.0 {
+                format!("{}/s (burst {})", self.rate_limit, self.burst)
+            } else {
+                "off".to_string()
+            },
+            if self.auth_token.is_some() { "bearer" } else { "off" },
+        )
+    }
+}
+
+/// Parse one TOML scalar: quoted string (with `\"` and `\\` escapes),
+/// bare number, or bool. Trailing `# comments` are stripped outside
+/// quotes.
+fn toml_scalar(raw: &str) -> Result<String, String> {
+    let raw = raw.trim();
+    if let Some(rest) = raw.strip_prefix('"') {
+        let mut out = String::new();
+        let mut chars = rest.chars();
+        loop {
+            match chars.next() {
+                None => return Err("unterminated string".into()),
+                Some('"') => break,
+                Some('\\') => match chars.next() {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("unsupported escape '\\{:?}'", other)),
+                },
+                Some(c) => out.push(c),
+            }
+        }
+        let tail = chars.as_str().trim();
+        if !tail.is_empty() && !tail.starts_with('#') {
+            return Err(format!("trailing garbage after string: '{tail}'"));
+        }
+        Ok(out)
+    } else {
+        let bare = match raw.find('#') {
+            Some(i) => raw[..i].trim(),
+            None => raw,
+        };
+        if bare.is_empty() {
+            return Err("empty value".into());
+        }
+        Ok(bare.to_string())
+    }
+}
+
+/// Token-bucket limiter: `burst` capacity, refilled at `rate`
+/// tokens/second. One token admits one request; an empty bucket
+/// yields the exact time until the next token, which becomes the
+/// `Retry-After` the client sleeps on.
+pub struct RateLimiter {
+    rate: f64,
+    burst: f64,
+    state: Mutex<BucketState>,
+}
+
+struct BucketState {
+    tokens: f64,
+    last_refill: Instant,
+}
+
+impl RateLimiter {
+    pub fn new(rate: f64, burst: u32) -> Option<RateLimiter> {
+        if rate <= 0.0 {
+            return None;
+        }
+        Some(RateLimiter {
+            rate,
+            burst: f64::from(burst.max(1)),
+            state: Mutex::new(BucketState { tokens: f64::from(burst.max(1)), last_refill: Instant::now() }),
+        })
+    }
+
+    /// Try to admit one request now. `Err(secs)` is the time until a
+    /// token will be available — the wire `Retry-After`.
+    pub fn admit(&self) -> Result<(), f64> {
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let now = Instant::now();
+        let elapsed = now.duration_since(s.last_refill).as_secs_f64();
+        s.last_refill = now;
+        s.tokens = (s.tokens + elapsed * self.rate).min(self.burst);
+        if s.tokens >= 1.0 {
+            s.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err((1.0 - s.tokens) / self.rate)
+        }
+    }
+}
+
+/// The screening plane shared by both server cores: auth, rate limit,
+/// and rejection counters (observability for tests and the CLI).
+pub struct Gatekeeper {
+    pub cfg: GatewayConfig,
+    limiter: Option<RateLimiter>,
+    rejected_429: AtomicU64,
+    rejected_auth: AtomicU64,
+    shed_503: AtomicU64,
+}
+
+impl Gatekeeper {
+    pub fn new(cfg: GatewayConfig) -> Gatekeeper {
+        let limiter = RateLimiter::new(cfg.rate_limit, cfg.burst);
+        Gatekeeper { cfg, limiter, rejected_429: AtomicU64::new(0), rejected_auth: AtomicU64::new(0), shed_503: AtomicU64::new(0) }
+    }
+
+    /// Screen one fully parsed request before routing. `Some(resp)`
+    /// means the request is rejected without ever executing; `None`
+    /// means it proceeds to the router. Order matters: auth before
+    /// rate limit, so an attacker without a token cannot drain the
+    /// bucket, and `/healthz` before both.
+    pub fn screen(&self, req: &Request) -> Option<Response> {
+        if req.path.trim_matches('/') == "healthz" {
+            return None;
+        }
+        if let Some(expected) = &self.cfg.auth_token {
+            let supplied = req
+                .headers
+                .get("authorization")
+                .and_then(|v| v.trim().strip_prefix("Bearer "))
+                .map(str::trim);
+            match supplied {
+                None => {
+                    self.rejected_auth.fetch_add(1, Ordering::Relaxed);
+                    return Some(
+                        Response::new(401)
+                            .with_header("WWW-Authenticate", "Bearer")
+                            .with_header("x-error-kind", "unauthorized"),
+                    );
+                }
+                Some(got) if got != expected => {
+                    self.rejected_auth.fetch_add(1, Ordering::Relaxed);
+                    return Some(Response::new(403).with_header("x-error-kind", "forbidden"));
+                }
+                Some(_) => {}
+            }
+        }
+        if let Some(limiter) = &self.limiter {
+            if let Err(after) = limiter.admit() {
+                self.rejected_429.fetch_add(1, Ordering::Relaxed);
+                return Some(
+                    Response::new(429)
+                        .with_header("Retry-After", format_retry_after(after))
+                        .with_header("x-error-kind", "throttled"),
+                );
+            }
+        }
+        None
+    }
+
+    /// The response written to a connection shed at the cap, before
+    /// any request is read — so the client knows nothing executed.
+    pub fn overloaded(&self) -> Response {
+        self.shed_503.fetch_add(1, Ordering::Relaxed);
+        Response::new(503)
+            .with_header("Retry-After", "0.05")
+            .with_header("x-error-kind", "over-capacity")
+    }
+
+    pub fn rejected_429s(&self) -> u64 {
+        self.rejected_429.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected_auths(&self) -> u64 {
+        self.rejected_auth.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_503s(&self) -> u64 {
+        self.shed_503.load(Ordering::Relaxed)
+    }
+}
+
+/// Fractional delta-seconds with enough precision that sub-millisecond
+/// refill times still round-trip as a positive sleep. (We control both
+/// wire ends; the client also parses integer-seconds per RFC 9110.)
+fn format_retry_after(secs: f64) -> String {
+    format!("{:.4}", secs.max(0.0001))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_threaded_and_unlimited() {
+        let cfg = GatewayConfig::default();
+        assert_eq!(cfg.mode, GatewayMode::Threaded);
+        assert_eq!(cfg.rate_limit, 0.0);
+        assert!(cfg.auth_token.is_none());
+        assert_eq!(GatewayConfig::serve_default().mode, GatewayMode::Reactor);
+    }
+
+    #[test]
+    fn toml_subset_round_trips_every_key() {
+        let mut cfg = GatewayConfig::default();
+        cfg.apply_toml(
+            r#"
+            # gateway smoke config
+            [gateway]
+            mode = "reactor"       # event loop
+            max_conns = 4096
+            rate_limit = 1500.0
+            burst = 128
+            auth_token = "s3cr#t"  # hash inside quotes survives
+            read_timeout_ms = 250
+            drain_timeout_ms = 750
+            "#,
+        )
+        .expect("valid config must parse");
+        assert_eq!(cfg.mode, GatewayMode::Reactor);
+        assert_eq!(cfg.max_conns, 4096);
+        assert_eq!(cfg.rate_limit, 1500.0);
+        assert_eq!(cfg.burst, 128);
+        assert_eq!(cfg.auth_token.as_deref(), Some("s3cr#t"));
+        assert_eq!(cfg.read_timeout, Duration::from_millis(250));
+        assert_eq!(cfg.drain_timeout, Duration::from_millis(750));
+    }
+
+    #[test]
+    fn toml_rejects_unknown_keys_and_bad_values() {
+        let mut cfg = GatewayConfig::default();
+        assert!(cfg.apply_toml("max_cons = 5").is_err(), "typo'd key must be fatal");
+        assert!(cfg.apply_toml("max_conns = many").is_err());
+        assert!(cfg.apply_toml("max_conns = 0").is_err());
+        assert!(cfg.apply_toml("rate_limit = -1").is_err());
+        assert!(cfg.apply_toml("auth_token = \"unterminated").is_err());
+        assert!(cfg.apply_toml("[server]").is_err());
+    }
+
+    #[test]
+    fn env_overrides_beat_file_values() {
+        let mut cfg = GatewayConfig::default();
+        cfg.apply_toml("max_conns = 100\nmode = \"threaded\"").unwrap();
+        cfg.apply_env_with(|k| match k {
+            "STOCATOR_GATEWAY_MAX_CONNS" => Some("200".into()),
+            "STOCATOR_GATEWAY_MODE" => Some("reactor".into()),
+            "STOCATOR_GATEWAY_AUTH_TOKEN" => Some("tok".into()),
+            _ => None,
+        })
+        .unwrap();
+        assert_eq!(cfg.max_conns, 200);
+        assert_eq!(cfg.mode, GatewayMode::Reactor);
+        assert_eq!(cfg.auth_token.as_deref(), Some("tok"));
+        // A bad env value is a startup error, not a silent default.
+        assert!(cfg
+            .apply_env_with(|k| (k == "STOCATOR_GATEWAY_BURST").then(|| "zero".to_string()))
+            .is_err());
+    }
+
+    #[test]
+    fn token_bucket_admits_burst_then_throttles_with_positive_retry_after() {
+        let limiter = RateLimiter::new(10.0, 3).expect("positive rate builds a limiter");
+        assert!(limiter.admit().is_ok());
+        assert!(limiter.admit().is_ok());
+        assert!(limiter.admit().is_ok());
+        let after = limiter.admit().expect_err("burst exhausted");
+        assert!(after > 0.0 && after <= 0.1 + 1e-6, "retry-after ~1 token at 10/s, got {after}");
+        assert!(RateLimiter::new(0.0, 3).is_none(), "rate 0 disables the limiter");
+    }
+
+    #[test]
+    fn gatekeeper_screens_auth_then_rate_and_exempts_healthz() {
+        let gate = Gatekeeper::new(GatewayConfig {
+            auth_token: Some("open-sesame".into()),
+            rate_limit: 1000.0,
+            burst: 2,
+            ..GatewayConfig::default()
+        });
+        let req = |path: &str, auth: Option<&str>| {
+            let mut r = Request {
+                method: "GET".into(),
+                path: path.into(),
+                query: String::new(),
+                headers: crate::gateway::http::Headers::new(),
+                body: Vec::new(),
+            };
+            if let Some(a) = auth {
+                r.headers.push("Authorization", a);
+            }
+            r
+        };
+        let missing = gate.screen(&req("/v1/c/k", None)).expect("no token -> rejected");
+        assert_eq!(missing.status, 401);
+        assert_eq!(missing.headers.get("x-error-kind"), Some("unauthorized"));
+        let wrong = gate.screen(&req("/v1/c/k", Some("Bearer nope"))).expect("bad token");
+        assert_eq!(wrong.status, 403);
+        assert_eq!(gate.rejected_auths(), 2);
+        // Correct token: burst of 2 admits, third gets a parseable 429.
+        let ok = Some("Bearer open-sesame");
+        assert!(gate.screen(&req("/v1/c/k", ok)).is_none());
+        assert!(gate.screen(&req("/v1/c/k", ok)).is_none());
+        let throttled = gate.screen(&req("/v1/c/k", ok)).expect("bucket empty");
+        assert_eq!(throttled.status, 429);
+        let after: f64 = throttled
+            .headers
+            .get("retry-after")
+            .expect("429 carries Retry-After")
+            .parse()
+            .expect("Retry-After parses as f64");
+        assert!(after > 0.0);
+        assert_eq!(gate.rejected_429s(), 1);
+        // /healthz bypasses both auth and the limiter even when drained.
+        assert!(gate.screen(&req("/healthz", None)).is_none());
+    }
+}

@@ -109,12 +109,16 @@ fn reason(status: u16) -> &'static str {
         204 => "No Content",
         206 => "Partial Content",
         400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         409 => "Conflict",
         416 => "Range Not Satisfiable",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
@@ -152,22 +156,14 @@ fn read_headers(r: &mut impl BufRead) -> io::Result<Headers> {
         if line.is_empty() {
             return Ok(headers);
         }
-        let (name, value) = line
-            .split_once(':')
-            .ok_or_else(|| bad(format!("malformed header line '{line}'")))?;
-        headers.push(name.trim(), value.trim());
+        let (name, value) = parse_header_line(&line)?;
+        headers.push(name, value);
     }
     Err(bad("too many headers"))
 }
 
 fn read_body(r: &mut impl BufRead, headers: &Headers) -> io::Result<Vec<u8>> {
-    let len: u64 = match headers.get("content-length") {
-        None => 0,
-        Some(v) => v.parse().map_err(|_| bad("bad Content-Length"))?,
-    };
-    if len > MAX_BODY {
-        return Err(bad("body too large"));
-    }
+    let len = declared_len(headers)?;
     // Grow with the data actually received (Take bounds the read), so a
     // peer declaring a huge Content-Length and sending nothing cannot
     // make us preallocate the declared size.
@@ -182,12 +178,8 @@ fn read_body(r: &mut impl BufRead, headers: &Headers) -> io::Result<Vec<u8>> {
     Ok(body)
 }
 
-/// Read one request. `Ok(None)` = the peer closed a keep-alive
-/// connection cleanly between requests.
-pub fn read_request(r: &mut impl BufRead) -> io::Result<Option<Request>> {
-    let Some(line) = read_line(r)? else {
-        return Ok(None);
-    };
+/// Split a request line into `(method, path, query)`; HTTP/1.x only.
+fn parse_request_line(line: &str) -> io::Result<(String, String, String)> {
     let mut parts = line.split(' ');
     let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
         (Some(m), Some(t), Some(v), None) => (m, t, v),
@@ -200,15 +192,117 @@ pub fn read_request(r: &mut impl BufRead) -> io::Result<Option<Request>> {
         Some((p, q)) => (p.to_string(), q.to_string()),
         None => (target.to_string(), String::new()),
     };
+    Ok((method.to_string(), path, query))
+}
+
+fn parse_header_line(line: &str) -> io::Result<(&str, &str)> {
+    let (name, value) = line
+        .split_once(':')
+        .ok_or_else(|| bad(format!("malformed header line '{line}'")))?;
+    Ok((name.trim(), value.trim()))
+}
+
+fn declared_len(headers: &Headers) -> io::Result<u64> {
+    let len: u64 = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v.parse().map_err(|_| bad("bad Content-Length"))?,
+    };
+    if len > MAX_BODY {
+        return Err(bad("body too large"));
+    }
+    Ok(len)
+}
+
+/// Read one request. `Ok(None)` = the peer closed a keep-alive
+/// connection cleanly between requests.
+pub fn read_request(r: &mut impl BufRead) -> io::Result<Option<Request>> {
+    let Some(line) = read_line(r)? else {
+        return Ok(None);
+    };
+    let (method, path, query) = parse_request_line(&line)?;
     let headers = read_headers(r)?;
     let body = read_body(r, &headers)?;
     Ok(Some(Request {
-        method: method.to_string(),
+        method,
         path,
         query,
         headers,
         body,
     }))
+}
+
+/// Incremental request parsing for the non-blocking reactor core: try
+/// to parse ONE complete request from the front of `buf`.
+///
+/// * `Ok(Some((req, consumed)))` — a full request occupied
+///   `buf[..consumed]`; the caller drains those bytes (any remainder is
+///   the start of the next pipelined request).
+/// * `Ok(None)` — the prefix is a valid-so-far but incomplete request;
+///   read more bytes and try again.
+/// * `Err(_)` — the prefix can never become a valid request. The same
+///   limits as the blocking parser apply *while scanning*, so a
+///   slow-loris peer dribbling an endless header line is rejected as
+///   soon as it crosses `MAX_LINE`, not buffered forever.
+pub fn try_parse_request(buf: &[u8]) -> io::Result<Option<(Request, usize)>> {
+    let mut lines: Vec<&str> = Vec::new();
+    let mut pos = 0usize;
+    let head_end = loop {
+        let rest = &buf[pos..];
+        let Some(nl) = rest.iter().position(|&b| b == b'\n') else {
+            // No terminator yet: incomplete — unless the partial line
+            // or header count already exceeds what we would ever accept.
+            if rest.len() > MAX_LINE {
+                return Err(bad("line too long"));
+            }
+            if lines.len() > MAX_HEADERS {
+                return Err(bad("too many headers"));
+            }
+            return Ok(None);
+        };
+        if nl > MAX_LINE {
+            return Err(bad("line too long"));
+        }
+        let mut line = &rest[..nl];
+        if line.last() == Some(&b'\r') {
+            line = &line[..line.len() - 1];
+        }
+        let line = std::str::from_utf8(line).map_err(|_| bad("non-UTF-8 header line"))?;
+        pos += nl + 1;
+        if line.is_empty() {
+            break pos;
+        }
+        if lines.len() > MAX_HEADERS {
+            return Err(bad("too many headers"));
+        }
+        lines.push(line);
+    };
+    let Some((request_line, header_lines)) = lines.split_first() else {
+        return Err(bad("malformed request line ''"));
+    };
+    let (method, path, query) = parse_request_line(request_line)?;
+    let mut headers = Headers::new();
+    for line in header_lines {
+        let (name, value) = parse_header_line(line)?;
+        headers.push(name, value);
+    }
+    let len = declared_len(&headers)? as usize;
+    let total = head_end
+        .checked_add(len)
+        .ok_or_else(|| bad("body too large"))?;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let body = buf[head_end..total].to_vec();
+    Ok(Some((
+        Request {
+            method,
+            path,
+            query,
+            headers,
+            body,
+        },
+        total,
+    )))
 }
 
 /// Write one request with an exact `Content-Length` (always present, so
@@ -325,6 +419,58 @@ mod tests {
         assert_eq!(got.status, 206);
         assert_eq!(got.headers.get("etag"), Some("\"00000000deadbeef\""));
         assert_eq!(got.body, body);
+    }
+
+    #[test]
+    fn incremental_parser_matches_blocking_parser() {
+        let mut headers = Headers::new();
+        headers.push("x-object-meta-k", "v");
+        let mut wire = Vec::new();
+        write_request(&mut wire, "PUT", "/v1/res/k?a=1", &headers, b"body!").unwrap();
+        // Every strict prefix is "incomplete", never an error.
+        for cut in 0..wire.len() {
+            assert!(
+                try_parse_request(&wire[..cut]).expect("prefix must not be malformed").is_none(),
+                "prefix of {cut} bytes parsed as complete"
+            );
+        }
+        let (req, consumed) = try_parse_request(&wire).unwrap().expect("complete request");
+        assert_eq!(consumed, wire.len());
+        assert_eq!(req.method, "PUT");
+        assert_eq!(req.path, "/v1/res/k");
+        assert_eq!(req.query, "a=1");
+        assert_eq!(req.headers.get("X-Object-Meta-K"), Some("v"));
+        assert_eq!(req.body, b"body!");
+    }
+
+    #[test]
+    fn incremental_parser_frames_pipelined_requests() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "PUT", "/v1/c/a", &Headers::new(), b"xy").unwrap();
+        let first_len = wire.len();
+        write_request(&mut wire, "GET", "/v1/c/a", &Headers::new(), b"").unwrap();
+        let (first, consumed) = try_parse_request(&wire).unwrap().expect("first request");
+        assert_eq!(consumed, first_len);
+        assert_eq!(first.method, "PUT");
+        let (second, rest) = try_parse_request(&wire[consumed..]).unwrap().expect("second");
+        assert_eq!(second.method, "GET");
+        assert_eq!(consumed + rest, wire.len());
+    }
+
+    #[test]
+    fn incremental_parser_rejects_hostile_prefixes() {
+        assert!(try_parse_request(b"NOT-HTTP\r\n\r\n").is_err());
+        assert!(try_parse_request(b"GET /x HTTP/1.1\r\nbad header\r\n\r\n").is_err());
+        assert!(try_parse_request(b"GET /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n").is_err());
+        assert!(try_parse_request(b"\r\n").is_err(), "blank request line is malformed");
+        // A request-line with no terminator longer than MAX_LINE is
+        // rejected mid-stream — a slow loris cannot balloon the buffer.
+        let huge = vec![b'a'; MAX_LINE + 2];
+        assert!(try_parse_request(&huge).is_err());
+        // Truncated body stays incomplete, not an error.
+        assert!(try_parse_request(b"GET /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nab")
+            .unwrap()
+            .is_none());
     }
 
     #[test]

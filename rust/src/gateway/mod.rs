@@ -33,12 +33,22 @@
 //! headers and the virtual-clock creation instant as
 //! `x-sim-created-at`.
 
+//! Two interchangeable server cores sit behind the same routes: the
+//! legacy thread-per-connection core and the [`reactor`] non-blocking
+//! event loop (the `serve` default), selected — along with connection
+//! caps, token-bucket `429` rate limiting, and bearer auth — by a
+//! [`config::GatewayConfig`] resolved from TOML file, `STOCATOR_GATEWAY_*`
+//! environment variables, and CLI flags.
+
 pub mod client;
+pub mod config;
 pub mod encoding;
 pub mod http;
+pub mod reactor;
 pub mod server;
 
 pub use client::HttpBackend;
+pub use config::{Gatekeeper, GatewayConfig, GatewayMode};
 pub use server::{GatewayHandle, GatewayServer};
 
 /// A process-unique namespace tag. The harness gives every workload

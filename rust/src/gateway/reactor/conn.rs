@@ -1,0 +1,222 @@
+//! Per-connection state machine for the reactor core.
+//!
+//! A [`Conn`] owns one non-blocking `TcpStream` and two buffers. Each
+//! [`Conn::poll`] pass advances the machine as far as the socket
+//! allows without ever blocking: flush pending output, read available
+//! input, parse-and-serve every complete request the input buffer
+//! holds (pipelining included), then apply the stall/drain policies.
+//! See the module docs on [`super`] for the design rules.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::gateway::config::Gatekeeper;
+use crate::gateway::http::{try_parse_request, write_response, Response};
+use crate::gateway::server::route;
+use crate::objectstore::backend::Backend;
+
+/// Read at most this much per poll pass, so one firehose peer cannot
+/// starve every other connection in the sweep.
+const READ_QUOTA: usize = 64 * 1024;
+
+pub(super) struct Conn {
+    stream: TcpStream,
+    /// Bytes received but not yet consumed by the parser. Non-empty
+    /// means a partial request is pending (the slow-loris clock runs);
+    /// empty means the connection is an idle keep-alive (never reaped).
+    inbuf: Vec<u8>,
+    /// Serialized response bytes not yet accepted by the socket.
+    outbuf: Vec<u8>,
+    written: usize,
+    last_progress: Instant,
+    /// Close once `outbuf` drains (set on malformed input, 408, drain).
+    close_after_flush: bool,
+    /// Peer half-closed its write side; serve what's buffered, then close.
+    peer_eof: bool,
+    closed: bool,
+}
+
+impl Conn {
+    pub(super) fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            written: 0,
+            last_progress: Instant::now(),
+            close_after_flush: false,
+            peer_eof: false,
+            closed: false,
+        }
+    }
+
+    pub(super) fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// One readiness pass. Returns true if any byte moved or any
+    /// request was served — the reactor only sleeps when a full sweep
+    /// makes no progress anywhere.
+    pub(super) fn poll(
+        &mut self,
+        backend: &dyn Backend,
+        gate: &Gatekeeper,
+        now: Instant,
+        draining: bool,
+    ) -> bool {
+        if self.closed {
+            return false;
+        }
+        let mut progress = self.flush();
+        if !self.closed && self.outbuf.is_empty() && !self.peer_eof {
+            progress |= self.fill();
+        }
+        progress |= self.serve_buffered(backend, gate, draining);
+        if !self.closed
+            && !self.inbuf.is_empty()
+            && self.outbuf.is_empty()
+            && now.duration_since(self.last_progress) > gate.cfg.read_timeout
+        {
+            // Slow loris: a partial request stalled past the read
+            // timeout. Answer 408 and close. An idle keep-alive
+            // (empty inbuf) never reaches this arm.
+            self.enqueue(
+                &Response::new(408).with_header("x-error-kind", "stalled-request"),
+            );
+            self.close_after_flush = true;
+            progress |= self.flush();
+        }
+        if draining && !self.closed && self.inbuf.is_empty() && self.outbuf.is_empty() {
+            // Graceful drain: in-flight work above finished (or there
+            // was none); idle keep-alives are closed immediately.
+            self.closed = true;
+        }
+        progress
+    }
+
+    /// Parse-and-serve every complete request currently buffered.
+    /// Responses are served strictly in order; serving pauses whenever
+    /// the socket will not accept the previous response yet.
+    fn serve_buffered(&mut self, backend: &dyn Backend, gate: &Gatekeeper, draining: bool) -> bool {
+        let mut progress = false;
+        while !self.closed && self.outbuf.is_empty() {
+            match try_parse_request(&self.inbuf) {
+                Ok(Some((mut req, consumed))) => {
+                    self.inbuf.drain(..consumed);
+                    let resp = match gate.screen(&req) {
+                        Some(rejection) => rejection,
+                        None => route(backend, &mut req),
+                    };
+                    self.enqueue(&resp);
+                    if draining {
+                        self.close_after_flush = true;
+                    }
+                    progress = true;
+                    progress |= self.flush();
+                }
+                Ok(None) => {
+                    if self.peer_eof {
+                        if self.inbuf.is_empty() {
+                            // Clean close between requests.
+                            self.closed = true;
+                        } else {
+                            // EOF inside a request: same 400-and-close
+                            // as the blocking parser's "EOF inside
+                            // headers" / "truncated body".
+                            self.inbuf.clear();
+                            self.enqueue(&Response::new(400));
+                            self.close_after_flush = true;
+                            progress |= self.flush();
+                        }
+                    }
+                    break;
+                }
+                Err(_) => {
+                    // Malformed request: 400 and drop the connection —
+                    // framing may be lost, same as the threaded core.
+                    self.inbuf.clear();
+                    self.enqueue(&Response::new(400));
+                    self.close_after_flush = true;
+                    progress |= self.flush();
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Read whatever the socket has, up to the per-pass quota.
+    fn fill(&mut self) -> bool {
+        let mut scratch = [0u8; 16 * 1024];
+        let mut moved = 0usize;
+        loop {
+            match self.stream.read(&mut scratch) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.inbuf.extend_from_slice(&scratch[..n]);
+                    moved += n;
+                    self.last_progress = Instant::now();
+                    if moved >= READ_QUOTA {
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        moved > 0
+    }
+
+    /// Push pending output into the socket; resumable across passes.
+    fn flush(&mut self) -> bool {
+        if self.outbuf.is_empty() {
+            if self.close_after_flush {
+                self.closed = true;
+            }
+            return false;
+        }
+        let mut progress = false;
+        loop {
+            match self.stream.write(&self.outbuf[self.written..]) {
+                Ok(0) => {
+                    self.closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.written += n;
+                    self.last_progress = Instant::now();
+                    progress = true;
+                    if self.written == self.outbuf.len() {
+                        self.outbuf.clear();
+                        self.written = 0;
+                        if self.close_after_flush {
+                            let _ = self.stream.shutdown(std::net::Shutdown::Write);
+                            self.closed = true;
+                        }
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    fn enqueue(&mut self, resp: &Response) {
+        // Serializing into a Vec cannot fail.
+        let _ = write_response(&mut self.outbuf, resp);
+    }
+}

@@ -1,0 +1,123 @@
+//! The reactor gateway core: a std-only non-blocking event loop.
+//!
+//! Thread-per-connection tops out at a few thousand clients (one OS
+//! stack each, scheduler pressure at every wakeup); the production
+//! north star needs tens of thousands of mostly-idle keep-alive
+//! connections. This core serves them all from **one** thread: the
+//! listener and every accepted stream are switched to non-blocking
+//! mode, and a sweep loop advances each connection's state machine
+//! ([`conn::Conn`]) as far as its socket allows, without ever
+//! blocking. No epoll/kqueue binding (std exposes none) — the loop
+//! busy-sweeps while any socket is moving bytes and sleeps briefly
+//! (`POLL_IDLE`) only after a full sweep makes no progress. With
+//! in-memory backends whose operations complete in microseconds,
+//! routing inline on the sweep thread is faster than any handoff.
+//!
+//! # State-machine design rules
+//!
+//! 1. **Never block.** Every socket op is non-blocking; `WouldBlock`
+//!    parks the state where it stands, to be resumed on a later sweep.
+//!    Partial writes resume from a byte offset; partial requests wait
+//!    in the input buffer until [`try_parse_request`] sees a complete
+//!    frame (`Ok(None)` = incomplete, *distinct from malformed*).
+//! 2. **One response in flight per connection.** Requests are served
+//!    strictly in arrival order; the parser is re-run only once the
+//!    previous response has fully drained. Pipelined requests are
+//!    served back-to-back within one sweep when the socket keeps up.
+//! 3. **Reject before execute.** The shared [`Gatekeeper`] screens
+//!    every parsed request (auth `401`/`403`, token-bucket `429` with
+//!    `Retry-After`) before routing, and accepts beyond `max_conns`
+//!    are shed with `503 over-capacity` before any request byte is
+//!    read — so every rejection is provably unexecuted and clients may
+//!    blindly re-send.
+//! 4. **Stalls die, idleness lives.** A *partial* request that makes
+//!    no progress for `read_timeout` gets `408` and a close (slow
+//!    loris); an idle keep-alive connection (empty input buffer) is
+//!    never reaped, however long it sits.
+//! 5. **Drain, then die.** On shutdown the loop stops accepting,
+//!    closes idle connections immediately, finishes requests already
+//!    in flight, and gives up after `drain_timeout`.
+//!
+//! Routing, error mapping, and wire formats are shared with the
+//! threaded core (`server::route`), so the two cores are byte-identical
+//! to every client — pinned by running the full conformance suite
+//! against both.
+
+mod conn;
+
+use std::io;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::config::Gatekeeper;
+use super::server::shed_connection;
+use crate::objectstore::backend::Backend;
+
+use conn::Conn;
+
+#[allow(unused_imports)] // referenced by the module docs
+use super::http::try_parse_request;
+
+/// Sleep after a sweep that moved no bytes anywhere. Long enough to
+/// stay off the CPU when fully idle, short enough (< a loopback RTT
+/// budget) to not show up in the stress latency histograms.
+const POLL_IDLE: Duration = Duration::from_micros(500);
+
+/// Most accepts taken per sweep, so an accept storm cannot starve
+/// established connections.
+const ACCEPT_BURST: usize = 256;
+
+/// The reactor event loop. Runs until `stop` is set, then drains.
+pub(crate) fn run_loop(
+    listener: TcpListener,
+    backend: Arc<dyn Backend>,
+    gate: Arc<Gatekeeper>,
+    stop: &AtomicBool,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        let stopping = stop.load(Ordering::Relaxed);
+        let mut progress = false;
+        if stopping {
+            drain_deadline.get_or_insert_with(|| Instant::now() + gate.cfg.drain_timeout);
+        } else {
+            for _ in 0..ACCEPT_BURST {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        progress = true;
+                        if conns.len() >= gate.cfg.max_conns {
+                            let gate = gate.clone();
+                            // Throwaway thread: the shed path does
+                            // short blocking I/O we must not absorb.
+                            std::thread::spawn(move || shed_connection(stream, &gate));
+                        } else if stream.set_nonblocking(true).is_ok() {
+                            conns.push(Conn::new(stream));
+                        }
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(_) => break,
+                }
+            }
+        }
+        let now = Instant::now();
+        for conn in conns.iter_mut() {
+            progress |= conn.poll(&*backend, &gate, now, stopping);
+        }
+        conns.retain(|c| !c.is_closed());
+        if stopping {
+            let deadline = drain_deadline.expect("set on first stopping sweep");
+            if conns.is_empty() || Instant::now() >= deadline {
+                return;
+            }
+        }
+        if !progress {
+            std::thread::sleep(POLL_IDLE);
+        }
+    }
+}

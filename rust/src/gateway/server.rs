@@ -30,11 +30,22 @@
 //! so [`super::client::HttpBackend`] can reconstruct the exact
 //! [`BackendError`] without parsing prose.
 //!
-//! One thread per connection (keep-alive until the peer closes);
-//! concurrency safety is the inner backend's contract (`Backend` is
-//! `Send + Sync`, and its atomic-PUT guarantee is what makes concurrent
-//! gateway clients safe).
+//! Two interchangeable connection cores serve these routes. The legacy
+//! **threaded** core (one thread per connection, keep-alive until the
+//! peer closes) is the library default, so `GatewayServer::bind` keeps
+//! its PR 5 behavior byte-for-byte. The **reactor** core
+//! ([`super::reactor`]) is a std-only non-blocking event loop — the
+//! `serve` CLI default — for connection counts thread-per-connection
+//! cannot reach. Both cores screen every parsed request through the
+//! shared [`Gatekeeper`] (bearer auth, token-bucket 429s) and shed
+//! accepts beyond `max_conns` with an immediate `503
+//! x-error-kind: over-capacity`; with a default config the gatekeeper
+//! admits everything, so conformance stays byte-identical. Concurrency
+//! safety is the inner backend's contract (`Backend` is `Send + Sync`,
+//! and its atomic-PUT guarantee is what makes concurrent gateway
+//! clients safe).
 
+use super::config::{Gatekeeper, GatewayConfig, GatewayMode};
 use super::encoding::{meta_header, parse_query, pct_decode, pct_encode, query_param};
 use super::http::{read_request, write_response, Request, Response};
 use crate::objectstore::backend::{Backend, BackendError};
@@ -42,9 +53,10 @@ use crate::objectstore::object::{Metadata, Object};
 use crate::simclock::SimInstant;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// A bound-but-not-yet-serving gateway. Bind first (so callers learn
 /// the ephemeral port), then [`GatewayServer::spawn`] or
@@ -52,23 +64,36 @@ use std::thread::JoinHandle;
 pub struct GatewayServer {
     listener: TcpListener,
     backend: Arc<dyn Backend>,
+    gate: Arc<Gatekeeper>,
 }
 
-/// Handle to a spawned gateway: keeps the accept loop alive; stops it
+/// Handle to a spawned gateway: keeps the serving loop alive; stops it
 /// on [`GatewayHandle::shutdown`] or drop.
 pub struct GatewayHandle {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    gate: Arc<Gatekeeper>,
     join: Option<JoinHandle<()>>,
 }
 
 impl GatewayServer {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) over
-    /// `backend`.
+    /// `backend`, with the default config (threaded core, no limits).
     pub fn bind(addr: &str, backend: Arc<dyn Backend>) -> std::io::Result<Self> {
+        Self::bind_with(addr, backend, GatewayConfig::default())
+    }
+
+    /// Bind with an explicit [`GatewayConfig`] (core selection,
+    /// connection cap, rate limit, bearer auth, timeouts).
+    pub fn bind_with(
+        addr: &str,
+        backend: Arc<dyn Backend>,
+        config: GatewayConfig,
+    ) -> std::io::Result<Self> {
         Ok(Self {
             listener: TcpListener::bind(addr)?,
             backend,
+            gate: Arc::new(Gatekeeper::new(config)),
         })
     }
 
@@ -82,36 +107,95 @@ impl GatewayServer {
         let addr = self.local_addr();
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let join = std::thread::spawn(move || self.accept_loop(&stop2));
+        let gate = self.gate.clone();
+        let join = std::thread::spawn(move || self.serve(&stop2));
         GatewayHandle {
             addr,
             stop,
+            gate,
             join: Some(join),
         }
     }
 
     /// Serve on the calling thread, forever (the `serve` subcommand).
     pub fn run(self) {
-        self.accept_loop(&AtomicBool::new(false));
+        self.serve(&AtomicBool::new(false));
+    }
+
+    fn serve(self, stop: &AtomicBool) {
+        match self.gate.cfg.mode {
+            GatewayMode::Threaded => self.accept_loop(stop),
+            GatewayMode::Reactor => {
+                super::reactor::run_loop(self.listener, self.backend, self.gate, stop)
+            }
+        }
     }
 
     fn accept_loop(self, stop: &AtomicBool) {
+        let active = Arc::new(AtomicUsize::new(0));
         for conn in self.listener.incoming() {
             if stop.load(Ordering::Relaxed) {
                 return;
             }
             let Ok(stream) = conn else { continue };
+            if active.load(Ordering::Relaxed) >= self.gate.cfg.max_conns {
+                let gate = self.gate.clone();
+                std::thread::spawn(move || shed_connection(stream, &gate));
+                continue;
+            }
+            active.fetch_add(1, Ordering::Relaxed);
             let backend = self.backend.clone();
+            let gate = self.gate.clone();
+            let active = active.clone();
             // Detached per-connection thread: exits when the peer
             // closes (read returns EOF) or sends garbage.
-            std::thread::spawn(move || serve_connection(stream, &*backend));
+            std::thread::spawn(move || {
+                serve_connection(stream, &*backend, &gate);
+                active.fetch_sub(1, Ordering::Relaxed);
+            });
         }
     }
+}
+
+/// Refuse a connection accepted past `max_conns`: an immediate `503`
+/// with `x-error-kind: over-capacity` and `Retry-After`, written before
+/// any request byte is read — so the peer knows nothing executed and a
+/// blind re-send is safe. Runs on a throwaway thread (both cores) so a
+/// stalled peer cannot slow the accept path; the short post-write drain
+/// keeps a close-with-unread-data RST from destroying the 503 in the
+/// peer's receive buffer.
+pub(crate) fn shed_connection(mut stream: TcpStream, gate: &Gatekeeper) {
+    let resp = gate.overloaded();
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+    if write_response(&mut stream, &resp).is_err() {
+        return;
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut scratch = [0u8; 4096];
+    use std::io::Read as _;
+    while matches!(stream.read(&mut scratch), Ok(n) if n > 0) {}
 }
 
 impl GatewayHandle {
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// `429`s the gatekeeper has emitted (observability for tests/CLI).
+    pub fn throttled_429s(&self) -> u64 {
+        self.gate.rejected_429s()
+    }
+
+    /// Connections shed at the cap with a `503`.
+    pub fn shed_503s(&self) -> u64 {
+        self.gate.shed_503s()
+    }
+
+    /// Requests rejected with `401`/`403`.
+    pub fn rejected_auths(&self) -> u64 {
+        self.gate.rejected_auths()
     }
 
     /// Stop accepting and join the accept loop. Established connections
@@ -136,7 +220,7 @@ impl Drop for GatewayHandle {
 }
 
 /// Keep-alive request loop for one connection.
-fn serve_connection(stream: TcpStream, backend: &dyn Backend) {
+fn serve_connection(stream: TcpStream, backend: &dyn Backend, gate: &Gatekeeper) {
     let Ok(write_half) = stream.try_clone() else { return };
     let mut write_half = write_half;
     let mut reader = BufReader::new(stream);
@@ -151,7 +235,13 @@ fn serve_connection(stream: TcpStream, backend: &dyn Backend) {
                 return;
             }
         };
-        let resp = route(backend, &mut req);
+        // Screen (auth, rate limit) before routing: a 401/403/429 means
+        // the request never executed. Framing is intact, so the
+        // connection stays open for the retry.
+        let resp = match gate.screen(&req) {
+            Some(rejection) => rejection,
+            None => route(backend, &mut req),
+        };
         if write_response(&mut write_half, &resp).is_err() {
             return;
         }
@@ -236,8 +326,9 @@ fn parse_range(spec: &str) -> Option<(u64, u64)> {
 
 /// Dispatch one request against the backend. Takes the request mutably
 /// so body-consuming routes (object PUT, part upload) can move the
-/// payload out instead of copying it.
-fn route(backend: &dyn Backend, req: &mut Request) -> Response {
+/// payload out instead of copying it. `pub(crate)` so the reactor core
+/// routes through the identical table.
+pub(crate) fn route(backend: &dyn Backend, req: &mut Request) -> Response {
     let path = std::mem::take(&mut req.path);
     let trimmed = path.trim_start_matches('/');
     if trimmed == "healthz" {

@@ -340,7 +340,7 @@ impl Sweep {
 //
 // Unlike every table above, these report *measured wall-clock* numbers
 // from the `stress` load plane, not virtual-clock simulation — the text
-// rendering of what BENCH_6.json serializes.
+// rendering of what BENCH_7.json serializes.
 
 /// Per-op-class latency table for one stress run.
 pub fn render_stress_latency(run: &crate::loadgen::StressRun) -> String {
@@ -398,6 +398,28 @@ pub fn render_stress_matrix(cells: &[crate::loadgen::MatrixCell]) -> String {
     t.render()
 }
 
+/// The reactor-vs-threaded server-core head-to-head: identical fixed op
+/// budgets against a fresh in-process gateway per core.
+pub fn render_stress_cores(rows: &[crate::loadgen::CoreRow]) -> String {
+    let mut t = Table::new(
+        "server cores — same op budget, reactor vs thread-per-connection",
+        &["core", "clients", "ops", "elapsed s", "ops/s", "put p95 µs", "get p95 µs", "violations"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.core.clone(),
+            r.clients.to_string(),
+            r.total_ops.to_string(),
+            format!("{:.2}", r.elapsed_s),
+            format!("{:.0}", r.ops_per_sec),
+            format!("{:.1}", r.put_p95_us),
+            format!("{:.1}", r.get_p95_us),
+            r.violation_count.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 /// Paper Table 8 row for quick reference in benches.
 pub fn table8_paper_note() -> &'static str {
     "paper: Teragen cost ratios — H-S Base x8.23, S3a Base x27.82, \
@@ -444,7 +466,7 @@ mod tests {
 
     #[test]
     fn stress_tables_render() {
-        use crate::loadgen::{aggregate, MatrixCell, OpClass, WorkerReport, OP_CLASSES};
+        use crate::loadgen::{aggregate, CoreRow, MatrixCell, OpClass, WorkerReport, OP_CLASSES};
         use crate::metrics::Histogram;
         let mut r = WorkerReport {
             executed: [0; OP_CLASSES],
@@ -454,6 +476,8 @@ mod tests {
             upload_ids: Vec::new(),
             bytes_written: 4096,
             bytes_read: 0,
+            throttled_429: 0,
+            shed_503: 0,
         };
         r.executed[OpClass::Put.index()] = 5;
         r.hists[OpClass::Put.index()].record_nanos(10_000);
@@ -465,6 +489,12 @@ mod tests {
         let mat = render_stress_matrix(&[MatrixCell::of(&run)]);
         assert!(mat.contains("ops/s"), "{mat}");
         assert!(mat.contains("1024"), "{mat}");
+        let cores = render_stress_cores(&[
+            CoreRow::of("reactor", &run),
+            CoreRow::of("threaded", &run),
+        ]);
+        assert!(cores.contains("reactor"), "{cores}");
+        assert!(cores.contains("threaded"), "{cores}");
     }
 
     #[test]

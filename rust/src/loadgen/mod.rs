@@ -26,20 +26,26 @@
 //!    a pure function of `(seed, worker id)`.
 //!
 //! Readiness is polled on the gateway's `/healthz` ([`wait_healthy`]) —
-//! never a sleep. Every run serializes to `BENCH_6.json`
-//! ([`report::StressReport`]), establishing the `BENCH_<n>.json`
+//! never a sleep. Every run serializes to `BENCH_7.json`
+//! ([`report::StressReport`]), continuing the `BENCH_<n>.json`
 //! perf-trajectory convention: one measured-performance artifact per PR,
-//! diffable across the repo's history.
+//! diffable across the repo's history. Two knobs exercise the reactor
+//! core specifically: `--open-conns N` holds N idle keep-alive
+//! connections across the whole main hammer (the thread-per-connection
+//! core would need N parked threads; the reactor holds them in one), and
+//! in-process runs with `--matrix` append a reactor-vs-threaded
+//! [`CoreRow`] comparison at identical op budgets.
 
 pub mod report;
 pub mod workload;
 
-pub use report::{aggregate, MatrixCell, StressReport, StressRun, BENCH_FILE};
+pub use report::{aggregate, CoreRow, MatrixCell, StressReport, StressRun, BENCH_FILE};
 pub use workload::{run_worker, OpClass, WorkerConfig, WorkerReport, OP_CLASSES};
 
 use crate::gateway::http::{read_response, write_request, Headers};
-use crate::gateway::{unique_namespace, GatewayHandle, GatewayServer};
-use crate::metrics::Histogram;
+use crate::gateway::{
+    unique_namespace, GatewayConfig, GatewayHandle, GatewayMode, GatewayServer,
+};
 use crate::objectstore::backend::ShardedMemBackend;
 use std::io::BufReader;
 use std::net::TcpStream;
@@ -73,9 +79,21 @@ pub struct StressConfig {
     /// `duration`).
     pub ops_per_client: Option<u64>,
     /// Run the clients × shards × payload sweep after the main hammer.
+    /// For in-process runs this also runs the reactor-vs-threaded core
+    /// comparison (the same fixed op budget at each server core).
     pub matrix: bool,
     /// Where to write the BENCH JSON; `None` = don't write.
     pub bench_path: Option<PathBuf>,
+    /// Idle keep-alive connections to establish (one `/healthz`
+    /// round-trip each, then held open) for the whole main hammer —
+    /// `--open-conns`, the 10k-connection acceptance knob.
+    pub open_conns: usize,
+    /// Bearer token forwarded to every worker (`--token`), for gateways
+    /// running with auth enabled.
+    pub token: Option<String>,
+    /// Which server core in-process gateways run (`--core`). External
+    /// `--target` gateways chose their own at `serve` time.
+    pub core: GatewayMode,
 }
 
 impl Default for StressConfig {
@@ -90,6 +108,10 @@ impl Default for StressConfig {
             ops_per_client: None,
             matrix: true,
             bench_path: Some(PathBuf::from(BENCH_FILE)),
+            open_conns: 0,
+            token: None,
+            // The stress plane dogfoods the scalable core by default.
+            core: GatewayMode::Reactor,
         }
     }
 }
@@ -126,13 +148,38 @@ pub fn wait_healthy(addr: &str, timeout: Duration) -> Result<(), String> {
     }
 }
 
-/// Spawn an in-process gateway over a fresh sharded in-memory store.
-fn serve_in_process(shards: usize) -> Result<(String, GatewayHandle), String> {
+/// Spawn an in-process gateway over a fresh sharded in-memory store,
+/// running the given server core.
+fn serve_in_process(shards: usize, core: GatewayMode) -> Result<(String, GatewayHandle), String> {
     let backend = Arc::new(ShardedMemBackend::new(shards));
-    let server =
-        GatewayServer::bind("127.0.0.1:0", backend).map_err(|e| format!("bind gateway: {e}"))?;
+    let config = GatewayConfig { mode: core, ..GatewayConfig::default() };
+    let server = GatewayServer::bind_with("127.0.0.1:0", backend, config)
+        .map_err(|e| format!("bind gateway: {e}"))?;
     let handle = server.spawn();
     Ok((handle.addr().to_string(), handle))
+}
+
+/// Establish `n` idle keep-alive connections: one `/healthz` round-trip
+/// each (proving the server registered the connection), then hold the
+/// socket open. Returns the held sockets — alive until dropped — plus
+/// the count actually established; a connect/probe failure (e.g. the
+/// gateway shedding at its connection cap) costs a hold, not an error.
+fn open_idle_conns(addr: &str, n: usize) -> (Vec<TcpStream>, u64) {
+    let mut held = Vec::with_capacity(n);
+    for _ in 0..n {
+        let Ok(stream) = TcpStream::connect(addr) else { continue };
+        let Ok(mut write_half) = stream.try_clone() else { continue };
+        if write_request(&mut write_half, "GET", "/healthz", &Headers::new(), b"").is_err() {
+            continue;
+        }
+        let mut reader = BufReader::new(stream);
+        match read_response(&mut reader) {
+            Ok(resp) if resp.status == 200 => held.push(reader.into_inner()),
+            _ => {}
+        }
+    }
+    let count = held.len() as u64;
+    (held, count)
 }
 
 /// One hammer run: `clients` workers against the gateway at `addr`,
@@ -146,6 +193,7 @@ fn hammer(
     seed: u64,
     ops: Option<u64>,
     duration: Option<Duration>,
+    token: Option<&str>,
 ) -> StressRun {
     // One namespace per run: repeated runs (and sweep cells) against a
     // long-lived served store never collide on container creation.
@@ -156,6 +204,7 @@ fn hammer(
             let barrier = barrier.clone();
             let addr = addr.to_string();
             let ns = ns.clone();
+            let token = token.map(str::to_string);
             std::thread::spawn(move || {
                 barrier.wait();
                 // Duration mode starts each worker's clock at the
@@ -169,6 +218,7 @@ fn hammer(
                     payload,
                     ops,
                     deadline,
+                    token,
                 })
             })
         })
@@ -179,14 +229,11 @@ fn hammer(
         .into_iter()
         .enumerate()
         .map(|(id, h)| {
-            h.join().unwrap_or_else(|_| WorkerReport {
-                executed: [0; OP_CLASSES],
-                hists: vec![Histogram::new(); OP_CLASSES],
-                violations: vec![format!("worker {id}: panicked")],
-                violation_count: 1,
-                upload_ids: Vec::new(),
-                bytes_written: 0,
-                bytes_read: 0,
+            h.join().unwrap_or_else(|_| {
+                let mut r = WorkerReport::new();
+                r.violations = vec![format!("worker {id}: panicked")];
+                r.violation_count = 1;
+                r
             })
         })
         .collect();
@@ -224,7 +271,7 @@ fn sweep_matrix(cfg: &StressConfig) -> Result<Vec<MatrixCell>, String> {
         let (addr, handle) = match (cfg.target.as_deref(), shards) {
             (Some(t), _) => (t.to_string(), None),
             (None, Some(n)) => {
-                let (a, h) = serve_in_process(n)?;
+                let (a, h) = serve_in_process(n, cfg.core)?;
                 (a, Some(h))
             }
             (None, None) => unreachable!("in-process shard axis is always Some"),
@@ -243,6 +290,7 @@ fn sweep_matrix(cfg: &StressConfig) -> Result<Vec<MatrixCell>, String> {
                     seed,
                     Some(MATRIX_OPS_PER_CLIENT),
                     None,
+                    cfg.token.as_deref(),
                 );
                 cells.push(MatrixCell::of(&run));
             }
@@ -254,10 +302,38 @@ fn sweep_matrix(cfg: &StressConfig) -> Result<Vec<MatrixCell>, String> {
     Ok(cells)
 }
 
-/// Run the whole stress deliverable: the main hammer, the optional
-/// matrix sweep, and the BENCH JSON. Errors are infrastructure failures
-/// (bind, readiness, file write); correctness *violations* come back in
-/// the report for the caller to surface and turn into an exit code.
+/// Head-to-head server-core comparison: the exact same fixed-budget
+/// hammer against a fresh in-process gateway per [`GatewayMode`], so the
+/// reactor's one-thread event loop and the legacy thread-per-connection
+/// core answer for the same ops on the same machine. Only meaningful for
+/// in-process runs — an external `--target` already chose its core.
+fn core_comparison(cfg: &StressConfig) -> Result<Vec<CoreRow>, String> {
+    let mut rows = Vec::new();
+    for mode in [GatewayMode::Reactor, GatewayMode::Threaded] {
+        let (addr, handle) = serve_in_process(cfg.shards, mode)?;
+        wait_healthy(&addr, HEALTHY_TIMEOUT)?;
+        let run = hammer(
+            &addr,
+            cfg.clients,
+            Some(cfg.shards),
+            cfg.payload,
+            cfg.seed,
+            Some(2 * MATRIX_OPS_PER_CLIENT),
+            None,
+            cfg.token.as_deref(),
+        );
+        handle.shutdown();
+        rows.push(CoreRow::of(mode.name(), &run));
+    }
+    Ok(rows)
+}
+
+/// Run the whole stress deliverable: the main hammer (with `open_conns`
+/// idle connections held for its full span), the optional matrix sweep
+/// and core comparison, and the BENCH JSON. Errors are infrastructure
+/// failures (bind, readiness, file write); correctness *violations* come
+/// back in the report for the caller to surface and turn into an exit
+/// code.
 pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
     let ops = cfg.ops_per_client;
     // Op budget wins; otherwise duration, defaulting to 2s.
@@ -266,15 +342,27 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
     } else {
         Some(cfg.duration.unwrap_or(Duration::from_secs(2)))
     };
-    let (run, target_desc) = match cfg.target.as_deref() {
+    let (run, target_desc, open_conns_held) = match cfg.target.as_deref() {
         Some(addr) => {
             wait_healthy(addr, HEALTHY_TIMEOUT)?;
-            let run = hammer(addr, cfg.clients, None, cfg.payload, cfg.seed, ops, duration);
-            (run, addr.to_string())
+            let (held, held_n) = open_idle_conns(addr, cfg.open_conns);
+            let run = hammer(
+                addr,
+                cfg.clients,
+                None,
+                cfg.payload,
+                cfg.seed,
+                ops,
+                duration,
+                cfg.token.as_deref(),
+            );
+            drop(held);
+            (run, addr.to_string(), held_n)
         }
         None => {
-            let (addr, handle) = serve_in_process(cfg.shards)?;
+            let (addr, handle) = serve_in_process(cfg.shards, cfg.core)?;
             wait_healthy(&addr, HEALTHY_TIMEOUT)?;
+            let (held, held_n) = open_idle_conns(&addr, cfg.open_conns);
             let run = hammer(
                 &addr,
                 cfg.clients,
@@ -283,9 +371,11 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
                 cfg.seed,
                 ops,
                 duration,
+                cfg.token.as_deref(),
             );
+            drop(held);
             handle.shutdown();
-            (run, "in-process".to_string())
+            (run, "in-process".to_string(), held_n)
         }
     };
     let matrix = if cfg.matrix {
@@ -293,10 +383,18 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
     } else {
         Vec::new()
     };
+    let cores = if cfg.matrix && cfg.target.is_none() {
+        core_comparison(cfg)?
+    } else {
+        Vec::new()
+    };
     let report = StressReport {
         target: target_desc,
         run,
         matrix,
+        cores,
+        open_conns: cfg.open_conns as u64,
+        open_conns_held,
     };
     if let Some(path) = &cfg.bench_path {
         report
@@ -319,7 +417,7 @@ mod tests {
 
     #[test]
     fn wait_healthy_succeeds_on_live_gateway_and_fails_fast_on_dead() {
-        let (addr, handle) = serve_in_process(2).unwrap();
+        let (addr, handle) = serve_in_process(2, GatewayMode::Reactor).unwrap();
         wait_healthy(&addr, Duration::from_secs(5)).expect("live gateway is healthy");
         handle.shutdown();
         // A port nothing listens on: bind-then-drop to find one.

@@ -10,7 +10,7 @@ use crate::metrics::{Histogram, LatencySummary};
 use crate::util::json::Json;
 
 /// The BENCH file this PR's load plane writes by default.
-pub const BENCH_FILE: &str = "BENCH_6.json";
+pub const BENCH_FILE: &str = "BENCH_7.json";
 
 /// One aggregated hammer run: N clients against one gateway.
 #[derive(Debug)]
@@ -37,6 +37,10 @@ pub struct StressRun {
     pub violation_count: u64,
     pub upload_ids_issued: u64,
     pub upload_ids_unique: u64,
+    /// Real `429`s absorbed (slept + re-sent) by the workers' backends.
+    pub throttled_429: u64,
+    /// Over-capacity `503`s absorbed the same way.
+    pub shed_503: u64,
 }
 
 /// Cap on violation sample messages carried in a run / the BENCH file.
@@ -60,6 +64,8 @@ pub fn aggregate(
     let mut ids: Vec<u64> = Vec::new();
     let mut bytes_written = 0u64;
     let mut bytes_read = 0u64;
+    let mut throttled_429 = 0u64;
+    let mut shed_503 = 0u64;
     for r in reports {
         for i in 0..OP_CLASSES {
             executed[i] += r.executed[i];
@@ -74,6 +80,8 @@ pub fn aggregate(
         ids.extend(r.upload_ids);
         bytes_written += r.bytes_written;
         bytes_read += r.bytes_read;
+        throttled_429 += r.throttled_429;
+        shed_503 += r.shed_503;
     }
     let issued = ids.len() as u64;
     ids.sort_unstable();
@@ -109,6 +117,8 @@ pub fn aggregate(
         violation_count,
         upload_ids_issued: issued,
         upload_ids_unique: unique,
+        throttled_429,
+        shed_503,
     }
 }
 
@@ -158,13 +168,51 @@ impl MatrixCell {
     }
 }
 
-/// The whole deliverable: the main hammer run plus the sweep matrix.
+/// One row of the reactor-vs-threaded core comparison: the same fixed
+/// op budget driven at each server core, throughput and tail latency
+/// side by side.
+#[derive(Debug, Clone)]
+pub struct CoreRow {
+    /// `"reactor"` or `"threaded"`.
+    pub core: String,
+    pub clients: usize,
+    pub total_ops: u64,
+    pub elapsed_s: f64,
+    pub ops_per_sec: f64,
+    pub put_p95_us: f64,
+    pub get_p95_us: f64,
+    pub violation_count: u64,
+}
+
+impl CoreRow {
+    pub fn of(core: &str, run: &StressRun) -> CoreRow {
+        CoreRow {
+            core: core.to_string(),
+            clients: run.clients,
+            total_ops: run.total_ops,
+            elapsed_s: run.elapsed_s,
+            ops_per_sec: run.ops_per_sec,
+            put_p95_us: run.summary_for(OpClass::Put).p95_us,
+            get_p95_us: run.summary_for(OpClass::Get).p95_us,
+            violation_count: run.violation_count,
+        }
+    }
+}
+
+/// The whole deliverable: the main hammer run, the sweep matrix, and
+/// the core comparison.
 #[derive(Debug)]
 pub struct StressReport {
     /// `"in-process"` or the `--target` address.
     pub target: String,
     pub run: StressRun,
     pub matrix: Vec<MatrixCell>,
+    /// Reactor-vs-threaded comparison rows (empty when skipped).
+    pub cores: Vec<CoreRow>,
+    /// Idle keep-alive connections requested with `--open-conns`.
+    pub open_conns: u64,
+    /// How many of them were actually established and held.
+    pub open_conns_held: u64,
 }
 
 fn shards_json(shards: Option<usize>) -> Json {
@@ -185,14 +233,30 @@ fn summary_json(s: &LatencySummary) -> Json {
 }
 
 impl StressReport {
-    /// Serialize for `BENCH_6.json`: per-op-class wall-clock percentiles
-    /// plus the clients × shards × payload throughput matrix.
+    /// Serialize for `BENCH_7.json`: per-op-class wall-clock percentiles,
+    /// the clients × shards × payload throughput matrix, the open-conns
+    /// hold, backpressure counters, and the core comparison.
     pub fn to_json(&self) -> Json {
         let run = &self.run;
         let mut classes = Json::obj();
         for c in OpClass::ALL {
             classes = classes.set(c.name(), summary_json(run.summary_for(c)));
         }
+        let cores: Vec<Json> = self
+            .cores
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("core", r.core.as_str())
+                    .set("clients", r.clients)
+                    .set("total_ops", r.total_ops)
+                    .set("elapsed_s", r.elapsed_s)
+                    .set("ops_per_sec", r.ops_per_sec)
+                    .set("put_p95_us", r.put_p95_us)
+                    .set("get_p95_us", r.get_p95_us)
+                    .set("violations", r.violation_count)
+            })
+            .collect();
         let matrix: Vec<Json> = self
             .matrix
             .iter()
@@ -211,7 +275,7 @@ impl StressReport {
             .collect();
         Json::obj()
             .set("bench", "stress-loadplane")
-            .set("issue", 6u64)
+            .set("issue", 7u64)
             .set("target", self.target.as_str())
             .set("seed", run.seed)
             .set("clients", run.clients)
@@ -234,8 +298,17 @@ impl StressReport {
                 "violation_samples",
                 Json::Arr(run.violations.iter().map(|v| Json::from(v.as_str())).collect()),
             )
+            .set("throttled_429", run.throttled_429)
+            .set("shed_503", run.shed_503)
+            .set(
+                "open_conns",
+                Json::obj()
+                    .set("requested", self.open_conns)
+                    .set("held", self.open_conns_held),
+            )
             .set("op_classes", classes)
             .set("matrix", Json::Arr(matrix))
+            .set("cores", Json::Arr(cores))
     }
 }
 
@@ -252,6 +325,8 @@ mod tests {
             upload_ids: ids,
             bytes_written: 1024,
             bytes_read: 512,
+            throttled_429: 3,
+            shed_503: 1,
         };
         r.executed[OpClass::Put.index()] = 10;
         r.hists[OpClass::Put.index()].record_nanos(5_000);
@@ -276,6 +351,8 @@ mod tests {
         assert_eq!(run.upload_ids_issued, 4);
         assert_eq!(run.upload_ids_unique, 4);
         assert_eq!(run.summary_for(OpClass::Put).count, 20);
+        assert_eq!(run.throttled_429, 6, "backpressure counters sum across workers");
+        assert_eq!(run.shed_503, 2);
         // A colliding id across workers is a violation.
         let bad = aggregate(
             vec![fake_report(vec![5]), fake_report(vec![5])],
@@ -295,6 +372,9 @@ mod tests {
         let report = StressReport {
             target: "in-process".into(),
             matrix: vec![MatrixCell::of(&run)],
+            cores: vec![CoreRow::of("reactor", &run), CoreRow::of("threaded", &run)],
+            open_conns: 2000,
+            open_conns_held: 2000,
             run,
         };
         let j = report.to_json();
@@ -302,11 +382,14 @@ mod tests {
         for field in [
             "\"bench\"", "\"op_classes\"", "\"put\"", "\"p50_us\"", "\"p95_us\"",
             "\"p99_us\"", "\"matrix\"", "\"ops_per_sec\"", "\"payload_bytes\"",
-            "\"multipart_ids\"",
+            "\"multipart_ids\"", "\"throttled_429\"", "\"shed_503\"",
+            "\"open_conns\"", "\"cores\"", "\"reactor\"", "\"threaded\"",
         ] {
             assert!(text.contains(field), "missing {field} in {text}");
         }
         assert_eq!(j.get("violations").and_then(Json::as_f64), Some(0.0));
         assert_eq!(j.get("seed").and_then(Json::as_f64), Some(9.0));
+        assert_eq!(j.get("issue").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(j.get("throttled_429").and_then(Json::as_f64), Some(3.0));
     }
 }

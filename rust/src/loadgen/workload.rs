@@ -96,6 +96,8 @@ pub struct WorkerConfig {
     pub ops: Option<u64>,
     /// Wall-clock stop time for duration mode.
     pub deadline: Option<Instant>,
+    /// Bearer token for a gateway running with auth enabled.
+    pub token: Option<String>,
 }
 
 /// What a worker brings home. Plain data, merged by the harness.
@@ -113,10 +115,17 @@ pub struct WorkerReport {
     pub upload_ids: Vec<u64>,
     pub bytes_written: u64,
     pub bytes_read: u64,
+    /// Real `429`s the worker's `HttpBackend` absorbed (slept out the
+    /// server's `Retry-After` and re-sent). Ops that recovered this way
+    /// count normally in `executed` — backpressure is invisible above
+    /// the Backend trait, which is the invariant under test.
+    pub throttled_429: u64,
+    /// Over-capacity `503`s absorbed the same way.
+    pub shed_503: u64,
 }
 
 impl WorkerReport {
-    fn new() -> Self {
+    pub(super) fn new() -> Self {
         Self {
             executed: [0; OP_CLASSES],
             hists: vec![Histogram::new(); OP_CLASSES],
@@ -125,6 +134,8 @@ impl WorkerReport {
             upload_ids: Vec::new(),
             bytes_written: 0,
             bytes_read: 0,
+            throttled_429: 0,
+            shed_503: 0,
         }
     }
 }
@@ -172,7 +183,10 @@ struct Worker {
 /// violation rather than a panic so the harness can aggregate it.
 pub fn run_worker(cfg: WorkerConfig) -> WorkerReport {
     let backend = match HttpBackend::connect(&cfg.addr, cfg.ns.clone()) {
-        Ok(b) => b,
+        Ok(b) => match &cfg.token {
+            Some(token) => b.with_token(token.clone()),
+            None => b,
+        },
         Err(e) => {
             let mut report = WorkerReport::new();
             report.violation_count = 1;
@@ -195,6 +209,8 @@ pub fn run_worker(cfg: WorkerConfig) -> WorkerReport {
         cfg,
     };
     w.run();
+    w.report.throttled_429 = w.backend.throttled_429s();
+    w.report.shed_503 = w.backend.shed_503s();
     w.report
 }
 

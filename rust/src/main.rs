@@ -6,10 +6,13 @@
 //! * `run --workload W --scenario S [--small] [--runs N]` — one cell.
 //! * `sweep [--workloads a,b,...] [--runs N] [--small]` — Tables 5-8 and
 //!   Figures 5-7 from one sweep, with the shape check.
-//! * `serve` — expose a backend as an HTTP gateway on a real socket.
+//! * `serve` — expose a backend as an HTTP gateway on a real socket;
+//!   `--config`/`STOCATOR_GATEWAY_*`/flags select the server core
+//!   (reactor event loop vs thread-per-connection), connection cap,
+//!   token-bucket rate limit, and bearer auth.
 //! * `stress [--clients N] [--seed S] ...` — measured-wall-clock load
 //!   plane: N threads hammer a gateway, verify as they go, and write
-//!   `BENCH_6.json`.
+//!   `BENCH_7.json`.
 
 use stocator::harness::tables::{render_table2, Sweep};
 use stocator::harness::traces::{table1_trace, table3_trace};
@@ -58,9 +61,14 @@ USAGE:
   stocator-sim run --workload W --scenario S [sizing] [--runs N]
   stocator-sim sweep [--workloads w1,w2] [--runs N] [sizing]
   stocator-sim serve [--backend B] [--addr HOST:PORT] [--addr-file PATH]
+                     [--config PATH] [--mode reactor|threaded]
+                     [--max-conns N] [--rate-limit OPS] [--burst N]
+                     [--auth-token TOKEN]
   stocator-sim stress [--clients N] [--shards N] [--target HOST:PORT]
                       [--payload BYTES] [--duration D | --ops N]
                       [--seed S] [--no-matrix] [--bench-out PATH]
+                      [--open-conns N] [--token TOKEN]
+                      [--core reactor|threaded]
 
   stress: real-concurrency load plane — N worker threads (default 8),
           each with its own HttpBackend connection pool, hammer a served
@@ -68,13 +76,19 @@ USAGE:
           abort mix, verifying bytes, ETags, multipart-id uniqueness and
           listing completeness as they go. Serves an in-process gateway
           over sharded:N (default 16) unless --target points at a
-          `stocator-sim serve`. --duration (default 2s; accepts 2s/
+          `stocator-sim serve`; --core picks the in-process server core
+          (default reactor). --duration (default 2s; accepts 2s/
           500ms/1.5) times the run; --ops N fixes a per-client op budget
-          instead (deterministic mix for a given --seed). Prints per-op-
-          class wall-clock p50/p95/p99 and (unless --no-matrix) a
-          clients × shards × payload throughput matrix; writes both to
-          --bench-out (default BENCH_6.json). Exits non-zero on any
-          correctness violation.
+          instead (deterministic mix for a given --seed). --open-conns N
+          additionally holds N idle keep-alive connections open across
+          the whole hammer (the reactor scalability knob); --token sends
+          `Authorization: Bearer` on every worker request. Prints per-
+          op-class wall-clock p50/p95/p99, (unless --no-matrix) a
+          clients × shards × payload throughput matrix plus a reactor-
+          vs-threaded core comparison, and the count of real 429/503
+          rejections the workers absorbed and recovered from; writes
+          everything to --bench-out (default BENCH_7.json). Exits
+          non-zero on any correctness violation.
 
   serve: expose a backend as an HTTP object-store gateway (REST routes
          PUT/GET/HEAD/DELETE /v1/{container}/{key}, Range reads, ETags,
@@ -83,6 +97,16 @@ USAGE:
          --addr-file when given). Point any run/sweep at it with
          --backend http:HOST:PORT — op counts and virtual runtimes are
          byte-identical to the in-process backends.
+         Gateway behavior is configured defaults → --config TOML file →
+         STOCATOR_GATEWAY_* env vars → flags: --mode picks the server
+         core (default reactor: one-thread non-blocking event loop;
+         threaded: legacy thread-per-connection), --max-conns caps
+         simultaneous connections (excess sheds an immediate 503 with
+         x-error-kind: over-capacity), --rate-limit OPS enables a
+         token-bucket limiter (real 429s with fractional Retry-After;
+         0 = off) with --burst capacity, and --auth-token requires
+         `Authorization: Bearer TOKEN` on every non-/healthz request
+         (401 missing / 403 wrong).
 
   sizing: --small (test sizing) or --paper (paper-faithful object
           counts, the default); mutually exclusive.
@@ -187,6 +211,10 @@ fn stress_config(args: &Args) -> Result<stocator::loadgen::StressConfig, String>
         None => None,
         Some(_) => Some(args.opt_u64("ops", 0)?),
     };
+    let core = match args.opt("core") {
+        None => dflt.core,
+        Some(s) => stocator::gateway::GatewayMode::parse(s).map_err(|e| format!("--core: {e}"))?,
+    };
     Ok(stocator::loadgen::StressConfig {
         clients: args.opt_u64("clients", dflt.clients as u64)?.max(1) as usize,
         shards: args.opt_u64("shards", dflt.shards as u64)?.max(1) as usize,
@@ -199,7 +227,32 @@ fn stress_config(args: &Args) -> Result<stocator::loadgen::StressConfig, String>
         bench_path: Some(std::path::PathBuf::from(
             args.opt_or("bench-out", stocator::loadgen::BENCH_FILE),
         )),
+        open_conns: args.opt_u64("open-conns", 0)? as usize,
+        token: args.opt("token").map(str::to_string),
+        core,
     })
+}
+
+/// Resolve the `serve` gateway config: defaults → `--config` file →
+/// `STOCATOR_GATEWAY_*` env → explicit flags, each later layer winning.
+fn serve_gateway_config(args: &Args) -> Result<stocator::gateway::GatewayConfig, String> {
+    let mut cfg = stocator::gateway::GatewayConfig::serve_default();
+    if let Some(path) = args.opt("config") {
+        cfg.apply_file(std::path::Path::new(path))?;
+    }
+    cfg.apply_env()?;
+    for (flag, key) in [
+        ("mode", "mode"),
+        ("max-conns", "max_conns"),
+        ("rate-limit", "rate_limit"),
+        ("burst", "burst"),
+        ("auth-token", "auth_token"),
+    ] {
+        if let Some(value) = args.opt(flag) {
+            cfg.set(key, value).map_err(|e| format!("--{flag}: {e}"))?;
+        }
+    }
+    Ok(cfg)
 }
 
 fn main() {
@@ -252,9 +305,16 @@ fn main() {
         Some("serve") => {
             use std::sync::Arc;
             let addr = args.opt_or("addr", "127.0.0.1:0");
+            let gw_cfg = match serve_gateway_config(&args) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("error: {e}\n{USAGE}");
+                    std::process::exit(2);
+                }
+            };
             let backend: Arc<dyn stocator::objectstore::Backend> =
                 Arc::from(stocator::objectstore::backend::make_backend(&sizing.backend));
-            let server = match stocator::gateway::GatewayServer::bind(addr, backend) {
+            let server = match stocator::gateway::GatewayServer::bind_with(addr, backend, gw_cfg.clone()) {
                 Ok(s) => s,
                 Err(e) => {
                     eprintln!("error: binding {addr}: {e}");
@@ -263,6 +323,7 @@ fn main() {
             };
             let local = server.local_addr();
             println!("gateway: serving backend {} on http://{local}", sizing.backend.label());
+            println!("gateway: {}", gw_cfg.describe());
             println!("gateway: connect with --backend http:{local}");
             if let Some(path) = args.opt("addr-file") {
                 if let Err(e) = std::fs::write(path, local.to_string()) {
@@ -273,7 +334,9 @@ fn main() {
             server.run();
         }
         Some("stress") => {
-            use stocator::harness::tables::{render_stress_latency, render_stress_matrix};
+            use stocator::harness::tables::{
+                render_stress_cores, render_stress_latency, render_stress_matrix,
+            };
             let cfg = match stress_config(&args) {
                 Ok(c) => c,
                 Err(e) => {
@@ -294,14 +357,30 @@ fn main() {
                     if !report.matrix.is_empty() {
                         print!("{}", render_stress_matrix(&report.matrix));
                     }
+                    if !report.cores.is_empty() {
+                        print!("{}", render_stress_cores(&report.cores));
+                    }
+                    if report.open_conns > 0 {
+                        println!(
+                            "open-conns: {} requested, {} held for the full run",
+                            report.open_conns, report.open_conns_held
+                        );
+                    }
+                    // Real backpressure the workers absorbed (server-
+                    // emitted 429s / over-capacity 503s that were slept
+                    // out and re-sent; the recovered ops count normally
+                    // above). CI greps these lines.
+                    println!("throttled-429s: {}", report.run.throttled_429);
+                    println!("shed-503s: {}", report.run.shed_503);
                     if let Some(p) = &cfg.bench_path {
                         println!("bench: wrote {}", p.display());
                     }
-                    // Matrix cells count too: a sweep that only goes
-                    // wrong under some clients × shards × payload shape
-                    // must still fail the run.
+                    // Matrix and core-comparison cells count too: a
+                    // sweep that only goes wrong under some shape must
+                    // still fail the run.
                     let total_violations = report.run.violation_count
-                        + report.matrix.iter().map(|m| m.violation_count).sum::<u64>();
+                        + report.matrix.iter().map(|m| m.violation_count).sum::<u64>()
+                        + report.cores.iter().map(|c| c.violation_count).sum::<u64>();
                     println!("violations: {total_violations}");
                     for v in &report.run.violations {
                         println!("  - {v}");
@@ -520,7 +599,10 @@ mod tests {
         assert_eq!(c.duration, Some(Duration::from_secs(2)));
         assert_eq!(c.ops_per_client, None);
         assert!(c.matrix);
-        assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("BENCH_6.json"));
+        assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("BENCH_7.json"));
+        assert_eq!(c.open_conns, 0);
+        assert_eq!(c.token, None);
+        assert_eq!(c.core, stocator::gateway::GatewayMode::Reactor);
         let c = stress_config(&args(&[
             "stress",
             "--clients", "32",
@@ -531,6 +613,9 @@ mod tests {
             "--seed", "11",
             "--no-matrix",
             "--bench-out", "out.json",
+            "--open-conns", "2000",
+            "--token", "hunter2",
+            "--core", "threaded",
         ]))
         .unwrap();
         assert_eq!(c.clients, 32);
@@ -541,12 +626,60 @@ mod tests {
         assert_eq!(c.seed, 11);
         assert!(!c.matrix);
         assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("out.json"));
+        assert_eq!(c.open_conns, 2000);
+        assert_eq!(c.token.as_deref(), Some("hunter2"));
+        assert_eq!(c.core, stocator::gateway::GatewayMode::Threaded);
         // --ops switches to the deterministic fixed-budget mode.
         let c = stress_config(&args(&["stress", "--ops", "40"])).unwrap();
         assert_eq!(c.ops_per_client, Some(40));
         // Bad spellings are parse errors, not panics.
         assert!(stress_config(&args(&["stress", "--duration", "soon"])).is_err());
         assert!(stress_config(&args(&["stress", "--clients", "many"])).is_err());
+        assert!(stress_config(&args(&["stress", "--core", "forked"])).is_err());
+    }
+
+    #[test]
+    fn serve_config_layers_file_env_and_flags() {
+        use stocator::gateway::GatewayMode;
+        // Flag-free default: the reactor core, limiter off.
+        let cfg = serve_gateway_config(&args(&["serve"])).unwrap();
+        assert_eq!(cfg.mode, GatewayMode::Reactor);
+        assert_eq!(cfg.rate_limit, 0.0);
+        // Explicit flags win (env vars are absent in this test run for
+        // these keys; the layering itself is pinned in gateway::config).
+        let cfg = serve_gateway_config(&args(&[
+            "serve",
+            "--mode", "threaded",
+            "--max-conns", "128",
+            "--rate-limit", "250.5",
+            "--burst", "16",
+            "--auth-token", "sesame",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.mode, GatewayMode::Threaded);
+        assert_eq!(cfg.max_conns, 128);
+        assert_eq!(cfg.rate_limit, 250.5);
+        assert_eq!(cfg.burst, 16);
+        assert_eq!(cfg.auth_token.as_deref(), Some("sesame"));
+        // Bad values are startup errors, not silent defaults.
+        assert!(serve_gateway_config(&args(&["serve", "--mode", "forked"])).is_err());
+        assert!(serve_gateway_config(&args(&["serve", "--max-conns", "0"])).is_err());
+        assert!(serve_gateway_config(&args(&["serve", "--config", "/no/such/file.toml"]))
+            .is_err());
+        // A config file layers under the flags.
+        let dir = std::env::temp_dir().join(format!("stocator-cli-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gw.toml");
+        std::fs::write(&path, "mode = \"threaded\"\nmax_conns = 64\n").unwrap();
+        let cfg = serve_gateway_config(&args(&[
+            "serve",
+            "--config", path.to_str().unwrap(),
+            "--max-conns", "256",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.mode, GatewayMode::Threaded, "file sets the core");
+        assert_eq!(cfg.max_conns, 256, "flag overrides the file");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

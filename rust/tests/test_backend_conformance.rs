@@ -10,7 +10,7 @@
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use stocator::gateway::{GatewayHandle, GatewayServer, HttpBackend};
+use stocator::gateway::{GatewayConfig, GatewayHandle, GatewayMode, GatewayServer, HttpBackend};
 use stocator::harness::{run_cell, Scenario, Sizing, Workload};
 use stocator::objectstore::backend::{Backend, BackendError, LocalFsBackend, ShardedMemBackend};
 use stocator::objectstore::{BackendKind, Metadata, Object};
@@ -74,6 +74,23 @@ fn fs_fixture() -> Fixture {
 fn http_fixture() -> Fixture {
     let inner = Arc::new(ShardedMemBackend::new(4));
     let server = GatewayServer::bind("127.0.0.1:0", inner).expect("bind ephemeral gateway");
+    let handle = server.spawn();
+    let client = HttpBackend::connect(&handle.addr().to_string(), None).expect("connect gateway");
+    Fixture {
+        backend: Box::new(client),
+        cleanup: None,
+        gateway: Some(handle),
+    }
+}
+
+/// The same wire path served by the non-blocking reactor core instead
+/// of thread-per-connection: every conformance check must pass
+/// byte-identically against either core.
+fn reactor_fixture() -> Fixture {
+    let inner = Arc::new(ShardedMemBackend::new(4));
+    let config = GatewayConfig { mode: GatewayMode::Reactor, ..GatewayConfig::default() };
+    let server =
+        GatewayServer::bind_with("127.0.0.1:0", inner, config).expect("bind reactor gateway");
     let handle = server.spawn();
     let client = HttpBackend::connect(&handle.addr().to_string(), None).expect("connect gateway");
     Fixture {
@@ -374,6 +391,7 @@ conformance_suite!(single_mem, mem_fixture(1));
 conformance_suite!(sharded_mem, mem_fixture(16));
 conformance_suite!(local_fs, fs_fixture());
 conformance_suite!(http_gateway, http_fixture());
+conformance_suite!(http_reactor, reactor_fixture());
 
 // ---- cross-backend and fs-specific checks ---------------------------------
 
@@ -552,13 +570,71 @@ fn front_end_op_counts_are_backend_invariant() {
         addr: gateway.addr().to_string(),
         ns: None,
     });
+    // The reactor core serves the same wire protocol from one
+    // non-blocking thread: same golden op counts.
+    let reactor = GatewayServer::bind_with(
+        "127.0.0.1:0",
+        Arc::new(ShardedMemBackend::new(4)),
+        GatewayConfig { mode: GatewayMode::Reactor, ..GatewayConfig::default() },
+    )
+    .expect("bind reactor gateway")
+    .spawn();
+    let (reactor_ops, reactor_rt) = run_with(BackendKind::Http {
+        addr: reactor.addr().to_string(),
+        ns: None,
+    });
     assert_eq!(mem_ops, sharded_ops);
     assert_eq!(mem_ops, fs_ops);
     assert_eq!(mem_ops, http_ops, "REST ops over the wire must match mem exactly");
+    assert_eq!(mem_ops, reactor_ops, "REST ops through the reactor core must match mem exactly");
     // Virtual-clock runtime is also invariant (jitter is 0 in small sizing).
     assert_eq!(mem_rt, sharded_rt);
     assert_eq!(mem_rt, fs_rt);
     assert_eq!(mem_rt, http_rt, "virtual runtime over the wire must match mem exactly");
+    assert_eq!(mem_rt, reactor_rt, "virtual runtime through the reactor must match mem exactly");
+}
+
+/// The headline invariance criterion for the production plane: a
+/// *rate-limited* reactor gateway emits real `429 Too Many Requests`
+/// on the wire, `HttpBackend` sleeps out each `Retry-After` and
+/// re-sends, and the workload's REST op accounting comes out
+/// byte-identical to an in-memory run — backpressure is invisible
+/// above the `Backend` trait.
+#[test]
+fn rate_limited_reactor_preserves_golden_op_counts() {
+    let run_with = |backend: BackendKind| {
+        let mut sizing = Sizing::small();
+        sizing.backend = backend;
+        let cell = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+        assert!(cell.valid, "{}", cell.validation);
+        (cell.ops, cell.runtime_mean_s)
+    };
+    let (mem_ops, mem_rt) = run_with(BackendKind::Mem);
+    // A rate low enough that the workload's request stream provably
+    // outruns the bucket, high enough that sleeping out the refills
+    // stays test-friendly.
+    let limited = GatewayServer::bind_with(
+        "127.0.0.1:0",
+        Arc::new(ShardedMemBackend::new(4)),
+        GatewayConfig {
+            mode: GatewayMode::Reactor,
+            rate_limit: 400.0,
+            burst: 8,
+            ..GatewayConfig::default()
+        },
+    )
+    .expect("bind rate-limited reactor")
+    .spawn();
+    let (ops, rt) = run_with(BackendKind::Http {
+        addr: limited.addr().to_string(),
+        ns: None,
+    });
+    assert!(
+        limited.throttled_429s() >= 1,
+        "the limiter must actually have rejected requests on the wire"
+    );
+    assert_eq!(mem_ops, ops, "op counts must survive real 429 backpressure unchanged");
+    assert_eq!(mem_rt, rt, "virtual runtime must survive real 429 backpressure unchanged");
 }
 
 /// Two cells against ONE long-lived gateway must not collide: the
@@ -672,6 +748,13 @@ fn fault_injection_is_backend_invariant() {
     let gateway = GatewayServer::bind("127.0.0.1:0", Arc::new(ShardedMemBackend::new(4)))
         .expect("bind gateway")
         .spawn();
+    let reactor = GatewayServer::bind_with(
+        "127.0.0.1:0",
+        Arc::new(ShardedMemBackend::new(4)),
+        GatewayConfig { mode: GatewayMode::Reactor, ..GatewayConfig::default() },
+    )
+    .expect("bind reactor gateway")
+    .spawn();
     let mut snapshots: Vec<(String, Vec<String>, u64, u64, Vec<String>)> = Vec::new();
     for kind in [
         BackendKind::Mem,
@@ -680,6 +763,10 @@ fn fault_injection_is_backend_invariant() {
         BackendKind::Http {
             addr: gateway.addr().to_string(),
             ns: Some("faults-inv".to_string()),
+        },
+        BackendKind::Http {
+            addr: reactor.addr().to_string(),
+            ns: Some("faults-inv-reactor".to_string()),
         },
     ] {
         let _reap = Reap(match &kind {

@@ -73,7 +73,7 @@ fn fixed_budget_op_mix_is_deterministic_for_a_seed() {
 fn bench_json_lands_on_disk_with_percentiles_and_matrix() {
     let dir = std::env::temp_dir().join(format!("stocator-loadgen-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join("BENCH_6.json");
+    let path = dir.join("BENCH_7.json");
     let cfg = StressConfig {
         clients: 2,
         shards: 2,
@@ -87,6 +87,11 @@ fn bench_json_lands_on_disk_with_percentiles_and_matrix() {
     let report = run_stress(&cfg).expect("stress run with matrix");
     assert!(!report.matrix.is_empty());
     assert!(report.matrix.iter().all(|m| m.violation_count == 0));
+    // In-process + matrix also runs the server-core head-to-head.
+    assert_eq!(report.cores.len(), 2);
+    assert!(report.cores.iter().any(|c| c.core == "reactor"));
+    assert!(report.cores.iter().any(|c| c.core == "threaded"));
+    assert!(report.cores.iter().all(|c| c.violation_count == 0));
     let text = std::fs::read_to_string(&path).expect("BENCH json written");
     for field in [
         "\"bench\"",
@@ -98,6 +103,9 @@ fn bench_json_lands_on_disk_with_percentiles_and_matrix() {
         "\"ops_per_sec\"",
         "\"multipart_ids\"",
         "\"violations\": 0",
+        "\"cores\"",
+        "\"throttled_429\"",
+        "\"open_conns\"",
     ] {
         assert!(text.contains(field), "missing {field}");
     }
