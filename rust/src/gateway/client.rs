@@ -5,8 +5,20 @@
 //! HTTP request (ranged reads of length zero become a HEAD — HTTP cannot
 //! spell an empty byte range — with the clamp check applied locally,
 //! which is observationally identical). Connections are pooled and
-//! reused (HTTP/1.1 keep-alive); a request that fails on a pooled —
-//! possibly stale — connection is retried once on a fresh one.
+//! reused (HTTP/1.1 keep-alive).
+//!
+//! **Every send failure is retryable.** GET/HEAD are idempotent by
+//! nature; each mutating request (`PUT`/`POST`/`DELETE`) is stamped
+//! with a unique `x-request-id` drawn from this backend's seeded PCG32
+//! stream and keeps that id across re-sends, so the gateway's replay
+//! cache answers a duplicate with the *original* response instead of
+//! re-executing. That turns "connection died mid-response" — killed,
+//! truncated, stalled past [`CLIENT_READ_TIMEOUT`], or reset sockets —
+//! from a fatal ambiguity into a blind re-send inside a bounded per-op
+//! budget ([`MAX_SEND_RETRIES`] attempts) with exponential backoff and
+//! decorrelated jitter. [`HttpBackend::retried_sends`] counts re-sends;
+//! [`HttpBackend::replayed_responses`] counts cache-answered duplicates
+//! (each one a mid-response failure recovered without re-execution).
 //!
 //! Name-bearing errors are reconstructed from the response's
 //! `x-error-kind` plus the *caller's* names, so a `NoSuchKey` from a
@@ -26,13 +38,17 @@
 //! count what was absorbed.
 
 use super::encoding::{encode_query, meta_header, pct_decode, pct_encode};
-use super::http::{read_response, write_request, Headers, Response, STALE_CONNECTION};
+use super::http::{
+    read_response, write_request, Headers, Response, REQUEST_ID, REQUEST_REPLAYED,
+    STALE_CONNECTION,
+};
 use crate::objectstore::backend::{
     clamp_range, AssembledUpload, Backend, BackendError, ListPage, ObjectStat,
 };
 use crate::objectstore::container::ObjectSummary;
 use crate::objectstore::object::{Metadata, Object};
 use crate::simclock::SimInstant;
+use crate::util::rng::Pcg32;
 use std::io::BufReader;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -50,10 +66,20 @@ pub struct HttpBackend {
     token: Option<String>,
     /// Idle keep-alive connections, at most [`MAX_POOLED_IDLE`].
     pool: Mutex<Vec<TcpStream>>,
+    /// Request-id and retry-jitter stream. Reseedable via
+    /// [`HttpBackend::with_rng_seed`]; the default stream is unique per
+    /// backend instance (time ⊕ pid seed, per-process stream counter)
+    /// because the gateway replay cache is keyed by id alone — two
+    /// clients drawing the same ids would replay each other's responses.
+    rng: Mutex<Pcg32>,
     /// `429`s absorbed by the backpressure retry loop.
     throttled: AtomicU64,
     /// Over-capacity `503`s absorbed by the backpressure retry loop.
     shed: AtomicU64,
+    /// Wire-level re-sends after send failures (the chaos-recovery path).
+    retried: AtomicU64,
+    /// Responses answered from the gateway's replay cache.
+    replayed: AtomicU64,
 }
 
 /// Most blind re-sends after backpressure rejections before the
@@ -65,6 +91,32 @@ const MAX_BACKPRESSURE_WAIT: Duration = Duration::from_secs(30);
 /// Cap on a single `Retry-After` sleep, so a hostile header cannot
 /// park a worker for minutes.
 const MAX_RETRY_AFTER_SECS: f64 = 5.0;
+
+/// Per-operation wire retry budget: re-sends after send failures
+/// (distinct from the backpressure budget above, which absorbs polite
+/// server rejections rather than a broken wire).
+pub const MAX_SEND_RETRIES: u32 = 8;
+/// Floor of the decorrelated-jitter retry pause.
+const RETRY_BASE: Duration = Duration::from_millis(5);
+/// Cap on any single retry pause.
+const RETRY_CAP: Duration = Duration::from_millis(250);
+/// How long a response read may block before the client declares the
+/// response dead and re-sends. Deliberately shorter than the server's
+/// chaos `stall` hold (`gateway::config::STALL_HOLD`, 3s) so a stalled
+/// response times out *here* and exercises the blind-re-send path.
+pub(crate) const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// The request-id / jitter stream used when the caller does not reseed:
+/// unique per backend instance, across processes sharing one gateway.
+fn unique_rng() -> Pcg32 {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let pid = u64::from(std::process::id());
+    Pcg32::with_stream(nanos ^ (pid << 32), SEQ.fetch_add(1, Ordering::Relaxed))
+}
 
 /// The server's `Retry-After`, parsed as (possibly fractional)
 /// delta-seconds per RFC 9110; a missing or unparseable header falls
@@ -91,7 +143,7 @@ fn io_err(ctx: &str, e: std::io::Error) -> BackendError {
 }
 
 /// A failed exchange, tagged with whether the failure proves the server
-/// never executed the request (making a re-send safe):
+/// never executed the request:
 ///
 /// * a **write-side** failure — the request never fully reached the
 ///   server, so it cannot have been parsed, let alone executed;
@@ -100,7 +152,13 @@ fn io_err(ctx: &str, e: std::io::Error) -> BackendError {
 ///   closed without a single byte never processed one.
 ///
 /// A failure while reading a partially received response gives no such
-/// guarantee and is NOT retried: several requests are not idempotent.
+/// guarantee — the request may well have executed. Those used to be
+/// terminal ("several requests are not idempotent"); now they are
+/// retried too, because the request-id replay protocol makes the blind
+/// re-send exact (see [`super::config::ReplayCache`]). The tag still
+/// matters for pacing: a provably-unexecuted failure on a pooled
+/// connection is routine keep-alive staleness and retries immediately,
+/// everything else backs off first.
 struct SendFailure {
     retry_safe: bool,
     error: std::io::Error,
@@ -119,13 +177,17 @@ impl HttpBackend {
             )));
         }
         let probe = TcpStream::connect(addr).map_err(|e| io_err("connect", e))?;
+        let _ = probe.set_read_timeout(Some(CLIENT_READ_TIMEOUT));
         Ok(Self {
             addr: addr.to_string(),
             ns,
             token: None,
             pool: Mutex::new(vec![probe]),
+            rng: Mutex::new(unique_rng()),
             throttled: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            retried: AtomicU64::new(0),
+            replayed: AtomicU64::new(0),
         })
     }
 
@@ -133,6 +195,17 @@ impl HttpBackend {
     /// every request (required when the gateway runs with `auth_token`).
     pub fn with_token(mut self, token: impl Into<String>) -> Self {
         self.token = Some(token.into());
+        self
+    }
+
+    /// Reseed the request-id / retry-jitter stream, making the id
+    /// sequence deterministic (the stress workers derive this from the
+    /// run seed, worker id, and run namespace). Seeds MUST be distinct
+    /// across clients that share a gateway: the replay cache is keyed
+    /// by id alone, so colliding streams would replay each other's
+    /// responses.
+    pub fn with_rng_seed(mut self, seed: u64) -> Self {
+        self.rng = Mutex::new(Pcg32::new(seed));
         self
     }
 
@@ -148,6 +221,44 @@ impl HttpBackend {
     /// Over-capacity `503`s absorbed by this backend.
     pub fn shed_503s(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Wire-level re-sends after send failures (killed, truncated,
+    /// stalled, or reset connections; refused connects). Visibly
+    /// nonzero under `--chaos`; normally zero on a healthy wire.
+    pub fn retried_sends(&self) -> u64 {
+        self.retried.load(Ordering::Relaxed)
+    }
+
+    /// Responses answered from the gateway's replay cache — each one a
+    /// mutating request whose first response died mid-flight and whose
+    /// blind re-send was recovered *without* re-execution.
+    pub fn replayed_responses(&self) -> u64 {
+        self.replayed.load(Ordering::Relaxed)
+    }
+
+    /// A fresh 128-bit idempotency id from this backend's seeded PCG32
+    /// stream. One id covers every wire re-send of one logical
+    /// operation — that equality is what the replay cache keys on.
+    fn fresh_request_id(&self) -> String {
+        let mut rng = self.rng.lock().unwrap();
+        format!("{:016x}{:016x}", rng.next_u64(), rng.next_u64())
+    }
+
+    /// Sleep out one decorrelated-jitter pause and return it (the seed
+    /// of the next draw): `min(cap, uniform(base, 3 × prev))`, so
+    /// concurrent clients retrying against a sick gateway spread out
+    /// instead of re-sending in lockstep.
+    fn backoff(&self, prev: Duration) -> Duration {
+        let base = RETRY_BASE.as_secs_f64();
+        let hi = (prev.as_secs_f64() * 3.0).max(base);
+        let draw = {
+            let mut rng = self.rng.lock().unwrap();
+            base + rng.next_f64() * (hi - base)
+        };
+        let pause = Duration::from_secs_f64(draw.min(RETRY_CAP.as_secs_f64()));
+        std::thread::sleep(pause);
+        pause
     }
 
     fn wire_container(&self, container: &str) -> String {
@@ -186,6 +297,11 @@ impl HttpBackend {
     /// blindly, for every verb — within a bounded budget. Past the
     /// budget the rejection is returned and the caller maps it to an
     /// error. Any other response passes through untouched.
+    ///
+    /// Mutating verbs are stamped with one `x-request-id` *here*, above
+    /// both retry loops, so every re-send — wire-failure or
+    /// backpressure — carries the same id and the gateway can recognize
+    /// a duplicate of an already-executed request.
     fn request(
         &self,
         method: &str,
@@ -193,6 +309,15 @@ impl HttpBackend {
         headers: &Headers,
         body: &[u8],
     ) -> Result<Response, BackendError> {
+        let stamped;
+        let headers = if matches!(method, "PUT" | "POST" | "DELETE") {
+            let mut h = headers.clone();
+            h.push(REQUEST_ID, self.fresh_request_id());
+            stamped = h;
+            &stamped
+        } else {
+            headers
+        };
         let mut attempts = 0u32;
         let mut waited = Duration::ZERO;
         loop {
@@ -218,12 +343,16 @@ impl HttpBackend {
         }
     }
 
-    /// One wire exchange, reusing a pooled connection when available. A
-    /// pooled connection may have gone stale; the request is re-sent on
-    /// a fresh connection ONLY when the failure proves the server never
-    /// executed it (see [`SendFailure`]) — a blind re-send could leak an
-    /// orphaned upload from `initiate` or turn a successful
-    /// `create_container` into a spurious 409.
+    /// One wire exchange, reusing a pooled connection when available,
+    /// retrying *any* send failure within [`MAX_SEND_RETRIES`]. The
+    /// blind re-send is sound because every request this client
+    /// produces is either naturally idempotent (`GET`/`HEAD`) or
+    /// carries an `x-request-id` the gateway's replay cache answers
+    /// duplicates from — so a re-send of an already-executed `initiate`
+    /// cannot leak a second upload, nor a re-sent `create_container`
+    /// turn into a spurious 409. The explicit check stays to document
+    /// that argument and to fail closed on any future unstamped
+    /// mutating verb.
     fn exchange(
         &self,
         method: &str,
@@ -241,17 +370,55 @@ impl HttpBackend {
                 &authed
             }
         };
-        let pooled = self.pool.lock().unwrap().pop();
-        if let Some(stream) = pooled {
+        let replay_protected =
+            headers.get(REQUEST_ID).is_some() || matches!(method, "GET" | "HEAD");
+        let mut attempts = 0u32;
+        let mut pause = RETRY_BASE;
+        loop {
+            let (stream, reused) = match self.pool.lock().unwrap().pop() {
+                Some(s) => (s, true),
+                None => match TcpStream::connect(&self.addr) {
+                    Ok(s) => {
+                        let _ = s.set_read_timeout(Some(CLIENT_READ_TIMEOUT));
+                        (s, false)
+                    }
+                    Err(error) => {
+                        // A refused connect is provably unexecuted; it
+                        // shares the attempt budget and backoff (the
+                        // gateway may be mid-restart).
+                        attempts += 1;
+                        if attempts > MAX_SEND_RETRIES {
+                            return Err(io_err("connect", error));
+                        }
+                        self.retried.fetch_add(1, Ordering::Relaxed);
+                        pause = self.backoff(pause);
+                        continue;
+                    }
+                },
+            };
             match self.send_on(stream, method, target, headers, body) {
-                Ok(resp) => return Ok(resp),
-                Err(f) if f.retry_safe => { /* stale; reconnect */ }
-                Err(f) => return Err(io_err("request", f.error)),
+                Ok(resp) => {
+                    if resp.headers.get(REQUEST_REPLAYED) == Some("true") {
+                        self.replayed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(resp);
+                }
+                Err(f) => {
+                    attempts += 1;
+                    if (!f.retry_safe && !replay_protected) || attempts > MAX_SEND_RETRIES {
+                        return Err(io_err("request", f.error));
+                    }
+                    self.retried.fetch_add(1, Ordering::Relaxed);
+                    // A provably-unexecuted failure on a pooled
+                    // connection is routine keep-alive staleness: go
+                    // again immediately on a fresh socket. Anything
+                    // else looks like a sick wire — back off first.
+                    if !(reused && f.retry_safe) {
+                        pause = self.backoff(pause);
+                    }
+                }
             }
         }
-        let fresh = TcpStream::connect(&self.addr).map_err(|e| io_err("connect", e))?;
-        self.send_on(fresh, method, target, headers, body)
-            .map_err(|f| io_err("request", f.error))
     }
 
     fn send_on(
@@ -407,10 +574,14 @@ impl Backend for HttpBackend {
     }
 
     fn container_exists(&self, name: &str) -> bool {
-        // The trait returns a bare bool, so a transport failure cannot
-        // surface as an error here; warn loudly instead of letting a
-        // dead gateway masquerade as a missing container (the very next
-        // fallible operation will surface the real I/O error).
+        // Goes through the full safe-retry path (HEAD is idempotent, so
+        // every send failure is re-sent within the wire budget) — a
+        // single flaky connection can no longer make an existing
+        // container look missing and skip `create_container`. The trait
+        // still returns a bare bool, so if the gateway stays down past
+        // the whole budget, warn loudly instead of letting a dead
+        // gateway masquerade as a missing container (the very next
+        // fallible operation surfaces the real I/O error).
         match self.request("HEAD", &self.container_target(name), &Headers::new(), b"") {
             Ok(resp) => resp.status == 200,
             Err(e) => {
@@ -683,6 +854,51 @@ mod tests {
             Duration::from_secs_f64(MAX_RETRY_AFTER_SECS)
         );
         assert_eq!(retry_after(&Response::new(429)), Duration::from_secs_f64(0.05));
+    }
+
+    #[test]
+    fn request_ids_are_deterministic_per_seed_and_unique_within_a_stream() {
+        let server = GatewayServer::bind("127.0.0.1:0", Arc::new(ShardedMemBackend::new(1)))
+            .expect("bind ephemeral");
+        let handle = server.spawn();
+        let addr = handle.addr().to_string();
+        let connect = |seed| HttpBackend::connect(&addr, None).unwrap().with_rng_seed(seed);
+        let ids = |b: &HttpBackend| -> Vec<String> {
+            (0..64).map(|_| b.fresh_request_id()).collect()
+        };
+        let a = ids(&connect(42));
+        assert_eq!(a, ids(&connect(42)), "same seed must draw the same id sequence");
+        assert_ne!(a, ids(&connect(43)), "different seeds must diverge");
+        let mut dedup = a.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), a.len(), "ids within one stream must be unique");
+        assert!(a.iter().all(|id| id.len() == 32 && id.bytes().all(|b| b.is_ascii_hexdigit())));
+        // The default (unseeded) streams of two backends also diverge.
+        let d1 = HttpBackend::connect(&addr, None).unwrap();
+        let d2 = HttpBackend::connect(&addr, None).unwrap();
+        assert_ne!(ids(&d1), ids(&d2));
+    }
+
+    #[test]
+    fn backoff_pauses_stay_inside_the_decorrelated_jitter_envelope() {
+        let server = GatewayServer::bind("127.0.0.1:0", Arc::new(ShardedMemBackend::new(1)))
+            .expect("bind ephemeral");
+        let handle = server.spawn();
+        let b = HttpBackend::connect(&handle.addr().to_string(), None)
+            .unwrap()
+            .with_rng_seed(7);
+        let mut prev = RETRY_BASE;
+        for _ in 0..12 {
+            let next = b.backoff(prev);
+            assert!(next >= RETRY_BASE, "pause {next:?} under the base");
+            assert!(next <= RETRY_CAP, "pause {next:?} over the cap");
+            let ceiling = Duration::from_secs_f64(
+                (prev.as_secs_f64() * 3.0).max(RETRY_BASE.as_secs_f64()),
+            );
+            assert!(next <= ceiling.min(RETRY_CAP) + Duration::from_micros(1));
+            prev = next;
+        }
     }
 
     #[test]

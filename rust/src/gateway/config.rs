@@ -17,11 +17,20 @@
 //! parsed but before it is routed, so a `429`/`401`/`403` provably
 //! never executed — which is what makes the client's blind re-send
 //! safe for every verb, mutating ones included.
+//!
+//! Two more pieces of the robustness plane live here because both
+//! cores share them through the gatekeeper: the [`ReplayCache`] that
+//! makes *every* mutating request safely retryable (not just the
+//! provably-unexecuted rejections above), and the [`ChaosConfig`] wire
+//! fault injector that proves it.
 
+use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+use crate::util::rng::Pcg32;
 
 use super::http::{Request, Response};
 
@@ -55,6 +64,172 @@ impl GatewayMode {
     }
 }
 
+/// Wire-level chaos plane: per-response / per-accept fault
+/// probabilities, injected at the *connection* layer of both server
+/// cores — below HTTP routing, after the request executed. This is
+/// deliberately nastier than the PR 4 `--faults` store plane (which
+/// fires inside the store front end, above the wire): a killed
+/// response leaves the client unable to tell whether its PUT ran.
+/// Spec grammar (CLI/TOML/env value for the `chaos` key):
+///
+/// ```text
+/// kill-response@p=0.02,truncate@p=0.01,stall@p=0.001,reset@p=0.01
+/// ```
+///
+/// * `kill-response` — write a short prefix of the serialized
+///   response, then close the socket (cut inside the status/headers).
+/// * `truncate` — write all but the tail of the response, then close
+///   (cut inside the body: a `Content-Length` that never arrives).
+/// * `stall` — hold the response unwritten past the client's read
+///   deadline, then close without sending a byte.
+/// * `reset` — drop the connection at accept, before reading anything.
+///
+/// Draws come from one seeded PCG32 stream (`chaos_seed`), so a chaos
+/// run is reproducible. All probabilities default to `0.0` = off.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosConfig {
+    pub kill_response: f64,
+    pub truncate: f64,
+    pub stall: f64,
+    pub reset: f64,
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig { kill_response: 0.0, truncate: 0.0, stall: 0.0, reset: 0.0, seed: 7 }
+    }
+}
+
+impl ChaosConfig {
+    /// Parse the comma-separated `name@p=PROB` grammar. An empty spec
+    /// or `off` disables every fault. The seed is a separate key
+    /// (`chaos_seed` / `--chaos-seed`) and is left at its default here.
+    pub fn parse(spec: &str) -> Result<ChaosConfig, String> {
+        let mut cfg = ChaosConfig::default();
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "off" {
+            return Ok(cfg);
+        }
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            let (name, prob) = clause.split_once("@p=").ok_or_else(|| {
+                format!("bad chaos clause '{clause}' (expected NAME@p=PROB)")
+            })?;
+            let p: f64 = prob
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad chaos probability '{prob}' in '{clause}'"))?;
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(format!("chaos probability must be in [0, 1], got '{prob}'"));
+            }
+            match name.trim() {
+                "kill-response" => cfg.kill_response = p,
+                "truncate" => cfg.truncate = p,
+                "stall" => cfg.stall = p,
+                "reset" => cfg.reset = p,
+                other => {
+                    return Err(format!(
+                        "unknown chaos fault '{other}' \
+                         (expected kill-response, truncate, stall, or reset)"
+                    ))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Any fault armed? A fully-zero config is exactly "chaos off" —
+    /// the invariance tests pin that the two are indistinguishable.
+    pub fn is_active(&self) -> bool {
+        self.kill_response > 0.0 || self.truncate > 0.0 || self.stall > 0.0 || self.reset > 0.0
+    }
+
+    /// Canonical spec string (round-trips through [`ChaosConfig::parse`]).
+    pub fn spec(&self) -> String {
+        if !self.is_active() {
+            return "off".to_string();
+        }
+        let mut parts = Vec::new();
+        for (name, p) in [
+            ("kill-response", self.kill_response),
+            ("truncate", self.truncate),
+            ("stall", self.stall),
+            ("reset", self.reset),
+        ] {
+            if p > 0.0 {
+                parts.push(format!("{name}@p={p}"));
+            }
+        }
+        parts.join(",")
+    }
+}
+
+/// What the chaos plane does to one response about to be written.
+/// `Reset` never appears here — it is drawn separately at accept time
+/// via [`Gatekeeper::chaos_at_accept`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosAction {
+    None,
+    KillResponse,
+    Truncate,
+    Stall,
+}
+
+/// How long a `stall`ed response is held unwritten before the server
+/// closes the connection. Must exceed the client's read deadline
+/// (`gateway::client::CLIENT_READ_TIMEOUT`, 2s) so the client times
+/// out first and exercises its blind-re-send path.
+pub(crate) const STALL_HOLD: Duration = Duration::from_secs(3);
+
+/// Runtime state of the chaos plane: the seeded draw stream plus
+/// injection counters (observability for tests and the CLI).
+pub(crate) struct ChaosPlan {
+    cfg: ChaosConfig,
+    rng: Mutex<Pcg32>,
+    injected: AtomicU64,
+}
+
+impl ChaosPlan {
+    fn new(cfg: ChaosConfig) -> ChaosPlan {
+        ChaosPlan {
+            cfg,
+            rng: Mutex::new(Pcg32::with_stream(cfg.seed, 0xc4a0_5eed)),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    fn draw(&self, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        rng.chance(p)
+    }
+
+    fn at_accept(&self) -> bool {
+        let hit = self.draw(self.cfg.reset);
+        if hit {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    fn on_response(&self) -> ChaosAction {
+        let action = if self.draw(self.cfg.kill_response) {
+            ChaosAction::KillResponse
+        } else if self.draw(self.cfg.truncate) {
+            ChaosAction::Truncate
+        } else if self.draw(self.cfg.stall) {
+            ChaosAction::Stall
+        } else {
+            return ChaosAction::None;
+        };
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        action
+    }
+}
+
 /// Resolved gateway configuration. See the module docs for precedence.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GatewayConfig {
@@ -78,6 +253,9 @@ pub struct GatewayConfig {
     /// Graceful-shutdown budget: in-flight requests get this long to
     /// finish before the reactor gives up and returns.
     pub drain_timeout: Duration,
+    /// Wire-level fault injection (see [`ChaosConfig`]); all-zero
+    /// probabilities (the default) mean the chaos plane is off.
+    pub chaos: ChaosConfig,
 }
 
 impl Default for GatewayConfig {
@@ -90,6 +268,7 @@ impl Default for GatewayConfig {
             auth_token: None,
             read_timeout: Duration::from_secs(5),
             drain_timeout: Duration::from_secs(2),
+            chaos: ChaosConfig::default(),
         }
     }
 }
@@ -138,6 +317,13 @@ impl GatewayConfig {
             }
             "read_timeout_ms" => self.read_timeout = Duration::from_millis(num(key, value)?),
             "drain_timeout_ms" => self.drain_timeout = Duration::from_millis(num(key, value)?),
+            "chaos" => {
+                // Re-parsing must not clobber a seed set by an earlier
+                // (lower-precedence) layer.
+                let seed = self.chaos.seed;
+                self.chaos = ChaosConfig { seed, ..ChaosConfig::parse(value)? };
+            }
+            "chaos_seed" => self.chaos.seed = num(key, value)?,
             other => return Err(format!("unknown gateway config key '{other}'")),
         }
         Ok(())
@@ -187,6 +373,8 @@ impl GatewayConfig {
             "auth_token",
             "read_timeout_ms",
             "drain_timeout_ms",
+            "chaos",
+            "chaos_seed",
         ];
         for key in KEYS {
             let var = format!("STOCATOR_GATEWAY_{}", key.to_ascii_uppercase());
@@ -212,7 +400,7 @@ impl GatewayConfig {
     /// One-line human summary for the `serve` banner.
     pub fn describe(&self) -> String {
         format!(
-            "{} core, max-conns {}, rate-limit {}, auth {}",
+            "{} core, max-conns {}, rate-limit {}, auth {}, chaos {}",
             self.mode.name(),
             self.max_conns,
             if self.rate_limit > 0.0 {
@@ -221,6 +409,7 @@ impl GatewayConfig {
                 "off".to_string()
             },
             if self.auth_token.is_some() { "bearer" } else { "off" },
+            self.chaos.spec(),
         )
     }
 }
@@ -306,11 +495,100 @@ impl RateLimiter {
     }
 }
 
+/// How many request-id → response entries the gateway retains.
+pub const REPLAY_CACHE_ENTRIES: usize = 256;
+
+/// Bounded idempotent-replay cache: the server half of the retry
+/// protocol that makes "connection died mid-response" recoverable.
+///
+/// The client stamps every mutating request with a unique
+/// `x-request-id`; after routing, the gateway stores the serialized
+/// response under that id. A duplicate id — which can only mean the
+/// client never saw the first response and blindly re-sent — is
+/// answered from the cache (with an `x-request-replayed: true`
+/// marker) instead of being re-executed. That converts a non-idempotent
+/// re-send (duplicate PUT reporting a spurious replace, duplicate
+/// `complete` hitting NoSuchUpload, …) into an exact repeat of the
+/// original answer.
+///
+/// Correctness rules:
+///
+/// * **Only executed responses are cached.** Screening rejections
+///   (`401`/`403`/`429`/shed `503`) provably never executed, and the
+///   client retries those with the *same* id — caching one would
+///   replay the rejection forever instead of letting the retry reach
+///   the router.
+/// * **Ids must be unique per logical operation.** The client draws
+///   128-bit ids from a per-backend PCG32 stream and reuses one id
+///   only across wire re-sends of the same operation.
+/// * **Eviction is LRU over [`REPLAY_CACHE_ENTRIES`] entries.** An
+///   entry is dropped only after that many *newer* stamped responses,
+///   and both lookups and re-stores refresh recency. The client's
+///   retry budget spans milliseconds-to-seconds and far fewer than 256
+///   intervening stamped requests from one client, so an id is never
+///   evicted while its operation can still be retried. A hit after
+///   eviction is impossible (the id is gone); a re-send after eviction
+///   re-executes — which is why the cache must comfortably outlive the
+///   retry window, not why it must be unbounded.
+pub struct ReplayCache {
+    cap: usize,
+    /// LRU queue, most recently used at the back. 256 entries makes a
+    /// linear scan cheaper than any fancier index.
+    entries: Mutex<VecDeque<(String, Vec<u8>)>>,
+    hits: AtomicU64,
+}
+
+impl ReplayCache {
+    pub fn new(cap: usize) -> ReplayCache {
+        ReplayCache { cap: cap.max(1), entries: Mutex::new(VecDeque::new()), hits: AtomicU64::new(0) }
+    }
+
+    /// The serialized response previously stored under `id`, if any.
+    /// A hit refreshes the entry's recency and counts as a replay.
+    pub fn lookup(&self, id: &str) -> Option<Vec<u8>> {
+        let mut q = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+        let pos = q.iter().position(|(k, _)| k == id)?;
+        let entry = q.remove(pos).expect("position came from this queue");
+        let bytes = entry.1.clone();
+        q.push_back(entry);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(bytes)
+    }
+
+    /// Remember `bytes` as the response for `id`, evicting the least
+    /// recently used entry past capacity.
+    pub fn store(&self, id: &str, bytes: Vec<u8>) {
+        let mut q = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(pos) = q.iter().position(|(k, _)| k == id) {
+            q.remove(pos);
+        }
+        q.push_back((id.to_string(), bytes));
+        while q.len() > self.cap {
+            q.pop_front();
+        }
+    }
+
+    /// How many responses were served from the cache.
+    pub fn replayed(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.entries.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
 /// The screening plane shared by both server cores: auth, rate limit,
-/// and rejection counters (observability for tests and the CLI).
+/// the idempotent-replay cache, the wire chaos plane, and rejection
+/// counters (observability for tests and the CLI).
 pub struct Gatekeeper {
     pub cfg: GatewayConfig,
     limiter: Option<RateLimiter>,
+    /// Request-id replay cache — always on; with no stamped requests it
+    /// is simply never consulted.
+    pub replay: ReplayCache,
+    chaos: Option<ChaosPlan>,
     rejected_429: AtomicU64,
     rejected_auth: AtomicU64,
     shed_503: AtomicU64,
@@ -319,7 +597,32 @@ pub struct Gatekeeper {
 impl Gatekeeper {
     pub fn new(cfg: GatewayConfig) -> Gatekeeper {
         let limiter = RateLimiter::new(cfg.rate_limit, cfg.burst);
-        Gatekeeper { cfg, limiter, rejected_429: AtomicU64::new(0), rejected_auth: AtomicU64::new(0), shed_503: AtomicU64::new(0) }
+        let chaos = cfg.chaos.is_active().then(|| ChaosPlan::new(cfg.chaos));
+        Gatekeeper {
+            cfg,
+            limiter,
+            replay: ReplayCache::new(REPLAY_CACHE_ENTRIES),
+            chaos,
+            rejected_429: AtomicU64::new(0),
+            rejected_auth: AtomicU64::new(0),
+            shed_503: AtomicU64::new(0),
+        }
+    }
+
+    /// Should this freshly accepted connection be dropped on the floor
+    /// (the `reset` chaos fault)? Always `false` with chaos off.
+    pub fn chaos_at_accept(&self) -> bool {
+        self.chaos.as_ref().is_some_and(ChaosPlan::at_accept)
+    }
+
+    /// What the chaos plane does to the response about to be written.
+    pub fn chaos_on_response(&self) -> ChaosAction {
+        self.chaos.as_ref().map_or(ChaosAction::None, ChaosPlan::on_response)
+    }
+
+    /// Total wire faults injected (all four kinds).
+    pub fn chaos_injected(&self) -> u64 {
+        self.chaos.as_ref().map_or(0, |c| c.injected.load(Ordering::Relaxed))
     }
 
     /// Screen one fully parsed request before routing. `Some(resp)`
@@ -422,6 +725,8 @@ mod tests {
             auth_token = "s3cr#t"  # hash inside quotes survives
             read_timeout_ms = 250
             drain_timeout_ms = 750
+            chaos = "kill-response@p=0.02,truncate@p=0.01"
+            chaos_seed = 99
             "#,
         )
         .expect("valid config must parse");
@@ -432,6 +737,96 @@ mod tests {
         assert_eq!(cfg.auth_token.as_deref(), Some("s3cr#t"));
         assert_eq!(cfg.read_timeout, Duration::from_millis(250));
         assert_eq!(cfg.drain_timeout, Duration::from_millis(750));
+        assert_eq!(cfg.chaos.kill_response, 0.02);
+        assert_eq!(cfg.chaos.truncate, 0.01);
+        assert_eq!(cfg.chaos.seed, 99);
+    }
+
+    #[test]
+    fn chaos_spec_parses_canonicalizes_and_rejects_garbage() {
+        let c = ChaosConfig::parse("kill-response@p=0.25,truncate@p=0.1,stall@p=0.01,reset@p=1")
+            .expect("full grammar parses");
+        assert_eq!(c.kill_response, 0.25);
+        assert_eq!(c.truncate, 0.1);
+        assert_eq!(c.stall, 0.01);
+        assert_eq!(c.reset, 1.0);
+        assert!(c.is_active());
+        assert_eq!(ChaosConfig::parse(&c.spec()).expect("spec round-trips"), c);
+        // Empty / "off" / all-zero probabilities are all chaos-off.
+        assert!(!ChaosConfig::parse("").unwrap().is_active());
+        assert!(!ChaosConfig::parse("off").unwrap().is_active());
+        let zero = ChaosConfig::parse("kill-response@p=0,reset@p=0.0").unwrap();
+        assert!(!zero.is_active());
+        assert_eq!(zero.spec(), "off");
+        for bad in [
+            "kill@p=0.5",          // unknown fault name
+            "kill-response=0.5",   // missing @p=
+            "truncate@p=1.5",      // out of range
+            "stall@p=-0.1",        // negative
+            "reset@p=lots",        // not a number
+        ] {
+            assert!(ChaosConfig::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+        // A chaos-seed layer applied before the spec survives re-parsing.
+        let mut cfg = GatewayConfig::default();
+        cfg.set("chaos_seed", "42").unwrap();
+        cfg.set("chaos", "reset@p=0.5").unwrap();
+        assert_eq!(cfg.chaos.seed, 42);
+        assert_eq!(cfg.chaos.reset, 0.5);
+        assert!(cfg.describe().contains("chaos reset@p=0.5"));
+        assert!(GatewayConfig::default().describe().contains("chaos off"));
+    }
+
+    #[test]
+    fn replay_cache_replays_lru_evicts_and_counts_hits() {
+        let cache = ReplayCache::new(3);
+        assert!(cache.lookup("a").is_none(), "miss on an empty cache");
+        cache.store("a", b"resp-a".to_vec());
+        cache.store("b", b"resp-b".to_vec());
+        cache.store("c", b"resp-c".to_vec());
+        assert_eq!(cache.lookup("a").as_deref(), Some(&b"resp-a"[..]));
+        // "a" was just refreshed, so inserting "d" evicts "b" (the LRU).
+        cache.store("d", b"resp-d".to_vec());
+        assert_eq!(cache.len(), 3);
+        assert!(cache.lookup("b").is_none(), "LRU entry must be evicted");
+        assert_eq!(cache.lookup("a").as_deref(), Some(&b"resp-a"[..]));
+        assert_eq!(cache.lookup("d").as_deref(), Some(&b"resp-d"[..]));
+        // Re-storing an id replaces its payload in place.
+        cache.store("c", b"resp-c2".to_vec());
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.lookup("c").as_deref(), Some(&b"resp-c2"[..]));
+        assert_eq!(cache.replayed(), 4, "misses never count as replays");
+    }
+
+    #[test]
+    fn chaos_plane_draws_are_seeded_and_counted() {
+        let gate = |seed| {
+            Gatekeeper::new(GatewayConfig {
+                chaos: ChaosConfig { kill_response: 0.5, reset: 0.5, seed, ..ChaosConfig::default() },
+                ..GatewayConfig::default()
+            })
+        };
+        let draws = |g: &Gatekeeper| -> (Vec<ChaosAction>, Vec<bool>) {
+            (
+                (0..64).map(|_| g.chaos_on_response()).collect(),
+                (0..64).map(|_| g.chaos_at_accept()).collect(),
+            )
+        };
+        let (r1, a1) = draws(&gate(11));
+        let (r2, a2) = draws(&gate(11));
+        assert_eq!(r1, r2, "same seed, same fault sequence");
+        assert_eq!(a1, a2);
+        assert!(r1.iter().any(|&x| x == ChaosAction::KillResponse));
+        assert!(r1.iter().any(|&x| x == ChaosAction::None));
+        assert!(a1.iter().any(|&x| x));
+        let g = gate(11);
+        let _ = draws(&g);
+        assert!(g.chaos_injected() >= 1);
+        // Chaos off: no plan, no draws, nothing injected.
+        let off = Gatekeeper::new(GatewayConfig::default());
+        assert_eq!(off.chaos_on_response(), ChaosAction::None);
+        assert!(!off.chaos_at_accept());
+        assert_eq!(off.chaos_injected(), 0);
     }
 
     #[test]

@@ -327,8 +327,31 @@ pub fn write_request(
 /// Error message marking EOF before any response byte arrived: the
 /// peer closed a keep-alive connection between requests, so the request
 /// was provably not executed and a client may safely re-send it on a
-/// fresh connection. Any later failure gives no such guarantee.
+/// fresh connection. Any later failure gives no such guarantee *on its
+/// own* — recovering those takes the [`REQUEST_ID`] replay protocol.
 pub const STALE_CONNECTION: &str = "stale keep-alive connection (EOF before status line)";
+
+/// Idempotency header: the client stamps every mutating request
+/// (`PUT`/`POST`/`DELETE`) with a unique id and reuses that id across
+/// wire re-sends of the same operation, so the gateway's replay cache
+/// (`gateway::config::ReplayCache`) can answer a blind re-send with
+/// the original response instead of re-executing it.
+pub const REQUEST_ID: &str = "x-request-id";
+
+/// Marker header the gateway adds to a response served from the replay
+/// cache — never present on a first execution. The client counts these
+/// (`HttpBackend::replayed_responses`) as proof a mid-response failure
+/// was recovered without re-execution.
+pub const REQUEST_REPLAYED: &str = "x-request-replayed";
+
+/// Serialize a response to its exact wire bytes. Both server cores
+/// write (and the replay cache stores) this byte-for-byte form, which
+/// is also what the chaos plane cuts prefixes of.
+pub fn serialize_response(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::with_capacity(resp.body.len() + 128);
+    write_response(&mut out, resp).expect("writing to a Vec cannot fail");
+    out
+}
 
 /// Read one response. Responses always carry an exact `Content-Length`
 /// (this protocol never sends bodiless-by-method responses the client

@@ -39,6 +39,15 @@
 //! caps, token-bucket `429` rate limiting, and bearer auth — by a
 //! [`config::GatewayConfig`] resolved from TOML file, `STOCATOR_GATEWAY_*`
 //! environment variables, and CLI flags.
+//!
+//! The wire is also where the robustness story lives: every mutating
+//! request carries an `x-request-id`, the gatekeeper's bounded
+//! [`config::ReplayCache`] answers duplicate ids with the original
+//! response, and the client blindly re-sends on *any* send failure
+//! within a bounded, jittered budget — so killed, truncated, stalled,
+//! or reset connections (injectable deterministically via
+//! [`config::ChaosConfig`], `--chaos`) never produce a wrong answer,
+//! only a retried one.
 
 pub mod client;
 pub mod config;
@@ -48,7 +57,7 @@ pub mod reactor;
 pub mod server;
 
 pub use client::HttpBackend;
-pub use config::{Gatekeeper, GatewayConfig, GatewayMode};
+pub use config::{ChaosConfig, Gatekeeper, GatewayConfig, GatewayMode, ReplayCache};
 pub use server::{GatewayHandle, GatewayServer};
 
 /// A process-unique namespace tag. The harness gives every workload

@@ -11,9 +11,9 @@ use std::io::{self, Read, Write};
 use std::net::TcpStream;
 use std::time::Instant;
 
-use crate::gateway::config::Gatekeeper;
+use crate::gateway::config::{ChaosAction, Gatekeeper, STALL_HOLD};
 use crate::gateway::http::{try_parse_request, write_response, Response};
-use crate::gateway::server::route;
+use crate::gateway::server::{chaos_cut, process_request};
 use crate::objectstore::backend::Backend;
 
 /// Read at most this much per poll pass, so one firehose peer cannot
@@ -32,6 +32,10 @@ pub(super) struct Conn {
     last_progress: Instant,
     /// Close once `outbuf` drains (set on malformed input, 408, drain).
     close_after_flush: bool,
+    /// `stall` chaos: the response is withheld until this instant, then
+    /// the connection closes without writing it. While set, the sweep
+    /// skips this connection entirely (never blocking anyone else).
+    stall_until: Option<Instant>,
     /// Peer half-closed its write side; serve what's buffered, then close.
     peer_eof: bool,
     closed: bool,
@@ -46,6 +50,7 @@ impl Conn {
             written: 0,
             last_progress: Instant::now(),
             close_after_flush: false,
+            stall_until: None,
             peer_eof: false,
             closed: false,
         }
@@ -67,6 +72,18 @@ impl Conn {
     ) -> bool {
         if self.closed {
             return false;
+        }
+        if let Some(deadline) = self.stall_until {
+            // Stalled by chaos: hold everything unwritten until the
+            // client's read deadline has surely passed, then close
+            // without sending a byte.
+            if now < deadline {
+                return false;
+            }
+            self.outbuf.clear();
+            self.written = 0;
+            self.closed = true;
+            return true;
         }
         let mut progress = self.flush();
         if !self.closed && self.outbuf.is_empty() && !self.peer_eof {
@@ -100,15 +117,28 @@ impl Conn {
     /// the socket will not accept the previous response yet.
     fn serve_buffered(&mut self, backend: &dyn Backend, gate: &Gatekeeper, draining: bool) -> bool {
         let mut progress = false;
-        while !self.closed && self.outbuf.is_empty() {
+        while !self.closed && self.outbuf.is_empty() && self.stall_until.is_none() {
             match try_parse_request(&self.inbuf) {
                 Ok(Some((mut req, consumed))) => {
                     self.inbuf.drain(..consumed);
-                    let resp = match gate.screen(&req) {
-                        Some(rejection) => rejection,
-                        None => route(backend, &mut req),
-                    };
-                    self.enqueue(&resp);
+                    let bytes = process_request(backend, gate, &mut req);
+                    match gate.chaos_on_response() {
+                        ChaosAction::None => self.outbuf.extend_from_slice(&bytes),
+                        ChaosAction::Stall => {
+                            // Park the connection; poll() closes it once
+                            // the hold expires. The response bytes are
+                            // dropped — the peer never sees them.
+                            self.stall_until = Some(Instant::now() + STALL_HOLD);
+                        }
+                        action => {
+                            // Kill/truncate: enqueue a strict prefix,
+                            // then FIN after it drains — the peer reads
+                            // a genuinely torn response.
+                            let cut = chaos_cut(action, bytes.len());
+                            self.outbuf.extend_from_slice(&bytes[..cut]);
+                            self.close_after_flush = true;
+                        }
+                    }
                     if draining {
                         self.close_after_flush = true;
                     }

@@ -38,10 +38,15 @@
 //!    closes idle connections immediately, finishes requests already
 //!    in flight, and gives up after `drain_timeout`.
 //!
-//! Routing, error mapping, and wire formats are shared with the
-//! threaded core (`server::route`), so the two cores are byte-identical
-//! to every client — pinned by running the full conformance suite
-//! against both.
+//! Routing, error mapping, wire formats, and the request-id replay
+//! cache are shared with the threaded core
+//! (`server::process_request`), so the two cores are byte-identical to
+//! every client — pinned by running the full conformance suite against
+//! both. The wire chaos plane is applied here at the same layer as the
+//! threaded core: `reset` drops connections at accept, kill/truncate
+//! enqueue a strict prefix of the serialized response, and `stall`
+//! parks the connection unwritten past the client's read deadline —
+//! all without ever blocking the sweep thread.
 
 mod conn;
 
@@ -91,6 +96,11 @@ pub(crate) fn run_loop(
                 match listener.accept() {
                     Ok((stream, _)) => {
                         progress = true;
+                        if gate.chaos_at_accept() {
+                            // `reset` chaos: drop the connection before
+                            // reading a byte — provably unexecuted.
+                            continue;
+                        }
                         if conns.len() >= gate.cfg.max_conns {
                             let gate = gate.clone();
                             // Throwaway thread: the shed path does

@@ -44,10 +44,22 @@
 //! safety is the inner backend's contract (`Backend` is `Send + Sync`,
 //! and its atomic-PUT guarantee is what makes concurrent gateway
 //! clients safe).
+//!
+//! Both cores also share [`process_request`] — screen, then consult the
+//! gatekeeper's request-id replay cache, then route — and apply the
+//! wire chaos plane (`ChaosConfig`) at the connection layer when it is
+//! armed: responses killed after a prefix, truncated inside the body,
+//! stalled past the client's read deadline, or connections dropped at
+//! accept. Chaos lives *below* routing, so an injected fault always
+//! hits a request that already executed — exactly the ambiguity the
+//! replay cache exists to resolve.
 
-use super::config::{Gatekeeper, GatewayConfig, GatewayMode};
+use super::config::{ChaosAction, Gatekeeper, GatewayConfig, GatewayMode, STALL_HOLD};
 use super::encoding::{meta_header, parse_query, pct_decode, pct_encode, query_param};
-use super::http::{read_request, write_response, Request, Response};
+use super::http::{
+    read_request, serialize_response, write_response, Request, Response, REQUEST_ID,
+    REQUEST_REPLAYED,
+};
 use crate::objectstore::backend::{Backend, BackendError};
 use crate::objectstore::object::{Metadata, Object};
 use crate::simclock::SimInstant;
@@ -138,6 +150,12 @@ impl GatewayServer {
                 return;
             }
             let Ok(stream) = conn else { continue };
+            if self.gate.chaos_at_accept() {
+                // `reset` chaos: drop the connection on the floor
+                // before reading a byte — the peer sees EOF (or
+                // ECONNRESET) with its request provably unexecuted.
+                continue;
+            }
             if active.load(Ordering::Relaxed) >= self.gate.cfg.max_conns {
                 let gate = self.gate.clone();
                 std::thread::spawn(move || shed_connection(stream, &gate));
@@ -198,6 +216,16 @@ impl GatewayHandle {
         self.gate.rejected_auths()
     }
 
+    /// Responses served from the request-id replay cache.
+    pub fn replayed_responses(&self) -> u64 {
+        self.gate.replay.replayed()
+    }
+
+    /// Wire faults injected by the chaos plane (all kinds).
+    pub fn chaos_injected(&self) -> u64 {
+        self.gate.chaos_injected()
+    }
+
     /// Stop accepting and join the accept loop. Established connections
     /// die with their client sockets.
     pub fn shutdown(mut self) {
@@ -221,6 +249,7 @@ impl Drop for GatewayHandle {
 
 /// Keep-alive request loop for one connection.
 fn serve_connection(stream: TcpStream, backend: &dyn Backend, gate: &Gatekeeper) {
+    use std::io::Write as _;
     let Ok(write_half) = stream.try_clone() else { return };
     let mut write_half = write_half;
     let mut reader = BufReader::new(stream);
@@ -235,16 +264,75 @@ fn serve_connection(stream: TcpStream, backend: &dyn Backend, gate: &Gatekeeper)
                 return;
             }
         };
-        // Screen (auth, rate limit) before routing: a 401/403/429 means
-        // the request never executed. Framing is intact, so the
-        // connection stays open for the retry.
-        let resp = match gate.screen(&req) {
-            Some(rejection) => rejection,
-            None => route(backend, &mut req),
-        };
-        if write_response(&mut write_half, &resp).is_err() {
-            return;
+        let bytes = process_request(backend, gate, &mut req);
+        match gate.chaos_on_response() {
+            ChaosAction::None => {
+                if write_half.write_all(&bytes).is_err() {
+                    return;
+                }
+            }
+            ChaosAction::Stall => {
+                // Hold the response unwritten past the client's read
+                // deadline, then close without sending a byte.
+                std::thread::sleep(STALL_HOLD);
+                return;
+            }
+            action => {
+                // Kill/truncate: write a strict prefix, then close —
+                // the peer reads a genuinely torn response.
+                let cut = chaos_cut(action, bytes.len());
+                let _ = write_half.write_all(&bytes[..cut]);
+                return;
+            }
         }
+    }
+}
+
+/// Screen → replay → route: produce the exact wire bytes answering one
+/// request. Shared by both cores so replay semantics are identical.
+///
+/// Screening rejections (`401`/`403`/`429`) are never cached: they are
+/// provably unexecuted, and the client re-sends them under the *same*
+/// request id — a cached `429` would replay forever instead of letting
+/// the retry reach the router. Executed responses to stamped requests
+/// are stored (with the [`REQUEST_REPLAYED`] marker pre-applied to the
+/// stored copy) *before* any byte is written, so a response the chaos
+/// plane kills mid-write is already replayable.
+pub(crate) fn process_request(
+    backend: &dyn Backend,
+    gate: &Gatekeeper,
+    req: &mut Request,
+) -> Vec<u8> {
+    if let Some(rejection) = gate.screen(req) {
+        return serialize_response(&rejection);
+    }
+    let request_id = req.headers.get(REQUEST_ID).map(str::to_string);
+    if let Some(id) = &request_id {
+        if let Some(bytes) = gate.replay.lookup(id) {
+            return bytes;
+        }
+    }
+    let mut resp = route(backend, req);
+    let bytes = serialize_response(&resp);
+    if let Some(id) = request_id {
+        resp.headers.push(REQUEST_REPLAYED, "true");
+        gate.replay.store(&id, serialize_response(&resp));
+    }
+    bytes
+}
+
+/// Where the chaos plane cuts a serialized response of `len` bytes.
+/// `KillResponse` cuts early (inside the status line or headers);
+/// `Truncate` cuts late (inside the body, after a truthful
+/// `Content-Length` promised more). Both cut strictly inside the
+/// message, so the peer observes a torn response — never an empty or
+/// accidentally-complete one.
+pub(crate) fn chaos_cut(action: ChaosAction, len: usize) -> usize {
+    match action {
+        // ≤16 bytes lands mid-status-line on every real response.
+        ChaosAction::KillResponse => (len / 4).max(1).min(16).min(len.saturating_sub(1)),
+        ChaosAction::Truncate => len.saturating_sub((len / 8).max(1)),
+        ChaosAction::None | ChaosAction::Stall => len,
     }
 }
 

@@ -340,7 +340,7 @@ impl Sweep {
 //
 // Unlike every table above, these report *measured wall-clock* numbers
 // from the `stress` load plane, not virtual-clock simulation — the text
-// rendering of what BENCH_7.json serializes.
+// rendering of what BENCH_8.json serializes.
 
 /// Per-op-class latency table for one stress run.
 pub fn render_stress_latency(run: &crate::loadgen::StressRun) -> String {

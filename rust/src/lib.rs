@@ -70,7 +70,7 @@
 //!   correctness inline (byte/ETag round-trips, multipart-id uniqueness,
 //!   listing completeness at quiesce), record measured wall-clock
 //!   latency into per-worker [`metrics::Histogram`]s, and serialize
-//!   every run to `BENCH_7.json` — the measured-perf trajectory.
+//!   every run to `BENCH_8.json` — the measured-perf trajectory.
 //!
 //! The paper's contribution — the Stocator commit protocol — lives in
 //! [`connectors::stocator`]; everything else is the substrate it needs.

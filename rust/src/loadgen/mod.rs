@@ -26,7 +26,7 @@
 //!    a pure function of `(seed, worker id)`.
 //!
 //! Readiness is polled on the gateway's `/healthz` ([`wait_healthy`]) —
-//! never a sleep. Every run serializes to `BENCH_7.json`
+//! never a sleep. Every run serializes to `BENCH_8.json`
 //! ([`report::StressReport`]), continuing the `BENCH_<n>.json`
 //! perf-trajectory convention: one measured-performance artifact per PR,
 //! diffable across the repo's history. Two knobs exercise the reactor
@@ -35,6 +35,16 @@
 //! core would need N parked threads; the reactor holds them in one), and
 //! in-process runs with `--matrix` append a reactor-vs-threaded
 //! [`CoreRow`] comparison at identical op budgets.
+//!
+//! The robustness knobs: `--chaos kill-response@p=P,...` arms the wire
+//! chaos plane on the in-process gateway for the **main hammer only**
+//! (the matrix and core-comparison sweeps always run clean gateways, so
+//! their throughput numbers stay comparable across PRs), and
+//! `--backend fs:DIR` puts the in-process gateway over a real
+//! [`LocalFsBackend`] instead of memory — chaos recovery exercised
+//! against durable on-disk state. The headline acceptance run is
+//! `violations: 0` under chaos with nonzero `retried_sends` and
+//! `replayed_responses`.
 
 pub mod report;
 pub mod workload;
@@ -44,12 +54,12 @@ pub use workload::{run_worker, OpClass, WorkerConfig, WorkerReport, OP_CLASSES};
 
 use crate::gateway::http::{read_response, write_request, Headers};
 use crate::gateway::{
-    unique_namespace, GatewayConfig, GatewayHandle, GatewayMode, GatewayServer,
+    unique_namespace, ChaosConfig, GatewayConfig, GatewayHandle, GatewayMode, GatewayServer,
 };
-use crate::objectstore::backend::ShardedMemBackend;
+use crate::objectstore::backend::{unique_subroot, Backend, LocalFsBackend, ShardedMemBackend};
 use std::io::BufReader;
 use std::net::TcpStream;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
@@ -94,6 +104,14 @@ pub struct StressConfig {
     /// Which server core in-process gateways run (`--core`). External
     /// `--target` gateways chose their own at `serve` time.
     pub core: GatewayMode,
+    /// Wire chaos armed on the in-process gateway for the main hammer
+    /// (`--chaos`). Matrix/core sweeps always run clean gateways.
+    /// Incompatible with `target` — chaos is injected server-side.
+    pub chaos: ChaosConfig,
+    /// `--backend fs:DIR`: run the in-process gateway over a
+    /// [`LocalFsBackend`] in a fresh subdirectory of this root instead
+    /// of sharded memory. `shards` is ignored when set.
+    pub fs_root: Option<PathBuf>,
 }
 
 impl Default for StressConfig {
@@ -112,6 +130,8 @@ impl Default for StressConfig {
             token: None,
             // The stress plane dogfoods the scalable core by default.
             core: GatewayMode::Reactor,
+            chaos: ChaosConfig::default(),
+            fs_root: None,
         }
     }
 }
@@ -148,11 +168,29 @@ pub fn wait_healthy(addr: &str, timeout: Duration) -> Result<(), String> {
     }
 }
 
-/// Spawn an in-process gateway over a fresh sharded in-memory store,
-/// running the given server core.
-fn serve_in_process(shards: usize, core: GatewayMode) -> Result<(String, GatewayHandle), String> {
-    let backend = Arc::new(ShardedMemBackend::new(shards));
-    let config = GatewayConfig { mode: core, ..GatewayConfig::default() };
+/// Spawn an in-process gateway running the given server core, over a
+/// fresh sharded in-memory store — or, when `fs_root` is set, over a
+/// [`LocalFsBackend`] in a fresh unique subdirectory of that root (so
+/// repeated gateways never share multipart-id or container state).
+/// `chaos` arms the wire chaos plane; pass `ChaosConfig::default()` for
+/// a clean gateway.
+fn serve_in_process(
+    shards: usize,
+    core: GatewayMode,
+    fs_root: Option<&Path>,
+    chaos: ChaosConfig,
+) -> Result<(String, GatewayHandle), String> {
+    let backend: Arc<dyn Backend> = match fs_root {
+        Some(root) => {
+            let sub = unique_subroot(root);
+            Arc::new(
+                LocalFsBackend::open(&sub)
+                    .map_err(|e| format!("open fs backend at {}: {e}", sub.display()))?,
+            )
+        }
+        None => Arc::new(ShardedMemBackend::new(shards)),
+    };
+    let config = GatewayConfig { mode: core, chaos, ..GatewayConfig::default() };
     let server = GatewayServer::bind_with("127.0.0.1:0", backend, config)
         .map_err(|e| format!("bind gateway: {e}"))?;
     let handle = server.spawn();
@@ -261,9 +299,11 @@ fn sweep_matrix(cfg: &StressConfig) -> Result<Vec<MatrixCell>, String> {
         (cfg.payload / 4).max(64),
         cfg.payload,
     ]);
-    let shard_axis: Vec<Option<usize>> = match cfg.target {
-        Some(_) => vec![None],
-        None => axis(vec![1, 4, cfg.shards]).into_iter().map(Some).collect(),
+    let shard_axis: Vec<Option<usize>> = match (&cfg.target, &cfg.fs_root) {
+        (Some(_), _) => vec![None],
+        // An fs-backed store has no shard knob to vary: one plane.
+        (None, Some(_)) => vec![Some(cfg.shards)],
+        (None, None) => axis(vec![1, 4, cfg.shards]).into_iter().map(Some).collect(),
     };
     let mut cells = Vec::new();
     let mut cell_idx = 0u64;
@@ -271,7 +311,14 @@ fn sweep_matrix(cfg: &StressConfig) -> Result<Vec<MatrixCell>, String> {
         let (addr, handle) = match (cfg.target.as_deref(), shards) {
             (Some(t), _) => (t.to_string(), None),
             (None, Some(n)) => {
-                let (a, h) = serve_in_process(n, cfg.core)?;
+                // Sweep gateways run clean (no chaos): the matrix is a
+                // throughput artifact, comparable across PRs.
+                let (a, h) = serve_in_process(
+                    n,
+                    cfg.core,
+                    cfg.fs_root.as_deref(),
+                    ChaosConfig::default(),
+                )?;
                 (a, Some(h))
             }
             (None, None) => unreachable!("in-process shard axis is always Some"),
@@ -310,7 +357,12 @@ fn sweep_matrix(cfg: &StressConfig) -> Result<Vec<MatrixCell>, String> {
 fn core_comparison(cfg: &StressConfig) -> Result<Vec<CoreRow>, String> {
     let mut rows = Vec::new();
     for mode in [GatewayMode::Reactor, GatewayMode::Threaded] {
-        let (addr, handle) = serve_in_process(cfg.shards, mode)?;
+        let (addr, handle) = serve_in_process(
+            cfg.shards,
+            mode,
+            cfg.fs_root.as_deref(),
+            ChaosConfig::default(),
+        )?;
         wait_healthy(&addr, HEALTHY_TIMEOUT)?;
         let run = hammer(
             &addr,
@@ -344,6 +396,13 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
     };
     let (run, target_desc, open_conns_held) = match cfg.target.as_deref() {
         Some(addr) => {
+            if cfg.chaos.is_active() {
+                return Err(
+                    "--chaos requires an in-process gateway; an external --target \
+                     injects its own faults at serve time"
+                        .to_string(),
+                );
+            }
             wait_healthy(addr, HEALTHY_TIMEOUT)?;
             let (held, held_n) = open_idle_conns(addr, cfg.open_conns);
             let run = hammer(
@@ -360,7 +419,9 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
             (run, addr.to_string(), held_n)
         }
         None => {
-            let (addr, handle) = serve_in_process(cfg.shards, cfg.core)?;
+            // The main hammer is the only gateway that gets chaos.
+            let (addr, handle) =
+                serve_in_process(cfg.shards, cfg.core, cfg.fs_root.as_deref(), cfg.chaos)?;
             wait_healthy(&addr, HEALTHY_TIMEOUT)?;
             let (held, held_n) = open_idle_conns(&addr, cfg.open_conns);
             let run = hammer(
@@ -375,7 +436,11 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
             );
             drop(held);
             handle.shutdown();
-            (run, "in-process".to_string(), held_n)
+            let desc = match &cfg.fs_root {
+                Some(root) => format!("in-process fs:{}", root.display()),
+                None => "in-process".to_string(),
+            };
+            (run, desc, held_n)
         }
     };
     let matrix = if cfg.matrix {
@@ -417,7 +482,8 @@ mod tests {
 
     #[test]
     fn wait_healthy_succeeds_on_live_gateway_and_fails_fast_on_dead() {
-        let (addr, handle) = serve_in_process(2, GatewayMode::Reactor).unwrap();
+        let (addr, handle) =
+            serve_in_process(2, GatewayMode::Reactor, None, ChaosConfig::default()).unwrap();
         wait_healthy(&addr, Duration::from_secs(5)).expect("live gateway is healthy");
         handle.shutdown();
         // A port nothing listens on: bind-then-drop to find one.
@@ -444,5 +510,18 @@ mod tests {
         assert_eq!(report.run.total_ops, 24);
         assert_eq!(report.target, "in-process");
         assert!(report.matrix.is_empty());
+    }
+
+    #[test]
+    fn chaos_against_an_external_target_is_rejected() {
+        let cfg = StressConfig {
+            target: Some("127.0.0.1:1".into()),
+            chaos: ChaosConfig::parse("reset@p=0.5").unwrap(),
+            matrix: false,
+            bench_path: None,
+            ..StressConfig::default()
+        };
+        let err = run_stress(&cfg).expect_err("chaos + --target must refuse");
+        assert!(err.contains("in-process"), "{err}");
     }
 }

@@ -10,7 +10,7 @@ use crate::metrics::{Histogram, LatencySummary};
 use crate::util::json::Json;
 
 /// The BENCH file this PR's load plane writes by default.
-pub const BENCH_FILE: &str = "BENCH_7.json";
+pub const BENCH_FILE: &str = "BENCH_8.json";
 
 /// One aggregated hammer run: N clients against one gateway.
 #[derive(Debug)]
@@ -41,6 +41,12 @@ pub struct StressRun {
     pub throttled_429: u64,
     /// Over-capacity `503`s absorbed the same way.
     pub shed_503: u64,
+    /// Send failures (killed/truncated/reset/stalled connections)
+    /// survived by re-sending the same `x-request-id`.
+    pub retried_sends: u64,
+    /// Responses the gateway answered from its replay cache — proof a
+    /// re-sent mutation was deduplicated rather than re-executed.
+    pub replayed_responses: u64,
 }
 
 /// Cap on violation sample messages carried in a run / the BENCH file.
@@ -66,6 +72,8 @@ pub fn aggregate(
     let mut bytes_read = 0u64;
     let mut throttled_429 = 0u64;
     let mut shed_503 = 0u64;
+    let mut retried_sends = 0u64;
+    let mut replayed_responses = 0u64;
     for r in reports {
         for i in 0..OP_CLASSES {
             executed[i] += r.executed[i];
@@ -82,6 +90,8 @@ pub fn aggregate(
         bytes_read += r.bytes_read;
         throttled_429 += r.throttled_429;
         shed_503 += r.shed_503;
+        retried_sends += r.retried_sends;
+        replayed_responses += r.replayed_responses;
     }
     let issued = ids.len() as u64;
     ids.sort_unstable();
@@ -119,6 +129,8 @@ pub fn aggregate(
         upload_ids_unique: unique,
         throttled_429,
         shed_503,
+        retried_sends,
+        replayed_responses,
     }
 }
 
@@ -233,9 +245,10 @@ fn summary_json(s: &LatencySummary) -> Json {
 }
 
 impl StressReport {
-    /// Serialize for `BENCH_7.json`: per-op-class wall-clock percentiles,
+    /// Serialize for `BENCH_8.json`: per-op-class wall-clock percentiles,
     /// the clients × shards × payload throughput matrix, the open-conns
-    /// hold, backpressure counters, and the core comparison.
+    /// hold, backpressure + wire-chaos recovery counters, and the core
+    /// comparison.
     pub fn to_json(&self) -> Json {
         let run = &self.run;
         let mut classes = Json::obj();
@@ -275,7 +288,7 @@ impl StressReport {
             .collect();
         Json::obj()
             .set("bench", "stress-loadplane")
-            .set("issue", 7u64)
+            .set("issue", 8u64)
             .set("target", self.target.as_str())
             .set("seed", run.seed)
             .set("clients", run.clients)
@@ -300,6 +313,8 @@ impl StressReport {
             )
             .set("throttled_429", run.throttled_429)
             .set("shed_503", run.shed_503)
+            .set("retried_sends", run.retried_sends)
+            .set("replayed_responses", run.replayed_responses)
             .set(
                 "open_conns",
                 Json::obj()
@@ -327,6 +342,8 @@ mod tests {
             bytes_read: 512,
             throttled_429: 3,
             shed_503: 1,
+            retried_sends: 2,
+            replayed_responses: 1,
         };
         r.executed[OpClass::Put.index()] = 10;
         r.hists[OpClass::Put.index()].record_nanos(5_000);
@@ -353,6 +370,8 @@ mod tests {
         assert_eq!(run.summary_for(OpClass::Put).count, 20);
         assert_eq!(run.throttled_429, 6, "backpressure counters sum across workers");
         assert_eq!(run.shed_503, 2);
+        assert_eq!(run.retried_sends, 4, "chaos recovery counters sum across workers");
+        assert_eq!(run.replayed_responses, 2);
         // A colliding id across workers is a violation.
         let bad = aggregate(
             vec![fake_report(vec![5]), fake_report(vec![5])],
@@ -383,13 +402,15 @@ mod tests {
             "\"bench\"", "\"op_classes\"", "\"put\"", "\"p50_us\"", "\"p95_us\"",
             "\"p99_us\"", "\"matrix\"", "\"ops_per_sec\"", "\"payload_bytes\"",
             "\"multipart_ids\"", "\"throttled_429\"", "\"shed_503\"",
+            "\"retried_sends\"", "\"replayed_responses\"",
             "\"open_conns\"", "\"cores\"", "\"reactor\"", "\"threaded\"",
         ] {
             assert!(text.contains(field), "missing {field} in {text}");
         }
         assert_eq!(j.get("violations").and_then(Json::as_f64), Some(0.0));
         assert_eq!(j.get("seed").and_then(Json::as_f64), Some(9.0));
-        assert_eq!(j.get("issue").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(j.get("issue").and_then(Json::as_f64), Some(8.0));
         assert_eq!(j.get("throttled_429").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("replayed_responses").and_then(Json::as_f64), Some(1.0));
     }
 }

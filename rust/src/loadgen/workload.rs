@@ -122,6 +122,13 @@ pub struct WorkerReport {
     pub throttled_429: u64,
     /// Over-capacity `503`s absorbed the same way.
     pub shed_503: u64,
+    /// Send failures (torn/reset/stalled connections) the worker's
+    /// `HttpBackend` survived by re-sending the same request id. Under
+    /// `--chaos` this must climb while `violations` stays zero.
+    pub retried_sends: u64,
+    /// Re-sent mutations the gateway answered from its replay cache
+    /// instead of re-executing (`x-request-replayed: true`).
+    pub replayed_responses: u64,
 }
 
 impl WorkerReport {
@@ -136,6 +143,8 @@ impl WorkerReport {
             bytes_read: 0,
             throttled_429: 0,
             shed_503: 0,
+            retried_sends: 0,
+            replayed_responses: 0,
         }
     }
 }
@@ -182,11 +191,21 @@ struct Worker {
 /// Run one worker to completion. Connection failure is reported as a
 /// violation rather than a panic so the harness can aggregate it.
 pub fn run_worker(cfg: WorkerConfig) -> WorkerReport {
+    // Request-id streams must never collide: not across the workers of
+    // one run (distinct worker ids) and not across sequential runs
+    // against one long-lived gateway whose replay cache is still warm
+    // (the namespace is unique per run, so its hash decorrelates the
+    // seeds). A collision would replay a stale cached response.
+    let id_seed =
+        cfg.seed ^ fnv64(cfg.ns.as_deref().unwrap_or("")) ^ ((cfg.id as u64) << 17);
     let backend = match HttpBackend::connect(&cfg.addr, cfg.ns.clone()) {
-        Ok(b) => match &cfg.token {
-            Some(token) => b.with_token(token.clone()),
-            None => b,
-        },
+        Ok(b) => {
+            let b = b.with_rng_seed(id_seed);
+            match &cfg.token {
+                Some(token) => b.with_token(token.clone()),
+                None => b,
+            }
+        }
         Err(e) => {
             let mut report = WorkerReport::new();
             report.violation_count = 1;
@@ -211,7 +230,20 @@ pub fn run_worker(cfg: WorkerConfig) -> WorkerReport {
     w.run();
     w.report.throttled_429 = w.backend.throttled_429s();
     w.report.shed_503 = w.backend.shed_503s();
+    w.report.retried_sends = w.backend.retried_sends();
+    w.report.replayed_responses = w.backend.replayed_responses();
     w.report
+}
+
+/// FNV-1a over the namespace string — a tiny, dependency-free hash
+/// that is stable across runs of the same binary.
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 impl Worker {

@@ -12,7 +12,10 @@
 //!   token-bucket rate limit, and bearer auth.
 //! * `stress [--clients N] [--seed S] ...` — measured-wall-clock load
 //!   plane: N threads hammer a gateway, verify as they go, and write
-//!   `BENCH_7.json`.
+//!   `BENCH_8.json`. `--chaos` arms the wire chaos plane (killed /
+//!   truncated / stalled / reset connections) on the in-process gateway;
+//!   the idempotent `x-request-id` replay protocol must keep
+//!   `violations: 0`.
 
 use stocator::harness::tables::{render_table2, Sweep};
 use stocator::harness::traces::{table1_trace, table3_trace};
@@ -63,12 +66,14 @@ USAGE:
   stocator-sim serve [--backend B] [--addr HOST:PORT] [--addr-file PATH]
                      [--config PATH] [--mode reactor|threaded]
                      [--max-conns N] [--rate-limit OPS] [--burst N]
-                     [--auth-token TOKEN]
+                     [--auth-token TOKEN] [--chaos SPEC] [--chaos-seed S]
   stocator-sim stress [--clients N] [--shards N] [--target HOST:PORT]
+                      [--backend mem|sharded[:N]|fs[:DIR]]
                       [--payload BYTES] [--duration D | --ops N]
                       [--seed S] [--no-matrix] [--bench-out PATH]
                       [--open-conns N] [--token TOKEN]
                       [--core reactor|threaded]
+                      [--chaos SPEC] [--chaos-seed S]
 
   stress: real-concurrency load plane — N worker threads (default 8),
           each with its own HttpBackend connection pool, hammer a served
@@ -87,8 +92,23 @@ USAGE:
           clients × shards × payload throughput matrix plus a reactor-
           vs-threaded core comparison, and the count of real 429/503
           rejections the workers absorbed and recovered from; writes
-          everything to --bench-out (default BENCH_7.json). Exits
+          everything to --bench-out (default BENCH_8.json). Exits
           non-zero on any correctness violation.
+          --chaos SPEC arms wire chaos on the in-process gateway for
+          the main hammer (comma-separated NAME@p=PROB with NAME one of
+          kill-response|truncate|stall|reset; e.g.
+          --chaos kill-response@p=0.02,truncate@p=0.01,reset@p=0.01);
+          faults are seeded (--chaos-seed, default --seed) so a run is
+          reproducible. The client's idempotent retry protocol (every
+          mutation carries an x-request-id; the gateway replays its
+          cached response on a duplicate id instead of re-executing)
+          must keep violations at 0 — the run prints retried-sends and
+          replayed-responses so CI can prove chaos actually fired.
+          Incompatible with --target (chaos is injected in-process).
+          --backend runs the in-process gateway over mem, sharded:N
+          (same as --shards N), or a real local-FS store rooted at DIR
+          (fs alone picks a fresh temp root; the matrix sweep then
+          varies only clients × payload).
 
   serve: expose a backend as an HTTP object-store gateway (REST routes
          PUT/GET/HEAD/DELETE /v1/{container}/{key}, Range reads, ETags,
@@ -106,7 +126,11 @@ USAGE:
          token-bucket limiter (real 429s with fractional Retry-After;
          0 = off) with --burst capacity, and --auth-token requires
          `Authorization: Bearer TOKEN` on every non-/healthz request
-         (401 missing / 403 wrong).
+         (401 missing / 403 wrong). --chaos SPEC (TOML key `chaos`,
+         env STOCATOR_GATEWAY_CHAOS) arms the wire chaos plane on the
+         served gateway — kill-response|truncate|stall|reset@p=PROB,
+         seeded by --chaos-seed — for soak-testing clients' retry
+         protocols against a long-lived process.
 
   sizing: --small (test sizing) or --paper (paper-faithful object
           counts, the default); mutually exclusive.
@@ -215,12 +239,50 @@ fn stress_config(args: &Args) -> Result<stocator::loadgen::StressConfig, String>
         None => dflt.core,
         Some(s) => stocator::gateway::GatewayMode::parse(s).map_err(|e| format!("--core: {e}"))?,
     };
+    let seed = args.opt_u64("seed", dflt.seed)?;
+    let mut shards = args.opt_u64("shards", dflt.shards as u64)?.max(1) as usize;
+    let mut fs_root = None;
+    if let Some(spec) = args.opt("backend") {
+        if args.opt("target").is_some() {
+            return Err(
+                "--backend configures the in-process gateway's store; it conflicts with --target"
+                    .to_string(),
+            );
+        }
+        match BackendKind::parse(spec)? {
+            BackendKind::Mem => shards = 1,
+            BackendKind::Sharded(n) => shards = n,
+            BackendKind::LocalFs(root) => {
+                // Pin a concrete root so the run can report it.
+                fs_root = Some(root.unwrap_or_else(
+                    stocator::objectstore::backend::fresh_temp_root,
+                ));
+            }
+            BackendKind::Http { .. } => {
+                return Err(
+                    "--backend http: use --target HOST:PORT to stress a remote gateway"
+                        .to_string(),
+                );
+            }
+        }
+    }
+    let chaos = match args.opt("chaos") {
+        None => dflt.chaos,
+        Some(spec) => {
+            let mut c = stocator::gateway::ChaosConfig::parse(spec)
+                .map_err(|e| format!("--chaos: {e}"))?;
+            // Chaos draws are seeded independently of the workload mix
+            // but default to the run seed: same command, same faults.
+            c.seed = args.opt_u64("chaos-seed", seed)?;
+            c
+        }
+    };
     Ok(stocator::loadgen::StressConfig {
         clients: args.opt_u64("clients", dflt.clients as u64)?.max(1) as usize,
-        shards: args.opt_u64("shards", dflt.shards as u64)?.max(1) as usize,
+        shards,
         target: args.opt("target").map(str::to_string),
         payload: args.opt_u64("payload", dflt.payload as u64)?.max(1) as usize,
-        seed: args.opt_u64("seed", dflt.seed)?,
+        seed,
         duration,
         ops_per_client,
         matrix: !args.flag("no-matrix"),
@@ -230,6 +292,8 @@ fn stress_config(args: &Args) -> Result<stocator::loadgen::StressConfig, String>
         open_conns: args.opt_u64("open-conns", 0)? as usize,
         token: args.opt("token").map(str::to_string),
         core,
+        chaos,
+        fs_root,
     })
 }
 
@@ -247,6 +311,8 @@ fn serve_gateway_config(args: &Args) -> Result<stocator::gateway::GatewayConfig,
         ("rate-limit", "rate_limit"),
         ("burst", "burst"),
         ("auth-token", "auth_token"),
+        ("chaos", "chaos"),
+        ("chaos-seed", "chaos_seed"),
     ] {
         if let Some(value) = args.opt(flag) {
             cfg.set(key, value).map_err(|e| format!("--{flag}: {e}"))?;
@@ -351,6 +417,9 @@ fn main() {
                 cfg.seed,
                 cfg.target.as_deref().unwrap_or("in-process gateway"),
             );
+            if cfg.chaos.is_active() {
+                println!("chaos: {} (seed {})", cfg.chaos.spec(), cfg.chaos.seed);
+            }
             match stocator::loadgen::run_stress(&cfg) {
                 Ok(report) => {
                     print!("{}", render_stress_latency(&report.run));
@@ -372,6 +441,13 @@ fn main() {
                     // above). CI greps these lines.
                     println!("throttled-429s: {}", report.run.throttled_429);
                     println!("shed-503s: {}", report.run.shed_503);
+                    // Wire-chaos recovery: send failures survived by
+                    // re-sending the same x-request-id, and re-sent
+                    // mutations the gateway answered from its replay
+                    // cache instead of re-executing. CI gates on these
+                    // being nonzero under --chaos.
+                    println!("retried-sends: {}", report.run.retried_sends);
+                    println!("replayed-responses: {}", report.run.replayed_responses);
                     if let Some(p) = &cfg.bench_path {
                         println!("bench: wrote {}", p.display());
                     }
@@ -599,10 +675,12 @@ mod tests {
         assert_eq!(c.duration, Some(Duration::from_secs(2)));
         assert_eq!(c.ops_per_client, None);
         assert!(c.matrix);
-        assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("BENCH_7.json"));
+        assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("BENCH_8.json"));
         assert_eq!(c.open_conns, 0);
         assert_eq!(c.token, None);
         assert_eq!(c.core, stocator::gateway::GatewayMode::Reactor);
+        assert!(!c.chaos.is_active(), "chaos is off unless --chaos is given");
+        assert_eq!(c.fs_root, None);
         let c = stress_config(&args(&[
             "stress",
             "--clients", "32",
@@ -639,12 +717,56 @@ mod tests {
     }
 
     #[test]
+    fn stress_chaos_and_backend_flags_are_wired_through() {
+        // --chaos parses the spec; --chaos-seed defaults to --seed.
+        let c = stress_config(&args(&[
+            "stress", "--seed", "42", "--chaos", "kill-response@p=0.02,truncate@p=0.01",
+        ]))
+        .unwrap();
+        assert!(c.chaos.is_active());
+        assert_eq!(c.chaos.kill_response, 0.02);
+        assert_eq!(c.chaos.truncate, 0.01);
+        assert_eq!(c.chaos.seed, 42, "chaos seed defaults to the run seed");
+        let c = stress_config(&args(&[
+            "stress", "--chaos", "reset@p=0.5", "--chaos-seed", "9",
+        ]))
+        .unwrap();
+        assert_eq!(c.chaos.seed, 9);
+        // --backend selects the in-process store.
+        let c = stress_config(&args(&["stress", "--backend", "mem"])).unwrap();
+        assert_eq!(c.shards, 1);
+        let c = stress_config(&args(&["stress", "--backend", "sharded:4"])).unwrap();
+        assert_eq!(c.shards, 4);
+        let c = stress_config(&args(&["stress", "--backend", "fs"])).unwrap();
+        assert!(c.fs_root.is_some(), "bare fs pins a concrete temp root");
+        let c = stress_config(&args(&["stress", "--backend", "fs:/tmp/stress-store"])).unwrap();
+        assert_eq!(c.fs_root.as_deref(), Some(std::path::Path::new("/tmp/stress-store")));
+        // Contradictions and bad specs are errors, not silent fallbacks.
+        assert!(stress_config(&args(&["stress", "--chaos", "explode@p=0.5"])).is_err());
+        assert!(stress_config(&args(&["stress", "--chaos", "reset@p=2"])).is_err());
+        assert!(stress_config(&args(&[
+            "stress", "--backend", "mem", "--target", "127.0.0.1:1",
+        ]))
+        .is_err());
+        assert!(stress_config(&args(&["stress", "--backend", "http:127.0.0.1:1"])).is_err());
+    }
+
+    #[test]
     fn serve_config_layers_file_env_and_flags() {
         use stocator::gateway::GatewayMode;
-        // Flag-free default: the reactor core, limiter off.
+        // Flag-free default: the reactor core, limiter off, chaos off.
         let cfg = serve_gateway_config(&args(&["serve"])).unwrap();
         assert_eq!(cfg.mode, GatewayMode::Reactor);
         assert_eq!(cfg.rate_limit, 0.0);
+        assert!(!cfg.chaos.is_active());
+        // --chaos/--chaos-seed flags layer onto the gateway config.
+        let cfg = serve_gateway_config(&args(&[
+            "serve", "--chaos", "kill-response@p=0.02", "--chaos-seed", "3",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.chaos.kill_response, 0.02);
+        assert_eq!(cfg.chaos.seed, 3);
+        assert!(serve_gateway_config(&args(&["serve", "--chaos", "frob@p=0.1"])).is_err());
         // Explicit flags win (env vars are absent in this test run for
         // these keys; the layering itself is pinned in gateway::config).
         let cfg = serve_gateway_config(&args(&[

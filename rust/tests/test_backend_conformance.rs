@@ -10,7 +10,9 @@
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use stocator::gateway::{GatewayConfig, GatewayHandle, GatewayMode, GatewayServer, HttpBackend};
+use stocator::gateway::{
+    ChaosConfig, GatewayConfig, GatewayHandle, GatewayMode, GatewayServer, HttpBackend,
+};
 use stocator::harness::{run_cell, Scenario, Sizing, Workload};
 use stocator::objectstore::backend::{Backend, BackendError, LocalFsBackend, ShardedMemBackend};
 use stocator::objectstore::{BackendKind, Metadata, Object};
@@ -91,6 +93,29 @@ fn reactor_fixture() -> Fixture {
     let config = GatewayConfig { mode: GatewayMode::Reactor, ..GatewayConfig::default() };
     let server =
         GatewayServer::bind_with("127.0.0.1:0", inner, config).expect("bind reactor gateway");
+    let handle = server.spawn();
+    let client = HttpBackend::connect(&handle.addr().to_string(), None).expect("connect gateway");
+    Fixture {
+        backend: Box::new(client),
+        cleanup: None,
+        gateway: Some(handle),
+    }
+}
+
+/// The wire path through a gateway whose chaos plane is configured but
+/// fully disarmed (every probability 0) — the chaos-disabled invariance
+/// fixture: with the replay cache live and every chaos hook wired in,
+/// an all-zero spec must be byte-identical to no chaos at all.
+fn chaos_zero_fixture() -> Fixture {
+    let inner = Arc::new(ShardedMemBackend::new(4));
+    let config = GatewayConfig {
+        mode: GatewayMode::Reactor,
+        chaos: ChaosConfig::parse("kill-response@p=0,truncate@p=0,stall@p=0,reset@p=0")
+            .expect("all-zero chaos spec"),
+        ..GatewayConfig::default()
+    };
+    let server =
+        GatewayServer::bind_with("127.0.0.1:0", inner, config).expect("bind chaos-zero gateway");
     let handle = server.spawn();
     let client = HttpBackend::connect(&handle.addr().to_string(), None).expect("connect gateway");
     Fixture {
@@ -392,6 +417,7 @@ conformance_suite!(sharded_mem, mem_fixture(16));
 conformance_suite!(local_fs, fs_fixture());
 conformance_suite!(http_gateway, http_fixture());
 conformance_suite!(http_reactor, reactor_fixture());
+conformance_suite!(http_chaos_zero, chaos_zero_fixture());
 
 // ---- cross-backend and fs-specific checks ---------------------------------
 
@@ -635,6 +661,49 @@ fn rate_limited_reactor_preserves_golden_op_counts() {
     );
     assert_eq!(mem_ops, ops, "op counts must survive real 429 backpressure unchanged");
     assert_eq!(mem_rt, rt, "virtual runtime must survive real 429 backpressure unchanged");
+}
+
+/// Chaos-disabled invariance: a gateway with the chaos plane wired in
+/// but every probability at zero — and the request-id replay cache
+/// always on — must reproduce the in-memory golden op counts and
+/// virtual runtime exactly, on BOTH server cores. The robustness
+/// machinery must cost nothing (and change nothing) when disarmed.
+#[test]
+fn chaos_disabled_gateway_preserves_golden_op_counts_on_both_cores() {
+    let run_with = |backend: BackendKind| {
+        let mut sizing = Sizing::small();
+        sizing.backend = backend;
+        let cell = run_cell(Scenario::Stocator, Workload::Teragen, &sizing, 1);
+        assert!(cell.valid, "{}", cell.validation);
+        (cell.ops, cell.runtime_mean_s)
+    };
+    let (mem_ops, mem_rt) = run_with(BackendKind::Mem);
+    for mode in [GatewayMode::Reactor, GatewayMode::Threaded] {
+        let gw = GatewayServer::bind_with(
+            "127.0.0.1:0",
+            Arc::new(ShardedMemBackend::new(4)),
+            GatewayConfig {
+                mode,
+                chaos: ChaosConfig::parse("kill-response@p=0,truncate@p=0,stall@p=0,reset@p=0")
+                    .unwrap(),
+                ..GatewayConfig::default()
+            },
+        )
+        .expect("bind chaos-zero gateway")
+        .spawn();
+        let (ops, rt) = run_with(BackendKind::Http {
+            addr: gw.addr().to_string(),
+            ns: None,
+        });
+        assert_eq!(
+            gw.chaos_injected(),
+            0,
+            "an all-zero chaos spec must never fire ({} core)",
+            mode.name()
+        );
+        assert_eq!(mem_ops, ops, "op counts must be chaos-spec-invariant ({} core)", mode.name());
+        assert_eq!(mem_rt, rt, "runtime must be chaos-spec-invariant ({} core)", mode.name());
+    }
 }
 
 /// Two cells against ONE long-lived gateway must not collide: the

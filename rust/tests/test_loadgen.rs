@@ -73,7 +73,7 @@ fn fixed_budget_op_mix_is_deterministic_for_a_seed() {
 fn bench_json_lands_on_disk_with_percentiles_and_matrix() {
     let dir = std::env::temp_dir().join(format!("stocator-loadgen-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join("BENCH_7.json");
+    let path = dir.join("BENCH_8.json");
     let cfg = StressConfig {
         clients: 2,
         shards: 2,
@@ -105,6 +105,8 @@ fn bench_json_lands_on_disk_with_percentiles_and_matrix() {
         "\"violations\": 0",
         "\"cores\"",
         "\"throttled_429\"",
+        "\"retried_sends\"",
+        "\"replayed_responses\"",
         "\"open_conns\"",
     ] {
         assert!(text.contains(field), "missing {field}");
