@@ -4,8 +4,12 @@
 
 use stocator::connectors::Stocator;
 use stocator::fs::{FileSystem, FsInputStream, FsOutputStream, OpCtx, Path};
-use stocator::objectstore::{BackendKind, Metadata, ObjectStore, StoreConfig};
+use stocator::harness::{run_cell, Scenario, Sizing, Workload};
+use stocator::objectstore::{
+    BackendKind, ConsistencyModel, LatencyModel, Metadata, ObjectStore, StoreConfig,
+};
 use stocator::simclock::SimInstant;
+use stocator::util::json::Json;
 use std::time::Instant;
 
 fn bench<F: FnMut(u64)>(name: &str, iters: u64, mut f: F) -> f64 {
@@ -73,6 +77,10 @@ fn main() {
     assert!(sharded > 50_000.0, "sharded PUT too slow: {sharded:.0}/s");
 
     println!();
+    println!("front-end contention sweep (eventual consistency, stripes 1 vs 16):");
+    let contention = front_end_sweep();
+
+    println!();
     println!("write path through the connector (streaming vs whole-buffer):");
     write_path_rates();
 
@@ -83,7 +91,152 @@ fn main() {
     println!();
     println!("fault plane (zero-fault config must be free; faulted+retry for reference):");
     retry_path_rates();
+
+    println!();
+    println!("TB-scale trajectory cell (--paper-x 100 terasort, virtual time):");
+    let tb = tb_scale_cell();
+
+    let doc = Json::obj()
+        .set("bench", "store_hotpath")
+        .set("issue", 9u64)
+        .set("contention", contention)
+        .set("paper_x_cell", tb);
+    let out = std::path::Path::new("BENCH_9.json");
+    doc.write_file(out).expect("write BENCH_9.json");
+    println!("wrote {}", out.display());
     println!("store_hotpath bench OK");
+}
+
+const SWEEP_THREADS: [usize; 4] = [1, 8, 16, 32];
+const SWEEP_PUTS_PER_THREAD: u64 = 8_000;
+
+/// One cell of the front-end sweep: `threads` real writer threads
+/// hammering PUT (with a step-8 DELETE and a step-64 prefix LIST mixed
+/// in) against an eventually consistent store. The backend is pinned at
+/// `Sharded(16)` so the only variable is the *front end*: `stripes: 1`
+/// reproduces the pre-PR-9 global visibility/multipart mutex, larger
+/// values stripe it. Eventual consistency keeps the per-key
+/// create-lag/delete-lag bookkeeping on the hot path (under strong
+/// consistency the front end takes zero locks and there is nothing to
+/// measure), and non-zero jitter keeps the per-thread RNG streams warm.
+fn front_end_put_rate(stripes: usize, threads: usize) -> f64 {
+    let latency = LatencyModel {
+        jitter: 0.1,
+        ..LatencyModel::paper_testbed()
+    };
+    let store = ObjectStore::new(StoreConfig {
+        latency,
+        consistency: ConsistencyModel::eventual(),
+        backend: BackendKind::Sharded(16),
+        stripes,
+        seed: 9,
+        ..StoreConfig::default()
+    });
+    store.create_container("c", SimInstant::EPOCH).0.unwrap();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let store = &store;
+            scope.spawn(move || {
+                for i in 0..SWEEP_PUTS_PER_THREAD {
+                    let key = format!("w{w:02}/part-{i:06}");
+                    store
+                        .put_object("c", &key, vec![7u8; 64], Metadata::new(), SimInstant(i))
+                        .0
+                        .unwrap();
+                    if i % 8 == 7 {
+                        store.delete_object("c", &key, SimInstant(i)).0.unwrap();
+                    }
+                    if i % 64 == 63 {
+                        let (r, _) = store.list("c", &format!("w{w:02}/"), None, SimInstant(i));
+                        std::hint::black_box(r.unwrap());
+                    }
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    (threads as u64 * SWEEP_PUTS_PER_THREAD) as f64 / dt
+}
+
+/// The PR 9 A/B: global-lock front end (`stripes: 1`) vs the striped
+/// layout (`stripes: 16`) at 1/8/16/32 real threads. Gates:
+///
+/// * at 1 thread the striped layout must not be slower (10% timer
+///   margin) — striping is pure overhead there, and it must be free;
+/// * at 16 threads the striped layout must be >= 2x the global lock —
+///   asserted only when the machine has >= 4 CPUs (a 1-2 core runner
+///   serialises everything and the ratio is meaningless; it is still
+///   printed and recorded).
+fn front_end_sweep() -> Vec<Json> {
+    let cpus = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut rows = Vec::new();
+    for threads in SWEEP_THREADS {
+        let baseline = front_end_put_rate(1, threads);
+        let striped = front_end_put_rate(16, threads);
+        let speedup = striped / baseline;
+        println!(
+            "{threads:>2} threads: global-lock {baseline:>12.0} ops/s   striped {striped:>12.0} ops/s   {speedup:>5.2}x"
+        );
+        if threads == 1 {
+            assert!(
+                striped >= baseline * 0.90,
+                "striping must be free single-threaded: {striped:.0}/s vs {baseline:.0}/s"
+            );
+        }
+        if threads == 16 {
+            if cpus >= 4 {
+                assert!(
+                    speedup >= 2.0,
+                    "striped front end must be >= 2x the global lock at 16 threads \
+                     on a {cpus}-cpu machine: got {speedup:.2}x"
+                );
+            } else {
+                println!(
+                    "  (16-thread >= 2x gate skipped: only {cpus} cpu(s) available)"
+                );
+            }
+        }
+        rows.push(
+            Json::obj()
+                .set("threads", threads)
+                .set("baseline_ops_per_s", baseline)
+                .set("striped_ops_per_s", striped)
+                .set("speedup", speedup),
+        );
+    }
+    rows
+}
+
+/// One TB-scale harness cell for the perf trajectory: the full Stocator
+/// terasort at `--paper-x 100` sizing (37 200 parts, ~4.6 TB logical).
+/// Virtual runtime and op counts are deterministic; only the wall-clock
+/// cost of *simulating* the cell varies by machine, which is exactly
+/// the trajectory BENCH_9.json starts.
+fn tb_scale_cell() -> Json {
+    let sizing = Sizing::paper_x(100);
+    let t0 = Instant::now();
+    let cell = run_cell(Scenario::Stocator, Workload::Terasort, &sizing, 1);
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert!(cell.valid, "TB-scale terasort failed validation: {}", cell.validation);
+    println!(
+        "paper-x 100 terasort: virtual {:.1}s  {} REST ops  {:.3}s wall",
+        cell.runtime_mean_s,
+        cell.ops.total(),
+        wall_s
+    );
+    Json::obj()
+        .set("scenario", cell.scenario.label())
+        .set("workload", cell.workload.label())
+        .set("paper_x", 100u64)
+        .set("virtual_runtime_s", cell.runtime_mean_s)
+        .set("rest_ops", cell.ops.total())
+        .set("bytes_written", cell.ops.bytes_written)
+        .set("bytes_read", cell.ops.bytes_read)
+        .set("sim_wall_s", wall_s)
+        .set("valid", cell.valid)
 }
 
 /// The transient-fault plane's hot-path tax: with NO faults armed the

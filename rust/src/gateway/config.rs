@@ -24,6 +24,7 @@
 //! provably-unexecuted rejections above), and the [`ChaosConfig`] wire
 //! fault injector that proves it.
 
+use crate::metrics::LiveCounters;
 use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -581,7 +582,7 @@ impl ReplayCache {
 
 /// The screening plane shared by both server cores: auth, rate limit,
 /// the idempotent-replay cache, the wire chaos plane, and rejection
-/// counters (observability for tests and the CLI).
+/// counters (observability for tests, the CLI, and `/metricz`).
 pub struct Gatekeeper {
     pub cfg: GatewayConfig,
     limiter: Option<RateLimiter>,
@@ -592,6 +593,11 @@ pub struct Gatekeeper {
     rejected_429: AtomicU64,
     rejected_auth: AtomicU64,
     shed_503: AtomicU64,
+    /// Per-[`crate::metrics::OpKind`] counts of *executed* store requests
+    /// (screened rejections and replays never reach the store, so they
+    /// are not ops). Same lock-free atomic array the store front end
+    /// uses; snapshotted by the `/metricz` route.
+    pub ops: LiveCounters,
 }
 
 impl Gatekeeper {
@@ -606,6 +612,7 @@ impl Gatekeeper {
             rejected_429: AtomicU64::new(0),
             rejected_auth: AtomicU64::new(0),
             shed_503: AtomicU64::new(0),
+            ops: LiveCounters::new(),
         }
     }
 

@@ -19,6 +19,7 @@
 //! | `DELETE /v1-upload/{id}` | `abort_multipart` (204) |
 //! | `GET /v1-upload` | `multipart_in_flight` (200, body: count) |
 //! | `GET`/`HEAD /healthz` | readiness probe (200 `ok`; no backend call) |
+//! | `GET`/`HEAD /metricz` | plain-text counter snapshot: gatekeeper rejections + per-[`OpKind`] store ops (no backend call, exempt from screening) |
 //!
 //! Containers and keys travel percent-encoded ([`super::encoding`]);
 //! object metadata rides as `x-object-meta-<pct-key>: <pct-value>`
@@ -60,6 +61,7 @@ use super::http::{
     read_request, serialize_response, write_response, Request, Response, REQUEST_ID,
     REQUEST_REPLAYED,
 };
+use crate::metrics::OpKind;
 use crate::objectstore::backend::{Backend, BackendError};
 use crate::objectstore::object::{Metadata, Object};
 use crate::simclock::SimInstant;
@@ -303,6 +305,11 @@ pub(crate) fn process_request(
     gate: &Gatekeeper,
     req: &mut Request,
 ) -> Vec<u8> {
+    if req.path.trim_matches('/') == "metricz" {
+        // Observability probe, exempt from auth/rate-limit like
+        // /healthz (both cores reach it through this shared path).
+        return serialize_response(&metricz_response(gate, &req.method));
+    }
     if let Some(rejection) = gate.screen(req) {
         return serialize_response(&rejection);
     }
@@ -312,13 +319,102 @@ pub(crate) fn process_request(
             return bytes;
         }
     }
+    // Classify before routing: `route` consumes the path and may move
+    // the body out of the request.
+    let op = classify_op(&req.method, &req.path, &req.query);
+    let body_len = req.body.len() as u64;
     let mut resp = route(backend, req);
+    if let Some(kind) = op {
+        // Mirror the store front end's accounting rules: every executed
+        // request is an op (404s included); bytes move only on success.
+        gate.ops.record_op(kind);
+        match kind {
+            OpKind::GetObject if matches!(resp.status, 200 | 206) => {
+                gate.ops.record_read(resp.body.len() as u64);
+            }
+            OpKind::PutObject if resp.status == 201 => {
+                gate.ops.record_write(body_len);
+            }
+            _ => {}
+        }
+    }
     let bytes = serialize_response(&resp);
     if let Some(id) = request_id {
         resp.headers.push(REQUEST_REPLAYED, "true");
         gate.replay.store(&id, serialize_response(&resp));
     }
     bytes
+}
+
+/// Which store op class a wire request maps to, for the `/metricz`
+/// counters. Screened rejections and replayed responses never get here
+/// — only requests that actually reach the router are ops. Debug-only
+/// routes (`?live=`, `GET /v1-upload`, `/healthz`) classify as `None`:
+/// they are not REST ops in the store front end either.
+fn classify_op(method: &str, path: &str, query: &str) -> Option<OpKind> {
+    let trimmed = path.trim_start_matches('/');
+    if trimmed.strip_prefix("v1-upload").is_some() {
+        return match method {
+            // Part upload and completion POST are PUT-class requests,
+            // abort is DELETE-class — same as the store's accounting.
+            // GET /v1-upload (the in-flight debug probe) is not an op.
+            "PUT" | "POST" => Some(OpKind::PutObject),
+            "DELETE" => Some(OpKind::DeleteObject),
+            _ => None,
+        };
+    }
+    let rest = trimmed.strip_prefix("v1/")?;
+    match rest.split_once('/') {
+        None => match method {
+            "PUT" => Some(OpKind::PutObject),
+            "HEAD" => Some(OpKind::HeadContainer),
+            "GET" if query_param(&parse_query(query), "live").is_none() => {
+                Some(OpKind::GetContainer)
+            }
+            _ => None,
+        },
+        Some(_) => match method {
+            "PUT" => Some(OpKind::PutObject),
+            "GET" => Some(OpKind::GetObject),
+            "HEAD" => Some(OpKind::HeadObject),
+            "DELETE" => Some(OpKind::DeleteObject),
+            "POST" => Some(OpKind::PutObject), // ?uploads initiate
+            _ => None,
+        },
+    }
+}
+
+/// The `/metricz` body: a plain-text snapshot of the gatekeeper's
+/// rejection/replay/chaos counters plus the per-op-kind executed-request
+/// counters — one `name value` pair per line, stable names, no
+/// dependencies. Everything read here is a relaxed atomic load; the
+/// probe never takes a lock and never touches the backend.
+fn metricz_response(gate: &Gatekeeper, method: &str) -> Response {
+    match method {
+        "GET" => {}
+        "HEAD" => return Response::new(200),
+        m => return bad_request(&format!("method {m} not valid for /metricz")),
+    }
+    let ops = gate.ops.snapshot();
+    let mut body = String::new();
+    body.push_str(&format!("gateway_throttled_429s {}\n", gate.rejected_429s()));
+    body.push_str(&format!("gateway_shed_503s {}\n", gate.shed_503s()));
+    body.push_str(&format!("gateway_rejected_auths {}\n", gate.rejected_auths()));
+    body.push_str(&format!(
+        "gateway_replayed_responses {}\n",
+        gate.replay.replayed()
+    ));
+    body.push_str(&format!("gateway_chaos_injected {}\n", gate.chaos_injected()));
+    for kind in OpKind::ALL {
+        body.push_str(&format!(
+            "store_ops{{op=\"{}\"}} {}\n",
+            kind.name(),
+            ops.get(kind)
+        ));
+    }
+    body.push_str(&format!("store_bytes_read {}\n", ops.bytes_read));
+    body.push_str(&format!("store_bytes_written {}\n", ops.bytes_written));
+    Response::new(200).with_body(body.into_bytes())
 }
 
 /// Where the chaos plane cuts a serialized response of `len` bytes.
@@ -772,6 +868,112 @@ mod tests {
         let mut resp = String::new();
         let _ = s.read_to_string(&mut resp);
         assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+    }
+
+    #[test]
+    fn metricz_reports_gatekeeper_and_op_counters_on_both_cores() {
+        use std::io::{Read, Write};
+        let scrape = |addr: SocketAddr| -> String {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /metricz HTTP/1.1\r\n\r\n").unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut resp = String::new();
+            let _ = s.read_to_string(&mut resp);
+            assert!(resp.starts_with("HTTP/1.1 200"), "got: {resp}");
+            resp
+        };
+        for mode in [GatewayMode::Threaded, GatewayMode::Reactor] {
+            let inner = Arc::new(ShardedMemBackend::new(4));
+            let server = GatewayServer::bind_with(
+                "127.0.0.1:0",
+                inner,
+                GatewayConfig {
+                    mode,
+                    ..GatewayConfig::default()
+                },
+            )
+            .expect("bind ephemeral");
+            let handle = server.spawn();
+            let b = HttpBackend::connect(&handle.addr().to_string(), None).expect("connect");
+            // A fresh gateway scrapes all-zero...
+            let before = scrape(handle.addr());
+            assert!(before.contains("gateway_throttled_429s 0"), "{mode:?}: {before}");
+            assert!(
+                before.contains("store_ops{op=\"PUT Object\"} 0"),
+                "{mode:?}: {before}"
+            );
+            // ...and executed requests move exactly the right counters.
+            b.create_container("res").unwrap();
+            b.put("res", "k", obj(b"abcde", 0)).unwrap();
+            b.get("res", "k").unwrap();
+            b.head("res", "k").unwrap();
+            b.list_page("res", "", None, 10).unwrap();
+            b.delete("res", "k").unwrap();
+            let after = scrape(handle.addr());
+            // create_container + object PUT = 2 PUT-class requests.
+            assert!(
+                after.contains("store_ops{op=\"PUT Object\"} 2"),
+                "{mode:?}: {after}"
+            );
+            assert!(after.contains("store_ops{op=\"GET Object\"} 1"), "{mode:?}: {after}");
+            assert!(after.contains("store_ops{op=\"HEAD Object\"} 1"), "{mode:?}: {after}");
+            assert!(
+                after.contains("store_ops{op=\"DELETE Object\"} 1"),
+                "{mode:?}: {after}"
+            );
+            assert!(
+                after.contains("store_ops{op=\"GET Container\"} 1"),
+                "{mode:?}: {after}"
+            );
+            assert!(after.contains("store_bytes_written 5"), "{mode:?}: {after}");
+            assert!(after.contains("store_bytes_read 5"), "{mode:?}: {after}");
+            // The scrape itself is never an op (two scrapes so far, no
+            // drift) and /metricz answers HEAD like /healthz.
+            let mut s = TcpStream::connect(handle.addr()).unwrap();
+            s.write_all(b"HEAD /metricz HTTP/1.1\r\n\r\n").unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut resp = String::new();
+            let _ = s.read_to_string(&mut resp);
+            assert!(resp.starts_with("HTTP/1.1 200"), "{mode:?}: {resp}");
+        }
+    }
+
+    #[test]
+    fn metricz_is_exempt_from_auth_like_healthz() {
+        use std::io::{Read, Write};
+        let inner = Arc::new(ShardedMemBackend::new(1));
+        let server = GatewayServer::bind_with(
+            "127.0.0.1:0",
+            inner,
+            GatewayConfig {
+                auth_token: Some("s3cr3t".to_string()),
+                ..GatewayConfig::default()
+            },
+        )
+        .expect("bind ephemeral");
+        let handle = server.spawn();
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"GET /metricz HTTP/1.1\r\n\r\n").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut resp = String::new();
+        let _ = s.read_to_string(&mut resp);
+        assert!(resp.starts_with("HTTP/1.1 200"), "got: {resp}");
+        // The rejection counters it reports are live: one unauthorized
+        // request, then re-scrape.
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"GET /v1/res HTTP/1.1\r\n\r\n").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut rej = String::new();
+        let _ = s.read_to_string(&mut rej);
+        assert!(rej.starts_with("HTTP/1.1 401"), "got: {rej}");
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"GET /metricz HTTP/1.1\r\n\r\n").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut resp = String::new();
+        let _ = s.read_to_string(&mut resp);
+        assert!(resp.contains("gateway_rejected_auths 1"), "got: {resp}");
+        // Screened requests are not ops.
+        assert!(resp.contains("store_ops{op=\"GET Container\"} 0"), "got: {resp}");
     }
 
     #[test]

@@ -149,6 +149,29 @@ impl Sizing {
         }
     }
 
+    /// TB-scale sizing: the paper's object counts multiplied `x`-fold
+    /// (`--paper-x X` on the CLI, 100–1000 is the intended band). Op
+    /// counts scale with part count, so `x = 100` is a ≈4.65 TB logical
+    /// terasort (37 200 parts × 128 MiB) over 14 400 task slots — the
+    /// scale where the paper's 18×/30× operational-efficiency curves
+    /// live. Simulated bytes per part *shrink* to 4 KiB while
+    /// `data_scale` grows to keep 128 MiB logical parts, so memory stays
+    /// bounded while the virtual clock and the REST-op ledger see the
+    /// full TB-scale workload.
+    pub fn paper_x(x: usize) -> Sizing {
+        let base = Sizing::paper();
+        let x = x.max(1);
+        Sizing {
+            parts: base.parts * x,
+            ro500_parts: base.ro500_parts * x,
+            part_bytes: 4096,
+            data_scale: 32 * 1024,
+            slots: base.slots * x,
+            tpcds_shards: base.tpcds_shards * x,
+            ..base
+        }
+    }
+
     /// Small sizing for tests and quick demos.
     pub fn small() -> Sizing {
         Sizing {
@@ -235,6 +258,7 @@ pub fn build_env(
         readahead: sizing.readahead,
         faults: sizing.faults.clone(),
         retry: RetryPolicy::with_retries(sizing.retries),
+        ..StoreConfig::default()
     });
     store.create_container("res", SimInstant::EPOCH).0.unwrap();
     // fs.s3a.multipart.size = 100 MB logical, in simulated bytes.
@@ -321,6 +345,26 @@ mod tests {
         assert!(Sizing::small().faults.is_empty());
         assert_eq!(Sizing::small().retries, 0);
         assert_eq!(Sizing::paper().multipart_ttl_secs, 0);
+    }
+
+    #[test]
+    fn paper_x_scales_counts_not_bytes() {
+        let base = Sizing::paper();
+        let x100 = Sizing::paper_x(100);
+        assert_eq!(x100.parts, base.parts * 100);
+        assert_eq!(x100.ro500_parts, base.ro500_parts * 100);
+        assert_eq!(x100.slots, base.slots * 100);
+        assert_eq!(x100.tpcds_shards, base.tpcds_shards * 100);
+        // 128 MiB logical per part is preserved: simulated bytes shrink,
+        // data_scale grows — the memory footprint stays bounded.
+        assert_eq!(
+            x100.part_bytes as u64 * x100.data_scale,
+            base.part_bytes as u64 * base.data_scale,
+        );
+        // ≈4.65 TB logical terasort at x=100.
+        let logical = x100.parts as u64 * x100.part_bytes as u64 * x100.data_scale;
+        assert!(logical > 4_000_000_000_000, "x=100 is TB-scale ({logical} B)");
+        assert_eq!(Sizing::paper_x(0).parts, base.parts, "x clamps to >= 1");
     }
 
     #[test]

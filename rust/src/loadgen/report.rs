@@ -10,7 +10,7 @@ use crate::metrics::{Histogram, LatencySummary};
 use crate::util::json::Json;
 
 /// The BENCH file this PR's load plane writes by default.
-pub const BENCH_FILE: &str = "BENCH_8.json";
+pub const BENCH_FILE: &str = "BENCH_9.json";
 
 /// One aggregated hammer run: N clients against one gateway.
 #[derive(Debug)]
@@ -245,7 +245,7 @@ fn summary_json(s: &LatencySummary) -> Json {
 }
 
 impl StressReport {
-    /// Serialize for `BENCH_8.json`: per-op-class wall-clock percentiles,
+    /// Serialize for `BENCH_9.json`: per-op-class wall-clock percentiles,
     /// the clients × shards × payload throughput matrix, the open-conns
     /// hold, backpressure + wire-chaos recovery counters, and the core
     /// comparison.
@@ -288,7 +288,7 @@ impl StressReport {
             .collect();
         Json::obj()
             .set("bench", "stress-loadplane")
-            .set("issue", 8u64)
+            .set("issue", 9u64)
             .set("target", self.target.as_str())
             .set("seed", run.seed)
             .set("clients", run.clients)
@@ -409,7 +409,7 @@ mod tests {
         }
         assert_eq!(j.get("violations").and_then(Json::as_f64), Some(0.0));
         assert_eq!(j.get("seed").and_then(Json::as_f64), Some(9.0));
-        assert_eq!(j.get("issue").and_then(Json::as_f64), Some(8.0));
+        assert_eq!(j.get("issue").and_then(Json::as_f64), Some(9.0));
         assert_eq!(j.get("throttled_429").and_then(Json::as_f64), Some(3.0));
         assert_eq!(j.get("replayed_responses").and_then(Json::as_f64), Some(1.0));
     }

@@ -12,7 +12,7 @@
 //!   token-bucket rate limit, and bearer auth.
 //! * `stress [--clients N] [--seed S] ...` — measured-wall-clock load
 //!   plane: N threads hammer a gateway, verify as they go, and write
-//!   `BENCH_8.json`. `--chaos` arms the wire chaos plane (killed /
+//!   `BENCH_9.json`. `--chaos` arms the wire chaos plane (killed /
 //!   truncated / stalled / reset connections) on the in-process gateway;
 //!   the idempotent `x-request-id` replay protocol must keep
 //!   `violations: 0`.
@@ -92,7 +92,7 @@ USAGE:
           clients × shards × payload throughput matrix plus a reactor-
           vs-threaded core comparison, and the count of real 429/503
           rejections the workers absorbed and recovered from; writes
-          everything to --bench-out (default BENCH_8.json). Exits
+          everything to --bench-out (default BENCH_9.json). Exits
           non-zero on any correctness violation.
           --chaos SPEC arms wire chaos on the in-process gateway for
           the main hammer (comma-separated NAME@p=PROB with NAME one of
@@ -134,6 +134,13 @@ USAGE:
 
   sizing: --small (test sizing) or --paper (paper-faithful object
           counts, the default); mutually exclusive.
+          plus --paper-x X (TB-scale: paper object counts, task slots
+            and TPC-DS shards multiplied X-fold on the virtual clock;
+            100-1000 is the intended band — X=100 is a ~4.65 TB logical
+            terasort over 14400 slots. Parts stay 128 MiB logical
+            (simulated bytes shrink, data_scale grows), so memory stays
+            bounded while the REST-op ledger sees the full TB-scale
+            run. Incompatible with --small.)
           plus --backend mem|sharded[:N]|fs[:DIR]|http:HOST:PORT
             mem      in-memory map behind a single lock
             sharded  N-way key-sharded in-memory map (default, N=16)
@@ -180,12 +187,23 @@ USAGE:
   workloads: ro50 ro500 teragen copy wordcount terasort tpcds
 ";
 
-/// Resolve experiment sizing from `--small` / `--paper` / `--backend` /
-/// `--readahead`. `--paper` is the explicit spelling of the default;
-/// combining it with `--small` is a contradiction and is rejected.
+/// Resolve experiment sizing from `--small` / `--paper` / `--paper-x` /
+/// `--backend` / `--readahead`. `--paper` is the explicit spelling of
+/// the default; combining it with `--small` is a contradiction and is
+/// rejected, as is `--small` with `--paper-x`.
 fn select_sizing(args: &Args) -> Result<Sizing, String> {
     args.flag_conflict("small", "paper")?;
-    let mut sizing = if args.flag("small") {
+    if args.opt("paper-x").is_some() && args.flag("small") {
+        return Err("--small and --paper-x are mutually exclusive".to_string());
+    }
+    let mut sizing = if let Some(spec) = args.opt("paper-x") {
+        let x: usize = spec
+            .parse()
+            .ok()
+            .filter(|&x| x >= 1)
+            .ok_or_else(|| format!("--paper-x expects a multiplier >= 1, got '{spec}'"))?;
+        Sizing::paper_x(x)
+    } else if args.flag("small") {
         Sizing::small()
     } else {
         // --paper (or nothing): paper-faithful object counts.
@@ -596,6 +614,20 @@ mod tests {
     }
 
     #[test]
+    fn paper_x_selects_tb_scale_sizing() {
+        let s = select_sizing(&args(&["run", "--paper-x", "100"])).unwrap();
+        assert_eq!(s.parts, Sizing::paper().parts * 100);
+        assert_eq!(s.slots, Sizing::paper().slots * 100);
+        // Composes with the other sizing knobs.
+        let s = select_sizing(&args(&["run", "--paper-x", "10", "--backend", "mem"])).unwrap();
+        assert_eq!(s.backend, BackendKind::Mem);
+        assert!(select_sizing(&args(&["run", "--paper-x", "0"])).is_err());
+        assert!(select_sizing(&args(&["run", "--paper-x", "lots"])).is_err());
+        let e = select_sizing(&args(&["run", "--small", "--paper-x", "10"])).unwrap_err();
+        assert!(e.contains("mutually exclusive"), "{e}");
+    }
+
+    #[test]
     fn backend_option_is_wired_through() {
         let s = select_sizing(&args(&["run", "--small", "--backend", "mem"])).unwrap();
         assert_eq!(s.backend, BackendKind::Mem);
@@ -675,7 +707,7 @@ mod tests {
         assert_eq!(c.duration, Some(Duration::from_secs(2)));
         assert_eq!(c.ops_per_client, None);
         assert!(c.matrix);
-        assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("BENCH_8.json"));
+        assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("BENCH_9.json"));
         assert_eq!(c.open_conns, 0);
         assert_eq!(c.token, None);
         assert_eq!(c.core, stocator::gateway::GatewayMode::Reactor);

@@ -375,6 +375,11 @@ impl FaultInjector {
     /// No rules armed at all — the hot-path hint retry loops use to skip
     /// defensive payload clones (an idle injector can never produce a
     /// `TransientFailure`, so a single attempt needs no re-send copy).
+    /// One relaxed atomic load, no lock: this is the check the store
+    /// front end's zero-lock idle path rests on (multipart ops also gate
+    /// their target-key stripe lookup behind it — an idle
+    /// [`FaultInjector::check`] returns `None` for any key, so skipping
+    /// the lookup changes nothing).
     pub fn is_idle(&self) -> bool {
         self.n_rules.load(Ordering::Relaxed) == 0
     }

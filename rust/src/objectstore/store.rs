@@ -12,22 +12,52 @@
 //! eventually-consistent listings lag mutations — happens in this front
 //! end, so op counts and simulated runtimes are backend-invariant by
 //! construction.
+//!
+//! # Front-end scaling rules
+//!
+//! The front end is built to scale with real writer threads above a
+//! sharded backend, under three rules:
+//!
+//! - **Op accounting is lock-free.** Counts and wire bytes live in a
+//!   fixed per-[`OpKind`] array of relaxed `AtomicU64`s
+//!   ([`LiveCounters`]); reads take a [`LiveCounters::snapshot`]. No
+//!   operation ever takes a lock to be counted, and the idle fault path
+//!   ([`ObjectStore::faults_idle`]) is one relaxed load.
+//! - **Mutable front-end state is striped.** The visibility overlay and
+//!   the multipart trackers are split across [`StoreConfig::stripes`]
+//!   `Mutex` stripes (default [`DEFAULT_SHARDS`]). Keys stripe by the
+//!   SAME FNV hash as `ShardedMemBackend`'s shard function; multipart
+//!   trackers stripe by upload id. `stripes: 1` is exactly the legacy
+//!   single-mutex layout, and striping never changes per-key
+//!   create-lag/delete-lag semantics — listings chain the overlay across
+//!   stripes (each key's pending/ghost state lives in exactly one
+//!   stripe, so the passes compose to the single-map result).
+//! - **Jitter is per-thread.** Each thread draws from its own PCG32
+//!   stream instead of a global `Mutex<Pcg32>` (see
+//!   [`ObjectStore::jitter_draw`]); the first-drawing thread gets the
+//!   legacy stream, so single-threaded runs are byte-identical.
+//!
+//! Net effect: the strong-consistency, zero-jitter, idle-fault PUT/GET
+//! hot path takes **zero** front-end locks (debug builds count stripe
+//! locks — see [`ObjectStore::debug_front_end_locks`]).
 
-use super::backend::{make_backend, Backend, BackendError, DEFAULT_PAGE_SIZE};
+use super::backend::{make_backend, Backend, BackendError, DEFAULT_PAGE_SIZE, DEFAULT_SHARDS};
 use super::backend::{BackendKind, ObjectStat};
 use super::consistency::ConsistencyModel;
 use super::container::Listing;
 use super::faults::{FaultClass, FaultInjector, FaultOp, FaultSpec, InjectedFault, RetryPolicy};
 use super::latency::LatencyModel;
 use super::multipart::DEFAULT_MIN_PART_SIZE;
-use super::object::{Metadata, Object};
+use super::object::{fnv1a, Metadata, Object};
 use super::visibility::VisibilityMap;
 use crate::metrics::{LiveCounters, OpCounts, OpKind};
 use crate::simclock::{SimDuration, SimInstant};
 use crate::util::rng::Pcg32;
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Errors mirroring the REST error space the connectors care about.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -169,6 +199,15 @@ pub struct StoreConfig {
     /// The stream-layer retry contract the connectors follow
     /// (`--retries` on the CLI). Zero retries by default.
     pub retry: RetryPolicy,
+    /// Mutex stripes for the front end's own mutable state — the
+    /// visibility overlay and the multipart trackers (clamped to ≥ 1).
+    /// `1` reproduces the legacy global-lock layout exactly; the default
+    /// ([`DEFAULT_SHARDS`]) matches the sharded backend so front-end
+    /// striping and backend sharding agree about which keys collide.
+    /// Striping is invisible to every single-threaded result: op counts,
+    /// fault traces, visible listings and virtual runtimes are
+    /// stripe-count-invariant (pinned by goldens + conformance).
+    pub stripes: usize,
 }
 
 impl Default for StoreConfig {
@@ -182,6 +221,7 @@ impl Default for StoreConfig {
             readahead: 0,
             faults: FaultSpec::none(),
             retry: RetryPolicy::none(),
+            stripes: DEFAULT_SHARDS,
         }
     }
 }
@@ -230,17 +270,43 @@ pub struct MultipartSweep {
     pub freed_bytes: u64,
 }
 
+/// Allocates [`ObjectStore::jitter_key`] slots. Monotonic, never reused:
+/// a dead store's stale thread-local RNG entries can never be adopted by
+/// a new store.
+static STORE_IDS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// This thread's private jitter RNGs, one per store it has drawn
+    /// from (keyed by [`ObjectStore::jitter_key`]). Entries outlive
+    /// their store (a few dozen bytes each) but are never shared, so
+    /// the jitter path takes no lock. See [`ObjectStore::jitter_draw`].
+    static JITTER_RNGS: RefCell<HashMap<u64, Pcg32>> = RefCell::new(HashMap::new());
+}
+
 /// The shared object store. Safe to use from the executor threads of the
 /// Spark simulator: the hot path contends only on the backend's shard
-/// locks (and, under eventual consistency, the visibility overlay).
+/// locks (and, under eventual consistency, the front end's own
+/// visibility stripes — see the module docs for the striping rules).
 pub struct ObjectStore {
     backend: Box<dyn Backend>,
-    visibility: Mutex<VisibilityMap>,
-    rng: Mutex<Pcg32>,
+    /// Visibility overlay, striped by the backend's shard hash over
+    /// (container, key). [`StoreConfig::stripes`] entries; 1 = the
+    /// legacy single-mutex layout.
+    visibility: Vec<Mutex<VisibilityMap>>,
     counters: LiveCounters,
     injector: FaultInjector,
-    /// In-flight multipart uploads, by upload id (see [`MultipartTracker`]).
-    multipart: Mutex<HashMap<u64, MultipartTracker>>,
+    /// In-flight multipart uploads (see [`MultipartTracker`]), striped
+    /// by the FNV hash of the upload id (parts and completes only know
+    /// the id, not the target key).
+    multipart: Vec<Mutex<HashMap<u64, MultipartTracker>>>,
+    /// This store's slot in each thread's [`JITTER_RNGS`] map.
+    jitter_key: u64,
+    /// Next PCG32 stream to hand out to a first-drawing thread.
+    next_stream: AtomicU64,
+    /// Debug builds count every front-end stripe lock taken, so tests
+    /// can assert the idle hot path takes none.
+    #[cfg(debug_assertions)]
+    front_end_locks: AtomicU64,
     pub config: StoreConfig,
 }
 
@@ -252,14 +318,91 @@ impl ObjectStore {
 
     /// Run on an explicit backend instance (tests, pre-opened roots).
     pub fn with_backend(config: StoreConfig, backend: Box<dyn Backend>) -> Arc<Self> {
+        let stripes = config.stripes.max(1);
         Arc::new(Self {
             backend,
-            visibility: Mutex::new(VisibilityMap::default()),
-            rng: Mutex::new(Pcg32::new(config.seed ^ 0x5106_a70c)),
+            visibility: (0..stripes)
+                .map(|_| Mutex::new(VisibilityMap::default()))
+                .collect(),
             counters: LiveCounters::new(),
             injector: FaultInjector::with_seed(&config.faults, config.seed),
-            multipart: Mutex::new(HashMap::new()),
+            multipart: (0..stripes).map(|_| Mutex::new(HashMap::new())).collect(),
+            jitter_key: STORE_IDS.fetch_add(1, Ordering::Relaxed),
+            next_stream: AtomicU64::new(0),
+            #[cfg(debug_assertions)]
+            front_end_locks: AtomicU64::new(0),
             config,
+        })
+    }
+
+    /// Count one front-end stripe lock (debug builds only — compiles to
+    /// nothing in release).
+    #[inline]
+    fn note_front_end_lock(&self) {
+        #[cfg(debug_assertions)]
+        self.front_end_locks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// How many front-end stripe locks this store has taken (always 0 in
+    /// release builds, where counting is compiled out). The zero-lock
+    /// invariant: under strong consistency with zero jitter and no armed
+    /// faults, PUT/GET/HEAD/DELETE/LIST leave this at 0 — only multipart
+    /// ops (whose trackers are front-end state) and the
+    /// eventual-consistency overlay take stripes.
+    pub fn debug_front_end_locks(&self) -> u64 {
+        #[cfg(debug_assertions)]
+        {
+            self.front_end_locks.load(Ordering::Relaxed)
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            0
+        }
+    }
+
+    /// Lock the visibility stripe that owns `(container, key)` — the
+    /// SAME shard hash as `ShardedMemBackend`, so front-end striping and
+    /// backend sharding agree about which keys collide.
+    fn visibility_stripe(&self, container: &str, key: &str) -> MutexGuard<'_, VisibilityMap> {
+        self.note_front_end_lock();
+        let h = fnv1a(container.as_bytes()) ^ fnv1a(key.as_bytes()).rotate_left(13);
+        self.visibility[(h % self.visibility.len() as u64) as usize]
+            .lock()
+            .unwrap()
+    }
+
+    /// Lock the multipart stripe that owns `upload_id`.
+    fn multipart_stripe(&self, upload_id: u64) -> MutexGuard<'_, HashMap<u64, MultipartTracker>> {
+        self.note_front_end_lock();
+        let h = fnv1a(&upload_id.to_le_bytes());
+        self.multipart[(h % self.multipart.len() as u64) as usize]
+            .lock()
+            .unwrap()
+    }
+
+    /// One jitter draw from the calling thread's private PCG32 stream —
+    /// no lock, ever. The FIRST thread to draw from this store gets
+    /// stream slot 0: exactly the legacy global stream
+    /// `Pcg32::new(seed ^ 0x5106_a70c)`, so every single-threaded run is
+    /// byte-identical to the pre-striping front end (pinned by the
+    /// goldens). Later threads get `Pcg32::with_stream(seed, slot)`
+    /// variants: each thread's draw sequence is internally
+    /// deterministic, but WHICH slot a thread gets is first-draw
+    /// allocation order — multi-threaded jitter is decorrelated and
+    /// per-thread-deterministic, not reproducible across racy runs.
+    fn jitter_draw(&self) -> f64 {
+        JITTER_RNGS.with(|cell| {
+            let mut map = cell.borrow_mut();
+            let rng = map.entry(self.jitter_key).or_insert_with(|| {
+                let stream = self.next_stream.fetch_add(1, Ordering::Relaxed);
+                let seed = self.config.seed ^ 0x5106_a70c;
+                if stream == 0 {
+                    Pcg32::new(seed)
+                } else {
+                    Pcg32::with_stream(seed, stream)
+                }
+            });
+            rng.next_f64()
         })
     }
 
@@ -302,7 +445,7 @@ impl ObjectStore {
         if self.config.latency.jitter == 0.0 {
             d
         } else {
-            let draw = self.rng.lock().unwrap().next_f64();
+            let draw = self.jitter_draw();
             self.config.latency.jittered(d, draw)
         }
     }
@@ -347,7 +490,7 @@ impl ObjectStore {
         let obj = Object::new(data, metadata, now);
         let replaced = self.backend.put(container, key, obj)?;
         if !self.config.consistency.is_strong() {
-            self.visibility.lock().unwrap().on_put(
+            self.visibility_stripe(container, key).on_put(
                 container,
                 key,
                 replaced,
@@ -562,7 +705,7 @@ impl ObjectStore {
         match self.backend.delete(container, key) {
             Ok(stat) => {
                 if !self.config.consistency.is_strong() {
-                    self.visibility.lock().unwrap().on_delete(
+                    self.visibility_stripe(container, key).on_delete(
                         container,
                         key,
                         stat.size,
@@ -631,10 +774,16 @@ impl ObjectStore {
         let visible = if self.config.consistency.is_strong() {
             raw
         } else {
-            self.visibility
-                .lock()
-                .unwrap()
-                .overlay(container, prefix, now, raw)
+            // Each key's pending/ghost state lives in exactly one stripe
+            // (disjoint key sets) and `overlay` preserves sortedness, so
+            // chaining the stripes over the raw listing is exact — same
+            // result as the legacy single-map overlay, in any order.
+            let mut out = raw;
+            for stripe in &self.visibility {
+                self.note_front_end_lock();
+                out = stripe.lock().unwrap().overlay(container, prefix, now, out);
+            }
+            out
         };
         Ok(Listing::collapse(prefix, delimiter, visible))
     }
@@ -643,9 +792,7 @@ impl ObjectStore {
 
     /// The target key of an in-flight upload (for fault matching).
     fn multipart_target(&self, upload_id: u64) -> Option<String> {
-        self.multipart
-            .lock()
-            .unwrap()
+        self.multipart_stripe(upload_id)
             .get(&upload_id)
             .map(|t| t.key.clone())
     }
@@ -666,7 +813,7 @@ impl ObjectStore {
             .initiate_multipart(container, key, metadata)
             .map_err(StoreError::from);
         if let Ok(id) = &r {
-            self.multipart.lock().unwrap().insert(
+            self.multipart_stripe(*id).insert(
                 *id,
                 MultipartTracker {
                     key: key.to_string(),
@@ -688,21 +835,26 @@ impl ObjectStore {
         let size = data.len() as u64;
         // Injected failure: like a failed whole-object PUT — a 503
         // burns latency, op and payload bytes; a 429 costs the op and
-        // base latency only. Either way the part is not stored.
-        let target = self.multipart_target(upload_id);
-        if let Some(fault) = self
-            .injector
-            .check(FaultOp::UploadPart, target.as_deref().unwrap_or(""))
-        {
-            let (e, d) = self.charge_injected(OpKind::PutObject, fault, size);
-            return (Err(e), d);
+        // base latency only. Either way the part is not stored. The
+        // target key only matters for fault matching, so an idle
+        // injector skips the stripe lookup entirely (idle path stays
+        // lock-free; an idle check returns None for any key).
+        if !self.faults_idle() {
+            let target = self.multipart_target(upload_id);
+            if let Some(fault) = self
+                .injector
+                .check(FaultOp::UploadPart, target.as_deref().unwrap_or(""))
+            {
+                let (e, d) = self.charge_injected(OpKind::PutObject, fault, size);
+                return (Err(e), d);
+            }
         }
         let d = self.charge(OpKind::PutObject, size, 0);
         match self.backend.upload_part(upload_id, part_number, data) {
             Ok(()) => {
                 let scaled = self.config.latency.scaled_bytes(size);
                 self.counters.record_write(scaled);
-                if let Some(t) = self.multipart.lock().unwrap().get_mut(&upload_id) {
+                if let Some(t) = self.multipart_stripe(upload_id).get_mut(&upload_id) {
                     t.part_bytes.insert(part_number, scaled);
                 }
                 (Ok(()), d)
@@ -719,19 +871,23 @@ impl ObjectStore {
     ) -> (Result<(), StoreError>, SimDuration) {
         // An injected failure on the completion POST leaves the upload
         // alive (the request never took effect), so a retry can
-        // complete it without re-sending any part.
-        let target = self.multipart_target(upload_id);
-        if let Some(fault) = self
-            .injector
-            .check(FaultOp::CompleteMultipart, target.as_deref().unwrap_or(""))
-        {
-            let (e, d) = self.charge_injected(OpKind::PutObject, fault, 0);
-            return (Err(e), d);
+        // complete it without re-sending any part. As in
+        // [`ObjectStore::upload_part`], an idle injector skips the
+        // target-key stripe lookup (it would return None for any key).
+        if !self.faults_idle() {
+            let target = self.multipart_target(upload_id);
+            if let Some(fault) = self
+                .injector
+                .check(FaultOp::CompleteMultipart, target.as_deref().unwrap_or(""))
+            {
+                let (e, d) = self.charge_injected(OpKind::PutObject, fault, 0);
+                return (Err(e), d);
+            }
         }
         let d = self.charge(OpKind::PutObject, 0, 0);
         // The backend consumes the upload whether or not assembly
         // succeeds (S3 semantics) — drop the tracker either way.
-        self.multipart.lock().unwrap().remove(&upload_id);
+        self.multipart_stripe(upload_id).remove(&upload_id);
         let assembled = match self
             .backend
             .complete_multipart(upload_id, self.config.min_part_size)
@@ -753,7 +909,7 @@ impl ObjectStore {
     /// Abort a multipart upload (task abort path). Charged as a DELETE.
     pub fn abort_multipart(&self, upload_id: u64) -> (Result<(), StoreError>, SimDuration) {
         let d = self.charge(OpKind::DeleteObject, 0, 0);
-        self.multipart.lock().unwrap().remove(&upload_id);
+        self.multipart_stripe(upload_id).remove(&upload_id);
         (
             self.backend
                 .abort_multipart(upload_id)
@@ -776,13 +932,16 @@ impl ObjectStore {
         now: SimInstant,
         max_age: SimDuration,
     ) -> (MultipartSweep, SimDuration) {
-        let stale: Vec<(u64, u64)> = {
-            let mp = self.multipart.lock().unwrap();
-            mp.iter()
-                .filter(|(_, t)| now.elapsed_since(t.started) >= max_age)
-                .map(|(id, t)| (*id, t.part_bytes.values().sum::<u64>()))
-                .collect()
-        };
+        let mut stale: Vec<(u64, u64)> = Vec::new();
+        for stripe in &self.multipart {
+            self.note_front_end_lock();
+            let mp = stripe.lock().unwrap();
+            stale.extend(
+                mp.iter()
+                    .filter(|(_, t)| now.elapsed_since(t.started) >= max_age)
+                    .map(|(id, t)| (*id, t.part_bytes.values().sum::<u64>())),
+            );
+        }
         let mut sweep = MultipartSweep::default();
         let mut elapsed = SimDuration::ZERO;
         for (id, bytes) in stale {
@@ -825,10 +984,15 @@ impl ObjectStore {
     /// [`ObjectStore::sweep_stale_multiparts`] lifecycle sweep frees.
     pub fn debug_stranded_multipart_bytes(&self) -> u64 {
         self.multipart
-            .lock()
-            .unwrap()
-            .values()
-            .map(|t| t.part_bytes.values().sum::<u64>())
+            .iter()
+            .map(|stripe| {
+                stripe
+                    .lock()
+                    .unwrap()
+                    .values()
+                    .map(|t| t.part_bytes.values().sum::<u64>())
+                    .sum::<u64>()
+            })
             .sum()
     }
 }
@@ -1344,6 +1508,111 @@ mod tests {
             s.get_object("res", &format!("k{i}")).0.unwrap();
         }
         assert_eq!(s.counters().get(OpKind::PutObject), 51);
+    }
+
+    #[test]
+    fn idle_hot_path_takes_zero_front_end_locks() {
+        // Strong consistency, zero jitter, no armed faults: the entire
+        // whole-object data path must never touch a front-end stripe.
+        let s = store();
+        s.put_object("res", "d/k", vec![0u8; 64], Metadata::new(), SimInstant(0))
+            .0
+            .unwrap();
+        s.get_object("res", "d/k").0.unwrap();
+        s.get_object_range("res", "d/k", 8, 8).0.unwrap();
+        s.head_object("res", "d/k").0.unwrap();
+        s.list("res", "", None, SimInstant(1)).0.unwrap();
+        s.copy_object("res", "d/k", "res", "d/k2", SimInstant(2))
+            .0
+            .unwrap();
+        s.delete_object("res", "d/k", SimInstant(3)).0.unwrap();
+        assert_eq!(
+            s.debug_front_end_locks(),
+            0,
+            "idle strong-consistency hot path must be lock-free"
+        );
+        // Sanity for the counter itself (only counted in debug builds):
+        // the eventual-consistency overlay DOES take stripes.
+        #[cfg(debug_assertions)]
+        {
+            let e = ObjectStore::new(StoreConfig::instant_eventual());
+            e.create_container("res", SimInstant::EPOCH).0.unwrap();
+            e.put_object("res", "k", vec![1], Metadata::new(), SimInstant(0))
+                .0
+                .unwrap();
+            assert!(e.debug_front_end_locks() > 0, "overlay writes are counted");
+        }
+    }
+
+    #[test]
+    fn striping_preserves_visibility_semantics_exactly() {
+        // The same timed put/delete/list protocol must produce identical
+        // visible listings and op counters whether the overlay lives in
+        // one mutex or sixteen stripes: per-key lag state is disjoint
+        // across stripes and the chained overlay preserves sortedness.
+        let run = |stripes: usize| {
+            let s = ObjectStore::new(StoreConfig {
+                stripes,
+                ..StoreConfig::instant_eventual()
+            });
+            s.create_container("res", SimInstant::EPOCH).0.unwrap();
+            for i in 0..40u64 {
+                s.put_object(
+                    "res",
+                    &format!("d/part-{i:02}"),
+                    vec![0u8; (i as usize + 1) * 3],
+                    Metadata::new(),
+                    SimInstant(i * 250_000),
+                )
+                .0
+                .unwrap();
+            }
+            for i in (0..40u64).step_by(3) {
+                s.delete_object("res", &format!("d/part-{i:02}"), SimInstant(10_000_000 + i))
+                    .0
+                    .unwrap();
+            }
+            let mut listings = Vec::new();
+            for t in [0, 1_500_000, 5_000_000, 9_999_999, 11_000_000, 13_000_000] {
+                let (l, _) = s.list("res", "d/", None, SimInstant(t));
+                listings.push(
+                    l.unwrap()
+                        .objects
+                        .into_iter()
+                        .map(|o| (o.name, o.size))
+                        .collect::<Vec<_>>(),
+                );
+            }
+            (listings, s.counters())
+        };
+        let (legacy_listings, legacy_counts) = run(1);
+        let (striped_listings, striped_counts) = run(16);
+        assert_eq!(legacy_listings, striped_listings);
+        assert_eq!(legacy_counts, striped_counts);
+    }
+
+    #[test]
+    fn jitter_streams_decorrelate_across_threads() {
+        // Two real threads drawing jitter from one store get distinct
+        // PCG32 streams: each thread's sequence is deterministic for it,
+        // but the sequences differ (no shared mutex, no shared stream).
+        let mut lat = LatencyModel::paper_testbed();
+        lat.jitter = 0.2;
+        let s = ObjectStore::new(StoreConfig {
+            latency: lat,
+            seed: 7,
+            ..StoreConfig::instant_strong()
+        });
+        s.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let draws = |n: usize| -> Vec<u64> {
+            (0..n).map(|_| s.head_container("res").1.as_micros()).collect()
+        };
+        let (a, b) = std::thread::scope(|scope| {
+            let ta = scope.spawn(|| draws(16));
+            let tb = scope.spawn(|| draws(16));
+            (ta.join().unwrap(), tb.join().unwrap())
+        });
+        assert_ne!(a, b, "per-thread jitter streams must decorrelate");
     }
 
     #[test]

@@ -17,6 +17,20 @@
 //! the timestamps recorded at mutation time, so queries may arrive with
 //! non-monotonic `now` values (independent task clocks) and still agree
 //! with the legacy semantics.
+//!
+//! # Striping
+//!
+//! The store holds [`StoreConfig::stripes`](super::StoreConfig::stripes)
+//! independent `Mutex<VisibilityMap>` instances and routes each
+//! `(container, key)` mutation to one by the *same* FNV shard hash as
+//! `ShardedMemBackend`, so 16 real writer threads contend on 16 stripes
+//! instead of one map. Nothing in this module knows about that: every
+//! entry is keyed by its exact (container, key), the key sets held by
+//! different stripes are disjoint, and [`VisibilityMap::overlay`] is an
+//! identity on entries it holds no state for — so a listing can chain
+//! the stripes' overlays in any order over the raw backend listing and
+//! get the byte-identical result of the legacy single-map layout
+//! (pinned by `striping_preserves_visibility_semantics_exactly`).
 
 use super::container::ObjectSummary;
 use crate::simclock::{SimDuration, SimInstant};

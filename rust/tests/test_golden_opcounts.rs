@@ -63,6 +63,7 @@ fn build_with(
         readahead,
         faults,
         retry: RetryPolicy::with_retries(retries),
+        ..StoreConfig::default()
     });
     store.create_container("res", SimInstant::EPOCH).0.unwrap();
     let fs = scenario.connector(store.clone(), MULTIPART_SIZE);
@@ -164,6 +165,36 @@ fn one_object_job_is_deterministic() {
         assert_eq!(a.0, b.0, "{scenario:?} trace");
         assert_eq!(a.1, b.1, "{scenario:?} virtual runtime");
         assert_eq!(a.2, b.2, "{scenario:?} op counts");
+    }
+}
+
+/// Front-end striping is invisible to the accounting: the one-object job
+/// run over the legacy single-mutex layout (`stripes: 1`) and over the
+/// sharded front end (`stripes: 16`, the default) produces byte-identical
+/// REST traces, op counts and virtual runtimes, for every scenario. The
+/// lock layout is a concurrency detail, never a semantics one.
+#[test]
+fn front_end_striping_never_changes_the_golden_accounting() {
+    let build_striped = |scenario: Scenario, stripes: usize| {
+        let store = ObjectStore::new(StoreConfig {
+            latency: LatencyModel::paper_testbed(),
+            consistency: ConsistencyModel::strong(),
+            min_part_size: 0,
+            stripes,
+            ..StoreConfig::default()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = scenario.connector(store.clone(), MULTIPART_SIZE);
+        (store, fs)
+    };
+    for scenario in Scenario::ALL {
+        let (store_l, fs_l) = build_striped(scenario, 1);
+        let legacy = one_object_job(&store_l, &*fs_l, scenario, usize::MAX);
+        let (store_s, fs_s) = build_striped(scenario, 16);
+        let sharded = one_object_job(&store_s, &*fs_s, scenario, usize::MAX);
+        assert_eq!(legacy.0, sharded.0, "{scenario:?} trace");
+        assert_eq!(legacy.1, sharded.1, "{scenario:?} virtual runtime");
+        assert_eq!(legacy.2, sharded.2, "{scenario:?} op counts");
     }
 }
 

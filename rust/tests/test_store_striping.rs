@@ -1,0 +1,299 @@
+//! Front-end striping invariance (PR 9): sharding the store front end's
+//! visibility overlay and multipart tracker must be *invisible* to every
+//! single-threaded result — same op counts, same virtual durations, same
+//! fault traces, same visible listings — on every backend, including
+//! `HttpBackend` through a real in-process gateway. Plus the lock-free
+//! accounting criterion: under 16 real writer threads the atomic op
+//! counters lose no updates (exact totals, not floors).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use stocator::gateway::{GatewayHandle, GatewayServer};
+use stocator::metrics::OpKind;
+use stocator::objectstore::backend::ShardedMemBackend;
+use stocator::objectstore::{
+    BackendKind, ConsistencyModel, FaultOp, FaultRule, FaultSpec, LatencyModel, Metadata,
+    ObjectStore, StoreConfig,
+};
+use stocator::simclock::{SimDuration, SimInstant};
+
+fn unique_root(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "stocator-striping-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Build a store whose only variable is the front-end stripe count.
+/// Eventual consistency (2s lags) keeps the visibility overlay on the
+/// hot path; jitter keeps the per-thread RNG streams in play; paper
+/// latencies make virtual durations meaningful comparands.
+fn striped_store(backend: BackendKind, stripes: usize, faults: FaultSpec) -> Arc<ObjectStore> {
+    ObjectStore::new(StoreConfig {
+        latency: LatencyModel {
+            jitter: 0.1,
+            ..LatencyModel::paper_testbed()
+        },
+        consistency: ConsistencyModel::eventual(),
+        min_part_size: 0,
+        seed: 9,
+        backend,
+        stripes,
+        faults,
+        ..StoreConfig::default()
+    })
+}
+
+/// A deterministic scripted job crossing every striped structure:
+/// timed PUTs and DELETEs (visibility stripes), listings straddling the
+/// 2s create/delete lags (stripe-overlay merge), a COPY, a multipart
+/// upload completed and one left to the lifecycle sweep (multipart
+/// stripes), plus 404 probes. Returns the full observable transcript:
+/// one line per op outcome, total virtual time, and the counter
+/// snapshot.
+fn scripted_job(store: &ObjectStore) -> (Vec<String>, u64, stocator::metrics::OpCounts) {
+    const S: u64 = 1_000_000; // 1 virtual second in micros
+    let mut trace = Vec::new();
+    let mut virt = SimDuration::ZERO;
+    macro_rules! run {
+        ($line:expr, $d:expr) => {{
+            trace.push($line);
+            virt += $d;
+        }};
+    }
+    let (r, d) = store.create_container("c", SimInstant::EPOCH);
+    run!(format!("create_container {r:?}"), d);
+    // 24 timed puts, one every 250ms of virtual time.
+    for i in 0..24u64 {
+        let key = format!("d/part-{i:02}");
+        let data = vec![i as u8; 100 + i as usize];
+        let (r, d) = store.put_object("c", &key, data, Metadata::new(), SimInstant(i * S / 4));
+        run!(format!("put {key} {r:?}"), d);
+    }
+    // Reads: hits, a ranged read, and a 404.
+    for i in [0u64, 7, 23] {
+        let key = format!("d/part-{i:02}");
+        let (r, d) = store.get_object("c", &key);
+        let line = match r {
+            Ok(got) => format!("get {key} ok len={} etag={:016x}", got.data.len(), got.head.etag),
+            Err(e) => format!("get {key} {e:?}"),
+        };
+        run!(line, d);
+        let (r, d) = store.head_object("c", &key);
+        run!(format!("head {key} {r:?}"), d);
+    }
+    let (r, d) = store.get_object_range("c", "d/part-05", 10, 40);
+    let line = match r {
+        Ok(got) => format!("get_range ok len={} full={}", got.data.len(), got.head.size),
+        Err(e) => format!("get_range {e:?}"),
+    };
+    run!(line, d);
+    let (r, d) = store.get_object("c", "d/ghost");
+    run!(format!("get d/ghost {r:?}"), d);
+    // Copy, then delete every third key at t=10s..
+    let (r, d) = store.copy_object("c", "d/part-00", "c", "out/copied", SimInstant(9 * S));
+    run!(format!("copy {r:?}"), d);
+    for i in (0..24u64).step_by(3) {
+        let key = format!("d/part-{i:02}");
+        let (r, d) = store.delete_object("c", &key, SimInstant(10 * S + i));
+        run!(format!("delete {key} {r:?}"), d);
+    }
+    // Listings straddling the consistency lags: mid-creation (some keys
+    // still invisible), settled, mid-deletion (ghosts visible), and
+    // fully settled. The visible (name, size) sequence is part of the
+    // transcript — this is where stripe-overlay merge order would show.
+    for now in [S, 3 * S, 10 * S + 12, 13 * S] {
+        let (r, d) = store.list("c", "d/", None, SimInstant(now));
+        let line = match r {
+            Ok(l) => {
+                let names: Vec<String> = l
+                    .objects
+                    .iter()
+                    .map(|o| format!("{}:{}", o.name, o.size))
+                    .collect();
+                format!("list@{now} [{}]", names.join(","))
+            }
+            Err(e) => format!("list@{now} {e:?}"),
+        };
+        run!(line, d);
+    }
+    // Multipart: one upload completed, one stranded then swept.
+    let (r, d) = store.initiate_multipart("c", "mp/done", Metadata::new(), SimInstant(20 * S));
+    let done_id = *r.as_ref().unwrap();
+    run!(format!("initiate mp/done {r:?}"), d);
+    for (n, bytes) in [(1u32, 300usize), (2, 200)] {
+        let (r, d) = store.upload_part(done_id, n, vec![n as u8; bytes]);
+        run!(format!("upload_part {n} {r:?}"), d);
+    }
+    let (r, d) = store.complete_multipart(done_id, SimInstant(21 * S));
+    run!(format!("complete {r:?}"), d);
+    let (r, d) = store.initiate_multipart("c", "mp/stranded", Metadata::new(), SimInstant(22 * S));
+    let stranded_id = *r.as_ref().unwrap();
+    run!(format!("initiate mp/stranded {r:?}"), d);
+    let (r, d) = store.upload_part(stranded_id, 1, vec![9u8; 500]);
+    run!(format!("upload_part stranded {r:?}"), d);
+    trace.push(format!(
+        "stranded_bytes {}",
+        store.debug_stranded_multipart_bytes()
+    ));
+    let (sweep, d) = store.sweep_stale_multiparts(SimInstant(400 * S), SimDuration::from_secs(60));
+    run!(
+        format!("sweep aborted={} freed={}", sweep.aborted, sweep.freed_bytes),
+        d
+    );
+    trace.push(format!("in_flight {}", store.debug_multipart_in_flight()));
+    (trace, virt.as_micros(), store.counters())
+}
+
+/// Run the scripted job at `stripes` against a fresh backend of `kind`
+/// and return its transcript.
+fn transcript(
+    kind: &str,
+    stripes: usize,
+    faults: FaultSpec,
+) -> (Vec<String>, u64, stocator::metrics::OpCounts) {
+    let (backend, cleanup, _gateway): (BackendKind, Option<PathBuf>, Option<GatewayHandle>) =
+        match kind {
+            "mem" => (BackendKind::Mem, None, None),
+            "sharded" => (BackendKind::Sharded(16), None, None),
+            "fs" => {
+                let root = unique_root("fs");
+                (BackendKind::LocalFs(Some(root.clone())), Some(root), None)
+            }
+            "http" => {
+                let inner = Arc::new(ShardedMemBackend::new(4));
+                let server =
+                    GatewayServer::bind("127.0.0.1:0", inner).expect("bind ephemeral gateway");
+                let handle = server.spawn();
+                let addr = handle.addr().to_string();
+                (BackendKind::Http { addr, ns: None }, None, Some(handle))
+            }
+            other => panic!("unknown backend kind {other}"),
+        };
+    let store = striped_store(backend, stripes, faults);
+    let out = scripted_job(&store);
+    drop(store);
+    if let Some(root) = cleanup {
+        let _ = std::fs::remove_dir_all(&root);
+    }
+    out
+}
+
+/// The invariance criterion on every backend: the seed's single-lock
+/// front end (`stripes: 1`) and the striped layout (`stripes: 16`, and
+/// a deliberately-awkward prime count) produce byte-identical
+/// transcripts — ops, outcomes, visible listings, virtual time,
+/// counters.
+#[test]
+fn striping_is_invisible_on_every_backend() {
+    for kind in ["mem", "sharded", "fs", "http"] {
+        let legacy = transcript(kind, 1, FaultSpec::none());
+        for stripes in [16usize, 7] {
+            let striped = transcript(kind, stripes, FaultSpec::none());
+            assert_eq!(
+                legacy.0, striped.0,
+                "{kind}: transcript changed at stripes={stripes}"
+            );
+            assert_eq!(
+                legacy.1, striped.1,
+                "{kind}: virtual runtime changed at stripes={stripes}"
+            );
+            assert_eq!(
+                legacy.2, striped.2,
+                "{kind}: op counters changed at stripes={stripes}"
+            );
+        }
+    }
+}
+
+/// Same criterion with the fault plane armed: scheduled faults on PUT
+/// and on a multipart part must fire at the same points and leave the
+/// same trace whether or not the front end is striped (fault matching
+/// consults the multipart stripe for the target key).
+#[test]
+fn fault_traces_are_striping_invariant() {
+    let spec = FaultSpec::none()
+        .with(FaultRule::new(FaultOp::Put, "d/", 3, 2))
+        .with(FaultRule::new(FaultOp::UploadPart, "mp/", 1, 1))
+        .with(FaultRule::new(FaultOp::Get, "d/part-07", 1, 1));
+    let legacy = transcript("mem", 1, spec.clone());
+    let striped = transcript("mem", 16, spec);
+    assert_eq!(legacy.0, striped.0, "fault trace changed under striping");
+    assert_eq!(legacy.1, striped.1, "faulted virtual runtime changed");
+    assert_eq!(legacy.2, striped.2, "faulted op counters changed");
+    // The spec really fired: some op in the transcript failed.
+    assert!(
+        legacy.0.iter().any(|l| l.contains("Err(")),
+        "fault spec never fired: {:?}",
+        legacy.0
+    );
+}
+
+const WRITERS: usize = 16;
+const ITERS: u64 = 512;
+
+/// Lock-free accounting under real contention: 16 writer threads, each
+/// issuing a fixed op mix against the striped front end, must land
+/// EXACT counter totals — relaxed atomics lose no updates, and the
+/// visibility/multipart stripes corrupt nothing. (Floors would pass
+/// even with lost updates; equality is the point.)
+#[test]
+fn sixteen_writers_lose_no_counts() {
+    let store = striped_store(BackendKind::Sharded(16), 16, FaultSpec::none());
+    store.create_container("c", SimInstant::EPOCH).0.unwrap();
+    std::thread::scope(|scope| {
+        for w in 0..WRITERS {
+            let store = &store;
+            scope.spawn(move || {
+                for i in 0..ITERS {
+                    let key = format!("w{w:02}/part-{i:06}");
+                    store
+                        .put_object("c", &key, vec![7u8; 64], Metadata::new(), SimInstant(i))
+                        .0
+                        .unwrap();
+                    store.get_object("c", &key).0.unwrap();
+                    store.head_object("c", &key).0.unwrap();
+                    if i % 8 == 7 {
+                        store.delete_object("c", &key, SimInstant(i)).0.unwrap();
+                    }
+                    if i % 64 == 63 {
+                        store
+                            .list("c", &format!("w{w:02}/"), None, SimInstant(i))
+                            .0
+                            .unwrap();
+                    }
+                }
+                // One multipart per thread: initiate + 2 parts + complete.
+                let (r, _) = store.initiate_multipart(
+                    "c",
+                    &format!("w{w:02}/mp"),
+                    Metadata::new(),
+                    SimInstant(0),
+                );
+                let id = r.unwrap();
+                store.upload_part(id, 1, vec![1u8; 64]).0.unwrap();
+                store.upload_part(id, 2, vec![2u8; 64]).0.unwrap();
+                store.complete_multipart(id, SimInstant(1)).0.unwrap();
+            });
+        }
+    });
+    let counts = store.counters();
+    let w = WRITERS as u64;
+    // Per thread: ITERS puts + initiate + 2 parts + complete = ITERS+4
+    // PUT-class ops; plus the single create_container on the main thread.
+    assert_eq!(counts.get(OpKind::PutObject), w * (ITERS + 4) + 1);
+    assert_eq!(counts.get(OpKind::GetObject), w * ITERS);
+    assert_eq!(counts.get(OpKind::HeadObject), w * ITERS);
+    assert_eq!(counts.get(OpKind::DeleteObject), w * (ITERS / 8));
+    assert_eq!(counts.get(OpKind::GetContainer), w * (ITERS / 64));
+    // Bytes: every put and part is 64 bytes (data_scale 1, so unscaled);
+    // every get reads the 64 bytes back.
+    assert_eq!(counts.bytes_written, w * (ITERS + 2) * 64);
+    assert_eq!(counts.bytes_read, w * ITERS * 64);
+    // No multipart leaked and no tracker entry survived completion.
+    assert_eq!(store.debug_multipart_in_flight(), 0);
+    assert_eq!(store.debug_stranded_multipart_bytes(), 0);
+}
