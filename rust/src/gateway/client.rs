@@ -42,6 +42,7 @@ use super::http::{
     read_response, write_request, Headers, Response, REQUEST_ID, REQUEST_REPLAYED,
     STALE_CONNECTION,
 };
+use super::server::classify_op;
 use crate::objectstore::backend::{
     clamp_range, AssembledUpload, Backend, BackendError, ListPage, ObjectStat,
 };
@@ -80,6 +81,13 @@ pub struct HttpBackend {
     retried: AtomicU64,
     /// Responses answered from the gateway's replay cache.
     replayed: AtomicU64,
+    /// Completed wire operations per [`OpKind`] (`OpKind::ALL` order),
+    /// classified with the gateway's own routing table. One logical
+    /// operation counts once no matter how many backpressure or wire
+    /// re-sends it took — so on a chaos-free run these totals must
+    /// equal the server's executed-op counters exactly (the
+    /// `stress --scrape` gate).
+    wire_ops: [AtomicU64; 7],
 }
 
 /// Most blind re-sends after backpressure rejections before the
@@ -188,6 +196,7 @@ impl HttpBackend {
             shed: AtomicU64::new(0),
             retried: AtomicU64::new(0),
             replayed: AtomicU64::new(0),
+            wire_ops: Default::default(),
         })
     }
 
@@ -235,6 +244,25 @@ impl HttpBackend {
     /// blind re-send was recovered *without* re-execution.
     pub fn replayed_responses(&self) -> u64 {
         self.replayed.load(Ordering::Relaxed)
+    }
+
+    /// Completed wire operations by [`crate::metrics::OpKind`] index
+    /// (`OpKind::ALL` order). The client-side half of the scrape gate:
+    /// chaos-free, these equal the gateway's executed-op counters.
+    pub fn wire_op_counts(&self) -> [u64; 7] {
+        std::array::from_fn(|i| self.wire_ops[i].load(Ordering::Relaxed))
+    }
+
+    /// Count one completed logical operation against the gateway's own
+    /// classification table. Called once per [`HttpBackend::request`]
+    /// that came back with a real (non-backpressure) response —
+    /// rejections the budget could not absorb and dead-wire errors are
+    /// *not* ops, exactly as the server sees them.
+    fn record_wire_op(&self, method: &str, target: &str) {
+        let (path, query) = target.split_once('?').unwrap_or((target, ""));
+        if let Some(kind) = classify_op(method, path, query) {
+            self.wire_ops[kind.index()].fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// A fresh 128-bit idempotency id from this backend's seeded PCG32
@@ -326,6 +354,10 @@ impl HttpBackend {
                 || (resp.status == 503
                     && resp.headers.get("x-error-kind") == Some("over-capacity"));
             if !backpressure {
+                // The request executed (404s included, like the
+                // server's accounting); rejections returned past the
+                // budget below never did.
+                self.record_wire_op(method, target);
                 return Ok(resp);
             }
             let pause = retry_after(&resp);
@@ -899,6 +931,25 @@ mod tests {
             assert!(next <= ceiling.min(RETRY_CAP) + Duration::from_micros(1));
             prev = next;
         }
+    }
+
+    #[test]
+    fn wire_op_counts_mirror_the_gateways_table() {
+        let server = GatewayServer::bind("127.0.0.1:0", Arc::new(ShardedMemBackend::new(2)))
+            .expect("bind ephemeral");
+        let handle = server.spawn();
+        let b = HttpBackend::connect(&handle.addr().to_string(), None).unwrap();
+        b.create_container("res").unwrap(); // PUT container  → PUT Object class
+        assert!(b.container_exists("res")); // HEAD container → HEAD Container
+        b.put("res", "k", Object::new(b"x".to_vec(), Metadata::new(), SimInstant::EPOCH))
+            .unwrap(); // → PUT Object
+        b.get("res", "k").unwrap(); // → GET Object
+        b.head("res", "k").unwrap(); // → HEAD Object
+        let _ = b.live_count("res"); // ?live= debug route → not an op
+        // An executed 404 is still an op, on both sides of the wire.
+        assert!(b.get("res", "missing").is_err());
+        // OpKind::ALL order: Head, Get, Put, Copy, Delete, GetC, HeadC.
+        assert_eq!(b.wire_op_counts(), [1, 2, 2, 0, 0, 0, 1]);
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! provably-unexecuted rejections above), and the [`ChaosConfig`] wire
 //! fault injector that proves it.
 
-use crate::metrics::LiveCounters;
+use crate::metrics::{LiveCounters, ObsPlane};
 use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -183,12 +183,19 @@ pub enum ChaosAction {
 /// out first and exercises its blind-re-send path.
 pub(crate) const STALL_HOLD: Duration = Duration::from_secs(3);
 
+/// Stable display names for the per-kind chaos injection counters, in
+/// the same order as [`ChaosPlan::by_kind`]'s array.
+pub const CHAOS_KINDS: [&str; 4] = ["kill-response", "truncate", "stall", "reset"];
+
 /// Runtime state of the chaos plane: the seeded draw stream plus
-/// injection counters (observability for tests and the CLI).
+/// injection counters (observability for tests, the CLI, and
+/// `/metricz`, which breaks injections out per fault kind).
 pub(crate) struct ChaosPlan {
     cfg: ChaosConfig,
     rng: Mutex<Pcg32>,
     injected: AtomicU64,
+    /// Per-kind injection counts, [`CHAOS_KINDS`] order.
+    by_kind: [AtomicU64; 4],
 }
 
 impl ChaosPlan {
@@ -197,6 +204,7 @@ impl ChaosPlan {
             cfg,
             rng: Mutex::new(Pcg32::with_stream(cfg.seed, 0xc4a0_5eed)),
             injected: AtomicU64::new(0),
+            by_kind: Default::default(),
         }
     }
 
@@ -208,25 +216,30 @@ impl ChaosPlan {
         rng.chance(p)
     }
 
+    fn inject(&self, kind_idx: usize) {
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        self.by_kind[kind_idx].fetch_add(1, Ordering::Relaxed);
+    }
+
     fn at_accept(&self) -> bool {
         let hit = self.draw(self.cfg.reset);
         if hit {
-            self.injected.fetch_add(1, Ordering::Relaxed);
+            self.inject(3);
         }
         hit
     }
 
     fn on_response(&self) -> ChaosAction {
-        let action = if self.draw(self.cfg.kill_response) {
-            ChaosAction::KillResponse
+        let (action, kind_idx) = if self.draw(self.cfg.kill_response) {
+            (ChaosAction::KillResponse, 0)
         } else if self.draw(self.cfg.truncate) {
-            ChaosAction::Truncate
+            (ChaosAction::Truncate, 1)
         } else if self.draw(self.cfg.stall) {
-            ChaosAction::Stall
+            (ChaosAction::Stall, 2)
         } else {
             return ChaosAction::None;
         };
-        self.injected.fetch_add(1, Ordering::Relaxed);
+        self.inject(kind_idx);
         action
     }
 }
@@ -257,6 +270,12 @@ pub struct GatewayConfig {
     /// Wire-level fault injection (see [`ChaosConfig`]); all-zero
     /// probabilities (the default) mean the chaos plane is off.
     pub chaos: ChaosConfig,
+    /// Observability plane master switch: latency/byte histograms,
+    /// reactor sweep stats, and the `/tracez` ring. On by default —
+    /// recording is wait-free and never touches a lock on the request
+    /// path — but can be switched off to run the A/B invariance proof
+    /// (`observability_never_changes_op_counts_or_virtual_runtimes`).
+    pub observability: bool,
 }
 
 impl Default for GatewayConfig {
@@ -270,6 +289,7 @@ impl Default for GatewayConfig {
             read_timeout: Duration::from_secs(5),
             drain_timeout: Duration::from_secs(2),
             chaos: ChaosConfig::default(),
+            observability: true,
         }
     }
 }
@@ -325,6 +345,18 @@ impl GatewayConfig {
                 self.chaos = ChaosConfig { seed, ..ChaosConfig::parse(value)? };
             }
             "chaos_seed" => self.chaos.seed = num(key, value)?,
+            "observability" => {
+                self.observability = match value.trim() {
+                    "true" | "on" => true,
+                    "false" | "off" => false,
+                    other => {
+                        return Err(format!(
+                            "bad value '{other}' for gateway key 'observability' \
+                             (expected true/false)"
+                        ))
+                    }
+                };
+            }
             other => return Err(format!("unknown gateway config key '{other}'")),
         }
         Ok(())
@@ -376,6 +408,7 @@ impl GatewayConfig {
             "drain_timeout_ms",
             "chaos",
             "chaos_seed",
+            "observability",
         ];
         for key in KEYS {
             let var = format!("STOCATOR_GATEWAY_{}", key.to_ascii_uppercase());
@@ -401,7 +434,7 @@ impl GatewayConfig {
     /// One-line human summary for the `serve` banner.
     pub fn describe(&self) -> String {
         format!(
-            "{} core, max-conns {}, rate-limit {}, auth {}, chaos {}",
+            "{} core, max-conns {}, rate-limit {}, auth {}, chaos {}, obs {}",
             self.mode.name(),
             self.max_conns,
             if self.rate_limit > 0.0 {
@@ -411,6 +444,7 @@ impl GatewayConfig {
             },
             if self.auth_token.is_some() { "bearer" } else { "off" },
             self.chaos.spec(),
+            if self.observability { "on" } else { "off" },
         )
     }
 }
@@ -574,9 +608,19 @@ impl ReplayCache {
         self.hits.load(Ordering::Relaxed)
     }
 
+    /// Entries currently resident (`<= capacity()`). Scrape-path only.
+    pub fn occupancy(&self) -> usize {
+        self.entries.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// The LRU bound this cache was built with.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
     #[cfg(test)]
     fn len(&self) -> usize {
-        self.entries.lock().unwrap_or_else(|e| e.into_inner()).len()
+        self.occupancy()
     }
 }
 
@@ -598,12 +642,19 @@ pub struct Gatekeeper {
     /// are not ops). Same lock-free atomic array the store front end
     /// uses; snapshotted by the `/metricz` route.
     pub ops: LiveCounters,
+    /// The end-to-end observability plane: per-op-class latency/byte
+    /// histograms, phase splits, reactor sweep stats, and the `/tracez`
+    /// ring (see [`crate::metrics::registry`]). Always constructed;
+    /// `cfg.observability = false` disables *recording* while the
+    /// scrape routes keep answering (with empty series).
+    pub obs: ObsPlane,
 }
 
 impl Gatekeeper {
     pub fn new(cfg: GatewayConfig) -> Gatekeeper {
         let limiter = RateLimiter::new(cfg.rate_limit, cfg.burst);
         let chaos = cfg.chaos.is_active().then(|| ChaosPlan::new(cfg.chaos));
+        let obs = ObsPlane::new(cfg.observability);
         Gatekeeper {
             cfg,
             limiter,
@@ -613,6 +664,7 @@ impl Gatekeeper {
             rejected_auth: AtomicU64::new(0),
             shed_503: AtomicU64::new(0),
             ops: LiveCounters::new(),
+            obs,
         }
     }
 
@@ -630,6 +682,14 @@ impl Gatekeeper {
     /// Total wire faults injected (all four kinds).
     pub fn chaos_injected(&self) -> u64 {
         self.chaos.as_ref().map_or(0, |c| c.injected.load(Ordering::Relaxed))
+    }
+
+    /// Per-kind wire fault injection counts, [`CHAOS_KINDS`] order.
+    /// All zero with chaos off.
+    pub fn chaos_injected_by_kind(&self) -> [u64; 4] {
+        self.chaos.as_ref().map_or([0; 4], |c| {
+            std::array::from_fn(|i| c.by_kind[i].load(Ordering::Relaxed))
+        })
     }
 
     /// Screen one fully parsed request before routing. `Some(resp)`
@@ -734,6 +794,7 @@ mod tests {
             drain_timeout_ms = 750
             chaos = "kill-response@p=0.02,truncate@p=0.01"
             chaos_seed = 99
+            observability = false
             "#,
         )
         .expect("valid config must parse");
@@ -747,6 +808,17 @@ mod tests {
         assert_eq!(cfg.chaos.kill_response, 0.02);
         assert_eq!(cfg.chaos.truncate, 0.01);
         assert_eq!(cfg.chaos.seed, 99);
+        assert!(!cfg.observability);
+        assert!(cfg.describe().contains("obs off"));
+        assert!(GatewayConfig::default().observability, "observability defaults on");
+        assert!(GatewayConfig::default().describe().contains("obs on"));
+        // Env layer knows the key too, and garbage is a startup error.
+        cfg.apply_env_with(|k| {
+            (k == "STOCATOR_GATEWAY_OBSERVABILITY").then(|| "on".to_string())
+        })
+        .unwrap();
+        assert!(cfg.observability);
+        assert!(cfg.set("observability", "maybe").is_err());
     }
 
     #[test]
@@ -829,11 +901,20 @@ mod tests {
         let g = gate(11);
         let _ = draws(&g);
         assert!(g.chaos_injected() >= 1);
+        // Per-kind counters partition the aggregate: only the armed
+        // kinds fired, and their sum is the total.
+        let by_kind = g.chaos_injected_by_kind();
+        assert_eq!(by_kind.iter().sum::<u64>(), g.chaos_injected());
+        assert!(by_kind[0] >= 1, "kill-response armed at p=0.5 must fire in 64 draws");
+        assert!(by_kind[3] >= 1, "reset armed at p=0.5 must fire in 64 accepts");
+        assert_eq!(by_kind[1], 0, "truncate was not armed");
+        assert_eq!(by_kind[2], 0, "stall was not armed");
         // Chaos off: no plan, no draws, nothing injected.
         let off = Gatekeeper::new(GatewayConfig::default());
         assert_eq!(off.chaos_on_response(), ChaosAction::None);
         assert!(!off.chaos_at_accept());
         assert_eq!(off.chaos_injected(), 0);
+        assert_eq!(off.chaos_injected_by_kind(), [0; 4]);
     }
 
     #[test]

@@ -13,12 +13,22 @@ use std::time::Instant;
 
 use crate::gateway::config::{ChaosAction, Gatekeeper, STALL_HOLD};
 use crate::gateway::http::{try_parse_request, write_response, Response};
-use crate::gateway::server::{chaos_cut, process_request};
+use crate::gateway::server::{chaos_cut, chaos_disposition, elapsed_nanos, process_request_traced};
 use crate::objectstore::backend::Backend;
 
 /// Read at most this much per poll pass, so one firehose peer cannot
 /// starve every other connection in the sweep.
 const READ_QUOTA: usize = 64 * 1024;
+
+/// Bytes a sweep pass moved across every connection it polled. The
+/// loop owns one per pass and feeds it to the observability plane's
+/// sweep stats — plain integers on the stack, so per-connection
+/// accounting costs nothing beyond the additions themselves.
+#[derive(Default)]
+pub(super) struct IoTally {
+    pub(super) bytes_in: u64,
+    pub(super) bytes_out: u64,
+}
 
 pub(super) struct Conn {
     stream: TcpStream,
@@ -62,13 +72,16 @@ impl Conn {
 
     /// One readiness pass. Returns true if any byte moved or any
     /// request was served — the reactor only sleeps when a full sweep
-    /// makes no progress anywhere.
+    /// makes no progress anywhere. `now` is the sweep's pass-start
+    /// instant (shared across every connection in the pass); bytes
+    /// moved accumulate into `io`.
     pub(super) fn poll(
         &mut self,
         backend: &dyn Backend,
         gate: &Gatekeeper,
         now: Instant,
         draining: bool,
+        io: &mut IoTally,
     ) -> bool {
         if self.closed {
             return false;
@@ -85,11 +98,15 @@ impl Conn {
             self.closed = true;
             return true;
         }
-        let mut progress = self.flush();
+        let wrote = self.flush();
+        io.bytes_out += wrote as u64;
+        let mut progress = wrote > 0;
         if !self.closed && self.outbuf.is_empty() && !self.peer_eof {
-            progress |= self.fill();
+            let read = self.fill();
+            io.bytes_in += read as u64;
+            progress |= read > 0;
         }
-        progress |= self.serve_buffered(backend, gate, draining);
+        progress |= self.serve_buffered(backend, gate, draining, now, io);
         if !self.closed
             && !self.inbuf.is_empty()
             && self.outbuf.is_empty()
@@ -102,7 +119,9 @@ impl Conn {
                 &Response::new(408).with_header("x-error-kind", "stalled-request"),
             );
             self.close_after_flush = true;
-            progress |= self.flush();
+            let wrote = self.flush();
+            io.bytes_out += wrote as u64;
+            progress |= wrote > 0;
         }
         if draining && !self.closed && self.inbuf.is_empty() && self.outbuf.is_empty() {
             // Graceful drain: in-flight work above finished (or there
@@ -115,14 +134,49 @@ impl Conn {
     /// Parse-and-serve every complete request currently buffered.
     /// Responses are served strictly in order; serving pauses whenever
     /// the socket will not accept the previous response yet.
-    fn serve_buffered(&mut self, backend: &dyn Backend, gate: &Gatekeeper, draining: bool) -> bool {
+    ///
+    /// This is where the reactor core measures the two phases the
+    /// shared serve path cannot see: `parse` (around
+    /// [`try_parse_request`], taken only when input is actually
+    /// buffered — an idle keep-alive costs no clock read) and `queue`
+    /// (serve start minus `pass_start`, the dispatch delay a request
+    /// waited for its turn in the sweep).
+    fn serve_buffered(
+        &mut self,
+        backend: &dyn Backend,
+        gate: &Gatekeeper,
+        draining: bool,
+        pass_start: Instant,
+        io: &mut IoTally,
+    ) -> bool {
         let mut progress = false;
+        let obs = gate.obs.enabled();
         while !self.closed && self.outbuf.is_empty() && self.stall_until.is_none() {
+            let t_parse = (obs && !self.inbuf.is_empty()).then(Instant::now);
             match try_parse_request(&self.inbuf) {
                 Ok(Some((mut req, consumed))) => {
                     self.inbuf.drain(..consumed);
-                    let bytes = process_request(backend, gate, &mut req);
-                    match gate.chaos_on_response() {
+                    let parse_nanos = t_parse.map_or(0, elapsed_nanos);
+                    let queue_nanos = if obs {
+                        Instant::now()
+                            .saturating_duration_since(pass_start)
+                            .as_nanos()
+                            .min(u64::MAX as u128) as u64
+                    } else {
+                        0
+                    };
+                    let outcome =
+                        process_request_traced(backend, gate, &mut req, queue_nanos, parse_nanos);
+                    let bytes = outcome.bytes;
+                    let action = gate.chaos_on_response();
+                    if !matches!(action, ChaosAction::None) {
+                        // The wire decision lands after the trace entry
+                        // was pushed; patch the disposition in place.
+                        if let Some(token) = outcome.trace {
+                            gate.obs.trace.patch_disposition(token, chaos_disposition(action));
+                        }
+                    }
+                    match action {
                         ChaosAction::None => self.outbuf.extend_from_slice(&bytes),
                         ChaosAction::Stall => {
                             // Park the connection; poll() closes it once
@@ -143,7 +197,9 @@ impl Conn {
                         self.close_after_flush = true;
                     }
                     progress = true;
-                    progress |= self.flush();
+                    let wrote = self.flush();
+                    io.bytes_out += wrote as u64;
+                    progress |= wrote > 0;
                 }
                 Ok(None) => {
                     if self.peer_eof {
@@ -157,7 +213,9 @@ impl Conn {
                             self.inbuf.clear();
                             self.enqueue(&Response::new(400));
                             self.close_after_flush = true;
-                            progress |= self.flush();
+                            let wrote = self.flush();
+                            io.bytes_out += wrote as u64;
+                            progress |= wrote > 0;
                         }
                     }
                     break;
@@ -168,7 +226,9 @@ impl Conn {
                     self.inbuf.clear();
                     self.enqueue(&Response::new(400));
                     self.close_after_flush = true;
-                    progress |= self.flush();
+                    let wrote = self.flush();
+                    io.bytes_out += wrote as u64;
+                    progress |= wrote > 0;
                     break;
                 }
             }
@@ -176,8 +236,9 @@ impl Conn {
         progress
     }
 
-    /// Read whatever the socket has, up to the per-pass quota.
-    fn fill(&mut self) -> bool {
+    /// Read whatever the socket has, up to the per-pass quota. Returns
+    /// the bytes moved into the input buffer.
+    fn fill(&mut self) -> usize {
         let mut scratch = [0u8; 16 * 1024];
         let mut moved = 0usize;
         loop {
@@ -202,18 +263,19 @@ impl Conn {
                 }
             }
         }
-        moved > 0
+        moved
     }
 
     /// Push pending output into the socket; resumable across passes.
-    fn flush(&mut self) -> bool {
+    /// Returns the bytes accepted by the socket this call.
+    fn flush(&mut self) -> usize {
         if self.outbuf.is_empty() {
             if self.close_after_flush {
                 self.closed = true;
             }
-            return false;
+            return 0;
         }
-        let mut progress = false;
+        let mut wrote = 0usize;
         loop {
             match self.stream.write(&self.outbuf[self.written..]) {
                 Ok(0) => {
@@ -223,7 +285,7 @@ impl Conn {
                 Ok(n) => {
                     self.written += n;
                     self.last_progress = Instant::now();
-                    progress = true;
+                    wrote += n;
                     if self.written == self.outbuf.len() {
                         self.outbuf.clear();
                         self.written = 0;
@@ -242,7 +304,7 @@ impl Conn {
                 }
             }
         }
-        progress
+        wrote
     }
 
     fn enqueue(&mut self, resp: &Response) {

@@ -42,7 +42,11 @@
 //! cache are shared with the threaded core
 //! (`server::process_request`), so the two cores are byte-identical to
 //! every client — pinned by running the full conformance suite against
-//! both. The wire chaos plane is applied here at the same layer as the
+//! both. The sweep loop feeds the observability plane once per pass
+//! (connections polled, accept-burst depth, bytes moved, idle-sleep
+//! ratio — [`crate::metrics::SweepStats`]); per-connection accounting
+//! is two stack integers, and with the plane disabled the loop takes
+//! no extra clock reads at all. The wire chaos plane is applied here at the same layer as the
 //! threaded core: `reset` drops connections at accept, kill/truncate
 //! enqueue a strict prefix of the serialized response, and `stall`
 //! parks the connection unwritten past the client's read deadline —
@@ -60,7 +64,7 @@ use super::config::Gatekeeper;
 use super::server::shed_connection;
 use crate::objectstore::backend::Backend;
 
-use conn::Conn;
+use conn::{Conn, IoTally};
 
 #[allow(unused_imports)] // referenced by the module docs
 use super::http::try_parse_request;
@@ -89,6 +93,7 @@ pub(crate) fn run_loop(
     loop {
         let stopping = stop.load(Ordering::Relaxed);
         let mut progress = false;
+        let mut accepted_this_pass = 0u64;
         if stopping {
             drain_deadline.get_or_insert_with(|| Instant::now() + gate.cfg.drain_timeout);
         } else {
@@ -96,6 +101,7 @@ pub(crate) fn run_loop(
                 match listener.accept() {
                     Ok((stream, _)) => {
                         progress = true;
+                        accepted_this_pass += 1;
                         if gate.chaos_at_accept() {
                             // `reset` chaos: drop the connection before
                             // reading a byte — provably unexecuted.
@@ -116,10 +122,19 @@ pub(crate) fn run_loop(
             }
         }
         let now = Instant::now();
+        let polled = conns.len() as u64;
+        let mut io = IoTally::default();
         for conn in conns.iter_mut() {
-            progress |= conn.poll(&*backend, &gate, now, stopping);
+            progress |= conn.poll(&*backend, &gate, now, stopping, &mut io);
         }
         conns.retain(|c| !c.is_closed());
+        if gate.obs.enabled() {
+            // One recording per sweep pass — cost is independent of how
+            // many connections the pass visited.
+            gate.obs
+                .sweep
+                .record_pass(polled, accepted_this_pass, io.bytes_in, io.bytes_out, !progress);
+        }
         if stopping {
             let deadline = drain_deadline.expect("set on first stopping sweep");
             if conns.is_empty() || Instant::now() >= deadline {

@@ -19,7 +19,8 @@
 //! | `DELETE /v1-upload/{id}` | `abort_multipart` (204) |
 //! | `GET /v1-upload` | `multipart_in_flight` (200, body: count) |
 //! | `GET`/`HEAD /healthz` | readiness probe (200 `ok`; no backend call) |
-//! | `GET`/`HEAD /metricz` | plain-text counter snapshot: gatekeeper rejections + per-[`OpKind`] store ops (no backend call, exempt from screening) |
+//! | `GET`/`HEAD /metricz` | Prometheus-style text exposition: gatekeeper rejections, per-[`OpKind`] store ops, serve-latency/byte/phase histograms, reactor sweep stats (no backend call, exempt from screening) |
+//! | `GET`/`HEAD /tracez` | JSON ring of the last traced requests: per-phase nanoseconds, status, replay/chaos/429 disposition (exempt from screening) |
 //!
 //! Containers and keys travel percent-encoded ([`super::encoding`]);
 //! object metadata rides as `x-object-meta-<pct-key>: <pct-value>`
@@ -55,22 +56,25 @@
 //! hits a request that already executed — exactly the ambiguity the
 //! replay cache exists to resolve.
 
-use super::config::{ChaosAction, Gatekeeper, GatewayConfig, GatewayMode, STALL_HOLD};
+use super::config::{ChaosAction, Gatekeeper, GatewayConfig, GatewayMode, CHAOS_KINDS, STALL_HOLD};
 use super::encoding::{meta_header, parse_query, pct_decode, pct_encode, query_param};
 use super::http::{
     read_request, serialize_response, write_response, Request, Response, REQUEST_ID,
     REQUEST_REPLAYED,
 };
-use crate::metrics::OpKind;
+use crate::metrics::histogram::{bucket_upper_nanos, Histogram};
+use crate::metrics::registry::{PHASES, TRACE_RING_SLOTS, UNIT_SCALE};
+use crate::metrics::{OpKind, PhaseNanos, TraceEntry};
 use crate::objectstore::backend::{Backend, BackendError};
 use crate::objectstore::object::{Metadata, Object};
 use crate::simclock::SimInstant;
+use crate::util::json::Json;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A bound-but-not-yet-serving gateway. Bind first (so callers learn
 /// the ephemeral port), then [`GatewayServer::spawn`] or
@@ -266,7 +270,8 @@ fn serve_connection(stream: TcpStream, backend: &dyn Backend, gate: &Gatekeeper)
                 return;
             }
         };
-        let bytes = process_request(backend, gate, &mut req);
+        let outcome = process_request_traced(backend, gate, &mut req, 0, 0);
+        let bytes = outcome.bytes;
         match gate.chaos_on_response() {
             ChaosAction::None => {
                 if write_half.write_all(&bytes).is_err() {
@@ -276,12 +281,18 @@ fn serve_connection(stream: TcpStream, backend: &dyn Backend, gate: &Gatekeeper)
             ChaosAction::Stall => {
                 // Hold the response unwritten past the client's read
                 // deadline, then close without sending a byte.
+                if let Some(token) = outcome.trace {
+                    gate.obs.trace.patch_disposition(token, chaos_disposition(ChaosAction::Stall));
+                }
                 std::thread::sleep(STALL_HOLD);
                 return;
             }
             action => {
                 // Kill/truncate: write a strict prefix, then close —
                 // the peer reads a genuinely torn response.
+                if let Some(token) = outcome.trace {
+                    gate.obs.trace.patch_disposition(token, chaos_disposition(action));
+                }
                 let cut = chaos_cut(action, bytes.len());
                 let _ = write_half.write_all(&bytes[..cut]);
                 return;
@@ -305,25 +316,99 @@ pub(crate) fn process_request(
     gate: &Gatekeeper,
     req: &mut Request,
 ) -> Vec<u8> {
-    if req.path.trim_matches('/') == "metricz" {
-        // Observability probe, exempt from auth/rate-limit like
-        // /healthz (both cores reach it through this shared path).
-        return serialize_response(&metricz_response(gate, &req.method));
+    process_request_traced(backend, gate, req, 0, 0).bytes
+}
+
+/// What serving one request produced: the wire bytes, plus the trace
+/// token the connection layer uses to patch a chaos disposition into
+/// the `/tracez` entry after the wire decision (`None` for probe
+/// routes, dropped traces, or observability off).
+pub(crate) struct ServeOutcome {
+    pub bytes: Vec<u8>,
+    pub trace: Option<(usize, u64)>,
+}
+
+/// [`process_request`] with core-measured phase timings attached:
+/// `queue_nanos` is the reactor sweep's dispatch delay and
+/// `parse_nanos` the wire-parse time (both 0 on the threaded core,
+/// where parsing is entangled with the blocking socket wait). The
+/// screen/route/serialize phases are measured here; recording happens
+/// only with the observability plane enabled and is wait-free
+/// (relaxed atomics plus a `try_lock` trace-slot write).
+pub(crate) fn process_request_traced(
+    backend: &dyn Backend,
+    gate: &Gatekeeper,
+    req: &mut Request,
+    queue_nanos: u64,
+    parse_nanos: u64,
+) -> ServeOutcome {
+    // Probe routes, exempt from auth/rate-limit (both cores reach them
+    // through this shared path) — and never traced or counted
+    // themselves, so a scrape cannot move what it measures.
+    match req.path.trim_matches('/') {
+        "healthz" => {
+            // Liveness/readiness: answering at all proves the accept
+            // loop, connection thread and router are up. Load drivers
+            // poll this instead of sleeping after spawn.
+            let resp = match req.method.as_str() {
+                "GET" => probe_response(Response::new(200).with_body(b"ok".to_vec()), "text/plain"),
+                "HEAD" => probe_response(Response::new(200), "text/plain"),
+                m => method_not_allowed("/healthz", m),
+            };
+            return ServeOutcome { bytes: serialize_response(&resp), trace: None };
+        }
+        "metricz" => {
+            return ServeOutcome {
+                bytes: serialize_response(&metricz_response(gate, &req.method)),
+                trace: None,
+            }
+        }
+        "tracez" => {
+            return ServeOutcome {
+                bytes: serialize_response(&tracez_response(gate, &req.method)),
+                trace: None,
+            }
+        }
+        _ => {}
     }
-    if let Some(rejection) = gate.screen(req) {
-        return serialize_response(&rejection);
-    }
+    let obs = gate.obs.enabled();
+    let mut phases = PhaseNanos {
+        queue: queue_nanos,
+        parse: parse_nanos,
+        ..PhaseNanos::default()
+    };
+    // Copies for the trace entry: `route` consumes the path, so they
+    // must be taken up front (only when the plane records at all).
+    let trace_ctx = obs.then(|| (req.method.clone(), req.path.clone()));
     let request_id = req.headers.get(REQUEST_ID).map(str::to_string);
+
+    let t = obs.then(Instant::now);
+    let screened = gate.screen(req);
+    phases.screen = t.map_or(0, elapsed_nanos);
+    if let Some(rejection) = screened {
+        let disposition = if rejection.status == 429 { "rejected-429" } else { "rejected-auth" };
+        let status = rejection.status;
+        let bytes = serialize_response(&rejection);
+        let trace = trace_ctx.and_then(|(method, path)| {
+            push_trace(gate, &request_id, method, path, status, None, phases, disposition)
+        });
+        return ServeOutcome { bytes, trace };
+    }
     if let Some(id) = &request_id {
         if let Some(bytes) = gate.replay.lookup(id) {
-            return bytes;
+            let trace = trace_ctx.and_then(|(method, path)| {
+                push_trace(gate, &request_id, method, path, wire_status(&bytes), None, phases, "replayed")
+            });
+            return ServeOutcome { bytes, trace };
         }
     }
     // Classify before routing: `route` consumes the path and may move
     // the body out of the request.
     let op = classify_op(&req.method, &req.path, &req.query);
     let body_len = req.body.len() as u64;
+    let t = obs.then(Instant::now);
     let mut resp = route(backend, req);
+    phases.route = t.map_or(0, elapsed_nanos);
     if let Some(kind) = op {
         // Mirror the store front end's accounting rules: every executed
         // request is an op (404s included); bytes move only on success.
@@ -338,20 +423,81 @@ pub(crate) fn process_request(
             _ => {}
         }
     }
+    let status = resp.status;
+    let t = obs.then(Instant::now);
     let bytes = serialize_response(&resp);
-    if let Some(id) = request_id {
+    if let Some(id) = &request_id {
         resp.headers.push(REQUEST_REPLAYED, "true");
-        gate.replay.store(&id, serialize_response(&resp));
+        gate.replay.store(id, serialize_response(&resp));
     }
+    phases.serialize = t.map_or(0, elapsed_nanos);
+    let trace = trace_ctx.and_then(|(method, path)| {
+        if let Some(kind) = op {
+            gate.obs.requests.record(kind, body_len, bytes.len() as u64, &phases);
+        }
+        push_trace(gate, &request_id, method, path, status, op, phases, "ok")
+    });
+    ServeOutcome { bytes, trace }
+}
+
+/// Nanoseconds since `since`, saturating.
+pub(crate) fn elapsed_nanos(since: Instant) -> u64 {
+    since.elapsed().as_nanos().min(u64::MAX as u128) as u64
+}
+
+/// Status code of an already-serialized response (`HTTP/1.1 NNN ...`);
+/// how a replayed trace entry learns the status it re-served.
+fn wire_status(bytes: &[u8]) -> u16 {
     bytes
+        .get(9..12)
+        .and_then(|s| std::str::from_utf8(s).ok())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+/// The `/tracez` disposition label for a chaos action applied at the
+/// connection layer (patched into the entry after the wire decision).
+pub(crate) fn chaos_disposition(action: ChaosAction) -> &'static str {
+    match action {
+        ChaosAction::KillResponse => "chaos-kill-response",
+        ChaosAction::Truncate => "chaos-truncate",
+        ChaosAction::Stall => "chaos-stall",
+        ChaosAction::None => "ok",
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_trace(
+    gate: &Gatekeeper,
+    id: &Option<String>,
+    method: String,
+    path: String,
+    status: u16,
+    op: Option<OpKind>,
+    phases: PhaseNanos,
+    disposition: &'static str,
+) -> Option<(usize, u64)> {
+    gate.obs.trace.push(TraceEntry {
+        seq: 0,
+        id: id.clone().unwrap_or_else(|| "-".to_string()),
+        method,
+        path,
+        status,
+        op: op.map(OpKind::name),
+        total_ns: phases.total(),
+        phases,
+        disposition,
+    })
 }
 
 /// Which store op class a wire request maps to, for the `/metricz`
 /// counters. Screened rejections and replayed responses never get here
 /// — only requests that actually reach the router are ops. Debug-only
 /// routes (`?live=`, `GET /v1-upload`, `/healthz`) classify as `None`:
-/// they are not REST ops in the store front end either.
-fn classify_op(method: &str, path: &str, query: &str) -> Option<OpKind> {
+/// they are not REST ops in the store front end either. `pub(crate)`
+/// so [`super::client::HttpBackend`] counts its side of the wire with
+/// the identical table — that equality is what `stress --scrape` gates.
+pub(crate) fn classify_op(method: &str, path: &str, query: &str) -> Option<OpKind> {
     let trimmed = path.trim_start_matches('/');
     if trimmed.strip_prefix("v1-upload").is_some() {
         return match method {
@@ -384,27 +530,63 @@ fn classify_op(method: &str, path: &str, query: &str) -> Option<OpKind> {
     }
 }
 
-/// The `/metricz` body: a plain-text snapshot of the gatekeeper's
-/// rejection/replay/chaos counters plus the per-op-kind executed-request
-/// counters — one `name value` pair per line, stable names, no
-/// dependencies. Everything read here is a relaxed atomic load; the
-/// probe never takes a lock and never touches the backend.
+/// Content type of the Prometheus text exposition `/metricz` serves.
+pub(crate) const PROM_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Shared probe-route headers: scrape responses must never be cached,
+/// and each probe declares its exposition format.
+fn probe_response(resp: Response, content_type: &str) -> Response {
+    resp.with_header("Content-Type", content_type)
+        .with_header("Cache-Control", "no-store")
+}
+
+/// Probe routes answer only GET/HEAD; anything else is a `405` carrying
+/// the `Allow` header RFC 9110 requires (these used to be generic 400s).
+fn method_not_allowed(path: &str, method: &str) -> Response {
+    Response::new(405)
+        .with_header("Allow", "GET, HEAD")
+        .with_header("x-error-kind", "method-not-allowed")
+        .with_header("x-error-msg", pct_encode(&format!("method {method} not valid for {path}")))
+}
+
+/// The `/metricz` body: Prometheus-style text exposition of the
+/// gatekeeper's rejection/replay/chaos counters, the per-op-kind
+/// executed-request counters, the observability plane's latency/byte/
+/// phase histograms (cumulative `_bucket{le=...}` series), and the
+/// reactor sweep stats. The original plain `name value` counter lines
+/// are preserved verbatim — `# TYPE` metadata and the histogram series
+/// are additions, never renames. Counter reads are relaxed atomic
+/// loads; histogram snapshots merge the live buckets scrape-side
+/// (private-then-merge), so the probe never blocks the request path
+/// and never touches the backend.
 fn metricz_response(gate: &Gatekeeper, method: &str) -> Response {
     match method {
         "GET" => {}
-        "HEAD" => return Response::new(200),
-        m => return bad_request(&format!("method {m} not valid for /metricz")),
+        "HEAD" => return probe_response(Response::new(200), PROM_CONTENT_TYPE),
+        m => return method_not_allowed("/metricz", m),
     }
     let ops = gate.ops.snapshot();
     let mut body = String::new();
-    body.push_str(&format!("gateway_throttled_429s {}\n", gate.rejected_429s()));
-    body.push_str(&format!("gateway_shed_503s {}\n", gate.shed_503s()));
-    body.push_str(&format!("gateway_rejected_auths {}\n", gate.rejected_auths()));
-    body.push_str(&format!(
-        "gateway_replayed_responses {}\n",
-        gate.replay.replayed()
-    ));
-    body.push_str(&format!("gateway_chaos_injected {}\n", gate.chaos_injected()));
+    for (name, value) in [
+        ("gateway_throttled_429s", gate.rejected_429s()),
+        ("gateway_shed_503s", gate.shed_503s()),
+        ("gateway_rejected_auths", gate.rejected_auths()),
+        ("gateway_replayed_responses", gate.replay.replayed()),
+        ("gateway_chaos_injected", gate.chaos_injected()),
+    ] {
+        body.push_str(&format!("# TYPE {name} counter\n{name} {value}\n"));
+    }
+    body.push_str("# TYPE gateway_chaos_injected_kind counter\n");
+    for (kind, n) in CHAOS_KINDS.iter().zip(gate.chaos_injected_by_kind()) {
+        body.push_str(&format!("gateway_chaos_injected_kind{{kind=\"{kind}\"}} {n}\n"));
+    }
+    for (name, value) in [
+        ("gateway_replay_cache_occupancy", gate.replay.occupancy() as u64),
+        ("gateway_replay_cache_capacity", gate.replay.capacity() as u64),
+    ] {
+        body.push_str(&format!("# TYPE {name} gauge\n{name} {value}\n"));
+    }
+    body.push_str("# TYPE store_ops counter\n");
     for kind in OpKind::ALL {
         body.push_str(&format!(
             "store_ops{{op=\"{}\"}} {}\n",
@@ -412,9 +594,181 @@ fn metricz_response(gate: &Gatekeeper, method: &str) -> Response {
             ops.get(kind)
         ));
     }
-    body.push_str(&format!("store_bytes_read {}\n", ops.bytes_read));
-    body.push_str(&format!("store_bytes_written {}\n", ops.bytes_written));
-    Response::new(200).with_body(body.into_bytes())
+    for (name, value) in [
+        ("store_bytes_read", ops.bytes_read),
+        ("store_bytes_written", ops.bytes_written),
+    ] {
+        body.push_str(&format!("# TYPE {name} counter\n{name} {value}\n"));
+    }
+    // ---- observability plane: histograms + quantile gauges ----
+    let obs = &gate.obs;
+    body.push_str("# TYPE gateway_serve_seconds histogram\n");
+    for kind in OpKind::ALL {
+        let h = obs.requests.serve_for(kind).snapshot();
+        if !h.is_empty() {
+            push_histogram(&mut body, "gateway_serve_seconds", Some(("op", kind.name())), &h, 1e9);
+        }
+    }
+    // Parse-friendly per-op-class quantiles (µs): what `stress --scrape`
+    // embeds next to the client-side percentiles in BENCH_10.json.
+    body.push_str("# TYPE gateway_serve_latency_us gauge\n");
+    for kind in OpKind::ALL {
+        let h = obs.requests.serve_for(kind).snapshot();
+        if h.is_empty() {
+            continue;
+        }
+        let s = h.summary();
+        for (q, v) in [
+            ("p50", s.p50_us),
+            ("p95", s.p95_us),
+            ("p99", s.p99_us),
+            ("mean", s.mean_us),
+            ("max", s.max_us),
+        ] {
+            body.push_str(&format!(
+                "gateway_serve_latency_us{{op=\"{}\",q=\"{q}\"}} {v}\n",
+                kind.name()
+            ));
+        }
+    }
+    body.push_str("# TYPE gateway_phase_seconds histogram\n");
+    for (i, phase) in PHASES.iter().enumerate() {
+        let h = obs.requests.phase(i).snapshot();
+        if !h.is_empty() {
+            push_histogram(&mut body, "gateway_phase_seconds", Some(("phase", phase)), &h, 1e9);
+        }
+    }
+    let unit = UNIT_SCALE as f64;
+    body.push_str("# TYPE gateway_request_bytes histogram\n");
+    for kind in OpKind::ALL {
+        let h = obs.requests.request_bytes_for(kind).snapshot();
+        if !h.is_empty() {
+            push_histogram(&mut body, "gateway_request_bytes", Some(("op", kind.name())), &h, unit);
+        }
+    }
+    body.push_str("# TYPE gateway_response_bytes histogram\n");
+    for kind in OpKind::ALL {
+        let h = obs.requests.response_bytes_for(kind).snapshot();
+        if !h.is_empty() {
+            push_histogram(&mut body, "gateway_response_bytes", Some(("op", kind.name())), &h, unit);
+        }
+    }
+    // ---- reactor sweep stats (all zero under the threaded core) ----
+    for (name, value) in [
+        ("reactor_sweep_passes", obs.sweep.passes.load(Ordering::Relaxed)),
+        ("reactor_sweep_idle_sleeps", obs.sweep.idle_sleeps.load(Ordering::Relaxed)),
+        ("reactor_accepted_conns", obs.sweep.accepted.load(Ordering::Relaxed)),
+        ("reactor_bytes_in", obs.sweep.bytes_in.load(Ordering::Relaxed)),
+        ("reactor_bytes_out", obs.sweep.bytes_out.load(Ordering::Relaxed)),
+    ] {
+        body.push_str(&format!("# TYPE {name} counter\n{name} {value}\n"));
+    }
+    for (name, hist) in [
+        ("reactor_conns_polled", &obs.sweep.conns_polled),
+        ("reactor_bytes_moved", &obs.sweep.bytes_moved),
+        ("reactor_accept_burst", &obs.sweep.accept_burst),
+    ] {
+        body.push_str(&format!("# TYPE {name} histogram\n"));
+        let h = hist.snapshot();
+        if !h.is_empty() {
+            push_histogram(&mut body, name, None, &h, unit);
+        }
+    }
+    for (name, value) in [
+        ("tracez_pushed", obs.trace.pushed()),
+        ("tracez_dropped", obs.trace.dropped()),
+    ] {
+        body.push_str(&format!("# TYPE {name} counter\n{name} {value}\n"));
+    }
+    probe_response(Response::new(200).with_body(body.into_bytes()), PROM_CONTENT_TYPE)
+}
+
+/// Append one Prometheus histogram: cumulative `_bucket{le=...}` series
+/// trimmed to the occupied bucket range (omitted leading buckets are
+/// all-zero; omitted trailing ones all equal `_count`), then the
+/// `+Inf` bucket, `_sum`, and `_count`. `le_div` converts the bucket
+/// bounds' nanoseconds into the exposition unit: `1e9` for seconds,
+/// [`UNIT_SCALE`] for raw unit histograms (bytes, connection counts).
+fn push_histogram(
+    body: &mut String,
+    name: &str,
+    label: Option<(&str, &str)>,
+    h: &Histogram,
+    le_div: f64,
+) {
+    let with_le = |le: &str| match label {
+        Some((k, v)) => format!("{{{k}=\"{v}\",le=\"{le}\"}}"),
+        None => format!("{{le=\"{le}\"}}"),
+    };
+    let plain = match label {
+        Some((k, v)) => format!("{{{k}=\"{v}\"}}"),
+        None => String::new(),
+    };
+    let counts = h.bucket_counts();
+    let range = counts
+        .iter()
+        .position(|&n| n > 0)
+        .zip(counts.iter().rposition(|&n| n > 0));
+    if let Some((first, last)) = range {
+        let mut cum = 0u64;
+        for (i, &n) in counts.iter().enumerate().take(last + 1).skip(first) {
+            cum += n;
+            let le = bucket_upper_nanos(i) as f64 / le_div;
+            body.push_str(&format!("{name}_bucket{} {cum}\n", with_le(&le.to_string())));
+        }
+    }
+    body.push_str(&format!("{name}_bucket{} {}\n", with_le("+Inf"), h.count()));
+    body.push_str(&format!("{name}_sum{plain} {}\n", h.sum_nanos() as f64 / le_div));
+    body.push_str(&format!("{name}_count{plain} {}\n", h.count()));
+}
+
+/// The `/tracez` body: the trace ring's retained entries (oldest
+/// first) as pretty-printed JSON — trace id, method/path/status, op
+/// class, disposition, and the per-phase microsecond split. Scrape
+/// path only: snapshotting locks ring slots briefly, which the
+/// request path never does (writers `try_lock` and drop on contention).
+fn tracez_response(gate: &Gatekeeper, method: &str) -> Response {
+    match method {
+        "GET" => {}
+        "HEAD" => return probe_response(Response::new(200), "application/json"),
+        m => return method_not_allowed("/tracez", m),
+    }
+    let us = |n: u64| n as f64 / 1000.0;
+    let entries: Vec<Json> = gate
+        .obs
+        .trace
+        .snapshot()
+        .into_iter()
+        .map(|e| {
+            Json::obj()
+                .set("seq", e.seq)
+                .set("id", e.id)
+                .set("method", e.method)
+                .set("path", e.path)
+                .set("status", u64::from(e.status))
+                .set("op", e.op.map_or(Json::Null, Json::from))
+                .set("disposition", e.disposition)
+                .set("total_us", us(e.total_ns))
+                .set(
+                    "phases_us",
+                    Json::obj()
+                        .set("queue", us(e.phases.queue))
+                        .set("parse", us(e.phases.parse))
+                        .set("screen", us(e.phases.screen))
+                        .set("route", us(e.phases.route))
+                        .set("serialize", us(e.phases.serialize)),
+                )
+        })
+        .collect();
+    let doc = Json::obj()
+        .set("ring_slots", TRACE_RING_SLOTS)
+        .set("pushed", gate.obs.trace.pushed())
+        .set("dropped", gate.obs.trace.dropped())
+        .set("entries", Json::Arr(entries));
+    probe_response(
+        Response::new(200).with_body(doc.to_pretty().into_bytes()),
+        "application/json",
+    )
 }
 
 /// Where the chaos plane cuts a serialized response of `len` bytes.
@@ -515,16 +869,6 @@ fn parse_range(spec: &str) -> Option<(u64, u64)> {
 pub(crate) fn route(backend: &dyn Backend, req: &mut Request) -> Response {
     let path = std::mem::take(&mut req.path);
     let trimmed = path.trim_start_matches('/');
-    if trimmed == "healthz" {
-        // Liveness/readiness: answering at all proves the accept loop,
-        // connection thread and router are up. Load drivers poll this
-        // instead of sleeping after spawn.
-        return match req.method.as_str() {
-            "GET" => Response::new(200).with_body(b"ok".to_vec()),
-            "HEAD" => Response::new(200),
-            m => bad_request(&format!("method {m} not valid for /healthz")),
-        };
-    }
     if let Some(rest) = trimmed.strip_prefix("v1-upload") {
         return route_upload(backend, req, rest.trim_start_matches('/'));
     }
@@ -861,13 +1205,24 @@ mod tests {
             let _ = s.read_to_string(&mut resp);
             assert!(resp.starts_with("HTTP/1.1 200"), "{req} got: {resp}");
         }
-        // Other methods are clean 400s.
+        // Probe GETs carry no-store + a content type.
         let mut s = TcpStream::connect(handle.addr()).unwrap();
-        s.write_all(b"DELETE /healthz HTTP/1.1\r\n\r\n").unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
         s.shutdown(std::net::Shutdown::Write).unwrap();
         let mut resp = String::new();
         let _ = s.read_to_string(&mut resp);
-        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        assert!(resp.contains("Cache-Control: no-store"), "got: {resp}");
+        assert!(resp.contains("Content-Type: text/plain"), "got: {resp}");
+        // Other methods are 405s with the required Allow header.
+        for probe in ["/healthz", "/metricz", "/tracez"] {
+            let mut s = TcpStream::connect(handle.addr()).unwrap();
+            s.write_all(format!("DELETE {probe} HTTP/1.1\r\n\r\n").as_bytes()).unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut resp = String::new();
+            let _ = s.read_to_string(&mut resp);
+            assert!(resp.starts_with("HTTP/1.1 405"), "{probe} got: {resp}");
+            assert!(resp.contains("Allow: GET, HEAD"), "{probe} got: {resp}");
+        }
     }
 
     #[test]
@@ -927,6 +1282,29 @@ mod tests {
             );
             assert!(after.contains("store_bytes_written 5"), "{mode:?}: {after}");
             assert!(after.contains("store_bytes_read 5"), "{mode:?}: {after}");
+            // Prometheus exposition: typed families, versioned content
+            // type, no-store, and the new gauge/counter families.
+            assert!(after.contains("# TYPE store_ops counter"), "{mode:?}: {after}");
+            assert!(
+                after.contains("Content-Type: text/plain; version=0.0.4"),
+                "{mode:?}: {after}"
+            );
+            assert!(after.contains("Cache-Control: no-store"), "{mode:?}: {after}");
+            assert!(after.contains("gateway_replay_cache_capacity 256"), "{mode:?}: {after}");
+            assert!(
+                after.contains("gateway_chaos_injected_kind{kind=\"reset\"} 0"),
+                "{mode:?}: {after}"
+            );
+            // Serve histograms recorded the executed ops: the PUT class
+            // saw exactly 2 (exposed as the +Inf cumulative bucket).
+            assert!(
+                after.contains("gateway_serve_seconds_bucket{op=\"PUT Object\",le=\"+Inf\"} 2"),
+                "{mode:?}: {after}"
+            );
+            assert!(
+                after.contains("gateway_serve_latency_us{op=\"GET Object\",q=\"p50\"}"),
+                "{mode:?}: {after}"
+            );
             // The scrape itself is never an op (two scrapes so far, no
             // drift) and /metricz answers HEAD like /healthz.
             let mut s = TcpStream::connect(handle.addr()).unwrap();
@@ -936,6 +1314,188 @@ mod tests {
             let _ = s.read_to_string(&mut resp);
             assert!(resp.starts_with("HTTP/1.1 200"), "{mode:?}: {resp}");
         }
+    }
+
+    #[test]
+    fn metricz_histogram_buckets_are_cumulative_and_monotone() {
+        use std::io::{Read, Write};
+        let (handle, b) = gateway();
+        b.create_container("res").unwrap();
+        // A spread of payload sizes so several buckets populate.
+        for (i, size) in [(0usize, 10usize), (1, 1000), (2, 100_000), (3, 16)] {
+            b.put("res", &format!("k{i}"), obj(&vec![7u8; size], 0)).unwrap();
+        }
+        for i in 0..4 {
+            b.get("res", &format!("k{i}")).unwrap();
+        }
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"GET /metricz HTTP/1.1\r\n\r\n").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut scrape = String::new();
+        let _ = s.read_to_string(&mut scrape);
+        // Every exposed histogram family: cumulative bucket series are
+        // non-decreasing in `le` order (the emission order), and the
+        // +Inf bucket equals the family's _count.
+        let mut checked = 0;
+        for family in [
+            "gateway_serve_seconds_bucket{op=\"PUT Object\",",
+            "gateway_serve_seconds_bucket{op=\"GET Object\",",
+            "gateway_response_bytes_bucket{op=\"GET Object\",",
+            "gateway_request_bytes_bucket{op=\"PUT Object\",",
+            "gateway_phase_seconds_bucket{phase=\"route\",",
+        ] {
+            let counts: Vec<u64> = scrape
+                .lines()
+                .filter(|l| l.starts_with(family))
+                .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+                .collect();
+            assert!(counts.len() >= 2, "{family} series missing: {scrape}");
+            assert!(
+                counts.windows(2).all(|w| w[0] <= w[1]),
+                "{family} not monotone: {counts:?}"
+            );
+            checked += 1;
+            // +Inf (the last bucket emitted) == _count for the family.
+            let count_line_prefix = family.replace("_bucket", "_count");
+            let count_line_prefix = count_line_prefix.trim_end_matches(',').to_string() + "}";
+            let count: u64 = scrape
+                .lines()
+                .find(|l| l.starts_with(&count_line_prefix))
+                .and_then(|l| l.rsplit(' ').next())
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| panic!("no _count line for {family}"));
+            assert_eq!(*counts.last().unwrap(), count, "{family}");
+        }
+        assert_eq!(checked, 5);
+        // Byte histograms resolved the size spread: 10B and 100KB GETs
+        // must not share a bucket (distinct le series entries).
+        let resp_buckets: Vec<&str> = scrape
+            .lines()
+            .filter(|l| l.starts_with("gateway_response_bytes_bucket{op=\"GET Object\","))
+            .collect();
+        assert!(resp_buckets.len() >= 3, "{resp_buckets:?}");
+    }
+
+    #[test]
+    fn tracez_rings_the_last_requests_with_phase_splits() {
+        use std::io::{Read, Write};
+        let scrape_tracez = |addr: SocketAddr| -> String {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /tracez HTTP/1.1\r\n\r\n").unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut resp = String::new();
+            let _ = s.read_to_string(&mut resp);
+            resp
+        };
+        for mode in [GatewayMode::Threaded, GatewayMode::Reactor] {
+            let inner = Arc::new(ShardedMemBackend::new(4));
+            let server = GatewayServer::bind_with(
+                "127.0.0.1:0",
+                inner,
+                GatewayConfig { mode, ..GatewayConfig::default() },
+            )
+            .expect("bind ephemeral");
+            let handle = server.spawn();
+            let b = HttpBackend::connect(&handle.addr().to_string(), None).expect("connect");
+            b.create_container("res").unwrap();
+            b.put("res", "k", obj(b"hello", 3)).unwrap();
+            b.get("res", "k").unwrap();
+            let resp = scrape_tracez(handle.addr());
+            assert!(resp.starts_with("HTTP/1.1 200"), "{mode:?}: {resp}");
+            assert!(resp.contains("Content-Type: application/json"), "{mode:?}: {resp}");
+            assert!(resp.contains("Cache-Control: no-store"), "{mode:?}: {resp}");
+            // All three executed requests are traced, with op classes,
+            // ok dispositions, and phase splits.
+            assert!(resp.contains("\"op\": \"PUT Object\""), "{mode:?}: {resp}");
+            assert!(resp.contains("\"op\": \"GET Object\""), "{mode:?}: {resp}");
+            assert!(resp.contains("\"disposition\": \"ok\""), "{mode:?}: {resp}");
+            assert!(resp.contains("\"phases_us\""), "{mode:?}: {resp}");
+            assert!(resp.contains("\"pushed\": 3"), "{mode:?}: {resp}");
+            // The /tracez scrape itself (and /metricz, /healthz) is
+            // never traced: scrape again, pushed is unchanged.
+            let again = scrape_tracez(handle.addr());
+            assert!(again.contains("\"pushed\": 3"), "{mode:?}: {again}");
+        }
+        // Observability off: requests still serve, the ring stays empty.
+        let inner = Arc::new(ShardedMemBackend::new(1));
+        let server = GatewayServer::bind_with(
+            "127.0.0.1:0",
+            inner,
+            GatewayConfig { observability: false, ..GatewayConfig::default() },
+        )
+        .expect("bind ephemeral");
+        let handle = server.spawn();
+        let b = HttpBackend::connect(&handle.addr().to_string(), None).expect("connect");
+        b.create_container("res").unwrap();
+        let resp = scrape_tracez(handle.addr());
+        assert!(resp.contains("\"pushed\": 0"), "got: {resp}");
+        assert!(resp.contains("\"entries\": []"), "got: {resp}");
+    }
+
+    #[test]
+    fn traces_label_rejections_and_chaos_dispositions() {
+        use std::io::{Read, Write};
+        use crate::gateway::config::ChaosConfig;
+        // Auth-armed gateway: a rejected request is traced as such.
+        let inner = Arc::new(ShardedMemBackend::new(1));
+        let server = GatewayServer::bind_with(
+            "127.0.0.1:0",
+            inner,
+            GatewayConfig { auth_token: Some("tok".into()), ..GatewayConfig::default() },
+        )
+        .expect("bind");
+        let handle = server.spawn();
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"GET /v1/res HTTP/1.1\r\n\r\n").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut resp = String::new();
+        let _ = s.read_to_string(&mut resp);
+        assert!(resp.starts_with("HTTP/1.1 401"), "got: {resp}");
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"GET /tracez HTTP/1.1\r\n\r\n").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut trace = String::new();
+        let _ = s.read_to_string(&mut trace);
+        assert!(trace.contains("\"disposition\": \"rejected-auth\""), "got: {trace}");
+        assert!(trace.contains("\"status\": 401"), "got: {trace}");
+        drop(handle);
+        // Chaos-armed gateway: killed responses get their trace entry
+        // patched post-hoc at the connection layer. Half the responses
+        // (scrapes included) are torn, so retry the scrape until one
+        // survives intact.
+        let inner = Arc::new(ShardedMemBackend::new(1));
+        let server = GatewayServer::bind_with(
+            "127.0.0.1:0",
+            inner,
+            GatewayConfig {
+                chaos: ChaosConfig { kill_response: 0.5, ..ChaosConfig::default() },
+                ..GatewayConfig::default()
+            },
+        )
+        .expect("bind");
+        let handle = server.spawn();
+        for _ in 0..8 {
+            let mut s = TcpStream::connect(handle.addr()).unwrap();
+            s.write_all(b"PUT /v1/res HTTP/1.1\r\n\r\n").unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut torn_or_ok = String::new();
+            let _ = s.read_to_string(&mut torn_or_ok); // possibly torn; ignore
+        }
+        let mut patched = false;
+        for _ in 0..64 {
+            let mut s = TcpStream::connect(handle.addr()).unwrap();
+            s.write_all(b"GET /tracez HTTP/1.1\r\n\r\n").unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut trace = String::new();
+            let _ = s.read_to_string(&mut trace);
+            // The scrape itself may be chaos-torn; a torn response
+            // simply won't contain the full needle and we go again.
+            if trace.contains("\"disposition\": \"chaos-kill-response\"") {
+                patched = true;
+                break;
+            }
+        }
+        assert!(patched, "no chaos-kill-response disposition ever appeared in /tracez");
     }
 
     #[test]

@@ -340,7 +340,7 @@ impl Sweep {
 //
 // Unlike every table above, these report *measured wall-clock* numbers
 // from the `stress` load plane, not virtual-clock simulation — the text
-// rendering of what BENCH_8.json serializes.
+// rendering of what BENCH_10.json serializes.
 
 /// Per-op-class latency table for one stress run.
 pub fn render_stress_latency(run: &crate::loadgen::StressRun) -> String {
@@ -420,6 +420,35 @@ pub fn render_stress_cores(rows: &[crate::loadgen::CoreRow]) -> String {
     t.render()
 }
 
+/// The `--scrape` cross-check: the gateway's own `/metricz` truth next
+/// to the client's ledger. One row per op kind the server executed; the
+/// latency columns are the *server-side* serve histograms (queue/parse
+/// excluded on the threaded core), so client p95 minus server p95 is
+/// the wire + client-stack cost.
+pub fn render_stress_scrape(s: &crate::loadgen::ScrapeSummary) -> String {
+    let mut t = Table::new(
+        "scrape — server-side /metricz truth vs the client ledger",
+        &["op kind", "server ops", "client ops", "srv p50 µs", "srv p95 µs", "srv p99 µs", "srv max µs"],
+    );
+    for (i, k) in crate::metrics::OpKind::ALL.iter().enumerate() {
+        if s.server_ops[i] == 0 && s.client_ops[i] == 0 {
+            continue;
+        }
+        let lat = s.server_latency.iter().find(|r| r.op == k.name());
+        let f = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.1}"));
+        t.row(vec![
+            k.name().to_string(),
+            s.server_ops[i].to_string(),
+            s.client_ops[i].to_string(),
+            f(lat.map(|l| l.p50_us)),
+            f(lat.map(|l| l.p95_us)),
+            f(lat.map(|l| l.p99_us)),
+            f(lat.map(|l| l.max_us)),
+        ]);
+    }
+    t.render()
+}
+
 /// Paper Table 8 row for quick reference in benches.
 pub fn table8_paper_note() -> &'static str {
     "paper: Teragen cost ratios — H-S Base x8.23, S3a Base x27.82, \
@@ -478,6 +507,9 @@ mod tests {
             bytes_read: 0,
             throttled_429: 0,
             shed_503: 0,
+            retried_sends: 0,
+            replayed_responses: 0,
+            wire_ops: [0; 7],
         };
         r.executed[OpClass::Put.index()] = 5;
         r.hists[OpClass::Put.index()].record_nanos(10_000);
@@ -495,6 +527,33 @@ mod tests {
         ]);
         assert!(cores.contains("reactor"), "{cores}");
         assert!(cores.contains("threaded"), "{cores}");
+    }
+
+    #[test]
+    fn stress_scrape_table_renders_server_truth() {
+        use crate::loadgen::{ScrapeSummary, ServerLatencyRow};
+        use crate::metrics::OpKind;
+        let mut s = ScrapeSummary::default();
+        s.server_ops[OpKind::PutObject.index()] = 12;
+        s.client_ops[OpKind::PutObject.index()] = 12;
+        s.client_ops[OpKind::GetObject.index()] = 3;
+        s.server_latency.push(ServerLatencyRow {
+            op: "PUT Object".to_string(),
+            p50_us: 40.0,
+            p95_us: 90.5,
+            p99_us: 120.0,
+            mean_us: 48.0,
+            max_us: 300.0,
+        });
+        let out = render_stress_scrape(&s);
+        assert!(out.contains("PUT Object"), "{out}");
+        assert!(out.contains("90.5"), "{out}");
+        // A kind only one side saw still gets a row (the gap is the
+        // point of the table); latency absent renders as '-'.
+        assert!(out.contains("GET Object"), "{out}");
+        assert!(out.contains('-'), "{out}");
+        // Kinds neither side saw are omitted.
+        assert!(!out.contains("COPY Object"), "{out}");
     }
 
     #[test]

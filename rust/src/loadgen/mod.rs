@@ -26,10 +26,17 @@
 //!    a pure function of `(seed, worker id)`.
 //!
 //! Readiness is polled on the gateway's `/healthz` ([`wait_healthy`]) —
-//! never a sleep. Every run serializes to `BENCH_8.json`
+//! never a sleep. Every run serializes to `BENCH_10.json`
 //! ([`report::StressReport`]), continuing the `BENCH_<n>.json`
 //! perf-trajectory convention: one measured-performance artifact per PR,
-//! diffable across the repo's history. Two knobs exercise the reactor
+//! diffable across the repo's history. With `--scrape` the run also
+//! reads the gateway's *own* ledger: a background thread polls
+//! `/metricz` while the hammer swings, and once the workers join (the
+//! gateway still up) a final scrape pulls the server-side executed-op
+//! counters and serve-latency quantiles, plus the `/tracez` ring —
+//! embedded in the BENCH JSON next to the client-side percentiles.
+//! Chaos-free, the server-side op counts must equal the client side
+//! exactly ([`ScrapeSummary::op_gap`] `== 0`), which CI gates. Two knobs exercise the reactor
 //! core specifically: `--open-conns N` holds N idle keep-alive
 //! connections across the whole main hammer (the thread-per-connection
 //! core would need N parked threads; the reactor holds them in one), and
@@ -49,17 +56,22 @@
 pub mod report;
 pub mod workload;
 
-pub use report::{aggregate, CoreRow, MatrixCell, StressReport, StressRun, BENCH_FILE};
+pub use report::{
+    aggregate, CoreRow, MatrixCell, ScrapeSummary, ServerLatencyRow, StressReport, StressRun,
+    BENCH_FILE,
+};
 pub use workload::{run_worker, OpClass, WorkerConfig, WorkerReport, OP_CLASSES};
 
 use crate::gateway::http::{read_response, write_request, Headers};
 use crate::gateway::{
     unique_namespace, ChaosConfig, GatewayConfig, GatewayHandle, GatewayMode, GatewayServer,
 };
+use crate::metrics::OpKind;
 use crate::objectstore::backend::{unique_subroot, Backend, LocalFsBackend, ShardedMemBackend};
 use std::io::BufReader;
 use std::net::TcpStream;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
@@ -112,6 +124,11 @@ pub struct StressConfig {
     /// [`LocalFsBackend`] in a fresh subdirectory of this root instead
     /// of sharded memory. `shards` is ignored when set.
     pub fs_root: Option<PathBuf>,
+    /// `--scrape`: poll the gateway's `/metricz` during the main
+    /// hammer and embed the server-side executed-op counters,
+    /// serve-latency quantiles, and `/tracez` ring summary in the
+    /// BENCH JSON ([`ScrapeSummary`]).
+    pub scrape: bool,
 }
 
 impl Default for StressConfig {
@@ -132,6 +149,7 @@ impl Default for StressConfig {
             core: GatewayMode::Reactor,
             chaos: ChaosConfig::default(),
             fs_root: None,
+            scrape: false,
         }
     }
 }
@@ -218,6 +236,133 @@ fn open_idle_conns(addr: &str, n: usize) -> (Vec<TcpStream>, u64) {
     }
     let count = held.len() as u64;
     (held, count)
+}
+
+/// One raw `GET {path}` against the gateway; `Some(body)` iff it
+/// answered 200.
+fn fetch_text(addr: &str, path: &str) -> Option<String> {
+    let stream = TcpStream::connect(addr).ok()?;
+    let mut write_half = stream.try_clone().ok()?;
+    write_request(&mut write_half, "GET", path, &Headers::new(), b"").ok()?;
+    let mut reader = BufReader::new(stream);
+    let resp = read_response(&mut reader).ok()?;
+    if resp.status != 200 {
+        return None;
+    }
+    String::from_utf8(resp.body).ok()
+}
+
+/// Read the per-kind executed-op counters off a `/metricz` scrape
+/// (`store_ops{op="NAME"} N` lines, `OpKind::ALL` indexing).
+fn parse_store_ops(scrape: &str) -> [u64; 7] {
+    let mut ops = [0u64; 7];
+    for line in scrape.lines() {
+        let Some(rest) = line.strip_prefix("store_ops{op=\"") else { continue };
+        let Some((name, value)) = rest.split_once("\"} ") else { continue };
+        if let (Some(kind), Ok(n)) = (
+            OpKind::ALL.iter().find(|k| k.name() == name),
+            value.trim().parse::<u64>(),
+        ) {
+            ops[kind.index()] = n;
+        }
+    }
+    ops
+}
+
+/// Read the server-side serve-latency quantile gauges
+/// (`gateway_serve_latency_us{op="NAME",q="Q"} V`) into per-op rows.
+fn parse_server_latency(scrape: &str) -> Vec<ServerLatencyRow> {
+    let mut rows: Vec<ServerLatencyRow> = Vec::new();
+    for line in scrape.lines() {
+        let Some(rest) = line.strip_prefix("gateway_serve_latency_us{op=\"") else { continue };
+        let Some((name, rest)) = rest.split_once("\",q=\"") else { continue };
+        let Some((q, value)) = rest.split_once("\"} ") else { continue };
+        let Ok(v) = value.trim().parse::<f64>() else { continue };
+        let row = match rows.iter_mut().find(|r| r.op == name) {
+            Some(r) => r,
+            None => {
+                rows.push(ServerLatencyRow { op: name.to_string(), ..Default::default() });
+                rows.last_mut().expect("just pushed")
+            }
+        };
+        match q {
+            "p50" => row.p50_us = v,
+            "p95" => row.p95_us = v,
+            "p99" => row.p99_us = v,
+            "mean" => row.mean_us = v,
+            "max" => row.max_us = v,
+            _ => {}
+        }
+    }
+    rows
+}
+
+/// Value of an exposition line whose metric name (before the space)
+/// equals `name` exactly; 0 when absent.
+fn parse_counter(scrape: &str, name: &str) -> u64 {
+    scrape
+        .lines()
+        .find_map(|l| {
+            let (n, v) = l.split_once(' ')?;
+            (n == name).then(|| v.trim().parse().ok())?
+        })
+        .unwrap_or(0)
+}
+
+/// The `--scrape` plane: a background thread polling `/metricz` while
+/// the hammer swings (proving scrapes are serveable *under* load),
+/// then a final authoritative scrape once the workers have joined —
+/// the gateway still up, so the counters are complete and quiescent.
+struct Scraper {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    polls: Arc<AtomicU64>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+fn start_scraper(addr: &str) -> Scraper {
+    let stop = Arc::new(AtomicBool::new(false));
+    let polls = Arc::new(AtomicU64::new(0));
+    let thread = {
+        let addr = addr.to_string();
+        let stop = stop.clone();
+        let polls = polls.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                if fetch_text(&addr, "/metricz").is_some() {
+                    polls.fetch_add(1, Ordering::Relaxed);
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        })
+    };
+    Scraper { addr: addr.to_string(), stop, polls, thread }
+}
+
+impl Scraper {
+    /// Stop polling, take the final scrape, and fold in the client-side
+    /// wire ops. Fetches retry a bounded number of times: under
+    /// `--chaos` the scrape response itself can be torn by the wire
+    /// fault plane.
+    fn finish(self, client_ops: [u64; 7]) -> Result<ScrapeSummary, String> {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = self.thread.join();
+        let fetch = |path: &str| {
+            (0..32)
+                .find_map(|_| fetch_text(&self.addr, path))
+                .ok_or_else(|| format!("scrape: GET {path} at {} never answered", self.addr))
+        };
+        let metricz = fetch("/metricz")?;
+        let tracez = fetch("/tracez")?;
+        Ok(ScrapeSummary {
+            server_ops: parse_store_ops(&metricz),
+            client_ops,
+            server_latency: parse_server_latency(&metricz),
+            tracez_entries: tracez.matches("\"seq\":").count() as u64,
+            tracez_pushed: parse_counter(&metricz, "tracez_pushed"),
+            polls: self.polls.load(Ordering::Relaxed),
+        })
+    }
 }
 
 /// One hammer run: `clients` workers against the gateway at `addr`,
@@ -394,7 +539,7 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
     } else {
         Some(cfg.duration.unwrap_or(Duration::from_secs(2)))
     };
-    let (run, target_desc, open_conns_held) = match cfg.target.as_deref() {
+    let (run, target_desc, open_conns_held, scrape) = match cfg.target.as_deref() {
         Some(addr) => {
             if cfg.chaos.is_active() {
                 return Err(
@@ -405,6 +550,7 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
             }
             wait_healthy(addr, HEALTHY_TIMEOUT)?;
             let (held, held_n) = open_idle_conns(addr, cfg.open_conns);
+            let scraper = cfg.scrape.then(|| start_scraper(addr));
             let run = hammer(
                 addr,
                 cfg.clients,
@@ -416,7 +562,11 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
                 cfg.token.as_deref(),
             );
             drop(held);
-            (run, addr.to_string(), held_n)
+            let scrape = match scraper {
+                Some(s) => Some(s.finish(run.wire_ops)?),
+                None => None,
+            };
+            (run, addr.to_string(), held_n, scrape)
         }
         None => {
             // The main hammer is the only gateway that gets chaos.
@@ -424,6 +574,7 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
                 serve_in_process(cfg.shards, cfg.core, cfg.fs_root.as_deref(), cfg.chaos)?;
             wait_healthy(&addr, HEALTHY_TIMEOUT)?;
             let (held, held_n) = open_idle_conns(&addr, cfg.open_conns);
+            let scraper = cfg.scrape.then(|| start_scraper(&addr));
             let run = hammer(
                 &addr,
                 cfg.clients,
@@ -435,12 +586,18 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
                 cfg.token.as_deref(),
             );
             drop(held);
+            // The final scrape must land before the gateway drains —
+            // its counters die with the process.
+            let scrape = match scraper {
+                Some(s) => Some(s.finish(run.wire_ops)?),
+                None => None,
+            };
             handle.shutdown();
             let desc = match &cfg.fs_root {
                 Some(root) => format!("in-process fs:{}", root.display()),
                 None => "in-process".to_string(),
             };
-            (run, desc, held_n)
+            (run, desc, held_n, scrape)
         }
     };
     let matrix = if cfg.matrix {
@@ -460,6 +617,7 @@ pub fn run_stress(cfg: &StressConfig) -> Result<StressReport, String> {
         cores,
         open_conns: cfg.open_conns as u64,
         open_conns_held,
+        scrape,
     };
     if let Some(path) = &cfg.bench_path {
         report
@@ -510,6 +668,62 @@ mod tests {
         assert_eq!(report.run.total_ops, 24);
         assert_eq!(report.target, "in-process");
         assert!(report.matrix.is_empty());
+    }
+
+    #[test]
+    fn scrape_parsers_read_the_exposition_format() {
+        let scrape = "\
+# TYPE store_ops counter
+store_ops{op=\"PUT Object\"} 12
+store_ops{op=\"GET Object\"} 7
+store_ops{op=\"HEAD Container\"} 2
+# TYPE gateway_serve_latency_us gauge
+gateway_serve_latency_us{op=\"PUT Object\",q=\"p50\"} 41.5
+gateway_serve_latency_us{op=\"PUT Object\",q=\"p99\"} 90
+gateway_serve_latency_us{op=\"GET Object\",q=\"max\"} 12.25
+tracez_pushed 21
+tracez_dropped 0
+";
+        let ops = parse_store_ops(scrape);
+        assert_eq!(ops[crate::metrics::OpKind::PutObject.index()], 12);
+        assert_eq!(ops[crate::metrics::OpKind::GetObject.index()], 7);
+        assert_eq!(ops[crate::metrics::OpKind::HeadContainer.index()], 2);
+        assert_eq!(ops.iter().sum::<u64>(), 21);
+        let rows = parse_server_latency(scrape);
+        assert_eq!(rows.len(), 2);
+        let put = rows.iter().find(|r| r.op == "PUT Object").unwrap();
+        assert_eq!(put.p50_us, 41.5);
+        assert_eq!(put.p99_us, 90.0);
+        let get = rows.iter().find(|r| r.op == "GET Object").unwrap();
+        assert_eq!(get.max_us, 12.25);
+        assert_eq!(parse_counter(scrape, "tracez_pushed"), 21);
+        assert_eq!(parse_counter(scrape, "tracez_dropped"), 0);
+        assert_eq!(parse_counter(scrape, "no_such_counter"), 0);
+    }
+
+    #[test]
+    fn scrape_embeds_matching_server_side_truth() {
+        let cfg = StressConfig {
+            clients: 2,
+            shards: 2,
+            payload: 512,
+            ops_per_client: Some(16),
+            matrix: false,
+            bench_path: None,
+            scrape: true,
+            ..StressConfig::default()
+        };
+        let report = run_stress(&cfg).expect("stress run with scrape");
+        assert_eq!(report.run.violation_count, 0, "{:?}", report.run.violations);
+        let s = report.scrape.expect("scrape summary present");
+        // The headline invariant: on a chaos-free run, the ops the
+        // gateway executed are exactly the ops the clients completed.
+        assert_eq!(s.server_ops, s.client_ops, "server/client op drift");
+        assert_eq!(s.op_gap(), 0);
+        assert!(s.server_ops.iter().sum::<u64>() > 0, "no ops recorded at all");
+        assert!(s.tracez_entries > 0, "trace ring stayed empty");
+        assert!(s.tracez_pushed >= s.tracez_entries);
+        assert!(!s.server_latency.is_empty(), "no serve-latency gauges parsed");
     }
 
     #[test]

@@ -6,11 +6,11 @@
 //! across sessions).
 
 use super::workload::{OpClass, WorkerReport, OP_CLASSES};
-use crate::metrics::{Histogram, LatencySummary};
+use crate::metrics::{Histogram, LatencySummary, OpKind};
 use crate::util::json::Json;
 
 /// The BENCH file this PR's load plane writes by default.
-pub const BENCH_FILE: &str = "BENCH_9.json";
+pub const BENCH_FILE: &str = "BENCH_10.json";
 
 /// One aggregated hammer run: N clients against one gateway.
 #[derive(Debug)]
@@ -47,6 +47,10 @@ pub struct StressRun {
     /// Responses the gateway answered from its replay cache — proof a
     /// re-sent mutation was deduplicated rather than re-executed.
     pub replayed_responses: u64,
+    /// Client-side completed wire ops per [`crate::metrics::OpKind`]
+    /// index, summed across workers (the client half of the `--scrape`
+    /// equality gate).
+    pub wire_ops: [u64; 7],
 }
 
 /// Cap on violation sample messages carried in a run / the BENCH file.
@@ -74,10 +78,14 @@ pub fn aggregate(
     let mut shed_503 = 0u64;
     let mut retried_sends = 0u64;
     let mut replayed_responses = 0u64;
+    let mut wire_ops = [0u64; 7];
     for r in reports {
         for i in 0..OP_CLASSES {
             executed[i] += r.executed[i];
             hists[i].merge(&r.hists[i]);
+        }
+        for i in 0..7 {
+            wire_ops[i] += r.wire_ops[i];
         }
         violation_count += r.violation_count;
         for v in r.violations {
@@ -131,6 +139,7 @@ pub fn aggregate(
         shed_503,
         retried_sends,
         replayed_responses,
+        wire_ops,
     }
 }
 
@@ -211,6 +220,57 @@ impl CoreRow {
     }
 }
 
+/// Server-side serve-latency quantiles for one op kind, read back off
+/// the gateway's `gateway_serve_latency_us{op=...,q=...}` gauges.
+#[derive(Debug, Clone, Default)]
+pub struct ServerLatencyRow {
+    /// [`crate::metrics::OpKind`] display name (`"PUT Object"` …).
+    pub op: String,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub max_us: f64,
+}
+
+/// Server-side truth pulled off the gateway's own `/metricz` and
+/// `/tracez` while the main hammer still holds the gateway
+/// (`stress --scrape`). Lands in the BENCH JSON next to the
+/// client-side percentiles, so one artifact carries both ends of the
+/// wire — and the executed-op equality between them is checkable
+/// offline.
+#[derive(Debug, Clone, Default)]
+pub struct ScrapeSummary {
+    /// Gateway-executed ops per [`crate::metrics::OpKind`] index, from
+    /// the final `store_ops{op=...}` scrape.
+    pub server_ops: [u64; 7],
+    /// The workers' completed wire ops, same indexing. Chaos-free,
+    /// `server_ops == client_ops` exactly; [`ScrapeSummary::op_gap`]
+    /// is the CI gate.
+    pub client_ops: [u64; 7],
+    /// Server-side serve-latency quantiles per op kind seen.
+    pub server_latency: Vec<ServerLatencyRow>,
+    /// Trace entries held in the `/tracez` ring at scrape time.
+    pub tracez_entries: u64,
+    /// Total traces ever pushed (`tracez_pushed` counter).
+    pub tracez_pushed: u64,
+    /// Mid-hammer `/metricz` polls the scrape thread completed.
+    pub polls: u64,
+}
+
+impl ScrapeSummary {
+    /// Sum of per-kind absolute differences between what the gateway
+    /// executed and what the clients completed. Zero on a chaos-free
+    /// run — the `stress --scrape` acceptance gate.
+    pub fn op_gap(&self) -> u64 {
+        self.server_ops
+            .iter()
+            .zip(self.client_ops.iter())
+            .map(|(s, c)| s.abs_diff(*c))
+            .sum()
+    }
+}
+
 /// The whole deliverable: the main hammer run, the sweep matrix, and
 /// the core comparison.
 #[derive(Debug)]
@@ -225,6 +285,8 @@ pub struct StressReport {
     pub open_conns: u64,
     /// How many of them were actually established and held.
     pub open_conns_held: u64,
+    /// Server-side scrape (`--scrape`); `None` when not requested.
+    pub scrape: Option<ScrapeSummary>,
 }
 
 fn shards_json(shards: Option<usize>) -> Json {
@@ -244,11 +306,24 @@ fn summary_json(s: &LatencySummary) -> Json {
         .set("max_us", s.max_us)
 }
 
+/// `{kind-name: count}` object over the nonzero entries of a per-kind
+/// op array (`OpKind::ALL` indexing).
+fn ops_json(ops: &[u64; 7]) -> Json {
+    let mut o = Json::obj();
+    for k in OpKind::ALL {
+        if ops[k.index()] > 0 {
+            o = o.set(k.name(), ops[k.index()]);
+        }
+    }
+    o
+}
+
 impl StressReport {
-    /// Serialize for `BENCH_9.json`: per-op-class wall-clock percentiles,
-    /// the clients × shards × payload throughput matrix, the open-conns
-    /// hold, backpressure + wire-chaos recovery counters, and the core
-    /// comparison.
+    /// Serialize for `BENCH_10.json`: per-op-class wall-clock
+    /// percentiles, the clients × shards × payload throughput matrix,
+    /// the open-conns hold, backpressure + wire-chaos recovery
+    /// counters, the core comparison, and (with `--scrape`) the
+    /// server-side scrape summary.
     pub fn to_json(&self) -> Json {
         let run = &self.run;
         let mut classes = Json::obj();
@@ -286,9 +361,9 @@ impl StressReport {
                     .set("violations", m.violation_count)
             })
             .collect();
-        Json::obj()
+        let mut doc = Json::obj()
             .set("bench", "stress-loadplane")
-            .set("issue", 9u64)
+            .set("issue", 10u64)
             .set("target", self.target.as_str())
             .set("seed", run.seed)
             .set("clients", run.clients)
@@ -323,7 +398,36 @@ impl StressReport {
             )
             .set("op_classes", classes)
             .set("matrix", Json::Arr(matrix))
-            .set("cores", Json::Arr(cores))
+            .set("cores", Json::Arr(cores));
+        if let Some(s) = &self.scrape {
+            let latency: Vec<Json> = s
+                .server_latency
+                .iter()
+                .map(|r| {
+                    Json::obj()
+                        .set("op", r.op.as_str())
+                        .set("p50_us", r.p50_us)
+                        .set("p95_us", r.p95_us)
+                        .set("p99_us", r.p99_us)
+                        .set("mean_us", r.mean_us)
+                        .set("max_us", r.max_us)
+                })
+                .collect();
+            doc = doc.set(
+                "scrape",
+                Json::obj()
+                    .set("server_ops", ops_json(&s.server_ops))
+                    .set("client_ops", ops_json(&s.client_ops))
+                    .set("op_gap", s.op_gap())
+                    .set("server_latency_us", Json::Arr(latency))
+                    .set(
+                        "tracez",
+                        Json::obj().set("entries", s.tracez_entries).set("pushed", s.tracez_pushed),
+                    )
+                    .set("polls", s.polls),
+            );
+        }
+        doc
     }
 }
 
@@ -344,6 +448,7 @@ mod tests {
             shed_503: 1,
             retried_sends: 2,
             replayed_responses: 1,
+            wire_ops: [0, 0, 10, 0, 0, 0, 1],
         };
         r.executed[OpClass::Put.index()] = 10;
         r.hists[OpClass::Put.index()].record_nanos(5_000);
@@ -372,6 +477,7 @@ mod tests {
         assert_eq!(run.shed_503, 2);
         assert_eq!(run.retried_sends, 4, "chaos recovery counters sum across workers");
         assert_eq!(run.replayed_responses, 2);
+        assert_eq!(run.wire_ops, [0, 0, 20, 0, 0, 0, 2], "wire ops sum per kind");
         // A colliding id across workers is a violation.
         let bad = aggregate(
             vec![fake_report(vec![5]), fake_report(vec![5])],
@@ -388,12 +494,29 @@ mod tests {
     #[test]
     fn bench_json_carries_percentiles_and_matrix() {
         let run = aggregate(vec![fake_report(vec![1])], 1, Some(2), 512, 9, 1.0);
+        let scrape = ScrapeSummary {
+            server_ops: run.wire_ops,
+            client_ops: run.wire_ops,
+            server_latency: vec![ServerLatencyRow {
+                op: "PUT Object".into(),
+                p50_us: 10.0,
+                p95_us: 20.0,
+                p99_us: 30.0,
+                mean_us: 12.0,
+                max_us: 40.0,
+            }],
+            tracez_entries: 11,
+            tracez_pushed: 11,
+            polls: 3,
+        };
+        assert_eq!(scrape.op_gap(), 0);
         let report = StressReport {
             target: "in-process".into(),
             matrix: vec![MatrixCell::of(&run)],
             cores: vec![CoreRow::of("reactor", &run), CoreRow::of("threaded", &run)],
             open_conns: 2000,
             open_conns_held: 2000,
+            scrape: Some(scrape),
             run,
         };
         let j = report.to_json();
@@ -404,13 +527,25 @@ mod tests {
             "\"multipart_ids\"", "\"throttled_429\"", "\"shed_503\"",
             "\"retried_sends\"", "\"replayed_responses\"",
             "\"open_conns\"", "\"cores\"", "\"reactor\"", "\"threaded\"",
+            "\"scrape\"", "\"server_ops\"", "\"client_ops\"", "\"op_gap\"",
+            "\"server_latency_us\"", "\"tracez\"", "\"PUT Object\"",
         ] {
             assert!(text.contains(field), "missing {field} in {text}");
         }
         assert_eq!(j.get("violations").and_then(Json::as_f64), Some(0.0));
         assert_eq!(j.get("seed").and_then(Json::as_f64), Some(9.0));
-        assert_eq!(j.get("issue").and_then(Json::as_f64), Some(9.0));
+        assert_eq!(j.get("issue").and_then(Json::as_f64), Some(10.0));
         assert_eq!(j.get("throttled_429").and_then(Json::as_f64), Some(3.0));
         assert_eq!(j.get("replayed_responses").and_then(Json::as_f64), Some(1.0));
+        let s = j.get("scrape").expect("scrape object");
+        assert_eq!(s.get("op_gap").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(s.get("polls").and_then(Json::as_f64), Some(3.0));
+        // An asymmetric gap sums absolute per-kind differences.
+        let gap = ScrapeSummary {
+            server_ops: [1, 0, 5, 0, 0, 0, 0],
+            client_ops: [0, 0, 7, 0, 0, 0, 0],
+            ..ScrapeSummary::default()
+        };
+        assert_eq!(gap.op_gap(), 3);
     }
 }

@@ -129,6 +129,11 @@ pub struct WorkerReport {
     /// Re-sent mutations the gateway answered from its replay cache
     /// instead of re-executing (`x-request-replayed: true`).
     pub replayed_responses: u64,
+    /// Completed wire operations per [`crate::metrics::OpKind`] index,
+    /// counted by the worker's `HttpBackend` with the gateway's own
+    /// classification table — the client half of the `--scrape`
+    /// equality gate against the server's executed-op counters.
+    pub wire_ops: [u64; 7],
 }
 
 impl WorkerReport {
@@ -145,6 +150,7 @@ impl WorkerReport {
             shed_503: 0,
             retried_sends: 0,
             replayed_responses: 0,
+            wire_ops: [0; 7],
         }
     }
 }
@@ -232,6 +238,7 @@ pub fn run_worker(cfg: WorkerConfig) -> WorkerReport {
     w.report.shed_503 = w.backend.shed_503s();
     w.report.retried_sends = w.backend.retried_sends();
     w.report.replayed_responses = w.backend.replayed_responses();
+    w.report.wire_ops = w.backend.wire_op_counts();
     w.report
 }
 

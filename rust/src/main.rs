@@ -12,10 +12,11 @@
 //!   token-bucket rate limit, and bearer auth.
 //! * `stress [--clients N] [--seed S] ...` — measured-wall-clock load
 //!   plane: N threads hammer a gateway, verify as they go, and write
-//!   `BENCH_9.json`. `--chaos` arms the wire chaos plane (killed /
+//!   `BENCH_10.json`. `--chaos` arms the wire chaos plane (killed /
 //!   truncated / stalled / reset connections) on the in-process gateway;
 //!   the idempotent `x-request-id` replay protocol must keep
-//!   `violations: 0`.
+//!   `violations: 0`. `--scrape` polls `/metricz` during the hammer and
+//!   embeds the server-side latency/op truth next to the client's.
 
 use stocator::harness::tables::{render_table2, Sweep};
 use stocator::harness::traces::{table1_trace, table3_trace};
@@ -73,7 +74,7 @@ USAGE:
                       [--seed S] [--no-matrix] [--bench-out PATH]
                       [--open-conns N] [--token TOKEN]
                       [--core reactor|threaded]
-                      [--chaos SPEC] [--chaos-seed S]
+                      [--chaos SPEC] [--chaos-seed S] [--scrape]
 
   stress: real-concurrency load plane — N worker threads (default 8),
           each with its own HttpBackend connection pool, hammer a served
@@ -92,8 +93,18 @@ USAGE:
           clients × shards × payload throughput matrix plus a reactor-
           vs-threaded core comparison, and the count of real 429/503
           rejections the workers absorbed and recovered from; writes
-          everything to --bench-out (default BENCH_9.json). Exits
+          everything to --bench-out (default BENCH_10.json). Exits
           non-zero on any correctness violation.
+          --scrape starts a background poller that scrapes the
+          gateway's /metricz during the hammer (proving the probes stay
+          serveable under load) and takes a final scrape after the
+          workers join: the run then prints server-client-op-gap (the
+          summed per-op-kind |server - client| difference, 0 on a
+          chaos-free run because both sides count completed wire ops
+          with the same table) and tracez-entries (requests captured in
+          the /tracez ring), and embeds the server-side latency
+          quantiles next to the client-side ones in the bench JSON.
+          Works against --target or the in-process gateway.
           --chaos SPEC arms wire chaos on the in-process gateway for
           the main hammer (comma-separated NAME@p=PROB with NAME one of
           kill-response|truncate|stall|reset; e.g.
@@ -312,6 +323,7 @@ fn stress_config(args: &Args) -> Result<stocator::loadgen::StressConfig, String>
         core,
         chaos,
         fs_root,
+        scrape: args.flag("scrape"),
     })
 }
 
@@ -342,7 +354,7 @@ fn serve_gateway_config(args: &Args) -> Result<stocator::gateway::GatewayConfig,
 fn main() {
     let args = match Args::parse(
         std::env::args().skip(1),
-        &["small", "paper", "no-cleanup", "no-matrix"],
+        &["small", "paper", "no-cleanup", "no-matrix", "scrape"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -420,6 +432,7 @@ fn main() {
         Some("stress") => {
             use stocator::harness::tables::{
                 render_stress_cores, render_stress_latency, render_stress_matrix,
+                render_stress_scrape,
             };
             let cfg = match stress_config(&args) {
                 Ok(c) => c,
@@ -466,6 +479,16 @@ fn main() {
                     // being nonzero under --chaos.
                     println!("retried-sends: {}", report.run.retried_sends);
                     println!("replayed-responses: {}", report.run.replayed_responses);
+                    // Server-side truth from the --scrape poller: CI
+                    // gates on the op gap being exactly 0 (chaos-free,
+                    // both ends count completed wire ops with the same
+                    // table) and on the trace ring being non-empty.
+                    if let Some(s) = &report.scrape {
+                        print!("{}", render_stress_scrape(s));
+                        println!("metricz-polls: {}", s.polls);
+                        println!("server-client-op-gap: {}", s.op_gap());
+                        println!("tracez-entries: {}", s.tracez_entries);
+                    }
                     if let Some(p) = &cfg.bench_path {
                         println!("bench: wrote {}", p.display());
                     }
@@ -588,7 +611,7 @@ mod tests {
     fn args(tokens: &[&str]) -> Args {
         Args::parse(
             tokens.iter().map(|s| s.to_string()),
-            &["small", "paper", "no-cleanup", "no-matrix"],
+            &["small", "paper", "no-cleanup", "no-matrix", "scrape"],
         )
         .unwrap()
     }
@@ -707,12 +730,13 @@ mod tests {
         assert_eq!(c.duration, Some(Duration::from_secs(2)));
         assert_eq!(c.ops_per_client, None);
         assert!(c.matrix);
-        assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("BENCH_9.json"));
+        assert_eq!(c.bench_path.as_deref().unwrap().to_str(), Some("BENCH_10.json"));
         assert_eq!(c.open_conns, 0);
         assert_eq!(c.token, None);
         assert_eq!(c.core, stocator::gateway::GatewayMode::Reactor);
         assert!(!c.chaos.is_active(), "chaos is off unless --chaos is given");
         assert_eq!(c.fs_root, None);
+        assert!(!c.scrape, "scrape is opt-in");
         let c = stress_config(&args(&[
             "stress",
             "--clients", "32",
@@ -726,6 +750,7 @@ mod tests {
             "--open-conns", "2000",
             "--token", "hunter2",
             "--core", "threaded",
+            "--scrape",
         ]))
         .unwrap();
         assert_eq!(c.clients, 32);
@@ -739,6 +764,7 @@ mod tests {
         assert_eq!(c.open_conns, 2000);
         assert_eq!(c.token.as_deref(), Some("hunter2"));
         assert_eq!(c.core, stocator::gateway::GatewayMode::Threaded);
+        assert!(c.scrape);
         // --ops switches to the deterministic fixed-budget mode.
         let c = stress_config(&args(&["stress", "--ops", "40"])).unwrap();
         assert_eq!(c.ops_per_client, Some(40));

@@ -20,7 +20,10 @@ pub const BUCKETS: usize = 128;
 /// Smallest non-underflow bucket boundary, in nanoseconds.
 const BASE_NANOS: f64 = 1000.0;
 
-fn bucket_index(nanos: u64) -> usize {
+/// Bucket index for a sample of `nanos`. Public so the atomic registry
+/// variant ([`super::registry`]) and the `/metricz` exposition share the
+/// exact same geometric bucket layout as the worker-private histograms.
+pub fn bucket_index(nanos: u64) -> usize {
     if nanos < BASE_NANOS as u64 {
         return 0;
     }
@@ -29,8 +32,10 @@ fn bucket_index(nanos: u64) -> usize {
 }
 
 /// Upper bound (nanoseconds) of bucket `idx`: every sample recorded into
-/// the bucket is ≤ this (except the final overflow bucket).
-fn bucket_upper_nanos(idx: usize) -> u64 {
+/// the bucket is ≤ this (except the final overflow bucket). Public for
+/// the same reason as [`bucket_index`]: cumulative `_bucket{le=...}`
+/// exposition series print these bounds.
+pub fn bucket_upper_nanos(idx: usize) -> u64 {
     (BASE_NANOS * 2f64.powf(idx as f64 / 4.0)) as u64
 }
 
@@ -88,6 +93,40 @@ impl Histogram {
 
     pub fn max_nanos(&self) -> u64 {
         self.max_nanos
+    }
+
+    pub fn sum_nanos(&self) -> u64 {
+        self.sum_nanos
+    }
+
+    /// Per-bucket sample counts, in bucket-index order (see
+    /// [`bucket_upper_nanos`] for each bucket's upper bound).
+    pub fn bucket_counts(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+
+    /// Rebuild a histogram from raw per-bucket counts (the scrape-side
+    /// inverse of [`Histogram::bucket_counts`]). `min`/`max` are only
+    /// known to bucket resolution, so quantiles clamp to bucket bounds.
+    pub fn from_bucket_counts(counts: [u64; BUCKETS], sum_nanos: u64) -> Self {
+        let count = counts.iter().sum();
+        let min_nanos = counts
+            .iter()
+            .position(|&n| n > 0)
+            .map(|i| if i == 0 { 0 } else { bucket_upper_nanos(i - 1) })
+            .unwrap_or(u64::MAX);
+        let max_nanos = counts
+            .iter()
+            .rposition(|&n| n > 0)
+            .map(bucket_upper_nanos)
+            .unwrap_or(0);
+        Self {
+            counts,
+            count,
+            sum_nanos,
+            min_nanos,
+            max_nanos,
+        }
     }
 
     /// Fold another histogram into this one (the post-join merge).
@@ -228,5 +267,93 @@ mod tests {
         h.record(std::time::Duration::from_micros(42));
         assert_eq!(h.count(), 1);
         assert_eq!(h.max_nanos(), 42_000);
+    }
+
+    #[test]
+    fn empty_histogram_answers_every_quantile_with_zero() {
+        let h = Histogram::new();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile_nanos(q), 0, "q={q}");
+        }
+        assert_eq!(h.max_nanos(), 0);
+        assert_eq!(h.sum_nanos(), 0);
+        assert!(h.bucket_counts().iter().all(|&n| n == 0));
+    }
+
+    #[test]
+    fn single_observation_collapses_all_quantiles_to_it() {
+        let mut h = Histogram::new();
+        h.record_nanos(123_456);
+        // One sample: every quantile is clamped into [min, max] = the
+        // sample itself — p50 == p99 == max exactly.
+        for q in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile_nanos(q), 123_456, "q={q}");
+        }
+        assert_eq!(h.quantile_nanos(0.5), h.max_nanos());
+        let s = h.summary();
+        assert_eq!(s.p50_us, s.p99_us);
+        assert_eq!(s.p99_us, s.max_us);
+    }
+
+    #[test]
+    fn merge_of_disjoint_bucket_ranges_keeps_both_tails() {
+        // a: all sub-microsecond (bucket 0); b: all in the seconds range.
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for _ in 0..100 {
+            a.record_nanos(500);
+            b.record_nanos(2_000_000_000);
+        }
+        assert_ne!(bucket_index(500), bucket_index(2_000_000_000));
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        // Low half from the low range, high tail from the high range.
+        assert!(a.quantile_nanos(0.25) <= 1000, "{}", a.quantile_nanos(0.25));
+        assert_eq!(a.quantile_nanos(0.99), a.max_nanos());
+        assert_eq!(a.max_nanos(), 2_000_000_000);
+        // Exactly two buckets populated, 100 each.
+        let populated: Vec<_> = a
+            .bucket_counts()
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .collect();
+        assert_eq!(populated.len(), 2, "{populated:?}");
+        assert!(populated.iter().all(|(_, &n)| n == 100));
+    }
+
+    #[test]
+    fn sums_saturate_instead_of_wrapping() {
+        let mut h = Histogram::new();
+        h.record_nanos(u64::MAX);
+        h.record_nanos(u64::MAX);
+        assert_eq!(h.sum_nanos(), u64::MAX, "sum saturates");
+        assert_eq!(h.count(), 2, "count stays exact");
+        assert_eq!(h.max_nanos(), u64::MAX);
+        // Merging two saturated histograms saturates too.
+        let other = h.clone();
+        h.merge(&other);
+        assert_eq!(h.sum_nanos(), u64::MAX);
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn from_bucket_counts_round_trips_quantiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100u64 {
+            h.record_nanos(i * 10_000);
+        }
+        let rebuilt = Histogram::from_bucket_counts(*h.bucket_counts(), h.sum_nanos());
+        assert_eq!(rebuilt.count(), h.count());
+        assert_eq!(rebuilt.sum_nanos(), h.sum_nanos());
+        // Quantiles agree to bucket resolution (≤19% relative error, and
+        // the rebuilt max is the bucket upper bound of the true max).
+        for q in [0.5, 0.95, 0.99] {
+            let (a, b) = (h.quantile_nanos(q) as f64, rebuilt.quantile_nanos(q) as f64);
+            assert!(b >= a * 0.8 && b <= a * 1.2, "q={q}: {a} vs {b}");
+        }
+        let empty = Histogram::from_bucket_counts([0; BUCKETS], 0);
+        assert!(empty.is_empty());
+        assert_eq!(empty.quantile_nanos(0.99), 0);
     }
 }

@@ -9,10 +9,17 @@
 //! wall-clock latency histograms ([`Histogram`]/[`LatencySummary`]) used
 //! by the `stress` load plane, shaped so every worker thread records
 //! privately and the results merge after join.
+//!
+//! [`registry`] is the gateway-side observability plane built on the
+//! same bucket layout: wait-free atomic histograms (merged at scrape
+//! time, not on the request path), reactor sweep stats, and the bounded
+//! `/tracez` ring.
 
 pub mod histogram;
+pub mod registry;
 
 pub use histogram::{Histogram, LatencySummary};
+pub use registry::{AtomicHistogram, ObsPlane, PhaseNanos, SweepStats, TraceEntry, TraceRing};
 
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -53,7 +60,9 @@ impl OpKind {
         }
     }
 
-    fn index(self) -> usize {
+    /// Stable array index (`ALL` order) — shared by [`LiveCounters`],
+    /// the observability registry, and the client's wire-op counters.
+    pub fn index(self) -> usize {
         match self {
             OpKind::HeadObject => 0,
             OpKind::GetObject => 1,

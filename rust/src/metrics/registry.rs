@@ -1,0 +1,564 @@
+//! The gateway observability registry: lock-free request/sweep metrics
+//! and the bounded `/tracez` ring.
+//!
+//! # The two rules every recorder here obeys
+//!
+//! **Private-then-merge.** The load plane's [`super::Histogram`] is plain
+//! data — each worker thread owns one and the harness merges after join.
+//! The gateway cannot do that (scrapes happen *while* traffic flows), so
+//! [`AtomicHistogram`] is the same fixed-128-bucket geometric layout
+//! (identical [`bucket_index`]/[`bucket_upper_nanos`] math) with relaxed
+//! per-bucket atomics: every recording thread writes its own samples
+//! independently and a scrape merges them into a plain [`Histogram`]
+//! snapshot on demand. The merge happens at scrape time, never on the
+//! request path.
+//!
+//! **Zero hot-path synchronisation.** Nothing in this module takes a
+//! lock, spins, or blocks on the serve path: histogram recording is a
+//! handful of `Relaxed` `fetch_add`s, sweep stats are recorded once per
+//! reactor pass (not per connection), and the trace ring writes through
+//! `try_lock` — a contended slot drops the trace rather than stalling
+//! the request. Only scrape-side readers (`/metricz`, `/tracez`) may
+//! lock, and they are off the hot path by construction. The store
+//! front end's debug `front_end_locks` counter staying zero on the idle
+//! path, and the goldens A/B (observability on vs off, both cores), pin
+//! that this plane observes without perturbing.
+
+use super::histogram::{bucket_index, bucket_upper_nanos, Histogram, BUCKETS};
+use super::OpKind;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+/// Scale factor that lets value histograms (conns per pass, bytes per
+/// pass) reuse the nanosecond bucket math: a raw unit is recorded as
+/// 1000 "nanos", so bucket 0 = {0}, bucket 1 ≈ ≤1.19 units, and the
+/// geometric ladder covers ~3.6e15 units in [`BUCKETS`] buckets.
+pub const UNIT_SCALE: u64 = 1000;
+
+/// A fixed-bucket histogram recorded through relaxed atomics — the
+/// concurrent twin of [`Histogram`], sharing its exact bucket layout.
+/// Recording is wait-free; [`AtomicHistogram::snapshot`] merges the
+/// buckets into a plain histogram for quantiles and exposition.
+pub struct AtomicHistogram {
+    counts: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one nanosecond sample. Wait-free: three relaxed atomic
+    /// RMWs, no CAS loop, no lock.
+    #[inline]
+    pub fn record_nanos(&self, nanos: u64) {
+        self.counts[bucket_index(nanos)].fetch_add(1, Relaxed);
+        self.sum.fetch_add(nanos, Relaxed);
+        self.max.fetch_max(nanos, Relaxed);
+    }
+
+    /// Record an elapsed duration.
+    #[inline]
+    pub fn record(&self, elapsed: std::time::Duration) {
+        self.record_nanos(elapsed.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record a raw unit count (connections, bytes, accepts) through the
+    /// same geometric buckets via [`UNIT_SCALE`].
+    #[inline]
+    pub fn record_units(&self, units: u64) {
+        self.record_nanos(units.saturating_mul(UNIT_SCALE));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Relaxed)).sum()
+    }
+
+    pub fn sum_nanos(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    pub fn max_nanos(&self) -> u64 {
+        self.max.load(Relaxed)
+    }
+
+    /// Merge the live buckets into a plain [`Histogram`] (the scrape-side
+    /// half of private-then-merge). Relaxed loads: a snapshot taken under
+    /// concurrent traffic is a consistent-enough view, never torn within
+    /// a bucket.
+    pub fn snapshot(&self) -> Histogram {
+        let counts = std::array::from_fn(|i| self.counts[i].load(Relaxed));
+        Histogram::from_bucket_counts(counts, self.sum.load(Relaxed))
+    }
+}
+
+/// Request phase timings, in nanoseconds, measured by the serving core
+/// and the shared router. `queue` is the reactor sweep's dispatch delay
+/// (how long the ready request waited behind earlier connections in the
+/// same pass; always 0 on the threaded core, which has no sweep).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseNanos {
+    pub queue: u64,
+    pub parse: u64,
+    pub screen: u64,
+    pub route: u64,
+    pub serialize: u64,
+}
+
+impl PhaseNanos {
+    pub fn total(&self) -> u64 {
+        self.queue
+            .saturating_add(self.parse)
+            .saturating_add(self.screen)
+            .saturating_add(self.route)
+            .saturating_add(self.serialize)
+    }
+}
+
+/// Phase labels, in [`PhaseNanos`] field order, as exposed on
+/// `/metricz` and `/tracez`.
+pub const PHASES: [&str; 5] = ["queue", "parse", "screen", "route", "serialize"];
+
+const N_KINDS: usize = OpKind::ALL.len();
+
+/// Per-op-class wall-clock serve metrics for one gateway: end-to-end
+/// serve latency, request/response byte sizes, and the per-phase split.
+/// All recording is wait-free ([`AtomicHistogram`]).
+pub struct RequestMetrics {
+    serve: [AtomicHistogram; N_KINDS],
+    request_bytes: [AtomicHistogram; N_KINDS],
+    response_bytes: [AtomicHistogram; N_KINDS],
+    phases: [AtomicHistogram; PHASES.len()],
+}
+
+impl Default for RequestMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestMetrics {
+    pub fn new() -> Self {
+        Self {
+            serve: std::array::from_fn(|_| AtomicHistogram::new()),
+            request_bytes: std::array::from_fn(|_| AtomicHistogram::new()),
+            response_bytes: std::array::from_fn(|_| AtomicHistogram::new()),
+            phases: std::array::from_fn(|_| AtomicHistogram::new()),
+        }
+    }
+
+    /// Record one executed request: serve latency and byte sizes under
+    /// its op class, phase splits under the shared phase histograms.
+    #[inline]
+    pub fn record(&self, kind: OpKind, req_bytes: u64, resp_bytes: u64, phases: &PhaseNanos) {
+        let i = kind.index();
+        self.serve[i].record_nanos(phases.total());
+        self.request_bytes[i].record_units(req_bytes);
+        self.response_bytes[i].record_units(resp_bytes);
+        let split = [
+            phases.queue,
+            phases.parse,
+            phases.screen,
+            phases.route,
+            phases.serialize,
+        ];
+        for (hist, nanos) in self.phases.iter().zip(split) {
+            hist.record_nanos(nanos);
+        }
+    }
+
+    pub fn serve_for(&self, kind: OpKind) -> &AtomicHistogram {
+        &self.serve[kind.index()]
+    }
+
+    pub fn request_bytes_for(&self, kind: OpKind) -> &AtomicHistogram {
+        &self.request_bytes[kind.index()]
+    }
+
+    pub fn response_bytes_for(&self, kind: OpKind) -> &AtomicHistogram {
+        &self.response_bytes[kind.index()]
+    }
+
+    /// Phase histogram by [`PHASES`] index.
+    pub fn phase(&self, idx: usize) -> &AtomicHistogram {
+        &self.phases[idx]
+    }
+}
+
+/// Reactor sweep-loop instrumentation, recorded ONCE per pass — the cost
+/// is constant per sweep regardless of how many connections it polls.
+/// `idle_sleeps / passes` is the idle-sleep ratio (how often a pass made
+/// no progress and slept `POLL_IDLE`).
+pub struct SweepStats {
+    pub passes: AtomicU64,
+    pub idle_sleeps: AtomicU64,
+    pub accepted: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    /// Connections polled per pass (unit-scaled buckets).
+    pub conns_polled: AtomicHistogram,
+    /// Bytes moved (read + written) per pass (unit-scaled buckets).
+    pub bytes_moved: AtomicHistogram,
+    /// Accept-burst depth: connections accepted in one pass's burst
+    /// (unit-scaled buckets; capped by the reactor's `ACCEPT_BURST`).
+    pub accept_burst: AtomicHistogram,
+}
+
+impl Default for SweepStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepStats {
+    pub fn new() -> Self {
+        Self {
+            passes: AtomicU64::new(0),
+            idle_sleeps: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            conns_polled: AtomicHistogram::new(),
+            bytes_moved: AtomicHistogram::new(),
+            accept_burst: AtomicHistogram::new(),
+        }
+    }
+
+    /// Record one completed sweep pass. Called once per pass from the
+    /// reactor loop; never from per-connection code.
+    #[inline]
+    pub fn record_pass(&self, conns: u64, accepted: u64, bytes_in: u64, bytes_out: u64, slept: bool) {
+        self.passes.fetch_add(1, Relaxed);
+        if slept {
+            self.idle_sleeps.fetch_add(1, Relaxed);
+        }
+        self.accepted.fetch_add(accepted, Relaxed);
+        self.bytes_in.fetch_add(bytes_in, Relaxed);
+        self.bytes_out.fetch_add(bytes_out, Relaxed);
+        self.conns_polled.record_units(conns);
+        self.bytes_moved.record_units(bytes_in.saturating_add(bytes_out));
+        self.accept_burst.record_units(accepted);
+    }
+}
+
+/// How many requests the `/tracez` ring remembers.
+pub const TRACE_RING_SLOTS: usize = 256;
+
+/// One traced request: the identity (`x-request-id` when the client
+/// stamped one), what it was, how it was disposed of, and where its
+/// nanoseconds went per phase.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Monotone per-gateway sequence number (scrape ordering key).
+    pub seq: u64,
+    /// The request's `x-request-id`, or `"-"` for unstamped requests.
+    pub id: String,
+    pub method: String,
+    pub path: String,
+    pub status: u16,
+    /// Op-class name (`OpKind::name`) for classified requests.
+    pub op: Option<&'static str>,
+    pub phases: PhaseNanos,
+    pub total_ns: u64,
+    /// `ok`, `replayed`, `rejected-auth`, `rejected-429`, or a
+    /// chaos-patched `chaos-*` kind.
+    pub disposition: &'static str,
+}
+
+/// A bounded ring of the last [`TRACE_RING_SLOTS`] requests. Writers are
+/// non-blocking: the cursor is one relaxed `fetch_add` and the slot
+/// write is a `try_lock` — if a scraper (or a lapped writer) holds the
+/// slot, the trace is dropped, never awaited. Readers (`/tracez`) lock
+/// slot-by-slot off the hot path.
+pub struct TraceRing {
+    cursor: AtomicU64,
+    dropped: AtomicU64,
+    slots: Vec<Mutex<Option<TraceEntry>>>,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceRing {
+    pub fn new() -> Self {
+        Self::with_slots(TRACE_RING_SLOTS)
+    }
+
+    pub fn with_slots(n: usize) -> Self {
+        Self {
+            cursor: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            slots: (0..n.max(1)).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Record one trace; returns its (slot, seq) so the connection layer
+    /// can patch a chaos disposition in after the wire decision, or
+    /// `None` if the slot was contended (trace dropped, caller moves on).
+    pub fn push(&self, mut entry: TraceEntry) -> Option<(usize, u64)> {
+        let seq = self.cursor.fetch_add(1, Relaxed);
+        let idx = (seq % self.slots.len() as u64) as usize;
+        match self.slots[idx].try_lock() {
+            Ok(mut slot) => {
+                entry.seq = seq;
+                *slot = Some(entry);
+                Some((idx, seq))
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Patch the disposition of a just-pushed entry (chaos annotations
+    /// from the connection layer). Non-blocking; a lapped or contended
+    /// slot is left alone — the seq check keeps a lapped slot's newer
+    /// entry from being mislabelled.
+    pub fn patch_disposition(&self, token: (usize, u64), disposition: &'static str) {
+        let (idx, seq) = token;
+        if let Ok(mut slot) = self.slots[idx].try_lock() {
+            if let Some(entry) = slot.as_mut() {
+                if entry.seq == seq {
+                    entry.disposition = disposition;
+                }
+            }
+        }
+    }
+
+    /// Total traces ever pushed (not the ring occupancy).
+    pub fn pushed(&self) -> u64 {
+        self.cursor.load(Relaxed)
+    }
+
+    /// Traces dropped on slot contention.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Relaxed)
+    }
+
+    /// Scrape the ring: the retained entries, oldest first. Locks each
+    /// slot briefly — scrape path only, never the request path.
+    pub fn snapshot(&self) -> Vec<TraceEntry> {
+        let mut entries: Vec<TraceEntry> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().ok().and_then(|g| g.clone()))
+            .collect();
+        entries.sort_by_key(|e| e.seq);
+        entries
+    }
+}
+
+/// The whole observability plane for one gateway: request metrics, sweep
+/// stats, and the trace ring, behind one on/off knob
+/// (`GatewayConfig::observability`). When disabled, every recording call
+/// is a single branch — the A/B goldens pin that on vs off changes no
+/// op count, virtual runtime, or fault trace.
+pub struct ObsPlane {
+    enabled: bool,
+    pub requests: RequestMetrics,
+    pub sweep: SweepStats,
+    pub trace: TraceRing,
+}
+
+impl ObsPlane {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            enabled,
+            requests: RequestMetrics::new(),
+            sweep: SweepStats::new(),
+            trace: TraceRing::new(),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_histogram_matches_plain_histogram() {
+        let atomic = AtomicHistogram::new();
+        let mut plain = Histogram::new();
+        for i in 0..1000u64 {
+            let v = (i * 7919) % 3_000_000;
+            atomic.record_nanos(v);
+            plain.record_nanos(v);
+        }
+        assert_eq!(atomic.count(), plain.count());
+        assert_eq!(atomic.sum_nanos(), plain.sum_nanos());
+        assert_eq!(atomic.max_nanos(), plain.max_nanos());
+        let snap = atomic.snapshot();
+        assert_eq!(snap.bucket_counts(), plain.bucket_counts());
+        for q in [0.5, 0.95, 0.99] {
+            // Same buckets; snapshot min/max are bucket-resolution.
+            let (a, b) = (snap.quantile_nanos(q) as f64, plain.quantile_nanos(q) as f64);
+            assert!(b >= a * 0.8 && b <= a * 1.2, "q={q}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn atomic_histogram_is_safe_under_concurrent_recording() {
+        let hist = std::sync::Arc::new(AtomicHistogram::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let hist = hist.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        hist.record_nanos(t * 1_000_000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // Exact totals: no lost updates.
+        assert_eq!(hist.count(), 80_000);
+        assert_eq!(hist.snapshot().count(), 80_000);
+    }
+
+    #[test]
+    fn unit_scale_buckets_resolve_small_counts() {
+        let h = AtomicHistogram::new();
+        h.record_units(0);
+        h.record_units(3);
+        h.record_units(200);
+        // Three distinct buckets: 0, 3 and 200 must not collapse (the
+        // raw nanos scale would put all of them in bucket 0).
+        let snap = h.snapshot();
+        let populated = snap.bucket_counts().iter().filter(|&&n| n > 0).count();
+        assert_eq!(populated, 3, "{:?}", snap.bucket_counts());
+        assert_eq!(snap.count(), 3);
+        assert_eq!(h.max_nanos() / UNIT_SCALE, 200);
+    }
+
+    #[test]
+    fn request_metrics_attribute_by_op_class_and_phase() {
+        let m = RequestMetrics::new();
+        let phases = PhaseNanos {
+            queue: 10,
+            parse: 20,
+            screen: 30,
+            route: 1000,
+            serialize: 40,
+        };
+        m.record(OpKind::PutObject, 512, 16, &phases);
+        m.record(OpKind::GetObject, 0, 512, &phases);
+        assert_eq!(m.serve_for(OpKind::PutObject).count(), 1);
+        assert_eq!(m.serve_for(OpKind::GetObject).count(), 1);
+        assert_eq!(m.serve_for(OpKind::DeleteObject).count(), 0);
+        assert_eq!(m.serve_for(OpKind::PutObject).sum_nanos(), phases.total());
+        assert_eq!(m.request_bytes_for(OpKind::PutObject).max_nanos() / UNIT_SCALE, 512);
+        assert_eq!(m.response_bytes_for(OpKind::GetObject).max_nanos() / UNIT_SCALE, 512);
+        // Each phase histogram saw both requests.
+        for i in 0..PHASES.len() {
+            assert_eq!(m.phase(i).count(), 2, "phase {}", PHASES[i]);
+        }
+        assert_eq!(m.phase(3).max_nanos(), 1000, "route phase");
+    }
+
+    #[test]
+    fn sweep_stats_record_per_pass() {
+        let s = SweepStats::new();
+        s.record_pass(100, 5, 4096, 8192, false);
+        s.record_pass(0, 0, 0, 0, true);
+        assert_eq!(s.passes.load(Relaxed), 2);
+        assert_eq!(s.idle_sleeps.load(Relaxed), 1);
+        assert_eq!(s.accepted.load(Relaxed), 5);
+        assert_eq!(s.bytes_in.load(Relaxed), 4096);
+        assert_eq!(s.bytes_out.load(Relaxed), 8192);
+        assert_eq!(s.conns_polled.count(), 2);
+        assert_eq!(s.bytes_moved.max_nanos() / UNIT_SCALE, 12_288);
+    }
+
+    fn entry(id: &str) -> TraceEntry {
+        TraceEntry {
+            seq: 0,
+            id: id.to_string(),
+            method: "GET".into(),
+            path: "/v1/c/k".into(),
+            status: 200,
+            op: Some("GET Object"),
+            phases: PhaseNanos::default(),
+            total_ns: 1000,
+            disposition: "ok",
+        }
+    }
+
+    #[test]
+    fn trace_ring_keeps_the_last_n_in_order() {
+        let ring = TraceRing::with_slots(4);
+        for i in 0..10 {
+            ring.push(entry(&format!("req-{i}")));
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 4);
+        let ids: Vec<&str> = snap.iter().map(|e| e.id.as_str()).collect();
+        assert_eq!(ids, ["req-6", "req-7", "req-8", "req-9"]);
+        assert!(snap.windows(2).all(|w| w[0].seq < w[1].seq), "oldest first");
+        assert_eq!(ring.pushed(), 10);
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn trace_ring_patch_respects_the_seq_guard() {
+        let ring = TraceRing::with_slots(2);
+        let token = ring.push(entry("a")).unwrap();
+        ring.patch_disposition(token, "chaos-kill-response");
+        assert_eq!(ring.snapshot()[0].disposition, "chaos-kill-response");
+        // Lap the slot: the stale token must no longer patch.
+        ring.push(entry("b"));
+        ring.push(entry("c")); // same slot as "a"
+        ring.patch_disposition(token, "chaos-stall");
+        let snap = ring.snapshot();
+        let c = snap.iter().find(|e| e.id == "c").unwrap();
+        assert_eq!(c.disposition, "ok", "stale token must not relabel a lapped slot");
+    }
+
+    #[test]
+    fn trace_ring_never_blocks_writers() {
+        let ring = std::sync::Arc::new(TraceRing::with_slots(2));
+        // Hold one slot's lock; pushes landing there drop, others land.
+        let guard = ring.slots[0].lock().unwrap();
+        let first = ring.push(entry("blocked")); // slot 0: dropped
+        let second = ring.push(entry("landed")); // slot 1: stored
+        drop(guard);
+        assert!(first.is_none());
+        assert!(second.is_some());
+        assert_eq!(ring.dropped(), 1);
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].id, "landed");
+    }
+
+    #[test]
+    fn disabled_plane_still_constructs_cleanly() {
+        let obs = ObsPlane::new(false);
+        assert!(!obs.enabled());
+        // Callers gate on enabled(); the plane itself stays inert.
+        assert_eq!(obs.requests.serve_for(OpKind::GetObject).count(), 0);
+        assert_eq!(obs.trace.snapshot().len(), 0);
+        assert!(ObsPlane::new(true).enabled());
+    }
+}

@@ -614,6 +614,74 @@ fn probabilistic_fault_cells_are_deterministic_and_recoverable() {
     );
 }
 
+/// The observability plane is a pure observer: the one-object job run
+/// over the wire against a gateway with the plane ON vs OFF — on BOTH
+/// server cores, fault-free AND with an injected transient PUT fault —
+/// produces byte-identical REST traces, virtual runtimes and op counts.
+/// Histograms, the trace ring and the sweep stats may record whatever
+/// they like; they must never move a number a client can see.
+#[test]
+fn observability_never_changes_op_counts_or_virtual_runtimes() {
+    use stocator::gateway::{GatewayConfig, GatewayMode, GatewayServer};
+    use stocator::objectstore::backend::ShardedMemBackend;
+
+    let stoc_final_key = "data.txt/part-00000_attempt_201512062056_0000_m_000000_0";
+    let run = |mode: GatewayMode, observability: bool, faulted: bool| {
+        // Fresh gateway + fresh served store per run, so the A and B
+        // sides start from identical (empty) worlds.
+        let gw = GatewayServer::bind_with(
+            "127.0.0.1:0",
+            Arc::new(ShardedMemBackend::new(4)),
+            GatewayConfig {
+                mode,
+                observability,
+                ..GatewayConfig::default()
+            },
+        )
+        .expect("bind gateway")
+        .spawn();
+        let store = ObjectStore::new(StoreConfig {
+            latency: LatencyModel::paper_testbed(),
+            consistency: ConsistencyModel::strong(),
+            min_part_size: 0,
+            seed: 0,
+            backend: BackendKind::Http {
+                addr: gw.addr().to_string(),
+                ns: None,
+            },
+            faults: if faulted {
+                FaultSpec::one(FaultOp::Put, stoc_final_key, 1)
+            } else {
+                FaultSpec::none()
+            },
+            retry: RetryPolicy::with_retries(u32::from(faulted)),
+            ..StoreConfig::default()
+        });
+        store.create_container("res", SimInstant::EPOCH).0.unwrap();
+        let fs = Scenario::Stocator.connector(store.clone(), MULTIPART_SIZE);
+        let out = one_object_job(&store, &*fs, Scenario::Stocator, usize::MAX);
+        gw.shutdown();
+        out
+    };
+
+    for mode in [GatewayMode::Threaded, GatewayMode::Reactor] {
+        for faulted in [false, true] {
+            let on = run(mode, true, faulted);
+            let off = run(mode, false, faulted);
+            assert!(!on.0.is_empty(), "{mode:?} produced no REST ops");
+            if faulted {
+                assert!(
+                    on.0.iter().any(|l| l.contains("(503 transient)")),
+                    "{mode:?}: the injected fault must actually fire"
+                );
+            }
+            assert_eq!(on.0, off.0, "{mode:?} faulted={faulted}: trace moved");
+            assert_eq!(on.1, off.1, "{mode:?} faulted={faulted}: virtual runtime moved");
+            assert_eq!(on.2, off.2, "{mode:?} faulted={faulted}: op counts moved");
+        }
+    }
+}
+
 /// Whole-cell determinism: a full Teragen cell (driver, committer,
 /// connector, store) reproduces identical op counts and virtual runtime
 /// run over run — the cell-level half of the accounting snapshot.
